@@ -1,0 +1,111 @@
+//! Engine hot-path benchmarks: the simulation engine (which every paper
+//! sweep multiplies by millions of steps), metric computation, and — if
+//! `artifacts/` is present — the real PJRT decode step per batch bucket
+//! (the Fig. 1 measurement as a bench).
+//!
+//! Run: cargo bench --bench engine_hot_path
+
+use std::path::Path;
+use std::time::Duration;
+
+use slice_serve::coordinator::pool::TaskPool;
+use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::pjrt::PjrtEngine;
+use slice_serve::engine::sampler::Sampler;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::engine::DecodeEngine;
+use slice_serve::metrics::Attainment;
+use slice_serve::runtime::ModelRuntime;
+use slice_serve::util::bench::{bench, report_header};
+
+fn sim_pool(n: usize) -> TaskPool {
+    let mut pool = TaskPool::new();
+    for i in 0..n as u64 {
+        pool.insert(Task::new(i, TaskClass::Voice, 0, 16, 1000, 1.0));
+    }
+    pool
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("{}", report_header());
+
+    // sim engine decode step
+    let pool = sim_pool(32);
+    let mut engine = SimEngine::paper_calibrated();
+    for b in [1usize, 9, 32] {
+        let ids: Vec<u64> = (0..b as u64).collect();
+        let r = bench(&format!("sim/decode_step/b{b}"), budget, || {
+            engine.decode(&pool, &ids).unwrap()
+        });
+        println!("{}", r.report_line());
+    }
+
+    // metrics over a large finished run
+    let mut tasks: Vec<Task> = Vec::new();
+    for i in 0..10_000u64 {
+        let mut t = Task::new(i, TaskClass::Voice, 0, 16, 4, 1.0);
+        for k in 0..4u64 {
+            t.on_token(1_000 + k * 100_000);
+        }
+        tasks.push(t);
+    }
+    let r = bench("metrics/attainment/10k_tasks", budget, || {
+        Attainment::compute(&tasks)
+    });
+    println!("{}", r.report_line());
+
+    // real PJRT decode per bucket (Fig. 1 as a bench) — requires artifacts
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let runtime = ModelRuntime::load(artifacts).expect("loading artifacts");
+        let buckets = runtime.decode_buckets();
+        let mut engine = PjrtEngine::new(runtime, Sampler::Greedy, 0);
+        let mut pool = TaskPool::new();
+        let maxb = *buckets.last().unwrap() as u64;
+        for i in 0..maxb {
+            let mut t = Task::new(i, TaskClass::TextQa, 0, 16, 64, 1.0);
+            t.prompt = format!("bench prompt {i} padding pad").into_bytes();
+            t.prompt.truncate(16);
+            t.prompt_len = 16;
+            pool.insert(t);
+        }
+        for i in 0..maxb {
+            engine.prefill(&pool, i).unwrap();
+        }
+        // Manual timing loop: re-prefills happen *outside* the timed
+        // region so the numbers are pure decode-step latency (this is
+        // the Fig. 1 measurement).
+        let max_seq = engine.max_context();
+        for &b in &buckets {
+            let ids: Vec<u64> = (0..b as u64).collect();
+            let mut samples: Vec<u64> = Vec::new();
+            while samples.len() < 15 {
+                for &id in &ids {
+                    if engine.cached_len(id).unwrap_or(0) + 4 >= max_seq {
+                        engine.release(id);
+                        engine.prefill(&pool, id).unwrap();
+                    }
+                }
+                let t0 = std::time::Instant::now();
+                let out = engine.decode(&pool, &ids).unwrap();
+                samples.push(t0.elapsed().as_nanos() as u64);
+                std::hint::black_box(out);
+            }
+            samples.sort_unstable();
+            let p50 = samples[samples.len() / 2] as f64;
+            let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+            let p99 = samples[samples.len() - 1] as f64;
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+                format!("pjrt/decode_step/b{b}"),
+                slice_serve::util::bench::fmt_ns(mean),
+                slice_serve::util::bench::fmt_ns(p50),
+                slice_serve::util::bench::fmt_ns(p99),
+                samples.len()
+            );
+        }
+    } else {
+        println!("(pjrt benches skipped: artifacts/ not built — run `make artifacts`)");
+    }
+}

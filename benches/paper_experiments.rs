@@ -1,0 +1,91 @@
+//! End-to-end benches: one per paper table/figure, timing the full
+//! simulation harness that regenerates it (workload generation +
+//! discrete-event serving + metrics). These are the "cargo bench — one
+//! per paper table" deliverable; the *contents* of each table/figure are
+//! printed by `slice-serve experiment <id>` / `examples/paper_tables`.
+//!
+//! Run: cargo bench --bench paper_experiments
+
+use std::time::Instant;
+
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::experiments::{self, fig1};
+use slice_serve::util::bench::fmt_ns;
+use slice_serve::workload::{table2_static_workload, WorkloadSpec};
+
+fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("{:<40} {:>12}", name, fmt_ns(t0.elapsed().as_nanos() as f64));
+    out
+}
+
+fn main() {
+    // modest sizes so the full bench suite stays fast; the real numbers
+    // are produced by `slice-serve experiment all --n-tasks 400`
+    let cfg = ServeConfig { n_tasks: 150, ..ServeConfig::default() };
+    println!("{:<40} {:>12}", "experiment (end-to-end)", "wall");
+
+    time_once("fig1/latency_model_sweep", || {
+        fig1::from_model(&LatencyModel::paper_calibrated(), &fig1::default_batches())
+    });
+
+    time_once("table2/static_mix_3_policies", || {
+        for kind in experiments::ALL_POLICIES {
+            let wl = table2_static_workload();
+            experiments::run_sim(kind, wl, &cfg, experiments::default_drain()).unwrap();
+        }
+    });
+
+    time_once("fig7_8_9/dynamic_3_policies", || {
+        for kind in experiments::ALL_POLICIES {
+            let wl =
+                WorkloadSpec::paper_mix(1.0, 0.7, cfg.n_tasks, cfg.seed).generate();
+            experiments::run_sim(kind, wl, &cfg, experiments::default_drain()).unwrap();
+        }
+    });
+
+    time_once("fig10/ratio_sweep_5x3_cells", || {
+        for ratio in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            for kind in experiments::ALL_POLICIES {
+                let wl =
+                    WorkloadSpec::paper_mix(1.0, ratio, cfg.n_tasks, cfg.seed).generate();
+                experiments::run_sim(kind, wl, &cfg, experiments::default_drain())
+                    .unwrap();
+            }
+        }
+    });
+
+    time_once("fig11/rate_sweep_10x3_cells", || {
+        for rate in [0.1, 0.3, 0.5, 0.8, 1.0, 1.5, 2.0, 3.0, 5.0, 7.0] {
+            for kind in experiments::ALL_POLICIES {
+                let wl =
+                    WorkloadSpec::paper_mix(rate, 0.7, cfg.n_tasks, cfg.seed).generate();
+                experiments::run_sim(kind, wl, &cfg, experiments::default_drain())
+                    .unwrap();
+            }
+        }
+    });
+
+    time_once("ablation/slice_variants", || {
+        experiments::ablation::run(&ServeConfig { n_tasks: 60, ..cfg.clone() }).unwrap()
+    });
+
+    // steady-state serving throughput of the whole stack (sim engine):
+    // how many scheduling+decode iterations per second the coordinator
+    // can sustain — L3 must never be the bottleneck.
+    let wl = WorkloadSpec::paper_mix(1.0, 0.7, 300, 42).generate();
+    let t0 = Instant::now();
+    let report =
+        experiments::run_sim(PolicyKind::Slice, wl, &cfg, experiments::default_drain())
+            .unwrap();
+    let wall = t0.elapsed();
+    let steps_per_sec = report.steps as f64 / wall.as_secs_f64();
+    println!(
+        "\nSLICE 300-task run: {} engine steps in {} -> {:.0} steps/s simulated",
+        report.steps,
+        fmt_ns(wall.as_nanos() as f64),
+        steps_per_sec
+    );
+}

@@ -1,0 +1,111 @@
+//! Scheduler hot-path micro-benchmarks.
+//!
+//! The decode loop invokes the scheduler at every iteration boundary, so
+//! the paper's "Challenge 2: scheduling overhead" translates to: one
+//! scheduling decision must cost ≪ one decode step (~18-130 ms).
+//! Targets (EXPERIMENTS.md §Perf): full reschedule at 64 queued tasks
+//! < 100 µs; column-scan step < 1 µs.
+//!
+//! Run: cargo bench --bench scheduler_hot_path
+
+use std::time::Duration;
+
+use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
+use slice_serve::coordinator::pool::TaskPool;
+use slice_serve::coordinator::scheduler::Policy;
+use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
+use slice_serve::coordinator::slice::SlicePolicy;
+use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::util::bench::{bench, report_header};
+use slice_serve::util::rng::Rng;
+
+fn candidates(n: usize, seed: u64) -> Vec<Candidate> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Candidate {
+            id: i as u64,
+            utility: if rng.chance(0.7) { 100.0 } else { 1.0 },
+            tpot: rng.range_u64(50, 250) * 1_000,
+        })
+        .collect()
+}
+
+fn pool_with_running(n: usize) -> TaskPool {
+    let mut pool = TaskPool::new();
+    for i in 0..n as u64 {
+        let class = if i % 3 == 0 { TaskClass::RealTime } else { TaskClass::Voice };
+        let mut t = Task::new(i, class, 0, 16, 1000, 1.0);
+        t.state = slice_serve::coordinator::task::TaskState::Running;
+        t.prefill_end = Some(1);
+        t.first_token = Some(1);
+        t.tokens_generated = 1;
+        pool.insert(t);
+    }
+    pool
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let lat = LatencyModel::paper_calibrated();
+    println!("{}", report_header());
+
+    for n in [8usize, 64, 256] {
+        let cands = candidates(n, 1);
+        let r = bench(&format!("selection/select_tasks/{n}"), budget, || {
+            select_tasks(&cands, &lat, CYCLE_CAP)
+        });
+        println!("{}", r.report_line());
+    }
+
+    for n in [8usize, 64, 256] {
+        let mut rng = Rng::new(2);
+        let rows: Vec<(u64, u32)> =
+            (0..n).map(|i| (i as u64, rng.range_u64(4, 20) as u32)).collect();
+        let r = bench(&format!("mask/build/{n}"), budget, || {
+            DecodeMask::build(rows.clone())
+        });
+        println!("{}", r.report_line());
+
+        let mask = DecodeMask::build(rows.clone());
+        let mut col = 0u32;
+        let r = bench(&format!("mask/column_batch/{n}"), budget, || {
+            let b = mask.batch_len(col);
+            col = (col + 1) % mask.columns();
+            b
+        });
+        println!("{}", r.report_line());
+
+        let quotas: Vec<u32> = {
+            let mut q: Vec<u32> = rows.iter().map(|&(_, v)| v).collect();
+            q.sort_unstable_by(|a, b| b.cmp(a));
+            q
+        };
+        let r = bench(&format!("mask/period_eq7/{n}"), budget, || {
+            period_eq7(&quotas, &lat)
+        });
+        println!("{}", r.report_line());
+    }
+
+    // Full online reschedule: the cost paid on every arrival/completion.
+    for n in [16usize, 64, 256] {
+        let mut pool = pool_with_running(n);
+        let mut policy = SlicePolicy::with_defaults(lat.clone());
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let r = bench(&format!("slice/full_reschedule/{n}"), budget, || {
+            policy.on_arrival(&mut pool, &ids, 0);
+            policy.next_step(&mut pool, 0)
+        });
+        println!("{}", r.report_line());
+    }
+
+    // Steady-state next_step (column scanning, no reschedule).
+    let mut pool = pool_with_running(32);
+    let mut policy = SlicePolicy::with_defaults(lat.clone());
+    policy.on_arrival(&mut pool, &(0..32).collect::<Vec<_>>(), 0);
+    let _ = policy.next_step(&mut pool, 0); // trigger the reschedule once
+    let r = bench("slice/next_step_steady/32", budget, || {
+        policy.next_step(&mut pool, 0)
+    });
+    println!("{}", r.report_line());
+}

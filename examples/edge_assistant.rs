@@ -1,0 +1,87 @@
+//! Edge-assistant scenario: a voice assistant (8 tok/s to match speech)
+//! and text Q&A (10 tok/s reading speed) sharing one edge device, no
+//! real-time tasks at all — the *rate-matching* side of SLICE.
+//!
+//! Shows the decode-mask matrix delivering per-class rates: voice tasks
+//! get ~8 tokens per second-cycle, Q&A ~10, instead of the uniform rate
+//! a single batch would force, and how much concurrency that buys.
+//!
+//! Run: cargo run --release --example edge_assistant
+
+use anyhow::Result;
+
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::clock::VirtualClock;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::experiments::build_policy;
+use slice_serve::metrics::report::{ms2, pct, Table};
+use slice_serve::metrics::{Attainment, TpotSummary};
+use slice_serve::server::Server;
+use slice_serve::util::{logger, secs};
+use slice_serve::workload::{ClassProfile, WorkloadSpec};
+
+fn main() -> Result<()> {
+    logger::init();
+    println!("== Edge assistant: voice (8 tok/s) + Q&A (10 tok/s), no RT tasks ==\n");
+
+    // 50/50 voice and Q&A at 0.35 tasks/s (~88 tok/s demand) — right at
+    // the device's saturation knee. Utility is the operator's balance
+    // knob: with equal utility-rates voice (cheapest per token) loses
+    // contended slots, so we weight voice up to parity.
+    let mut voice_profile = ClassProfile::default_for(TaskClass::Voice);
+    voice_profile.utility = 2.0; // r = 2 * 0.125s = 0.25 vs QA 2 * 0.1 = 0.2
+    let spec = WorkloadSpec {
+        arrival_rate: 0.35,
+        n_tasks: 120,
+        mix: vec![
+            (voice_profile, 0.5),
+            (ClassProfile::default_for(TaskClass::TextQa), 0.5),
+        ],
+        seed: 5,
+        with_prompt_bytes: false,
+    };
+    let cfg = ServeConfig::default();
+
+    let mut table = Table::new(&[
+        "policy", "voice TPOT", "qa TPOT", "voice SLO", "qa SLO", "overall SLO",
+    ]);
+    for kind in [PolicyKind::Orca, PolicyKind::FastServe, PolicyKind::Slice] {
+        let report = Server::new(
+            spec.generate(),
+            build_policy(kind, &cfg),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        )
+        .run(secs(600.0))?;
+
+        let voice: Vec<&Task> = report
+            .tasks
+            .iter()
+            .filter(|t| t.class == TaskClass::Voice)
+            .collect();
+        let qa: Vec<&Task> = report
+            .tasks
+            .iter()
+            .filter(|t| t.class == TaskClass::TextQa)
+            .collect();
+        let v_sum = TpotSummary::compute("voice", &voice);
+        let q_sum = TpotSummary::compute("qa", &qa);
+        let v_slo = voice.iter().filter(|t| t.slo_met()).count() as f64 / voice.len() as f64;
+        let q_slo = qa.iter().filter(|t| t.slo_met()).count() as f64 / qa.len() as f64;
+        let a = Attainment::compute(&report.tasks);
+
+        table.row(vec![
+            report.policy.to_string(),
+            ms2(v_sum.mean_tpot_ms),
+            ms2(q_sum.mean_tpot_ms),
+            pct(v_slo),
+            pct(q_slo),
+            pct(a.slo),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("SLICE's mask matrix gives each class a rate matched to its SLO");
+    println!("(voice ≈125ms/token, Q&A ≈100ms/token) instead of one uniform rate.");
+    Ok(())
+}

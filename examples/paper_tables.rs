@@ -1,0 +1,42 @@
+//! Regenerate every table and figure of the paper's evaluation section
+//! in one run and write the machine-readable results to
+//! `results/paper_results.json` (consumed by EXPERIMENTS.md).
+//!
+//! Run: cargo run --release --example paper_tables [n_tasks] [seed]
+
+use anyhow::Result;
+
+use slice_serve::config::ServeConfig;
+use slice_serve::experiments;
+use slice_serve::util::json::Json;
+use slice_serve::util::logger;
+
+fn main() -> Result<()> {
+    logger::init();
+    let n_tasks: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let seed: u64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let cfg = ServeConfig { n_tasks, seed, ..ServeConfig::default() };
+
+    println!("== Regenerating all paper tables/figures (n_tasks={n_tasks}, seed={seed}) ==\n");
+
+    let out = Json::obj()
+        .set("n_tasks", n_tasks)
+        .set("seed", seed)
+        .set("fig1", experiments::fig1::run()?)
+        .set("table2", experiments::static_mix::run(&cfg)?)
+        .set("dynamic", experiments::dynamic::run(&cfg)?)
+        .set("fig10", experiments::ratio_sweep::run(&cfg)?)
+        .set("fig11", experiments::rate_sweep::run(&cfg)?)
+        .set("ablation", experiments::ablation::run(&cfg)?);
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/paper_results.json", out.to_pretty())?;
+    println!("\nwrote results/paper_results.json");
+    Ok(())
+}

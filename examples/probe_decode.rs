@@ -1,0 +1,29 @@
+//! Perf probe: raw `ModelRuntime::decode_into` latency at the largest
+//! batch bucket, sampled over several rounds — the measurement tool used
+//! for the EXPERIMENTS.md §Perf iteration log. Unlike the engine bench,
+//! this isolates the runtime layer (literal creation + XLA execution +
+//! result copy-out) from the engine's KV slot management.
+use slice_serve::runtime::ModelRuntime;
+use std::time::Instant;
+
+fn main() {
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts")).unwrap();
+    let dims = rt.dims();
+    let slab = dims.kv_slab_elems();
+    let b = 16usize;
+    let tokens = vec![65i32; b];
+    let lens = vec![20i32; b];
+    let kv = vec![0.01f32; b * slab];
+    let mut logits = vec![0.0f32; b * dims.vocab];
+    let mut kv_out = vec![0.0f32; b * slab];
+    for round in 0..6 {
+        let mut times = vec![];
+        for _ in 0..10 {
+            let t0 = Instant::now();
+            rt.decode_into(&tokens, &lens, &kv, &mut logits, &mut kv_out).unwrap();
+            times.push(t0.elapsed().as_millis());
+        }
+        times.sort();
+        println!("round {round}: p50={}ms min={}ms max={}ms", times[5], times[0], times[9]);
+    }
+}

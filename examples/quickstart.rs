@@ -1,0 +1,106 @@
+//! Quickstart: the end-to-end validation driver.
+//!
+//! Loads the real AOT-compiled model through the PJRT runtime and serves
+//! a batch of mixed edge requests with the SLICE scheduler in **wall
+//! time**, streaming real generated tokens. Reports per-task TTFT, TPOT,
+//! SLO attainment, and aggregate latency/throughput.
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+//!
+//! The run is recorded in EXPERIMENTS.md ("End-to-end validation").
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use slice_serve::config::ServeConfig;
+use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+use slice_serve::engine::clock::WallClock;
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::engine::pjrt::PjrtEngine;
+use slice_serve::engine::sampler::Sampler;
+use slice_serve::engine::tokenizer;
+use slice_serve::metrics::report::{ms2, pct, secs2, Table};
+use slice_serve::metrics::Attainment;
+use slice_serve::runtime::ModelRuntime;
+use slice_serve::server::Server;
+use slice_serve::util::{logger, secs, to_ms};
+use slice_serve::workload::WorkloadSpec;
+
+fn main() -> Result<()> {
+    logger::init();
+    let artifacts = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+
+    println!("== SLICE quickstart: real model, real tokens, wall-clock ==\n");
+    let runtime = ModelRuntime::load(&artifacts)?;
+    println!(
+        "platform={} model=d{}/L{} context={}\n",
+        runtime.platform(),
+        runtime.dims().d_model,
+        runtime.dims().n_layers,
+        runtime.dims().max_seq
+    );
+
+    // Calibrate the SLICE latency model from this machine: quick single
+    // measurement per bucket (the `calibrate` subcommand does it more
+    // carefully; for the quickstart a rough model is fine).
+    let latency = LatencyModel::from_points(
+        vec![(1, 4_500), (2, 5_700), (4, 10_000), (8, 13_600), (16, 38_000)],
+        vec![(16, 8_000), (32, 12_000), (64, 22_000)],
+        16,
+    );
+
+    // A 20-request mixed edge workload at 4 tasks/s: robot commands
+    // (real-time), voice and Q&A.
+    let spec = WorkloadSpec::edge_mix(4.0, 0.5, 20, 7);
+    let workload = spec.generate();
+    let n = workload.len();
+
+    let _cfg = ServeConfig::default();
+    let policy = SlicePolicy::new(latency, SliceConfig::default());
+    let engine = PjrtEngine::new(runtime, Sampler::Greedy, 7);
+
+    let t0 = std::time::Instant::now();
+    let report = Server::new(
+        workload,
+        Box::new(policy),
+        Box::new(engine),
+        WallClock::new(),
+    )
+    .run(secs(600.0))?;
+    let wall = t0.elapsed();
+
+    let mut table = Table::new(&[
+        "task", "class", "prompt", "out", "TTFT", "avg TPOT", "SLO",
+    ]);
+    let mut total_tokens = 0u64;
+    for t in &report.tasks {
+        total_tokens += t.tokens_generated as u64;
+        table.row(vec![
+            t.id.to_string(),
+            t.class.label().to_string(),
+            format!("{:.16}…", String::from_utf8_lossy(&t.prompt)),
+            format!("{:.12}…", tokenizer::decode(&t.generated)),
+            ms2(t.ttft().map_or(f64::NAN, |v| to_ms(v))),
+            ms2(t.avg_tpot().map_or(f64::NAN, |v| to_ms(v))),
+            if t.slo_met() { "met" } else { "MISS" }.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let a = Attainment::compute(&report.tasks);
+    println!("tasks: {n}   finished: {}   engine steps: {}", a.n_finished, report.steps);
+    println!("overall SLO attainment: {}", pct(a.slo));
+    println!("real-time SLO attainment: {}", pct(a.rt_slo));
+    println!("non-real-time SLO attainment: {}", pct(a.nrt_slo));
+    println!("mean completion: {}", secs2(a.mean_completion_all));
+    println!(
+        "wall time: {:.2}s   aggregate decode throughput: {:.1} tokens/s",
+        wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Robot-control scenario (the paper's motivating edge workload, §I):
+//! a robot issues latency-critical control/navigation commands while
+//! long-form Q&A runs on the same edge device.
+//!
+//! Demonstrates the deadline guarantee: under SLICE every control
+//! command completes inside its 1.5 s deadline even while the device is
+//! saturated with Q&A; under Orca/FastServe the uniform batch drags the
+//! control commands past their deadlines.
+//!
+//! Run: cargo run --release --example robot_control
+
+use anyhow::Result;
+
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::clock::VirtualClock;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::experiments::build_policy;
+use slice_serve::metrics::report::{pct, secs2, Table};
+use slice_serve::server::Server;
+use slice_serve::util::rng::Rng;
+use slice_serve::util::{logger, secs, to_secs};
+use slice_serve::workload::ClassProfile;
+
+/// Control loop: one navigation command every 2 s for a minute, against
+/// a steady background of Q&A sessions (1 every 1.5 s, ~250 tokens).
+fn build_scenario(seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    let mut tasks = Vec::new();
+    let qa = ClassProfile::default_for(TaskClass::TextQa);
+
+    let mut events: Vec<(u64, TaskClass)> = Vec::new();
+    for i in 0..30 {
+        events.push((secs(2.0 * i as f64), TaskClass::RealTime));
+    }
+    for i in 0..40 {
+        events.push((secs(1.5 * i as f64) + 250_000, TaskClass::TextQa));
+    }
+    events.sort_by_key(|&(at, _)| at);
+
+    for (id, (at, class)) in events.into_iter().enumerate() {
+        let (prompt, out, utility) = match class {
+            TaskClass::RealTime => (
+                rng.range_u64(8, 24) as u32,
+                rng.range_u64(6, 14) as u32,
+                100.0,
+            ),
+            _ => (
+                rng.range_u64(qa.prompt_range.0 as u64, qa.prompt_range.1 as u64) as u32,
+                rng.range_u64(qa.output_range.0 as u64, qa.output_range.1 as u64) as u32,
+                qa.utility,
+            ),
+        };
+        tasks.push(Task::new(id as u64, class, at, prompt, out, utility));
+    }
+    tasks
+}
+
+fn main() -> Result<()> {
+    logger::init();
+    println!("== Robot control under load: SLICE vs Orca vs FastServe ==\n");
+    println!("30 navigation commands (1.5s deadline, 20 tok/s) vs 40 long Q&A sessions\n");
+
+    let cfg = ServeConfig::default();
+    let mut table = Table::new(&[
+        "policy",
+        "commands in deadline",
+        "worst command latency",
+        "mean command latency",
+        "Q&A SLO",
+    ]);
+
+    for kind in [PolicyKind::Orca, PolicyKind::FastServe, PolicyKind::Slice] {
+        let tasks = build_scenario(99);
+        let report = Server::new(
+            tasks,
+            build_policy(kind, &cfg),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        )
+        .run(secs(300.0))?;
+
+        let rt: Vec<&Task> = report
+            .tasks
+            .iter()
+            .filter(|t| t.class.is_real_time())
+            .collect();
+        let in_deadline = rt.iter().filter(|t| t.slo_met()).count();
+        let worst = rt
+            .iter()
+            .filter_map(|t| t.completion_time())
+            .max()
+            .unwrap_or(0);
+        let mean = rt
+            .iter()
+            .filter_map(|t| t.completion_time())
+            .map(to_secs)
+            .sum::<f64>()
+            / rt.len().max(1) as f64;
+        let qa_met = report
+            .tasks
+            .iter()
+            .filter(|t| !t.class.is_real_time() && t.slo_met())
+            .count();
+        let qa_total = report.tasks.len() - rt.len();
+
+        table.row(vec![
+            report.policy.to_string(),
+            format!("{in_deadline}/{}", rt.len()),
+            secs2(to_secs(worst)),
+            secs2(mean),
+            pct(qa_met as f64 / qa_total as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("SLICE keeps every control command inside its deadline by pausing");
+    println!("low-utility Q&A decodes; uniform batching cannot.");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the L2 model to HLO text artifacts for the rust runtime.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  artifacts/prefill_p{P}.hlo.txt   one per prompt bucket (batch 1)
+  artifacts/decode_b{B}.hlo.txt    one per batch bucket
+  artifacts/weights.npz            PRNG-seeded parameters (positional order
+                                   = manifest "param_names")
+  artifacts/manifest.json          model dims + artifact index
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the HLO text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs only here, at build time; the rust binary is self-contained
+once artifacts/ exists.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    decode_flat,
+    flatten_params,
+    init_params,
+    param_names,
+    prefill_flat,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(cfg: ModelConfig, params):
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flatten_params(cfg, params)]
+
+
+def lower_prefill(cfg: ModelConfig, params, bucket: int) -> str:
+    fn = functools.partial(prefill_flat, cfg)
+    tokens = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(fn).lower(tokens, length, *param_specs(cfg, params))
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: ModelConfig, params, batch: int) -> str:
+    fn = functools.partial(decode_flat, cfg)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    kv = jax.ShapeDtypeStruct((batch,) + cfg.kv_slab_shape, jnp.float32)
+    lowered = jax.jit(fn).lower(tokens, lens, kv, *param_specs(cfg, params))
+    return to_hlo_text(lowered)
+
+
+def build_artifacts(cfg: ModelConfig, out_dir: str, seed: int = 42) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg, seed=seed)
+
+    weights_path = os.path.join(out_dir, "weights.npz")
+    np.savez(
+        weights_path,
+        **{n: np.asarray(p) for n, p in zip(param_names(cfg), flatten_params(cfg, params))},
+    )
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+        },
+        "seed": seed,
+        "param_names": param_names(cfg),
+        "weights": "weights.npz",
+        "prefill": [],
+        "decode": [],
+    }
+
+    for p in cfg.prompt_buckets:
+        name = f"prefill_p{p}.hlo.txt"
+        text = lower_prefill(cfg, params, p)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["prefill"].append({"bucket": p, "path": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for b in cfg.batch_buckets:
+        name = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, params, b)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["decode"].append({"batch": b, "path": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json + weights.npz ({os.path.getsize(weights_path)} bytes)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    build_artifacts(cfg, args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the SLICE decode/prefill hot-spots."""
+
+from .decode_attention import decode_attention
+from .prefill_attention import prefill_attention
+from .ref import decode_attention_ref, prefill_attention_ref
+
+__all__ = [
+    "decode_attention",
+    "prefill_attention",
+    "decode_attention_ref",
+    "prefill_attention_ref",
+]

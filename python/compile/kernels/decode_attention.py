@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: single-query (decode) attention over a KV cache.
+
+This is the decode-phase hot-spot of the SLICE serving stack: for every
+scheduled decode step, each task in the dynamic batch attends with a single
+query vector against its cached keys/values, masked to the task's current
+sequence length.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the grid iterates over
+(batch, head); for each program instance the K/V block [S, hd] is staged
+into VMEM (S=128 rows is lane-aligned), the query vector stays resident,
+and the masked softmax is computed in-register. Decode attention is a
+matrix-vector product, so the roofline is HBM->VMEM bytes for K/V, not the
+MXU — exactly the "per-token latency grows with batch" regime the paper
+measures on its edge GPU.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; numerics are validated
+against kernels/ref.py by pytest.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["decode_attention"]
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref):
+    """One batch-element program: masked softmax(q.K^T).V over the cache,
+    all heads at once.
+
+    Block shapes:
+      len_ref: (1,)          int32   current sequence length of this task
+      q_ref:   (1, H, hd)    f32     query vectors (one per head)
+      k_ref:   (1, H, S, hd) f32     cached keys   (padded to S)
+      v_ref:   (1, H, S, hd) f32     cached values
+      o_ref:   (1, H, hd)    f32     attention outputs
+
+    Perf note (EXPERIMENTS.md §Perf iteration 1): the grid is (b,) with
+    all H heads fused into one program rather than (b, H). Interpret
+    mode lowers each grid cell to a sequential HLO loop iteration, so
+    fewer/fatter programs cut per-cell overhead 4x on the CPU PJRT
+    backend; on a real TPU the [H, S, hd] block (64 KiB at the default
+    config) still fits VMEM comfortably and feeds the MXU a batched
+    [H*S, hd] x [hd] product instead of H separate skinny ones.
+    """
+    q = q_ref[0]  # [H, hd]
+    k = k_ref[0]  # [H, S, hd]
+    v = v_ref[0]  # [H, S, hd]
+    seq_len = len_ref[0]
+
+    hd = q.shape[-1]
+    s = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    # scores over the whole padded cache; positions >= seq_len are masked.
+    scores = jnp.einsum("hsd,hd->hs", k, q) * scale  # [H, S]
+    positions = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)  # [1, S]
+    mask = positions < seq_len
+    neg_inf = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask, scores, neg_inf)
+
+    # numerically-stable masked softmax (per head)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / denom  # [H, S]
+
+    o_ref[0] = jnp.einsum("hs,hsd->hd", probs, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention(q, k, v, lens):
+    """Batched single-step attention over per-task KV caches.
+
+    Args:
+      q:    f32[b, H, hd]     query vectors for the new token of each task
+      k:    f32[b, H, S, hd]  cached keys, padded to the context size S
+      v:    f32[b, H, S, hd]  cached values
+      lens: i32[b]            valid cache length per task (incl. new token)
+
+    Returns:
+      f32[b, H, hd] attention outputs.
+    """
+    b, h, s, hd = k.shape
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, s, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, s, hd), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=True,
+    )(lens, q, k, v)

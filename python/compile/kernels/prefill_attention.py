@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: causal (prefill) self-attention.
+
+Prefill processes the whole prompt in one pass; each query position attends
+to all earlier positions. The grid iterates over (batch, head); the [P, hd]
+Q/K/V blocks for one head are staged into VMEM and the [P, P] score tile is
+computed with a causal mask.
+
+On a real TPU the [P, P] @ [P, hd] products run on the MXU; P is capped at
+the prompt buckets (<=64) so a full tile fits VMEM without double
+buffering. interpret=True for CPU-PJRT execution (see decode_attention.py).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["prefill_attention"]
+
+
+def _prefill_attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One batch-element program: causal softmax(Q.K^T).V, all heads.
+
+    Block shapes:
+      q_ref, k_ref, v_ref: (1, H, P, hd) f32
+      o_ref:               (1, H, P, hd) f32
+
+    Perf note: grid is (b,) with the head axis inside the program (see
+    decode_attention.py — same rationale; the [H, P, P] score tile at
+    the default config is 64 KiB, VMEM-comfortable).
+    """
+    q = q_ref[0]  # [H, P, hd]
+    k = k_ref[0]
+    v = v_ref[0]
+
+    h, p, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale  # [H, P, P]
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (1, p, p), 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, p, p), 2)
+    neg_inf = jnp.finfo(scores.dtype).min
+    scores = jnp.where(cols <= rows, scores, neg_inf)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[0] = jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def prefill_attention(q, k, v):
+    """Causal self-attention over the full prompt.
+
+    Args:
+      q, k, v: f32[b, H, P, hd]
+
+    Returns:
+      f32[b, H, P, hd]
+    """
+    b, h, p, hd = q.shape
+    return pl.pallas_call(
+        _prefill_attn_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, p, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, p, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, p, hd), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, p, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, p, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)

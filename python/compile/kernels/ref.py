@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth that pytest (python/tests/test_kernels.py)
+asserts the Pallas kernels against, including a hypothesis sweep over
+shapes and lengths.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref", "prefill_attention_ref"]
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Reference for kernels.decode_attention.
+
+    q: f32[b, H, hd]; k, v: f32[b, H, S, hd]; lens: i32[b]
+    returns f32[b, H, hd]
+    """
+    b, h, s, hd = k.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    positions = jnp.arange(s)[None, None, :]
+    mask = positions < lens[:, None, None]
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v)
+
+
+def prefill_attention_ref(q, k, v):
+    """Reference for kernels.prefill_attention.
+
+    q, k, v: f32[b, H, P, hd]; returns f32[b, H, P, hd]
+    """
+    b, h, p, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    rows = jnp.arange(p)[:, None]
+    cols = jnp.arange(p)[None, :]
+    causal = cols <= rows
+    scores = jnp.where(causal[None, None], scores, jnp.finfo(scores.dtype).min)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(causal[None, None], e, 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,303 @@
+"""L2: byte-level GPT-style decoder with an explicit, fixed-size KV cache.
+
+This is the "small real model" served by the rust coordinator. It stands in
+for the paper's ChatGLM2-6B-INT4 (see DESIGN.md "Substitutions"): the
+scheduler only needs a real autoregressive prefill/decode loop whose step
+latency grows with batch size, which this model provides at edge-realistic
+step times on the CPU PJRT backend.
+
+Architecture (defaults, see ModelConfig):
+  vocab 256 (byte-level tokenizer), d_model 128, 4 layers, 4 heads,
+  head_dim 32, ffn 512, max context S=128, learned positional embeddings,
+  pre-LN blocks, GELU MLP, tied output head. ~0.85M parameters.
+
+Two entry points are AOT-lowered by aot.py:
+  * prefill(params, tokens[1,P], length)      -> logits[1,V], kv[1,L,2,H,S,hd]
+  * decode(params, tokens[b], lens[b], kv)    -> logits[b,V], kv updated
+
+The KV cache layout is [batch, layer, kv, head, S, head_dim] so that one
+task's cache is a single contiguous slab the rust engine can stack into
+dynamic batches (the decode-mask matrix regroups batches every step).
+
+Attention uses the L1 Pallas kernels (kernels.decode_attention /
+kernels.prefill_attention); a pure-jnp twin of each forward lives in
+this module as *_ref for build-time verification.
+"""
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    decode_attention,
+    decode_attention_ref,
+    prefill_attention,
+    prefill_attention_ref,
+)
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static hyper-parameters of the served model."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 128
+
+    # AOT compilation buckets (each becomes one HLO artifact).
+    prompt_buckets: Tuple[int, ...] = (16, 32, 64)
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16)
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model
+
+    @property
+    def kv_slab_shape(self) -> Tuple[int, ...]:
+        """Per-task KV cache slab: [layer, k/v, head, S, head_dim]."""
+        return (self.n_layers, 2, self.n_heads, self.max_seq, self.head_dim)
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic flat ordering of parameters.
+
+    This order is the executable argument order after (tokens, lens, kv);
+    aot.py records it in the manifest so the rust runtime can feed
+    weights.npz entries positionally.
+    """
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_g", f"l{i}.ln1_b",
+            f"l{i}.wqkv", f"l{i}.bqkv",
+            f"l{i}.wo", f"l{i}.bo",
+            f"l{i}.ln2_g", f"l{i}.ln2_b",
+            f"l{i}.w1", f"l{i}.b1",
+            f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> Params:
+    """PRNG-seeded weights; the same seed is baked into artifacts."""
+    key = jax.random.PRNGKey(seed)
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+    keys = iter(jax.random.split(key, 4 + 12 * cfg.n_layers))
+    p: Params = {
+        "tok_emb": nrm(next(keys), (v, d), 0.02),
+        "pos_emb": nrm(next(keys), (s, d), 0.01),
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+    resid_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        p[f"l{i}.ln1_g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.ln1_b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{i}.wqkv"] = nrm(next(keys), (d, 3 * d), 0.02)
+        p[f"l{i}.bqkv"] = jnp.zeros((3 * d,), jnp.float32)
+        p[f"l{i}.wo"] = nrm(next(keys), (d, d), resid_scale)
+        p[f"l{i}.bo"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{i}.ln2_g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{i}.ln2_b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{i}.w1"] = nrm(next(keys), (d, f), 0.02)
+        p[f"l{i}.b1"] = jnp.zeros((f,), jnp.float32)
+        p[f"l{i}.w2"] = nrm(next(keys), (f, d), resid_scale)
+        p[f"l{i}.b2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads, head_dim):
+    # [..., d] -> [..., H, hd] -> move H before seq handled by caller
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+# ---------------------------------------------------------------------------
+# Prefill: process the whole (padded) prompt for a single task.
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, length, *, use_pallas=True):
+    """Run the prompt through the model and materialise the KV cache.
+
+    Args:
+      tokens: i32[1, P]  byte tokens, padded to the bucket length P
+      length: i32[]      actual prompt length (1 <= length <= P)
+
+    Returns:
+      logits: f32[1, V]                  next-token logits at position length-1
+      kv:     f32[1, L, 2, H, S, hd]     cache padded to the context size
+    """
+    _, p_len = tokens.shape
+    d, h, hd, s = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.max_seq
+    attn = prefill_attention if use_pallas else prefill_attention_ref
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][:p_len][None]  # [1,P,d]
+    kv_layers = []
+    for i in range(cfg.n_layers):
+        xn = _ln(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        qkv = xn @ params[f"l{i}.wqkv"] + params[f"l{i}.bqkv"]  # [1,P,3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # [1,P,d] -> [1,H,P,hd]
+        q = _split_heads(q, h, hd).transpose(0, 2, 1, 3)
+        k = _split_heads(k, h, hd).transpose(0, 2, 1, 3)
+        v = _split_heads(v, h, hd).transpose(0, 2, 1, 3)
+        o = attn(q, k, v)  # [1,H,P,hd]
+        o = o.transpose(0, 2, 1, 3).reshape(1, p_len, d)
+        x = x + o @ params[f"l{i}.wo"] + params[f"l{i}.bo"]
+        xn = _ln(x, params[f"l{i}.ln2_g"], params[f"l{i}.ln2_b"])
+        mlp = jax.nn.gelu(xn @ params[f"l{i}.w1"] + params[f"l{i}.b1"])
+        x = x + mlp @ params[f"l{i}.w2"] + params[f"l{i}.b2"]
+        # pad K/V from P to the full context S
+        pad = [(0, 0), (0, 0), (0, s - p_len), (0, 0)]
+        kv_layers.append(jnp.stack([jnp.pad(k, pad), jnp.pad(v, pad)], axis=1))
+
+    xf = _ln(x, params["lnf_g"], params["lnf_b"])  # [1,P,d]
+    logits_all = xf @ params["tok_emb"].T  # [1,P,V]
+    logits = jax.lax.dynamic_slice_in_dim(logits_all, length - 1, 1, axis=1)[:, 0]
+    kv = jnp.stack(kv_layers, axis=1)  # [1, L, 2, H, S, hd]
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token for each task in a dynamic batch.
+# ---------------------------------------------------------------------------
+
+
+def decode(cfg: ModelConfig, params: Params, tokens, lens, kv, *, use_pallas=True):
+    """One decode step over a batch of independent tasks.
+
+    Args:
+      tokens: i32[b]                    the most recently sampled token per task
+      lens:   i32[b]                    current sequence length per task
+                                        (token i goes to position lens[i])
+      kv:     f32[b, L, 2, H, S, hd]    per-task caches
+
+    Returns:
+      logits: f32[b, V]                 next-token logits
+      kv_out: f32[b, L, 2, H, S, hd]    caches updated at position lens[i]
+    """
+    b = tokens.shape[0]
+    d, h, hd, s = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.max_seq
+    attn = decode_attention if use_pallas else decode_attention_ref
+
+    pos = lens  # position of the new token
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [b,d]
+
+    # Perf (EXPERIMENTS.md §Perf iteration 3): collect per-layer updated
+    # slabs and stack once at the end instead of chaining full-tensor
+    # dynamic-update-slices on [b, L, 2, H, S, hd] — avoids XLA copying
+    # the whole cache for the first (non-in-place) update.
+    layer_slabs = []
+    for i in range(cfg.n_layers):
+        xn = _ln(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        qkv = xn @ params[f"l{i}.wqkv"] + params[f"l{i}.bqkv"]  # [b,3d]
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, h, hd)  # [b,H,hd]
+        k_new = _split_heads(k_new, h, hd)  # [b,H,hd]
+        v_new = _split_heads(v_new, h, hd)
+
+        # scatter the new K/V into each task's slab at its position
+        def upd(slab, knew, vnew, p):
+            # slab: [2,H,S,hd]; knew/vnew: [H,hd]
+            slab = jax.lax.dynamic_update_slice(
+                slab, knew[None, :, None, :], (0, 0, p, 0)
+            )
+            slab = jax.lax.dynamic_update_slice(
+                slab, vnew[None, :, None, :], (1, 0, p, 0)
+            )
+            return slab
+
+        layer_slab = jax.vmap(upd)(kv[:, i], k_new, v_new, pos)  # [b,2,H,S,hd]
+        layer_slabs.append(layer_slab)
+
+        k_cache = layer_slab[:, 0]  # [b,H,S,hd]
+        v_cache = layer_slab[:, 1]
+        o = attn(q, k_cache, v_cache, lens + 1)  # [b,H,hd]
+        o = o.reshape(b, d)
+        x = x + o @ params[f"l{i}.wo"] + params[f"l{i}.bo"]
+        xn = _ln(x, params[f"l{i}.ln2_g"], params[f"l{i}.ln2_b"])
+        mlp = jax.nn.gelu(xn @ params[f"l{i}.w1"] + params[f"l{i}.b1"])
+        x = x + mlp @ params[f"l{i}.w2"] + params[f"l{i}.b2"]
+
+    xf = _ln(x, params["lnf_g"], params["lnf_b"])
+    logits = xf @ params["tok_emb"].T  # [b,V]
+    kv_out = jnp.stack(layer_slabs, axis=1)  # [b,L,2,H,S,hd]
+    return logits, kv_out
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers (what aot.py lowers): weights are positional inputs
+# so the HLO artifacts stay small and the rust runtime feeds weights.npz
+# entries once at startup.
+# ---------------------------------------------------------------------------
+
+
+def prefill_flat(cfg: ModelConfig, tokens, length, *flat_params, use_pallas=True):
+    names = param_names(cfg)
+    params = dict(zip(names, flat_params))
+    return prefill(cfg, params, tokens, length, use_pallas=use_pallas)
+
+
+def decode_flat(cfg: ModelConfig, tokens, lens, kv, *flat_params, use_pallas=True):
+    names = param_names(cfg)
+    params = dict(zip(names, flat_params))
+    return decode(cfg, params, tokens, lens, kv, use_pallas=use_pallas)
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> List[jnp.ndarray]:
+    return [params[n] for n in param_names(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Build-time reference generation loop (used by tests to validate that
+# prefill+decode over the bucketed/padded path reproduces a straightforward
+# full re-forward at every step).
+# ---------------------------------------------------------------------------
+
+
+def generate_ref(cfg: ModelConfig, params: Params, prompt: List[int], n_tokens: int):
+    """Greedy generation via full re-forward each step (oracle, slow)."""
+    toks = list(prompt)
+    for _ in range(n_tokens):
+        p = len(toks)
+        tokens = jnp.asarray([toks], dtype=jnp.int32)
+        logits, _ = prefill(cfg, params, tokens, jnp.int32(p), use_pallas=False)
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks[len(prompt):]
+
+
+def generate_kv(cfg: ModelConfig, params: Params, prompt: List[int], n_tokens: int,
+                *, use_pallas=True):
+    """Greedy generation via prefill + per-step decode (the served path)."""
+    p = len(prompt)
+    bucket = next(b for b in cfg.prompt_buckets if b >= p)
+    padded = prompt + [0] * (bucket - p)
+    tokens = jnp.asarray([padded], dtype=jnp.int32)
+    logits, kv = prefill(cfg, params, tokens, jnp.int32(p), use_pallas=use_pallas)
+    out = [int(jnp.argmax(logits[0]))]
+    lens = jnp.asarray([p], dtype=jnp.int32)
+    for _ in range(n_tokens - 1):
+        tok = jnp.asarray([out[-1]], dtype=jnp.int32)
+        logits, kv = decode(cfg, params, tok, lens, kv, use_pallas=use_pallas)
+        out.append(int(jnp.argmax(logits[0])))
+        lens = lens + 1
+    return out

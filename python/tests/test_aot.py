@@ -1,0 +1,72 @@
+"""AOT pipeline: HLO text emission, manifest integrity, weight round-trip."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.aot import build_artifacts, lower_decode, lower_prefill
+from compile.model import ModelConfig, flatten_params, init_params, param_names
+
+TINY = ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16, d_ff=64,
+    max_seq=32, prompt_buckets=(8,), batch_buckets=(1, 2),
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return init_params(TINY, seed=7)
+
+
+def test_lower_prefill_emits_hlo_text(tiny_params):
+    text = lower_prefill(TINY, tiny_params, 8)
+    assert "ENTRY" in text and "HloModule" in text
+    # weights are inputs, not giant constants: text stays small
+    assert len(text) < 2_000_000
+
+
+def test_lower_decode_emits_hlo_text(tiny_params):
+    text = lower_decode(TINY, tiny_params, 2)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_lowered_decode_has_expected_params(tiny_params):
+    """Parameter count = tokens + lens + kv + |weights|."""
+    text = lower_decode(TINY, tiny_params, 1)
+    n_expected = 3 + len(param_names(TINY))
+    # HLO text declares each entry parameter as parameter(k)
+    count = sum(1 for line in text.splitlines() if "parameter(" in line)
+    assert count >= n_expected
+
+
+def test_build_artifacts_manifest_and_weights():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = build_artifacts(TINY, d, seed=7)
+        with open(os.path.join(d, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        assert on_disk["model"]["vocab"] == TINY.vocab
+        assert on_disk["model"]["max_seq"] == TINY.max_seq
+        assert [e["bucket"] for e in on_disk["prefill"]] == [8]
+        assert [e["batch"] for e in on_disk["decode"]] == [1, 2]
+        for e in on_disk["prefill"] + on_disk["decode"]:
+            assert os.path.exists(os.path.join(d, e["path"]))
+
+        # weights round-trip positionally
+        z = np.load(os.path.join(d, "weights.npz"))
+        params = init_params(TINY, seed=7)
+        flat = flatten_params(TINY, params)
+        for name, arr in zip(on_disk["param_names"], flat):
+            np.testing.assert_array_equal(z[name], np.asarray(arr))
+
+
+def test_weights_depend_on_seed():
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        build_artifacts(TINY, d1, seed=1)
+        build_artifacts(TINY, d2, seed=2)
+        z1 = np.load(os.path.join(d1, "weights.npz"))
+        z2 = np.load(os.path.join(d2, "weights.npz"))
+        assert not np.allclose(z1["tok_emb"], z2["tok_emb"])

@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+The hypothesis sweeps are the CORE correctness signal for the kernels:
+shapes, head counts, cache sizes and valid-length vectors are generated,
+and the Pallas output must match ref.py to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    decode_attention,
+    decode_attention_ref,
+    prefill_attention,
+    prefill_attention_ref,
+)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 32, 128]),
+    hd=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(b, h, s, hd, seed, data):
+    lens_list = data.draw(
+        st.lists(st.integers(1, s), min_size=b, max_size=b), label="lens"
+    )
+    q = _rand(seed, (b, h, hd))
+    k = _rand(seed + 1, (b, h, s, hd))
+    v = _rand(seed + 2, (b, h, s, hd))
+    lens = jnp.asarray(lens_list, dtype=jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_len_one():
+    """A task with a single valid cache row attends only to that row."""
+    b, h, s, hd = 2, 2, 16, 8
+    q = _rand(0, (b, h, hd))
+    k = _rand(1, (b, h, s, hd))
+    v = _rand(2, (b, h, s, hd))
+    lens = jnp.asarray([1, 1], dtype=jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    # softmax over one element is 1.0 -> output equals v[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, :, 0]), **TOL)
+
+
+def test_decode_attention_full_cache():
+    b, h, s, hd = 3, 4, 64, 16
+    q, k, v = _rand(3, (b, h, hd)), _rand(4, (b, h, s, hd)), _rand(5, (b, h, s, hd))
+    lens = jnp.full((b,), s, dtype=jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Values past lens must not influence the output at all."""
+    b, h, s, hd = 2, 2, 32, 8
+    q = _rand(6, (b, h, hd))
+    k = _rand(7, (b, h, s, hd))
+    v = _rand(8, (b, h, s, hd))
+    lens = jnp.asarray([5, 20], dtype=jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    # poison the padded region with huge values
+    mask = jnp.arange(s)[None, None, :, None] >= lens[:, None, None, None]
+    k2 = jnp.where(mask, 1e6, k)
+    v2 = jnp.where(mask, -1e6, v)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), **TOL)
+
+
+def test_decode_attention_heterogeneous_lens():
+    """Each batch row is independent: permuting rows permutes outputs."""
+    b, h, s, hd = 4, 2, 16, 8
+    q, k, v = _rand(9, (b, h, hd)), _rand(10, (b, h, s, hd)), _rand(11, (b, h, s, hd))
+    lens = jnp.asarray([1, 5, 9, 16], dtype=jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    perm = jnp.asarray([2, 0, 3, 1])
+    out_p = decode_attention(q[perm], k[perm], v[perm], lens[perm])
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([4, 16, 64]),
+    hd=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_attention_matches_ref(b, h, p, hd, seed):
+    q = _rand(seed, (b, h, p, hd))
+    k = _rand(seed + 1, (b, h, p, hd))
+    v = _rand(seed + 2, (b, h, p, hd))
+    out = prefill_attention(q, k, v)
+    ref = prefill_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_prefill_attention_is_causal():
+    """Position 0 output must not depend on later K/V rows."""
+    b, h, p, hd = 1, 2, 8, 8
+    q = _rand(12, (b, h, p, hd))
+    k = _rand(13, (b, h, p, hd))
+    v = _rand(14, (b, h, p, hd))
+    out1 = prefill_attention(q, k, v)
+    k2 = k.at[:, :, 1:].set(999.0)
+    v2 = v.at[:, :, 1:].set(-999.0)
+    out2 = prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :, 0]), np.asarray(out2[:, :, 0]), **TOL
+    )
+
+
+def test_prefill_first_row_equals_v0():
+    b, h, p, hd = 2, 2, 4, 8
+    q, k, v = _rand(15, (b, h, p, hd)), _rand(16, (b, h, p, hd)), _rand(17, (b, h, p, hd))
+    out = prefill_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]), np.asarray(v[:, :, 0]), **TOL)
+
+
+def test_decode_consistent_with_prefill_last_row():
+    """Decode of the last token == prefill's last row (same K/V)."""
+    b, h, p, hd = 2, 2, 8, 8
+    q, k, v = _rand(18, (b, h, p, hd)), _rand(19, (b, h, p, hd)), _rand(20, (b, h, p, hd))
+    full = prefill_attention(q, k, v)  # [b,h,p,hd]
+    lens = jnp.full((b,), p, dtype=jnp.int32)
+    one = decode_attention(q[:, :, -1], k, v, lens)  # [b,h,hd]
+    np.testing.assert_allclose(np.asarray(full[:, :, -1]), np.asarray(one), **TOL)

@@ -1,0 +1,235 @@
+//! Configuration system: a small TOML-subset parser plus typed configs
+//! for the server, scheduler, engine and workload (the `toml`/`serde`
+//! crates are unavailable offline, so the parser lives here).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! strings, integers, floats, booleans and flat arrays, comments with
+//! `#`. This covers everything the launcher needs.
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::fastserve::FastServeConfig;
+use crate::coordinator::preemption::UtilityAdaptor;
+use crate::coordinator::selection::CYCLE_CAP;
+use crate::util::{secs, Micros};
+
+use self::toml::TomlDoc;
+
+/// Which scheduling policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Slice,
+    Orca,
+    FastServe,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "slice" => PolicyKind::Slice,
+            "orca" => PolicyKind::Orca,
+            "fastserve" | "fast-serve" => PolicyKind::FastServe,
+            other => bail!("unknown policy '{other}' (slice|orca|fastserve)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Slice => "SLICE",
+            PolicyKind::Orca => "Orca",
+            PolicyKind::FastServe => "FastServe",
+        }
+    }
+}
+
+/// Engine backend selection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Virtual-time simulation with the paper-calibrated latency model.
+    Sim,
+    /// Real AOT-compiled model via PJRT; holds the artifacts directory.
+    Pjrt(PathBuf),
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub policy: PolicyKind,
+    pub engine: EngineKind,
+    /// SLICE: scheduling-cycle cap.
+    pub cycle_cap: Micros,
+    /// SLICE: utility adaptor.
+    pub adaptor: UtilityAdaptor,
+    /// SLICE extension: charge pending prefill work to the cycle budget.
+    pub prefill_aware: bool,
+    /// Orca / FastServe: max concurrent batch.
+    pub max_batch: u32,
+    /// FastServe MLFQ shape.
+    pub fastserve: FastServeConfig,
+    /// Workload parameters.
+    pub arrival_rate: f64,
+    pub rt_ratio: f64,
+    pub n_tasks: usize,
+    pub seed: u64,
+    /// Run horizon.
+    pub horizon: Micros,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            policy: PolicyKind::Slice,
+            engine: EngineKind::Sim,
+            cycle_cap: CYCLE_CAP,
+            adaptor: UtilityAdaptor::None,
+            prefill_aware: false,
+            max_batch: 32,
+            fastserve: FastServeConfig::default(),
+            arrival_rate: 1.0,
+            rt_ratio: 0.7,
+            n_tasks: 200,
+            seed: 42,
+            horizon: secs(600.0),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a TOML file (all keys optional; defaults otherwise).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ServeConfig::default();
+
+        if let Some(v) = doc.get_str("scheduler", "policy")? {
+            cfg.policy = PolicyKind::parse(&v)?;
+        }
+        if let Some(v) = doc.get_f64("scheduler", "cycle_cap_ms")? {
+            cfg.cycle_cap = (v * 1000.0) as Micros;
+        }
+        if let Some(v) = doc.get_i64("scheduler", "max_batch")? {
+            cfg.max_batch = v as u32;
+        }
+        if let Some(v) = doc.get_bool("scheduler", "prefill_aware")? {
+            cfg.prefill_aware = v;
+        }
+        if let Some(v) = doc.get_str("scheduler", "adaptor")? {
+            cfg.adaptor = match v.as_str() {
+                "none" => UtilityAdaptor::None,
+                "sjf" => UtilityAdaptor::SjfDecay { factor: 0.5, tau: 32 },
+                "sticky" => UtilityAdaptor::StickyBoost { multiplier: 2.0 },
+                other => bail!("unknown adaptor '{other}' (none|sjf|sticky)"),
+            };
+        }
+        if let Some(v) = doc.get_i64("fastserve", "levels")? {
+            cfg.fastserve.levels = v as usize;
+        }
+        if let Some(v) = doc.get_i64("fastserve", "base_quantum")? {
+            cfg.fastserve.base_quantum = v as u32;
+        }
+        if let Some(v) = doc.get_i64("fastserve", "base_join_len")? {
+            cfg.fastserve.base_join_len = v as u32;
+        }
+        if let Some(v) = doc.get_str("engine", "backend")? {
+            cfg.engine = match v.as_str() {
+                "sim" => EngineKind::Sim,
+                "pjrt" => {
+                    let dir = doc
+                        .get_str("engine", "artifacts")?
+                        .unwrap_or_else(|| "artifacts".to_string());
+                    EngineKind::Pjrt(PathBuf::from(dir))
+                }
+                other => bail!("unknown engine backend '{other}' (sim|pjrt)"),
+            };
+        }
+        if let Some(v) = doc.get_f64("workload", "arrival_rate")? {
+            cfg.arrival_rate = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "rt_ratio")? {
+            cfg.rt_ratio = v;
+        }
+        if let Some(v) = doc.get_i64("workload", "n_tasks")? {
+            cfg.n_tasks = v as usize;
+        }
+        if let Some(v) = doc.get_i64("workload", "seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_f64("workload", "horizon_s")? {
+            cfg.horizon = secs(v);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ServeConfig::default();
+        assert_eq!(c.policy, PolicyKind::Slice);
+        assert_eq!(c.cycle_cap, 1_000_000);
+        assert_eq!(c.max_batch, 32);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# SLICE serving config
+[scheduler]
+policy = "orca"
+cycle_cap_ms = 800.0
+max_batch = 16
+adaptor = "sjf"
+
+[fastserve]
+levels = 4
+base_quantum = 4
+
+[engine]
+backend = "pjrt"
+artifacts = "artifacts"
+
+[workload]
+arrival_rate = 2.5
+rt_ratio = 0.5
+n_tasks = 1000
+seed = 7
+horizon_s = 120.0
+"#;
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert_eq!(c.policy, PolicyKind::Orca);
+        assert_eq!(c.cycle_cap, 800_000);
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.adaptor, UtilityAdaptor::SjfDecay { factor: 0.5, tau: 32 });
+        assert_eq!(c.fastserve.levels, 4);
+        assert_eq!(c.fastserve.base_quantum, 4);
+        assert_eq!(c.engine, EngineKind::Pjrt(PathBuf::from("artifacts")));
+        assert_eq!(c.arrival_rate, 2.5);
+        assert_eq!(c.n_tasks, 1000);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.horizon, 120_000_000);
+    }
+
+    #[test]
+    fn rejects_unknown_policy() {
+        assert!(ServeConfig::from_toml("[scheduler]\npolicy = \"lifo\"\n").is_err());
+    }
+
+    #[test]
+    fn policy_kind_parse() {
+        assert_eq!(PolicyKind::parse("SLICE").unwrap(), PolicyKind::Slice);
+        assert_eq!(PolicyKind::parse("fastserve").unwrap(), PolicyKind::FastServe);
+        assert!(PolicyKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Minimal TOML-subset parser (see `config::mod` docs for the subset).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: section -> key -> value. Top-level keys live in
+/// the "" section.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let v = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => bail!("[{section}].{key}: expected string, got {v:?}"),
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Result<Option<i64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) => Ok(Some(*i)),
+            Some(v) => bail!("[{section}].{key}: expected integer, got {v:?}"),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Float(f)) => Ok(Some(*f)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => bail!("[{section}].{key}: expected float, got {v:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("[{section}].{key}: expected bool, got {v:?}"),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+s = "hello"   # comment
+i = 42
+f = 2.5
+b = true
+arr = [1, 2, 3]
+[b]
+x = -7
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "top").unwrap(), Some(1));
+        assert_eq!(doc.get_str("a", "s").unwrap(), Some("hello".into()));
+        assert_eq!(doc.get_i64("a", "i").unwrap(), Some(42));
+        assert_eq!(doc.get_f64("a", "f").unwrap(), Some(2.5));
+        assert_eq!(doc.get_bool("a", "b").unwrap(), Some(true));
+        assert_eq!(
+            doc.get("a", "arr"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        assert_eq!(doc.get_i64("b", "x").unwrap(), Some(-7));
+        assert_eq!(doc.get_i64("b", "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let doc = TomlDoc::parse("x = 3\ny = 3.5\n").unwrap();
+        assert_eq!(doc.get_f64("", "x").unwrap(), Some(3.0));
+        assert!(doc.get_i64("", "y").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(doc.get_str("", "s").unwrap(), Some("a#b".into()));
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated\n").is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! FastServe baseline: skip-join multi-level feedback queue with
+//! iteration-level preemption (Wu et al., arXiv:2305.05920 — the paper's
+//! second baseline).
+//!
+//! Behaviour reproduced:
+//!   * K priority levels; level k's quantum is `base_quantum << k` output
+//!     tokens. A task that exhausts its quantum at level k demotes to
+//!     k+1 (classic MLFQ aging toward long jobs).
+//!   * **Skip-join**: a task does not start at the top level; it joins
+//!     the level whose quantum matches its prompt length (longer prompts
+//!     imply longer jobs), avoiding pointless demotion churn.
+//!   * **Iteration-level preemption**: the decode batch is re-formed from
+//!     the highest-priority queues at every iteration boundary, so a new
+//!     arrival at a higher level preempts lower-level tasks immediately
+//!     after the in-flight forward pass.
+//!
+//! Like Orca (and per the paper's §VI-C observation), FastServe batches
+//! every selected task into a single forward pass and gives them all the
+//! same decoding rate — it has no notion of per-task SLO.
+
+use std::collections::VecDeque;
+
+use crate::util::Micros;
+
+use super::pool::TaskPool;
+use super::scheduler::{Policy, Step};
+use super::task::{TaskId, TaskState};
+
+/// FastServe configuration.
+#[derive(Debug, Clone)]
+pub struct FastServeConfig {
+    /// Number of MLFQ levels.
+    pub levels: usize,
+    /// Quantum (output tokens) at level 0; doubles per level.
+    pub base_quantum: u32,
+    /// Prompt-length threshold for skip-join at level 0; doubles per level.
+    pub base_join_len: u32,
+    /// Max concurrent tasks per decode iteration.
+    pub max_batch: u32,
+}
+
+impl Default for FastServeConfig {
+    fn default() -> Self {
+        FastServeConfig { levels: 6, base_quantum: 2, base_join_len: 16, max_batch: 32 }
+    }
+}
+
+/// FastServe skip-join MLFQ policy.
+pub struct FastServePolicy {
+    cfg: FastServeConfig,
+    /// queues[k] = FIFO of task ids at priority level k (0 = highest).
+    queues: Vec<VecDeque<TaskId>>,
+    /// Tokens generated since the task entered its current level.
+    level_tokens: Vec<(TaskId, u32, usize)>, // (task, tokens_at_level, level)
+}
+
+impl FastServePolicy {
+    pub fn new(cfg: FastServeConfig) -> Self {
+        let queues = (0..cfg.levels).map(|_| VecDeque::new()).collect();
+        FastServePolicy { cfg, queues, level_tokens: Vec::new() }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(FastServeConfig::default())
+    }
+
+    fn quantum(&self, level: usize) -> u32 {
+        self.cfg.base_quantum << level.min(31)
+    }
+
+    /// Skip-join: initial level from the prompt length.
+    fn join_level(&self, prompt_len: u32) -> usize {
+        let mut level = 0usize;
+        let mut threshold = self.cfg.base_join_len;
+        while level + 1 < self.cfg.levels && prompt_len > threshold {
+            level += 1;
+            threshold <<= 1;
+        }
+        level
+    }
+
+    fn entry_mut(&mut self, id: TaskId) -> Option<&mut (TaskId, u32, usize)> {
+        self.level_tokens.iter_mut().find(|e| e.0 == id)
+    }
+
+    fn remove_task(&mut self, id: TaskId) {
+        for q in &mut self.queues {
+            q.retain(|&x| x != id);
+        }
+        self.level_tokens.retain(|e| e.0 != id);
+    }
+
+    /// The level a task currently sits at (tests).
+    pub fn level_of(&self, id: TaskId) -> Option<usize> {
+        self.level_tokens.iter().find(|e| e.0 == id).map(|e| e.2)
+    }
+
+    /// Account one generated token and demote on quantum exhaustion.
+    fn charge_token(&mut self, id: TaskId) {
+        let levels = self.cfg.levels;
+        let Some(entry) = self.entry_mut(id) else { return };
+        entry.1 += 1;
+        let (tokens, level) = (entry.1, entry.2);
+        if tokens >= self.quantum(level) && level + 1 < levels {
+            // demote: move to the back of the next queue
+            let Some(entry) = self.entry_mut(id) else { return };
+            entry.1 = 0;
+            entry.2 = level + 1;
+            self.queues[level].retain(|&x| x != id);
+            self.queues[level + 1].push_back(id);
+        }
+    }
+}
+
+impl Policy for FastServePolicy {
+    fn name(&self) -> &'static str {
+        "FastServe"
+    }
+
+    fn on_arrival(&mut self, pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        for &id in ids {
+            let level = self.join_level(pool.get(id).prompt_len);
+            self.queues[level].push_back(id);
+            self.level_tokens.push((id, 0, level));
+        }
+    }
+
+    fn on_completion(&mut self, _pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        for &id in ids {
+            self.remove_task(id);
+        }
+    }
+
+    fn next_step(&mut self, pool: &mut TaskPool, _now: Micros) -> Step {
+        // Form the iteration batch from the highest-priority queues.
+        let mut batch: Vec<TaskId> = Vec::new();
+        for q in &self.queues {
+            for &id in q {
+                if batch.len() as u32 >= self.cfg.max_batch {
+                    break;
+                }
+                if !pool.get(id).is_finished() {
+                    batch.push(id);
+                }
+            }
+            if batch.len() as u32 >= self.cfg.max_batch {
+                break;
+            }
+        }
+        if batch.is_empty() {
+            return Step::Idle;
+        }
+
+        // Prefill before decode, in priority order.
+        for &id in &batch {
+            if pool.get(id).state == TaskState::Waiting {
+                pool.get_mut(id).state = TaskState::Admitted;
+            }
+            if pool.get(id).state == TaskState::Admitted {
+                // charge the first token (produced by prefill) to the quantum
+                self.charge_token(id);
+                return Step::Prefill { task: id };
+            }
+        }
+
+        let decode_batch: Vec<TaskId> = batch
+            .into_iter()
+            .filter(|&id| pool.get(id).state == TaskState::Running)
+            .collect();
+        if decode_batch.is_empty() {
+            return Step::Idle;
+        }
+        for &id in &decode_batch {
+            self.charge_token(id);
+        }
+        Step::Decode { tasks: decode_batch }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+
+    fn pool_with_prompts(prompts: &[u32]) -> TaskPool {
+        let mut p = TaskPool::new();
+        for (i, &pl) in prompts.iter().enumerate() {
+            p.insert(Task::new(i as u64, TaskClass::Voice, 0, pl, 100, 1.0));
+        }
+        p
+    }
+
+    fn mark_prefilled(pool: &mut TaskPool, id: TaskId, now: Micros) {
+        let t = pool.get_mut(id);
+        t.state = TaskState::Running;
+        t.prefill_end = Some(now);
+        t.on_token(now);
+    }
+
+    #[test]
+    fn skip_join_assigns_levels_by_prompt_length() {
+        let mut pool = pool_with_prompts(&[8, 20, 40, 200]);
+        let mut p = FastServePolicy::with_defaults();
+        p.on_arrival(&mut pool, &[0, 1, 2, 3], 0);
+        assert_eq!(p.level_of(0), Some(0)); // 8 <= 16
+        assert_eq!(p.level_of(1), Some(1)); // 16 < 20 <= 32
+        assert_eq!(p.level_of(2), Some(2)); // 32 < 40 <= 64
+        assert_eq!(p.level_of(3), Some(4)); // 128 < 200 <= 256
+    }
+
+    #[test]
+    fn quantum_exhaustion_demotes() {
+        let mut pool = pool_with_prompts(&[8]);
+        let mut p = FastServePolicy::with_defaults();
+        p.on_arrival(&mut pool, &[0], 0);
+        assert_eq!(p.level_of(0), Some(0));
+        // prefill consumes 1 of the level-0 quantum (2 tokens)
+        assert_eq!(p.next_step(&mut pool, 0), Step::Prefill { task: 0 });
+        mark_prefilled(&mut pool, 0, 1);
+        // one decode exhausts the level-0 quantum -> demote to level 1
+        let _ = p.next_step(&mut pool, 2);
+        assert_eq!(p.level_of(0), Some(1));
+        // quantum at level 1 is 4 tokens; 4 more decodes demote to level 2
+        for _ in 0..4 {
+            let _ = p.next_step(&mut pool, 3);
+        }
+        assert_eq!(p.level_of(0), Some(2));
+    }
+
+    #[test]
+    fn higher_priority_arrival_preempts_next_iteration() {
+        let mut pool = pool_with_prompts(&[100, 8]);
+        let mut p = FastServePolicy::with_defaults();
+        p.on_arrival(&mut pool, &[0], 0); // long prompt -> deep level
+        assert_eq!(p.next_step(&mut pool, 0), Step::Prefill { task: 0 });
+        mark_prefilled(&mut pool, 0, 1);
+        // short task arrives at level 0, must be served at the next
+        // iteration boundary (prefill first)
+        p.on_arrival(&mut pool, &[1], 2);
+        assert_eq!(p.next_step(&mut pool, 2), Step::Prefill { task: 1 });
+        mark_prefilled(&mut pool, 1, 3);
+        match p.next_step(&mut pool, 4) {
+            Step::Decode { tasks } => assert_eq!(tasks[0], 1, "level-0 first"),
+            s => panic!("expected decode, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_respects_cap() {
+        let prompts: Vec<u32> = (0..40).map(|_| 8).collect();
+        let mut pool = pool_with_prompts(&prompts);
+        let mut p = FastServePolicy::new(FastServeConfig {
+            max_batch: 4,
+            ..FastServeConfig::default()
+        });
+        let ids: Vec<TaskId> = (0..40).collect();
+        p.on_arrival(&mut pool, &ids, 0);
+        for i in 0..4u64 {
+            assert_eq!(p.next_step(&mut pool, 0), Step::Prefill { task: i });
+            mark_prefilled(&mut pool, i, 1);
+        }
+        match p.next_step(&mut pool, 2) {
+            Step::Decode { tasks } => assert_eq!(tasks.len(), 4),
+            s => panic!("expected decode, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn completion_removes_from_queues() {
+        let mut pool = pool_with_prompts(&[8, 8]);
+        let mut p = FastServePolicy::with_defaults();
+        p.on_arrival(&mut pool, &[0, 1], 0);
+        pool.get_mut(0).finish(1);
+        p.on_completion(&mut pool, &[0], 1);
+        assert_eq!(p.level_of(0), None);
+        assert_eq!(p.next_step(&mut pool, 2), Step::Prefill { task: 1 });
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut pool = TaskPool::new();
+        let mut p = FastServePolicy::with_defaults();
+        assert_eq!(p.next_step(&mut pool, 0), Step::Idle);
+    }
+}

@@ -1,0 +1,256 @@
+//! Decode-mask matrix (paper §IV-D, Algorithm 3, Fig. 4).
+//!
+//! The rate allocator gives every scheduled task an individual token
+//! generation rate by building a binary matrix: one row per task (sorted
+//! by per-cycle token quota v_i, descending), v_0 columns (the largest
+//! quota). Row i has its first v_i entries set. Execution scans columns
+//! left to right; the tasks whose bit is set in the current column form
+//! the decode batch for one forward pass. A full sweep of the columns is
+//! one *scheduling cycle* and gives task i exactly v_i tokens.
+//!
+//! Because rows are sorted descending, the set of tasks in column j is
+//! always a **prefix** of the task list (those with v_i > j). The hot
+//! path therefore never materializes the matrix: [`DecodeMask::batch_len`]
+//! is a prefix length computed once per column. The explicit bit matrix
+//! is retained for tests, ablation and debugging (`as_bit_matrix`).
+
+use crate::engine::latency::LatencyModel;
+use crate::util::Micros;
+
+use super::task::TaskId;
+
+/// A built decode-mask matrix over a selected batch of tasks.
+#[derive(Debug, Clone)]
+pub struct DecodeMask {
+    /// (task, per-cycle quota v_i), sorted by v_i descending.
+    rows: Vec<(TaskId, u32)>,
+    /// Number of columns = v_0 (quota of the most demanding task).
+    columns: u32,
+    /// Per-column batch length: batch_lens[j] = |{i : v_i > j}|.
+    batch_lens: Vec<u32>,
+}
+
+impl DecodeMask {
+    /// Build the matrix from (task, required tokens/cycle) pairs.
+    /// Tasks with v = 0 are rejected (every scheduled task must make
+    /// progress each cycle — Eq. 3/4).
+    pub fn build(mut tasks: Vec<(TaskId, u32)>) -> Self {
+        assert!(tasks.iter().all(|&(_, v)| v > 0), "zero-rate task in mask");
+        // stable ordering: quota desc, id asc for determinism
+        tasks.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let columns = tasks.first().map_or(0, |&(_, v)| v);
+        let mut batch_lens = Vec::with_capacity(columns as usize);
+        for j in 0..columns {
+            // rows sorted desc -> prefix property
+            let n = tasks.partition_point(|&(_, v)| v > j);
+            batch_lens.push(n as u32);
+        }
+        DecodeMask { rows: tasks, columns, batch_lens }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn columns(&self) -> u32 {
+        self.columns
+    }
+
+    /// Tasks participating in column `j` (a prefix of the sorted rows).
+    pub fn column_batch(&self, j: u32) -> &[(TaskId, u32)] {
+        let n = self.batch_len(j) as usize;
+        &self.rows[..n]
+    }
+
+    /// Number of tasks decoding in column `j`.
+    pub fn batch_len(&self, j: u32) -> u32 {
+        if j >= self.columns {
+            0
+        } else {
+            self.batch_lens[j as usize]
+        }
+    }
+
+    /// All rows (task, quota), sorted by quota descending.
+    pub fn rows(&self) -> &[(TaskId, u32)] {
+        &self.rows
+    }
+
+    /// Total tokens generated per full cycle (= sum of quotas = sum of
+    /// column batch sizes).
+    pub fn tokens_per_cycle(&self) -> u64 {
+        self.rows.iter().map(|&(_, v)| v as u64).sum()
+    }
+
+    /// Exact cycle duration: sum of l(batch) over all columns.
+    pub fn period_exact(&self, l: &LatencyModel) -> Micros {
+        (0..self.columns)
+            .map(|j| l.decode(self.batch_len(j)))
+            .sum()
+    }
+
+    /// Explicit 0/1 matrix (tests / visualization only).
+    pub fn as_bit_matrix(&self) -> Vec<Vec<u8>> {
+        self.rows
+            .iter()
+            .map(|&(_, v)| {
+                (0..self.columns).map(|j| u8::from(j < v)).collect()
+            })
+            .collect()
+    }
+}
+
+/// Closed-form cycle estimate, Eq. (7) of the paper:
+///
+///   T_period = v_b * l(b+1) + sum_{j=0}^{b-1} (v_j - v_{j+1}) * l(j+1)
+///
+/// where `vs` are per-cycle quotas sorted descending over b+1 tasks.
+/// Equivalent to summing l(batch) over the mask's columns (tested against
+/// [`DecodeMask::period_exact`]).
+pub fn period_eq7(vs_sorted_desc: &[u32], l: &LatencyModel) -> Micros {
+    let n = vs_sorted_desc.len();
+    if n == 0 {
+        return 0;
+    }
+    debug_assert!(vs_sorted_desc.windows(2).all(|w| w[0] >= w[1]));
+    let vb = vs_sorted_desc[n - 1];
+    let mut t = vb as u64 * l.decode(n as u32);
+    for j in 0..n - 1 {
+        let dv = (vs_sorted_desc[j] - vs_sorted_desc[j + 1]) as u64;
+        t += dv * l.decode(j as u32 + 1);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ms;
+
+    fn model() -> LatencyModel {
+        LatencyModel::paper_calibrated()
+    }
+
+    /// The paper's Fig. 4 worked example: quotas 6/4/2/1.
+    #[test]
+    fn fig4_example_matrix() {
+        let m = DecodeMask::build(vec![(0, 6), (1, 4), (2, 2), (3, 1)]);
+        assert_eq!(m.columns(), 6);
+        assert_eq!(m.n_tasks(), 4);
+        let bits = m.as_bit_matrix();
+        assert_eq!(bits[0], vec![1, 1, 1, 1, 1, 1]);
+        assert_eq!(bits[1], vec![1, 1, 1, 1, 0, 0]);
+        assert_eq!(bits[2], vec![1, 1, 0, 0, 0, 0]);
+        assert_eq!(bits[3], vec![1, 0, 0, 0, 0, 0]);
+        // column batches: col0 -> 4 tasks, col1 -> 3, col2..3 -> 2, col4..5 -> 1
+        assert_eq!(
+            (0..6).map(|j| m.batch_len(j)).collect::<Vec<_>>(),
+            vec![4, 3, 2, 2, 1, 1]
+        );
+        // scanning column 2 groups task0 and task1 (paper's example)
+        let col2: Vec<TaskId> = m.column_batch(2).iter().map(|&(id, _)| id).collect();
+        assert_eq!(col2, vec![0, 1]);
+    }
+
+    #[test]
+    fn tokens_per_cycle_equals_quota_sum() {
+        let m = DecodeMask::build(vec![(0, 6), (1, 4), (2, 2), (3, 1)]);
+        assert_eq!(m.tokens_per_cycle(), 13);
+        let col_sum: u64 = (0..m.columns()).map(|j| m.batch_len(j) as u64).sum();
+        assert_eq!(col_sum, 13);
+    }
+
+    #[test]
+    fn eq7_matches_column_sum_fig4() {
+        let l = model();
+        let m = DecodeMask::build(vec![(0, 6), (1, 4), (2, 2), (3, 1)]);
+        assert_eq!(m.period_exact(&l), period_eq7(&[6, 4, 2, 1], &l));
+        // manual expansion: l(4) + l(3) + 2*l(2) + 2*l(1)
+        let manual = l.decode(4) + l.decode(3) + 2 * l.decode(2) + 2 * l.decode(1);
+        assert_eq!(m.period_exact(&l), manual);
+    }
+
+    #[test]
+    fn eq7_matches_column_sum_randomized() {
+        let l = model();
+        let mut rng = crate::util::rng::Rng::new(2024);
+        for _ in 0..200 {
+            let n = rng.range_usize(1, 12);
+            let mut vs: Vec<u32> =
+                (0..n).map(|_| rng.range_u64(1, 30) as u32).collect();
+            vs.sort_unstable_by(|a, b| b.cmp(a));
+            let tasks: Vec<(TaskId, u32)> =
+                vs.iter().enumerate().map(|(i, &v)| (i as u64, v)).collect();
+            let m = DecodeMask::build(tasks);
+            assert_eq!(m.period_exact(&l), period_eq7(&vs, &l), "vs={vs:?}");
+        }
+    }
+
+    #[test]
+    fn equal_quotas_single_batch() {
+        let l = model();
+        let m = DecodeMask::build(vec![(0, 5), (1, 5), (2, 5)]);
+        assert_eq!(m.columns(), 5);
+        for j in 0..5 {
+            assert_eq!(m.batch_len(j), 3);
+        }
+        assert_eq!(m.period_exact(&l), 5 * l.decode(3));
+    }
+
+    #[test]
+    fn table2_period_under_cycle_cap() {
+        // Table II: quotas ceil(1/TPOT) = A:10 x3, B:ceil(8.33)=9 x4, C:4 x2
+        let l = model();
+        let vs = [10, 10, 10, 9, 9, 9, 9, 4, 4];
+        let period = period_eq7(&vs, &l);
+        assert!(
+            period < ms(1000.0),
+            "paper's 9-task static mix must be admissible, period={period}"
+        );
+    }
+
+    #[test]
+    fn single_task_mask() {
+        let l = model();
+        let m = DecodeMask::build(vec![(7, 3)]);
+        assert_eq!(m.columns(), 3);
+        assert_eq!(m.batch_len(0), 1);
+        assert_eq!(m.period_exact(&l), 3 * l.decode(1));
+        assert_eq!(m.column_batch(0), &[(7, 3)]);
+    }
+
+    #[test]
+    fn column_batches_are_prefixes_of_sorted_rows() {
+        let m = DecodeMask::build(vec![(5, 2), (9, 7), (1, 7), (3, 4)]);
+        // sorted: (1,7), (9,7), (3,4), (5,2) — ties broken by id
+        let ids: Vec<TaskId> = m.rows().iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![1, 9, 3, 5]);
+        for j in 0..m.columns() {
+            let batch = m.column_batch(j);
+            assert_eq!(batch, &m.rows()[..batch.len()]);
+            // monotone: batch sizes never grow as j increases
+            if j > 0 {
+                assert!(m.batch_len(j) <= m.batch_len(j - 1));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_quota_rejected() {
+        let _ = DecodeMask::build(vec![(0, 0)]);
+    }
+
+    #[test]
+    fn empty_mask() {
+        let m = DecodeMask::build(vec![]);
+        assert!(m.is_empty());
+        assert_eq!(m.columns(), 0);
+        assert_eq!(m.batch_len(0), 0);
+        assert_eq!(m.period_exact(&model()), 0);
+    }
+}

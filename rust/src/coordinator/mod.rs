@@ -1,0 +1,30 @@
+//! L3 coordinator: the paper's contribution.
+//!
+//! * [`task`] — SLO model and task lifecycle.
+//! * [`pool`] — task ownership.
+//! * [`selection`] — utility-maximizing task selection (Alg. 2).
+//! * [`mask`] — decode-mask matrix rate allocation (Alg. 3, Fig. 4).
+//! * [`slice`] — the online SLICE policy (Alg. 1/4).
+//! * [`preemption`] — utility adaptation / preemption controller (§IV-E).
+//! * [`orca`], [`fastserve`] — the paper's baselines.
+//! * [`scheduler`] — the policy interface all three implement.
+
+pub mod fastserve;
+pub mod mask;
+pub mod orca;
+pub mod pool;
+pub mod preemption;
+pub mod scheduler;
+pub mod selection;
+pub mod slice;
+pub mod task;
+
+pub use fastserve::{FastServeConfig, FastServePolicy};
+pub use mask::{period_eq7, DecodeMask};
+pub use orca::OrcaPolicy;
+pub use pool::TaskPool;
+pub use preemption::UtilityAdaptor;
+pub use scheduler::{Policy, Step};
+pub use selection::{select_tasks, Candidate, Selection, CYCLE_CAP};
+pub use slice::{SliceConfig, SlicePolicy};
+pub use task::{SloSpec, Task, TaskClass, TaskId, TaskState};

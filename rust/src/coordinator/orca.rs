@@ -1,0 +1,166 @@
+//! Orca baseline: iteration-level continuous batching with FCFS admission
+//! (Yu et al., OSDI'22 — the paper's primary baseline, and the default
+//! scheduling strategy of FastLLM/FasterTransformer/vLLM).
+//!
+//! Behaviour reproduced (paper §VI-A "Baselines" and §VI-C analysis):
+//! every arriving task is admitted into the running batch as soon as a
+//! slot is free (FCFS, iteration boundaries); every decode iteration runs
+//! the **entire** running batch through one forward pass, so all tasks
+//! receive the same decoding rate; finished tasks exit and waiting tasks
+//! join between iterations.
+
+use std::collections::VecDeque;
+
+use crate::util::Micros;
+
+use super::pool::TaskPool;
+use super::scheduler::{Policy, Step};
+use super::task::{TaskId, TaskState};
+
+/// Orca-style continuous batching policy.
+pub struct OrcaPolicy {
+    /// Maximum concurrent tasks in the running batch (the "predefined
+    /// maximum batch processing capacity" of §VI-C).
+    max_batch: u32,
+    /// FCFS arrival queue.
+    waiting: VecDeque<TaskId>,
+    /// Admitted tasks, in admission order.
+    running: Vec<TaskId>,
+}
+
+impl OrcaPolicy {
+    pub fn new(max_batch: u32) -> Self {
+        OrcaPolicy { max_batch, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+}
+
+impl Policy for OrcaPolicy {
+    fn name(&self) -> &'static str {
+        "Orca"
+    }
+
+    fn on_arrival(&mut self, _pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        self.waiting.extend(ids.iter().copied());
+    }
+
+    fn on_completion(&mut self, _pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        self.running.retain(|id| !ids.contains(id));
+    }
+
+    fn next_step(&mut self, pool: &mut TaskPool, _now: Micros) -> Step {
+        // FCFS admission at the iteration boundary.
+        while (self.running.len() as u32) < self.max_batch {
+            let Some(id) = self.waiting.pop_front() else { break };
+            if pool.get(id).is_finished() {
+                continue;
+            }
+            pool.get_mut(id).state = TaskState::Admitted;
+            self.running.push(id);
+        }
+
+        // Prefill any admitted-but-unprefilled task first (FCFS order).
+        for &id in &self.running {
+            if pool.get(id).state == TaskState::Admitted {
+                return Step::Prefill { task: id };
+            }
+        }
+
+        // One iteration over the whole running batch.
+        let batch: Vec<TaskId> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| pool.get(id).state == TaskState::Running)
+            .collect();
+        if batch.is_empty() {
+            Step::Idle
+        } else {
+            Step::Decode { tasks: batch }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+
+    fn pool_with(n: u64) -> TaskPool {
+        let mut p = TaskPool::new();
+        for i in 0..n {
+            p.insert(Task::new(i, TaskClass::Voice, 0, 16, 10, 1.0));
+        }
+        p
+    }
+
+    fn mark_prefilled(pool: &mut TaskPool, id: TaskId, now: Micros) {
+        let t = pool.get_mut(id);
+        t.state = TaskState::Running;
+        t.prefill_end = Some(now);
+        t.on_token(now);
+    }
+
+    #[test]
+    fn fcfs_admission_then_whole_batch_decode() {
+        let mut pool = pool_with(3);
+        let mut p = OrcaPolicy::new(32);
+        p.on_arrival(&mut pool, &[0, 1, 2], 0);
+
+        for expected in 0..3u64 {
+            match p.next_step(&mut pool, 0) {
+                Step::Prefill { task } => {
+                    assert_eq!(task, expected, "prefill in FCFS order");
+                    mark_prefilled(&mut pool, task, 1);
+                }
+                s => panic!("expected prefill, got {s:?}"),
+            }
+        }
+        match p.next_step(&mut pool, 10) {
+            Step::Decode { tasks } => assert_eq!(tasks, vec![0, 1, 2]),
+            s => panic!("expected full-batch decode, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut pool = pool_with(5);
+        let mut p = OrcaPolicy::new(2);
+        p.on_arrival(&mut pool, &[0, 1, 2, 3, 4], 0);
+        let _ = p.next_step(&mut pool, 0);
+        assert_eq!(p.running_len(), 2);
+        // completing one admits the next FCFS task
+        pool.get_mut(0).finish(5);
+        p.on_completion(&mut pool, &[0], 5);
+        let _ = p.next_step(&mut pool, 6);
+        assert_eq!(p.running_len(), 2);
+        assert!(pool.get(2).state != TaskState::Waiting);
+    }
+
+    #[test]
+    fn finished_tasks_leave_the_batch() {
+        let mut pool = pool_with(2);
+        let mut p = OrcaPolicy::new(32);
+        p.on_arrival(&mut pool, &[0, 1], 0);
+        let _ = p.next_step(&mut pool, 0);
+        mark_prefilled(&mut pool, 0, 1);
+        let _ = p.next_step(&mut pool, 1);
+        mark_prefilled(&mut pool, 1, 2);
+        pool.get_mut(0).finish(10);
+        p.on_completion(&mut pool, &[0], 10);
+        match p.next_step(&mut pool, 11) {
+            Step::Decode { tasks } => assert_eq!(tasks, vec![1]),
+            s => panic!("expected decode, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut pool = TaskPool::new();
+        let mut p = OrcaPolicy::new(32);
+        assert_eq!(p.next_step(&mut pool, 0), Step::Idle);
+    }
+}

@@ -1,0 +1,111 @@
+//! Task pool: owns every task known to the serving system.
+//!
+//! Tasks are issued dense ids by the workload generator, so the pool is a
+//! flat Vec indexed by id — O(1) lookup on the decode hot path with no
+//! hashing.
+
+use super::task::{Task, TaskId, TaskState};
+
+/// All tasks the server has accepted, indexed by task id.
+#[derive(Debug, Default)]
+pub struct TaskPool {
+    tasks: Vec<Task>,
+}
+
+impl TaskPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a task; its id must equal its index (dense ids).
+    pub fn insert(&mut self, task: Task) {
+        assert_eq!(
+            task.id as usize,
+            self.tasks.len(),
+            "task ids must be dense and inserted in order"
+        );
+        self.tasks.push(task);
+    }
+
+    pub fn get(&self, id: TaskId) -> &Task {
+        &self.tasks[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: TaskId) -> &mut Task {
+        &mut self.tasks[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Task> {
+        self.tasks.iter()
+    }
+
+    /// Ids of tasks in a given state.
+    pub fn ids_in_state(&self, state: TaskState) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .filter(|t| t.state == state)
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Every task that still needs service (not finished).
+    pub fn unfinished(&self) -> Vec<TaskId> {
+        self.tasks
+            .iter()
+            .filter(|t| !t.is_finished())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Consume the pool, returning all tasks (end-of-run metrics).
+    pub fn into_tasks(self) -> Vec<Task> {
+        self.tasks
+    }
+
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::TaskClass;
+
+    #[test]
+    fn dense_ids_enforced() {
+        let mut p = TaskPool::new();
+        p.insert(Task::new(0, TaskClass::Voice, 0, 8, 4, 1.0));
+        p.insert(Task::new(1, TaskClass::RealTime, 0, 8, 4, 100.0));
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.get(1).class, TaskClass::RealTime);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_dense_id_panics() {
+        let mut p = TaskPool::new();
+        p.insert(Task::new(5, TaskClass::Voice, 0, 8, 4, 1.0));
+    }
+
+    #[test]
+    fn state_queries() {
+        let mut p = TaskPool::new();
+        p.insert(Task::new(0, TaskClass::Voice, 0, 8, 4, 1.0));
+        p.insert(Task::new(1, TaskClass::Voice, 0, 8, 4, 1.0));
+        p.get_mut(0).state = TaskState::Running;
+        assert_eq!(p.ids_in_state(TaskState::Running), vec![0]);
+        assert_eq!(p.ids_in_state(TaskState::Waiting), vec![1]);
+        assert_eq!(p.unfinished(), vec![0, 1]);
+        p.get_mut(0).finish(100);
+        assert_eq!(p.unfinished(), vec![1]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Preemption controller: dynamic utility adaptation (paper §IV-E).
+//!
+//! After every scheduling round the online SLICE algorithm may adjust the
+//! utility of in-flight tasks (Alg. 4, line 17, `UTILITYADAPTOR`) to
+//! customize preemption behaviour:
+//!   * decaying the utility of tasks that have already generated many
+//!     tokens mimics Shortest-Job-First and avoids head-of-line blocking;
+//!   * boosting currently-running tasks makes scheduling sticky and
+//!     prevents mid-stream preemption.
+
+use super::task::{Task, TaskState};
+
+/// Pluggable utility-adaptation strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UtilityAdaptor {
+    /// Use base utilities unchanged.
+    None,
+    /// SJF-mimicking decay: U' = U * factor^(tokens_generated / tau).
+    /// factor in (0,1); tau is the token scale of the decay.
+    SjfDecay { factor: f64, tau: u32 },
+    /// Anti-preemption: running/paused tasks get U' = U * multiplier.
+    StickyBoost { multiplier: f64 },
+}
+
+impl UtilityAdaptor {
+    /// The adapted utility for `task` given its current progress/state.
+    pub fn effective(&self, task: &Task) -> f64 {
+        match *self {
+            UtilityAdaptor::None => task.utility,
+            UtilityAdaptor::SjfDecay { factor, tau } => {
+                let exp = task.tokens_generated as f64 / tau.max(1) as f64;
+                task.utility * factor.powf(exp)
+            }
+            UtilityAdaptor::StickyBoost { multiplier } => {
+                if matches!(task.state, TaskState::Running | TaskState::Paused) {
+                    task.utility * multiplier
+                } else {
+                    task.utility
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+
+    fn task_with_tokens(tokens: u32) -> Task {
+        let mut t = Task::new(0, TaskClass::Voice, 0, 8, 100, 10.0);
+        t.tokens_generated = tokens;
+        t
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let t = task_with_tokens(50);
+        assert_eq!(UtilityAdaptor::None.effective(&t), 10.0);
+    }
+
+    #[test]
+    fn sjf_decay_monotone_in_tokens() {
+        let a = UtilityAdaptor::SjfDecay { factor: 0.5, tau: 16 };
+        let fresh = task_with_tokens(0);
+        let old = task_with_tokens(32);
+        assert_eq!(a.effective(&fresh), 10.0);
+        assert!((a.effective(&old) - 2.5).abs() < 1e-12); // 10 * 0.5^2
+        assert!(a.effective(&old) < a.effective(&fresh));
+    }
+
+    #[test]
+    fn sticky_boost_only_for_in_service_tasks() {
+        let a = UtilityAdaptor::StickyBoost { multiplier: 3.0 };
+        let waiting = task_with_tokens(0);
+        assert_eq!(a.effective(&waiting), 10.0);
+        let mut running = task_with_tokens(0);
+        running.state = TaskState::Running;
+        assert_eq!(a.effective(&running), 30.0);
+        let mut paused = task_with_tokens(0);
+        paused.state = TaskState::Paused;
+        assert_eq!(a.effective(&paused), 30.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! The scheduling-policy interface shared by SLICE and the baselines.
+//!
+//! The serving loop (`server::Server`) is policy-agnostic: it delivers
+//! arrival/completion events and repeatedly asks the policy for the next
+//! engine step. All three strategies (SLICE, Orca, FastServe) implement
+//! [`Policy`], so every experiment compares them under an identical
+//! engine, workload and measurement pipeline — the comparison the paper
+//! makes on top of FastLLM.
+
+use crate::util::Micros;
+
+use super::pool::TaskPool;
+use super::task::TaskId;
+
+/// One unit of work the policy asks the engine to perform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Step {
+    /// Run the prompt phase for one task (produces its first token).
+    Prefill { task: TaskId },
+    /// Run one decode iteration for a batch (one token per listed task).
+    Decode { tasks: Vec<TaskId> },
+    /// Nothing runnable; the server advances time to the next arrival.
+    Idle,
+}
+
+impl Step {
+    pub fn batch_size(&self) -> usize {
+        match self {
+            Step::Prefill { .. } => 1,
+            Step::Decode { tasks } => tasks.len(),
+            Step::Idle => 0,
+        }
+    }
+}
+
+/// A scheduling policy: SLICE or one of the baselines.
+pub trait Policy {
+    /// Display name used in reports ("SLICE", "Orca", "FastServe").
+    fn name(&self) -> &'static str;
+
+    /// New tasks entered the pool (state Waiting).
+    fn on_arrival(&mut self, pool: &mut TaskPool, ids: &[TaskId], now: Micros);
+
+    /// Tasks finished during the last step and were removed from service.
+    fn on_completion(&mut self, pool: &mut TaskPool, ids: &[TaskId], now: Micros);
+
+    /// Decide the next step. Must not return `Decode` with an empty list.
+    fn next_step(&mut self, pool: &mut TaskPool, now: Micros) -> Step;
+}

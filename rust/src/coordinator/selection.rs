@@ -1,0 +1,242 @@
+//! Utility-maximizing task selection (paper §IV-C, Algorithm 2).
+//!
+//! Each candidate task is scored with a *utility rate* r_i = U_i * T_TPOT
+//! (Eq. 6): the utility earned per token-per-second of capacity it
+//! consumes. Tasks are admitted greedily in descending r_i order; after
+//! each admission the scheduling-cycle duration is re-estimated with
+//! Eq. (7) over the admitted quotas, and the first admission that pushes
+//! the cycle past the cap (1000 ms — one cycle must deliver every task's
+//! per-second quota) is rolled back, terminating selection.
+
+use crate::engine::latency::LatencyModel;
+use crate::util::Micros;
+
+use super::mask::period_eq7;
+use super::task::TaskId;
+
+/// A candidate for selection.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub id: TaskId,
+    /// Base or adapted utility U_i.
+    pub utility: f64,
+    /// TPOT requirement in micros.
+    pub tpot: Micros,
+}
+
+impl Candidate {
+    /// Utility rate r_i = U_i * T_TPOT (Eq. 6). T_TPOT in seconds so the
+    /// scale matches the paper's formulation.
+    pub fn utility_rate(&self) -> f64 {
+        self.utility * (self.tpot as f64 / 1e6)
+    }
+
+    /// Per-cycle token quota v_i = ceil(1s / T_TPOT).
+    pub fn quota(&self) -> u32 {
+        (1e6 / self.tpot as f64).ceil() as u32
+    }
+}
+
+/// Result of one selection round.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Admitted (task, per-cycle quota), in admission order.
+    pub selected: Vec<(TaskId, u32)>,
+    /// Estimated cycle duration for the admitted set (Eq. 7).
+    pub period: Micros,
+    /// Candidates that were considered but not admitted.
+    pub rejected: Vec<TaskId>,
+}
+
+/// The scheduling-cycle duration cap: every scheduled task receives its
+/// full per-second quota within one cycle, so a cycle longer than 1000 ms
+/// cannot honor any admitted task's TPOT SLO (paper §IV-C).
+pub const CYCLE_CAP: Micros = 1_000_000;
+
+/// Algorithm 2: greedy utility-rate admission with Eq. (7) feasibility.
+///
+/// `max_batch` additionally caps concurrent tasks (device memory limit;
+/// the paper's formulation leaves this implicit in l(b)'s domain).
+pub fn select_tasks(
+    candidates: &[Candidate],
+    latency: &LatencyModel,
+    cycle_cap: Micros,
+) -> Selection {
+    let mut order: Vec<&Candidate> = candidates.iter().collect();
+    // descending utility rate; deterministic tie-break by id
+    order.sort_by(|a, b| {
+        b.utility_rate()
+            .partial_cmp(&a.utility_rate())
+            .unwrap()
+            .then(a.id.cmp(&b.id))
+    });
+
+    let mut selected: Vec<(TaskId, u32)> = Vec::new();
+    let mut quotas_desc: Vec<u32> = Vec::new(); // maintained sorted desc
+    let mut period: Micros = 0;
+    let mut rejected: Vec<TaskId> = Vec::new();
+    let mut stopped = false;
+
+    for cand in order {
+        if stopped || selected.len() as u32 >= latency.max_batch {
+            rejected.push(cand.id);
+            continue;
+        }
+        let q = cand.quota();
+        // insert into the descending quota list
+        let pos = quotas_desc.partition_point(|&v| v >= q);
+        quotas_desc.insert(pos, q);
+        let p = period_eq7(&quotas_desc, latency);
+        if p >= cycle_cap {
+            // roll back and terminate (non-replacement iteration, Alg. 2
+            // line 13-17)
+            quotas_desc.remove(pos);
+            rejected.push(cand.id);
+            stopped = true;
+            continue;
+        }
+        period = p;
+        selected.push((cand.id, q));
+    }
+
+    Selection { selected, period, rejected }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ms;
+
+    fn model() -> LatencyModel {
+        LatencyModel::paper_calibrated()
+    }
+
+    fn cand(id: TaskId, utility: f64, tpot_ms: f64) -> Candidate {
+        Candidate { id, utility, tpot: ms(tpot_ms) }
+    }
+
+    #[test]
+    fn utility_rate_eq6() {
+        let c = cand(0, 100.0, 50.0);
+        assert!((c.utility_rate() - 5.0).abs() < 1e-12);
+        let c2 = cand(1, 1.0, 125.0);
+        assert!((c2.utility_rate() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quota_is_ceil_of_rate() {
+        assert_eq!(cand(0, 1.0, 100.0).quota(), 10);
+        assert_eq!(cand(0, 1.0, 120.0).quota(), 9); // 8.33 -> 9
+        assert_eq!(cand(0, 1.0, 250.0).quota(), 4);
+        assert_eq!(cand(0, 1.0, 50.0).quota(), 20);
+    }
+
+    #[test]
+    fn admits_all_when_feasible_table2() {
+        // the paper's Table II static mix: 3xA(100ms), 4xB(120ms), 2xC(250ms)
+        let mut cands = Vec::new();
+        for i in 0..3 {
+            cands.push(cand(i, 1.0, 100.0));
+        }
+        for i in 3..7 {
+            cands.push(cand(i, 1.0, 120.0));
+        }
+        for i in 7..9 {
+            cands.push(cand(i, 1.0, 250.0));
+        }
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        assert_eq!(sel.selected.len(), 9, "all 9 tasks admissible (Table II)");
+        assert!(sel.period < CYCLE_CAP);
+        assert!(sel.rejected.is_empty());
+    }
+
+    #[test]
+    fn admission_stops_at_cycle_cap() {
+        // many high-rate tasks cannot all fit in one cycle
+        let cands: Vec<Candidate> =
+            (0..30).map(|i| cand(i, 1.0, 50.0)).collect(); // 20 t/s each
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        assert!(!sel.selected.is_empty());
+        assert!(sel.selected.len() < 30);
+        assert!(sel.period < CYCLE_CAP);
+        // the admitted set plus any rejected task must overflow the cap
+        let mut quotas: Vec<u32> =
+            sel.selected.iter().map(|&(_, q)| q).collect();
+        quotas.push(20);
+        quotas.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(period_eq7(&quotas, &model()) >= CYCLE_CAP);
+    }
+
+    #[test]
+    fn higher_utility_rate_wins() {
+        // one real-time task (U=100) among many cheap tasks: RT admitted first
+        let mut cands: Vec<Candidate> =
+            (0..30).map(|i| cand(i, 1.0, 50.0)).collect();
+        cands.push(cand(99, 100.0, 50.0));
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        assert_eq!(sel.selected[0].0, 99, "highest utility rate admitted first");
+    }
+
+    #[test]
+    fn low_rate_tasks_pack_deeper() {
+        // 4 t/s tasks: quota 4 each; many fit in one cycle
+        let cands: Vec<Candidate> =
+            (0..20).map(|i| cand(i, 1.0, 250.0)).collect();
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        // 4 tokens/cycle => even at plateau l(16)=134ms, 4 columns of 16
+        // tasks ≈ 536ms — well under the cap
+        assert!(sel.selected.len() >= 16, "got {}", sel.selected.len());
+    }
+
+    #[test]
+    fn respects_max_batch_cap() {
+        let mut l = model();
+        l.max_batch = 4;
+        let cands: Vec<Candidate> =
+            (0..10).map(|i| cand(i, 1.0, 250.0)).collect();
+        let sel = select_tasks(&cands, &l, CYCLE_CAP);
+        assert_eq!(sel.selected.len(), 4);
+        assert_eq!(sel.rejected.len(), 6);
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let sel = select_tasks(&[], &model(), CYCLE_CAP);
+        assert!(sel.selected.is_empty());
+        assert_eq!(sel.period, 0);
+    }
+
+    #[test]
+    fn single_task_always_admitted() {
+        // even the most demanding single task fits: quota*l(1) < 1000ms
+        // for 20 t/s: 20 * 18ms = 360ms
+        let sel = select_tasks(&[cand(0, 1.0, 50.0)], &model(), CYCLE_CAP);
+        assert_eq!(sel.selected.len(), 1);
+        assert_eq!(sel.period, 20 * model().decode(1));
+    }
+
+    #[test]
+    fn rejected_plus_selected_covers_all() {
+        let cands: Vec<Candidate> =
+            (0..25).map(|i| cand(i, 1.0 + (i % 3) as f64, 50.0 + 10.0 * (i % 5) as f64)).collect();
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let mut all: Vec<TaskId> = sel
+            .selected
+            .iter()
+            .map(|&(id, _)| id)
+            .chain(sel.rejected.iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let cands: Vec<Candidate> =
+            (0..25).map(|i| cand(i, 1.0, 100.0)).collect();
+        let a = select_tasks(&cands, &model(), CYCLE_CAP);
+        let b = select_tasks(&cands, &model(), CYCLE_CAP);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.rejected, b.rejected);
+    }
+}

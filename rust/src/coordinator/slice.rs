@@ -1,0 +1,348 @@
+//! The SLICE scheduling policy (paper §IV, Algorithms 1-4).
+//!
+//! Online operation (Alg. 4): on every task arrival or departure the
+//! decode loop is interrupted and the offline algorithm re-runs —
+//! utility-rate task selection (Alg. 2, `selection.rs`) followed by
+//! decode-mask-matrix rate allocation (Alg. 3, `mask.rs`). Between
+//! events the policy walks the mask matrix column by column, emitting one
+//! dynamically-regrouped decode batch per column; a full sweep is one
+//! scheduling cycle delivering every admitted task its per-second token
+//! quota.
+
+use std::collections::VecDeque;
+
+use crate::engine::latency::LatencyModel;
+use crate::util::Micros;
+
+use super::mask::DecodeMask;
+use super::pool::TaskPool;
+use super::preemption::UtilityAdaptor;
+use super::scheduler::{Policy, Step};
+use super::selection::{select_tasks, Candidate, Selection, CYCLE_CAP};
+use super::task::{TaskId, TaskState};
+
+/// SLICE scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SliceConfig {
+    /// Scheduling-cycle duration cap (paper: 1000 ms).
+    pub cycle_cap: Micros,
+    /// Utility adaptation applied at every reschedule (Alg. 4 line 17).
+    pub adaptor: UtilityAdaptor,
+    /// Extension (not in the paper; ablated in `experiments::ablation`):
+    /// subtract the prefill cost of newly admitted tasks from the cycle
+    /// budget during selection. Alg. 2 estimates the cycle from decode
+    /// steps only, so a burst of admissions can overrun the 1000 ms cap
+    /// by the length of the prefill queue; this accounts for it.
+    pub prefill_aware: bool,
+}
+
+impl Default for SliceConfig {
+    fn default() -> Self {
+        SliceConfig {
+            cycle_cap: CYCLE_CAP,
+            adaptor: UtilityAdaptor::None,
+            prefill_aware: false,
+        }
+    }
+}
+
+/// The online SLICE policy.
+pub struct SlicePolicy {
+    latency: LatencyModel,
+    cfg: SliceConfig,
+    /// Current rate-allocation matrix over the admitted set.
+    mask: Option<DecodeMask>,
+    /// Next column to scan.
+    col: u32,
+    /// Admitted tasks whose prompt has not been prefilled yet.
+    to_prefill: VecDeque<TaskId>,
+    /// Set when an arrival/departure event requires re-running the
+    /// offline algorithm (the paper's interruption event queue).
+    needs_reschedule: bool,
+    /// Reschedule counter (observability / tests).
+    pub reschedules: u64,
+}
+
+impl SlicePolicy {
+    pub fn new(latency: LatencyModel, cfg: SliceConfig) -> Self {
+        SlicePolicy {
+            latency,
+            cfg,
+            mask: None,
+            col: 0,
+            to_prefill: VecDeque::new(),
+            needs_reschedule: false,
+            reschedules: 0,
+        }
+    }
+
+    pub fn with_defaults(latency: LatencyModel) -> Self {
+        Self::new(latency, SliceConfig::default())
+    }
+
+    /// Re-run the offline SLICE algorithm (task selection + rate
+    /// allocation) over every unfinished task.
+    fn reschedule(&mut self, pool: &mut TaskPool, _now: Micros) {
+        self.reschedules += 1;
+
+        // Alg. 4 line 17: adapt utilities before selection.
+        let candidates: Vec<Candidate> = pool
+            .iter()
+            .filter(|t| !t.is_finished())
+            .map(|t| Candidate {
+                id: t.id,
+                utility: self.cfg.adaptor.effective(t),
+                tpot: t.slo.tpot,
+            })
+            .collect();
+
+        // Extension: charge pending prefill work against the cycle budget
+        // so a burst of admissions cannot overrun the cap (see SliceConfig).
+        let cycle_cap = if self.cfg.prefill_aware {
+            let prefill_debt: Micros = pool
+                .iter()
+                .filter(|t| !t.is_finished() && t.prefill_end.is_none())
+                .map(|t| self.latency.prefill(t.prompt_len))
+                .sum();
+            self.cfg.cycle_cap.saturating_sub(prefill_debt.min(self.cfg.cycle_cap / 2))
+        } else {
+            self.cfg.cycle_cap
+        };
+        let Selection { selected, rejected, .. } =
+            select_tasks(&candidates, &self.latency, cycle_cap);
+
+        // Update task states and the prefill queue.
+        self.to_prefill.retain(|_| false);
+        for &(id, _) in &selected {
+            let t = pool.get_mut(id);
+            match t.state {
+                TaskState::Waiting | TaskState::Admitted => {
+                    t.state = TaskState::Admitted;
+                    self.to_prefill.push_back(id);
+                }
+                TaskState::Paused => t.state = TaskState::Running,
+                TaskState::Running => {}
+                TaskState::Finished => unreachable!("finished task selected"),
+            }
+        }
+        for &id in &rejected {
+            let t = pool.get_mut(id);
+            if matches!(t.state, TaskState::Running | TaskState::Admitted) {
+                // deselected mid-flight: pause (KV retained; decode stops)
+                t.state = if t.prefill_end.is_some() {
+                    TaskState::Paused
+                } else {
+                    TaskState::Waiting
+                };
+            }
+        }
+
+        self.mask = if selected.is_empty() {
+            None
+        } else {
+            Some(DecodeMask::build(selected))
+        };
+        self.col = 0;
+        self.needs_reschedule = false;
+    }
+
+    /// Currently admitted tasks, in mask order (tests / observability).
+    pub fn admitted(&self) -> Vec<TaskId> {
+        self.mask
+            .as_ref()
+            .map(|m| m.rows().iter().map(|&(id, _)| id).collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Policy for SlicePolicy {
+    fn name(&self) -> &'static str {
+        "SLICE"
+    }
+
+    fn on_arrival(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
+        // interruption event: re-run the offline algorithm (Alg. 4)
+        self.needs_reschedule = true;
+    }
+
+    fn on_completion(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
+        self.needs_reschedule = true;
+    }
+
+    fn next_step(&mut self, pool: &mut TaskPool, now: Micros) -> Step {
+        if self.needs_reschedule {
+            self.reschedule(pool, now);
+        }
+
+        // Prefill newly admitted tasks before resuming the column scan.
+        while let Some(id) = self.to_prefill.pop_front() {
+            if !pool.get(id).is_finished() {
+                return Step::Prefill { task: id };
+            }
+        }
+
+        let Some(mask) = &self.mask else { return Step::Idle };
+        if mask.is_empty() {
+            return Step::Idle;
+        }
+
+        // Column scan: skip columns whose batch is entirely finished
+        // (can happen between a completion event and the reschedule).
+        let columns = mask.columns();
+        for _ in 0..columns {
+            let j = self.col;
+            self.col = (self.col + 1) % columns;
+            let batch: Vec<TaskId> = mask
+                .column_batch(j)
+                .iter()
+                .map(|&(id, _)| id)
+                .filter(|&id| pool.get(id).state == TaskState::Running)
+                .collect();
+            if !batch.is_empty() {
+                return Step::Decode { tasks: batch };
+            }
+        }
+        Step::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+
+    fn pool_with(tasks: Vec<Task>) -> TaskPool {
+        let mut p = TaskPool::new();
+        for t in tasks {
+            p.insert(t);
+        }
+        p
+    }
+
+    fn mark_prefilled(pool: &mut TaskPool, id: TaskId, now: Micros) {
+        let t = pool.get_mut(id);
+        t.state = TaskState::Running;
+        t.prefill_end = Some(now);
+        t.on_token(now);
+    }
+
+    #[test]
+    fn arrival_triggers_reschedule_and_prefill() {
+        let mut pool = pool_with(vec![
+            Task::new(0, TaskClass::RealTime, 0, 16, 10, 100.0),
+            Task::new(1, TaskClass::Voice, 0, 16, 10, 1.0),
+        ]);
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &[0, 1], 0);
+
+        // first steps must be prefills, real-time task first (higher r_i)
+        let s1 = p.next_step(&mut pool, 0);
+        assert_eq!(s1, Step::Prefill { task: 0 });
+        mark_prefilled(&mut pool, 0, 30_000);
+        let s2 = p.next_step(&mut pool, 30_000);
+        assert_eq!(s2, Step::Prefill { task: 1 });
+        mark_prefilled(&mut pool, 1, 60_000);
+
+        // then decode columns; both tasks running
+        let s3 = p.next_step(&mut pool, 60_000);
+        match s3 {
+            Step::Decode { tasks } => {
+                assert!(tasks.contains(&0));
+            }
+            s => panic!("expected decode, got {s:?}"),
+        }
+        assert_eq!(p.reschedules, 1);
+    }
+
+    #[test]
+    fn mask_columns_shrink_batches_for_low_rate_tasks() {
+        // RT task (20 t/s quota) + voice task (8 t/s quota): voice appears
+        // in only 8 of 20 columns.
+        let mut pool = pool_with(vec![
+            Task::new(0, TaskClass::RealTime, 0, 16, 100, 100.0),
+            Task::new(1, TaskClass::Voice, 0, 16, 100, 1.0),
+        ]);
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &[0, 1], 0);
+        let _ = p.next_step(&mut pool, 0);
+        mark_prefilled(&mut pool, 0, 1);
+        let _ = p.next_step(&mut pool, 1);
+        mark_prefilled(&mut pool, 1, 2);
+
+        let mut batch_sizes = Vec::new();
+        for _ in 0..20 {
+            match p.next_step(&mut pool, 10) {
+                Step::Decode { tasks } => batch_sizes.push(tasks.len()),
+                s => panic!("expected decode, got {s:?}"),
+            }
+        }
+        let twos = batch_sizes.iter().filter(|&&n| n == 2).count();
+        let ones = batch_sizes.iter().filter(|&&n| n == 1).count();
+        assert_eq!(twos, 8, "voice quota columns");
+        assert_eq!(ones, 12, "RT-only columns");
+    }
+
+    #[test]
+    fn completion_triggers_reschedule() {
+        let mut pool = pool_with(vec![Task::new(0, TaskClass::Voice, 0, 16, 1, 1.0)]);
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &[0], 0);
+        let _ = p.next_step(&mut pool, 0);
+        mark_prefilled(&mut pool, 0, 1); // output_len 1 -> finished
+        assert!(pool.get(0).is_finished());
+        p.on_completion(&mut pool, &[0], 1);
+        assert_eq!(p.next_step(&mut pool, 2), Step::Idle);
+        assert_eq!(p.reschedules, 2);
+    }
+
+    #[test]
+    fn overload_pauses_low_utility_tasks() {
+        // 40 RT tasks cannot all be admitted; the rest must stay waiting.
+        let tasks: Vec<Task> = (0..40)
+            .map(|i| Task::new(i, TaskClass::RealTime, 0, 16, 50, 100.0))
+            .collect();
+        let mut pool = pool_with(tasks);
+        let ids: Vec<TaskId> = (0..40).collect();
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &ids, 0);
+        let _ = p.next_step(&mut pool, 0);
+        let admitted = p.admitted().len();
+        assert!(admitted > 0 && admitted < 40, "admitted={admitted}");
+        let waiting = pool.ids_in_state(TaskState::Waiting).len();
+        assert_eq!(waiting, 40 - admitted);
+    }
+
+    #[test]
+    fn sjf_adaptor_prefers_fresh_tasks_on_reschedule() {
+        // Two identical voice tasks; one has generated many tokens. With
+        // SjfDecay and capacity for only one (tiny max_batch), the fresh
+        // task wins the slot.
+        let mut lat = LatencyModel::paper_calibrated();
+        lat.max_batch = 1;
+        let mut t0 = Task::new(0, TaskClass::Voice, 0, 16, 100, 10.0);
+        t0.tokens_generated = 64;
+        t0.state = TaskState::Running;
+        t0.prefill_end = Some(1);
+        let t1 = Task::new(1, TaskClass::Voice, 0, 16, 100, 10.0);
+        let mut pool = pool_with(vec![t0, t1]);
+        let mut p = SlicePolicy::new(
+            lat,
+            SliceConfig {
+                cycle_cap: CYCLE_CAP,
+                adaptor: UtilityAdaptor::SjfDecay { factor: 0.5, tau: 16 },
+                prefill_aware: false,
+            },
+        );
+        p.on_arrival(&mut pool, &[1], 0);
+        let step = p.next_step(&mut pool, 0);
+        assert_eq!(step, Step::Prefill { task: 1 });
+        assert_eq!(pool.get(0).state, TaskState::Paused, "long task preempted");
+    }
+
+    #[test]
+    fn idle_when_no_tasks() {
+        let mut pool = TaskPool::new();
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        assert_eq!(p.next_step(&mut pool, 0), Step::Idle);
+    }
+}

@@ -1,0 +1,360 @@
+//! Task model: SLO specifications, runtime state and lifecycle.
+//!
+//! A *task* is one inference request. The paper distinguishes:
+//!   * **real-time** tasks (machine control, navigation): a hard
+//!     end-to-end deadline, translated (§IV-A) into a TTFT budget plus a
+//!     TPOT requirement (20 tokens/s in the evaluation);
+//!   * **non-real-time** tasks (voice chat at 8 tokens/s, text Q&A at
+//!     10 tokens/s): a TTFT SLO and a TPOT SLO.
+
+use crate::util::{Micros, MICROS_PER_SEC};
+
+/// Unique task identifier.
+pub type TaskId = u64;
+
+/// The application class a task belongs to (drives default SLOs/utility).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskClass {
+    /// Machine control / navigation planning: hard deadline.
+    RealTime,
+    /// Voice chat: generation must keep up with speech (8 tokens/s).
+    Voice,
+    /// Text Q&A: generation must keep up with reading (10 tokens/s).
+    TextQa,
+}
+
+impl TaskClass {
+    pub fn is_real_time(&self) -> bool {
+        matches!(self, TaskClass::RealTime)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskClass::RealTime => "real-time",
+            TaskClass::Voice => "voice",
+            TaskClass::TextQa => "text-qa",
+        }
+    }
+}
+
+/// Service-level objectives for one task.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// Max time from arrival to the first output token.
+    pub ttft: Micros,
+    /// Max average time between output tokens.
+    pub tpot: Micros,
+    /// Hard end-to-end deadline (real-time tasks only).
+    pub deadline: Option<Micros>,
+}
+
+impl SloSpec {
+    /// Paper defaults: real-time = 20 tokens/s rate + 1.5 s deadline.
+    pub fn real_time() -> Self {
+        SloSpec {
+            ttft: 500_000,
+            tpot: 50_000, // 20 tokens/s
+            deadline: Some(1_500_000),
+        }
+    }
+
+    /// Paper defaults: voice chat = 8 tokens/s.
+    pub fn voice() -> Self {
+        SloSpec { ttft: 1_000_000, tpot: 125_000, deadline: None }
+    }
+
+    /// Paper defaults: text Q&A = 10 tokens/s.
+    pub fn text_qa() -> Self {
+        SloSpec { ttft: 1_000_000, tpot: 100_000, deadline: None }
+    }
+
+    pub fn for_class(class: TaskClass) -> Self {
+        match class {
+            TaskClass::RealTime => Self::real_time(),
+            TaskClass::Voice => Self::voice(),
+            TaskClass::TextQa => Self::text_qa(),
+        }
+    }
+
+    /// Required token generation rate v_i = 1 / T_TPOT, in tokens/s.
+    pub fn required_rate(&self) -> f64 {
+        MICROS_PER_SEC as f64 / self.tpot as f64
+    }
+
+    /// Tokens per scheduling cycle: v_i rounded **up** so the allocated
+    /// rate is never below the SLO (Alg. 3 uses ceil for the matrix
+    /// width; we use ceil for every row — see DESIGN.md deviations).
+    pub fn tokens_per_cycle(&self) -> u32 {
+        self.required_rate().ceil() as u32
+    }
+}
+
+/// Lifecycle state of a task inside the serving system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// In the request buffer, not yet admitted by the scheduler.
+    Waiting,
+    /// Admitted; prompt not yet prefilled.
+    Admitted,
+    /// Prefill done; participating in decode scheduling.
+    Running,
+    /// Temporarily descheduled (lost selection after a reschedule event).
+    Paused,
+    /// All tokens generated (or EOS sampled).
+    Finished,
+}
+
+/// One inference request plus its runtime bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub class: TaskClass,
+    pub slo: SloSpec,
+    /// Scheduling weight U_i; real-time tasks get 10-100x the utility of
+    /// non-real-time tasks (paper §I).
+    pub utility: f64,
+    /// Current (possibly adapted) utility — the preemption controller
+    /// mutates this one, keeping `utility` as the base value.
+    pub effective_utility: f64,
+
+    pub prompt_len: u32,
+    /// Target number of output tokens (simulator) / max tokens (real
+    /// engine; generation may stop earlier on EOS).
+    pub output_len: u32,
+    /// Prompt bytes for the real engine (empty in pure simulation).
+    pub prompt: Vec<u8>,
+
+    // -- runtime state ------------------------------------------------------
+    pub state: TaskState,
+    pub arrival: Micros,
+    pub prefill_end: Option<Micros>,
+    pub first_token: Option<Micros>,
+    pub last_token: Option<Micros>,
+    pub completion: Option<Micros>,
+    pub tokens_generated: u32,
+    /// Largest observed inter-token gap (stutter diagnostics).
+    pub max_token_gap: Micros,
+    /// Generated token values (real engine only).
+    pub generated: Vec<u8>,
+}
+
+impl Task {
+    pub fn new(id: TaskId, class: TaskClass, arrival: Micros, prompt_len: u32,
+               output_len: u32, utility: f64) -> Self {
+        Task {
+            id,
+            class,
+            slo: SloSpec::for_class(class),
+            utility,
+            effective_utility: utility,
+            prompt_len,
+            output_len,
+            prompt: Vec::new(),
+            state: TaskState::Waiting,
+            arrival,
+            prefill_end: None,
+            first_token: None,
+            last_token: None,
+            completion: None,
+            tokens_generated: 0,
+            max_token_gap: 0,
+            generated: Vec::new(),
+        }
+    }
+
+    /// Record one generated token at time `now`.
+    pub fn on_token(&mut self, now: Micros) {
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        } else if let Some(last) = self.last_token {
+            let gap = now.saturating_sub(last);
+            if gap > self.max_token_gap {
+                self.max_token_gap = gap;
+            }
+        }
+        self.last_token = Some(now);
+        self.tokens_generated += 1;
+        if self.tokens_generated >= self.output_len {
+            self.state = TaskState::Finished;
+            self.completion = Some(now);
+        }
+    }
+
+    /// Force completion (EOS from the real model before output_len).
+    pub fn finish(&mut self, now: Micros) {
+        self.state = TaskState::Finished;
+        self.completion = Some(now);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == TaskState::Finished
+    }
+
+    /// Measured time-to-first-token.
+    pub fn ttft(&self) -> Option<Micros> {
+        self.first_token.map(|t| t.saturating_sub(self.arrival))
+    }
+
+    /// Measured average time-per-output-token: (last - first) / (n - 1).
+    /// A single-token task trivially satisfies any TPOT.
+    pub fn avg_tpot(&self) -> Option<Micros> {
+        match (self.first_token, self.last_token) {
+            (Some(f), Some(l)) if self.tokens_generated >= 2 => {
+                Some((l - f) / (self.tokens_generated as u64 - 1))
+            }
+            (Some(_), Some(_)) => Some(0),
+            _ => None,
+        }
+    }
+
+    /// End-to-end completion latency.
+    pub fn completion_time(&self) -> Option<Micros> {
+        self.completion.map(|c| c.saturating_sub(self.arrival))
+    }
+
+    /// Paper §VI-A: real-time SLO = completion before deadline;
+    /// non-real-time SLO = TTFT SLO **and** TPOT SLO both met.
+    pub fn slo_met(&self) -> bool {
+        if !self.is_finished() {
+            return false;
+        }
+        if let Some(deadline) = self.slo.deadline {
+            return self.completion_time().map_or(false, |c| c <= deadline);
+        }
+        self.ttft_met() && self.tpot_met()
+    }
+
+    pub fn ttft_met(&self) -> bool {
+        self.ttft().map_or(false, |t| t <= self.slo.ttft)
+    }
+
+    pub fn tpot_met(&self) -> bool {
+        self.avg_tpot().map_or(false, |t| t <= self.slo.tpot)
+    }
+
+    /// Deadline attainment for real-time tasks (None for non-real-time).
+    pub fn deadline_met(&self) -> Option<bool> {
+        self.slo.deadline.map(|d| {
+            self.is_finished() && self.completion_time().map_or(false, |c| c <= d)
+        })
+    }
+
+    /// Tokens still to generate.
+    pub fn remaining_tokens(&self) -> u32 {
+        self.output_len.saturating_sub(self.tokens_generated)
+    }
+
+    /// Current total sequence length (prompt + generated so far).
+    pub fn seq_len(&self) -> u32 {
+        self.prompt_len + self.tokens_generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ms;
+
+    fn rt_task() -> Task {
+        Task::new(1, TaskClass::RealTime, 0, 16, 10, 100.0)
+    }
+
+    #[test]
+    fn slo_defaults_match_paper() {
+        assert_eq!(SloSpec::real_time().tpot, 50_000);
+        assert_eq!(SloSpec::real_time().deadline, Some(1_500_000));
+        assert_eq!(SloSpec::voice().required_rate(), 8.0);
+        assert_eq!(SloSpec::text_qa().required_rate(), 10.0);
+    }
+
+    #[test]
+    fn tokens_per_cycle_rounds_up() {
+        let s = SloSpec { ttft: 0, tpot: 120_000, deadline: None }; // 8.33 t/s
+        assert_eq!(s.tokens_per_cycle(), 9);
+        assert_eq!(SloSpec::voice().tokens_per_cycle(), 8);
+    }
+
+    #[test]
+    fn token_bookkeeping_and_completion() {
+        let mut t = rt_task();
+        for i in 0..10u64 {
+            t.on_token(ms(100.0) + i * ms(40.0));
+        }
+        assert!(t.is_finished());
+        assert_eq!(t.ttft(), Some(ms(100.0)));
+        assert_eq!(t.avg_tpot(), Some(ms(40.0)));
+        assert_eq!(t.completion_time(), Some(ms(100.0) + 9 * ms(40.0)));
+    }
+
+    #[test]
+    fn real_time_slo_is_deadline_only() {
+        let mut t = rt_task();
+        // generate all 10 tokens slowly but inside the deadline
+        for i in 0..10u64 {
+            t.on_token(ms(100.0) + i * ms(120.0));
+        }
+        // TPOT 120ms > 50ms SLO, but completion 1.18s < 1.5s deadline
+        assert!(!t.tpot_met());
+        assert!(t.slo_met());
+    }
+
+    #[test]
+    fn real_time_misses_deadline() {
+        let mut t = rt_task();
+        for i in 0..10u64 {
+            t.on_token(ms(200.0) + i * ms(160.0));
+        }
+        assert!(t.completion_time().unwrap() > 1_500_000);
+        assert!(!t.slo_met());
+        assert_eq!(t.deadline_met(), Some(false));
+    }
+
+    #[test]
+    fn non_real_time_needs_both_ttft_and_tpot() {
+        let mut t = Task::new(2, TaskClass::Voice, 0, 16, 5, 1.0);
+        for i in 0..5u64 {
+            t.on_token(ms(500.0) + i * ms(100.0)); // TTFT 0.5s OK, TPOT 100ms OK
+        }
+        assert!(t.slo_met());
+
+        let mut t2 = Task::new(3, TaskClass::Voice, 0, 16, 5, 1.0);
+        for i in 0..5u64 {
+            t2.on_token(ms(500.0) + i * ms(200.0)); // TPOT 200ms > 125ms
+        }
+        assert!(!t2.slo_met());
+
+        let mut t3 = Task::new(4, TaskClass::Voice, 0, 16, 5, 1.0);
+        for i in 0..5u64 {
+            t3.on_token(ms(1500.0) + i * ms(100.0)); // TTFT 1.5s > 1s
+        }
+        assert!(!t3.slo_met());
+    }
+
+    #[test]
+    fn unfinished_task_fails_slo() {
+        let mut t = rt_task();
+        t.on_token(ms(10.0));
+        assert!(!t.slo_met());
+        assert_eq!(t.remaining_tokens(), 9);
+        assert_eq!(t.seq_len(), 17);
+    }
+
+    #[test]
+    fn max_gap_tracks_stutter() {
+        let mut t = Task::new(5, TaskClass::TextQa, 0, 8, 4, 1.0);
+        t.on_token(ms(100.0));
+        t.on_token(ms(150.0));
+        t.on_token(ms(400.0)); // 250ms stutter
+        t.on_token(ms(450.0));
+        assert_eq!(t.max_token_gap, ms(250.0));
+    }
+
+    #[test]
+    fn single_token_task_satisfies_tpot() {
+        let mut t = Task::new(6, TaskClass::TextQa, 0, 8, 1, 1.0);
+        t.on_token(ms(100.0));
+        assert!(t.is_finished());
+        assert_eq!(t.avg_tpot(), Some(0));
+        assert!(t.tpot_met());
+    }
+}

@@ -1,0 +1,115 @@
+//! Virtual and wall clocks behind one interface, so the same serving loop
+//! drives both discrete-event simulation and the real PJRT engine.
+
+use std::time::Instant;
+
+use crate::util::Micros;
+
+/// Time source for the serving loop.
+pub trait Clock {
+    /// Current time in micros since the run started.
+    fn now(&self) -> Micros;
+    /// Account `d` micros of engine work. Virtual clocks jump; the wall
+    /// clock ignores this (real time already elapsed inside the engine).
+    fn advance(&mut self, d: Micros);
+    /// Wait until `t` (virtual: jump; wall: sleep).
+    fn advance_to(&mut self, t: Micros);
+}
+
+/// Discrete-event simulation clock.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: Micros,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Micros {
+        self.now
+    }
+
+    fn advance(&mut self, d: Micros) {
+        self.now += d;
+    }
+
+    fn advance_to(&mut self, t: Micros) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Real-time clock anchored at construction.
+#[derive(Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Micros {
+        self.start.elapsed().as_micros() as Micros
+    }
+
+    fn advance(&mut self, _d: Micros) {
+        // real time already passed while the engine executed
+    }
+
+    fn advance_to(&mut self, t: Micros) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(std::time::Duration::from_micros(t - now));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_jumps() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance(500);
+        assert_eq!(c.now(), 500);
+        c.advance_to(1000);
+        assert_eq!(c.now(), 1000);
+        c.advance_to(400); // never goes backwards
+        assert_eq!(c.now(), 1000);
+    }
+
+    #[test]
+    fn wall_clock_monotone_and_ignores_advance() {
+        let mut c = WallClock::new();
+        let a = c.now();
+        c.advance(1_000_000_000); // must NOT jump forward an hour
+        let b = c.now();
+        assert!(b < 1_000_000_000);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn wall_clock_advance_to_sleeps() {
+        let mut c = WallClock::new();
+        let t0 = c.now();
+        c.advance_to(t0 + 2_000); // 2ms
+        assert!(c.now() >= t0 + 2_000);
+    }
+}

@@ -1,0 +1,59 @@
+//! Decode-engine substrate: the "GPU" the schedulers drive.
+//!
+//! Two interchangeable backends implement [`DecodeEngine`]:
+//!   * [`sim::SimEngine`] — virtual-time execution against a calibrated
+//!     latency model (`latency::LatencyModel`); used for every paper
+//!     sweep (thousands of tasks, deterministic, fast).
+//!   * [`pjrt::PjrtEngine`] — real token generation: executes the
+//!     AOT-compiled transformer artifacts on the PJRT CPU client with a
+//!     per-task KV cache; used by the end-to-end examples and the Fig. 1
+//!     measurement.
+
+pub mod clock;
+pub mod latency;
+pub mod pjrt;
+pub mod sampler;
+pub mod sim;
+pub mod tokenizer;
+
+use anyhow::Result;
+
+use crate::coordinator::pool::TaskPool;
+use crate::coordinator::task::TaskId;
+use crate::util::Micros;
+
+/// One generated token for one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenOut {
+    pub task: TaskId,
+    pub token: u8,
+    /// True if the model emitted its end-of-sequence token.
+    pub eos: bool,
+}
+
+/// Result of one engine step (prefill or decode iteration).
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// How long the step took (modelled or measured).
+    pub duration: Micros,
+    /// One entry per task that produced a token this step.
+    pub tokens: Vec<TokenOut>,
+}
+
+/// An execution backend for prompt prefill and batched decode.
+pub trait DecodeEngine {
+    /// Process one task's prompt; produces its first output token.
+    fn prefill(&mut self, pool: &TaskPool, task: TaskId) -> Result<StepOutcome>;
+
+    /// One decode iteration over `tasks`; produces one token per task.
+    fn decode(&mut self, pool: &TaskPool, tasks: &[TaskId]) -> Result<StepOutcome>;
+
+    /// Free any per-task state (KV cache) after completion/eviction.
+    fn release(&mut self, task: TaskId);
+
+    /// Largest sequence length (prompt + output) the engine can serve.
+    fn max_context(&self) -> u32;
+
+    /// Human-readable backend name for reports.
+    fn backend(&self) -> &'static str;
+}

@@ -1,0 +1,180 @@
+//! Real decode engine: serves actual tokens from the AOT-compiled
+//! transformer via the PJRT runtime, with a per-task host-side KV cache.
+//!
+//! Batch regrouping is first-class: SLICE's decode-mask matrix composes a
+//! different batch every column, so each task's KV slab is kept as an
+//! independent contiguous buffer and stacked into the bucketed decode
+//! executable's input on demand. Unused bucket rows are padded with
+//! `len = 1` zero slabs (a softmax over one zero row is well-defined;
+//! padded outputs are discarded).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::pool::TaskPool;
+use crate::coordinator::task::TaskId;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+use super::sampler::Sampler;
+use super::tokenizer::EOS_TOKEN;
+use super::{DecodeEngine, StepOutcome, TokenOut};
+
+/// Per-task generation state.
+struct Slot {
+    /// KV slab, length = dims.kv_slab_elems().
+    kv: Vec<f32>,
+    /// Current sequence length (prompt + generated tokens in cache).
+    len: u32,
+    /// Most recent sampled token (input to the next decode step).
+    last_token: u8,
+}
+
+/// PJRT-backed engine.
+pub struct PjrtEngine {
+    runtime: ModelRuntime,
+    slots: HashMap<TaskId, Slot>,
+    sampler: Sampler,
+    rng: Rng,
+    /// Scratch buffers reused across decode calls (hot-path allocation
+    /// avoidance; see EXPERIMENTS.md §Perf iteration 2).
+    kv_scratch: Vec<f32>,
+    kv_out_scratch: Vec<f32>,
+    logits_scratch: Vec<f32>,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    /// High-water mark of concurrently resident KV slots (edge memory
+    /// accounting: each slot is one task's cache, dims.kv_slab_elems()
+    /// * 4 bytes).
+    pub peak_slots: usize,
+}
+
+impl PjrtEngine {
+    pub fn new(runtime: ModelRuntime, sampler: Sampler, seed: u64) -> Self {
+        PjrtEngine {
+            runtime,
+            slots: HashMap::new(),
+            sampler,
+            rng: Rng::new(seed),
+            kv_scratch: Vec::new(),
+            kv_out_scratch: Vec::new(),
+            logits_scratch: Vec::new(),
+            prefill_steps: 0,
+            decode_steps: 0,
+            peak_slots: 0,
+        }
+    }
+
+    /// Peak KV memory held for in-flight tasks, in bytes.
+    pub fn peak_kv_bytes(&self) -> usize {
+        self.peak_slots * self.runtime.dims().kv_slab_elems() * 4
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    /// Sequence length currently cached for a task (tests/diagnostics).
+    pub fn cached_len(&self, task: TaskId) -> Option<u32> {
+        self.slots.get(&task).map(|s| s.len)
+    }
+}
+
+impl DecodeEngine for PjrtEngine {
+    fn prefill(&mut self, pool: &TaskPool, task: TaskId) -> Result<StepOutcome> {
+        let start = Instant::now();
+        self.prefill_steps += 1;
+        let t = pool.get(task);
+        if t.prompt.is_empty() {
+            bail!("task {task} has no prompt bytes (pjrt engine needs real prompts)");
+        }
+        let dims = self.runtime.dims();
+        if t.prompt.len() >= dims.max_seq {
+            bail!("prompt of {} exceeds context {}", t.prompt.len(), dims.max_seq);
+        }
+        let bucket = self.runtime.manifest.prefill_bucket(t.prompt.len())?;
+        let mut tokens: Vec<i32> = t.prompt.iter().map(|&b| b as i32).collect();
+        tokens.resize(bucket, 0);
+
+        let out = self
+            .runtime
+            .prefill(&tokens, t.prompt.len() as i32)
+            .context("prefill execution")?;
+        let token = self.sampler.sample(&out.logits, &mut self.rng);
+        self.slots.insert(
+            task,
+            Slot { kv: out.kv, len: t.prompt.len() as u32, last_token: token },
+        );
+        self.peak_slots = self.peak_slots.max(self.slots.len());
+        Ok(StepOutcome {
+            duration: start.elapsed().as_micros() as u64,
+            tokens: vec![TokenOut { task, token, eos: token == EOS_TOKEN }],
+        })
+    }
+
+    fn decode(&mut self, _pool: &TaskPool, tasks: &[TaskId]) -> Result<StepOutcome> {
+        let start = Instant::now();
+        self.decode_steps += 1;
+        let dims = self.runtime.dims();
+        let slab = dims.kv_slab_elems();
+        let bucket = self.runtime.manifest.decode_bucket(tasks.len())?;
+
+        // Stack inputs; pad unused rows with len=1 zero slabs.
+        let mut tokens = vec![0i32; bucket];
+        let mut lens = vec![1i32; bucket];
+        self.kv_scratch.clear();
+        self.kv_scratch.resize(bucket * slab, 0.0);
+        for (i, &id) in tasks.iter().enumerate() {
+            let s = self
+                .slots
+                .get(&id)
+                .with_context(|| format!("task {id} decoded before prefill"))?;
+            if s.len as usize + 1 >= dims.max_seq {
+                bail!("task {id} exceeded context window {}", dims.max_seq);
+            }
+            tokens[i] = s.last_token as i32;
+            lens[i] = s.len as i32;
+            self.kv_scratch[i * slab..(i + 1) * slab].copy_from_slice(&s.kv);
+        }
+
+        self.kv_out_scratch.resize(bucket * slab, 0.0);
+        self.logits_scratch.resize(bucket * dims.vocab, 0.0);
+        self.runtime
+            .decode_into(
+                &tokens,
+                &lens,
+                &self.kv_scratch,
+                &mut self.logits_scratch,
+                &mut self.kv_out_scratch,
+            )
+            .context("decode execution")?;
+
+        // Unpack real rows: sample next tokens, write back updated slabs.
+        let mut outs = Vec::with_capacity(tasks.len());
+        for (i, &id) in tasks.iter().enumerate() {
+            let logits = &self.logits_scratch[i * dims.vocab..(i + 1) * dims.vocab];
+            let token = self.sampler.sample(logits, &mut self.rng);
+            let s = self.slots.get_mut(&id).unwrap();
+            s.kv.copy_from_slice(&self.kv_out_scratch[i * slab..(i + 1) * slab]);
+            s.len += 1;
+            s.last_token = token;
+            let at_limit = s.len as usize + 1 >= dims.max_seq;
+            outs.push(TokenOut { task: id, token, eos: token == EOS_TOKEN || at_limit });
+        }
+        Ok(StepOutcome { duration: start.elapsed().as_micros() as u64, tokens: outs })
+    }
+
+    fn release(&mut self, task: TaskId) {
+        self.slots.remove(&task);
+    }
+
+    fn max_context(&self) -> u32 {
+        self.runtime.dims().max_seq as u32
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}

@@ -1,0 +1,91 @@
+//! Token sampling over the model's logits.
+//!
+//! The serving examples use greedy decoding (deterministic, easiest to
+//! validate against the python reference); temperature sampling is
+//! provided for realistic workloads.
+
+use crate::util::rng::Rng;
+
+/// Sampling strategy.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampler {
+    /// argmax over the logits.
+    Greedy,
+    /// Softmax sampling with a temperature (> 0).
+    Temperature(f64),
+}
+
+impl Sampler {
+    /// Pick a token id from `logits` (length = vocab).
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u8 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as u8,
+            Sampler::Temperature(t) => {
+                assert!(t > 0.0, "temperature must be positive");
+                // numerically-stable softmax
+                let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = logits
+                    .iter()
+                    .map(|&x| (((x - max) as f64) / t).exp())
+                    .collect();
+                rng.weighted_index(&weights) as u8
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut logits = vec![0.0f32; 256];
+        logits[42] = 5.0;
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 42);
+    }
+
+    #[test]
+    fn greedy_first_max_wins_ties() {
+        let logits = vec![1.0f32; 8];
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 0);
+    }
+
+    #[test]
+    fn temperature_sampling_prefers_high_logits() {
+        let mut logits = vec![0.0f32; 4];
+        logits[3] = 4.0;
+        let mut rng = Rng::new(1);
+        let mut hits = 0;
+        for _ in 0..1000 {
+            if Sampler::Temperature(1.0).sample(&logits, &mut rng) == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 900, "hits={hits}");
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut logits = vec![0.0f32; 4];
+        logits[2] = 1.0;
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert_eq!(Sampler::Temperature(0.05).sample(&logits, &mut rng), 2);
+        }
+    }
+}

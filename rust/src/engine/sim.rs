@@ -1,0 +1,127 @@
+//! Virtual-time decode engine backed by the calibrated latency model.
+//!
+//! Token *values* are synthetic (the simulator studies scheduling, not
+//! language); token *timing* follows `l(b)` exactly. Completion is
+//! governed by each task's target `output_len`, mirroring how the paper's
+//! workloads fix per-task output lengths.
+
+use anyhow::Result;
+
+use crate::coordinator::pool::TaskPool;
+use crate::coordinator::task::TaskId;
+
+use super::latency::LatencyModel;
+use super::{DecodeEngine, StepOutcome, TokenOut};
+
+/// Simulation engine: durations from [`LatencyModel`], synthetic tokens.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    latency: LatencyModel,
+    max_context: u32,
+    /// Counters for reports: (prefill_steps, decode_steps, decoded_tokens).
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub decoded_tokens: u64,
+}
+
+impl SimEngine {
+    pub fn new(latency: LatencyModel, max_context: u32) -> Self {
+        SimEngine {
+            latency,
+            max_context,
+            prefill_steps: 0,
+            decode_steps: 0,
+            decoded_tokens: 0,
+        }
+    }
+
+    /// The paper-testbed simulator: ChatGLM2-6B-class device, so the
+    /// context window is effectively unbounded for edge workloads.
+    pub fn paper_calibrated() -> Self {
+        Self::new(LatencyModel::paper_calibrated(), 8192)
+    }
+
+    pub fn latency(&self) -> &LatencyModel {
+        &self.latency
+    }
+}
+
+impl DecodeEngine for SimEngine {
+    fn prefill(&mut self, pool: &TaskPool, task: TaskId) -> Result<StepOutcome> {
+        self.prefill_steps += 1;
+        let t = pool.get(task);
+        Ok(StepOutcome {
+            duration: self.latency.prefill(t.prompt_len),
+            tokens: vec![TokenOut { task, token: 0, eos: false }],
+        })
+    }
+
+    fn decode(&mut self, _pool: &TaskPool, tasks: &[TaskId]) -> Result<StepOutcome> {
+        self.decode_steps += 1;
+        self.decoded_tokens += tasks.len() as u64;
+        Ok(StepOutcome {
+            duration: self.latency.decode(tasks.len() as u32),
+            tokens: tasks
+                .iter()
+                .map(|&task| TokenOut { task, token: 0, eos: false })
+                .collect(),
+        })
+    }
+
+    fn release(&mut self, _task: TaskId) {}
+
+    fn max_context(&self) -> u32 {
+        self.max_context
+    }
+
+    fn backend(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+    use crate::util::ms;
+
+    fn pool_one() -> TaskPool {
+        let mut p = TaskPool::new();
+        p.insert(Task::new(0, TaskClass::Voice, 0, 16, 4, 1.0));
+        p.insert(Task::new(1, TaskClass::Voice, 0, 32, 4, 1.0));
+        p
+    }
+
+    #[test]
+    fn decode_duration_follows_latency_model() {
+        let mut e = SimEngine::paper_calibrated();
+        let pool = pool_one();
+        let o1 = e.decode(&pool, &[0]).unwrap();
+        assert_eq!(o1.duration, ms(18.0));
+        let o9 = e.decode(&pool, &(0..9).map(|_| 0).collect::<Vec<_>>()).unwrap();
+        assert_eq!(o9.duration, ms(128.59));
+    }
+
+    #[test]
+    fn prefill_duration_scales_with_prompt() {
+        let mut e = SimEngine::paper_calibrated();
+        let pool = pool_one();
+        let a = e.prefill(&pool, 0).unwrap();
+        let b = e.prefill(&pool, 1).unwrap();
+        assert!(b.duration > a.duration);
+        assert_eq!(a.tokens.len(), 1);
+        assert!(!a.tokens[0].eos);
+    }
+
+    #[test]
+    fn counters_track_steps() {
+        let mut e = SimEngine::paper_calibrated();
+        let pool = pool_one();
+        let _ = e.prefill(&pool, 0);
+        let _ = e.decode(&pool, &[0, 1]);
+        let _ = e.decode(&pool, &[0]);
+        assert_eq!(e.prefill_steps, 1);
+        assert_eq!(e.decode_steps, 2);
+        assert_eq!(e.decoded_tokens, 3);
+    }
+}

@@ -1,0 +1,48 @@
+//! Byte-level tokenizer: every UTF-8 byte is one token (vocab 256).
+//!
+//! The served model is byte-level by construction (DESIGN.md), which
+//! removes any external tokenizer dependency while keeping prompts and
+//! completions real text.
+
+/// Token used as end-of-sequence (NUL never occurs in text prompts).
+pub const EOS_TOKEN: u8 = 0;
+
+/// Encode text to tokens.
+pub fn encode(text: &str) -> Vec<u8> {
+    text.bytes().collect()
+}
+
+/// Decode tokens to text (lossy for non-UTF-8 sequences, which a sampled
+/// byte stream can legitimately produce).
+pub fn decode(tokens: &[u8]) -> String {
+    String::from_utf8_lossy(tokens).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_round_trip() {
+        let text = "navigate to dock 7";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn utf8_round_trip() {
+        let text = "héllo ⚙ 机器人";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn one_token_per_byte() {
+        assert_eq!(encode("abc").len(), 3);
+        assert_eq!(encode("é").len(), 2); // two UTF-8 bytes
+    }
+
+    #[test]
+    fn eos_is_nul() {
+        assert_eq!(EOS_TOKEN, 0);
+        assert!(!encode("plain text").contains(&EOS_TOKEN));
+    }
+}

@@ -1,0 +1,144 @@
+//! Fig. 7/8/9 — the dynamic experiment: Poisson arrivals at rate 1.0
+//! (the load that saturates the paper's GPU), RT:NRT = 7:3.
+//!
+//! Fig. 7: SLO attainment overall / real-time / non-real-time.
+//! Fig. 8: TPOT, TTFT and deadline attainment breakdown.
+//! Fig. 9: average completion time by task group.
+
+use anyhow::Result;
+
+use crate::config::{PolicyKind, ServeConfig};
+use crate::metrics::report::{attainment_json, pct, secs2, Table};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{default_drain, run_sim, ALL_POLICIES};
+
+/// One policy's dynamic-run outcome.
+#[derive(Debug)]
+pub struct DynamicResult {
+    pub policy: &'static str,
+    pub attainment: Attainment,
+}
+
+/// Run the dynamic workload for one policy.
+pub fn run_policy(kind: PolicyKind, cfg: &ServeConfig) -> Result<DynamicResult> {
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let report = run_sim(kind, workload, cfg, default_drain())?;
+    Ok(DynamicResult {
+        policy: report.policy,
+        attainment: Attainment::compute(&report.tasks),
+    })
+}
+
+/// Run all three policies; print Fig. 7, Fig. 8 and Fig. 9 series.
+pub fn run(cfg: &ServeConfig) -> Result<Json> {
+    let results: Vec<DynamicResult> = ALL_POLICIES
+        .iter()
+        .map(|&k| run_policy(k, cfg))
+        .collect::<Result<_>>()?;
+
+    println!(
+        "Dynamic experiment — arrival rate {}, RT:NRT = {:.0}:{:.0}, {} tasks, seed {}\n",
+        cfg.arrival_rate,
+        cfg.rt_ratio * 10.0,
+        (1.0 - cfg.rt_ratio) * 10.0,
+        cfg.n_tasks,
+        cfg.seed
+    );
+
+    let mut t7 = Table::new(&["Strategy", "Overall SLO", "Real-time SLO", "Non-RT SLO"]);
+    for r in &results {
+        t7.row(vec![
+            r.policy.to_string(),
+            pct(r.attainment.slo),
+            pct(r.attainment.rt_slo),
+            pct(r.attainment.nrt_slo),
+        ]);
+    }
+    println!("Fig. 7 — SLO attainment\n\n{}", t7.render());
+
+    let mut t8 = Table::new(&[
+        "Strategy", "NRT TTFT attain", "NRT TPOT attain", "RT deadline attain",
+    ]);
+    for r in &results {
+        t8.row(vec![
+            r.policy.to_string(),
+            pct(r.attainment.nrt_ttft),
+            pct(r.attainment.nrt_tpot),
+            pct(r.attainment.rt_slo),
+        ]);
+    }
+    println!("Fig. 8 — attainment breakdown\n\n{}", t8.render());
+
+    let mut t9 = Table::new(&[
+        "Strategy", "Mean completion (all)", "Mean completion (RT)", "Mean completion (NRT)",
+    ]);
+    for r in &results {
+        t9.row(vec![
+            r.policy.to_string(),
+            secs2(r.attainment.mean_completion_all),
+            secs2(r.attainment.mean_completion_rt),
+            secs2(r.attainment.mean_completion_nrt),
+        ]);
+    }
+    println!("Fig. 9 — completion time\n\n{}", t9.render());
+
+    Ok(Json::from(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("policy", r.policy)
+                    .set("attainment", attainment_json(&r.attainment))
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { n_tasks: 150, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn slice_beats_baselines_at_saturation() {
+        let slice = run_policy(PolicyKind::Slice, &cfg()).unwrap();
+        let orca = run_policy(PolicyKind::Orca, &cfg()).unwrap();
+        let fast = run_policy(PolicyKind::FastServe, &cfg()).unwrap();
+
+        // Fig. 7 shape: SLICE well above both baselines overall
+        assert!(
+            slice.attainment.slo > orca.attainment.slo,
+            "SLICE {} vs Orca {}",
+            slice.attainment.slo,
+            orca.attainment.slo
+        );
+        assert!(slice.attainment.slo > fast.attainment.slo);
+        // and real-time attainment is high
+        assert!(
+            slice.attainment.rt_slo > 0.8,
+            "SLICE RT attainment {} (paper: 85%)",
+            slice.attainment.rt_slo
+        );
+    }
+
+    #[test]
+    fn slice_faster_rt_completion() {
+        // Fig. 9 shape: SLICE completes real-time tasks much faster.
+        let slice = run_policy(PolicyKind::Slice, &cfg()).unwrap();
+        let orca = run_policy(PolicyKind::Orca, &cfg()).unwrap();
+        assert!(
+            slice.attainment.mean_completion_rt < orca.attainment.mean_completion_rt,
+            "SLICE RT {}s vs Orca RT {}s",
+            slice.attainment.mean_completion_rt,
+            orca.attainment.mean_completion_rt
+        );
+    }
+}

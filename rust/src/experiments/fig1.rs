@@ -1,0 +1,106 @@
+//! Fig. 1 — decode latency (a) and token throughput (b) vs batch size.
+//!
+//! Two sources are reported side by side:
+//!   * the paper-calibrated latency model (what every simulation uses);
+//!   * optionally, measured step latencies of the real PJRT engine
+//!     (`slice-serve experiment fig1 --artifacts <dir>`), which is also
+//!     how `calibrate` fits a machine-local model.
+
+use anyhow::Result;
+
+use crate::engine::latency::LatencyModel;
+use crate::metrics::report::Table;
+use crate::util::json::Json;
+
+/// One measured/modelled row.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub batch: u32,
+    pub latency_ms: f64,
+    pub throughput_tps: f64,
+    pub per_task_tps: f64,
+}
+
+/// Produce the Fig. 1 series from a latency model.
+pub fn from_model(model: &LatencyModel, batches: &[u32]) -> Vec<Fig1Row> {
+    batches
+        .iter()
+        .map(|&b| {
+            let lat = model.decode(b) as f64 / 1e3;
+            let tps = model.throughput(b);
+            Fig1Row {
+                batch: b,
+                latency_ms: lat,
+                throughput_tps: tps,
+                per_task_tps: tps / b as f64,
+            }
+        })
+        .collect()
+}
+
+/// Standard batch sweep (the paper sweeps 1..16).
+pub fn default_batches() -> Vec<u32> {
+    (1..=16).collect()
+}
+
+pub fn rows_to_json(rows: &[Fig1Row]) -> Json {
+    Json::from(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .set("batch", r.batch as u64)
+                    .set("latency_ms", r.latency_ms)
+                    .set("throughput_tps", r.throughput_tps)
+                    .set("per_task_tps", r.per_task_tps)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+pub fn render(rows: &[Fig1Row]) -> String {
+    let mut t = Table::new(&["batch", "decode latency (ms)", "throughput (tok/s)", "per-task (tok/s)"]);
+    for r in rows {
+        t.row(vec![
+            r.batch.to_string(),
+            format!("{:.2}", r.latency_ms),
+            format!("{:.2}", r.throughput_tps),
+            format!("{:.2}", r.per_task_tps),
+        ]);
+    }
+    t.render()
+}
+
+/// Run the figure against the calibrated model and print it.
+pub fn run() -> Result<Json> {
+    let model = LatencyModel::paper_calibrated();
+    let rows = from_model(&model, &default_batches());
+    println!("Fig. 1 — decode latency & throughput vs batch size (calibrated model)\n");
+    println!("{}", render(&rows));
+    Ok(rows_to_json(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_reproduced() {
+        let rows = from_model(&LatencyModel::paper_calibrated(), &default_batches());
+        // (1) near-linear latency growth to b=9
+        assert!(rows[8].latency_ms > 120.0, "l(9) spikes above 120ms");
+        // (2) per-task rate below 10 tok/s past the knee
+        for r in rows.iter().filter(|r| r.batch >= 9) {
+            assert!(r.per_task_tps < 10.0);
+        }
+        // (3) throughput keeps scaling in the plateau
+        assert!(rows[15].throughput_tps > rows[8].throughput_tps);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let rows = from_model(&LatencyModel::paper_calibrated(), &[1, 2, 4]);
+        let j = rows_to_json(&rows);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,114 @@
+//! Experiment harnesses: one module per table/figure of the paper's
+//! evaluation (§VI). Every harness prints the same rows/series the paper
+//! reports and returns a JSON document for plotting; EXPERIMENTS.md
+//! records paper-vs-measured for each.
+//!
+//! | module       | reproduces                                  |
+//! |--------------|---------------------------------------------|
+//! | `fig1`       | Fig. 1a/1b latency & throughput vs batch    |
+//! | `static_mix` | Table II + Fig. 6 (9-task static workload)  |
+//! | `dynamic`    | Fig. 7/8/9 (rate 1.0, RT:NRT = 7:3)         |
+//! | `ratio_sweep`| Fig. 10a/b/c (RT ratio sweep)               |
+//! | `rate_sweep` | Fig. 11a/b/c (arrival rate sweep)           |
+//! | `ablation`   | design-choice ablations (DESIGN.md)         |
+
+pub mod ablation;
+pub mod dynamic;
+pub mod fig1;
+pub mod rate_sweep;
+pub mod ratio_sweep;
+pub mod static_mix;
+
+use anyhow::Result;
+
+use crate::config::{PolicyKind, ServeConfig};
+use crate::coordinator::fastserve::FastServePolicy;
+use crate::coordinator::orca::OrcaPolicy;
+use crate::coordinator::scheduler::Policy;
+use crate::coordinator::slice::{SliceConfig, SlicePolicy};
+use crate::coordinator::task::Task;
+use crate::engine::clock::VirtualClock;
+use crate::engine::latency::LatencyModel;
+use crate::engine::sim::SimEngine;
+use crate::server::{RunReport, Server};
+use crate::util::{secs, Micros};
+
+/// All three policies, in the order the paper reports them.
+pub const ALL_POLICIES: [PolicyKind; 3] =
+    [PolicyKind::Orca, PolicyKind::FastServe, PolicyKind::Slice];
+
+/// Instantiate a policy from its kind and the serve config.
+pub fn build_policy(kind: PolicyKind, cfg: &ServeConfig) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::Slice => {
+            let mut lat = LatencyModel::paper_calibrated();
+            lat.max_batch = cfg.max_batch;
+            Box::new(SlicePolicy::new(
+                lat,
+                SliceConfig {
+                    cycle_cap: cfg.cycle_cap,
+                    adaptor: cfg.adaptor,
+                    prefill_aware: cfg.prefill_aware,
+                },
+            ))
+        }
+        PolicyKind::Orca => Box::new(OrcaPolicy::new(cfg.max_batch)),
+        PolicyKind::FastServe => {
+            let mut fs_cfg = cfg.fastserve.clone();
+            fs_cfg.max_batch = cfg.max_batch;
+            Box::new(FastServePolicy::new(fs_cfg))
+        }
+    }
+}
+
+/// Run one (policy, workload) pair on the simulation engine in virtual
+/// time. `drain` extends the horizon past the last arrival.
+pub fn run_sim(
+    kind: PolicyKind,
+    workload: Vec<Task>,
+    cfg: &ServeConfig,
+    drain: Micros,
+) -> Result<RunReport> {
+    let last_arrival = workload.last().map_or(0, |t| t.arrival);
+    let horizon = last_arrival + drain;
+    let policy = build_policy(kind, cfg);
+    let engine = Box::new(SimEngine::paper_calibrated());
+    Server::new(workload, policy, engine, VirtualClock::new()).run(horizon)
+}
+
+/// Default drain window after the last arrival (virtual seconds).
+pub fn default_drain() -> Micros {
+    secs(120.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Attainment;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn run_sim_executes_all_policies() {
+        let cfg = ServeConfig::default();
+        for kind in ALL_POLICIES {
+            let workload = WorkloadSpec::paper_mix(0.5, 0.7, 20, 1).generate();
+            let report = run_sim(kind, workload, &cfg, default_drain()).unwrap();
+            assert_eq!(report.tasks.len(), 20);
+            let a = Attainment::compute(&report.tasks);
+            assert_eq!(a.n_finished, 20, "{kind:?} must finish a light load");
+        }
+    }
+
+    #[test]
+    fn light_load_all_policies_high_attainment() {
+        // At 0.3 tasks/s the device is nearly idle: every policy should
+        // meet nearly every SLO.
+        let cfg = ServeConfig::default();
+        for kind in ALL_POLICIES {
+            let workload = WorkloadSpec::paper_mix(0.3, 0.7, 30, 2).generate();
+            let report = run_sim(kind, workload, &cfg, default_drain()).unwrap();
+            let a = Attainment::compute(&report.tasks);
+            assert!(a.slo > 0.9, "{kind:?} attainment {} too low at idle", a.slo);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Fig. 11a/b/c — SLO attainment vs task arrival rate (0.1 .. 7.0).
+//!
+//! RT:NRT fixed at 7:3. Expected shape: baselines collapse once the rate
+//! passes ~0.8-1.5 (RT attainment → ~0); SLICE holds near-100% real-time
+//! attainment throughout and ~80% overall past saturation — the paper's
+//! headline "up to 35x" SLO-attainment advantage.
+
+use anyhow::Result;
+
+use crate::config::{PolicyKind, ServeConfig};
+use crate::metrics::report::{pct, Table};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{default_drain, run_sim, ALL_POLICIES};
+
+/// The paper sweeps ten increasing rates in [0.1, 7.0].
+pub fn default_rates() -> Vec<f64> {
+    vec![0.1, 0.3, 0.5, 0.8, 1.0, 1.5, 2.0, 3.0, 5.0, 7.0]
+}
+
+/// One (rate, policy) cell.
+#[derive(Debug)]
+pub struct RateCell {
+    pub rate: f64,
+    pub policy: &'static str,
+    pub attainment: Attainment,
+}
+
+pub fn run_cell(kind: PolicyKind, rate: f64, cfg: &ServeConfig) -> Result<RateCell> {
+    let workload =
+        WorkloadSpec::paper_mix(rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed).generate();
+    let report = run_sim(kind, workload, cfg, default_drain())?;
+    Ok(RateCell { rate, policy: report.policy, attainment: Attainment::compute(&report.tasks) })
+}
+
+/// Full sweep; prints the three panels of Fig. 11.
+pub fn run(cfg: &ServeConfig) -> Result<Json> {
+    let rates = default_rates();
+    let mut cells: Vec<RateCell> = Vec::new();
+    for &rate in &rates {
+        for kind in ALL_POLICIES {
+            cells.push(run_cell(kind, rate, cfg)?);
+        }
+    }
+
+    for (title, pick) in [
+        ("Fig. 11a — real-time SLO attainment", 0usize),
+        ("Fig. 11b — non-real-time SLO attainment", 1),
+        ("Fig. 11c — overall SLO attainment", 2),
+    ] {
+        let mut t = Table::new(&["rate", "Orca", "FastServe", "SLICE"]);
+        for &rate in &rates {
+            let row: Vec<String> = ALL_POLICIES
+                .iter()
+                .map(|&k| {
+                    let c = cells
+                        .iter()
+                        .find(|c| c.rate == rate && c.policy == k.label())
+                        .unwrap();
+                    let v = match pick {
+                        0 => c.attainment.rt_slo,
+                        1 => c.attainment.nrt_slo,
+                        _ => c.attainment.slo,
+                    };
+                    pct(v)
+                })
+                .collect();
+            t.row(std::iter::once(format!("{rate}")).chain(row).collect());
+        }
+        println!("{title}\n\n{}", t.render());
+    }
+
+    Ok(Json::from(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .set("rate", c.rate)
+                    .set("policy", c.policy)
+                    .set("slo", nan_null(c.attainment.slo))
+                    .set("rt_slo", nan_null(c.attainment.rt_slo))
+                    .set("nrt_slo", nan_null(c.attainment.nrt_slo))
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+fn nan_null(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Null
+    } else {
+        Json::Num(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        // long enough to reach the post-saturation steady state
+        ServeConfig { n_tasks: 300, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn slice_rt_attainment_survives_overload() {
+        // Fig. 11a: SLICE near-100% RT attainment even at rate 3.0.
+        let cell = run_cell(PolicyKind::Slice, 3.0, &cfg()).unwrap();
+        assert!(
+            cell.attainment.rt_slo > 0.9,
+            "SLICE RT attainment at rate 3.0 = {}",
+            cell.attainment.rt_slo
+        );
+    }
+
+    #[test]
+    fn baselines_collapse_past_saturation() {
+        // Fig. 11a: baseline RT attainment collapses past saturation
+        // while SLICE holds near 100% — the gap is the paper's headline.
+        for kind in [PolicyKind::Orca, PolicyKind::FastServe] {
+            let base = run_cell(kind, 3.0, &cfg()).unwrap();
+            let slice = run_cell(PolicyKind::Slice, 3.0, &cfg()).unwrap();
+            assert!(
+                slice.attainment.rt_slo - base.attainment.rt_slo > 0.4,
+                "{kind:?} RT {} vs SLICE RT {} at rate 3.0",
+                base.attainment.rt_slo,
+                slice.attainment.rt_slo
+            );
+        }
+        // Orca (pure FCFS) should be deeply collapsed
+        let orca = run_cell(PolicyKind::Orca, 5.0, &cfg()).unwrap();
+        assert!(
+            orca.attainment.rt_slo < 0.3,
+            "Orca RT attainment at rate 5.0 = {}",
+            orca.attainment.rt_slo
+        );
+    }
+
+    #[test]
+    fn everyone_fine_at_idle() {
+        for kind in ALL_POLICIES {
+            let cell = run_cell(kind, 0.1, &cfg()).unwrap();
+            assert!(
+                cell.attainment.slo > 0.9,
+                "{kind:?} attainment at 0.1 = {}",
+                cell.attainment.slo
+            );
+        }
+    }
+
+    #[test]
+    fn slice_overall_advantage_large_under_overload() {
+        // Fig. 11c: the headline multiple. We assert a conservative >3x.
+        let slice = run_cell(PolicyKind::Slice, 3.0, &cfg()).unwrap();
+        let orca = run_cell(PolicyKind::Orca, 3.0, &cfg()).unwrap();
+        let ratio = slice.attainment.slo / orca.attainment.slo.max(0.01);
+        assert!(
+            ratio > 3.0,
+            "SLICE/Orca overall attainment ratio at rate 3.0 = {ratio}"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! slice-serve: a reproduction of *SLICE: SLO-Driven Scheduling for LLM
+//! Inference on Edge Computing Devices* (Zhou et al., CS.DC 2025) as a
+//! three-layer rust + JAX + Pallas serving stack.
+//!
+//! Layers:
+//!   * L3 (`coordinator`, `server`) — the paper's contribution: the
+//!     SLICE scheduler (utility-maximizing selection + decode-mask-matrix
+//!     rate allocation + online event loop) and its baselines.
+//!   * L2/L1 (`python/compile/`) — the served model: a byte-level
+//!     transformer whose decode/prefill attention is a Pallas kernel,
+//!     AOT-lowered to HLO text at build time.
+//!   * `runtime`/`engine` — the PJRT bridge executing those artifacts,
+//!     plus a calibrated simulation engine for the paper's sweeps.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

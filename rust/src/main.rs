@@ -1,0 +1,332 @@
+//! slice-serve CLI: launcher for serving, experiments and calibration.
+//!
+//! Subcommands (clap is unavailable offline, so parsing is hand-rolled):
+//!   serve       — run a workload through one policy (sim or pjrt engine)
+//!   experiment  — regenerate a paper table/figure (fig1|table2|fig7|
+//!                 fig8|fig9|fig10|fig11|ablation|all)
+//!   calibrate   — measure l(b) on the real PJRT engine and print a
+//!                 machine-local latency model
+//!   info        — print artifact/runtime information
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use slice_serve::config::{EngineKind, PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::TaskClass;
+use slice_serve::engine::clock::{VirtualClock, WallClock};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::engine::pjrt::PjrtEngine;
+use slice_serve::engine::sampler::Sampler;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::engine::DecodeEngine;
+use slice_serve::experiments;
+use slice_serve::metrics::report::{pct, secs2, Table};
+use slice_serve::metrics::Attainment;
+use slice_serve::runtime::ModelRuntime;
+use slice_serve::server::Server;
+use slice_serve::util::json::Json;
+use slice_serve::util::{logger, secs};
+use slice_serve::workload::WorkloadSpec;
+
+const USAGE: &str = "\
+slice-serve — SLO-driven LLM inference scheduling (SLICE reproduction)
+
+USAGE:
+  slice-serve serve [--config <file>] [--policy slice|orca|fastserve]
+                    [--engine sim|pjrt] [--artifacts <dir>]
+                    [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
+                    [--trace <file>] [--save-trace <file>]
+  slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|all>
+                    [--n-tasks <n>] [--seed <n>] [--out <json>]
+  slice-serve calibrate --artifacts <dir> [--reps <n>]
+  slice-serve info --artifacts <dir>
+";
+
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{name} needs a value"))?
+                    .clone();
+                flags.push((name.to_string(), value));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.flag(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}: bad number")))
+            .transpose()
+    }
+
+    fn flag_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.flag(name)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{name}: bad integer")))
+            .transpose()
+    }
+}
+
+fn build_config(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ServeConfig::from_file(&PathBuf::from(path))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(p) = args.flag("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(e) = args.flag("engine") {
+        cfg.engine = match e {
+            "sim" => EngineKind::Sim,
+            "pjrt" => EngineKind::Pjrt(PathBuf::from(
+                args.flag("artifacts").unwrap_or("artifacts"),
+            )),
+            other => bail!("unknown engine '{other}'"),
+        };
+    }
+    if let Some(v) = args.flag_f64("rate")? {
+        cfg.arrival_rate = v;
+    }
+    if let Some(v) = args.flag_f64("rt-ratio")? {
+        cfg.rt_ratio = v;
+    }
+    if let Some(v) = args.flag_u64("n-tasks")? {
+        cfg.n_tasks = v as usize;
+    }
+    if let Some(v) = args.flag_u64("seed")? {
+        cfg.seed = v;
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let policy = experiments::build_policy(cfg.policy, &cfg);
+
+    // workload source: --trace <file> replays a recorded trace; otherwise
+    // generate from the config (and optionally --save-trace it).
+    let load_workload = |edge: bool| -> Result<Vec<_>> {
+        let workload = match args.flag("trace") {
+            Some(path) => slice_serve::workload::trace::load(&PathBuf::from(path))?,
+            None => {
+                let spec = if edge {
+                    WorkloadSpec::edge_mix(
+                        cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed,
+                    )
+                } else {
+                    WorkloadSpec::paper_mix(
+                        cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed,
+                    )
+                };
+                spec.generate()
+            }
+        };
+        if let Some(path) = args.flag("save-trace") {
+            slice_serve::workload::trace::save(&workload, &PathBuf::from(path))?;
+            println!("saved workload trace to {path}");
+        }
+        Ok(workload)
+    };
+
+    let report = match &cfg.engine {
+        EngineKind::Sim => {
+            let workload = load_workload(false)?;
+            let horizon = workload.last().map_or(0, |t| t.arrival) + secs(300.0);
+            Server::new(
+                workload,
+                policy,
+                Box::new(SimEngine::paper_calibrated()),
+                VirtualClock::new(),
+            )
+            .run(horizon)?
+        }
+        EngineKind::Pjrt(dir) => {
+            // context-fitted workload with real prompt bytes
+            let workload = load_workload(true)?;
+            let horizon = workload.last().map_or(0, |t| t.arrival) + secs(300.0);
+            let runtime = ModelRuntime::load(dir)?;
+            let engine = PjrtEngine::new(runtime, Sampler::Greedy, cfg.seed);
+            Server::new(workload, policy, Box::new(engine), WallClock::new()).run(horizon)?
+        }
+    };
+
+    let a = Attainment::compute(&report.tasks);
+    println!(
+        "policy={} tasks={} finished={} steps={} (prefill {}, decode {})",
+        report.policy, a.n_tasks, a.n_finished, report.steps, report.prefill_steps,
+        report.decode_steps
+    );
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["overall SLO attainment".into(), pct(a.slo)]);
+    t.row(vec!["real-time SLO attainment".into(), pct(a.rt_slo)]);
+    t.row(vec!["non-RT SLO attainment".into(), pct(a.nrt_slo)]);
+    t.row(vec!["mean completion (all)".into(), secs2(a.mean_completion_all)]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut cfg = ServeConfig::default();
+    if let Some(v) = args.flag_u64("n-tasks")? {
+        cfg.n_tasks = v as usize;
+    }
+    if let Some(v) = args.flag_u64("seed")? {
+        cfg.seed = v;
+    }
+
+    let mut out = Json::obj();
+    match which {
+        "fig1" => out = out.set("fig1", experiments::fig1::run()?),
+        "table2" | "fig6" => out = out.set("table2", experiments::static_mix::run(&cfg)?),
+        "fig7" | "fig8" | "fig9" | "dynamic" => {
+            out = out.set("dynamic", experiments::dynamic::run(&cfg)?)
+        }
+        "fig10" => out = out.set("fig10", experiments::ratio_sweep::run(&cfg)?),
+        "fig11" => out = out.set("fig11", experiments::rate_sweep::run(&cfg)?),
+        "ablation" => out = out.set("ablation", experiments::ablation::run(&cfg)?),
+        "all" => {
+            out = out
+                .set("fig1", experiments::fig1::run()?)
+                .set("table2", experiments::static_mix::run(&cfg)?)
+                .set("dynamic", experiments::dynamic::run(&cfg)?)
+                .set("fig10", experiments::ratio_sweep::run(&cfg)?)
+                .set("fig11", experiments::rate_sweep::run(&cfg)?)
+                .set("ablation", experiments::ablation::run(&cfg)?);
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, out.to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Measure l(b) on the real engine (Fig. 1 measurement + calibration).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let reps = args.flag_u64("reps")?.unwrap_or(5) as usize;
+    let runtime = ModelRuntime::load(&dir)?;
+    let buckets = runtime.decode_buckets();
+    let mut engine = PjrtEngine::new(runtime, Sampler::Greedy, 0);
+
+    // Build a pool of max-bucket tasks with real prompts and prefill them.
+    let mut pool = slice_serve::coordinator::pool::TaskPool::new();
+    let max_b = *buckets.last().unwrap();
+    for i in 0..max_b as u64 {
+        let mut t = slice_serve::coordinator::task::Task::new(
+            i, TaskClass::TextQa, 0, 16, 64, 1.0,
+        );
+        t.prompt = format!("calibration prompt number {i} padding").into_bytes();
+        t.prompt.truncate(16);
+        t.prompt_len = t.prompt.len() as u32;
+        pool.insert(t);
+    }
+    for i in 0..max_b as u64 {
+        engine.prefill(&pool, i)?;
+    }
+
+    println!("calibrating decode latency l(b) over buckets {buckets:?}, {reps} reps\n");
+    let mut t = Table::new(&["batch", "l(b) ms (median)", "throughput tok/s"]);
+    let mut points = Vec::new();
+    for &b in &buckets {
+        let ids: Vec<u64> = (0..b as u64).collect();
+        let mut samples = Vec::new();
+        for _ in 0..reps {
+            let o = engine.decode(&pool, &ids)?;
+            samples.push(o.duration);
+        }
+        samples.sort_unstable();
+        let med = samples[samples.len() / 2];
+        points.push((b as u32, med));
+        t.row(vec![
+            b.to_string(),
+            format!("{:.2}", med as f64 / 1e3),
+            format!("{:.2}", b as f64 / (med as f64 / 1e6)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let model = LatencyModel::from_points(points, vec![], max_b as u32);
+    println!("best-throughput batch: {}", model.best_throughput_batch());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let runtime = ModelRuntime::load(&dir)?;
+    let d = runtime.dims();
+    println!("platform: {}", runtime.platform());
+    println!(
+        "model: vocab={} d_model={} layers={} heads={} head_dim={} ffn={} max_seq={}",
+        d.vocab, d.d_model, d.n_layers, d.n_heads, d.head_dim, d.d_ff, d.max_seq
+    );
+    println!(
+        "kv slab: {} f32 ({} KiB) per task",
+        d.kv_slab_elems(),
+        d.kv_slab_elems() * 4 / 1024
+    );
+    println!("decode buckets: {:?}", runtime.decode_buckets());
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cmd = args.positional.first().map(String::as_str);
+    let result = match cmd {
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            return ExitCode::SUCCESS;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Metrics: SLO attainment accounting (paper §VI-A "Metrics") and
+//! report construction for every table/figure.
+//!
+//! Attainment definitions follow the paper exactly:
+//!   * real-time task SLO met  ⇔ completed before its deadline;
+//!   * non-real-time SLO met   ⇔ TTFT SLO **and** TPOT SLO both met;
+//!   * unfinished tasks count as violations.
+
+pub mod report;
+
+use crate::coordinator::task::Task;
+use crate::util::stats::Samples;
+
+/// Attainment and latency summary for a set of tasks.
+#[derive(Debug, Clone)]
+pub struct Attainment {
+    pub n_tasks: usize,
+    pub n_finished: usize,
+    /// Overall SLO attainment in [0,1].
+    pub slo: f64,
+    /// Real-time subset: deadline attainment.
+    pub rt_slo: f64,
+    pub rt_count: usize,
+    /// Non-real-time subset: combined TTFT+TPOT attainment.
+    pub nrt_slo: f64,
+    pub nrt_count: usize,
+    /// Non-real-time TTFT-only attainment (Fig. 8).
+    pub nrt_ttft: f64,
+    /// Non-real-time TPOT-only attainment (Fig. 8).
+    pub nrt_tpot: f64,
+    /// Mean completion time (s) over finished tasks, by group.
+    pub mean_completion_all: f64,
+    pub mean_completion_rt: f64,
+    pub mean_completion_nrt: f64,
+}
+
+fn frac(num: usize, den: usize) -> f64 {
+    if den == 0 {
+        f64::NAN
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn mean_completion<'a>(tasks: impl Iterator<Item = &'a Task>) -> f64 {
+    let mut s = Samples::new();
+    for t in tasks {
+        if let Some(c) = t.completion_time() {
+            s.push(c as f64 / 1e6);
+        }
+    }
+    s.mean()
+}
+
+impl Attainment {
+    /// Compute attainment over a finished run's task set.
+    pub fn compute(tasks: &[Task]) -> Self {
+        let rt: Vec<&Task> = tasks.iter().filter(|t| t.class.is_real_time()).collect();
+        let nrt: Vec<&Task> = tasks.iter().filter(|t| !t.class.is_real_time()).collect();
+
+        let met = tasks.iter().filter(|t| t.slo_met()).count();
+        let rt_met = rt.iter().filter(|t| t.slo_met()).count();
+        let nrt_met = nrt.iter().filter(|t| t.slo_met()).count();
+        let nrt_ttft_met =
+            nrt.iter().filter(|t| t.is_finished() && t.ttft_met()).count();
+        let nrt_tpot_met =
+            nrt.iter().filter(|t| t.is_finished() && t.tpot_met()).count();
+
+        Attainment {
+            n_tasks: tasks.len(),
+            n_finished: tasks.iter().filter(|t| t.is_finished()).count(),
+            slo: frac(met, tasks.len()),
+            rt_slo: frac(rt_met, rt.len()),
+            rt_count: rt.len(),
+            nrt_slo: frac(nrt_met, nrt.len()),
+            nrt_count: nrt.len(),
+            nrt_ttft: frac(nrt_ttft_met, nrt.len()),
+            nrt_tpot: frac(nrt_tpot_met, nrt.len()),
+            mean_completion_all: mean_completion(tasks.iter()),
+            mean_completion_rt: mean_completion(rt.into_iter()),
+            mean_completion_nrt: mean_completion(nrt.into_iter()),
+        }
+    }
+}
+
+/// Per-group TPOT summary (Table II / Fig. 6): mean measured TPOT and
+/// the implied decoding rate for a named group of tasks.
+#[derive(Debug, Clone)]
+pub struct TpotSummary {
+    pub label: String,
+    pub n_tasks: usize,
+    pub tpot_slo_ms: f64,
+    pub mean_tpot_ms: f64,
+    pub mean_rate: f64,
+    pub all_tpot_met: bool,
+}
+
+impl TpotSummary {
+    pub fn compute(label: &str, tasks: &[&Task]) -> Self {
+        let mut s = Samples::new();
+        for t in tasks {
+            if let Some(tp) = t.avg_tpot() {
+                s.push(tp as f64 / 1e3);
+            }
+        }
+        let mean_tpot_ms = s.mean();
+        TpotSummary {
+            label: label.to_string(),
+            n_tasks: tasks.len(),
+            tpot_slo_ms: tasks.first().map_or(f64::NAN, |t| t.slo.tpot as f64 / 1e3),
+            mean_tpot_ms,
+            mean_rate: if mean_tpot_ms > 0.0 { 1000.0 / mean_tpot_ms } else { f64::NAN },
+            all_tpot_met: tasks.iter().all(|t| t.is_finished() && t.tpot_met()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskClass};
+    use crate::util::ms;
+
+    fn finished_rt(id: u64, completion_ms: f64) -> Task {
+        let mut t = Task::new(id, TaskClass::RealTime, 0, 16, 2, 100.0);
+        t.on_token(ms(completion_ms / 2.0));
+        t.on_token(ms(completion_ms));
+        t
+    }
+
+    fn finished_voice(id: u64, ttft_ms: f64, tpot_ms: f64) -> Task {
+        let mut t = Task::new(id, TaskClass::Voice, 0, 16, 5, 1.0);
+        for i in 0..5u64 {
+            t.on_token(ms(ttft_ms) + i * ms(tpot_ms));
+        }
+        t
+    }
+
+    #[test]
+    fn attainment_groups_and_rates() {
+        let tasks = vec![
+            finished_rt(0, 1000.0),           // meets 1.5s deadline
+            finished_rt(1, 2000.0),           // misses
+            finished_voice(2, 500.0, 100.0),  // meets both
+            finished_voice(3, 1500.0, 100.0), // TTFT violation
+        ];
+        let a = Attainment::compute(&tasks);
+        assert_eq!(a.n_tasks, 4);
+        assert_eq!(a.n_finished, 4);
+        assert_eq!(a.rt_count, 2);
+        assert_eq!(a.nrt_count, 2);
+        assert!((a.slo - 0.5).abs() < 1e-12);
+        assert!((a.rt_slo - 0.5).abs() < 1e-12);
+        assert!((a.nrt_slo - 0.5).abs() < 1e-12);
+        assert!((a.nrt_ttft - 0.5).abs() < 1e-12);
+        assert!((a.nrt_tpot - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unfinished_counts_as_violation() {
+        let mut unfinished = Task::new(0, TaskClass::Voice, 0, 16, 50, 1.0);
+        unfinished.on_token(ms(100.0));
+        let a = Attainment::compute(&[unfinished]);
+        assert_eq!(a.n_finished, 0);
+        assert_eq!(a.slo, 0.0);
+    }
+
+    #[test]
+    fn empty_groups_are_nan() {
+        let tasks = vec![finished_rt(0, 1000.0)];
+        let a = Attainment::compute(&tasks);
+        assert!(a.nrt_slo.is_nan());
+        assert!((a.rt_slo - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_summary_mean_and_rate() {
+        let t1 = finished_voice(0, 100.0, 100.0);
+        let t2 = finished_voice(1, 100.0, 120.0);
+        let s = TpotSummary::compute("voice", &[&t1, &t2]);
+        assert_eq!(s.n_tasks, 2);
+        assert!((s.mean_tpot_ms - 110.0).abs() < 1e-9);
+        assert!((s.mean_rate - 1000.0 / 110.0).abs() < 1e-9);
+        assert!(s.all_tpot_met);
+    }
+
+    #[test]
+    fn mean_completion_in_seconds() {
+        let tasks = vec![finished_rt(0, 1000.0), finished_rt(1, 2000.0)];
+        let a = Attainment::compute(&tasks);
+        assert!((a.mean_completion_all - 1.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Report rendering: text tables for the CLI and JSON export for
+//! downstream plotting, shared by every experiment harness.
+
+use crate::util::json::Json;
+
+use super::Attainment;
+
+/// A simple fixed-width text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Percentage formatting used throughout reports.
+pub fn pct(x: f64) -> String {
+    if x.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{:.2}%", 100.0 * x)
+    }
+}
+
+/// Seconds with 2 decimals.
+pub fn secs2(x: f64) -> String {
+    if x.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{x:.2}s")
+    }
+}
+
+/// Milliseconds with 2 decimals.
+pub fn ms2(x: f64) -> String {
+    if x.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{x:.2}ms")
+    }
+}
+
+/// JSON encoding of an [`Attainment`] (NaN mapped to null).
+pub fn attainment_json(a: &Attainment) -> Json {
+    fn num(x: f64) -> Json {
+        if x.is_nan() {
+            Json::Null
+        } else {
+            Json::Num(x)
+        }
+    }
+    Json::obj()
+        .set("n_tasks", a.n_tasks)
+        .set("n_finished", a.n_finished)
+        .set("slo", num(a.slo))
+        .set("rt_slo", num(a.rt_slo))
+        .set("rt_count", a.rt_count)
+        .set("nrt_slo", num(a.nrt_slo))
+        .set("nrt_count", a.nrt_count)
+        .set("nrt_ttft", num(a.nrt_ttft))
+        .set("nrt_tpot", num(a.nrt_tpot))
+        .set("mean_completion_all", num(a.mean_completion_all))
+        .set("mean_completion_rt", num(a.mean_completion_rt))
+        .set("mean_completion_nrt", num(a.mean_completion_nrt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "22222".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("alpha"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.8333), "83.33%");
+        assert_eq!(pct(f64::NAN), "n/a");
+        assert_eq!(secs2(1.5), "1.50s");
+        assert_eq!(ms2(128.59), "128.59ms");
+    }
+}

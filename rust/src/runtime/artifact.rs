@@ -1,0 +1,174 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions recorded by the AOT pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelDims {
+    /// Elements in one task's KV slab: [L, 2, H, S, hd].
+    pub fn kv_slab_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// KV slab dims for a batch of `b` tasks.
+    pub fn kv_dims(&self, b: usize) -> Vec<usize> {
+        vec![b, self.n_layers, 2, self.n_heads, self.max_seq, self.head_dim]
+    }
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Prompt bucket (prefill) or batch size (decode).
+    pub size: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub seed: u64,
+    pub param_names: Vec<String>,
+    pub weights_path: PathBuf,
+    /// Prefill entries, ascending bucket.
+    pub prefill: Vec<ArtifactEntry>,
+    /// Decode entries, ascending batch size.
+    pub decode: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let m = j.get("model")?;
+        let dims = ModelDims {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            head_dim: m.get("head_dim")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+        };
+        let param_names = j
+            .get("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let entries = |key: &str, size_key: &str| -> Result<Vec<ArtifactEntry>> {
+            let mut out = Vec::new();
+            for e in j.get(key)?.as_arr()? {
+                out.push(ArtifactEntry {
+                    size: e.get(size_key)?.as_usize()?,
+                    path: dir.join(e.get("path")?.as_str()?),
+                });
+            }
+            if out.is_empty() {
+                bail!("manifest has no {key} entries");
+            }
+            if !out.windows(2).all(|w| w[0].size < w[1].size) {
+                bail!("manifest {key} entries not ascending");
+            }
+            Ok(out)
+        };
+        Ok(Manifest {
+            dims,
+            seed: j.get("seed")?.as_u64()?,
+            param_names,
+            weights_path: dir.join(j.get("weights")?.as_str()?),
+            prefill: entries("prefill", "bucket")?,
+            decode: entries("decode", "batch")?,
+        })
+    }
+
+    /// Smallest prefill bucket that fits a prompt of `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.prefill
+            .iter()
+            .map(|e| e.size)
+            .find(|&b| b >= len)
+            .with_context(|| format!("prompt of {len} tokens exceeds largest bucket"))
+    }
+
+    /// Smallest decode batch bucket that fits `n` tasks.
+    pub fn decode_bucket(&self, n: usize) -> Result<usize> {
+        self.decode
+            .iter()
+            .map(|e| e.size)
+            .find(|&b| b >= n)
+            .with_context(|| format!("batch of {n} exceeds largest decode bucket"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": {"vocab": 256, "d_model": 128, "n_layers": 4, "n_heads": 4,
+                  "head_dim": 32, "d_ff": 512, "max_seq": 128},
+        "seed": 42,
+        "param_names": ["tok_emb", "pos_emb"],
+        "weights": "weights.npz",
+        "prefill": [{"bucket": 16, "path": "prefill_p16.hlo.txt"},
+                    {"bucket": 64, "path": "prefill_p64.hlo.txt"}],
+        "decode": [{"batch": 1, "path": "decode_b1.hlo.txt"},
+                   {"batch": 4, "path": "decode_b4.hlo.txt"},
+                   {"batch": 16, "path": "decode_b16.hlo.txt"}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.dims.vocab, 256);
+        assert_eq!(m.dims.kv_slab_elems(), 4 * 2 * 4 * 128 * 32);
+        assert_eq!(m.dims.kv_dims(2), vec![2, 4, 2, 4, 128, 32]);
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.weights_path, Path::new("/a/weights.npz"));
+        assert_eq!(m.prefill.len(), 2);
+        assert_eq!(m.decode.len(), 3);
+        assert_eq!(m.decode[2].path, Path::new("/a/decode_b16.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.prefill_bucket(10).unwrap(), 16);
+        assert_eq!(m.prefill_bucket(16).unwrap(), 16);
+        assert_eq!(m.prefill_bucket(17).unwrap(), 64);
+        assert!(m.prefill_bucket(65).is_err());
+        assert_eq!(m.decode_bucket(1).unwrap(), 1);
+        assert_eq!(m.decode_bucket(3).unwrap(), 4);
+        assert_eq!(m.decode_bucket(16).unwrap(), 16);
+        assert!(m.decode_bucket(17).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}", Path::new("/a")).is_err());
+        let no_decode = SAMPLE.replace("\"decode\"", "\"dec0de\"");
+        assert!(Manifest::parse(&no_decode, Path::new("/a")).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! The serving loop: policy-agnostic event loop that drives any
+//! [`Policy`] against any [`DecodeEngine`] under any [`Clock`].
+//!
+//! This is the rust analogue of the paper's FastLLM integration: a
+//! request buffer fed by arrivals, a scheduler invoked at iteration
+//! boundaries, and a decode loop that executes the scheduler's steps.
+//! Arrival/completion events are delivered between engine steps —
+//! iteration-level interruption, exactly the granularity the paper's
+//! event queue (Alg. 4) operates at.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::pool::TaskPool;
+use crate::coordinator::scheduler::{Policy, Step};
+use crate::coordinator::task::{Task, TaskId, TaskState};
+use crate::engine::clock::Clock;
+use crate::engine::{DecodeEngine, StepOutcome};
+use crate::util::Micros;
+
+/// Outcome of a full serving run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Every task, with its complete timing record.
+    pub tasks: Vec<Task>,
+    /// Total engine steps executed (prefill + decode).
+    pub steps: u64,
+    pub decode_steps: u64,
+    pub prefill_steps: u64,
+    /// Time of the last event processed.
+    pub end_time: Micros,
+    /// Policy name (for reports).
+    pub policy: &'static str,
+}
+
+/// Streaming token callback: (task, token byte, timestamp). This is the
+/// paper's `tokenBuf` (Alg. 1): tokens are delivered to the client as
+/// they are generated, not at completion.
+pub type TokenSink = Box<dyn FnMut(TaskId, u8, Micros)>;
+
+/// The serving loop.
+pub struct Server<C: Clock> {
+    pool: TaskPool,
+    policy: Box<dyn Policy>,
+    engine: Box<dyn DecodeEngine>,
+    clock: C,
+    /// Future arrivals, sorted by arrival time.
+    arrivals: VecDeque<Task>,
+    steps: u64,
+    decode_steps: u64,
+    prefill_steps: u64,
+    token_sink: Option<TokenSink>,
+}
+
+impl<C: Clock> Server<C> {
+    /// Build a server over a pre-generated workload. Tasks must be sorted
+    /// by arrival time and have dense ids in arrival order.
+    pub fn new(
+        workload: Vec<Task>,
+        policy: Box<dyn Policy>,
+        engine: Box<dyn DecodeEngine>,
+        clock: C,
+    ) -> Self {
+        assert!(
+            workload.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "workload must be sorted by arrival"
+        );
+        Server {
+            pool: TaskPool::new(),
+            policy,
+            engine,
+            clock,
+            arrivals: workload.into(),
+            steps: 0,
+            decode_steps: 0,
+            prefill_steps: 0,
+            token_sink: None,
+        }
+    }
+
+    /// Attach a streaming token sink (the paper's `tokenBuf`): called
+    /// once per generated token, in generation order.
+    pub fn with_token_sink(mut self, sink: TokenSink) -> Self {
+        self.token_sink = Some(sink);
+        self
+    }
+
+    /// Deliver all arrivals due at or before `now`.
+    fn deliver_arrivals(&mut self, now: Micros) {
+        let mut ids: Vec<TaskId> = Vec::new();
+        while self.arrivals.front().map_or(false, |t| t.arrival <= now) {
+            let t = self.arrivals.pop_front().unwrap();
+            ids.push(t.id);
+            self.pool.insert(t);
+        }
+        if !ids.is_empty() {
+            self.policy.on_arrival(&mut self.pool, &ids, now);
+        }
+    }
+
+    /// Apply an engine step outcome: record tokens, detect completions.
+    fn apply_outcome(&mut self, outcome: StepOutcome, now: Micros) {
+        let mut completed: Vec<TaskId> = Vec::new();
+        for tok in outcome.tokens {
+            let t = self.pool.get_mut(tok.task);
+            if t.is_finished() {
+                continue;
+            }
+            t.generated.push(tok.token);
+            t.on_token(now);
+            if let Some(sink) = &mut self.token_sink {
+                sink(tok.task, tok.token, now);
+            }
+            if tok.eos && !t.is_finished() {
+                t.finish(now);
+            }
+            if t.is_finished() {
+                completed.push(tok.task);
+            }
+        }
+        if !completed.is_empty() {
+            for &id in &completed {
+                self.engine.release(id);
+            }
+            self.policy.on_completion(&mut self.pool, &completed, now);
+        }
+    }
+
+    /// Run until all tasks finish or `horizon` is reached. Tasks still
+    /// unfinished at the horizon keep their partial records (and count
+    /// as SLO violations in the metrics).
+    pub fn run(mut self, horizon: Micros) -> Result<RunReport> {
+        loop {
+            let now = self.clock.now();
+            if now >= horizon {
+                break;
+            }
+            self.deliver_arrivals(now);
+
+            let step = self.policy.next_step(&mut self.pool, now);
+            match step {
+                Step::Idle => {
+                    match self.arrivals.front().map(|t| t.arrival) {
+                        Some(next) => self.clock.advance_to(next.min(horizon)),
+                        None => break, // nothing running, nothing arriving
+                    }
+                }
+                Step::Prefill { task } => {
+                    self.steps += 1;
+                    self.prefill_steps += 1;
+                    let outcome = self.engine.prefill(&self.pool, task)?;
+                    self.clock.advance(outcome.duration);
+                    let end = self.clock.now();
+                    {
+                        let t = self.pool.get_mut(task);
+                        t.state = TaskState::Running;
+                        t.prefill_end = Some(end);
+                    }
+                    self.apply_outcome(outcome, end);
+                }
+                Step::Decode { tasks } => {
+                    assert!(!tasks.is_empty(), "policy returned empty decode batch");
+                    self.steps += 1;
+                    self.decode_steps += 1;
+                    let outcome = self.engine.decode(&self.pool, &tasks)?;
+                    self.clock.advance(outcome.duration);
+                    let end = self.clock.now();
+                    self.apply_outcome(outcome, end);
+                }
+            }
+        }
+
+        let end_time = self.clock.now();
+        Ok(RunReport {
+            policy: self.policy.name(),
+            tasks: self.pool.into_tasks(),
+            steps: self.steps,
+            decode_steps: self.decode_steps,
+            prefill_steps: self.prefill_steps,
+            end_time,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orca::OrcaPolicy;
+    use crate::coordinator::slice::SlicePolicy;
+    use crate::coordinator::task::TaskClass;
+    use crate::engine::clock::VirtualClock;
+    use crate::engine::latency::LatencyModel;
+    use crate::engine::sim::SimEngine;
+    use crate::util::secs;
+
+    fn mk_task(id: TaskId, class: TaskClass, arrival: Micros, out: u32) -> Task {
+        let u = if class.is_real_time() { 100.0 } else { 1.0 };
+        Task::new(id, class, arrival, 16, out, u)
+    }
+
+    #[test]
+    fn single_task_completes_under_orca() {
+        let workload = vec![mk_task(0, TaskClass::Voice, 0, 10)];
+        let server = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        let report = server.run(secs(60.0)).unwrap();
+        let t = &report.tasks[0];
+        assert!(t.is_finished());
+        assert_eq!(t.tokens_generated, 10);
+        // 1 prefill + 9 decodes
+        assert_eq!(report.prefill_steps, 1);
+        assert_eq!(report.decode_steps, 9);
+        // TPOT under Orca solo = l(1) = 18ms < 125ms SLO
+        assert!(t.slo_met());
+    }
+
+    #[test]
+    fn single_task_completes_under_slice() {
+        let workload = vec![mk_task(0, TaskClass::RealTime, 0, 10)];
+        let server = Server::new(
+            workload,
+            Box::new(SlicePolicy::with_defaults(LatencyModel::paper_calibrated())),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        let report = server.run(secs(60.0)).unwrap();
+        let t = &report.tasks[0];
+        assert!(t.is_finished());
+        assert!(t.slo_met(), "completion={:?}", t.completion_time());
+    }
+
+    #[test]
+    fn arrivals_delivered_in_time_order() {
+        let workload = vec![
+            mk_task(0, TaskClass::Voice, 0, 5),
+            mk_task(1, TaskClass::Voice, secs(0.5), 5),
+            mk_task(2, TaskClass::Voice, secs(1.0), 5),
+        ];
+        let server = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        let report = server.run(secs(60.0)).unwrap();
+        assert!(report.tasks.iter().all(|t| t.is_finished()));
+        // later arrivals must not get tokens before their arrival
+        for t in &report.tasks {
+            assert!(t.first_token.unwrap() >= t.arrival);
+        }
+    }
+
+    #[test]
+    fn horizon_cuts_off_unfinished_tasks() {
+        let workload = vec![mk_task(0, TaskClass::Voice, 0, 10_000)];
+        let server = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        let report = server.run(secs(2.0)).unwrap();
+        let t = &report.tasks[0];
+        assert!(!t.is_finished());
+        assert!(!t.slo_met());
+        assert!(report.end_time >= secs(2.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_workload_rejected() {
+        let workload = vec![
+            mk_task(0, TaskClass::Voice, secs(1.0), 5),
+            mk_task(1, TaskClass::Voice, 0, 5),
+        ];
+        let _ = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup,
+//! adaptive iteration count, mean/p50/p99 reporting. Used by the
+//! `benches/` binaries (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Samples;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Header matching [`BenchResult::report_line`].
+pub fn report_header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p99"
+    )
+}
+
+/// Run `f` repeatedly for ~`budget` after warmup and report timings.
+/// `f` should return something; it is black_box'ed to keep the work.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup: ~10% of budget, at least one call
+    let warmup_end = Instant::now() + budget / 10;
+    let mut warm_iters: u64 = 0;
+    loop {
+        black_box(f());
+        warm_iters += 1;
+        if Instant::now() >= warmup_end {
+            break;
+        }
+    }
+
+    // batched timing so very fast ops are measurable
+    let per_call_est = (budget.as_nanos() as f64 / 10.0) / warm_iters.max(1) as f64;
+    let batch = if per_call_est < 1_000.0 {
+        (1_000.0 / per_call_est.max(1.0)).ceil() as u64
+    } else {
+        1
+    };
+
+    let mut samples = Samples::new();
+    let mut iters = 0u64;
+    let end = Instant::now() + budget;
+    while Instant::now() < end {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(dt);
+        iters += batch;
+    }
+
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        p50_ns: samples.p50(),
+        p99_ns: samples.p99(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepy_op() {
+        let r = bench("sleep50us", Duration::from_millis(50), || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        assert!(r.mean_ns > 40_000.0, "mean {}", r.mean_ns);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.00s");
+    }
+}

@@ -1,0 +1,63 @@
+//! Tiny `log` facade backend (tracing-subscriber is unavailable offline).
+//!
+//! Level comes from `SLICE_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output goes to stderr so stdout stays machine-parseable for the
+//! experiment harnesses.
+
+use std::io::Write;
+use std::sync::Once;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("SLICE_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,50 @@
+//! Small self-contained substrates (no external crates are available in
+//! this offline environment beyond the `xla` closure): deterministic RNG,
+//! JSON, micro-bench timing helpers and a log facade backend.
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+/// Microseconds since an arbitrary epoch — the time unit used throughout
+/// the scheduler and simulator (integer math, no float drift).
+pub type Micros = u64;
+
+pub const MICROS_PER_MS: u64 = 1_000;
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+/// Convert milliseconds (possibly fractional) to [`Micros`].
+pub fn ms(v: f64) -> Micros {
+    (v * 1_000.0).round() as Micros
+}
+
+/// Convert seconds (possibly fractional) to [`Micros`].
+pub fn secs(v: f64) -> Micros {
+    (v * 1_000_000.0).round() as Micros
+}
+
+/// [`Micros`] to fractional milliseconds (for reporting).
+pub fn to_ms(v: Micros) -> f64 {
+    v as f64 / 1_000.0
+}
+
+/// [`Micros`] to fractional seconds (for reporting).
+pub fn to_secs(v: Micros) -> f64 {
+    v as f64 / 1_000_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions_round_trip() {
+        assert_eq!(ms(1.0), 1_000);
+        assert_eq!(ms(128.59), 128_590);
+        assert_eq!(secs(1.5), 1_500_000);
+        assert!((to_ms(128_590) - 128.59).abs() < 1e-9);
+        assert!((to_secs(1_500_000) - 1.5).abs() < 1e-12);
+    }
+}

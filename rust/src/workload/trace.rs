@@ -1,0 +1,135 @@
+//! Workload trace export/replay: freeze a generated workload to JSON so
+//! experiments are byte-reproducible across machines and so real traces
+//! can be substituted for the synthetic generator.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::task::{SloSpec, Task, TaskClass};
+use crate::util::json::Json;
+
+fn class_name(c: TaskClass) -> &'static str {
+    match c {
+        TaskClass::RealTime => "real_time",
+        TaskClass::Voice => "voice",
+        TaskClass::TextQa => "text_qa",
+    }
+}
+
+fn class_from_name(s: &str) -> Result<TaskClass> {
+    Ok(match s {
+        "real_time" => TaskClass::RealTime,
+        "voice" => TaskClass::Voice,
+        "text_qa" => TaskClass::TextQa,
+        other => anyhow::bail!("unknown task class '{other}'"),
+    })
+}
+
+/// Serialize a workload (pre-run task set) to JSON.
+pub fn to_json(tasks: &[Task]) -> Json {
+    let arr: Vec<Json> = tasks
+        .iter()
+        .map(|t| {
+            let mut j = Json::obj()
+                .set("id", t.id)
+                .set("class", class_name(t.class))
+                .set("arrival_us", t.arrival)
+                .set("prompt_len", t.prompt_len as u64)
+                .set("output_len", t.output_len as u64)
+                .set("utility", t.utility)
+                .set("ttft_slo_us", t.slo.ttft)
+                .set("tpot_slo_us", t.slo.tpot);
+            if let Some(d) = t.slo.deadline {
+                j = j.set("deadline_us", d);
+            }
+            if !t.prompt.is_empty() {
+                j = j.set("prompt", String::from_utf8_lossy(&t.prompt).into_owned());
+            }
+            j
+        })
+        .collect();
+    Json::obj().set("tasks", arr)
+}
+
+/// Parse a workload trace back into tasks (sorted by arrival, dense ids
+/// reassigned in arrival order).
+pub fn from_json(j: &Json) -> Result<Vec<Task>> {
+    let mut tasks = Vec::new();
+    for e in j.get("tasks")?.as_arr()? {
+        let class = class_from_name(e.get("class")?.as_str()?)?;
+        let mut t = Task::new(
+            e.get("id")?.as_u64()?,
+            class,
+            e.get("arrival_us")?.as_u64()?,
+            e.get("prompt_len")?.as_u64()? as u32,
+            e.get("output_len")?.as_u64()? as u32,
+            e.get("utility")?.as_f64()?,
+        );
+        t.slo = SloSpec {
+            ttft: e.get("ttft_slo_us")?.as_u64()?,
+            tpot: e.get("tpot_slo_us")?.as_u64()?,
+            deadline: match e.opt("deadline_us") {
+                Some(d) => Some(d.as_u64()?),
+                None => None,
+            },
+        };
+        if let Some(p) = e.opt("prompt") {
+            t.prompt = p.as_str()?.as_bytes().to_vec();
+        }
+        tasks.push(t);
+    }
+    tasks.sort_by_key(|t| t.arrival);
+    for (i, t) in tasks.iter_mut().enumerate() {
+        t.id = i as u64;
+    }
+    Ok(tasks)
+}
+
+/// Write a trace file.
+pub fn save(tasks: &[Task], path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(tasks).to_pretty())
+        .with_context(|| format!("writing trace {path:?}"))
+}
+
+/// Load a trace file.
+pub fn load(path: &Path) -> Result<Vec<Task>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path:?}"))?;
+    from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn round_trip_preserves_workload() {
+        let mut spec = WorkloadSpec::paper_mix(1.0, 0.7, 50, 23);
+        spec.with_prompt_bytes = true;
+        let tasks = spec.generate();
+        let j = to_json(&tasks);
+        let back = from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.len(), tasks.len());
+        for (a, b) in tasks.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.utility, b.utility);
+            assert_eq!(a.slo.tpot, b.slo.tpot);
+            assert_eq!(a.slo.deadline, b.slo.deadline);
+            assert_eq!(a.prompt, b.prompt);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_class() {
+        let doc = r#"{"tasks": [{"id": 0, "class": "warp", "arrival_us": 0,
+            "prompt_len": 8, "output_len": 8, "utility": 1,
+            "ttft_slo_us": 1, "tpot_slo_us": 1}]}"#;
+        assert!(from_json(&Json::parse(doc).unwrap()).is_err());
+    }
+}

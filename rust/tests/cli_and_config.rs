@@ -1,0 +1,144 @@
+//! CLI and config-file integration: exercise the installed binary the
+//! way a user would (config parsing, experiment subcommands, JSON
+//! output), using the sim engine only so no artifacts are required.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_slice-serve")
+}
+
+#[test]
+fn usage_prints_without_args() {
+    let out = Command::new(bin()).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("experiment"));
+}
+
+#[test]
+fn serve_sim_runs_and_reports() {
+    let out = Command::new(bin())
+        .args([
+            "serve", "--policy", "slice", "--engine", "sim", "--rate", "0.5",
+            "--n-tasks", "30", "--seed", "9",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("policy=SLICE"));
+    assert!(text.contains("SLO attainment"));
+}
+
+#[test]
+fn experiment_table2_emits_paper_rows() {
+    let out = Command::new(bin())
+        .args(["experiment", "table2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["Task A", "Task B", "Task C", "Orca", "FastServe", "SLICE"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+}
+
+#[test]
+fn experiment_writes_json_output() {
+    let dir = std::env::temp_dir().join("slice_serve_test_out");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fig1.json");
+    let out = Command::new(bin())
+        .args(["experiment", "fig1", "--out", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = slice_serve::util::json::Json::parse(&text).unwrap();
+    let rows = j.get("fig1").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 16);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn config_file_drives_serve() {
+    let dir = std::env::temp_dir().join("slice_serve_test_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.toml");
+    std::fs::write(
+        &path,
+        r#"
+[scheduler]
+policy = "orca"
+max_batch = 8
+
+[workload]
+arrival_rate = 0.4
+n_tasks = 20
+seed = 3
+"#,
+    )
+    .unwrap();
+    let out = Command::new(bin())
+        .args(["serve", "--config", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("policy=Orca"), "{text}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_experiment_fails_cleanly() {
+    let out = Command::new(bin())
+        .args(["experiment", "fig99"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown experiment"));
+}
+
+#[test]
+fn bad_flag_fails_cleanly() {
+    let out = Command::new(bin())
+        .args(["serve", "--rate", "not-a-number"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn trace_save_and_replay_round_trip() {
+    let dir = std::env::temp_dir().join("slice_serve_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("wl.json");
+    // record
+    let out = Command::new(bin())
+        .args([
+            "serve", "--engine", "sim", "--rate", "0.5", "--n-tasks", "15",
+            "--seed", "77", "--save-trace", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let first = String::from_utf8_lossy(&out.stdout).to_string();
+    // replay must reproduce the identical run
+    let out2 = Command::new(bin())
+        .args(["serve", "--engine", "sim", "--trace", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out2.status.success());
+    let second = String::from_utf8_lossy(&out2.stdout);
+    let tail = |s: &str| {
+        s.lines()
+            .filter(|l| l.contains("attainment") || l.contains("completion"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(tail(&first.replace(&format!("saved workload trace to {}\n", path.display()), "")), tail(&second));
+    std::fs::remove_file(&path).ok();
+}

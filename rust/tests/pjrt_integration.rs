@@ -1,0 +1,199 @@
+//! Integration tests against the real PJRT runtime and AOT artifacts.
+//!
+//! These tests require `artifacts/` (built by `make artifacts`); they
+//! skip gracefully when it is absent so `cargo test` works pre-build.
+//! The golden token sequences below were produced by the python L2
+//! reference (`compile.model.generate_kv`, seed 42) — matching them
+//! end-to-end proves the whole AOT chain (Pallas kernel → jax model →
+//! HLO text → PJRT execution → rust sampling) preserves numerics.
+
+use std::path::Path;
+
+use slice_serve::coordinator::pool::TaskPool;
+use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::pjrt::PjrtEngine;
+use slice_serve::engine::sampler::Sampler;
+use slice_serve::engine::DecodeEngine;
+use slice_serve::runtime::ModelRuntime;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping pjrt integration test: artifacts/ not built");
+        None
+    }
+}
+
+fn engine() -> Option<PjrtEngine> {
+    let runtime = ModelRuntime::load(artifacts()?).expect("artifacts load");
+    Some(PjrtEngine::new(runtime, Sampler::Greedy, 0))
+}
+
+fn task_with_prompt(id: u64, prompt: &str, out: u32) -> Task {
+    let mut t = Task::new(id, TaskClass::TextQa, 0, prompt.len() as u32, out, 1.0);
+    t.prompt = prompt.as_bytes().to_vec();
+    t
+}
+
+/// Greedily generate `n` tokens for one task through prefill + decode.
+fn generate(engine: &mut PjrtEngine, pool: &TaskPool, id: u64, n: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    let o = engine.prefill(pool, id).unwrap();
+    out.push(o.tokens[0].token);
+    while out.len() < n {
+        let o = engine.decode(pool, &[id]).unwrap();
+        out.push(o.tokens[0].token);
+    }
+    out
+}
+
+/// Golden sequences from the python reference (seed 42):
+///   generate_kv(cfg, params, prompt, 6) for each prompt.
+const GOLDEN: &[(&str, [u8; 6])] = &[
+    ("hello edge world", [100, 100, 100, 100, 100, 100]),
+    ("cmd: rotate arm to 45deg", [103, 103, 103, 103, 103, 103]),
+    ("Q: what is the status of dock", [107, 107, 107, 107, 107, 107]),
+    ("a", [97, 97, 97, 97, 97, 97]),
+];
+
+#[test]
+fn golden_generation_matches_python_reference() {
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    for (i, (prompt, _)) in GOLDEN.iter().enumerate() {
+        pool.insert(task_with_prompt(i as u64, prompt, 6));
+    }
+    for (i, (prompt, expect)) in GOLDEN.iter().enumerate() {
+        let got = generate(&mut eng, &pool, i as u64, 6);
+        assert_eq!(&got[..], &expect[..], "prompt {prompt:?}");
+    }
+}
+
+#[test]
+fn batched_decode_matches_solo_decode() {
+    // Decoding two tasks in one batch must produce exactly the same
+    // tokens as decoding each alone (batch regrouping correctness —
+    // the property SLICE's mask matrix relies on).
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    pool.insert(task_with_prompt(0, "hello edge world", 8));
+    pool.insert(task_with_prompt(1, "cmd: rotate arm to 45deg", 8));
+    pool.insert(task_with_prompt(2, "hello edge world", 8));
+    pool.insert(task_with_prompt(3, "cmd: rotate arm to 45deg", 8));
+
+    // solo path
+    let solo0 = generate(&mut eng, &pool, 0, 5);
+    let solo1 = generate(&mut eng, &pool, 1, 5);
+
+    // batched path for the twin tasks 2,3
+    let mut out2 = vec![eng.prefill(&pool, 2).unwrap().tokens[0].token];
+    let mut out3 = vec![eng.prefill(&pool, 3).unwrap().tokens[0].token];
+    for _ in 0..4 {
+        let o = eng.decode(&pool, &[2, 3]).unwrap();
+        out2.push(o.tokens[0].token);
+        out3.push(o.tokens[1].token);
+    }
+    assert_eq!(solo0, out2, "task decoded in batch differs from solo");
+    assert_eq!(solo1, out3, "task decoded in batch differs from solo");
+}
+
+#[test]
+fn bucket_padding_is_inert() {
+    // A batch of 3 runs in the 4-bucket with one padding row; results
+    // must match the same tasks run in exact-fit buckets.
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    for i in 0..6u64 {
+        pool.insert(task_with_prompt(i, "bucket padding test prompt", 8));
+    }
+    // exact-fit: decode tasks {0,1} in the 2-bucket
+    let mut exact = Vec::new();
+    let _ = eng.prefill(&pool, 0).unwrap();
+    let _ = eng.prefill(&pool, 1).unwrap();
+    for _ in 0..3 {
+        let o = eng.decode(&pool, &[0, 1]).unwrap();
+        exact.push((o.tokens[0].token, o.tokens[1].token));
+    }
+    // padded: decode tasks {2,3,4} in the 4-bucket; compare twins 2,3
+    let _ = eng.prefill(&pool, 2).unwrap();
+    let _ = eng.prefill(&pool, 3).unwrap();
+    let _ = eng.prefill(&pool, 4).unwrap();
+    let mut padded = Vec::new();
+    for _ in 0..3 {
+        let o = eng.decode(&pool, &[2, 3, 4]).unwrap();
+        padded.push((o.tokens[0].token, o.tokens[1].token));
+    }
+    assert_eq!(exact, padded, "padding row affected real outputs");
+}
+
+#[test]
+fn kv_cache_length_advances() {
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    pool.insert(task_with_prompt(0, "cache length probe", 8));
+    assert_eq!(eng.cached_len(0), None);
+    let _ = eng.prefill(&pool, 0).unwrap();
+    assert_eq!(eng.cached_len(0), Some(18)); // prompt length
+    let _ = eng.decode(&pool, &[0]).unwrap();
+    assert_eq!(eng.cached_len(0), Some(19));
+    eng.release(0);
+    assert_eq!(eng.cached_len(0), None);
+}
+
+#[test]
+fn decode_before_prefill_is_an_error() {
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    pool.insert(task_with_prompt(0, "never prefilled", 8));
+    assert!(eng.decode(&pool, &[0]).is_err());
+}
+
+#[test]
+fn context_overflow_is_detected() {
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    // 60-token prompt in the 64 bucket; max_seq 128 -> ~66 decode steps
+    let prompt = "x".repeat(60);
+    pool.insert(task_with_prompt(0, &prompt, 200));
+    let _ = eng.prefill(&pool, 0).unwrap();
+    let mut saw_eos = false;
+    for _ in 0..80 {
+        match eng.decode(&pool, &[0]) {
+            Ok(o) => {
+                if o.tokens[0].eos {
+                    saw_eos = true;
+                    break;
+                }
+            }
+            Err(_) => {
+                saw_eos = true; // explicit overflow error also acceptable
+                break;
+            }
+        }
+    }
+    assert!(saw_eos, "context overflow neither signalled eos nor errored");
+}
+
+#[test]
+fn kv_memory_accounting_tracks_peak() {
+    let Some(mut eng) = engine() else { return };
+    let mut pool = TaskPool::new();
+    for i in 0..3u64 {
+        pool.insert(task_with_prompt(i, "memory accounting probe", 4));
+    }
+    assert_eq!(eng.peak_kv_bytes(), 0);
+    let _ = eng.prefill(&pool, 0).unwrap();
+    let _ = eng.prefill(&pool, 1).unwrap();
+    let slab_bytes = 4 * 4 * 2 * 4 * 128 * 32 / 4; // dims: L=4,2,H=4,S=128,hd=32 f32
+    let _ = slab_bytes;
+    let two = eng.peak_kv_bytes();
+    assert!(two > 0);
+    eng.release(0);
+    eng.release(1);
+    // peak is a high-water mark: releasing does not lower it
+    assert_eq!(eng.peak_kv_bytes(), two);
+    let _ = eng.prefill(&pool, 2).unwrap();
+    assert_eq!(eng.peak_kv_bytes(), two, "peak stays at 2 slots");
+}

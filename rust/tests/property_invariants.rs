@@ -1,0 +1,277 @@
+//! Property-based tests over the coordinator's core invariants
+//! (the proptest crate is unavailable offline; properties are driven by
+//! the in-repo deterministic RNG with many random cases per property,
+//! and every failure prints the case's seed for replay).
+
+use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
+use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
+use slice_serve::coordinator::task::{SloSpec, Task, TaskClass};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::util::json::Json;
+use slice_serve::util::rng::Rng;
+use slice_serve::workload::trace;
+
+const CASES: u64 = 300;
+
+fn random_candidates(rng: &mut Rng, n: usize) -> Vec<Candidate> {
+    (0..n)
+        .map(|i| Candidate {
+            id: i as u64,
+            utility: rng.range_u64(1, 1000) as f64 / 10.0,
+            tpot: rng.range_u64(40, 400) * 1_000,
+        })
+        .collect()
+}
+
+/// Selection admits a feasible set: the Eq. 7 period of the admitted
+/// quotas is always under the cycle cap, and one more admission from the
+/// rejected pool would break it (greedy maximality at the stop point).
+#[test]
+fn prop_selection_feasible_and_maximal_at_stop() {
+    let lat = LatencyModel::paper_calibrated();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = rng.range_usize(1, 40);
+        let cands = random_candidates(&mut rng, n);
+        let sel = select_tasks(&cands, &lat, CYCLE_CAP);
+
+        let mut quotas: Vec<u32> = sel.selected.iter().map(|&(_, q)| q).collect();
+        quotas.sort_unstable_by(|a, b| b.cmp(a));
+        let period = period_eq7(&quotas, &lat);
+        assert!(period < CYCLE_CAP, "seed {seed}: period {period} >= cap");
+
+        // admitted + rejected partition the candidates
+        assert_eq!(sel.selected.len() + sel.rejected.len(), n, "seed {seed}");
+    }
+}
+
+/// The mask matrix conserves tokens: column batch sizes sum to the sum
+/// of quotas, and Eq. 7 equals the exact column sum.
+#[test]
+fn prop_mask_token_conservation_and_eq7() {
+    let lat = LatencyModel::paper_calibrated();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1_000_000 + seed);
+        let n = rng.range_usize(1, 24);
+        let rows: Vec<(u64, u32)> =
+            (0..n).map(|i| (i as u64, rng.range_u64(1, 25) as u32)).collect();
+        let quota_sum: u64 = rows.iter().map(|&(_, v)| v as u64).sum();
+
+        let mask = DecodeMask::build(rows.clone());
+        let col_sum: u64 = (0..mask.columns()).map(|j| mask.batch_len(j) as u64).sum();
+        assert_eq!(col_sum, quota_sum, "seed {seed}");
+        assert_eq!(mask.tokens_per_cycle(), quota_sum, "seed {seed}");
+
+        let mut quotas: Vec<u32> = rows.iter().map(|&(_, v)| v).collect();
+        quotas.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(
+            mask.period_exact(&lat),
+            period_eq7(&quotas, &lat),
+            "seed {seed}: Eq.7 mismatch"
+        );
+    }
+}
+
+/// Every task appears in exactly its quota's worth of columns, and
+/// column membership is monotone (if in column j, also in all j' < j).
+#[test]
+fn prop_mask_row_membership() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2_000_000 + seed);
+        let n = rng.range_usize(1, 16);
+        let rows: Vec<(u64, u32)> =
+            (0..n).map(|i| (i as u64, rng.range_u64(1, 20) as u32)).collect();
+        let mask = DecodeMask::build(rows.clone());
+        for &(id, v) in &rows {
+            let mut appearances = 0;
+            let mut last_in = true;
+            for j in 0..mask.columns() {
+                let in_col = mask.column_batch(j).iter().any(|&(x, _)| x == id);
+                if in_col {
+                    assert!(last_in, "seed {seed}: non-prefix membership for {id}");
+                    appearances += 1;
+                } else {
+                    last_in = false;
+                }
+            }
+            assert_eq!(appearances, v, "seed {seed}: task {id} quota");
+        }
+    }
+}
+
+/// Selection prefers higher utility rates: any rejected candidate that
+/// was skipped *before* the stop point must have a utility rate no
+/// higher than every admitted candidate (greedy order property).
+#[test]
+fn prop_selection_respects_utility_rate_order() {
+    let lat = LatencyModel::paper_calibrated();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3_000_000 + seed);
+        let n = rng.range_usize(2, 30);
+        let cands = random_candidates(&mut rng, n);
+        let sel = select_tasks(&cands, &lat, CYCLE_CAP);
+        if sel.selected.is_empty() || sel.rejected.is_empty() {
+            continue;
+        }
+        let rate_of = |id: u64| {
+            cands.iter().find(|c| c.id == id).unwrap().utility_rate()
+        };
+        let min_admitted = sel
+            .selected
+            .iter()
+            .map(|&(id, _)| rate_of(id))
+            .fold(f64::INFINITY, f64::min);
+        // every admitted candidate has rate >= every post-stop rejected
+        // candidate except possibly the single stop-triggering one
+        let mut violations = 0;
+        for &id in &sel.rejected {
+            if rate_of(id) > min_admitted + 1e-12 {
+                violations += 1;
+            }
+        }
+        assert!(
+            violations <= 1,
+            "seed {seed}: {violations} rejected candidates outrank admitted ones"
+        );
+    }
+}
+
+/// Task SLO accounting is consistent: slo_met implies is_finished, and
+/// for real-time tasks equals the deadline check.
+#[test]
+fn prop_task_slo_consistency() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4_000_000 + seed);
+        let class = match rng.range_u64(0, 2) {
+            0 => TaskClass::RealTime,
+            1 => TaskClass::Voice,
+            _ => TaskClass::TextQa,
+        };
+        let out = rng.range_u64(1, 30) as u32;
+        let mut t = Task::new(0, class, 0, 8, out, 1.0);
+        let mut now = rng.range_u64(1_000, 500_000);
+        let n_tokens = rng.range_u64(0, out as u64);
+        for _ in 0..n_tokens {
+            t.on_token(now);
+            now += rng.range_u64(10_000, 300_000);
+        }
+        if t.slo_met() {
+            assert!(t.is_finished(), "seed {seed}: slo_met but unfinished");
+        }
+        if let Some(dm) = t.deadline_met() {
+            assert_eq!(dm, t.slo_met(), "seed {seed}: RT slo != deadline check");
+        }
+    }
+}
+
+/// JSON parser round-trips arbitrary generated documents.
+#[test]
+fn prop_json_round_trip_fuzz() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range_u64(0, 3) } else { rng.range_u64(0, 5) } {
+            0 => Json::Num((rng.range_u64(0, 1_000_000) as f64) / 8.0),
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Str(
+                (0..rng.range_usize(0, 12))
+                    .map(|_| {
+                        let c = rng.range_u64(32, 126) as u8 as char;
+                        c
+                    })
+                    .collect(),
+            ),
+            3 => Json::Null,
+            4 => Json::Arr(
+                (0..rng.range_usize(0, 4))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut obj = Json::obj();
+                for i in 0..rng.range_usize(0, 4) {
+                    obj = obj.set(&format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5_000_000 + seed);
+        let v = gen_value(&mut rng, 3);
+        for text in [v.to_string(), v.to_pretty()] {
+            let back = Json::parse(&text).unwrap_or_else(|e| {
+                panic!("seed {seed}: parse failed: {e}\n{text}")
+            });
+            assert_eq!(back, v, "seed {seed}");
+        }
+    }
+}
+
+/// Workload traces round-trip arbitrary SLO combinations.
+#[test]
+fn prop_trace_round_trip_fuzz() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(6_000_000 + seed);
+        let n = rng.range_usize(1, 30);
+        let mut tasks = Vec::new();
+        let mut arrival = 0u64;
+        for i in 0..n {
+            arrival += rng.range_u64(0, 2_000_000);
+            let class = match rng.range_u64(0, 2) {
+                0 => TaskClass::RealTime,
+                1 => TaskClass::Voice,
+                _ => TaskClass::TextQa,
+            };
+            let mut t = Task::new(
+                i as u64,
+                class,
+                arrival,
+                rng.range_u64(1, 64) as u32,
+                rng.range_u64(1, 300) as u32,
+                rng.range_u64(1, 100) as f64,
+            );
+            t.slo = SloSpec {
+                ttft: rng.range_u64(100_000, 5_000_000),
+                tpot: rng.range_u64(20_000, 500_000),
+                deadline: if rng.chance(0.5) {
+                    Some(rng.range_u64(500_000, 5_000_000))
+                } else {
+                    None
+                },
+            };
+            tasks.push(t);
+        }
+        let j = trace::to_json(&tasks);
+        let back = trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), tasks.len(), "seed {seed}");
+        for (a, b) in tasks.iter().zip(&back) {
+            assert_eq!(a.arrival, b.arrival, "seed {seed}");
+            assert_eq!(a.slo.tpot, b.slo.tpot, "seed {seed}");
+            assert_eq!(a.slo.deadline, b.slo.deadline, "seed {seed}");
+        }
+    }
+}
+
+/// Latency-model interpolation is monotone for monotone knot sets.
+#[test]
+fn prop_latency_interpolation_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7_000_000 + seed);
+        let n = rng.range_usize(2, 8);
+        let mut points = Vec::new();
+        let mut b = 0u32;
+        let mut lat = 1_000u64;
+        for _ in 0..n {
+            b += rng.range_u64(1, 6) as u32;
+            lat += rng.range_u64(0, 30_000);
+            points.push((b, lat));
+        }
+        let max_b = points.last().unwrap().0;
+        let model = LatencyModel::from_points(points, vec![], max_b);
+        let mut prev = 0;
+        for q in 1..=max_b + 4 {
+            let v = model.decode(q);
+            assert!(v >= prev, "seed {seed}: non-monotone at b={q}");
+            prev = v;
+        }
+    }
+}
