@@ -5,17 +5,13 @@
 //!
 //! Run: cargo bench --bench engine_hot_path
 
-use std::path::Path;
 use std::time::Duration;
 
 use slice_serve::coordinator::pool::TaskPool;
 use slice_serve::coordinator::task::{Task, TaskClass};
-use slice_serve::engine::pjrt::PjrtEngine;
-use slice_serve::engine::sampler::Sampler;
 use slice_serve::engine::sim::SimEngine;
 use slice_serve::engine::DecodeEngine;
 use slice_serve::metrics::Attainment;
-use slice_serve::runtime::ModelRuntime;
 use slice_serve::util::bench::{bench, report_header};
 
 fn sim_pool(n: usize) -> TaskPool {
@@ -55,8 +51,20 @@ fn main() {
     });
     println!("{}", r.report_line());
 
-    // real PJRT decode per bucket (Fig. 1 as a bench) — requires artifacts
-    let artifacts = Path::new("artifacts");
+    #[cfg(feature = "pjrt")]
+    pjrt_decode_bench();
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt benches skipped: built without --features pjrt)");
+}
+
+/// Real PJRT decode per bucket (Fig. 1 as a bench) — requires artifacts.
+#[cfg(feature = "pjrt")]
+fn pjrt_decode_bench() {
+    use slice_serve::engine::pjrt::PjrtEngine;
+    use slice_serve::engine::sampler::Sampler;
+    use slice_serve::runtime::ModelRuntime;
+
+    let artifacts = std::path::Path::new("artifacts");
     if artifacts.join("manifest.json").exists() {
         let runtime = ModelRuntime::load(artifacts).expect("loading artifacts");
         let buckets = runtime.decode_buckets();
@@ -106,6 +114,9 @@ fn main() {
             );
         }
     } else {
-        println!("(pjrt benches skipped: artifacts/ not built — run `make artifacts`)");
+        println!(
+            "(pjrt benches skipped: artifacts/ not built — run \
+             `python3 -m compile.aot --out-dir ../artifacts` from python/)"
+        );
     }
 }

@@ -11,6 +11,7 @@
 
 pub mod clock;
 pub mod latency;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sampler;
 pub mod sim;

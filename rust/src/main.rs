@@ -14,16 +14,24 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use slice_serve::config::{EngineKind, PolicyKind, ServeConfig};
+#[cfg(feature = "pjrt")]
 use slice_serve::coordinator::task::TaskClass;
-use slice_serve::engine::clock::{VirtualClock, WallClock};
+use slice_serve::engine::clock::VirtualClock;
+#[cfg(feature = "pjrt")]
+use slice_serve::engine::clock::WallClock;
+#[cfg(feature = "pjrt")]
 use slice_serve::engine::latency::LatencyModel;
+#[cfg(feature = "pjrt")]
 use slice_serve::engine::pjrt::PjrtEngine;
+#[cfg(feature = "pjrt")]
 use slice_serve::engine::sampler::Sampler;
 use slice_serve::engine::sim::SimEngine;
+#[cfg(feature = "pjrt")]
 use slice_serve::engine::DecodeEngine;
 use slice_serve::experiments;
 use slice_serve::metrics::report::{pct, secs2, Table};
 use slice_serve::metrics::Attainment;
+#[cfg(feature = "pjrt")]
 use slice_serve::runtime::ModelRuntime;
 use slice_serve::server::Server;
 use slice_serve::util::json::Json;
@@ -165,6 +173,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )
             .run(horizon)?
         }
+        #[cfg(feature = "pjrt")]
         EngineKind::Pjrt(dir) => {
             // context-fitted workload with real prompt bytes
             let workload = load_workload(true)?;
@@ -173,6 +182,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let engine = PjrtEngine::new(runtime, Sampler::Greedy, cfg.seed);
             Server::new(workload, policy, Box::new(engine), WallClock::new()).run(horizon)?
         }
+        #[cfg(not(feature = "pjrt"))]
+        EngineKind::Pjrt(_) => bail!(
+            "engine 'pjrt' is not compiled into this binary; rebuild with \
+             `cargo build --release --features pjrt`"
+        ),
     };
 
     let a = Attainment::compute(&report.tasks);
@@ -234,6 +248,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 /// Measure l(b) on the real engine (Fig. 1 measurement + calibration).
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
     let reps = args.flag_u64("reps")?.unwrap_or(5) as usize;
@@ -283,6 +298,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
     let runtime = ModelRuntime::load(&dir)?;
@@ -301,14 +317,43 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Sim-only builds keep the subcommands but point at the pjrt feature.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    bail!(
+        "'calibrate' needs the real engine, which is not compiled into this \
+         binary; rebuild with `cargo build --release --features pjrt`"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    bail!(
+        "'info' inspects PJRT artifacts, which this binary cannot load; \
+         rebuild with `cargo build --release --features pjrt`"
+    )
+}
+
+/// Exit code for argument errors (matches common CLI convention).
+const EXIT_USAGE: u8 = 2;
+
 fn main() -> ExitCode {
     logger::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `--help` anywhere (or a bare `help` command, or no arguments at
+    // all) prints usage and exits 0; malformed arguments exit 2.
+    if argv.is_empty()
+        || argv.iter().any(|a| a == "--help" || a == "-h")
+        || argv[0] == "help"
+    {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
     let args = match Args::parse(&argv) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
-            return ExitCode::FAILURE;
+            return ExitCode::from(EXIT_USAGE);
         }
     };
     let cmd = args.positional.first().map(String::as_str);
@@ -317,9 +362,14 @@ fn main() -> ExitCode {
         Some("experiment") => cmd_experiment(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("info") => cmd_info(&args),
-        _ => {
-            println!("{USAGE}");
-            return ExitCode::SUCCESS;
+        Some(other) => {
+            eprintln!("error: unknown command '{other}'\n\n{USAGE}");
+            return ExitCode::from(EXIT_USAGE);
+        }
+        None => {
+            // flags only, no subcommand
+            eprintln!("error: no command given\n\n{USAGE}");
+            return ExitCode::from(EXIT_USAGE);
         }
     };
     match result {

@@ -1,193 +1,18 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them.
+//! Model runtime layer.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** files
-//! produced by `python/compile/aot.py` are parsed with
-//! `HloModuleProto::from_text_file` (text is the id-safe interchange
-//! format — see aot.py), compiled once per entry point at startup, and
-//! executed from the serving hot path with zero python involvement.
+//! * [`artifact`] — the AOT artifact manifest (pure parsing, always
+//!   compiled; the contract between `python/compile/aot.py` and rust).
+//! * `model` (feature `pjrt`) — the PJRT bridge that compiles and
+//!   executes the HLO artifacts via the `xla` crate. Gated so the
+//!   default build is fully offline; build with `--features pjrt` (and
+//!   the real closure in `third_party/xla`) for hardware runs.
 
 pub mod artifact;
 
-use std::path::Path;
-
-use anyhow::{Context, Result};
-use xla::{ElementType, FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
-
 pub use artifact::{ArtifactEntry, Manifest, ModelDims};
 
-/// A loaded model: PJRT client + compiled executables + weights.
-pub struct ModelRuntime {
-    client: PjRtClient,
-    pub manifest: Manifest,
-    /// Weights as literals, positional order = manifest.param_names.
-    weights: Vec<Literal>,
-    /// (bucket, executable), ascending bucket.
-    prefill_exes: Vec<(usize, PjRtLoadedExecutable)>,
-    /// (batch, executable), ascending batch.
-    decode_exes: Vec<(usize, PjRtLoadedExecutable)>,
-}
+#[cfg(feature = "pjrt")]
+mod model;
 
-/// Output of a prefill call.
-pub struct PrefillOut {
-    /// Next-token logits, length = vocab.
-    pub logits: Vec<f32>,
-    /// The task's KV slab, length = dims.kv_slab_elems().
-    pub kv: Vec<f32>,
-}
-
-/// Output of a decode call at batch bucket `b`.
-pub struct DecodeOut {
-    /// Logits for all bucket rows, row-major [b, vocab].
-    pub logits: Vec<f32>,
-    /// Updated KV slabs, row-major [b, slab].
-    pub kv: Vec<f32>,
-}
-
-impl ModelRuntime {
-    /// Load artifacts from a directory (manifest.json + *.hlo.txt +
-    /// weights.npz), compiling every entry point on the CPU PJRT client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-
-        // Load weights.npz in manifest order.
-        let named: Vec<(String, Literal)> =
-            Literal::read_npz(&manifest.weights_path, &())
-                .with_context(|| format!("reading {:?}", manifest.weights_path))?;
-        let mut weights = Vec::with_capacity(manifest.param_names.len());
-        for name in &manifest.param_names {
-            let lit = named
-                .iter()
-                .find(|(n, _)| n == name)
-                .map(|(_, l)| l.clone())
-                .with_context(|| format!("weights.npz missing '{name}'"))?;
-            weights.push(lit);
-        }
-
-        let compile = |entry: &ArtifactEntry| -> Result<PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(&entry.path)
-                .with_context(|| format!("parsing {:?}", entry.path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {:?}", entry.path))
-        };
-
-        let mut prefill_exes = Vec::new();
-        for e in &manifest.prefill {
-            prefill_exes.push((e.size, compile(e)?));
-        }
-        let mut decode_exes = Vec::new();
-        for e in &manifest.decode {
-            decode_exes.push((e.size, compile(e)?));
-        }
-
-        log::info!(
-            "loaded model runtime: {} prefill + {} decode executables, {} params",
-            prefill_exes.len(),
-            decode_exes.len(),
-            weights.len()
-        );
-        Ok(ModelRuntime { client, manifest, weights, prefill_exes, decode_exes })
-    }
-
-    pub fn dims(&self) -> ModelDims {
-        self.manifest.dims
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run prefill for one prompt. `tokens` must already be padded to a
-    /// bucket; `len` is the true prompt length.
-    pub fn prefill(&self, tokens_padded: &[i32], len: i32) -> Result<PrefillOut> {
-        let bucket = tokens_padded.len();
-        let exe = &self
-            .prefill_exes
-            .iter()
-            .find(|(b, _)| *b == bucket)
-            .with_context(|| format!("no prefill executable for bucket {bucket}"))?
-            .1;
-
-        let tokens = Literal::vec1(tokens_padded).reshape(&[1, bucket as i64])?;
-        let len_lit = Literal::scalar(len);
-        let mut args: Vec<&Literal> = Vec::with_capacity(2 + self.weights.len());
-        args.push(&tokens);
-        args.push(&len_lit);
-        args.extend(self.weights.iter());
-
-        let result = exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let (logits, kv) = result.to_tuple2()?;
-        Ok(PrefillOut { logits: logits.to_vec::<f32>()?, kv: kv.to_vec::<f32>()? })
-    }
-
-    /// Run one decode iteration at batch bucket `b = lens.len()`.
-    /// `kv` is the stacked slabs, row-major [b, slab]. Rows beyond the
-    /// real batch should be padding with `lens = 1`.
-    pub fn decode(&self, tokens: &[i32], lens: &[i32], kv: &[f32]) -> Result<DecodeOut> {
-        let b = tokens.len();
-        let dims = self.manifest.dims;
-        let mut out = DecodeOut {
-            logits: vec![0.0; b * dims.vocab],
-            kv: vec![0.0; b * dims.kv_slab_elems()],
-        };
-        let (l, k) = (&mut out.logits as *mut Vec<f32>, &mut out.kv as *mut Vec<f32>);
-        // safe: decode_into only writes through the two slices
-        unsafe { self.decode_into(tokens, lens, kv, &mut *l, &mut *k)? };
-        Ok(out)
-    }
-
-    /// Allocation-free variant of [`Self::decode`]: results are copied
-    /// straight from the result literal into caller-owned scratch
-    /// (`logits_out`: [b, vocab], `kv_out`: [b, slab]) — the serving hot
-    /// path reuses these buffers across steps (EXPERIMENTS.md §Perf
-    /// iteration 2).
-    pub fn decode_into(
-        &self,
-        tokens: &[i32],
-        lens: &[i32],
-        kv: &[f32],
-        logits_out: &mut [f32],
-        kv_out: &mut [f32],
-    ) -> Result<()> {
-        let b = tokens.len();
-        assert_eq!(lens.len(), b);
-        let dims = self.manifest.dims;
-        assert_eq!(kv.len(), b * dims.kv_slab_elems(), "kv stack size mismatch");
-        assert_eq!(logits_out.len(), b * dims.vocab);
-        assert_eq!(kv_out.len(), kv.len());
-        let exe = &self
-            .decode_exes
-            .iter()
-            .find(|(bb, _)| *bb == b)
-            .with_context(|| format!("no decode executable for batch {b}"))?
-            .1;
-
-        let tokens_lit = Literal::vec1(tokens);
-        let lens_lit = Literal::vec1(lens);
-        let kv_dims = dims.kv_dims(b);
-        let kv_bytes = unsafe {
-            std::slice::from_raw_parts(kv.as_ptr() as *const u8, kv.len() * 4)
-        };
-        let kv_lit =
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, &kv_dims, kv_bytes)?;
-
-        let mut args: Vec<&Literal> = Vec::with_capacity(3 + self.weights.len());
-        args.push(&tokens_lit);
-        args.push(&lens_lit);
-        args.push(&kv_lit);
-        args.extend(self.weights.iter());
-
-        let result = exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let (logits, kv_new) = result.to_tuple2()?;
-        logits.copy_raw_to(logits_out)?;
-        kv_new.copy_raw_to(kv_out)?;
-        Ok(())
-    }
-
-    /// Available decode batch buckets (ascending).
-    pub fn decode_buckets(&self) -> Vec<usize> {
-        self.decode_exes.iter().map(|&(b, _)| b).collect()
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use model::{DecodeOut, ModelRuntime, PrefillOut};

@@ -1,6 +1,15 @@
-//! Small self-contained substrates (no external crates are available in
-//! this offline environment beyond the `xla` closure): deterministic RNG,
-//! JSON, micro-bench timing helpers and a log facade backend.
+//! Small self-contained substrates: deterministic RNG, JSON, summary
+//! statistics, micro-bench timing helpers and a log facade backend.
+//!
+//! Dependency policy: the default build is fully offline. The only
+//! dependencies are the vendored `anyhow`/`log` **API shims** under
+//! `vendor/` (kept so source files read like standard rust and can move
+//! to the real crates unchanged), plus the optional `xla` PJRT closure
+//! at `third_party/xla` behind the `pjrt` cargo feature (an API stub by
+//! default — see third_party/xla/README.md). Everything else a serving
+//! stack normally pulls from crates.io (rand, serde_json, toml,
+//! criterion, proptest) is reimplemented minimally in this module tree
+//! or `config::toml`.
 
 pub mod bench;
 pub mod json;

@@ -198,4 +198,52 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
     }
+
+    #[test]
+    fn shuffle_is_deterministic_per_seed() {
+        let shuffled = |seed: u64| {
+            let mut xs: Vec<u32> = (0..32).collect();
+            Rng::new(seed).shuffle(&mut xs);
+            xs
+        };
+        assert_eq!(shuffled(23), shuffled(23));
+        assert_ne!(shuffled(23), shuffled(24));
+    }
+
+    #[test]
+    fn clone_preserves_stream() {
+        let mut a = Rng::new(99);
+        let _ = a.next_u64(); // advance past the seed state
+        let mut b = a.clone();
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_single_point_is_constant() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(r.range_u64(7, 7), 7);
+            assert_eq!(r.range_usize(0, 0), 0);
+        }
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut r = Rng::new(31);
+        for _ in 0..1_000 {
+            assert!(!r.chance(0.0));
+            assert!(r.chance(1.0));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        // distribution sanity: uniform [0,1) sample mean ~ 0.5
+        let mut r = Rng::new(37);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
 }

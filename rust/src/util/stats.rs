@@ -126,4 +126,51 @@ mod tests {
         }
         assert_eq!(s.stddev(), 0.0);
     }
+
+    #[test]
+    fn single_element_is_every_quantile() {
+        let mut s = Samples::new();
+        s.push(42.0);
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+        assert_eq!(s.mean(), 42.0);
+        assert_eq!(s.stddev(), 0.0);
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), 42.0, "q={q}");
+        }
+        assert_eq!(s.min(), 42.0);
+        assert_eq!(s.max(), 42.0);
+    }
+
+    #[test]
+    fn out_of_range_quantiles_clamp() {
+        let mut s = Samples::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.quantile(-0.5), 1.0);
+        assert_eq!(s.quantile(1.5), 3.0);
+    }
+
+    #[test]
+    fn quantile_stays_correct_after_more_pushes() {
+        // pushing after a quantile call must re-sort, not reuse stale order
+        let mut s = Samples::new();
+        s.push(10.0);
+        s.push(20.0);
+        assert_eq!(s.p50(), 15.0);
+        s.push(0.0);
+        assert_eq!(s.p50(), 10.0);
+        assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn stddev_matches_known_sample() {
+        // sample stddev of [2,4,4,4,5,5,7,9] (n-1 denominator) = 2.138...
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.stddev() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
 }

@@ -18,6 +18,26 @@ fn usage_prints_without_args() {
 }
 
 #[test]
+fn help_exits_zero_bad_args_exit_two() {
+    // --help (anywhere) prints usage and exits 0
+    let out = Command::new(bin()).arg("--help").output().unwrap();
+    assert_eq!(out.status.code(), Some(0));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+    let out = Command::new(bin()).args(["serve", "--help"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(0));
+
+    // a flag missing its value is an argument error -> exit 2
+    let out = Command::new(bin()).args(["serve", "--rate"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+
+    // unknown subcommand -> exit 2
+    let out = Command::new(bin()).arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
 fn serve_sim_runs_and_reports() {
     let out = Command::new(bin())
         .args([

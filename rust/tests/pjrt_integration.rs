@@ -6,6 +6,13 @@
 //! reference (`compile.model.generate_kv`, seed 42) — matching them
 //! end-to-end proves the whole AOT chain (Pallas kernel → jax model →
 //! HLO text → PJRT execution → rust sampling) preserves numerics.
+//!
+//! The whole file is additionally gated on the `pjrt` cargo feature:
+//! the default (sim-only) build compiles this target to an empty test
+//! binary. Run with `cargo test --features pjrt` (real closure in
+//! third_party/xla) to exercise it.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -1,0 +1,190 @@
+//! API stub for the `xla` (xla-rs) crate.
+//!
+//! Exposes exactly the type/method surface `slice_serve::runtime` uses,
+//! so `cargo check --features pjrt` compiles the real-hardware path in
+//! this offline environment. Every fallible operation fails fast with a
+//! recognizable `xla stub:` error; constructors return inert values.
+//! See README.md in this directory for how to swap in the real closure.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always means "this build links the API stub".
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "xla stub: {what} is unavailable — replace third_party/xla with \
+             the real xla-rs closure to run on hardware"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (only `F32` is exercised by slice-serve).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    Bf16,
+    F16,
+    F32,
+    F64,
+}
+
+/// A host-side literal (tensor value).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _opaque: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal::default()
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub("Literal::reshape"))
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::stub("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(Error::stub("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(Error::stub("Literal::copy_raw_to"))
+    }
+}
+
+/// npz/raw-bytes loading surface (trait form, as in xla-rs).
+pub trait FromRawBytes: Sized {
+    fn read_npz<P: AsRef<Path>>(path: P, config: &()) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz<P: AsRef<Path>>(_path: P, _config: &()) -> Result<Vec<(String, Self)>> {
+        Err(Error::stub("Literal::read_npz"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _opaque: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _opaque: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _opaque: () }
+    }
+}
+
+/// A PJRT client (CPU plugin in the real closure).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _opaque: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu (no PJRT plugin linked)"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _opaque: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _opaque: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_operations_fail_with_recognizable_error() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().starts_with("xla stub:"));
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[1, 3]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::read_npz("nope.npz", &()).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Offline API shim for the `anyhow` crate.
+//!
+//! crates.io is unreachable in this repo's build environment, so this
+//! vendored crate reimplements the small `anyhow` subset slice-serve
+//! uses — `Result`, `Error`, the `anyhow!`/`bail!`/`ensure!` macros and
+//! the `Context` extension trait — with the same names and call-site
+//! semantics, so application code reads like standard rust and can move
+//! to the real crate unchanged if the environment ever gains registry
+//! access.
+//!
+//! Differences from the real crate: the error holds its context chain as
+//! rendered strings (no source-error downcasting, no backtraces).
+
+use std::fmt;
+
+/// A drop-in `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a chain of context frames.
+///
+/// Display prints the outermost context; `{:#}` (alternate) prints the
+/// whole chain outermost-to-root separated by `": "`, matching anyhow.
+pub struct Error {
+    /// Context frames: `frames[0]` is the root cause, later entries are
+    /// contexts added around it (outermost last).
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with one more context frame (outermost).
+    fn push_context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.push(context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost context first, root cause last.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().rev().map(String::as_str)
+    }
+
+    /// The root cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        &self.frames[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            // outermost context only, like anyhow
+            write!(f, "{}", self.frames.last().expect("error has a message"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.last().expect("error has a message"))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in self.frames.iter().rev().skip(1) {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent alongside the reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error::msg(err)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, exactly like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn contexts_stack_outermost_first() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("layer 1")
+            .context("layer 2")
+            .unwrap_err();
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["layer 2", "layer 1", "file missing"]);
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.with_context(|| "was none".to_string())?;
+            ensure!(v < 10, "too big: {v}");
+            if v == 7 {
+                bail!("unlucky {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(f(None).unwrap_err().to_string(), "was none");
+        assert_eq!(f(Some(99)).unwrap_err().to_string(), "too big: 99");
+        assert_eq!(f(Some(7)).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(anyhow!("x = {}", 5).to_string(), "x = 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
