@@ -4,12 +4,15 @@
 //! the paper's "Challenge 2: scheduling overhead" translates to: one
 //! scheduling decision must cost ≪ one decode step (~18-130 ms).
 //! Targets (EXPERIMENTS.md §Perf): full reschedule at 64 queued tasks
-//! < 100 µs; column-scan step < 1 µs.
+//! < 100 µs; column-scan step < 1 µs; one cluster routing decision at
+//! 8 replicas ≪ the mean task inter-arrival gap.
 //!
 //! Run: cargo bench --bench scheduler_hot_path
 
 use std::time::Duration;
 
+use slice_serve::cluster::{Replica, Router, RoutingStrategy};
+use slice_serve::config::ServeConfig;
 use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
 use slice_serve::coordinator::pool::TaskPool;
 use slice_serve::coordinator::scheduler::Policy;
@@ -17,8 +20,12 @@ use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
 use slice_serve::coordinator::slice::SlicePolicy;
 use slice_serve::coordinator::task::{Task, TaskClass};
 use slice_serve::engine::latency::LatencyModel;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::experiments;
 use slice_serve::util::bench::{bench, report_header};
 use slice_serve::util::rng::Rng;
+use slice_serve::util::secs;
+use slice_serve::workload::WorkloadSpec;
 
 fn candidates(n: usize, seed: u64) -> Vec<Candidate> {
     let mut rng = Rng::new(seed);
@@ -108,4 +115,58 @@ fn main() {
         policy.next_step(&mut pool, 0)
     });
     println!("{}", r.report_line());
+
+    // cluster_scale: the routing layer's hot paths. A routing decision
+    // runs once per arrival, so its cost must be far below the
+    // inter-arrival gap even at 8 replicas; the full-run bench tracks
+    // end-to-end co-simulation cost as the fleet widens.
+    let cfg = ServeConfig::default();
+    let make_fleet = |n: usize, loaded: bool| -> Vec<Replica> {
+        (0..n)
+            .map(|i| {
+                let mut r = Replica::new(
+                    i,
+                    Box::new(SlicePolicy::with_defaults(lat.clone())),
+                    Box::new(SimEngine::paper_calibrated()),
+                    lat.clone(),
+                );
+                if loaded {
+                    for k in 0..16u64 {
+                        let class =
+                            if k % 3 == 0 { TaskClass::RealTime } else { TaskClass::Voice };
+                        r.assign(Task::new(k, class, 0, 16, 200, 1.0));
+                    }
+                }
+                r
+            })
+            .collect()
+    };
+    for n in [2usize, 4, 8] {
+        for strategy in [RoutingStrategy::LeastLoaded, RoutingStrategy::SloAware] {
+            let mut router = Router::new(strategy, make_fleet(n, true), CYCLE_CAP);
+            let probe = Task::new(0, TaskClass::Voice, 0, 16, 100, 1.0);
+            let r = bench(
+                &format!("cluster/decide/{}/{n}", strategy.label()),
+                budget,
+                || router.decide(&probe),
+            );
+            println!("{}", r.report_line());
+        }
+
+        // workload generated once outside the loop; each iteration still
+        // pays one Vec clone (run_cluster consumes it), which is
+        // negligible against the thousands of simulated engine steps
+        let wl = WorkloadSpec::paper_mix(n as f64, 0.7, 40, 7).generate();
+        let r = bench(&format!("cluster/run/slo-aware/{n}x40"), budget, || {
+            experiments::run_cluster(
+                RoutingStrategy::SloAware,
+                n,
+                wl.clone(),
+                &cfg,
+                secs(60.0),
+            )
+            .unwrap()
+        });
+        println!("{}", r.report_line());
+    }
 }

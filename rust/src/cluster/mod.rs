@@ -1,0 +1,28 @@
+//! Cluster layer: multi-replica edge serving above L3 (DESIGN.md
+//! "Cluster layer").
+//!
+//! The paper schedules one edge device. This layer scales SLICE out: a
+//! [`Router`] dispatches the arrival stream across N [`Replica`]s —
+//! each a complete single-device stack (`server::Server` + a `Policy` +
+//! a sim engine on its own virtual clock) — under a pluggable
+//! [`RoutingStrategy`] (round-robin, least-loaded, or SLO-aware Eq. 7
+//! headroom). Replica clocks are advanced in lockstep to each arrival,
+//! so routing sees device load exactly when a real front-end would.
+//!
+//! Contracts:
+//!   * the scheduler code each replica runs is byte-identical to the
+//!     single-device path — a 1-replica cluster reproduces `Server::run`
+//!     exactly (asserted in `rust/tests/cluster_integration.rs`);
+//!   * cluster runs are deterministic for a fixed workload seed: every
+//!     routing tie-break is by lowest replica index;
+//!   * fleet metrics ([`ClusterReport`]) aggregate per-replica reports
+//!     with global task ids restored.
+//!
+//! Multi-replica serving is an **extension**, not part of the paper —
+//! see DESIGN.md "Deviations from the paper".
+
+pub mod replica;
+pub mod router;
+
+pub use replica::{Replica, ReplicaReport};
+pub use router::{ClusterReport, Router, RoutingStrategy};

@@ -1,0 +1,202 @@
+//! One cluster replica: a full single-device serving stack (policy +
+//! engine + virtual clock) behind a thin id-translation shim.
+//!
+//! The router hands a replica globally-identified tasks; the replica
+//! re-ids them densely (the [`TaskPool`] contract) and translates back
+//! when the run finishes, so fleet-level metrics see the original ids
+//! while the scheduler code runs byte-identical to the single-device
+//! path (DESIGN.md "Cluster layer").
+
+use anyhow::Result;
+
+use crate::coordinator::mask::period_eq7;
+use crate::coordinator::scheduler::Policy;
+use crate::coordinator::task::{Task, TaskId};
+use crate::engine::clock::VirtualClock;
+use crate::engine::latency::LatencyModel;
+use crate::engine::DecodeEngine;
+use crate::server::{RunReport, Server};
+use crate::util::Micros;
+
+/// A single serving replica inside a [`crate::cluster::Router`] fleet.
+pub struct Replica {
+    id: usize,
+    server: Server<VirtualClock>,
+    /// Maps this replica's dense local ids back to global task ids.
+    global_ids: Vec<TaskId>,
+    latency: LatencyModel,
+}
+
+impl Replica {
+    /// Build a replica over a fresh policy/engine pair. `latency` is the
+    /// device curve the router scores SLO-aware decisions with; it must
+    /// match the engine's (as `experiments::run_cluster` guarantees).
+    pub fn new(
+        id: usize,
+        policy: Box<dyn Policy>,
+        engine: Box<dyn DecodeEngine>,
+        latency: LatencyModel,
+    ) -> Self {
+        Replica {
+            id,
+            server: Server::new(Vec::new(), policy, engine, VirtualClock::new()),
+            global_ids: Vec::new(),
+            latency,
+        }
+    }
+
+    /// This replica's index within the fleet.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Number of tasks routed to this replica so far.
+    pub fn routed(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    /// Current virtual time on this replica.
+    pub fn now(&self) -> Micros {
+        self.server.now()
+    }
+
+    /// Routed arrivals not yet delivered to this replica's scheduler.
+    pub fn pending(&self) -> usize {
+        self.server.pending_arrivals().count()
+    }
+
+    /// Accept a routed task: record its global id, re-id it into this
+    /// replica's dense local id space and enqueue the arrival.
+    pub fn assign(&mut self, mut task: Task) {
+        let local = self.global_ids.len() as TaskId;
+        self.global_ids.push(task.id);
+        task.id = local;
+        self.server.push_arrival(task);
+    }
+
+    /// Advance this replica's simulation to time `t`.
+    pub fn run_until(&mut self, t: Micros) -> Result<()> {
+        self.server.run_until(t)
+    }
+
+    /// Outstanding work in tokens: remaining output of every unfinished
+    /// task in service plus the full output of still-queued arrivals.
+    /// This is the least-loaded routing signal.
+    pub fn load_tokens(&self) -> u64 {
+        let in_service: u64 = self
+            .server
+            .pool()
+            .iter()
+            .filter(|t| !t.is_finished())
+            .map(|t| t.remaining_tokens() as u64)
+            .sum();
+        let queued: u64 = self
+            .server
+            .pending_arrivals()
+            .map(|t| t.output_len as u64)
+            .sum();
+        in_service + queued
+    }
+
+    /// Per-cycle token quotas (v_i = ceil(1s / T_TPOT)) of every live
+    /// task on this replica — the Eq. 7 demand the device must serve
+    /// each scheduling cycle.
+    pub fn demand_quotas(&self) -> Vec<u32> {
+        self.server
+            .pool()
+            .iter()
+            .filter(|t| !t.is_finished())
+            .map(|t| t.slo.tokens_per_cycle())
+            .chain(self.server.pending_arrivals().map(|t| t.slo.tokens_per_cycle()))
+            .collect()
+    }
+
+    /// Scheduling-cycle headroom (Eq. 7) if a task with per-cycle quota
+    /// `cand_quota` joined this replica: `cycle_cap − T_period(demand ∪
+    /// {candidate})`, saturating at zero. The SLO-aware router sends a
+    /// task where this is largest, which is where its Eq. 6 utility
+    /// rate is most likely to survive selection.
+    pub fn headroom(&self, cand_quota: u32, cycle_cap: Micros) -> Micros {
+        let mut vs = self.demand_quotas();
+        vs.push(cand_quota);
+        vs.sort_unstable_by(|a, b| b.cmp(a));
+        cycle_cap.saturating_sub(period_eq7(&vs, &self.latency))
+    }
+
+    /// Finish the replica's run and translate local ids back to global.
+    pub fn finish(self) -> ReplicaReport {
+        let mut report = self.server.finish();
+        for t in &mut report.tasks {
+            t.id = self.global_ids[t.id as usize];
+        }
+        ReplicaReport { replica: self.id, routed: self.global_ids.len(), report }
+    }
+}
+
+/// One replica's contribution to a cluster run, with global task ids.
+pub struct ReplicaReport {
+    /// Fleet index of the replica.
+    pub replica: usize,
+    /// Tasks routed to it.
+    pub routed: usize,
+    /// Its full single-device run report.
+    pub report: RunReport,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orca::OrcaPolicy;
+    use crate::coordinator::task::TaskClass;
+    use crate::engine::sim::SimEngine;
+    use crate::util::secs;
+
+    fn replica() -> Replica {
+        Replica::new(
+            0,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            LatencyModel::paper_calibrated(),
+        )
+    }
+
+    #[test]
+    fn assign_re_ids_and_finish_restores() {
+        let mut r = replica();
+        r.assign(Task::new(17, TaskClass::Voice, 0, 16, 5, 1.0));
+        r.assign(Task::new(99, TaskClass::RealTime, secs(0.1), 16, 5, 100.0));
+        assert_eq!(r.routed(), 2);
+        r.run_until(secs(30.0)).unwrap();
+        let rep = r.finish();
+        let mut ids: Vec<TaskId> = rep.report.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![17, 99]);
+        assert!(rep.report.tasks.iter().all(|t| t.is_finished()));
+    }
+
+    #[test]
+    fn load_counts_queued_and_in_service_tokens() {
+        let mut r = replica();
+        assert_eq!(r.load_tokens(), 0);
+        r.assign(Task::new(0, TaskClass::Voice, 0, 16, 40, 1.0));
+        r.assign(Task::new(1, TaskClass::Voice, secs(5.0), 16, 7, 1.0));
+        // nothing delivered yet: both still queued
+        assert_eq!(r.load_tokens(), 47);
+        // run past the first arrival; its remaining tokens shrink
+        r.run_until(secs(1.0)).unwrap();
+        assert!(r.load_tokens() < 47);
+        assert!(r.load_tokens() >= 7, "queued task still counted");
+    }
+
+    #[test]
+    fn headroom_shrinks_with_demand() {
+        let cap = 1_000_000;
+        let mut r = replica();
+        let empty = r.headroom(8, cap);
+        for i in 0..6 {
+            r.assign(Task::new(i, TaskClass::RealTime, 0, 16, 200, 100.0));
+        }
+        let loaded = r.headroom(8, cap);
+        assert!(loaded < empty, "headroom {loaded} !< {empty}");
+    }
+}

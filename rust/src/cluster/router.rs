@@ -1,0 +1,304 @@
+//! The cluster router: dispatches an arrival stream across N replicas
+//! under a pluggable routing strategy (DESIGN.md "Cluster layer").
+//!
+//! The router is a discrete-event co-simulation driver: before each
+//! routing decision it advances every replica's virtual clock to the
+//! task's arrival time, so load signals are read at the moment the task
+//! arrives — the same information a real front-end would have. After the
+//! last arrival the fleet drains to a common horizon.
+//!
+//! Strategies (cf. SLOs-Serve, arXiv:2504.08784, and the deadline-aware
+//! routing argument of arXiv:2504.14966):
+//!   * [`RoutingStrategy::RoundRobin`] — the load-oblivious baseline;
+//!   * [`RoutingStrategy::LeastLoaded`] — fewest outstanding tokens
+//!     (queued + running);
+//!   * [`RoutingStrategy::SloAware`] — largest Eq. 7 cycle headroom for
+//!     the task's per-cycle quota (see [`Replica::headroom`]), falling
+//!     back to least-loaded on ties.
+
+use anyhow::Result;
+
+use crate::coordinator::task::{Task, TaskId};
+use crate::metrics::{Attainment, LatencySummary};
+use crate::util::Micros;
+
+use super::replica::{Replica, ReplicaReport};
+
+/// How the router picks a replica for each arriving task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingStrategy {
+    /// Cycle through replicas in arrival order, ignoring load.
+    RoundRobin,
+    /// Fewest outstanding tokens (queued + running).
+    LeastLoaded,
+    /// Best Eq. 7 utility-rate headroom; least-loaded on ties.
+    SloAware,
+}
+
+impl RoutingStrategy {
+    /// Every strategy, in the order experiment tables report them.
+    pub const ALL: [RoutingStrategy; 3] = [
+        RoutingStrategy::RoundRobin,
+        RoutingStrategy::LeastLoaded,
+        RoutingStrategy::SloAware,
+    ];
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => RoutingStrategy::RoundRobin,
+            "least-loaded" | "ll" => RoutingStrategy::LeastLoaded,
+            "slo-aware" | "slo" => RoutingStrategy::SloAware,
+            other => anyhow::bail!(
+                "unknown routing strategy '{other}' (round-robin|least-loaded|slo-aware)"
+            ),
+        })
+    }
+
+    /// Display name used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutingStrategy::RoundRobin => "round-robin",
+            RoutingStrategy::LeastLoaded => "least-loaded",
+            RoutingStrategy::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// Dispatches tasks across a fleet of [`Replica`]s.
+pub struct Router {
+    strategy: RoutingStrategy,
+    replicas: Vec<Replica>,
+    /// Scheduling-cycle cap used for SLO-aware headroom scoring.
+    cycle_cap: Micros,
+    rr_next: usize,
+}
+
+impl Router {
+    /// Build a router over pre-constructed replicas (at least one).
+    pub fn new(strategy: RoutingStrategy, replicas: Vec<Replica>, cycle_cap: Micros) -> Self {
+        assert!(!replicas.is_empty(), "a cluster needs at least one replica");
+        Router { strategy, replicas, cycle_cap, rr_next: 0 }
+    }
+
+    /// Number of replicas in the fleet.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pick the replica for `task` under the configured strategy. All
+    /// tie-breaks are deterministic (lowest replica index), so cluster
+    /// runs are reproducible for a fixed seed.
+    pub fn decide(&mut self, task: &Task) -> usize {
+        match self.strategy {
+            RoutingStrategy::RoundRobin => {
+                let i = self.rr_next % self.replicas.len();
+                self.rr_next += 1;
+                i
+            }
+            RoutingStrategy::LeastLoaded => self
+                .replicas
+                .iter()
+                .map(|r| (r.load_tokens(), r.id()))
+                .min()
+                .map(|(_, id)| id)
+                .unwrap(),
+            RoutingStrategy::SloAware => {
+                let quota = task.slo.tokens_per_cycle();
+                self.replicas
+                    .iter()
+                    .map(|r| {
+                        // max headroom, then min load, then lowest index
+                        (
+                            std::cmp::Reverse(r.headroom(quota, self.cycle_cap)),
+                            r.load_tokens(),
+                            r.id(),
+                        )
+                    })
+                    .min()
+                    .map(|(_, _, id)| id)
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Route and serve an entire workload (sorted by arrival, dense
+    /// global ids), then drain the fleet for `drain` past the last
+    /// arrival. Every replica ends at the same virtual horizon. `drain`
+    /// must be long enough for every routed arrival to at least be
+    /// delivered (a zero drain cannot deliver the final arrival);
+    /// violating this panics rather than silently dropping tasks from
+    /// the report.
+    pub fn run(mut self, workload: Vec<Task>, drain: Micros) -> Result<ClusterReport> {
+        assert!(
+            workload.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "workload must be sorted by arrival"
+        );
+        let last_arrival = workload.last().map_or(0, |t| t.arrival);
+        for task in workload {
+            let now = task.arrival;
+            for r in &mut self.replicas {
+                r.run_until(now)?;
+            }
+            let pick = self.decide(&task);
+            self.replicas[pick].assign(task);
+        }
+        let horizon = last_arrival + drain;
+        for r in &mut self.replicas {
+            r.run_until(horizon)?;
+            assert!(
+                r.pending() == 0,
+                "drain window too small: replica {} has {} undelivered arrivals",
+                r.id(),
+                r.pending()
+            );
+        }
+        Ok(ClusterReport {
+            strategy: self.strategy.label(),
+            replicas: self.replicas.into_iter().map(Replica::finish).collect(),
+        })
+    }
+}
+
+/// Outcome of a full cluster run.
+pub struct ClusterReport {
+    /// Routing strategy label (for reports).
+    pub strategy: &'static str,
+    /// Per-replica reports, with global task ids restored.
+    pub replicas: Vec<ReplicaReport>,
+}
+
+impl ClusterReport {
+    /// Scheduling policy the replicas ran (identical across the fleet).
+    pub fn policy(&self) -> &'static str {
+        self.replicas[0].report.policy
+    }
+
+    /// All tasks across the fleet, sorted by global id.
+    pub fn tasks(&self) -> Vec<Task> {
+        let mut all: Vec<Task> = self
+            .replicas
+            .iter()
+            .flat_map(|r| r.report.tasks.iter().cloned())
+            .collect();
+        all.sort_by_key(|t| t.id);
+        all
+    }
+
+    /// Fleet-wide SLO attainment over every routed task.
+    pub fn fleet_attainment(&self) -> Attainment {
+        Attainment::compute(&self.tasks())
+    }
+
+    /// Fleet-wide TTFT/TPOT distribution over finished tasks.
+    pub fn fleet_latency(&self) -> LatencySummary {
+        LatencySummary::compute(&self.tasks())
+    }
+
+    /// Total engine steps executed across the fleet.
+    pub fn total_steps(&self) -> u64 {
+        self.replicas.iter().map(|r| r.report.steps).sum()
+    }
+
+    /// Global ids routed to each replica never overlap and cover every
+    /// task exactly once (checked by tests; here for observability).
+    pub fn routed_ids(&self) -> Vec<TaskId> {
+        let mut ids: Vec<TaskId> = self
+            .replicas
+            .iter()
+            .flat_map(|r| r.report.tasks.iter().map(|t| t.id))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orca::OrcaPolicy;
+    use crate::coordinator::task::TaskClass;
+    use crate::engine::latency::LatencyModel;
+    use crate::engine::sim::SimEngine;
+    use crate::util::secs;
+
+    fn fleet(n: usize) -> Vec<Replica> {
+        (0..n)
+            .map(|i| {
+                Replica::new(
+                    i,
+                    Box::new(OrcaPolicy::new(32)),
+                    Box::new(SimEngine::paper_calibrated()),
+                    LatencyModel::paper_calibrated(),
+                )
+            })
+            .collect()
+    }
+
+    fn task(id: TaskId, arrival: Micros, out: u32) -> Task {
+        Task::new(id, TaskClass::Voice, arrival, 16, out, 1.0)
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        for s in RoutingStrategy::ALL {
+            assert_eq!(RoutingStrategy::parse(s.label()).unwrap(), s);
+        }
+        assert_eq!(
+            RoutingStrategy::parse("RR").unwrap(),
+            RoutingStrategy::RoundRobin
+        );
+        assert!(RoutingStrategy::parse("random").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut router = Router::new(RoutingStrategy::RoundRobin, fleet(3), 1_000_000);
+        let t = task(0, 0, 5);
+        let picks: Vec<usize> = (0..6).map(|_| router.decide(&t)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_replica() {
+        let mut replicas = fleet(2);
+        replicas[0].assign(task(0, 0, 100));
+        let mut router = Router::new(RoutingStrategy::LeastLoaded, replicas, 1_000_000);
+        assert_eq!(router.decide(&task(1, 0, 5)), 1);
+    }
+
+    #[test]
+    fn slo_aware_avoids_contended_replica() {
+        let mut replicas = fleet(2);
+        // replica 0 is saturated with high-rate work
+        for i in 0..8 {
+            let mut t = task(i, 0, 200);
+            t.class = TaskClass::RealTime;
+            t.slo = crate::coordinator::task::SloSpec::real_time();
+            replicas[0].assign(t);
+        }
+        let mut router = Router::new(RoutingStrategy::SloAware, replicas, 1_000_000);
+        assert_eq!(router.decide(&task(8, 0, 5)), 1);
+    }
+
+    #[test]
+    fn run_covers_every_task_once() {
+        let workload: Vec<Task> =
+            (0..20).map(|i| task(i, i * 100_000, 10)).collect();
+        let report = Router::new(RoutingStrategy::RoundRobin, fleet(4), 1_000_000)
+            .run(workload, secs(60.0))
+            .unwrap();
+        assert_eq!(report.routed_ids(), (0..20).collect::<Vec<_>>());
+        assert_eq!(report.replicas.len(), 4);
+        assert!(report.replicas.iter().all(|r| r.routed == 5));
+        let tasks = report.tasks();
+        assert!(tasks.iter().all(|t| t.is_finished()));
+        assert_eq!(report.policy(), "Orca");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_fleet_rejected() {
+        let _ = Router::new(RoutingStrategy::RoundRobin, Vec::new(), 1_000_000);
+    }
+}

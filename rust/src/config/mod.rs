@@ -1,6 +1,11 @@
 //! Configuration system: a small TOML-subset parser plus typed configs
-//! for the server, scheduler, engine and workload (the `toml`/`serde`
-//! crates are unavailable offline, so the parser lives here).
+//! for the server, scheduler, engine, workload and cluster (the
+//! `toml`/`serde` crates are unavailable offline, so the parser lives
+//! here — DESIGN.md "Dependency policy").
+//!
+//! Contract: [`ServeConfig`] is the single knob surface every launcher
+//! (CLI subcommands, experiments, benches) builds policies and
+//! workloads from; file keys and CLI flags set the same fields.
 //!
 //! Supported TOML subset: `[section]` headers, `key = value` with
 //! strings, integers, floats, booleans and flat arrays, comments with
@@ -12,6 +17,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::RoutingStrategy;
 use crate::coordinator::fastserve::FastServeConfig;
 use crate::coordinator::preemption::UtilityAdaptor;
 use crate::coordinator::selection::CYCLE_CAP;
@@ -22,12 +28,16 @@ use self::toml::TomlDoc;
 /// Which scheduling policy to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// The paper's SLICE scheduler.
     Slice,
+    /// Orca-style FCFS continuous batching.
     Orca,
+    /// FastServe skip-join MLFQ.
     FastServe,
 }
 
 impl PolicyKind {
+    /// Parse a CLI/config spelling.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "slice" => PolicyKind::Slice,
@@ -37,6 +47,7 @@ impl PolicyKind {
         })
     }
 
+    /// Display name used in reports.
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::Slice => "SLICE",
@@ -58,7 +69,9 @@ pub enum EngineKind {
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Scheduling policy to run.
     pub policy: PolicyKind,
+    /// Engine backend (sim or pjrt).
     pub engine: EngineKind,
     /// SLICE: scheduling-cycle cap.
     pub cycle_cap: Micros,
@@ -72,11 +85,18 @@ pub struct ServeConfig {
     pub fastserve: FastServeConfig,
     /// Workload parameters.
     pub arrival_rate: f64,
+    /// Real-time share of the workload mix.
     pub rt_ratio: f64,
+    /// Number of tasks to generate.
     pub n_tasks: usize,
+    /// Workload RNG seed.
     pub seed: u64,
     /// Run horizon.
     pub horizon: Micros,
+    /// Cluster mode: number of replicas.
+    pub cluster_replicas: usize,
+    /// Cluster mode: routing strategy.
+    pub cluster_strategy: RoutingStrategy,
 }
 
 impl Default for ServeConfig {
@@ -94,6 +114,8 @@ impl Default for ServeConfig {
             n_tasks: 200,
             seed: 42,
             horizon: secs(600.0),
+            cluster_replicas: 1,
+            cluster_strategy: RoutingStrategy::SloAware,
         }
     }
 }
@@ -106,6 +128,7 @@ impl ServeConfig {
         Self::from_toml(&text)
     }
 
+    /// Parse a TOML document (all keys optional; defaults otherwise).
     pub fn from_toml(text: &str) -> Result<Self> {
         let doc = TomlDoc::parse(text)?;
         let mut cfg = ServeConfig::default();
@@ -166,6 +189,15 @@ impl ServeConfig {
         if let Some(v) = doc.get_f64("workload", "horizon_s")? {
             cfg.horizon = secs(v);
         }
+        if let Some(v) = doc.get_i64("cluster", "replicas")? {
+            if v < 1 {
+                bail!("[cluster] replicas must be >= 1, got {v}");
+            }
+            cfg.cluster_replicas = v as usize;
+        }
+        if let Some(v) = doc.get_str("cluster", "strategy")? {
+            cfg.cluster_strategy = RoutingStrategy::parse(&v)?;
+        }
         Ok(cfg)
     }
 }
@@ -180,6 +212,18 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::Slice);
         assert_eq!(c.cycle_cap, 1_000_000);
         assert_eq!(c.max_batch, 32);
+        assert_eq!(c.cluster_replicas, 1);
+        assert_eq!(c.cluster_strategy, RoutingStrategy::SloAware);
+    }
+
+    #[test]
+    fn parses_cluster_section() {
+        let text = "[cluster]\nreplicas = 4\nstrategy = \"least-loaded\"\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert_eq!(c.cluster_replicas, 4);
+        assert_eq!(c.cluster_strategy, RoutingStrategy::LeastLoaded);
+        assert!(ServeConfig::from_toml("[cluster]\nreplicas = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[cluster]\nstrategy = \"hash\"\n").is_err());
     }
 
     #[test]

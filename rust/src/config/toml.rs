@@ -7,10 +7,15 @@ use anyhow::{bail, Context, Result};
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<TomlValue>),
 }
 
@@ -22,6 +27,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a document in the supported TOML subset.
     pub fn parse(text: &str) -> Result<Self> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -51,10 +57,12 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Raw value lookup (top-level keys live in the "" section).
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section)?.get(key)
     }
 
+    /// Typed lookup: string.
     pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -63,6 +71,7 @@ impl TomlDoc {
         }
     }
 
+    /// Typed lookup: integer.
     pub fn get_i64(&self, section: &str, key: &str) -> Result<Option<i64>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -71,6 +80,7 @@ impl TomlDoc {
         }
     }
 
+    /// Typed lookup: float (integers widen).
     pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -80,6 +90,7 @@ impl TomlDoc {
         }
     }
 
+    /// Typed lookup: bool.
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
         match self.get(section, key) {
             None => Ok(None),

@@ -55,11 +55,13 @@ pub struct FastServePolicy {
 }
 
 impl FastServePolicy {
+    /// Build the policy from an MLFQ shape.
     pub fn new(cfg: FastServeConfig) -> Self {
         let queues = (0..cfg.levels).map(|_| VecDeque::new()).collect();
         FastServePolicy { cfg, queues, level_tokens: Vec::new() }
     }
 
+    /// Build with [`FastServeConfig::default`].
     pub fn with_defaults() -> Self {
         Self::new(FastServeConfig::default())
     }

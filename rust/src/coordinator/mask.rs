@@ -48,14 +48,17 @@ impl DecodeMask {
         DecodeMask { rows: tasks, columns, batch_lens }
     }
 
+    /// True when no tasks are scheduled.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Number of scheduled tasks (rows).
     pub fn n_tasks(&self) -> usize {
         self.rows.len()
     }
 
+    /// Number of columns (= the largest per-cycle quota).
     pub fn columns(&self) -> u32 {
         self.columns
     }

@@ -1,4 +1,9 @@
-//! L3 coordinator: the paper's contribution.
+//! L3 coordinator: the paper's contribution (DESIGN.md "Layers" and
+//! "Scheduling cycle").
+//!
+//! Contract: a [`scheduler::Policy`] owns admission and batching over a
+//! [`pool::TaskPool`]; the serving loop delivers arrival/completion
+//! events and executes whatever [`scheduler::Step`]s the policy emits.
 //!
 //! * [`task`] — SLO model and task lifecycle.
 //! * [`pool`] — task ownership.

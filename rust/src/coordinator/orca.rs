@@ -29,10 +29,12 @@ pub struct OrcaPolicy {
 }
 
 impl OrcaPolicy {
+    /// Build the policy with a max running-batch capacity.
     pub fn new(max_batch: u32) -> Self {
         OrcaPolicy { max_batch, waiting: VecDeque::new(), running: Vec::new() }
     }
 
+    /// Number of currently admitted tasks (tests/observability).
     pub fn running_len(&self) -> usize {
         self.running.len()
     }

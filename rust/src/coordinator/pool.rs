@@ -13,6 +13,7 @@ pub struct TaskPool {
 }
 
 impl TaskPool {
+    /// An empty pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -27,22 +28,27 @@ impl TaskPool {
         self.tasks.push(task);
     }
 
+    /// Look up a task by id (panics on unknown id).
     pub fn get(&self, id: TaskId) -> &Task {
         &self.tasks[id as usize]
     }
 
+    /// Mutable task lookup (panics on unknown id).
     pub fn get_mut(&mut self, id: TaskId) -> &mut Task {
         &mut self.tasks[id as usize]
     }
 
+    /// Number of tasks ever accepted.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// True when no tasks were accepted yet.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
 
+    /// Iterate all tasks in id order.
     pub fn iter(&self) -> impl Iterator<Item = &Task> {
         self.tasks.iter()
     }
@@ -70,6 +76,7 @@ impl TaskPool {
         self.tasks
     }
 
+    /// All tasks as a slice (id-indexed).
     pub fn tasks(&self) -> &[Task] {
         &self.tasks
     }

@@ -24,6 +24,7 @@ pub enum Step {
 }
 
 impl Step {
+    /// Number of tasks the engine touches in this step.
     pub fn batch_size(&self) -> usize {
         match self {
             Step::Prefill { .. } => 1,

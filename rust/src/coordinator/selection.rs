@@ -17,6 +17,7 @@ use super::task::TaskId;
 /// A candidate for selection.
 #[derive(Debug, Clone, Copy)]
 pub struct Candidate {
+    /// The candidate task.
     pub id: TaskId,
     /// Base or adapted utility U_i.
     pub utility: f64,

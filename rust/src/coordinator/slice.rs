@@ -64,6 +64,7 @@ pub struct SlicePolicy {
 }
 
 impl SlicePolicy {
+    /// Build the policy from a device latency model and config.
     pub fn new(latency: LatencyModel, cfg: SliceConfig) -> Self {
         SlicePolicy {
             latency,
@@ -76,6 +77,7 @@ impl SlicePolicy {
         }
     }
 
+    /// Build with [`SliceConfig::default`].
     pub fn with_defaults(latency: LatencyModel) -> Self {
         Self::new(latency, SliceConfig::default())
     }

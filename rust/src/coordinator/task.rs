@@ -24,10 +24,12 @@ pub enum TaskClass {
 }
 
 impl TaskClass {
+    /// True for the hard-deadline (machine control) class.
     pub fn is_real_time(&self) -> bool {
         matches!(self, TaskClass::RealTime)
     }
 
+    /// Display name used in reports.
     pub fn label(&self) -> &'static str {
         match self {
             TaskClass::RealTime => "real-time",
@@ -68,6 +70,7 @@ impl SloSpec {
         SloSpec { ttft: 1_000_000, tpot: 100_000, deadline: None }
     }
 
+    /// The paper-default SLOs for a task class.
     pub fn for_class(class: TaskClass) -> Self {
         match class {
             TaskClass::RealTime => Self::real_time(),
@@ -107,8 +110,11 @@ pub enum TaskState {
 /// One inference request plus its runtime bookkeeping.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Unique, dense id (pool index).
     pub id: TaskId,
+    /// Application class (drives default SLOs/utility).
     pub class: TaskClass,
+    /// This task's service-level objectives.
     pub slo: SloSpec,
     /// Scheduling weight U_i; real-time tasks get 10-100x the utility of
     /// non-real-time tasks (paper §I).
@@ -117,6 +123,7 @@ pub struct Task {
     /// mutates this one, keeping `utility` as the base value.
     pub effective_utility: f64,
 
+    /// Prompt length in tokens.
     pub prompt_len: u32,
     /// Target number of output tokens (simulator) / max tokens (real
     /// engine; generation may stop earlier on EOS).
@@ -125,12 +132,19 @@ pub struct Task {
     pub prompt: Vec<u8>,
 
     // -- runtime state ------------------------------------------------------
+    /// Lifecycle state.
     pub state: TaskState,
+    /// Arrival time.
     pub arrival: Micros,
+    /// When prefill finished (None until then).
     pub prefill_end: Option<Micros>,
+    /// First output token timestamp.
     pub first_token: Option<Micros>,
+    /// Latest output token timestamp.
     pub last_token: Option<Micros>,
+    /// Completion timestamp.
     pub completion: Option<Micros>,
+    /// Output tokens generated so far.
     pub tokens_generated: u32,
     /// Largest observed inter-token gap (stutter diagnostics).
     pub max_token_gap: Micros,
@@ -139,8 +153,15 @@ pub struct Task {
 }
 
 impl Task {
-    pub fn new(id: TaskId, class: TaskClass, arrival: Micros, prompt_len: u32,
-               output_len: u32, utility: f64) -> Self {
+    /// Build a fresh (Waiting) task with its class-default SLOs.
+    pub fn new(
+        id: TaskId,
+        class: TaskClass,
+        arrival: Micros,
+        prompt_len: u32,
+        output_len: u32,
+        utility: f64,
+    ) -> Self {
         Task {
             id,
             class,
@@ -186,6 +207,7 @@ impl Task {
         self.completion = Some(now);
     }
 
+    /// True once all tokens are generated (or EOS forced completion).
     pub fn is_finished(&self) -> bool {
         self.state == TaskState::Finished
     }
@@ -224,10 +246,12 @@ impl Task {
         self.ttft_met() && self.tpot_met()
     }
 
+    /// True when the measured TTFT is within its SLO.
     pub fn ttft_met(&self) -> bool {
         self.ttft().map_or(false, |t| t <= self.slo.ttft)
     }
 
+    /// True when the measured average TPOT is within its SLO.
     pub fn tpot_met(&self) -> bool {
         self.avg_tpot().map_or(false, |t| t <= self.slo.tpot)
     }

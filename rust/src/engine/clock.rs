@@ -23,6 +23,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A virtual clock at t = 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -51,6 +52,7 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// A wall clock anchored at the moment of construction.
     pub fn new() -> Self {
         WallClock { start: Instant::now() }
     }

@@ -1,4 +1,9 @@
-//! Decode-engine substrate: the "GPU" the schedulers drive.
+//! Decode-engine substrate: the "GPU" the schedulers drive (DESIGN.md
+//! "Layers" — the engine row; the latency model is DESIGN.md's l(b)).
+//!
+//! Contract: a [`DecodeEngine`] turns prefill/decode requests into
+//! [`StepOutcome`]s (modelled or measured durations plus one token per
+//! batched task); it never touches scheduling state.
 //!
 //! Two interchangeable backends implement [`DecodeEngine`]:
 //!   * [`sim::SimEngine`] — virtual-time execution against a calibrated
@@ -26,7 +31,9 @@ use crate::util::Micros;
 /// One generated token for one task.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TokenOut {
+    /// The task this token belongs to.
     pub task: TaskId,
+    /// The generated token value (a byte; vocab 256).
     pub token: u8,
     /// True if the model emitted its end-of-sequence token.
     pub eos: bool,

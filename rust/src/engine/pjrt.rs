@@ -43,7 +43,9 @@ pub struct PjrtEngine {
     kv_scratch: Vec<f32>,
     kv_out_scratch: Vec<f32>,
     logits_scratch: Vec<f32>,
+    /// Prefill passes executed (reports).
     pub prefill_steps: u64,
+    /// Decode iterations executed (reports).
     pub decode_steps: u64,
     /// High-water mark of concurrently resident KV slots (edge memory
     /// accounting: each slot is one task's cache, dims.kv_slab_elems()
@@ -52,6 +54,7 @@ pub struct PjrtEngine {
 }
 
 impl PjrtEngine {
+    /// Build an engine over a loaded runtime with a sampling strategy.
     pub fn new(runtime: ModelRuntime, sampler: Sampler, seed: u64) -> Self {
         PjrtEngine {
             runtime,
@@ -72,6 +75,7 @@ impl PjrtEngine {
         self.peak_slots * self.runtime.dims().kv_slab_elems() * 4
     }
 
+    /// The underlying model runtime.
     pub fn runtime(&self) -> &ModelRuntime {
         &self.runtime
     }

@@ -18,13 +18,16 @@ use super::{DecodeEngine, StepOutcome, TokenOut};
 pub struct SimEngine {
     latency: LatencyModel,
     max_context: u32,
-    /// Counters for reports: (prefill_steps, decode_steps, decoded_tokens).
+    /// Prefill passes executed (reports).
     pub prefill_steps: u64,
+    /// Decode iterations executed (reports).
     pub decode_steps: u64,
+    /// Total tokens produced by decode iterations (reports).
     pub decoded_tokens: u64,
 }
 
 impl SimEngine {
+    /// Build a sim engine over a latency model and context limit.
     pub fn new(latency: LatencyModel, max_context: u32) -> Self {
         SimEngine {
             latency,
@@ -41,6 +44,7 @@ impl SimEngine {
         Self::new(LatencyModel::paper_calibrated(), 8192)
     }
 
+    /// The latency model timing this engine.
     pub fn latency(&self) -> &LatencyModel {
         &self.latency
     }

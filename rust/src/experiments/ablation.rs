@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::config::{PolicyKind, ServeConfig};
 use crate::coordinator::preemption::UtilityAdaptor;
-use crate::metrics::report::{pct, Table};
+use crate::metrics::report::{nan_null, pct, Table};
 use crate::metrics::Attainment;
 use crate::util::json::Json;
 use crate::util::ms;
@@ -22,7 +22,9 @@ use super::{default_drain, run_sim};
 /// One ablation row.
 #[derive(Debug)]
 pub struct AblationRow {
+    /// Variant label.
     pub name: String,
+    /// Attainment under the variant.
     pub attainment: Attainment,
 }
 
@@ -94,14 +96,6 @@ pub fn run(base: &ServeConfig) -> Result<Json> {
             })
             .collect::<Vec<_>>(),
     ))
-}
-
-fn nan_null(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Null
-    } else {
-        Json::Num(x)
-    }
 }
 
 #[cfg(test)]

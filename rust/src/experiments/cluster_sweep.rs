@@ -1,0 +1,160 @@
+//! Cluster sweep — routing strategies × replica counts (extension
+//! beyond the paper; see DESIGN.md "Cluster layer").
+//!
+//! Per-replica load is held constant across fleet sizes: a cell with N
+//! replicas serves N× the single-device arrival rate and N× the task
+//! count, so columns compare routing quality at equal pressure. The
+//! expected shape: at 1 replica all strategies are identical; as the
+//! fleet grows, load-oblivious round-robin lets Poisson bursts pile
+//! onto individual replicas while SLO-aware routing absorbs them, so
+//! `slo-aware` fleet attainment ≥ `round-robin` at every width.
+
+use anyhow::Result;
+
+use crate::cluster::RoutingStrategy;
+use crate::config::ServeConfig;
+use crate::metrics::report::{latency_summary_json, ms2, nan_null, pct, Table};
+use crate::metrics::{Attainment, LatencySummary};
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{default_drain, run_cluster};
+
+/// Fleet widths the sweep compares.
+pub fn default_replica_counts() -> Vec<usize> {
+    vec![1, 2, 4]
+}
+
+/// One (replica count, strategy) cell.
+#[derive(Debug)]
+pub struct ClusterCell {
+    /// Fleet width of this cell.
+    pub replicas: usize,
+    /// Routing strategy label.
+    pub strategy: &'static str,
+    /// Fleet-wide attainment.
+    pub attainment: Attainment,
+    /// Fleet-wide TTFT/TPOT distributions.
+    pub latency: LatencySummary,
+    /// Tasks routed to each replica (balance diagnostics).
+    pub routed: Vec<usize>,
+}
+
+/// Run one cell: N replicas at N× the configured single-device load.
+pub fn run_cell(
+    strategy: RoutingStrategy,
+    replicas: usize,
+    cfg: &ServeConfig,
+) -> Result<ClusterCell> {
+    let workload = WorkloadSpec::paper_mix(
+        cfg.arrival_rate * replicas as f64,
+        cfg.rt_ratio,
+        cfg.n_tasks * replicas,
+        cfg.seed,
+    )
+    .generate();
+    let report = run_cluster(strategy, replicas, workload, cfg, default_drain())?;
+    let tasks = report.tasks();
+    Ok(ClusterCell {
+        replicas,
+        strategy: report.strategy,
+        attainment: Attainment::compute(&tasks),
+        latency: LatencySummary::compute(&tasks),
+        routed: report.replicas.iter().map(|r| r.routed).collect(),
+    })
+}
+
+/// Full sweep; prints the fleet table and returns the JSON series.
+pub fn run(cfg: &ServeConfig) -> Result<Json> {
+    let mut cells: Vec<ClusterCell> = Vec::new();
+    for &n in &default_replica_counts() {
+        for strategy in RoutingStrategy::ALL {
+            cells.push(run_cell(strategy, n, cfg)?);
+        }
+    }
+
+    println!(
+        "Cluster sweep — policy {:?}, per-replica rate {}, RT ratio {}, \
+         {} tasks/replica, seed {}\n",
+        cfg.policy, cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed
+    );
+    let mut t = Table::new(&[
+        "replicas", "strategy", "fleet SLO", "RT SLO", "non-RT SLO", "TTFT p99",
+        "TPOT p99", "routed per replica",
+    ]);
+    for c in &cells {
+        t.row(vec![
+            c.replicas.to_string(),
+            c.strategy.to_string(),
+            pct(c.attainment.slo),
+            pct(c.attainment.rt_slo),
+            pct(c.attainment.nrt_slo),
+            ms2(c.latency.ttft.p99_ms),
+            ms2(c.latency.tpot.p99_ms),
+            format!("{:?}", c.routed),
+        ]);
+    }
+    println!("{}", t.render());
+
+    Ok(Json::from(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .set("replicas", c.replicas)
+                    .set("strategy", c.strategy)
+                    .set("slo", nan_null(c.attainment.slo))
+                    .set("rt_slo", nan_null(c.attainment.rt_slo))
+                    .set("nrt_slo", nan_null(c.attainment.nrt_slo))
+                    .set("latency", latency_summary_json(&c.latency))
+                    .set(
+                        "routed",
+                        c.routed.iter().map(|&r| Json::from(r)).collect::<Vec<_>>(),
+                    )
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { n_tasks: 120, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn single_replica_strategies_identical() {
+        // With one replica every strategy routes every task to it, so
+        // the cells must be byte-identical.
+        let rr = run_cell(RoutingStrategy::RoundRobin, 1, &cfg()).unwrap();
+        let slo = run_cell(RoutingStrategy::SloAware, 1, &cfg()).unwrap();
+        assert_eq!(rr.attainment.slo, slo.attainment.slo);
+        assert_eq!(rr.attainment.n_finished, slo.attainment.n_finished);
+    }
+
+    #[test]
+    fn slo_aware_at_least_round_robin_at_width_two() {
+        // The acceptance shape of the sweep: at equal load, SLO-aware
+        // routing never does worse than round-robin on the heterogeneous
+        // paper mix (RT deadlines next to voice/Q&A rate SLOs). Width 2
+        // here; the width-4 cell is asserted by the integration test
+        // `slo_aware_routing_at_least_round_robin`.
+        let rr = run_cell(RoutingStrategy::RoundRobin, 2, &cfg()).unwrap();
+        let slo = run_cell(RoutingStrategy::SloAware, 2, &cfg()).unwrap();
+        assert!(
+            slo.attainment.slo >= rr.attainment.slo,
+            "slo-aware {} < round-robin {}",
+            slo.attainment.slo,
+            rr.attainment.slo
+        );
+    }
+
+    #[test]
+    fn routed_counts_cover_workload() {
+        let c = run_cell(RoutingStrategy::LeastLoaded, 2, &cfg()).unwrap();
+        assert_eq!(c.routed.iter().sum::<usize>(), c.attainment.n_tasks);
+        assert_eq!(c.attainment.n_tasks, 240);
+    }
+}

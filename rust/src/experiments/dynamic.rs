@@ -18,7 +18,9 @@ use super::{default_drain, run_sim, ALL_POLICIES};
 /// One policy's dynamic-run outcome.
 #[derive(Debug)]
 pub struct DynamicResult {
+    /// Policy label.
     pub policy: &'static str,
+    /// Attainment over the dynamic workload.
     pub attainment: Attainment,
 }
 

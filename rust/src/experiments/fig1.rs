@@ -15,9 +15,13 @@ use crate::util::json::Json;
 /// One measured/modelled row.
 #[derive(Debug, Clone)]
 pub struct Fig1Row {
+    /// Decode batch size b.
     pub batch: u32,
+    /// l(b) in milliseconds.
     pub latency_ms: f64,
+    /// Aggregate throughput b / l(b) in tokens/s.
     pub throughput_tps: f64,
+    /// Per-task rate 1 / l(b) in tokens/s.
     pub per_task_tps: f64,
 }
 
@@ -43,6 +47,7 @@ pub fn default_batches() -> Vec<u32> {
     (1..=16).collect()
 }
 
+/// JSON export of the Fig. 1 series.
 pub fn rows_to_json(rows: &[Fig1Row]) -> Json {
     Json::from(
         rows.iter()
@@ -57,8 +62,11 @@ pub fn rows_to_json(rows: &[Fig1Row]) -> Json {
     )
 }
 
+/// Text-table rendering of the Fig. 1 series.
 pub fn render(rows: &[Fig1Row]) -> String {
-    let mut t = Table::new(&["batch", "decode latency (ms)", "throughput (tok/s)", "per-task (tok/s)"]);
+    let mut t = Table::new(&[
+        "batch", "decode latency (ms)", "throughput (tok/s)", "per-task (tok/s)",
+    ]);
     for r in rows {
         t.row(vec![
             r.batch.to_string(),

@@ -1,18 +1,26 @@
 //! Experiment harnesses: one module per table/figure of the paper's
-//! evaluation (§VI). Every harness prints the same rows/series the paper
-//! reports and returns a JSON document for plotting; EXPERIMENTS.md
-//! records paper-vs-measured for each.
+//! evaluation (§VI), plus the cluster-sweep extension (DESIGN.md
+//! "Cluster layer"). Every harness prints the same rows/series the
+//! paper reports and returns a JSON document for plotting;
+//! EXPERIMENTS.md records paper-vs-measured for each.
 //!
-//! | module       | reproduces                                  |
-//! |--------------|---------------------------------------------|
-//! | `fig1`       | Fig. 1a/1b latency & throughput vs batch    |
-//! | `static_mix` | Table II + Fig. 6 (9-task static workload)  |
-//! | `dynamic`    | Fig. 7/8/9 (rate 1.0, RT:NRT = 7:3)         |
-//! | `ratio_sweep`| Fig. 10a/b/c (RT ratio sweep)               |
-//! | `rate_sweep` | Fig. 11a/b/c (arrival rate sweep)           |
-//! | `ablation`   | design-choice ablations (DESIGN.md)         |
+//! Contract: harnesses compose the other layers ([`run_sim`] /
+//! [`run_cluster`] + `workload` + `metrics`) and never reach into
+//! scheduler internals, so every policy comparison runs an identical
+//! pipeline.
+//!
+//! | module        | reproduces                                  |
+//! |---------------|---------------------------------------------|
+//! | `fig1`        | Fig. 1a/1b latency & throughput vs batch    |
+//! | `static_mix`  | Table II + Fig. 6 (9-task static workload)  |
+//! | `dynamic`     | Fig. 7/8/9 (rate 1.0, RT:NRT = 7:3)         |
+//! | `ratio_sweep` | Fig. 10a/b/c (RT ratio sweep)               |
+//! | `rate_sweep`  | Fig. 11a/b/c (arrival rate sweep)           |
+//! | `ablation`    | design-choice ablations (DESIGN.md)         |
+//! | `cluster_sweep` | routing strategies × replica counts (ext.)|
 
 pub mod ablation;
+pub mod cluster_sweep;
 pub mod dynamic;
 pub mod fig1;
 pub mod rate_sweep;
@@ -21,6 +29,7 @@ pub mod static_mix;
 
 use anyhow::Result;
 
+use crate::cluster::{ClusterReport, Replica, Router, RoutingStrategy};
 use crate::config::{PolicyKind, ServeConfig};
 use crate::coordinator::fastserve::FastServePolicy;
 use crate::coordinator::orca::OrcaPolicy;
@@ -74,6 +83,32 @@ pub fn run_sim(
     let policy = build_policy(kind, cfg);
     let engine = Box::new(SimEngine::paper_calibrated());
     Server::new(workload, policy, engine, VirtualClock::new()).run(horizon)
+}
+
+/// Run one (strategy, replica count, workload) cluster configuration on
+/// the simulation engine. Every replica gets an identical fresh policy
+/// (from `cfg.policy`) and a paper-calibrated sim engine, so the only
+/// degree of freedom between cells is the routing decision.
+pub fn run_cluster(
+    strategy: RoutingStrategy,
+    replicas: usize,
+    workload: Vec<Task>,
+    cfg: &ServeConfig,
+    drain: Micros,
+) -> Result<ClusterReport> {
+    let fleet: Vec<Replica> = (0..replicas)
+        .map(|i| {
+            let mut lat = LatencyModel::paper_calibrated();
+            lat.max_batch = cfg.max_batch;
+            Replica::new(
+                i,
+                build_policy(cfg.policy, cfg),
+                Box::new(SimEngine::paper_calibrated()),
+                lat,
+            )
+        })
+        .collect();
+    Router::new(strategy, fleet, cfg.cycle_cap).run(workload, drain)
 }
 
 /// Default drain window after the last arrival (virtual seconds).

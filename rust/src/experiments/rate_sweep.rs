@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::config::{PolicyKind, ServeConfig};
-use crate::metrics::report::{pct, Table};
+use crate::metrics::report::{nan_null, pct, Table};
 use crate::metrics::Attainment;
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
@@ -23,11 +23,15 @@ pub fn default_rates() -> Vec<f64> {
 /// One (rate, policy) cell.
 #[derive(Debug)]
 pub struct RateCell {
+    /// Arrival rate (tasks/s).
     pub rate: f64,
+    /// Policy label.
     pub policy: &'static str,
+    /// Attainment at this rate.
     pub attainment: Attainment,
 }
 
+/// Run one (policy, rate) cell of the sweep.
 pub fn run_cell(kind: PolicyKind, rate: f64, cfg: &ServeConfig) -> Result<RateCell> {
     let workload =
         WorkloadSpec::paper_mix(rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed).generate();
@@ -85,14 +89,6 @@ pub fn run(cfg: &ServeConfig) -> Result<Json> {
             })
             .collect::<Vec<_>>(),
     ))
-}
-
-fn nan_null(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Null
-    } else {
-        Json::Num(x)
-    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::config::{PolicyKind, ServeConfig};
-use crate::metrics::report::{pct, Table};
+use crate::metrics::report::{nan_null, pct, Table};
 use crate::metrics::Attainment;
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
@@ -23,11 +23,15 @@ pub fn default_ratios() -> Vec<f64> {
 /// One (ratio, policy) cell.
 #[derive(Debug)]
 pub struct RatioCell {
+    /// Real-time share of the mix.
     pub ratio: f64,
+    /// Policy label.
     pub policy: &'static str,
+    /// Attainment at this ratio.
     pub attainment: Attainment,
 }
 
+/// Run one (policy, RT ratio) cell of the sweep.
 pub fn run_cell(kind: PolicyKind, ratio: f64, cfg: &ServeConfig) -> Result<RatioCell> {
     let workload =
         WorkloadSpec::paper_mix(cfg.arrival_rate, ratio, cfg.n_tasks, cfg.seed).generate();
@@ -89,14 +93,6 @@ pub fn run(cfg: &ServeConfig) -> Result<Json> {
             })
             .collect::<Vec<_>>(),
     ))
-}
-
-fn nan_null(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Null
-    } else {
-        Json::Num(x)
-    }
 }
 
 #[cfg(test)]

@@ -21,8 +21,11 @@ use super::{run_sim, ALL_POLICIES};
 /// Result rows for one strategy.
 #[derive(Debug)]
 pub struct StaticResult {
+    /// Policy label.
     pub policy: &'static str,
+    /// Per-type TPOT summaries (Task A / B / C).
     pub groups: Vec<TpotSummary>,
+    /// Overall SLO attainment on the 9-task mix.
     pub slo_attainment: f64,
 }
 

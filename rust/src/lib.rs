@@ -3,6 +3,9 @@
 //! three-layer rust + JAX + Pallas serving stack.
 //!
 //! Layers:
+//!   * `cluster` — multi-replica scale-out (an extension beyond the
+//!     paper): a router dispatching tasks across N single-device stacks
+//!     under round-robin / least-loaded / SLO-aware strategies.
 //!   * L3 (`coordinator`, `server`) — the paper's contribution: the
 //!     SLICE scheduler (utility-maximizing selection + decode-mask-matrix
 //!     rate allocation + online event loop) and its baselines.
@@ -15,6 +18,9 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+#![warn(missing_docs)]
+
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

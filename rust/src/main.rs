@@ -2,8 +2,10 @@
 //!
 //! Subcommands (clap is unavailable offline, so parsing is hand-rolled):
 //!   serve       — run a workload through one policy (sim or pjrt engine)
+//!   cluster     — route a workload across N sim replicas (round-robin,
+//!                 least-loaded or SLO-aware) and report fleet metrics
 //!   experiment  — regenerate a paper table/figure (fig1|table2|fig7|
-//!                 fig8|fig9|fig10|fig11|ablation|all)
+//!                 fig8|fig9|fig10|fig11|ablation|cluster|all)
 //!   calibrate   — measure l(b) on the real PJRT engine and print a
 //!                 machine-local latency model
 //!   info        — print artifact/runtime information
@@ -13,6 +15,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
+use slice_serve::cluster::RoutingStrategy;
 use slice_serve::config::{EngineKind, PolicyKind, ServeConfig};
 #[cfg(feature = "pjrt")]
 use slice_serve::coordinator::task::TaskClass;
@@ -29,7 +32,7 @@ use slice_serve::engine::sim::SimEngine;
 #[cfg(feature = "pjrt")]
 use slice_serve::engine::DecodeEngine;
 use slice_serve::experiments;
-use slice_serve::metrics::report::{pct, secs2, Table};
+use slice_serve::metrics::report::{ms2, pct, secs2, Table};
 use slice_serve::metrics::Attainment;
 #[cfg(feature = "pjrt")]
 use slice_serve::runtime::ModelRuntime;
@@ -46,8 +49,12 @@ USAGE:
                     [--engine sim|pjrt] [--artifacts <dir>]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
                     [--trace <file>] [--save-trace <file>]
-  slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|all>
-                    [--n-tasks <n>] [--seed <n>] [--out <json>]
+  slice-serve cluster [--config <file>] [--replicas <n>]
+                    [--strategy round-robin|least-loaded|slo-aware]
+                    [--policy slice|orca|fastserve]
+                    [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
+  slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
+                    cluster|all> [--n-tasks <n>] [--seed <n>] [--out <json>]
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -204,6 +211,96 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Route a synthetic workload across N sim replicas and report
+/// fleet-wide plus per-replica SLO metrics.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    if let Some(v) = args.flag_u64("replicas")? {
+        if v < 1 {
+            bail!("--replicas must be >= 1");
+        }
+        cfg.cluster_replicas = v as usize;
+    }
+    if let Some(s) = args.flag("strategy") {
+        cfg.cluster_strategy = RoutingStrategy::parse(s)?;
+    }
+
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    // same drain convention as cmd_serve: 300 virtual seconds past the
+    // last arrival
+    let report = experiments::run_cluster(
+        cfg.cluster_strategy,
+        cfg.cluster_replicas,
+        workload,
+        &cfg,
+        secs(300.0),
+    )?;
+
+    let tasks = report.tasks();
+    let fleet = Attainment::compute(&tasks);
+    let lat = slice_serve::metrics::LatencySummary::compute(&tasks);
+    println!(
+        "cluster policy={} strategy={} replicas={} tasks={} finished={} steps={}",
+        report.policy(),
+        report.strategy,
+        report.replicas.len(),
+        fleet.n_tasks,
+        fleet.n_finished,
+        report.total_steps()
+    );
+
+    let mut t = Table::new(&["fleet metric", "value"]);
+    t.row(vec!["overall SLO attainment".into(), pct(fleet.slo)]);
+    t.row(vec!["real-time SLO attainment".into(), pct(fleet.rt_slo)]);
+    t.row(vec!["non-RT SLO attainment".into(), pct(fleet.nrt_slo)]);
+    t.row(vec!["mean completion (all)".into(), secs2(fleet.mean_completion_all)]);
+    t.row(vec![
+        "TTFT p50 / p95 / p99".into(),
+        format!(
+            "{} / {} / {}",
+            ms2(lat.ttft.p50_ms),
+            ms2(lat.ttft.p95_ms),
+            ms2(lat.ttft.p99_ms)
+        ),
+    ]);
+    t.row(vec![
+        "TPOT p50 / p95 / p99".into(),
+        format!(
+            "{} / {} / {}",
+            ms2(lat.tpot.p50_ms),
+            ms2(lat.tpot.p95_ms),
+            ms2(lat.tpot.p99_ms)
+        ),
+    ]);
+    println!("{}", t.render());
+
+    let mut per = Table::new(&[
+        "replica", "routed", "finished", "SLO attainment", "steps", "last completion",
+    ]);
+    for r in &report.replicas {
+        let a = Attainment::compute(&r.report.tasks);
+        let last_completion = r
+            .report
+            .tasks
+            .iter()
+            .filter_map(|t| t.completion)
+            .max()
+            .map_or(f64::NAN, |c| c as f64 / 1e6);
+        per.row(vec![
+            r.replica.to_string(),
+            r.routed.to_string(),
+            a.n_finished.to_string(),
+            pct(a.slo),
+            r.report.steps.to_string(),
+            secs2(last_completion),
+        ]);
+    }
+    println!("per-replica:\n\n{}", per.render());
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -228,6 +325,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "fig10" => out = out.set("fig10", experiments::ratio_sweep::run(&cfg)?),
         "fig11" => out = out.set("fig11", experiments::rate_sweep::run(&cfg)?),
         "ablation" => out = out.set("ablation", experiments::ablation::run(&cfg)?),
+        "cluster" | "cluster_sweep" => {
+            out = out.set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?)
+        }
         "all" => {
             out = out
                 .set("fig1", experiments::fig1::run()?)
@@ -235,7 +335,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 .set("dynamic", experiments::dynamic::run(&cfg)?)
                 .set("fig10", experiments::ratio_sweep::run(&cfg)?)
                 .set("fig11", experiments::rate_sweep::run(&cfg)?)
-                .set("ablation", experiments::ablation::run(&cfg)?);
+                .set("ablation", experiments::ablation::run(&cfg)?)
+                .set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?);
         }
         other => bail!("unknown experiment '{other}'"),
     }
@@ -359,6 +460,7 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(String::as_str);
     let result = match cmd {
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("info") => cmd_info(&args),

@@ -1,5 +1,10 @@
 //! Metrics: SLO attainment accounting (paper §VI-A "Metrics") and
-//! report construction for every table/figure.
+//! report construction for every table/figure; fleet-level percentile
+//! summaries for cluster mode (DESIGN.md "Cluster layer").
+//!
+//! Contract: metrics are pure functions over finished [`Task`] records
+//! — nothing here mutates scheduling state, so every experiment and
+//! the cluster aggregator share one measurement pipeline.
 //!
 //! Attainment definitions follow the paper exactly:
 //!   * real-time task SLO met  ⇔ completed before its deadline;
@@ -14,15 +19,19 @@ use crate::util::stats::Samples;
 /// Attainment and latency summary for a set of tasks.
 #[derive(Debug, Clone)]
 pub struct Attainment {
+    /// Tasks in the evaluated set.
     pub n_tasks: usize,
+    /// Tasks that finished before the horizon.
     pub n_finished: usize,
     /// Overall SLO attainment in [0,1].
     pub slo: f64,
     /// Real-time subset: deadline attainment.
     pub rt_slo: f64,
+    /// Real-time tasks in the set.
     pub rt_count: usize,
     /// Non-real-time subset: combined TTFT+TPOT attainment.
     pub nrt_slo: f64,
+    /// Non-real-time tasks in the set.
     pub nrt_count: usize,
     /// Non-real-time TTFT-only attainment (Fig. 8).
     pub nrt_ttft: f64,
@@ -30,7 +39,9 @@ pub struct Attainment {
     pub nrt_tpot: f64,
     /// Mean completion time (s) over finished tasks, by group.
     pub mean_completion_all: f64,
+    /// Mean completion time (s), real-time subset.
     pub mean_completion_rt: f64,
+    /// Mean completion time (s), non-real-time subset.
     pub mean_completion_nrt: f64,
 }
 
@@ -83,19 +94,82 @@ impl Attainment {
     }
 }
 
+/// Distribution summary in milliseconds: mean plus p50/p95/p99. All
+/// fields are NaN when the sample set is empty (rendered as "n/a").
+#[derive(Debug, Clone, Copy)]
+pub struct Percentiles {
+    /// Number of samples summarized.
+    pub n: usize,
+    /// Arithmetic mean (ms).
+    pub mean_ms: f64,
+    /// Median (ms).
+    pub p50_ms: f64,
+    /// 95th percentile (ms).
+    pub p95_ms: f64,
+    /// 99th percentile (ms).
+    pub p99_ms: f64,
+}
+
+impl Percentiles {
+    /// Summarize an iterator of durations in micros.
+    pub fn compute(values_us: impl Iterator<Item = crate::util::Micros>) -> Self {
+        let mut s = Samples::new();
+        for v in values_us {
+            s.push(v as f64 / 1e3);
+        }
+        Percentiles {
+            n: s.len(),
+            mean_ms: s.mean(),
+            p50_ms: s.p50(),
+            p95_ms: s.p95(),
+            p99_ms: s.p99(),
+        }
+    }
+}
+
+/// TTFT/TPOT distributions over the finished tasks of a run — the
+/// per-replica and fleet-wide latency report of cluster mode.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    /// Time-to-first-token distribution (ms).
+    pub ttft: Percentiles,
+    /// Average time-per-output-token distribution (ms).
+    pub tpot: Percentiles,
+}
+
+impl LatencySummary {
+    /// Compute over the finished tasks in `tasks` (unfinished tasks
+    /// have no complete latency record; attainment already counts them
+    /// as violations).
+    pub fn compute(tasks: &[Task]) -> Self {
+        let finished = || tasks.iter().filter(|t| t.is_finished());
+        LatencySummary {
+            ttft: Percentiles::compute(finished().filter_map(|t| t.ttft())),
+            tpot: Percentiles::compute(finished().filter_map(|t| t.avg_tpot())),
+        }
+    }
+}
+
 /// Per-group TPOT summary (Table II / Fig. 6): mean measured TPOT and
 /// the implied decoding rate for a named group of tasks.
 #[derive(Debug, Clone)]
 pub struct TpotSummary {
+    /// Group label ("Task A", "voice", ...).
     pub label: String,
+    /// Tasks in the group.
     pub n_tasks: usize,
+    /// The group's TPOT SLO (ms).
     pub tpot_slo_ms: f64,
+    /// Mean measured TPOT (ms).
     pub mean_tpot_ms: f64,
+    /// Implied decoding rate 1000 / mean TPOT (tokens/s).
     pub mean_rate: f64,
+    /// True iff every task in the group finished and met its TPOT SLO.
     pub all_tpot_met: bool,
 }
 
 impl TpotSummary {
+    /// Summarize the measured TPOT of a named task group.
     pub fn compute(label: &str, tasks: &[&Task]) -> Self {
         let mut s = Samples::new();
         for t in tasks {
@@ -189,5 +263,29 @@ mod tests {
         let tasks = vec![finished_rt(0, 1000.0), finished_rt(1, 2000.0)];
         let a = Attainment::compute(&tasks);
         assert!((a.mean_completion_all - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_summary_over_finished_tasks() {
+        let mut unfinished = Task::new(2, TaskClass::Voice, 0, 16, 50, 1.0);
+        unfinished.on_token(ms(100.0));
+        let tasks = vec![
+            finished_voice(0, 500.0, 100.0),
+            finished_voice(1, 700.0, 120.0),
+            unfinished,
+        ];
+        let s = LatencySummary::compute(&tasks);
+        assert_eq!(s.ttft.n, 2, "unfinished task excluded");
+        assert!((s.ttft.mean_ms - 600.0).abs() < 1e-9);
+        assert!((s.ttft.p50_ms - 600.0).abs() < 1e-9);
+        assert!((s.tpot.mean_ms - 110.0).abs() < 1e-9);
+        assert!(s.ttft.p99_ms >= s.ttft.p50_ms);
+    }
+
+    #[test]
+    fn percentiles_empty_is_nan() {
+        let p = Percentiles::compute(std::iter::empty());
+        assert_eq!(p.n, 0);
+        assert!(p.mean_ms.is_nan() && p.p50_ms.is_nan() && p.p99_ms.is_nan());
     }
 }

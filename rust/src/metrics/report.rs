@@ -3,7 +3,7 @@
 
 use crate::util::json::Json;
 
-use super::Attainment;
+use super::{Attainment, LatencySummary, Percentiles};
 
 /// A simple fixed-width text table.
 #[derive(Debug, Default)]
@@ -13,15 +13,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render the aligned fixed-width text table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -75,28 +78,47 @@ pub fn ms2(x: f64) -> String {
     }
 }
 
+/// NaN-safe JSON number (NaN has no JSON encoding; it maps to null).
+pub fn nan_null(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Null
+    } else {
+        Json::Num(x)
+    }
+}
+
 /// JSON encoding of an [`Attainment`] (NaN mapped to null).
 pub fn attainment_json(a: &Attainment) -> Json {
-    fn num(x: f64) -> Json {
-        if x.is_nan() {
-            Json::Null
-        } else {
-            Json::Num(x)
-        }
-    }
     Json::obj()
         .set("n_tasks", a.n_tasks)
         .set("n_finished", a.n_finished)
-        .set("slo", num(a.slo))
-        .set("rt_slo", num(a.rt_slo))
+        .set("slo", nan_null(a.slo))
+        .set("rt_slo", nan_null(a.rt_slo))
         .set("rt_count", a.rt_count)
-        .set("nrt_slo", num(a.nrt_slo))
+        .set("nrt_slo", nan_null(a.nrt_slo))
         .set("nrt_count", a.nrt_count)
-        .set("nrt_ttft", num(a.nrt_ttft))
-        .set("nrt_tpot", num(a.nrt_tpot))
-        .set("mean_completion_all", num(a.mean_completion_all))
-        .set("mean_completion_rt", num(a.mean_completion_rt))
-        .set("mean_completion_nrt", num(a.mean_completion_nrt))
+        .set("nrt_ttft", nan_null(a.nrt_ttft))
+        .set("nrt_tpot", nan_null(a.nrt_tpot))
+        .set("mean_completion_all", nan_null(a.mean_completion_all))
+        .set("mean_completion_rt", nan_null(a.mean_completion_rt))
+        .set("mean_completion_nrt", nan_null(a.mean_completion_nrt))
+}
+
+/// JSON encoding of a [`Percentiles`] distribution (NaN mapped to null).
+pub fn percentiles_json(p: &Percentiles) -> Json {
+    Json::obj()
+        .set("n", p.n)
+        .set("mean_ms", nan_null(p.mean_ms))
+        .set("p50_ms", nan_null(p.p50_ms))
+        .set("p95_ms", nan_null(p.p95_ms))
+        .set("p99_ms", nan_null(p.p99_ms))
+}
+
+/// JSON encoding of a [`LatencySummary`].
+pub fn latency_summary_json(s: &LatencySummary) -> Json {
+    Json::obj()
+        .set("ttft", percentiles_json(&s.ttft))
+        .set("tpot", percentiles_json(&s.tpot))
 }
 
 #[cfg(test)]

@@ -10,12 +10,19 @@ use crate::util::json::Json;
 /// Model dimensions recorded by the AOT pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelDims {
+    /// Vocabulary size (256 for the byte-level model).
     pub vocab: usize,
+    /// Embedding width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Context window (prompt + output).
     pub max_seq: usize,
 }
 
@@ -36,15 +43,20 @@ impl ModelDims {
 pub struct ArtifactEntry {
     /// Prompt bucket (prefill) or batch size (decode).
     pub size: usize,
+    /// Path to the HLO text artifact.
     pub path: PathBuf,
 }
 
 /// Parsed artifacts/manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model dimensions.
     pub dims: ModelDims,
+    /// Weight-initialization seed recorded by the AOT pipeline.
     pub seed: u64,
+    /// Parameter names, in weights-file order.
     pub param_names: Vec<String>,
+    /// Path to the weights .npz.
     pub weights_path: PathBuf,
     /// Prefill entries, ascending bucket.
     pub prefill: Vec<ArtifactEntry>,
@@ -53,12 +65,14 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {dir:?}"))?;
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest text; artifact paths resolve relative to `dir`.
     pub fn parse(text: &str, dir: &Path) -> Result<Self> {
         let j = Json::parse(text).context("parsing manifest.json")?;
         let m = j.get("model")?;

@@ -1,4 +1,9 @@
-//! Model runtime layer.
+//! Model runtime layer (DESIGN.md "Layers" — the runtime row between
+//! the engine and the AOT python pipeline).
+//!
+//! Contract: this layer owns artifact loading and PJRT execution; it
+//! knows nothing about tasks or SLOs. `engine::pjrt` adapts it to the
+//! [`crate::engine::DecodeEngine`] interface.
 //!
 //! * [`artifact`] — the AOT artifact manifest (pure parsing, always
 //!   compiled; the contract between `python/compile/aot.py` and rust).

@@ -19,6 +19,7 @@ use super::artifact::{ArtifactEntry, Manifest, ModelDims};
 /// A loaded model: PJRT client + compiled executables + weights.
 pub struct ModelRuntime {
     client: PjRtClient,
+    /// The parsed artifact manifest this runtime was loaded from.
     pub manifest: Manifest,
     /// Weights as literals, positional order = manifest.param_names.
     weights: Vec<Literal>,
@@ -92,10 +93,12 @@ impl ModelRuntime {
         Ok(ModelRuntime { client, manifest, weights, prefill_exes, decode_exes })
     }
 
+    /// Model dimensions from the manifest.
     pub fn dims(&self) -> ModelDims {
         self.manifest.dims
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

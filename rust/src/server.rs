@@ -7,6 +7,15 @@
 //! Arrival/completion events are delivered between engine steps —
 //! iteration-level interruption, exactly the granularity the paper's
 //! event queue (Alg. 4) operates at.
+//!
+//! Two ways to drive a server (see DESIGN.md "Layers"):
+//!   * [`Server::run`] — the single-device path: the whole workload is
+//!     known up front and the loop runs to a horizon;
+//!   * [`Server::run_until`] + [`Server::push_arrival`] +
+//!     [`Server::finish`] — the incremental path used by the cluster
+//!     layer (`cluster::Router`), which feeds arrivals one routing
+//!     decision at a time while stepping each replica's virtual clock.
+//!     Both paths execute the identical scheduler/engine code.
 
 use std::collections::VecDeque;
 
@@ -26,7 +35,9 @@ pub struct RunReport {
     pub tasks: Vec<Task>,
     /// Total engine steps executed (prefill + decode).
     pub steps: u64,
+    /// Decode iterations executed.
     pub decode_steps: u64,
+    /// Prefill passes executed.
     pub prefill_steps: u64,
     /// Time of the last event processed.
     pub end_time: Micros,
@@ -86,6 +97,33 @@ impl<C: Clock> Server<C> {
         self
     }
 
+    /// Current time on this server's clock.
+    pub fn now(&self) -> Micros {
+        self.clock.now()
+    }
+
+    /// The task pool (read-only observability for routers/tests).
+    pub fn pool(&self) -> &TaskPool {
+        &self.pool
+    }
+
+    /// Arrivals that have been pushed/loaded but not yet delivered to
+    /// the policy (they still count toward a replica's future load).
+    pub fn pending_arrivals(&self) -> impl Iterator<Item = &Task> {
+        self.arrivals.iter()
+    }
+
+    /// Inject one externally routed arrival (the cluster path). Arrivals
+    /// must be pushed in non-decreasing arrival-time order and carry the
+    /// pool's next dense id, exactly like a pre-generated workload.
+    pub fn push_arrival(&mut self, task: Task) {
+        assert!(
+            self.arrivals.back().map_or(true, |b| b.arrival <= task.arrival),
+            "arrivals must be pushed in time order"
+        );
+        self.arrivals.push_back(task);
+    }
+
     /// Deliver all arrivals due at or before `now`.
     fn deliver_arrivals(&mut self, now: Micros) {
         let mut ids: Vec<TaskId> = Vec::new();
@@ -127,6 +165,38 @@ impl<C: Clock> Server<C> {
         }
     }
 
+    /// Execute one non-idle step: drive the engine, advance the clock,
+    /// and apply the outcome. Shared by [`Server::run`] and
+    /// [`Server::run_until`] so both paths step identically.
+    fn execute_step(&mut self, step: Step) -> Result<()> {
+        match step {
+            Step::Idle => unreachable!("execute_step called with Idle"),
+            Step::Prefill { task } => {
+                self.steps += 1;
+                self.prefill_steps += 1;
+                let outcome = self.engine.prefill(&self.pool, task)?;
+                self.clock.advance(outcome.duration);
+                let end = self.clock.now();
+                {
+                    let t = self.pool.get_mut(task);
+                    t.state = TaskState::Running;
+                    t.prefill_end = Some(end);
+                }
+                self.apply_outcome(outcome, end);
+            }
+            Step::Decode { tasks } => {
+                assert!(!tasks.is_empty(), "policy returned empty decode batch");
+                self.steps += 1;
+                self.decode_steps += 1;
+                let outcome = self.engine.decode(&self.pool, &tasks)?;
+                self.clock.advance(outcome.duration);
+                let end = self.clock.now();
+                self.apply_outcome(outcome, end);
+            }
+        }
+        Ok(())
+    }
+
     /// Run until all tasks finish or `horizon` is reached. Tasks still
     /// unfinished at the horizon keep their partial records (and count
     /// as SLO violations in the metrics).
@@ -140,46 +210,52 @@ impl<C: Clock> Server<C> {
 
             let step = self.policy.next_step(&mut self.pool, now);
             match step {
-                Step::Idle => {
-                    match self.arrivals.front().map(|t| t.arrival) {
-                        Some(next) => self.clock.advance_to(next.min(horizon)),
-                        None => break, // nothing running, nothing arriving
-                    }
-                }
-                Step::Prefill { task } => {
-                    self.steps += 1;
-                    self.prefill_steps += 1;
-                    let outcome = self.engine.prefill(&self.pool, task)?;
-                    self.clock.advance(outcome.duration);
-                    let end = self.clock.now();
-                    {
-                        let t = self.pool.get_mut(task);
-                        t.state = TaskState::Running;
-                        t.prefill_end = Some(end);
-                    }
-                    self.apply_outcome(outcome, end);
-                }
-                Step::Decode { tasks } => {
-                    assert!(!tasks.is_empty(), "policy returned empty decode batch");
-                    self.steps += 1;
-                    self.decode_steps += 1;
-                    let outcome = self.engine.decode(&self.pool, &tasks)?;
-                    self.clock.advance(outcome.duration);
-                    let end = self.clock.now();
-                    self.apply_outcome(outcome, end);
-                }
+                Step::Idle => match self.arrivals.front().map(|t| t.arrival) {
+                    Some(next) => self.clock.advance_to(next.min(horizon)),
+                    None => break, // nothing running, nothing arriving
+                },
+                step => self.execute_step(step)?,
             }
         }
+        Ok(self.finish())
+    }
 
-        let end_time = self.clock.now();
-        Ok(RunReport {
+    /// Drive the server until its clock reaches `until`, then return
+    /// control (the cluster path). An engine step that straddles `until`
+    /// is executed to completion — arrivals pushed afterwards are
+    /// delivered at the next iteration boundary, exactly as an arrival
+    /// during an in-flight forward pass would be on a single device.
+    /// When idle with no pending arrivals, the clock jumps to `until`.
+    pub fn run_until(&mut self, until: Micros) -> Result<()> {
+        loop {
+            let now = self.clock.now();
+            if now >= until {
+                return Ok(());
+            }
+            self.deliver_arrivals(now);
+
+            let step = self.policy.next_step(&mut self.pool, now);
+            match step {
+                Step::Idle => {
+                    let next = self.arrivals.front().map_or(until, |t| t.arrival.min(until));
+                    self.clock.advance_to(next);
+                }
+                step => self.execute_step(step)?,
+            }
+        }
+    }
+
+    /// Consume the server and build the final report at the current
+    /// clock (the terminal step of the incremental path).
+    pub fn finish(self) -> RunReport {
+        RunReport {
             policy: self.policy.name(),
+            end_time: self.clock.now(),
             tasks: self.pool.into_tasks(),
             steps: self.steps,
             decode_steps: self.decode_steps,
             prefill_steps: self.prefill_steps,
-            end_time,
-        })
+        }
     }
 }
 
@@ -269,6 +345,73 @@ mod tests {
         assert!(!t.is_finished());
         assert!(!t.slo_met());
         assert!(report.end_time >= secs(2.0));
+    }
+
+    #[test]
+    fn incremental_path_matches_run() {
+        // Feeding the same workload through push_arrival + run_until
+        // must reproduce Server::run exactly (the cluster contract).
+        let workload = vec![
+            mk_task(0, TaskClass::RealTime, 0, 10),
+            mk_task(1, TaskClass::Voice, secs(0.2), 20),
+            mk_task(2, TaskClass::TextQa, secs(0.9), 15),
+        ];
+        let horizon = secs(60.0);
+        let baseline = Server::new(
+            workload.clone(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        )
+        .run(horizon)
+        .unwrap();
+
+        let mut incremental = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        for task in workload {
+            incremental.run_until(task.arrival).unwrap();
+            incremental.push_arrival(task);
+        }
+        incremental.run_until(horizon).unwrap();
+        let report = incremental.finish();
+
+        assert_eq!(report.steps, baseline.steps);
+        for (a, b) in baseline.tasks.iter().zip(&report.tasks) {
+            assert_eq!(a.first_token, b.first_token);
+            assert_eq!(a.completion, b.completion);
+            assert_eq!(a.tokens_generated, b.tokens_generated);
+        }
+    }
+
+    #[test]
+    fn run_until_idle_jumps_to_target() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        s.run_until(secs(5.0)).unwrap();
+        assert_eq!(s.now(), secs(5.0));
+        assert_eq!(s.pool().len(), 0);
+        assert_eq!(s.pending_arrivals().count(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_order_push_rejected() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        s.push_arrival(mk_task(0, TaskClass::Voice, secs(2.0), 5));
+        s.push_arrival(mk_task(1, TaskClass::Voice, secs(1.0), 5));
     }
 
     #[test]

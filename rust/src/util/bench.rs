@@ -10,14 +10,20 @@ use super::stats::Samples;
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark case name.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: u64,
+    /// Mean per-call duration (ns).
     pub mean_ns: f64,
+    /// Median per-call duration (ns).
     pub p50_ns: f64,
+    /// 99th-percentile per-call duration (ns).
     pub p99_ns: f64,
 }
 
 impl BenchResult {
+    /// One aligned report line (see [`report_header`]).
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
@@ -30,6 +36,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable duration from nanoseconds (ns/us/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0}ns")

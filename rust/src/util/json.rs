@@ -12,15 +12,22 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value. Objects use a BTreeMap so output is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (integers are exact up to 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -34,6 +41,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Required object lookup.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
@@ -41,6 +49,7 @@ impl Json {
         }
     }
 
+    /// Optional object lookup.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +57,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -55,6 +65,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_u64(&self) -> Result<u64> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -63,10 +74,12 @@ impl Json {
         Ok(n as u64)
     }
 
+    /// This value as a usize.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_u64()? as usize)
     }
 
+    /// This value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -74,6 +87,7 @@ impl Json {
         }
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -81,6 +95,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -90,10 +105,12 @@ impl Json {
 
     // -- builders ----------------------------------------------------------
 
+    /// An empty object (builder root).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Builder: set `key` on an object, returning the object.
     pub fn set(mut self, key: &str, v: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut m) = self {
             m.insert(key.to_string(), v.into());
@@ -396,7 +413,8 @@ impl<'a> Parser<'a> {
         }
         while matches!(
             self.peek(),
-            Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-'
+            Some(c) if c.is_ascii_digit()
+                || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
         ) {
             self.pos += 1;
         }

@@ -1,5 +1,6 @@
 //! Small self-contained substrates: deterministic RNG, JSON, summary
-//! statistics, micro-bench timing helpers and a log facade backend.
+//! statistics, micro-bench timing helpers and a log facade backend
+//! (DESIGN.md "Dependency policy" — why these are in-tree).
 //!
 //! Dependency policy: the default build is fully offline. The only
 //! dependencies are the vendored `anyhow`/`log` **API shims** under
@@ -21,7 +22,9 @@ pub mod stats;
 /// the scheduler and simulator (integer math, no float drift).
 pub type Micros = u64;
 
+/// Microseconds per millisecond.
 pub const MICROS_PER_MS: u64 = 1_000;
+/// Microseconds per second.
 pub const MICROS_PER_SEC: u64 = 1_000_000;
 
 /// Convert milliseconds (possibly fractional) to [`Micros`].

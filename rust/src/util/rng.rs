@@ -26,6 +26,7 @@ impl Rng {
         Rng { s: [next_sm(), next_sm(), next_sm(), next_sm()] }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
@@ -64,6 +65,7 @@ impl Rng {
         }
     }
 
+    /// Uniform integer in [lo, hi] (inclusive), as usize.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }

@@ -8,23 +8,28 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// An empty sample set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
         self.sorted = false;
     }
 
+    /// Number of samples recorded.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;
@@ -32,14 +37,17 @@ impl Samples {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Sample standard deviation (n-1 denominator; 0 for n < 2).
     pub fn stddev(&self) -> f64 {
         if self.xs.len() < 2 {
             return 0.0;
@@ -70,14 +78,17 @@ impl Samples {
         }
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.quantile(0.50)
     }
 
+    /// 95th percentile.
     pub fn p95(&mut self) -> f64 {
         self.quantile(0.95)
     }
 
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.quantile(0.99)
     }

@@ -1,4 +1,10 @@
-//! Workload generation: the paper's evaluation workloads (§VI-A).
+//! Workload generation: the paper's evaluation workloads (§VI-A; the
+//! class mix and SLOs are the inputs to DESIGN.md's "Scheduling
+//! cycle").
+//!
+//! Contract: generators emit [`Task`]s sorted by arrival with dense
+//! ids — exactly what `server::Server::new` and `cluster::Router::run`
+//! require — and are deterministic per seed.
 //!
 //! Task arrivals follow a Poisson process; each task draws a class from a
 //! configurable mix (real-time machine-control, voice chat, text Q&A),
@@ -14,9 +20,13 @@ use crate::util::{secs, Micros, MICROS_PER_SEC};
 /// Length and utility profile for one task class.
 #[derive(Debug, Clone, Copy)]
 pub struct ClassProfile {
+    /// The task class this profile generates.
     pub class: TaskClass,
+    /// Scheduling weight U_i for the class.
     pub utility: f64,
+    /// Inclusive prompt-length range (tokens).
     pub prompt_range: (u32, u32),
+    /// Inclusive output-length range (tokens).
     pub output_range: (u32, u32),
 }
 
@@ -142,11 +152,9 @@ impl WorkloadSpec {
             }
             let profile = self.mix[rng.weighted_index(&weights)].0;
             let prompt_len =
-                rng.range_u64(profile.prompt_range.0 as u64, profile.prompt_range.1 as u64)
-                    as u32;
+                rng.range_u64(profile.prompt_range.0 as u64, profile.prompt_range.1 as u64) as u32;
             let output_len =
-                rng.range_u64(profile.output_range.0 as u64, profile.output_range.1 as u64)
-                    as u32;
+                rng.range_u64(profile.output_range.0 as u64, profile.output_range.1 as u64) as u32;
             let mut task = Task::new(
                 id as u64,
                 profile.class,

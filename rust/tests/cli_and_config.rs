@@ -112,6 +112,31 @@ seed = 3
 }
 
 #[test]
+fn cluster_subcommand_reports_fleet_and_replicas() {
+    let out = Command::new(bin())
+        .args([
+            "cluster", "--replicas", "4", "--strategy", "slo-aware", "--rate", "2.0",
+            "--n-tasks", "40", "--seed", "9",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("strategy=slo-aware replicas=4"), "{text}");
+    assert!(text.contains("overall SLO attainment"), "{text}");
+    assert!(text.contains("per-replica:"), "{text}");
+    assert!(text.contains("TTFT p50 / p95 / p99"), "{text}");
+
+    // bad strategy is an argument-level error
+    let out = Command::new(bin())
+        .args(["cluster", "--replicas", "2", "--strategy", "hash"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown routing strategy"));
+}
+
+#[test]
 fn unknown_experiment_fails_cleanly() {
     let out = Command::new(bin())
         .args(["experiment", "fig99"])
@@ -159,6 +184,7 @@ fn trace_save_and_replay_round_trip() {
             .collect::<Vec<_>>()
             .join("\n")
     };
-    assert_eq!(tail(&first.replace(&format!("saved workload trace to {}\n", path.display()), "")), tail(&second));
+    let save_line = format!("saved workload trace to {}\n", path.display());
+    assert_eq!(tail(&first.replace(&save_line, "")), tail(&second));
     std::fs::remove_file(&path).ok();
 }

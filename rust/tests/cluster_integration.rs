@@ -1,0 +1,163 @@
+//! Cluster-layer integration tests: determinism, single-replica
+//! equivalence with the single-device path, routing-quality ordering,
+//! and coverage invariants (the ISSUE-2 acceptance contract).
+
+use slice_serve::cluster::RoutingStrategy;
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::Task;
+use slice_serve::experiments::{default_drain, run_cluster, run_sim};
+use slice_serve::metrics::Attainment;
+use slice_serve::workload::WorkloadSpec;
+
+fn workload(rate: f64, n: usize, seed: u64) -> Vec<Task> {
+    WorkloadSpec::paper_mix(rate, 0.7, n, seed).generate()
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig::default()
+}
+
+/// (a) Cluster runs are deterministic for a fixed seed: two identical
+/// runs produce identical per-task records and identical routing.
+#[test]
+fn cluster_runs_are_deterministic() {
+    for strategy in RoutingStrategy::ALL {
+        let a = run_cluster(strategy, 3, workload(2.0, 150, 5), &cfg(), default_drain())
+            .unwrap();
+        let b = run_cluster(strategy, 3, workload(2.0, 150, 5), &cfg(), default_drain())
+            .unwrap();
+        let (ta, tb) = (a.tasks(), b.tasks());
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.id, y.id, "{strategy:?} routed differently");
+            assert_eq!(x.first_token, y.first_token);
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.tokens_generated, y.tokens_generated);
+        }
+        for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(ra.routed, rb.routed);
+            assert_eq!(ra.report.steps, rb.report.steps);
+        }
+    }
+}
+
+/// (b) A 1-replica cluster reproduces the single-server result exactly:
+/// same per-task timing records, token counts and engine step totals.
+#[test]
+fn single_replica_matches_single_server() {
+    for kind in [PolicyKind::Slice, PolicyKind::Orca, PolicyKind::FastServe] {
+        let cfg = ServeConfig { policy: kind, ..ServeConfig::default() };
+        let wl = workload(1.0, 120, 9);
+        let single = run_sim(kind, wl.clone(), &cfg, default_drain()).unwrap();
+        for strategy in RoutingStrategy::ALL {
+            let cluster = run_cluster(strategy, 1, wl.clone(), &cfg, default_drain())
+                .unwrap();
+            let tasks = cluster.tasks();
+            assert_eq!(tasks.len(), single.tasks.len());
+            for (s, c) in single.tasks.iter().zip(&tasks) {
+                assert_eq!(s.id, c.id);
+                assert_eq!(s.first_token, c.first_token, "{kind:?}/{strategy:?}");
+                assert_eq!(s.last_token, c.last_token);
+                assert_eq!(s.completion, c.completion);
+                assert_eq!(s.tokens_generated, c.tokens_generated);
+                assert_eq!(s.max_token_gap, c.max_token_gap);
+            }
+            assert_eq!(cluster.total_steps(), single.steps, "{kind:?}/{strategy:?}");
+        }
+    }
+}
+
+/// (c) On a heterogeneous SLO mix at equal load, SLO-aware routing
+/// attains at least round-robin's fleet attainment.
+#[test]
+fn slo_aware_routing_at_least_round_robin() {
+    // Equal per-replica pressure: 4 replicas at 4x the single-device
+    // saturation rate, heterogeneous paper mix (RT deadlines + voice +
+    // text Q&A SLOs).
+    let cfg = cfg();
+    let wl = || workload(4.0, 480, 42);
+    let rr = run_cluster(RoutingStrategy::RoundRobin, 4, wl(), &cfg, default_drain())
+        .unwrap();
+    let slo = run_cluster(RoutingStrategy::SloAware, 4, wl(), &cfg, default_drain())
+        .unwrap();
+    let (a_rr, a_slo) = (rr.fleet_attainment(), slo.fleet_attainment());
+    assert!(
+        a_slo.slo >= a_rr.slo,
+        "slo-aware fleet attainment {} < round-robin {}",
+        a_slo.slo,
+        a_rr.slo
+    );
+    assert!(
+        a_slo.rt_slo >= a_rr.rt_slo,
+        "slo-aware RT attainment {} < round-robin {}",
+        a_slo.rt_slo,
+        a_rr.rt_slo
+    );
+}
+
+/// Every task is routed exactly once, to exactly one replica, for every
+/// strategy and fleet width.
+#[test]
+fn routing_covers_workload_exactly_once() {
+    for strategy in RoutingStrategy::ALL {
+        for n in [1usize, 2, 4, 7] {
+            let report =
+                run_cluster(strategy, n, workload(2.0, 90, 13), &cfg(), default_drain())
+                    .unwrap();
+            assert_eq!(report.replicas.len(), n);
+            assert_eq!(
+                report.routed_ids(),
+                (0..90).collect::<Vec<u64>>(),
+                "{strategy:?}/{n} lost or duplicated tasks"
+            );
+            let routed_sum: usize = report.replicas.iter().map(|r| r.routed).sum();
+            assert_eq!(routed_sum, 90);
+        }
+    }
+}
+
+/// Adding replicas at fixed total load never hurts fleet attainment
+/// (capacity monotonicity sanity check for the SLO-aware strategy).
+#[test]
+fn more_replicas_do_not_hurt_attainment() {
+    let cfg = cfg();
+    let wl = || workload(3.0, 240, 21);
+    let one = run_cluster(RoutingStrategy::SloAware, 1, wl(), &cfg, default_drain())
+        .unwrap()
+        .fleet_attainment();
+    let four = run_cluster(RoutingStrategy::SloAware, 4, wl(), &cfg, default_drain())
+        .unwrap()
+        .fleet_attainment();
+    assert!(
+        four.slo >= one.slo,
+        "4 replicas {} < 1 replica {}",
+        four.slo,
+        one.slo
+    );
+    assert!(four.n_finished >= one.n_finished);
+}
+
+/// Fleet attainment equals attainment computed over the union of
+/// per-replica task sets (no double counting in aggregation).
+#[test]
+fn fleet_attainment_consistent_with_replica_reports() {
+    let report = run_cluster(
+        RoutingStrategy::LeastLoaded,
+        3,
+        workload(2.0, 120, 33),
+        &cfg(),
+        default_drain(),
+    )
+    .unwrap();
+    let fleet = report.fleet_attainment();
+    let mut all: Vec<Task> = report
+        .replicas
+        .iter()
+        .flat_map(|r| r.report.tasks.iter().cloned())
+        .collect();
+    all.sort_by_key(|t| t.id);
+    let manual = Attainment::compute(&all);
+    assert_eq!(fleet.n_tasks, manual.n_tasks);
+    assert_eq!(fleet.n_finished, manual.n_finished);
+    assert_eq!(fleet.slo, manual.slo);
+}

@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Run the mirrored slice-serve experiments and emit EXPERIMENTS.md /
+BENCH_2.json inputs.
+
+Stages:
+  1. self-check — re-assert a battery of the Rust suite's own unit/
+     integration expectations against the mirror (workload statistics,
+     latency-model constraints, Alg. 2/3 worked examples, serving-loop
+     step counts, Fig. 11 attainment shapes). A mirror drift fails here.
+  2. fig1 — the calibrated-model latency/throughput table.
+  3. cluster_sweep — routing strategies x replica counts (SLICE policy),
+     per-replica load held constant, plus the integration-test cells the
+     Rust suite asserts (threshold validation).
+
+Usage: python3 tools/pysim/run_experiments.py [--out results.json]
+"""
+
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+from slice_sim import (  # noqa: E402
+    CYCLE_CAP, DecodeMask, LatencyModel, OrcaPolicy, Rng, Server, SlicePolicy,
+    attainment, latency_summary, paper_mix, period_eq7, run_cluster,
+    select_tasks, secs,
+)
+
+LAT = LatencyModel.paper_calibrated()
+
+
+def check(cond, label):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {label}")
+    if not cond:
+        raise SystemExit(f"self-check failed: {label}")
+
+
+def run_single(policy_name, rate, rt_ratio, n, seed, drain_s=120.0):
+    wl = paper_mix(rate, rt_ratio, n, seed)
+    horizon = (wl[-1].arrival if wl else 0) + secs(drain_s)
+    policy = SlicePolicy(LAT) if policy_name == "slice" else OrcaPolicy(32)
+    s = Server(wl, policy, LAT)
+    s.run(horizon)
+    return s
+
+
+def self_check():
+    print("stage 1: mirror self-check against the Rust suite's expectations")
+
+    # rng distributions (util/rng.rs tests)
+    r = Rng(11)
+    mean = sum(r.exponential(2.0) for _ in range(200_000)) / 200_000
+    check(abs(mean - 0.5) < 0.01, f"exponential mean {mean:.4f} ~ 0.5")
+    r = Rng(17)
+    counts = [0, 0, 0]
+    for _ in range(30_000):
+        counts[r.weighted_index([1.0, 2.0, 7.0])] += 1
+    check(abs(counts[2] / 30_000 - 0.7) < 0.03, "weighted_index fractions")
+
+    # workload (workload/mod.rs tests)
+    wl = paper_mix(1.0, 0.7, 200, 42)
+    check(len(wl) == 200 and all(a.arrival <= b.arrival for a, b in zip(wl, wl[1:])),
+          "paper_mix sorted dense")
+    wl = paper_mix(1.0, 0.7, 5000, 11)
+    frac_rt = sum(t.is_real_time() for t in wl) / len(wl)
+    check(abs(frac_rt - 0.7) < 0.03, f"rt fraction {frac_rt:.3f} ~ 0.7 (seed 11)")
+    wl = paper_mix(2.0, 0.5, 20_000, 13)
+    gap = wl[-1].arrival / 1e6 / (len(wl) - 1)
+    check(abs(gap - 0.5) < 0.02, f"poisson mean gap {gap:.4f} ~ 0.5 (seed 13)")
+    wl = paper_mix(1.0, 0.7, 5000, 3)
+    demand = sum(t.output_len for t in wl) / (wl[-1].arrival / 1e6)
+    check(70.0 < demand < 140.0, f"demand {demand:.1f} tok/s at saturation knee")
+
+    # latency model (engine/latency.rs tests)
+    check(LAT.decode(8) <= 100_000 < LAT.decode(9) == 128_590, "l(8)/l(9) knots")
+    check(4 * LAT.decode(9) + LAT.decode(3) + 5 * LAT.decode(7) < 1_000_000,
+          "Table II period feasible")
+
+    # Alg. 2 / Alg. 3 worked examples (selection.rs / mask.rs tests)
+    cands = [(i, 1.0, t) for i, t in enumerate(
+        [100_000] * 3 + [120_000] * 4 + [250_000] * 2)]
+    sel, rej = select_tasks(cands, LAT, CYCLE_CAP)
+    check(len(sel) == 9 and not rej, "Table II: all 9 admitted")
+    m = DecodeMask([(0, 6), (1, 4), (2, 2), (3, 1)])
+    check(m.batch_lens == [4, 3, 2, 2, 1, 1], "Fig. 4 mask columns")
+    check(period_eq7([6, 4, 2, 1], LAT)
+          == LAT.decode(4) + LAT.decode(3) + 2 * LAT.decode(2) + 2 * LAT.decode(1),
+          "Eq. 7 equals column sum")
+
+    # serving loop (server.rs tests)
+    from slice_sim import Task, VOICE
+    s = Server([Task(0, VOICE, 0, 16, 10, 1.0)], OrcaPolicy(32), LAT)
+    s.run(secs(60.0))
+    check(s.prefill_steps == 1 and s.decode_steps == 9, "orca single-task steps")
+    check(s.pool[0].avg_tpot() == 18_000, "orca solo TPOT = l(1)")
+
+    # Fig. 11 shapes (rate_sweep.rs + sim_integration.rs tests)
+    t0 = time.time()
+    slice_3 = run_single("slice", 3.0, 0.7, 300, 42)
+    a_slice = attainment(slice_3.pool)
+    check(a_slice["rt_slo"] > 0.9, f"SLICE RT {a_slice['rt_slo']:.3f} > 0.9 @ rate 3")
+    orca_3 = run_single("orca", 3.0, 0.7, 300, 42)
+    a_orca = attainment(orca_3.pool)
+    check(a_slice["rt_slo"] - a_orca["rt_slo"] > 0.4, "SLICE-Orca RT gap @ rate 3")
+    check(a_slice["slo"] / max(a_orca["slo"], 0.01) > 3.0,
+          f"overall advantage {a_slice['slo'] / max(a_orca['slo'], 0.01):.1f}x > 3x")
+    orca_5 = run_single("orca", 5.0, 0.7, 300, 42)
+    check(attainment(orca_5.pool)["rt_slo"] < 0.3, "Orca RT collapse @ rate 5")
+    print(f"  (fig11 cells in {time.time() - t0:.1f}s)")
+
+    # cluster: N=1 == single server, determinism
+    wl1 = paper_mix(1.0, 0.7, 120, 9)
+    single = run_single("slice", 1.0, 0.7, 120, 9)
+    for strat in ("round-robin", "least-loaded", "slo-aware"):
+        tasks, per = run_cluster(strat, 1, paper_mix(1.0, 0.7, 120, 9), secs(120.0))
+        same = all(
+            a.first_token == b.first_token and a.completion == b.completion
+            and a.tokens_generated == b.tokens_generated
+            for a, b in zip(single.pool, tasks))
+        check(same and per[0][2] == single.steps, f"N=1 {strat} == single server")
+    del wl1
+    a1, _ = run_cluster("slo-aware", 3, paper_mix(2.0, 0.7, 150, 5), secs(120.0))
+    a2, _ = run_cluster("slo-aware", 3, paper_mix(2.0, 0.7, 150, 5), secs(120.0))
+    check(all(x.completion == y.completion for x, y in zip(a1, a2)),
+          "cluster determinism (seed 5)")
+    print()
+
+
+def fig1_table():
+    rows = []
+    for b in range(1, 17):
+        lat_ms = LAT.decode(b) / 1e3
+        tps = LAT.throughput(b)
+        rows.append({"batch": b, "latency_ms": lat_ms,
+                     "throughput_tps": tps, "per_task_tps": tps / b})
+    return rows
+
+
+def cluster_cell(strategy, replicas, rate, rt_ratio, n_tasks, seed):
+    wl = paper_mix(rate * replicas, rt_ratio, n_tasks * replicas, seed)
+    t0 = time.time()
+    tasks, per = run_cluster(strategy, replicas, wl, secs(120.0))
+    wall = time.time() - t0
+    att = attainment(tasks)
+    lat = latency_summary(tasks)
+    return {
+        "replicas": replicas, "strategy": strategy,
+        "slo": att["slo"], "rt_slo": att["rt_slo"], "nrt_slo": att["nrt_slo"],
+        "n_tasks": att["n_tasks"], "n_finished": att["n_finished"],
+        "ttft_p50_ms": lat["ttft"]["p50_ms"], "ttft_p99_ms": lat["ttft"]["p99_ms"],
+        "tpot_p50_ms": lat["tpot"]["p50_ms"], "tpot_p99_ms": lat["tpot"]["p99_ms"],
+        "routed": [p[1] for p in per], "total_steps": sum(p[2] for p in per),
+        "harness_wall_s": round(wall, 2),
+    }
+
+
+def main():
+    out_path = None
+    if "--out" in sys.argv:
+        out_path = sys.argv[sys.argv.index("--out") + 1]
+
+    self_check()
+
+    print("stage 2: fig1 (calibrated latency model)")
+    fig1 = fig1_table()
+    for r in fig1:
+        print(f"  b={r['batch']:>2}  l={r['latency_ms']:7.2f}ms  "
+              f"tp={r['throughput_tps']:7.2f} tok/s  per-task={r['per_task_tps']:5.2f}")
+    print()
+
+    print("stage 3: cluster_sweep (SLICE policy, per-replica rate 1.0, "
+          "RT:NRT 7:3, 200 tasks/replica, seed 42)")
+    sweep = []
+    for n in (1, 2, 4):
+        for strat in ("round-robin", "least-loaded", "slo-aware"):
+            cell = cluster_cell(strat, n, 1.0, 0.7, 200, 42)
+            sweep.append(cell)
+            print(f"  replicas={n} {strat:<13} slo={cell['slo']:.4f} "
+                  f"rt={cell['rt_slo']:.4f} nrt={cell['nrt_slo']:.4f} "
+                  f"ttft_p99={cell['ttft_p99_ms']:.1f}ms "
+                  f"tpot_p99={cell['tpot_p99_ms']:.1f}ms routed={cell['routed']} "
+                  f"({cell['harness_wall_s']}s)")
+    print()
+
+    print("stage 4: rust integration-test cells (threshold validation)")
+    cells = {}
+    # slo_aware_routing_at_least_round_robin: rate 4.0, 480 tasks, seed 42, 4 reps
+    for strat in ("round-robin", "slo-aware"):
+        wl = paper_mix(4.0, 0.7, 480, 42)
+        tasks, _ = run_cluster(strat, 4, wl, secs(120.0))
+        cells[f"test_{strat}"] = attainment(tasks)
+        a = cells[f"test_{strat}"]
+        print(f"  test cell {strat:<13} slo={a['slo']:.4f} rt={a['rt_slo']:.4f}")
+    # more_replicas_do_not_hurt: rate 3.0, 240 tasks, seed 21, slo-aware 1 vs 4
+    for n in (1, 4):
+        wl = paper_mix(3.0, 0.7, 240, 21)
+        tasks, _ = run_cluster("slo-aware", n, wl, secs(120.0))
+        cells[f"mono_{n}"] = attainment(tasks)
+        a = cells[f"mono_{n}"]
+        print(f"  monotonicity n={n} slo={a['slo']:.4f} finished={a['n_finished']}")
+    # cluster_sweep unit test cfg: n_tasks=120, rate 1.0, seed 42, width 4
+    for strat in ("round-robin", "slo-aware"):
+        wl = paper_mix(1.0 * 4, 0.7, 120 * 4, 42)  # 4 replicas, 120 tasks each
+        tasks, _ = run_cluster(strat, 4, wl, secs(120.0))
+        cells[f"unit_{strat}"] = attainment(tasks)
+        a = cells[f"unit_{strat}"]
+        print(f"  unit cell {strat:<13} slo={a['slo']:.4f} rt={a['rt_slo']:.4f}")
+    print()
+
+    doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells}
+    if out_path:
+        Path(out_path).write_text(json.dumps(doc, indent=2))
+        print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

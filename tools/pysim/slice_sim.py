@@ -1,0 +1,693 @@
+"""Bit-exact Python mirror of the slice-serve deterministic simulator.
+
+Purpose: produce *measured* experiment numbers in environments without a
+Rust toolchain (EXPERIMENTS.md records which harness produced each
+table). Every algorithm here mirrors the Rust source line by line:
+
+  Rng               <- rust/src/util/rng.rs        (xoshiro256++ / SplitMix64)
+  LatencyModel      <- rust/src/engine/latency.rs  (piecewise-linear l(b))
+  Task / SloSpec    <- rust/src/coordinator/task.rs
+  select_tasks      <- rust/src/coordinator/selection.rs (Alg. 2)
+  DecodeMask        <- rust/src/coordinator/mask.rs      (Alg. 3)
+  SlicePolicy       <- rust/src/coordinator/slice.rs     (Alg. 1/4)
+  OrcaPolicy        <- rust/src/coordinator/orca.rs
+  Server            <- rust/src/server.rs (run / run_until / finish)
+  Replica / Router  <- rust/src/cluster/*.rs
+  Attainment etc.   <- rust/src/metrics/mod.rs
+  WorkloadSpec      <- rust/src/workload/mod.rs
+
+All scheduler/clock arithmetic is integer microseconds, so results are
+reproducible bit-for-bit; the only float ops (Poisson inter-arrivals,
+utility rates) use IEEE-754 doubles exactly as the Rust code does (the
+single `log` call may differ from Rust's `ln` by 1 ulp on exotic libms,
+which can shift an arrival timestamp by at most 1 µs).
+"""
+
+from __future__ import annotations
+
+import math
+from bisect import bisect_left
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, List, Optional, Tuple
+
+MASK64 = (1 << 64) - 1
+CYCLE_CAP = 1_000_000
+
+# ---------------------------------------------------------------- rng ----
+
+
+class Rng:
+    """xoshiro256++ seeded via SplitMix64 (util/rng.rs)."""
+
+    def __init__(self, seed: int) -> None:
+        s = []
+        sm = seed & MASK64
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        x = (s[0] + s[3]) & MASK64
+        result = (((x << 23) | (x >> 41)) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & MASK64
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_u64(self, lo: int, hi: int) -> int:
+        assert lo <= hi
+        span = hi - lo + 1
+        zone = MASK64 - (MASK64 % span)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return lo + v % span
+
+    def chance(self, p: float) -> bool:
+        return self.f64() < p
+
+    def exponential(self, lam: float) -> float:
+        assert lam > 0.0
+        u = self.f64()
+        if u <= 0.0:
+            u = 2.2250738585072014e-308  # f64::MIN_POSITIVE
+        return -math.log(1.0 - u) / lam
+
+    def weighted_index(self, weights: List[float]) -> int:
+        total = sum(weights)
+        assert total > 0.0
+        x = self.f64() * total
+        for i, w in enumerate(weights):
+            if x < w:
+                return i
+            x -= w
+        return len(weights) - 1
+
+
+def rust_round(x: float) -> int:
+    """f64::round — half away from zero (positive inputs only here)."""
+    return int(math.floor(x + 0.5))
+
+
+def ms(v: float) -> int:
+    return rust_round(v * 1_000.0)
+
+
+def secs(v: float) -> int:
+    return rust_round(v * 1_000_000.0)
+
+
+# ------------------------------------------------------- latency model ----
+
+
+class LatencyModel:
+    def __init__(self, points, prefill_points, max_batch) -> None:
+        self.points = points
+        self.prefill_points = prefill_points
+        self.max_batch = max_batch
+        self._decode_cache = {}
+
+    @staticmethod
+    def paper_calibrated() -> "LatencyModel":
+        return LatencyModel(
+            [(1, ms(18.0)), (2, ms(28.0)), (3, ms(40.0)), (4, ms(52.0)),
+             (5, ms(64.0)), (6, ms(75.0)), (7, ms(85.0)), (8, ms(95.0)),
+             (9, ms(128.59)), (12, ms(131.0)), (16, ms(134.0)),
+             (24, ms(139.0)), (32, ms(145.0))],
+            [(16, ms(30.0)), (32, ms(45.0)), (64, ms(75.0))],
+            32,
+        )
+
+    @staticmethod
+    def _interp(points, x: int) -> int:
+        x0, y0 = points[0]
+        if x <= x0:
+            return y0
+        for (xa, ya), (xb, yb) in zip(points, points[1:]):
+            if x <= xb:
+                frac = (x - xa) / (xb - xa)
+                return rust_round(ya + frac * (yb - ya))
+        return points[-1][1]
+
+    def decode(self, b: int) -> int:
+        v = self._decode_cache.get(b)
+        if v is None:
+            v = self._interp(self.points, b)
+            self._decode_cache[b] = v
+        return v
+
+    def prefill(self, length: int) -> int:
+        if not self.prefill_points:
+            return 0
+        return self._interp(self.prefill_points, length)
+
+    def throughput(self, b: int) -> float:
+        if b == 0:
+            return 0.0
+        return b / (self.decode(b) / 1e6)
+
+
+# ----------------------------------------------------------- SLO model ----
+
+RT, VOICE, TEXTQA = "real-time", "voice", "text-qa"
+
+
+@dataclass
+class SloSpec:
+    ttft: int
+    tpot: int
+    deadline: Optional[int]
+
+    @staticmethod
+    def for_class(cls: str) -> "SloSpec":
+        if cls == RT:
+            return SloSpec(500_000, 50_000, 1_500_000)
+        if cls == VOICE:
+            return SloSpec(1_000_000, 125_000, None)
+        return SloSpec(1_000_000, 100_000, None)
+
+    def tokens_per_cycle(self) -> int:
+        return math.ceil(1e6 / self.tpot)
+
+
+WAITING, ADMITTED, RUNNING, PAUSED, FINISHED = range(5)
+
+
+@dataclass
+class Task:
+    id: int
+    cls: str
+    arrival: int
+    prompt_len: int
+    output_len: int
+    utility: float
+    slo: SloSpec = field(default=None)  # type: ignore[assignment]
+    state: int = WAITING
+    prefill_end: Optional[int] = None
+    first_token: Optional[int] = None
+    last_token: Optional[int] = None
+    completion: Optional[int] = None
+    tokens_generated: int = 0
+    max_token_gap: int = 0
+
+    def __post_init__(self) -> None:
+        if self.slo is None:
+            self.slo = SloSpec.for_class(self.cls)
+
+    def is_real_time(self) -> bool:
+        return self.cls == RT
+
+    def on_token(self, now: int) -> None:
+        if self.first_token is None:
+            self.first_token = now
+        elif self.last_token is not None:
+            gap = now - self.last_token
+            if gap > self.max_token_gap:
+                self.max_token_gap = gap
+        self.last_token = now
+        self.tokens_generated += 1
+        if self.tokens_generated >= self.output_len:
+            self.state = FINISHED
+            self.completion = now
+
+    def is_finished(self) -> bool:
+        return self.state == FINISHED
+
+    def ttft(self) -> Optional[int]:
+        return None if self.first_token is None else self.first_token - self.arrival
+
+    def avg_tpot(self) -> Optional[int]:
+        if self.first_token is None or self.last_token is None:
+            return None
+        if self.tokens_generated >= 2:
+            return (self.last_token - self.first_token) // (self.tokens_generated - 1)
+        return 0
+
+    def completion_time(self) -> Optional[int]:
+        return None if self.completion is None else self.completion - self.arrival
+
+    def slo_met(self) -> bool:
+        if not self.is_finished():
+            return False
+        if self.slo.deadline is not None:
+            c = self.completion_time()
+            return c is not None and c <= self.slo.deadline
+        return self.ttft_met() and self.tpot_met()
+
+    def ttft_met(self) -> bool:
+        t = self.ttft()
+        return t is not None and t <= self.slo.ttft
+
+    def tpot_met(self) -> bool:
+        t = self.avg_tpot()
+        return t is not None and t <= self.slo.tpot
+
+    def remaining_tokens(self) -> int:
+        return max(0, self.output_len - self.tokens_generated)
+
+
+# ------------------------------------------------------------ workload ----
+
+PROFILES = {
+    RT: (100.0, (8, 24), (6, 14)),
+    VOICE: (1.0, (8, 32), (150, 350)),
+    TEXTQA: (2.0, (16, 48), (150, 350)),
+}
+
+
+def paper_mix(arrival_rate: float, rt_ratio: float, n_tasks: int, seed: int):
+    nrt = max(1.0 - rt_ratio, 0.0)
+    mix = [(RT, rt_ratio), (VOICE, nrt / 2.0), (TEXTQA, nrt / 2.0)]
+    rng = Rng(seed)
+    weights = [w for _, w in mix]
+    tasks = []
+    t = 0.0
+    for tid in range(n_tasks):
+        if tid > 0:
+            t += rng.exponential(arrival_rate)
+        cls = mix[rng.weighted_index(weights)][0]
+        utility, prange, orange = PROFILES[cls]
+        prompt_len = rng.range_u64(prange[0], prange[1])
+        output_len = rng.range_u64(orange[0], orange[1])
+        tasks.append(Task(tid, cls, secs(t), prompt_len, output_len, utility))
+    return tasks
+
+
+# ----------------------------------------------------------- selection ----
+
+
+def period_eq7(vs_sorted_desc: List[int], lat: LatencyModel) -> int:
+    n = len(vs_sorted_desc)
+    if n == 0:
+        return 0
+    t = vs_sorted_desc[-1] * lat.decode(n)
+    for j in range(n - 1):
+        t += (vs_sorted_desc[j] - vs_sorted_desc[j + 1]) * lat.decode(j + 1)
+    return t
+
+
+def quota_of(tpot: int) -> int:
+    return math.ceil(1e6 / tpot)
+
+
+def select_tasks(candidates, lat: LatencyModel, cycle_cap: int):
+    """candidates: list of (id, utility, tpot). Mirrors Alg. 2."""
+    order = sorted(candidates, key=lambda c: (-(c[1] * (c[2] / 1e6)), c[0]))
+    selected: List[Tuple[int, int]] = []
+    quotas_desc: List[int] = []
+    rejected: List[int] = []
+    stopped = False
+    for cid, _u, tpot in order:
+        if stopped or len(selected) >= lat.max_batch:
+            rejected.append(cid)
+            continue
+        q = quota_of(tpot)
+        # partition_point(|v| v >= q) on a descending list
+        pos = bisect_left([-v for v in quotas_desc], -q)
+        quotas_desc.insert(pos, q)
+        p = period_eq7(quotas_desc, lat)
+        if p >= cycle_cap:
+            quotas_desc.pop(pos)
+            rejected.append(cid)
+            stopped = True
+            continue
+        selected.append((cid, q))
+    return selected, rejected
+
+
+class DecodeMask:
+    def __init__(self, tasks: List[Tuple[int, int]]) -> None:
+        assert all(v > 0 for _, v in tasks)
+        rows = sorted(tasks, key=lambda r: (-r[1], r[0]))
+        self.rows = rows
+        self.columns = rows[0][1] if rows else 0
+        self.batch_lens = []
+        for j in range(self.columns):
+            n = 0
+            for _, v in rows:
+                if v > j:
+                    n += 1
+                else:
+                    break
+            self.batch_lens.append(n)
+
+    def is_empty(self) -> bool:
+        return not self.rows
+
+    def column_batch(self, j: int) -> List[Tuple[int, int]]:
+        return self.rows[: self.batch_lens[j]]
+
+
+# -------------------------------------------------------------- policies --
+
+
+class SlicePolicy:
+    name = "SLICE"
+
+    def __init__(self, lat: LatencyModel, cycle_cap: int = CYCLE_CAP) -> None:
+        self.lat = lat
+        self.cycle_cap = cycle_cap
+        self.mask: Optional[DecodeMask] = None
+        self.col = 0
+        self.to_prefill: deque = deque()
+        self.needs_reschedule = False
+        self.reschedules = 0
+
+    def on_arrival(self, pool, ids, now) -> None:
+        self.needs_reschedule = True
+
+    def on_completion(self, pool, ids, now) -> None:
+        self.needs_reschedule = True
+
+    def _reschedule(self, pool) -> None:
+        self.reschedules += 1
+        candidates = [
+            (t.id, t.utility, t.slo.tpot) for t in pool if not t.is_finished()
+        ]
+        selected, rejected = select_tasks(candidates, self.lat, self.cycle_cap)
+        self.to_prefill.clear()
+        for tid, _q in selected:
+            t = pool[tid]
+            if t.state in (WAITING, ADMITTED):
+                t.state = ADMITTED
+                self.to_prefill.append(tid)
+            elif t.state == PAUSED:
+                t.state = RUNNING
+        for tid in rejected:
+            t = pool[tid]
+            if t.state in (RUNNING, ADMITTED):
+                t.state = PAUSED if t.prefill_end is not None else WAITING
+        self.mask = DecodeMask(selected) if selected else None
+        self.col = 0
+        self.needs_reschedule = False
+
+    def next_step(self, pool, now):
+        if self.needs_reschedule:
+            self._reschedule(pool)
+        while self.to_prefill:
+            tid = self.to_prefill.popleft()
+            if not pool[tid].is_finished():
+                return ("prefill", tid)
+        mask = self.mask
+        if mask is None or mask.is_empty():
+            return ("idle", None)
+        for _ in range(mask.columns):
+            j = self.col
+            self.col = (self.col + 1) % mask.columns
+            batch = [
+                tid for tid, _q in mask.column_batch(j) if pool[tid].state == RUNNING
+            ]
+            if batch:
+                return ("decode", batch)
+        return ("idle", None)
+
+
+class OrcaPolicy:
+    name = "Orca"
+
+    def __init__(self, max_batch: int) -> None:
+        self.max_batch = max_batch
+        self.waiting: deque = deque()
+        self.running: List[int] = []
+
+    def on_arrival(self, pool, ids, now) -> None:
+        self.waiting.extend(ids)
+
+    def on_completion(self, pool, ids, now) -> None:
+        gone = set(ids)
+        self.running = [i for i in self.running if i not in gone]
+
+    def next_step(self, pool, now):
+        while len(self.running) < self.max_batch and self.waiting:
+            tid = self.waiting.popleft()
+            if pool[tid].is_finished():
+                continue
+            pool[tid].state = ADMITTED
+            self.running.append(tid)
+        for tid in self.running:
+            if pool[tid].state == ADMITTED:
+                return ("prefill", tid)
+        batch = [tid for tid in self.running if pool[tid].state == RUNNING]
+        return ("decode", batch) if batch else ("idle", None)
+
+
+# ---------------------------------------------------------------- server --
+
+
+class Server:
+    """Mirrors server.rs over the sim engine + virtual clock."""
+
+    def __init__(self, workload: List[Task], policy, lat: LatencyModel) -> None:
+        assert all(
+            a.arrival <= b.arrival for a, b in zip(workload, workload[1:])
+        ), "workload must be sorted by arrival"
+        self.pool: List[Task] = []
+        self.policy = policy
+        self.lat = lat
+        self.clock = 0
+        self.arrivals: deque = deque(workload)
+        self.steps = 0
+        self.decode_steps = 0
+        self.prefill_steps = 0
+
+    def now(self) -> int:
+        return self.clock
+
+    def push_arrival(self, task: Task) -> None:
+        assert not self.arrivals or self.arrivals[-1].arrival <= task.arrival
+        self.arrivals.append(task)
+
+    def _deliver_arrivals(self, now: int) -> None:
+        ids = []
+        while self.arrivals and self.arrivals[0].arrival <= now:
+            t = self.arrivals.popleft()
+            assert t.id == len(self.pool), "task ids must be dense"
+            ids.append(t.id)
+            self.pool.append(t)
+        if ids:
+            self.policy.on_arrival(self.pool, ids, now)
+
+    def _apply_outcome(self, token_ids: List[int], now: int) -> None:
+        completed = []
+        for tid in token_ids:
+            t = self.pool[tid]
+            if t.is_finished():
+                continue
+            t.on_token(now)
+            if t.is_finished():
+                completed.append(tid)
+        if completed:
+            self.policy.on_completion(self.pool, completed, now)
+
+    def _execute(self, step) -> None:
+        kind, payload = step
+        if kind == "prefill":
+            self.steps += 1
+            self.prefill_steps += 1
+            duration = self.lat.prefill(self.pool[payload].prompt_len)
+            self.clock += duration
+            end = self.clock
+            t = self.pool[payload]
+            t.state = RUNNING
+            t.prefill_end = end
+            self._apply_outcome([payload], end)
+        else:
+            assert payload, "empty decode batch"
+            self.steps += 1
+            self.decode_steps += 1
+            duration = self.lat.decode(len(payload))
+            self.clock += duration
+            self._apply_outcome(payload, self.clock)
+
+    def run(self, horizon: int) -> None:
+        while True:
+            now = self.clock
+            if now >= horizon:
+                return
+            self._deliver_arrivals(now)
+            step = self.policy.next_step(self.pool, now)
+            if step[0] == "idle":
+                if self.arrivals:
+                    nxt = min(self.arrivals[0].arrival, horizon)
+                    if nxt > self.clock:
+                        self.clock = nxt
+                else:
+                    return
+            else:
+                self._execute(step)
+
+    def run_until(self, until: int) -> None:
+        while True:
+            now = self.clock
+            if now >= until:
+                return
+            self._deliver_arrivals(now)
+            step = self.policy.next_step(self.pool, now)
+            if step[0] == "idle":
+                nxt = min(self.arrivals[0].arrival, until) if self.arrivals else until
+                if nxt > self.clock:
+                    self.clock = nxt
+            else:
+                self._execute(step)
+
+
+# --------------------------------------------------------------- cluster --
+
+
+class Replica:
+    def __init__(self, rid: int, make_policy, lat: LatencyModel) -> None:
+        self.id = rid
+        self.server = Server([], make_policy(), lat)
+        self.global_ids: List[int] = []
+        self.lat = lat
+
+    def assign(self, task: Task) -> None:
+        local = len(self.global_ids)
+        self.global_ids.append(task.id)
+        task.id = local
+        self.server.push_arrival(task)
+
+    def run_until(self, t: int) -> None:
+        self.server.run_until(t)
+
+    def load_tokens(self) -> int:
+        in_service = sum(
+            t.remaining_tokens() for t in self.server.pool if not t.is_finished()
+        )
+        queued = sum(t.output_len for t in self.server.arrivals)
+        return in_service + queued
+
+    def demand_quotas(self) -> List[int]:
+        qs = [
+            t.slo.tokens_per_cycle()
+            for t in self.server.pool
+            if not t.is_finished()
+        ]
+        qs.extend(t.slo.tokens_per_cycle() for t in self.server.arrivals)
+        return qs
+
+    def headroom(self, cand_quota: int, cycle_cap: int) -> int:
+        vs = self.demand_quotas()
+        vs.append(cand_quota)
+        vs.sort(reverse=True)
+        return max(0, cycle_cap - period_eq7(vs, self.lat))
+
+    def finish(self) -> List[Task]:
+        for t in self.server.pool:
+            t.id = self.global_ids[t.id]
+        return self.server.pool
+
+
+class Router:
+    def __init__(self, strategy: str, replicas: List[Replica], cycle_cap: int) -> None:
+        assert replicas
+        self.strategy = strategy
+        self.replicas = replicas
+        self.cycle_cap = cycle_cap
+        self.rr_next = 0
+
+    def decide(self, task: Task) -> int:
+        if self.strategy == "round-robin":
+            i = self.rr_next % len(self.replicas)
+            self.rr_next += 1
+            return i
+        if self.strategy == "least-loaded":
+            return min((r.load_tokens(), r.id) for r in self.replicas)[1]
+        quota = task.slo.tokens_per_cycle()
+        return min(
+            (-r.headroom(quota, self.cycle_cap), r.load_tokens(), r.id)
+            for r in self.replicas
+        )[2]
+
+    def run(self, workload: List[Task], drain: int):
+        assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
+        last = workload[-1].arrival if workload else 0
+        for task in workload:
+            for r in self.replicas:
+                r.run_until(task.arrival)
+            self.replicas[self.decide(task)].assign(task)
+        horizon = last + drain
+        for r in self.replicas:
+            r.run_until(horizon)
+        per_replica = [(r.id, len(r.global_ids), r.server.steps) for r in self.replicas]
+        tasks = [t for r in self.replicas for t in r.finish()]
+        tasks.sort(key=lambda t: t.id)
+        return tasks, per_replica
+
+
+def run_cluster(strategy: str, replicas: int, workload: List[Task],
+                drain: int, make_policy: Optional[Callable] = None):
+    lat = LatencyModel.paper_calibrated()
+    mk = make_policy or (lambda: SlicePolicy(lat))
+    fleet = [Replica(i, mk, lat) for i in range(replicas)]
+    return Router("round-robin" if strategy == "rr" else strategy, fleet,
+                  CYCLE_CAP).run(workload, drain)
+
+
+# --------------------------------------------------------------- metrics --
+
+
+def quantile(sorted_xs: List[float], q: float) -> float:
+    if not sorted_xs:
+        return float("nan")
+    pos = max(0.0, min(1.0, q)) * (len(sorted_xs) - 1)
+    lo, hi = int(math.floor(pos)), int(math.ceil(pos))
+    if lo == hi:
+        return sorted_xs[lo]
+    frac = pos - lo
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+def attainment(tasks: Iterable[Task]) -> dict:
+    ts = list(tasks)
+    rt = [t for t in ts if t.is_real_time()]
+    nrt = [t for t in ts if not t.is_real_time()]
+
+    def frac(num, den):
+        return float("nan") if den == 0 else num / den
+
+    return {
+        "n_tasks": len(ts),
+        "n_finished": sum(t.is_finished() for t in ts),
+        "slo": frac(sum(t.slo_met() for t in ts), len(ts)),
+        "rt_slo": frac(sum(t.slo_met() for t in rt), len(rt)),
+        "rt_count": len(rt),
+        "nrt_slo": frac(sum(t.slo_met() for t in nrt), len(nrt)),
+        "nrt_count": len(nrt),
+        "nrt_ttft": frac(
+            sum(t.is_finished() and t.ttft_met() for t in nrt), len(nrt)
+        ),
+        "nrt_tpot": frac(
+            sum(t.is_finished() and t.tpot_met() for t in nrt), len(nrt)
+        ),
+    }
+
+
+def latency_summary(tasks: Iterable[Task]) -> dict:
+    ts = [t for t in tasks if t.is_finished()]
+    ttft = sorted(t.ttft() / 1e3 for t in ts if t.ttft() is not None)
+    tpot = sorted(t.avg_tpot() / 1e3 for t in ts if t.avg_tpot() is not None)
+
+    def pcts(xs):
+        return {
+            "n": len(xs),
+            "mean_ms": sum(xs) / len(xs) if xs else float("nan"),
+            "p50_ms": quantile(xs, 0.50),
+            "p95_ms": quantile(xs, 0.95),
+            "p99_ms": quantile(xs, 0.99),
+        }
+
+    return {"ttft": pcts(ttft), "tpot": pcts(tpot)}
