@@ -11,7 +11,7 @@
 
 use std::time::Duration;
 
-use slice_serve::cluster::{Replica, Router, RoutingStrategy};
+use slice_serve::cluster::{DeviceProfile, Replica, Router, RoutingStrategy};
 use slice_serve::config::ServeConfig;
 use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
 use slice_serve::coordinator::pool::TaskPool;
@@ -128,7 +128,7 @@ fn main() {
                     i,
                     Box::new(SlicePolicy::with_defaults(lat.clone())),
                     Box::new(SimEngine::paper_calibrated()),
-                    lat.clone(),
+                    DeviceProfile::standard(),
                 );
                 if loaded {
                     for k in 0..16u64 {
@@ -143,7 +143,7 @@ fn main() {
     };
     for n in [2usize, 4, 8] {
         for strategy in [RoutingStrategy::LeastLoaded, RoutingStrategy::SloAware] {
-            let mut router = Router::new(strategy, make_fleet(n, true), CYCLE_CAP);
+            let mut router = Router::new(strategy, make_fleet(n, true));
             let probe = Task::new(0, TaskClass::Voice, 0, 16, 100, 1.0);
             let r = bench(
                 &format!("cluster/decide/{}/{n}", strategy.label()),
@@ -169,4 +169,24 @@ fn main() {
         });
         println!("{}", r.report_line());
     }
+
+    // The heterogeneous path: a guarded edge-mixed fleet pays for
+    // admission checks and migration passes on top of routing; this
+    // tracks that overhead end-to-end against the homogeneous run above.
+    let mixed = slice_serve::cluster::FleetSpec::preset("edge-mixed").unwrap();
+    let mut guarded_cfg = cfg.clone();
+    guarded_cfg.cluster_admission.enabled = true;
+    guarded_cfg.cluster_migration = true;
+    let wl = WorkloadSpec::paper_mix(3.0, 0.7, 120, 7).generate();
+    let r = bench("cluster/run/edge-mixed-guarded/3x40", budget, || {
+        experiments::run_fleet(
+            RoutingStrategy::SloAware,
+            &mixed,
+            wl.clone(),
+            &guarded_cfg,
+            secs(60.0),
+        )
+        .unwrap()
+    });
+    println!("{}", r.report_line());
 }

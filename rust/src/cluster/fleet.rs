@@ -1,0 +1,256 @@
+//! Heterogeneous fleet description: per-replica device profiles plus
+//! router admission bounds (DESIGN.md "Heterogeneous fleets").
+//!
+//! The paper calibrates one edge device; an edge *fleet* mixes device
+//! tiers (a workstation GPU next to Orin- and Nano-class boards). A
+//! [`DeviceProfile`] captures what the router and scheduler must know
+//! about one device — its latency curve `l(b)`, batch/context limits
+//! and Eq. 7 scheduling-cycle cap — and a [`FleetSpec`] is the ordered
+//! list of profiles a cluster run builds its replicas from. Specs come
+//! from three equivalent sources (all producing the same struct):
+//!
+//!   * CLI presets: `slice-serve cluster --fleet edge-mixed` (or a
+//!     comma list like `standard,standard,lite,nano`);
+//!   * config files: a `[[cluster.replica]]` TOML array of tables;
+//!   * code: [`FleetSpec::homogeneous`] / [`FleetSpec::preset`].
+//!
+//! [`AdmissionConfig`] holds the router's per-class queue bounds (see
+//! `cluster::Router` for the shed/deferral semantics). Admission and
+//! migration are opt-in: the defaults reproduce the PR 2 homogeneous
+//! cluster behaviour bit-for-bit.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::selection::CYCLE_CAP;
+use crate::coordinator::task::TaskClass;
+use crate::engine::latency::LatencyModel;
+use crate::util::Micros;
+
+/// Everything the cluster layer knows about one device tier.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    /// Tier name used in reports ("standard", "lite", "nano", ...).
+    pub name: &'static str,
+    /// The device's calibrated decode/prefill latency curve.
+    pub latency: LatencyModel,
+    /// Hard cap on concurrently decodable tasks (device memory limit).
+    pub max_batch: u32,
+    /// Context-window limit of the device's engine.
+    pub max_context: u32,
+    /// Eq. 7 scheduling-cycle cap used for selection and headroom.
+    pub cycle_cap: Micros,
+}
+
+impl DeviceProfile {
+    /// The paper's testbed device (RTX 4060 Ti class): the curve every
+    /// PR 2 replica ran, so a fleet of `standard` profiles reproduces
+    /// the homogeneous cluster exactly.
+    pub fn standard() -> Self {
+        DeviceProfile {
+            name: "standard",
+            latency: LatencyModel::paper_calibrated(),
+            max_batch: 32,
+            max_context: 8192,
+            cycle_cap: CYCLE_CAP,
+        }
+    }
+
+    /// A mid-tier edge board (Orin class): 1.5x the standard latency at
+    /// every batch size, half the batch and context headroom.
+    pub fn lite() -> Self {
+        DeviceProfile {
+            name: "lite",
+            latency: LatencyModel::paper_calibrated().scaled(1.5),
+            max_batch: 16,
+            max_context: 4096,
+            cycle_cap: CYCLE_CAP,
+        }
+    }
+
+    /// A constrained edge board (Nano class): 2.5x the standard latency,
+    /// batch capped at 8.
+    pub fn nano() -> Self {
+        DeviceProfile {
+            name: "nano",
+            latency: LatencyModel::paper_calibrated().scaled(2.5),
+            max_batch: 8,
+            max_context: 2048,
+            cycle_cap: CYCLE_CAP,
+        }
+    }
+
+    /// Look up a tier by its CLI/config spelling.
+    pub fn named(name: &str) -> Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "standard" => Self::standard(),
+            "lite" => Self::lite(),
+            "nano" => Self::nano(),
+            other => bail!("unknown device profile '{other}' (standard|lite|nano)"),
+        })
+    }
+}
+
+/// Ordered per-replica device profiles for one cluster run.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// One profile per replica, in replica-index order.
+    pub profiles: Vec<DeviceProfile>,
+}
+
+impl FleetSpec {
+    /// `n` standard devices — the PR 2 homogeneous fleet. `cycle_cap`
+    /// is threaded from the serve config so a configured cap applies to
+    /// selection and routing exactly as it did pre-refactor.
+    pub fn homogeneous(n: usize, cycle_cap: Micros) -> Self {
+        assert!(n >= 1, "a fleet needs at least one replica");
+        let mut profile = DeviceProfile::standard();
+        profile.cycle_cap = cycle_cap;
+        FleetSpec { profiles: vec![profile; n] }
+    }
+
+    /// Parse a `--fleet` spelling: a named preset (`edge-mixed`) or a
+    /// comma-separated list of device tiers (`standard,lite,nano`).
+    pub fn preset(spec: &str) -> Result<Self> {
+        let profiles = match spec.to_ascii_lowercase().as_str() {
+            // two workstation-class devices next to one mid-tier and one
+            // constrained board — the heterogeneity the hetero sweep and
+            // EXPERIMENTS.md study
+            "edge-mixed" => vec![
+                DeviceProfile::standard(),
+                DeviceProfile::standard(),
+                DeviceProfile::lite(),
+                DeviceProfile::nano(),
+            ],
+            list => list
+                .split(',')
+                .map(|name| DeviceProfile::named(name.trim()))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        if profiles.is_empty() {
+            bail!("fleet spec '{spec}' names no replicas");
+        }
+        Ok(FleetSpec { profiles })
+    }
+
+    /// Overwrite every profile's scheduling-cycle cap — how a
+    /// configured `[scheduler] cycle_cap_ms` is threaded into preset
+    /// fleets (per-replica `cycle_cap_ms` table keys take precedence at
+    /// the config layer).
+    pub fn with_cycle_cap(mut self, cycle_cap: Micros) -> Self {
+        for p in &mut self.profiles {
+            p.cycle_cap = cycle_cap;
+        }
+        self
+    }
+
+    /// Number of replicas the spec describes.
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// True when the spec is empty (never for constructed specs).
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Tier names in replica order (reports/diagnostics).
+    pub fn names(&self) -> Vec<&'static str> {
+        self.profiles.iter().map(|p| p.name).collect()
+    }
+}
+
+/// Router admission control: per-SLO-class bounds on how many
+/// queued-but-unstarted tasks a replica may hold. A task is *deferred*
+/// to the strategy's next-best replica while any replica is under its
+/// class bound, and *shed* (rejected, counted SLO-violated) once every
+/// replica is at the bound. Disabled (the default) admits everything —
+/// the PR 2 behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Master switch; when false the bounds are ignored.
+    pub enabled: bool,
+    /// Max queued-but-unstarted real-time tasks per replica.
+    pub rt_queue_bound: usize,
+    /// Max queued-but-unstarted non-real-time tasks per replica.
+    pub nrt_queue_bound: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { enabled: false, rt_queue_bound: 12, nrt_queue_bound: 10 }
+    }
+}
+
+impl AdmissionConfig {
+    /// The queue bound applying to `class`.
+    pub fn bound_for(&self, class: TaskClass) -> usize {
+        if class.is_real_time() {
+            self.rt_queue_bound
+        } else {
+            self.nrt_queue_bound
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ms;
+
+    #[test]
+    fn named_profiles_resolve() {
+        assert_eq!(DeviceProfile::named("standard").unwrap().name, "standard");
+        assert_eq!(DeviceProfile::named("LITE").unwrap().name, "lite");
+        assert_eq!(DeviceProfile::named("nano").unwrap().name, "nano");
+        let err = DeviceProfile::named("tpu").unwrap_err().to_string();
+        assert!(err.contains("standard|lite|nano"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn tiers_are_ordered_by_speed() {
+        let (s, l, n) =
+            (DeviceProfile::standard(), DeviceProfile::lite(), DeviceProfile::nano());
+        for b in [1u32, 4, 8] {
+            assert!(s.latency.decode(b) < l.latency.decode(b));
+            assert!(l.latency.decode(b) < n.latency.decode(b));
+        }
+        assert!(s.max_batch > l.max_batch && l.max_batch > n.max_batch);
+    }
+
+    #[test]
+    fn homogeneous_is_all_standard() {
+        let f = FleetSpec::homogeneous(3, CYCLE_CAP);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.names(), vec!["standard"; 3]);
+        assert_eq!(f.profiles[0].latency.decode(9), ms(128.59));
+    }
+
+    #[test]
+    fn edge_mixed_preset_shape() {
+        let f = FleetSpec::preset("edge-mixed").unwrap();
+        assert_eq!(f.names(), vec!["standard", "standard", "lite", "nano"]);
+    }
+
+    #[test]
+    fn with_cycle_cap_overwrites_every_profile() {
+        let f = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(750_000);
+        assert!(f.profiles.iter().all(|p| p.cycle_cap == 750_000));
+    }
+
+    #[test]
+    fn comma_list_parses() {
+        let f = FleetSpec::preset("standard, lite,nano").unwrap();
+        assert_eq!(f.names(), vec!["standard", "lite", "nano"]);
+        assert!(FleetSpec::preset("standard,warp").is_err());
+        assert!(FleetSpec::preset("").is_err());
+    }
+
+    #[test]
+    fn admission_bounds_by_class() {
+        let a = AdmissionConfig { enabled: true, rt_queue_bound: 3, nrt_queue_bound: 7 };
+        assert_eq!(a.bound_for(TaskClass::RealTime), 3);
+        assert_eq!(a.bound_for(TaskClass::Voice), 7);
+        assert_eq!(a.bound_for(TaskClass::TextQa), 7);
+        assert!(!AdmissionConfig::default().enabled);
+    }
+}

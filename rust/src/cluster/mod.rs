@@ -1,28 +1,41 @@
 //! Cluster layer: multi-replica edge serving above L3 (DESIGN.md
-//! "Cluster layer").
+//! "Cluster layer" / "Heterogeneous fleets").
 //!
 //! The paper schedules one edge device. This layer scales SLICE out: a
 //! [`Router`] dispatches the arrival stream across N [`Replica`]s —
 //! each a complete single-device stack (`server::Server` + a `Policy` +
-//! a sim engine on its own virtual clock) — under a pluggable
-//! [`RoutingStrategy`] (round-robin, least-loaded, or SLO-aware Eq. 7
-//! headroom). Replica clocks are advanced in lockstep to each arrival,
-//! so routing sees device load exactly when a real front-end would.
+//! a sim engine on its own virtual clock) built from a per-replica
+//! [`DeviceProfile`] — under a pluggable [`RoutingStrategy`]
+//! (round-robin, least-loaded, or SLO-aware Eq. 7 headroom). Replica
+//! clocks are advanced in lockstep to each arrival, so routing sees
+//! device load exactly when a real front-end would. Fleets may be
+//! heterogeneous ([`FleetSpec`]: mixed device tiers), the router can
+//! apply per-class admission bounds ([`AdmissionConfig`]), and
+//! overloaded replicas can offer queued tasks back for re-placement
+//! (migration) — both opt-in.
 //!
 //! Contracts:
 //!   * the scheduler code each replica runs is byte-identical to the
-//!     single-device path — a 1-replica cluster reproduces `Server::run`
-//!     exactly (asserted in `rust/tests/cluster_integration.rs`);
+//!     single-device path — a 1-replica cluster (admission and
+//!     migration disabled) reproduces `Server::run` exactly (asserted
+//!     in `rust/tests/cluster_integration.rs` and
+//!     `rust/tests/hetero_fleet.rs`);
 //!   * cluster runs are deterministic for a fixed workload seed: every
-//!     routing tie-break is by lowest replica index;
+//!     routing, admission and migration tie-break is deterministic
+//!     (lowest replica index last);
+//!   * every task lands in the report exactly once — on one replica or
+//!     on the shed list — and a task migrates at most once;
 //!   * fleet metrics ([`ClusterReport`]) aggregate per-replica reports
-//!     with global task ids restored.
+//!     with global task ids restored, counting shed tasks as SLO
+//!     violations.
 //!
 //! Multi-replica serving is an **extension**, not part of the paper —
 //! see DESIGN.md "Deviations from the paper".
 
+pub mod fleet;
 pub mod replica;
 pub mod router;
 
+pub use fleet::{AdmissionConfig, DeviceProfile, FleetSpec};
 pub use replica::{Replica, ReplicaReport};
 pub use router::{ClusterReport, Router, RoutingStrategy};

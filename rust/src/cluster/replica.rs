@@ -1,22 +1,35 @@
 //! One cluster replica: a full single-device serving stack (policy +
-//! engine + virtual clock) behind a thin id-translation shim.
+//! engine + virtual clock) built from a [`DeviceProfile`], behind a
+//! thin id-translation shim.
 //!
-//! The router hands a replica globally-identified tasks; the replica
-//! re-ids them densely (the [`TaskPool`] contract) and translates back
-//! when the run finishes, so fleet-level metrics see the original ids
-//! while the scheduler code runs byte-identical to the single-device
-//! path (DESIGN.md "Cluster layer").
+//! The router hands a replica globally-identified tasks. The replica
+//! *stages* them (sorted by arrival, still carrying global ids) and
+//! only re-ids them into its dense local id space when its clock is
+//! about to cross their arrival — the moment they are pushed into the
+//! inner [`Server`]. Staged and pushed-but-undelivered tasks are
+//! "queued-but-unstarted": the scheduler has never seen them, so the
+//! router may withdraw them for migration without perturbing policy
+//! state ([`Replica::withdraw_unmigrated`]). Local ids are therefore
+//! assigned in delivery order, which keeps the `TaskPool` dense-id
+//! contract intact even when migration reorders queues. Without
+//! migration the staging layer is behaviourally invisible: tasks are
+//! pushed in exactly the order and at exactly the boundaries PR 2
+//! pushed them, so homogeneous runs reproduce bit-for-bit (asserted in
+//! `rust/tests/hetero_fleet.rs`).
+
+use std::collections::HashSet;
 
 use anyhow::Result;
 
 use crate::coordinator::mask::period_eq7;
 use crate::coordinator::scheduler::Policy;
-use crate::coordinator::task::{Task, TaskId};
+use crate::coordinator::task::{Task, TaskClass, TaskId, TaskState};
 use crate::engine::clock::VirtualClock;
-use crate::engine::latency::LatencyModel;
 use crate::engine::DecodeEngine;
 use crate::server::{RunReport, Server};
 use crate::util::Micros;
+
+use super::fleet::DeviceProfile;
 
 /// A single serving replica inside a [`crate::cluster::Router`] fleet.
 pub struct Replica {
@@ -24,24 +37,36 @@ pub struct Replica {
     server: Server<VirtualClock>,
     /// Maps this replica's dense local ids back to global task ids.
     global_ids: Vec<TaskId>,
-    latency: LatencyModel,
+    /// Routed tasks (global ids) not yet handed to the server, sorted
+    /// by arrival; ties keep routing order.
+    staged: Vec<Task>,
+    profile: DeviceProfile,
+    routed: usize,
+    migrated_in: u64,
+    migrated_out: u64,
 }
 
 impl Replica {
-    /// Build a replica over a fresh policy/engine pair. `latency` is the
-    /// device curve the router scores SLO-aware decisions with; it must
-    /// match the engine's (as `experiments::run_cluster` guarantees).
+    /// Build a replica over a fresh policy/engine pair calibrated to
+    /// `profile` (as `experiments::run_fleet` guarantees): the policy
+    /// and engine must share the profile's latency curve, and the
+    /// router scores SLO-aware decisions with the same curve and the
+    /// profile's cycle cap.
     pub fn new(
         id: usize,
         policy: Box<dyn Policy>,
         engine: Box<dyn DecodeEngine>,
-        latency: LatencyModel,
+        profile: DeviceProfile,
     ) -> Self {
         Replica {
             id,
             server: Server::new(Vec::new(), policy, engine, VirtualClock::new()),
             global_ids: Vec::new(),
-            latency,
+            staged: Vec::new(),
+            profile,
+            routed: 0,
+            migrated_in: 0,
+            migrated_out: 0,
         }
     }
 
@@ -50,9 +75,20 @@ impl Replica {
         self.id
     }
 
-    /// Number of tasks routed to this replica so far.
+    /// The device profile this replica models.
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Number of tasks currently placed on this replica (assigned minus
+    /// migrated away).
     pub fn routed(&self) -> usize {
-        self.global_ids.len()
+        self.routed
+    }
+
+    /// Tasks migrated into / out of this replica (reports).
+    pub fn migration_counts(&self) -> (u64, u64) {
+        (self.migrated_in, self.migrated_out)
     }
 
     /// Current virtual time on this replica.
@@ -60,28 +96,114 @@ impl Replica {
         self.server.now()
     }
 
-    /// Routed arrivals not yet delivered to this replica's scheduler.
+    /// Routed arrivals not yet delivered to this replica's scheduler
+    /// (staged here plus queued inside the server).
     pub fn pending(&self) -> usize {
-        self.server.pending_arrivals().count()
+        self.staged.len() + self.server.pending_arrivals().count()
     }
 
-    /// Accept a routed task: record its global id, re-id it into this
-    /// replica's dense local id space and enqueue the arrival.
-    pub fn assign(&mut self, mut task: Task) {
-        let local = self.global_ids.len() as TaskId;
-        self.global_ids.push(task.id);
-        task.id = local;
-        self.server.push_arrival(task);
+    /// Queued-but-unstarted tasks of one SLO class: staged, undelivered,
+    /// or delivered but still waiting for the policy to admit them. This
+    /// is the router's admission-control backpressure signal.
+    pub fn queued_in_class(&self, class: TaskClass) -> usize {
+        let waiting = self
+            .server
+            .pool()
+            .iter()
+            .filter(|t| t.class == class && t.state == TaskState::Waiting)
+            .count();
+        waiting
+            + self.staged.iter().filter(|t| t.class == class).count()
+            + self
+                .server
+                .pending_arrivals()
+                .filter(|t| t.class == class)
+                .count()
     }
 
-    /// Advance this replica's simulation to time `t`.
+    /// Accept a routed task (global id): stage it for delivery. Tasks
+    /// routed at later boundaries always arrive later, so this is an
+    /// append; migrated-in tasks may sort earlier.
+    pub fn assign(&mut self, task: Task) {
+        let at = self.staged.partition_point(|t| t.arrival <= task.arrival);
+        self.staged.insert(at, task);
+        self.routed += 1;
+    }
+
+    /// Accept a task migrated from another replica. The inner server's
+    /// undelivered queue is recalled first so the merged queue can be
+    /// re-pushed in global arrival order (local ids are assigned at
+    /// push time, so delivery order stays dense).
+    pub fn receive_migrated(&mut self, task: Task) {
+        self.recall_pending();
+        self.assign(task);
+        self.migrated_in += 1;
+    }
+
+    /// Pull every pushed-but-undelivered task back out of the server
+    /// into the staging queue, restoring global ids. Undelivered tasks
+    /// are always the most recently pushed, so the translation table
+    /// truncates cleanly.
+    fn recall_pending(&mut self) {
+        let mut withdrawn = self.server.withdraw_pending();
+        if withdrawn.is_empty() {
+            return;
+        }
+        let keep = self.global_ids.len() - withdrawn.len();
+        for t in &mut withdrawn {
+            t.id = self.global_ids[t.id as usize];
+        }
+        self.global_ids.truncate(keep);
+        // withdrawn tasks were queued before anything still staged, so
+        // they precede it (equal arrivals keep queue order)
+        debug_assert!(
+            self.staged.first().map_or(true, |s| {
+                withdrawn.last().map_or(true, |w| w.arrival <= s.arrival)
+            }),
+            "recall would reorder the staged queue"
+        );
+        withdrawn.append(&mut self.staged);
+        self.staged = withdrawn;
+    }
+
+    /// Withdraw every queued-but-unstarted task that has not migrated
+    /// before (exactly-once: `migrated_before` filters repeat offers),
+    /// in arrival order, for the router to re-place. Tasks that already
+    /// migrated once stay staged here.
+    pub fn withdraw_unmigrated(&mut self, migrated_before: &HashSet<TaskId>) -> Vec<Task> {
+        self.recall_pending();
+        let mut out = Vec::new();
+        let mut keep = Vec::with_capacity(self.staged.len());
+        for task in self.staged.drain(..) {
+            if migrated_before.contains(&task.id) {
+                keep.push(task);
+            } else {
+                out.push(task);
+            }
+        }
+        self.staged = keep;
+        self.routed -= out.len();
+        self.migrated_out += out.len() as u64;
+        out
+    }
+
+    /// Advance this replica's simulation to time `t`, handing staged
+    /// arrivals due by then to the server (assigning their dense local
+    /// ids in delivery order).
     pub fn run_until(&mut self, t: Micros) -> Result<()> {
+        let due = self.staged.partition_point(|task| task.arrival <= t);
+        for mut task in self.staged.drain(..due) {
+            let local = self.global_ids.len() as TaskId;
+            self.global_ids.push(task.id);
+            task.id = local;
+            self.server.push_arrival(task);
+        }
         self.server.run_until(t)
     }
 
     /// Outstanding work in tokens: remaining output of every unfinished
-    /// task in service plus the full output of still-queued arrivals.
-    /// This is the least-loaded routing signal.
+    /// task in service plus the full output of still-queued arrivals
+    /// (staged or undelivered). This is the least-loaded routing signal.
     pub fn load_tokens(&self) -> u64 {
         let in_service: u64 = self
             .server
@@ -93,6 +215,7 @@ impl Replica {
         let queued: u64 = self
             .server
             .pending_arrivals()
+            .chain(self.staged.iter())
             .map(|t| t.output_len as u64)
             .sum();
         in_service + queued
@@ -107,29 +230,54 @@ impl Replica {
             .iter()
             .filter(|t| !t.is_finished())
             .map(|t| t.slo.tokens_per_cycle())
-            .chain(self.server.pending_arrivals().map(|t| t.slo.tokens_per_cycle()))
+            .chain(
+                self.server
+                    .pending_arrivals()
+                    .chain(self.staged.iter())
+                    .map(|t| t.slo.tokens_per_cycle()),
+            )
             .collect()
     }
 
     /// Scheduling-cycle headroom (Eq. 7) if a task with per-cycle quota
     /// `cand_quota` joined this replica: `cycle_cap − T_period(demand ∪
-    /// {candidate})`, saturating at zero. The SLO-aware router sends a
-    /// task where this is largest, which is where its Eq. 6 utility
-    /// rate is most likely to survive selection.
-    pub fn headroom(&self, cand_quota: u32, cycle_cap: Micros) -> Micros {
+    /// {candidate})` under this device's own latency curve and cycle
+    /// cap, saturating at zero. The SLO-aware router sends a task where
+    /// this is largest, which is where its Eq. 6 utility rate is most
+    /// likely to survive selection.
+    pub fn headroom(&self, cand_quota: u32) -> Micros {
         let mut vs = self.demand_quotas();
         vs.push(cand_quota);
         vs.sort_unstable_by(|a, b| b.cmp(a));
-        cycle_cap.saturating_sub(period_eq7(&vs, &self.latency))
+        self.profile
+            .cycle_cap
+            .saturating_sub(period_eq7(&vs, &self.profile.latency))
+    }
+
+    /// True when this replica's Eq. 7 headroom has gone negative: the
+    /// cycle its queued demand implies already exceeds the device's
+    /// cycle cap. The router's migration pass fires on this.
+    pub fn overloaded(&self) -> bool {
+        let mut vs = self.demand_quotas();
+        vs.sort_unstable_by(|a, b| b.cmp(a));
+        period_eq7(&vs, &self.profile.latency) > self.profile.cycle_cap
     }
 
     /// Finish the replica's run and translate local ids back to global.
     pub fn finish(self) -> ReplicaReport {
+        assert!(self.staged.is_empty(), "finish() with staged arrivals");
         let mut report = self.server.finish();
         for t in &mut report.tasks {
             t.id = self.global_ids[t.id as usize];
         }
-        ReplicaReport { replica: self.id, routed: self.global_ids.len(), report }
+        ReplicaReport {
+            replica: self.id,
+            routed: self.routed,
+            profile: self.profile.name,
+            migrated_in: self.migrated_in,
+            migrated_out: self.migrated_out,
+            report,
+        }
     }
 }
 
@@ -137,26 +285,37 @@ impl Replica {
 pub struct ReplicaReport {
     /// Fleet index of the replica.
     pub replica: usize,
-    /// Tasks routed to it.
+    /// Tasks it ended the run holding (routed + migrated in − out).
     pub routed: usize,
+    /// Device-profile tier name the replica ran.
+    pub profile: &'static str,
+    /// Tasks migrated onto this replica.
+    pub migrated_in: u64,
+    /// Tasks this replica offered back under overload.
+    pub migrated_out: u64,
     /// Its full single-device run report.
     pub report: RunReport,
 }
 
 #[cfg(test)]
 mod tests {
+    use std::collections::HashSet;
+
     use super::*;
     use crate::coordinator::orca::OrcaPolicy;
-    use crate::coordinator::task::TaskClass;
     use crate::engine::sim::SimEngine;
     use crate::util::secs;
 
     fn replica() -> Replica {
+        replica_with(DeviceProfile::standard())
+    }
+
+    fn replica_with(profile: DeviceProfile) -> Replica {
         Replica::new(
             0,
-            Box::new(OrcaPolicy::new(32)),
-            Box::new(SimEngine::paper_calibrated()),
-            LatencyModel::paper_calibrated(),
+            Box::new(OrcaPolicy::new(profile.max_batch)),
+            Box::new(SimEngine::new(profile.latency.clone(), profile.max_context)),
+            profile,
         )
     }
 
@@ -172,6 +331,7 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![17, 99]);
         assert!(rep.report.tasks.iter().all(|t| t.is_finished()));
+        assert_eq!(rep.profile, "standard");
     }
 
     #[test]
@@ -190,13 +350,90 @@ mod tests {
 
     #[test]
     fn headroom_shrinks_with_demand() {
-        let cap = 1_000_000;
         let mut r = replica();
-        let empty = r.headroom(8, cap);
+        let empty = r.headroom(8);
         for i in 0..6 {
             r.assign(Task::new(i, TaskClass::RealTime, 0, 16, 200, 100.0));
         }
-        let loaded = r.headroom(8, cap);
+        let loaded = r.headroom(8);
         assert!(loaded < empty, "headroom {loaded} !< {empty}");
+    }
+
+    #[test]
+    fn slower_profile_has_less_headroom_and_overloads_sooner() {
+        // 3 real-time quotas (20 tok/cycle each): 20*l(3) = 800 ms on
+        // the standard curve, 2000 ms on nano's 2.5x curve.
+        let mut fast = replica_with(DeviceProfile::standard());
+        let mut slow = replica_with(DeviceProfile::nano());
+        for i in 0..3 {
+            let t = Task::new(i, TaskClass::RealTime, 0, 16, 100, 100.0);
+            fast.assign(t.clone());
+            slow.assign(t);
+        }
+        assert!(slow.headroom(8) < fast.headroom(8));
+        assert!(slow.overloaded(), "3 RT quotas exceed nano's 1s cycle");
+        assert!(!fast.overloaded(), "standard absorbs 3 RT quotas");
+    }
+
+    #[test]
+    fn withdraw_returns_unstarted_tasks_with_global_ids() {
+        let mut r = replica();
+        r.assign(Task::new(40, TaskClass::Voice, 0, 16, 30, 1.0));
+        r.run_until(secs(0.5)).unwrap(); // task 40 delivered and running
+        r.assign(Task::new(41, TaskClass::Voice, secs(1.0), 16, 5, 1.0));
+        r.assign(Task::new(42, TaskClass::RealTime, secs(1.0), 16, 5, 100.0));
+        let out = r.withdraw_unmigrated(&HashSet::new());
+        assert_eq!(out.iter().map(|t| t.id).collect::<Vec<_>>(), vec![41, 42]);
+        assert_eq!(r.routed(), 1);
+        assert_eq!(r.migration_counts().1, 2);
+        // the running task is untouched and the replica still finishes
+        r.run_until(secs(30.0)).unwrap();
+        let rep = r.finish();
+        assert_eq!(rep.report.tasks.len(), 1);
+        assert_eq!(rep.report.tasks[0].id, 40);
+    }
+
+    #[test]
+    fn withdraw_skips_tasks_already_migrated_once() {
+        let mut r = replica();
+        r.assign(Task::new(7, TaskClass::Voice, 0, 16, 5, 1.0));
+        r.assign(Task::new(8, TaskClass::Voice, 0, 16, 5, 1.0));
+        let migrated: HashSet<TaskId> = [7].into_iter().collect();
+        let out = r.withdraw_unmigrated(&migrated);
+        assert_eq!(out.iter().map(|t| t.id).collect::<Vec<_>>(), vec![8]);
+        assert_eq!(r.routed(), 1, "task 7 stays put");
+        r.run_until(secs(30.0)).unwrap();
+        let rep = r.finish();
+        assert_eq!(rep.report.tasks[0].id, 7);
+    }
+
+    #[test]
+    fn migrated_in_task_sorts_before_later_arrivals() {
+        let mut r = replica();
+        r.assign(Task::new(0, TaskClass::Voice, 0, 16, 200, 1.0));
+        r.run_until(secs(10.0)).unwrap();
+        r.assign(Task::new(5, TaskClass::Voice, secs(10.0), 16, 5, 1.0));
+        // a task that arrived earlier elsewhere migrates in now
+        r.receive_migrated(Task::new(3, TaskClass::Voice, secs(4.0), 16, 5, 1.0));
+        assert_eq!(r.migration_counts().0, 1);
+        assert_eq!(r.routed(), 3);
+        r.run_until(secs(60.0)).unwrap();
+        let rep = r.finish();
+        let mut ids: Vec<TaskId> = rep.report.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 3, 5]);
+        assert!(rep.report.tasks.iter().all(|t| t.is_finished()));
+    }
+
+    #[test]
+    fn queued_in_class_counts_staged_and_waiting() {
+        let mut r = replica();
+        r.assign(Task::new(0, TaskClass::RealTime, 0, 16, 5, 100.0));
+        r.assign(Task::new(1, TaskClass::Voice, 0, 16, 5, 1.0));
+        r.assign(Task::new(2, TaskClass::Voice, secs(9.0), 16, 5, 1.0));
+        assert_eq!(r.queued_in_class(TaskClass::RealTime), 1);
+        assert_eq!(r.queued_in_class(TaskClass::Voice), 2);
+        r.run_until(secs(30.0)).unwrap();
+        assert_eq!(r.queued_in_class(TaskClass::Voice), 0);
     }
 }

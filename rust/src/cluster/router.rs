@@ -1,5 +1,7 @@
 //! The cluster router: dispatches an arrival stream across N replicas
-//! under a pluggable routing strategy (DESIGN.md "Cluster layer").
+//! under a pluggable routing strategy, with optional admission control
+//! and overload migration (DESIGN.md "Cluster layer" / "Heterogeneous
+//! fleets").
 //!
 //! The router is a discrete-event co-simulation driver: before each
 //! routing decision it advances every replica's virtual clock to the
@@ -13,8 +15,27 @@
 //!   * [`RoutingStrategy::LeastLoaded`] — fewest outstanding tokens
 //!     (queued + running);
 //!   * [`RoutingStrategy::SloAware`] — largest Eq. 7 cycle headroom for
-//!     the task's per-cycle quota (see [`Replica::headroom`]), falling
-//!     back to least-loaded on ties.
+//!     the task's per-cycle quota under each replica's own device
+//!     profile (see [`Replica::headroom`]), falling back to
+//!     least-loaded on ties.
+//!
+//! Admission control ([`AdmissionConfig`], opt-in): a replica at its
+//! per-class queued-but-unstarted bound is excluded from the decision —
+//! the task *defers* to the strategy's next-best admissible replica —
+//! and when no replica is admissible the task is *shed*: recorded on
+//! [`ClusterReport::rejected`] and counted as an SLO violation, never
+//! silently dropped.
+//!
+//! Overload migration (opt-in): at each routing boundary, a replica
+//! whose Eq. 7 headroom has gone negative ([`Replica::overloaded`])
+//! offers its queued-but-unstarted tasks back to the router, which
+//! re-places each on the other replica with the largest headroom
+//! (ties: least load, then lowest index — strategy-independent, since
+//! migration is inherently load-driven). A task migrates at most once
+//! (exactly-once delivery), and a pass only fires while some peer
+//! still has positive headroom, so all-overloaded fleets do not churn.
+
+use std::collections::HashSet;
 
 use anyhow::Result;
 
@@ -22,6 +43,7 @@ use crate::coordinator::task::{Task, TaskId};
 use crate::metrics::{Attainment, LatencySummary};
 use crate::util::Micros;
 
+use super::fleet::AdmissionConfig;
 use super::replica::{Replica, ReplicaReport};
 
 /// How the router picks a replica for each arriving task.
@@ -69,16 +91,49 @@ impl RoutingStrategy {
 pub struct Router {
     strategy: RoutingStrategy,
     replicas: Vec<Replica>,
-    /// Scheduling-cycle cap used for SLO-aware headroom scoring.
-    cycle_cap: Micros,
+    admission: AdmissionConfig,
+    migration: bool,
     rr_next: usize,
+    /// Global ids that have migrated once already (exactly-once cap).
+    migrated: HashSet<TaskId>,
+    migrations: u64,
+    rejected: Vec<Task>,
 }
 
 impl Router {
     /// Build a router over pre-constructed replicas (at least one).
-    pub fn new(strategy: RoutingStrategy, replicas: Vec<Replica>, cycle_cap: Micros) -> Self {
+    /// Admission control and migration start disabled — the PR 2
+    /// homogeneous behaviour; opt in via [`Router::with_admission`] /
+    /// [`Router::with_migration`].
+    pub fn new(strategy: RoutingStrategy, replicas: Vec<Replica>) -> Self {
         assert!(!replicas.is_empty(), "a cluster needs at least one replica");
-        Router { strategy, replicas, cycle_cap, rr_next: 0 }
+        // admission/migration bookkeeping indexes replicas by id
+        assert!(
+            replicas.iter().enumerate().all(|(i, r)| r.id() == i),
+            "replica ids must equal their fleet position"
+        );
+        Router {
+            strategy,
+            replicas,
+            admission: AdmissionConfig::default(),
+            migration: false,
+            rr_next: 0,
+            migrated: HashSet::new(),
+            migrations: 0,
+            rejected: Vec::new(),
+        }
+    }
+
+    /// Enable/configure per-class admission bounds.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// Enable or disable overload migration.
+    pub fn with_migration(mut self, migration: bool) -> Self {
+        self.migration = migration;
+        self
     }
 
     /// Number of replicas in the fleet.
@@ -86,38 +141,106 @@ impl Router {
         self.replicas.len()
     }
 
-    /// Pick the replica for `task` under the configured strategy. All
-    /// tie-breaks are deterministic (lowest replica index), so cluster
-    /// runs are reproducible for a fixed seed.
-    pub fn decide(&mut self, task: &Task) -> usize {
-        match self.strategy {
+    /// Pick the replica for `task` under the configured strategy, or
+    /// `None` when admission control sheds it (every replica is at its
+    /// class bound). Tie-breaks are deterministic: least-loaded breaks
+    /// ties by lowest replica index, and SLO-aware breaks headroom ties
+    /// by least load, then lowest replica index — so cluster runs are
+    /// reproducible for a fixed seed.
+    pub fn decide(&mut self, task: &Task) -> Option<usize> {
+        // the admissibility mask is only materialized when admission is
+        // on, keeping the default path allocation-free (the bench-
+        // tracked cluster/decide hot path)
+        let mask: Option<Vec<bool>> = if self.admission.enabled {
+            let bound = self.admission.bound_for(task.class);
+            Some(
+                self.replicas
+                    .iter()
+                    .map(|r| r.queued_in_class(task.class) < bound)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let open = |i: usize| mask.as_ref().map_or(true, |m| m[i]);
+        if !(0..self.replicas.len()).any(|i| open(i)) {
+            return None;
+        }
+        Some(match self.strategy {
             RoutingStrategy::RoundRobin => {
-                let i = self.rr_next % self.replicas.len();
-                self.rr_next += 1;
-                i
+                // first admissible replica at or after the cursor
+                let start = self.rr_next;
+                let n = self.replicas.len();
+                let k = (0..n)
+                    .find(|&k| open((start + k) % n))
+                    .expect("some replica is admissible");
+                self.rr_next = start + k + 1;
+                (start + k) % n
             }
             RoutingStrategy::LeastLoaded => self
                 .replicas
                 .iter()
+                .filter(|r| open(r.id()))
                 .map(|r| (r.load_tokens(), r.id()))
                 .min()
                 .map(|(_, id)| id)
                 .unwrap(),
             RoutingStrategy::SloAware => {
                 let quota = task.slo.tokens_per_cycle();
-                self.replicas
-                    .iter()
-                    .map(|r| {
-                        // max headroom, then min load, then lowest index
-                        (
-                            std::cmp::Reverse(r.headroom(quota, self.cycle_cap)),
-                            r.load_tokens(),
-                            r.id(),
-                        )
-                    })
-                    .min()
-                    .map(|(_, _, id)| id)
-                    .unwrap()
+                self.best_by_headroom(quota, |r| open(r.id()))
+                    .expect("some replica is admissible")
+            }
+        })
+    }
+
+    /// The replica with the most Eq. 7 headroom for `quota` among those
+    /// `eligible` — ties broken by least load, then lowest index (the
+    /// deterministic placement key shared by SLO-aware routing and
+    /// migration re-placement). `None` when nothing is eligible.
+    fn best_by_headroom<F: Fn(&Replica) -> bool>(&self, quota: u32, eligible: F) -> Option<usize> {
+        self.replicas
+            .iter()
+            .filter(|r| eligible(r))
+            .map(|r| (std::cmp::Reverse(r.headroom(quota)), r.load_tokens(), r.id()))
+            .min()
+            .map(|(_, _, id)| id)
+    }
+
+    /// The migration pass run at each routing boundary: every
+    /// overloaded replica offers its not-yet-migrated queued tasks
+    /// back, and each is re-placed on the best *non-overloaded* peer by
+    /// (headroom, load, index) — a task never burns its single allowed
+    /// migration moving onto a replica that is itself overloaded. If
+    /// every peer fills up mid-pass, the remaining offers fall back to
+    /// the least-bad peer. Skipped entirely unless some peer has
+    /// positive headroom. Migrated tasks were admitted when first
+    /// routed, so re-placement deliberately ignores admission queue
+    /// bounds (bounds govern new arrivals, not work already accepted).
+    fn run_migrations(&mut self) {
+        if !self.migration || self.replicas.len() < 2 {
+            return;
+        }
+        for src in 0..self.replicas.len() {
+            if !self.replicas[src].overloaded() {
+                continue;
+            }
+            let peer_has_headroom = self
+                .replicas
+                .iter()
+                .any(|r| r.id() != src && !r.overloaded());
+            if !peer_has_headroom {
+                continue;
+            }
+            let offered = self.replicas[src].withdraw_unmigrated(&self.migrated);
+            for task in offered {
+                let quota = task.slo.tokens_per_cycle();
+                let dst = self
+                    .best_by_headroom(quota, |r| r.id() != src && !r.overloaded())
+                    .or_else(|| self.best_by_headroom(quota, |r| r.id() != src))
+                    .expect("fleet has at least two replicas");
+                self.migrated.insert(task.id);
+                self.migrations += 1;
+                self.replicas[dst].receive_migrated(task);
             }
         }
     }
@@ -140,8 +263,11 @@ impl Router {
             for r in &mut self.replicas {
                 r.run_until(now)?;
             }
-            let pick = self.decide(&task);
-            self.replicas[pick].assign(task);
+            self.run_migrations();
+            match self.decide(&task) {
+                Some(pick) => self.replicas[pick].assign(task),
+                None => self.rejected.push(task),
+            }
         }
         let horizon = last_arrival + drain;
         for r in &mut self.replicas {
@@ -155,6 +281,8 @@ impl Router {
         }
         Ok(ClusterReport {
             strategy: self.strategy.label(),
+            migrations: self.migrations,
+            rejected: self.rejected,
             replicas: self.replicas.into_iter().map(Replica::finish).collect(),
         })
     }
@@ -166,6 +294,12 @@ pub struct ClusterReport {
     pub strategy: &'static str,
     /// Per-replica reports, with global task ids restored.
     pub replicas: Vec<ReplicaReport>,
+    /// Tasks shed by admission control, untouched since arrival. They
+    /// count as SLO violations in every fleet metric.
+    pub rejected: Vec<Task>,
+    /// Tasks re-placed by the overload-migration pass (each counted
+    /// once; a task migrates at most once).
+    pub migrations: u64,
 }
 
 impl ClusterReport {
@@ -174,18 +308,26 @@ impl ClusterReport {
         self.replicas[0].report.policy
     }
 
-    /// All tasks across the fleet, sorted by global id.
+    /// All tasks across the fleet — served *and* shed — sorted by
+    /// global id. Shed tasks are unfinished, so attainment over this
+    /// set counts them as violations.
     pub fn tasks(&self) -> Vec<Task> {
         let mut all: Vec<Task> = self
             .replicas
             .iter()
             .flat_map(|r| r.report.tasks.iter().cloned())
+            .chain(self.rejected.iter().cloned())
             .collect();
         all.sort_by_key(|t| t.id);
         all
     }
 
-    /// Fleet-wide SLO attainment over every routed task.
+    /// Tasks shed by admission control.
+    pub fn rejected_count(&self) -> usize {
+        self.rejected.len()
+    }
+
+    /// Fleet-wide SLO attainment over every routed *and* shed task.
     pub fn fleet_attainment(&self) -> Attainment {
         Attainment::compute(&self.tasks())
     }
@@ -200,13 +342,15 @@ impl ClusterReport {
         self.replicas.iter().map(|r| r.report.steps).sum()
     }
 
-    /// Global ids routed to each replica never overlap and cover every
-    /// task exactly once (checked by tests; here for observability).
+    /// Global ids across replica reports and the shed list: never
+    /// overlapping, covering every task exactly once (checked by tests;
+    /// here for observability).
     pub fn routed_ids(&self) -> Vec<TaskId> {
         let mut ids: Vec<TaskId> = self
             .replicas
             .iter()
             .flat_map(|r| r.report.tasks.iter().map(|t| t.id))
+            .chain(self.rejected.iter().map(|t| t.id))
             .collect();
         ids.sort_unstable();
         ids
@@ -216,20 +360,21 @@ impl ClusterReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::fleet::DeviceProfile;
     use crate::coordinator::orca::OrcaPolicy;
     use crate::coordinator::task::TaskClass;
-    use crate::engine::latency::LatencyModel;
     use crate::engine::sim::SimEngine;
     use crate::util::secs;
 
     fn fleet(n: usize) -> Vec<Replica> {
         (0..n)
             .map(|i| {
+                let profile = DeviceProfile::standard();
                 Replica::new(
                     i,
-                    Box::new(OrcaPolicy::new(32)),
+                    Box::new(OrcaPolicy::new(profile.max_batch)),
                     Box::new(SimEngine::paper_calibrated()),
-                    LatencyModel::paper_calibrated(),
+                    profile,
                 )
             })
             .collect()
@@ -252,10 +397,22 @@ mod tests {
     }
 
     #[test]
+    fn strategy_parse_rejects_unknown_and_empty_with_options() {
+        for bad in ["", "  ", "robin", "least", "slo-awarex"] {
+            let err = RoutingStrategy::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("round-robin|least-loaded|slo-aware"),
+                "error for {bad:?} must list the valid strategies, got: {err}"
+            );
+            assert!(err.contains("unknown routing strategy"), "got: {err}");
+        }
+    }
+
+    #[test]
     fn round_robin_cycles() {
-        let mut router = Router::new(RoutingStrategy::RoundRobin, fleet(3), 1_000_000);
+        let mut router = Router::new(RoutingStrategy::RoundRobin, fleet(3));
         let t = task(0, 0, 5);
-        let picks: Vec<usize> = (0..6).map(|_| router.decide(&t)).collect();
+        let picks: Vec<usize> = (0..6).map(|_| router.decide(&t).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -263,8 +420,8 @@ mod tests {
     fn least_loaded_prefers_empty_replica() {
         let mut replicas = fleet(2);
         replicas[0].assign(task(0, 0, 100));
-        let mut router = Router::new(RoutingStrategy::LeastLoaded, replicas, 1_000_000);
-        assert_eq!(router.decide(&task(1, 0, 5)), 1);
+        let mut router = Router::new(RoutingStrategy::LeastLoaded, replicas);
+        assert_eq!(router.decide(&task(1, 0, 5)), Some(1));
     }
 
     #[test]
@@ -277,28 +434,69 @@ mod tests {
             t.slo = crate::coordinator::task::SloSpec::real_time();
             replicas[0].assign(t);
         }
-        let mut router = Router::new(RoutingStrategy::SloAware, replicas, 1_000_000);
-        assert_eq!(router.decide(&task(8, 0, 5)), 1);
+        let mut router = Router::new(RoutingStrategy::SloAware, replicas);
+        assert_eq!(router.decide(&task(8, 0, 5)), Some(1));
+    }
+
+    #[test]
+    fn admission_defers_then_sheds() {
+        let admission =
+            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1 };
+        let mut router =
+            Router::new(RoutingStrategy::RoundRobin, fleet(2)).with_admission(admission);
+        // both replicas take one queued voice task; round-robin cursor
+        // defers past full replicas deterministically
+        let a = router.decide(&task(0, 0, 5)).unwrap();
+        router.replicas[a].assign(task(0, 0, 5));
+        let b = router.decide(&task(1, 0, 5)).unwrap();
+        assert_ne!(a, b, "second task defers to the open replica");
+        router.replicas[b].assign(task(1, 0, 5));
+        // every replica is at the voice bound: shed
+        assert_eq!(router.decide(&task(2, 0, 5)), None);
+        // a different class still gets in (per-class bounds)
+        let mut rt = task(3, 0, 5);
+        rt.class = TaskClass::RealTime;
+        rt.slo = crate::coordinator::task::SloSpec::real_time();
+        assert!(router.decide(&rt).is_some());
     }
 
     #[test]
     fn run_covers_every_task_once() {
-        let workload: Vec<Task> =
-            (0..20).map(|i| task(i, i * 100_000, 10)).collect();
-        let report = Router::new(RoutingStrategy::RoundRobin, fleet(4), 1_000_000)
+        let workload: Vec<Task> = (0..20).map(|i| task(i, i * 100_000, 10)).collect();
+        let report = Router::new(RoutingStrategy::RoundRobin, fleet(4))
             .run(workload, secs(60.0))
             .unwrap();
         assert_eq!(report.routed_ids(), (0..20).collect::<Vec<_>>());
         assert_eq!(report.replicas.len(), 4);
         assert!(report.replicas.iter().all(|r| r.routed == 5));
+        assert_eq!(report.rejected_count(), 0);
+        assert_eq!(report.migrations, 0);
         let tasks = report.tasks();
         assert!(tasks.iter().all(|t| t.is_finished()));
         assert_eq!(report.policy(), "Orca");
     }
 
     #[test]
+    fn shed_tasks_appear_in_report_as_violations() {
+        let admission =
+            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1 };
+        // all tasks arrive at once: 2 replicas hold one each, rest shed
+        let workload: Vec<Task> = (0..6).map(|i| task(i, 0, 10)).collect();
+        let report = Router::new(RoutingStrategy::LeastLoaded, fleet(2))
+            .with_admission(admission)
+            .run(workload, secs(60.0))
+            .unwrap();
+        assert_eq!(report.rejected_count(), 4);
+        assert_eq!(report.routed_ids(), (0..6).collect::<Vec<_>>());
+        let a = report.fleet_attainment();
+        assert_eq!(a.n_tasks, 6);
+        assert_eq!(a.n_finished, 2, "shed tasks never finish");
+        assert!(a.slo <= 2.0 / 6.0 + 1e-12);
+    }
+
+    #[test]
     #[should_panic]
     fn empty_fleet_rejected() {
-        let _ = Router::new(RoutingStrategy::RoundRobin, Vec::new(), 1_000_000);
+        let _ = Router::new(RoutingStrategy::RoundRobin, Vec::new());
     }
 }

@@ -17,13 +17,13 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::RoutingStrategy;
+use crate::cluster::{AdmissionConfig, DeviceProfile, FleetSpec, RoutingStrategy};
 use crate::coordinator::fastserve::FastServeConfig;
 use crate::coordinator::preemption::UtilityAdaptor;
 use crate::coordinator::selection::CYCLE_CAP;
 use crate::util::{secs, Micros};
 
-use self::toml::TomlDoc;
+use self::toml::{TomlDoc, TomlTable, TomlValue};
 
 /// Which scheduling policy to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,10 +93,17 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Run horizon.
     pub horizon: Micros,
-    /// Cluster mode: number of replicas.
+    /// Cluster mode: number of replicas (homogeneous fleets).
     pub cluster_replicas: usize,
     /// Cluster mode: routing strategy.
     pub cluster_strategy: RoutingStrategy,
+    /// Cluster mode: explicit per-replica device profiles. `None` means
+    /// a homogeneous fleet of `cluster_replicas` standard devices.
+    pub cluster_fleet: Option<FleetSpec>,
+    /// Cluster mode: router admission bounds (disabled by default).
+    pub cluster_admission: AdmissionConfig,
+    /// Cluster mode: overload migration (disabled by default).
+    pub cluster_migration: bool,
 }
 
 impl Default for ServeConfig {
@@ -116,6 +123,9 @@ impl Default for ServeConfig {
             horizon: secs(600.0),
             cluster_replicas: 1,
             cluster_strategy: RoutingStrategy::SloAware,
+            cluster_fleet: None,
+            cluster_admission: AdmissionConfig::default(),
+            cluster_migration: false,
         }
     }
 }
@@ -189,7 +199,8 @@ impl ServeConfig {
         if let Some(v) = doc.get_f64("workload", "horizon_s")? {
             cfg.horizon = secs(v);
         }
-        if let Some(v) = doc.get_i64("cluster", "replicas")? {
+        let replicas_key = doc.get_i64("cluster", "replicas")?;
+        if let Some(v) = replicas_key {
             if v < 1 {
                 bail!("[cluster] replicas must be >= 1, got {v}");
             }
@@ -198,8 +209,111 @@ impl ServeConfig {
         if let Some(v) = doc.get_str("cluster", "strategy")? {
             cfg.cluster_strategy = RoutingStrategy::parse(&v)?;
         }
+        if let Some(v) = doc.get_str("cluster", "fleet")? {
+            cfg.cluster_fleet = Some(FleetSpec::preset(&v)?.with_cycle_cap(cfg.cycle_cap));
+        }
+        // a bound key implies admission unless it is explicitly switched
+        // off — a configured bound must never be a silent no-op
+        let admission_key = doc.get_bool("cluster", "admission")?;
+        if let Some(v) = admission_key {
+            cfg.cluster_admission.enabled = v;
+        }
+        let mut bound_set = false;
+        if let Some(v) = doc.get_i64("cluster", "rt_queue_bound")? {
+            if v < 1 {
+                bail!("[cluster] rt_queue_bound must be >= 1, got {v}");
+            }
+            cfg.cluster_admission.rt_queue_bound = v as usize;
+            bound_set = true;
+        }
+        if let Some(v) = doc.get_i64("cluster", "nrt_queue_bound")? {
+            if v < 1 {
+                bail!("[cluster] nrt_queue_bound must be >= 1, got {v}");
+            }
+            cfg.cluster_admission.nrt_queue_bound = v as usize;
+            bound_set = true;
+        }
+        if bound_set && admission_key.is_none() {
+            cfg.cluster_admission.enabled = true;
+        }
+        if let Some(v) = doc.get_bool("cluster", "migration")? {
+            cfg.cluster_migration = v;
+        }
+        let replica_tables = doc.get_tables("cluster.replica");
+        if !replica_tables.is_empty() {
+            if cfg.cluster_fleet.is_some() {
+                bail!("[cluster] fleet and [[cluster.replica]] are mutually exclusive");
+            }
+            let profiles = replica_tables
+                .iter()
+                .map(|t| parse_replica_table(t, cfg.cycle_cap))
+                .collect::<Result<Vec<_>>>()?;
+            cfg.cluster_fleet = Some(FleetSpec { profiles });
+        }
+        if let Some(fleet) = &cfg.cluster_fleet {
+            if replicas_key.is_some() {
+                bail!(
+                    "[cluster] replicas conflicts with an explicit fleet \
+                     (fleet / [[cluster.replica]] fixes the width)"
+                );
+            }
+            cfg.cluster_replicas = fleet.len();
+        }
         Ok(cfg)
     }
+
+    /// The effective fleet for cluster runs: the explicit spec when one
+    /// was configured, else `cluster_replicas` standard devices carrying
+    /// the configured cycle cap (exactly the pre-refactor homogeneous
+    /// fleet).
+    pub fn fleet(&self) -> FleetSpec {
+        match &self.cluster_fleet {
+            Some(f) => f.clone(),
+            None => FleetSpec::homogeneous(self.cluster_replicas, self.cycle_cap),
+        }
+    }
+}
+
+/// Parse one `[[cluster.replica]]` table: a named `device` tier
+/// (default "standard"), optionally rescaled (`scale`, a latency
+/// multiplier on the tier curve) or given a custom `cycle_cap_ms`.
+/// Without an explicit `cycle_cap_ms` the replica inherits the
+/// configured `[scheduler] cycle_cap_ms` (`default_cycle_cap`).
+fn parse_replica_table(table: &TomlTable, default_cycle_cap: Micros) -> Result<DeviceProfile> {
+    for key in table.keys() {
+        if !matches!(key.as_str(), "device" | "scale" | "cycle_cap_ms") {
+            bail!("[[cluster.replica]]: unknown key '{key}' (device|scale|cycle_cap_ms)");
+        }
+    }
+    let device = match table.get("device") {
+        None => "standard".to_string(),
+        Some(TomlValue::Str(s)) => s.clone(),
+        Some(v) => bail!("[[cluster.replica]].device: expected string, got {v:?}"),
+    };
+    let mut profile = DeviceProfile::named(&device)?;
+    match table.get("scale") {
+        None => {}
+        Some(TomlValue::Float(f)) if *f > 0.0 => {
+            profile.latency = profile.latency.scaled(*f);
+        }
+        Some(TomlValue::Int(i)) if *i > 0 => {
+            profile.latency = profile.latency.scaled(*i as f64);
+        }
+        Some(v) => bail!("[[cluster.replica]].scale: expected positive number, got {v:?}"),
+    }
+    match table.get("cycle_cap_ms") {
+        None => profile.cycle_cap = default_cycle_cap,
+        Some(TomlValue::Float(f)) if *f > 0.0 => {
+            profile.cycle_cap = (*f * 1000.0) as Micros;
+        }
+        Some(TomlValue::Int(i)) if *i > 0 => {
+            profile.cycle_cap = (*i as u64) * 1000;
+        }
+        Some(v) => {
+            bail!("[[cluster.replica]].cycle_cap_ms: expected positive number, got {v:?}")
+        }
+    }
+    Ok(profile)
 }
 
 #[cfg(test)]
@@ -222,8 +336,105 @@ mod tests {
         let c = ServeConfig::from_toml(text).unwrap();
         assert_eq!(c.cluster_replicas, 4);
         assert_eq!(c.cluster_strategy, RoutingStrategy::LeastLoaded);
+        assert!(c.cluster_fleet.is_none());
+        assert!(!c.cluster_admission.enabled);
+        assert!(!c.cluster_migration);
+        assert_eq!(c.fleet().names(), vec!["standard"; 4]);
         assert!(ServeConfig::from_toml("[cluster]\nreplicas = 0\n").is_err());
         assert!(ServeConfig::from_toml("[cluster]\nstrategy = \"hash\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_fleet_preset_and_guards() {
+        let text = "[cluster]\nfleet = \"edge-mixed\"\nadmission = true\n\
+                    rt_queue_bound = 6\nnrt_queue_bound = 9\nmigration = true\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        let fleet = c.fleet();
+        assert_eq!(fleet.names(), vec!["standard", "standard", "lite", "nano"]);
+        assert_eq!(c.cluster_replicas, 4, "replica count follows the fleet");
+        assert!(c.cluster_admission.enabled);
+        assert_eq!(c.cluster_admission.rt_queue_bound, 6);
+        assert_eq!(c.cluster_admission.nrt_queue_bound, 9);
+        assert!(c.cluster_migration);
+        assert!(ServeConfig::from_toml("[cluster]\nfleet = \"warp\"\n").is_err());
+        assert!(ServeConfig::from_toml("[cluster]\nrt_queue_bound = 0\n").is_err());
+    }
+
+    #[test]
+    fn bound_keys_imply_admission_unless_switched_off() {
+        let c = ServeConfig::from_toml("[cluster]\nrt_queue_bound = 6\n").unwrap();
+        assert!(c.cluster_admission.enabled, "a bound must never be a silent no-op");
+        assert_eq!(c.cluster_admission.rt_queue_bound, 6);
+        let c = ServeConfig::from_toml(
+            "[cluster]\nadmission = false\nnrt_queue_bound = 4\n",
+        )
+        .unwrap();
+        assert!(!c.cluster_admission.enabled, "explicit off wins");
+        assert_eq!(c.cluster_admission.nrt_queue_bound, 4);
+    }
+
+    #[test]
+    fn scheduler_cycle_cap_threads_into_fleets() {
+        // preset fleets inherit the configured cap...
+        let text = "[scheduler]\ncycle_cap_ms = 500.0\n[cluster]\nfleet = \"edge-mixed\"\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert!(c.fleet().profiles.iter().all(|p| p.cycle_cap == 500_000));
+        // ...and so do replica tables without an explicit cycle_cap_ms,
+        // while explicit per-replica caps take precedence
+        let text = "[scheduler]\ncycle_cap_ms = 500.0\n\
+                    [[cluster.replica]]\ndevice = \"standard\"\n\
+                    [[cluster.replica]]\ndevice = \"lite\"\ncycle_cap_ms = 800.0\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        let fleet = c.fleet();
+        assert_eq!(fleet.profiles[0].cycle_cap, 500_000);
+        assert_eq!(fleet.profiles[1].cycle_cap, 800_000);
+    }
+
+    #[test]
+    fn replicas_key_conflicts_with_explicit_fleet() {
+        let text = "[cluster]\nreplicas = 8\nfleet = \"edge-mixed\"\n";
+        assert!(ServeConfig::from_toml(text).is_err());
+        let text = "[cluster]\nreplicas = 8\n[[cluster.replica]]\ndevice = \"nano\"\n";
+        assert!(ServeConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn parses_replica_table_array() {
+        let text = r#"
+[cluster]
+strategy = "slo-aware"
+
+[[cluster.replica]]
+device = "standard"
+
+[[cluster.replica]]
+device = "lite"
+cycle_cap_ms = 800.0
+
+[[cluster.replica]]
+device = "nano"
+scale = 1.2
+"#;
+        let c = ServeConfig::from_toml(text).unwrap();
+        let fleet = c.cluster_fleet.expect("fleet parsed");
+        assert_eq!(fleet.names(), vec!["standard", "lite", "nano"]);
+        assert_eq!(c.cluster_replicas, 3);
+        assert_eq!(fleet.profiles[1].cycle_cap, 800_000);
+        // nano rescaled by a further 1.2x on top of the tier curve
+        let nano = crate::cluster::DeviceProfile::nano();
+        assert_eq!(
+            fleet.profiles[2].latency.decode(1),
+            (nano.latency.decode(1) as f64 * 1.2).round() as Micros
+        );
+    }
+
+    #[test]
+    fn replica_table_rejects_bad_keys_and_fleet_conflict() {
+        assert!(ServeConfig::from_toml("[[cluster.replica]]\ndevice = \"tpu\"\n").is_err());
+        assert!(ServeConfig::from_toml("[[cluster.replica]]\ngpu = 2\n").is_err());
+        assert!(ServeConfig::from_toml("[[cluster.replica]]\nscale = -1.0\n").is_err());
+        let conflict = "[cluster]\nfleet = \"edge-mixed\"\n[[cluster.replica]]\n";
+        assert!(ServeConfig::from_toml(conflict).is_err());
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! Minimal TOML-subset parser (see `config::mod` docs for the subset).
+//!
+//! Supports `[section]` tables, `[[section]]` arrays of tables (each
+//! header appends a fresh table; following keys land in it), `key =
+//! value` scalars/flat arrays, and `#` comments.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
+
+/// One table of an array-of-tables (`[[name]]`): key -> value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
 
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,25 +30,45 @@ pub enum TomlValue {
 /// the "" section.
 #[derive(Debug, Default)]
 pub struct TomlDoc {
-    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+    sections: BTreeMap<String, TomlTable>,
+    /// `[[name]]` arrays of tables, in document order.
+    tables: BTreeMap<String, Vec<TomlTable>>,
+}
+
+/// Where the keys following the most recent header land.
+enum Target {
+    /// A `[section]` header (or the implicit "" top level).
+    Section(String),
+    /// The latest table of a `[[name]]` array.
+    Table(String),
 }
 
 impl TomlDoc {
     /// Parse a document in the supported TOML subset.
     pub fn parse(text: &str) -> Result<Self> {
         let mut doc = TomlDoc::default();
-        let mut section = String::new();
+        let mut target = Target::Section(String::new());
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim().to_string();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[") {
+                let name = name
+                    .strip_suffix("]]")
+                    .with_context(|| format!("line {}: unterminated table array", lineno + 1))?;
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default().push(TomlTable::new());
+                target = Target::Table(name);
                 continue;
             }
             if let Some(name) = line.strip_prefix('[') {
                 let name = name
                     .strip_suffix(']')
                     .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
-                section = name.trim().to_string();
-                doc.sections.entry(section.clone()).or_default();
+                let name = name.trim().to_string();
+                doc.sections.entry(name.clone()).or_default();
+                target = Target::Section(name);
                 continue;
             }
             let (key, value) = line
@@ -49,10 +76,15 @@ impl TomlDoc {
                 .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
             let v = parse_value(value.trim())
                 .with_context(|| format!("line {}: bad value", lineno + 1))?;
-            doc.sections
-                .entry(section.clone())
-                .or_default()
-                .insert(key.trim().to_string(), v);
+            let slot = match &target {
+                Target::Section(name) => doc.sections.entry(name.clone()).or_default(),
+                Target::Table(name) => doc
+                    .tables
+                    .get_mut(name)
+                    .and_then(|v| v.last_mut())
+                    .expect("table array entry pushed at its header"),
+            };
+            slot.insert(key.trim().to_string(), v);
         }
         Ok(doc)
     }
@@ -60,6 +92,12 @@ impl TomlDoc {
     /// Raw value lookup (top-level keys live in the "" section).
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section)?.get(key)
+    }
+
+    /// The tables of a `[[name]]` array, in document order (empty slice
+    /// when the document has none).
+    pub fn get_tables(&self, name: &str) -> &[TomlTable] {
+        self.tables.get(name).map_or(&[], Vec::as_slice)
     }
 
     /// Typed lookup: string.
@@ -204,5 +242,36 @@ x = -7
         assert!(TomlDoc::parse("[unterminated\n").is_err());
         assert!(TomlDoc::parse("novalue\n").is_err());
         assert!(TomlDoc::parse("x = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("[[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_in_document_order() {
+        let doc = TomlDoc::parse(
+            r#"
+[cluster]
+strategy = "slo-aware"
+
+[[cluster.replica]]
+device = "standard"
+
+[[cluster.replica]]
+device = "nano"
+scale = 2.5
+
+[cluster2]
+after = 1
+"#,
+        )
+        .unwrap();
+        let tables = doc.get_tables("cluster.replica");
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].get("device"), Some(&TomlValue::Str("standard".into())));
+        assert_eq!(tables[1].get("device"), Some(&TomlValue::Str("nano".into())));
+        assert_eq!(tables[1].get("scale"), Some(&TomlValue::Float(2.5)));
+        // keys after a later [section] header do not leak into the table
+        assert_eq!(doc.get_i64("cluster2", "after").unwrap(), Some(1));
+        assert_eq!(doc.get_str("cluster", "strategy").unwrap(), Some("slo-aware".into()));
+        assert!(doc.get_tables("missing").is_empty());
     }
 }

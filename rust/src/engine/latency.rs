@@ -75,6 +75,24 @@ impl LatencyModel {
         LatencyModel { points, prefill_points, max_batch }
     }
 
+    /// A uniformly slower (or faster) device: every decode/prefill knot
+    /// multiplied by `factor` and rounded to integer micros. This is how
+    /// heterogeneous fleet profiles (`cluster::fleet::DeviceProfile`)
+    /// derive lite/nano device curves from the paper-calibrated one.
+    pub fn scaled(&self, factor: f64) -> Self {
+        assert!(factor > 0.0, "latency scale factor must be positive");
+        let scale = |pts: &[(u32, Micros)]| -> Vec<(u32, Micros)> {
+            pts.iter()
+                .map(|&(b, us)| (b, (us as f64 * factor).round() as Micros))
+                .collect()
+        };
+        LatencyModel {
+            points: scale(&self.points),
+            prefill_points: scale(&self.prefill_points),
+            max_batch: self.max_batch,
+        }
+    }
+
     /// Decode latency for batch size `b` (clamped to the model range).
     pub fn decode(&self, b: u32) -> Micros {
         interp(&self.points, b)
@@ -204,5 +222,25 @@ mod tests {
     #[should_panic]
     fn unsorted_points_rejected() {
         let _ = LatencyModel::from_points(vec![(3, 1), (2, 1)], vec![], 4);
+    }
+
+    #[test]
+    fn scaled_multiplies_every_knot() {
+        let m = LatencyModel::paper_calibrated();
+        let slow = m.scaled(2.5);
+        for b in [1u32, 8, 9, 32] {
+            assert_eq!(slow.decode(b), (m.decode(b) as f64 * 2.5).round() as Micros);
+        }
+        assert_eq!(slow.prefill(16), (m.prefill(16) as f64 * 2.5).round() as Micros);
+        assert_eq!(slow.max_batch, m.max_batch);
+        // identity scale is exact
+        let same = m.scaled(1.0);
+        assert_eq!(same.decode(9), m.decode(9));
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_positive_scale_rejected() {
+        let _ = LatencyModel::paper_calibrated().scaled(0.0);
     }
 }

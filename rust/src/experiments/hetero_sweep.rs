@@ -1,0 +1,212 @@
+//! Heterogeneous-fleet sweep — fleet mix × routing strategy ×
+//! admission/migration guards (extension beyond the paper; see
+//! DESIGN.md "Heterogeneous fleets").
+//!
+//! Both fleet shapes serve the *same* workload at the same offered
+//! load, sized to the mixed fleet's aggregate capacity (~3 standard
+//! device-equivalents for `edge-mixed`): the homogeneous 4×standard
+//! fleet has slack, while the mixed fleet only meets its SLOs if
+//! routing respects device speed. The expected shape: round-robin
+//! sends a quarter of the traffic to the nano-class board and non-RT
+//! attainment collapses there; SLO-aware routing sizes each replica's
+//! share to its Eq. 7 headroom; admission + migration then shed or
+//! re-place the residual overload instead of letting queues grow
+//! without bound. The acceptance invariant — mixed fleet, slo-aware +
+//! guards ≥ round-robin — is asserted with measured margins in
+//! `rust/tests/hetero_fleet.rs`.
+
+use anyhow::Result;
+
+use crate::cluster::{FleetSpec, RoutingStrategy};
+use crate::config::ServeConfig;
+use crate::metrics::report::{latency_summary_json, ms2, nan_null, pct, Table};
+use crate::metrics::{Attainment, LatencySummary};
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{default_drain, run_fleet};
+
+/// Offered load in standard-device equivalents: the `edge-mixed`
+/// capacity (1 + 1 + 1/1.5 + 1/2.5 ≈ 3.07), rounded down so the mixed
+/// fleet runs at its knee rather than past it.
+pub const LOAD_EQUIVALENTS: f64 = 3.0;
+
+/// The two fleet shapes the sweep compares, as (label, spec) pairs.
+pub fn fleet_shapes() -> Vec<(&'static str, FleetSpec)> {
+    vec![
+        ("uniform-4", FleetSpec::preset("standard,standard,standard,standard").unwrap()),
+        ("edge-mixed", FleetSpec::preset("edge-mixed").unwrap()),
+    ]
+}
+
+/// One (fleet, strategy, guards) cell.
+#[derive(Debug)]
+pub struct HeteroCell {
+    /// Fleet-shape label.
+    pub fleet: &'static str,
+    /// Per-replica tier names.
+    pub profiles: Vec<&'static str>,
+    /// Routing strategy label.
+    pub strategy: &'static str,
+    /// True when admission control + migration were enabled.
+    pub guarded: bool,
+    /// Fleet-wide attainment (shed tasks count as violations).
+    pub attainment: Attainment,
+    /// Fleet-wide TTFT/TPOT distributions.
+    pub latency: LatencySummary,
+    /// Tasks each replica ended the run holding.
+    pub routed: Vec<usize>,
+    /// Tasks shed by admission control.
+    pub rejected: usize,
+    /// Tasks re-placed by overload migration.
+    pub migrations: u64,
+}
+
+/// Run one cell. `guarded` switches admission control and overload
+/// migration on together (bounds from `cfg.cluster_admission`).
+pub fn run_cell(
+    label: &'static str,
+    spec: &FleetSpec,
+    strategy: RoutingStrategy,
+    guarded: bool,
+    cfg: &ServeConfig,
+) -> Result<HeteroCell> {
+    let workload = WorkloadSpec::paper_mix(
+        cfg.arrival_rate * LOAD_EQUIVALENTS,
+        cfg.rt_ratio,
+        cfg.n_tasks * LOAD_EQUIVALENTS as usize,
+        cfg.seed,
+    )
+    .generate();
+    let mut cfg = cfg.clone();
+    cfg.cluster_admission.enabled = guarded;
+    cfg.cluster_migration = guarded;
+    let report = run_fleet(strategy, spec, workload, &cfg, default_drain())?;
+    let tasks = report.tasks();
+    Ok(HeteroCell {
+        fleet: label,
+        profiles: spec.names(),
+        strategy: report.strategy,
+        guarded,
+        attainment: Attainment::compute(&tasks),
+        latency: LatencySummary::compute(&tasks),
+        routed: report.replicas.iter().map(|r| r.routed).collect(),
+        rejected: report.rejected_count(),
+        migrations: report.migrations,
+    })
+}
+
+/// Full sweep; prints the fleet table and returns the JSON series.
+pub fn run(cfg: &ServeConfig) -> Result<Json> {
+    let shapes = fleet_shapes();
+    let mut cells: Vec<HeteroCell> = Vec::new();
+    for (label, spec) in &shapes {
+        for guarded in [false, true] {
+            for strategy in RoutingStrategy::ALL {
+                cells.push(run_cell(*label, spec, strategy, guarded, cfg)?);
+            }
+        }
+    }
+
+    println!(
+        "Hetero sweep — policy {:?}, offered load {}x rate {}, RT ratio {}, \
+         {} tasks, seed {} (guards = admission + migration)\n",
+        cfg.policy,
+        LOAD_EQUIVALENTS,
+        cfg.arrival_rate,
+        cfg.rt_ratio,
+        cfg.n_tasks * LOAD_EQUIVALENTS as usize,
+        cfg.seed
+    );
+    let mut t = Table::new(&[
+        "fleet", "guards", "strategy", "fleet SLO", "RT SLO", "non-RT SLO", "shed",
+        "migrations", "TPOT p99", "routed per replica",
+    ]);
+    for c in &cells {
+        t.row(vec![
+            c.fleet.to_string(),
+            if c.guarded { "on" } else { "off" }.to_string(),
+            c.strategy.to_string(),
+            pct(c.attainment.slo),
+            pct(c.attainment.rt_slo),
+            pct(c.attainment.nrt_slo),
+            c.rejected.to_string(),
+            c.migrations.to_string(),
+            ms2(c.latency.tpot.p99_ms),
+            format!("{:?}", c.routed),
+        ]);
+    }
+    println!("{}", t.render());
+
+    Ok(Json::from(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .set("fleet", c.fleet)
+                    .set(
+                        "profiles",
+                        c.profiles.iter().map(|&p| Json::from(p)).collect::<Vec<_>>(),
+                    )
+                    .set("strategy", c.strategy)
+                    .set("guarded", c.guarded)
+                    .set("slo", nan_null(c.attainment.slo))
+                    .set("rt_slo", nan_null(c.attainment.rt_slo))
+                    .set("nrt_slo", nan_null(c.attainment.nrt_slo))
+                    .set("n_tasks", c.attainment.n_tasks)
+                    .set("n_finished", c.attainment.n_finished)
+                    .set("rejected", c.rejected)
+                    .set("migrations", c.migrations)
+                    .set("latency", latency_summary_json(&c.latency))
+                    .set(
+                        "routed",
+                        c.routed.iter().map(|&r| Json::from(r)).collect::<Vec<_>>(),
+                    )
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { n_tasks: 30, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn cells_cover_the_workload_exactly_once() {
+        let shapes = fleet_shapes();
+        let (label, spec) = &shapes[1];
+        for guarded in [false, true] {
+            let c = run_cell(*label, spec, RoutingStrategy::SloAware, guarded, &cfg())
+                .unwrap();
+            assert_eq!(c.attainment.n_tasks, 90);
+            assert_eq!(c.routed.iter().sum::<usize>() + c.rejected, 90);
+            assert_eq!(c.profiles, vec!["standard", "standard", "lite", "nano"]);
+        }
+    }
+
+    #[test]
+    fn guarded_cells_are_deterministic() {
+        let shapes = fleet_shapes();
+        let (label, spec) = &shapes[1];
+        let a = run_cell(*label, spec, RoutingStrategy::SloAware, true, &cfg()).unwrap();
+        let b = run_cell(*label, spec, RoutingStrategy::SloAware, true, &cfg()).unwrap();
+        assert_eq!(a.attainment.slo, b.attainment.slo);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.migrations, b.migrations);
+    }
+
+    #[test]
+    fn plain_cells_never_shed_or_migrate() {
+        let shapes = fleet_shapes();
+        let (label, spec) = &shapes[0];
+        let c = run_cell(*label, spec, RoutingStrategy::RoundRobin, false, &cfg())
+            .unwrap();
+        assert_eq!(c.rejected, 0);
+        assert_eq!(c.migrations, 0);
+    }
+}

@@ -18,18 +18,22 @@
 //! | `rate_sweep`  | Fig. 11a/b/c (arrival rate sweep)           |
 //! | `ablation`    | design-choice ablations (DESIGN.md)         |
 //! | `cluster_sweep` | routing strategies × replica counts (ext.)|
+//! | `hetero_sweep`  | fleet mix × strategy × admission (ext.)   |
 
 pub mod ablation;
 pub mod cluster_sweep;
 pub mod dynamic;
 pub mod fig1;
+pub mod hetero_sweep;
 pub mod rate_sweep;
 pub mod ratio_sweep;
 pub mod static_mix;
 
 use anyhow::Result;
 
-use crate::cluster::{ClusterReport, Replica, Router, RoutingStrategy};
+use crate::cluster::{
+    ClusterReport, DeviceProfile, FleetSpec, Replica, Router, RoutingStrategy,
+};
 use crate::config::{PolicyKind, ServeConfig};
 use crate::coordinator::fastserve::FastServePolicy;
 use crate::coordinator::orca::OrcaPolicy;
@@ -37,7 +41,6 @@ use crate::coordinator::scheduler::Policy;
 use crate::coordinator::slice::{SliceConfig, SlicePolicy};
 use crate::coordinator::task::Task;
 use crate::engine::clock::VirtualClock;
-use crate::engine::latency::LatencyModel;
 use crate::engine::sim::SimEngine;
 use crate::server::{RunReport, Server};
 use crate::util::{secs, Micros};
@@ -46,25 +49,41 @@ use crate::util::{secs, Micros};
 pub const ALL_POLICIES: [PolicyKind; 3] =
     [PolicyKind::Orca, PolicyKind::FastServe, PolicyKind::Slice];
 
-/// Instantiate a policy from its kind and the serve config.
+/// Instantiate a policy from its kind and the serve config, calibrated
+/// to the paper's standard device (the single-device path).
 pub fn build_policy(kind: PolicyKind, cfg: &ServeConfig) -> Box<dyn Policy> {
+    let mut profile = DeviceProfile::standard();
+    profile.cycle_cap = cfg.cycle_cap;
+    build_policy_for(kind, cfg, &profile)
+}
+
+/// Instantiate a policy calibrated to one replica's device profile: the
+/// scheduler sees the device's own latency curve, cycle cap and batch
+/// limit (further capped by the configured `max_batch`). For the
+/// standard profile this is exactly the single-device construction.
+pub fn build_policy_for(
+    kind: PolicyKind,
+    cfg: &ServeConfig,
+    profile: &DeviceProfile,
+) -> Box<dyn Policy> {
+    let max_batch = cfg.max_batch.min(profile.max_batch);
     match kind {
         PolicyKind::Slice => {
-            let mut lat = LatencyModel::paper_calibrated();
-            lat.max_batch = cfg.max_batch;
+            let mut lat = profile.latency.clone();
+            lat.max_batch = max_batch;
             Box::new(SlicePolicy::new(
                 lat,
                 SliceConfig {
-                    cycle_cap: cfg.cycle_cap,
+                    cycle_cap: profile.cycle_cap,
                     adaptor: cfg.adaptor,
                     prefill_aware: cfg.prefill_aware,
                 },
             ))
         }
-        PolicyKind::Orca => Box::new(OrcaPolicy::new(cfg.max_batch)),
+        PolicyKind::Orca => Box::new(OrcaPolicy::new(max_batch)),
         PolicyKind::FastServe => {
             let mut fs_cfg = cfg.fastserve.clone();
-            fs_cfg.max_batch = cfg.max_batch;
+            fs_cfg.max_batch = max_batch;
             Box::new(FastServePolicy::new(fs_cfg))
         }
     }
@@ -85,10 +104,9 @@ pub fn run_sim(
     Server::new(workload, policy, engine, VirtualClock::new()).run(horizon)
 }
 
-/// Run one (strategy, replica count, workload) cluster configuration on
-/// the simulation engine. Every replica gets an identical fresh policy
-/// (from `cfg.policy`) and a paper-calibrated sim engine, so the only
-/// degree of freedom between cells is the routing decision.
+/// Run one (strategy, homogeneous replica count, workload) cluster
+/// configuration on the simulation engine — the PR 2 shape, now a thin
+/// wrapper over [`run_fleet`] with `replicas` standard devices.
 pub fn run_cluster(
     strategy: RoutingStrategy,
     replicas: usize,
@@ -96,19 +114,46 @@ pub fn run_cluster(
     cfg: &ServeConfig,
     drain: Micros,
 ) -> Result<ClusterReport> {
-    let fleet: Vec<Replica> = (0..replicas)
-        .map(|i| {
-            let mut lat = LatencyModel::paper_calibrated();
-            lat.max_batch = cfg.max_batch;
+    run_fleet(
+        strategy,
+        &FleetSpec::homogeneous(replicas, cfg.cycle_cap),
+        workload,
+        cfg,
+        drain,
+    )
+}
+
+/// Run one (strategy, fleet spec, workload) cluster configuration on
+/// the simulation engine. Every replica gets a fresh policy (from
+/// `cfg.policy`) and a sim engine, both calibrated to its own device
+/// profile; admission control and migration follow the config
+/// (`cluster_admission` / `cluster_migration`, both off by default).
+pub fn run_fleet(
+    strategy: RoutingStrategy,
+    spec: &FleetSpec,
+    workload: Vec<Task>,
+    cfg: &ServeConfig,
+    drain: Micros,
+) -> Result<ClusterReport> {
+    let fleet: Vec<Replica> = spec
+        .profiles
+        .iter()
+        .enumerate()
+        .map(|(i, profile)| {
+            let mut profile = profile.clone();
+            profile.latency.max_batch = cfg.max_batch.min(profile.max_batch);
             Replica::new(
                 i,
-                build_policy(cfg.policy, cfg),
-                Box::new(SimEngine::paper_calibrated()),
-                lat,
+                build_policy_for(cfg.policy, cfg, &profile),
+                Box::new(SimEngine::new(profile.latency.clone(), profile.max_context)),
+                profile,
             )
         })
         .collect();
-    Router::new(strategy, fleet, cfg.cycle_cap).run(workload, drain)
+    Router::new(strategy, fleet)
+        .with_admission(cfg.cluster_admission)
+        .with_migration(cfg.cluster_migration)
+        .run(workload, drain)
 }
 
 /// Default drain window after the last arrival (virtual seconds).

@@ -5,7 +5,9 @@
 //! Layers:
 //!   * `cluster` — multi-replica scale-out (an extension beyond the
 //!     paper): a router dispatching tasks across N single-device stacks
-//!     under round-robin / least-loaded / SLO-aware strategies.
+//!     — homogeneous or a heterogeneous mix of device tiers — under
+//!     round-robin / least-loaded / SLO-aware strategies, with opt-in
+//!     admission control and overload migration.
 //!   * L3 (`coordinator`, `server`) — the paper's contribution: the
 //!     SLICE scheduler (utility-maximizing selection + decode-mask-matrix
 //!     rate allocation + online event loop) and its baselines.

@@ -2,10 +2,12 @@
 //!
 //! Subcommands (clap is unavailable offline, so parsing is hand-rolled):
 //!   serve       — run a workload through one policy (sim or pjrt engine)
-//!   cluster     — route a workload across N sim replicas (round-robin,
-//!                 least-loaded or SLO-aware) and report fleet metrics
+//!   cluster     — route a workload across a replica fleet (homogeneous
+//!                 or a heterogeneous --fleet spec; round-robin,
+//!                 least-loaded or SLO-aware; optional admission control
+//!                 and overload migration) and report fleet metrics
 //!   experiment  — regenerate a paper table/figure (fig1|table2|fig7|
-//!                 fig8|fig9|fig10|fig11|ablation|cluster|all)
+//!                 fig8|fig9|fig10|fig11|ablation|cluster|hetero|all)
 //!   calibrate   — measure l(b) on the real PJRT engine and print a
 //!                 machine-local latency model
 //!   info        — print artifact/runtime information
@@ -15,7 +17,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use slice_serve::cluster::RoutingStrategy;
+use slice_serve::cluster::{FleetSpec, RoutingStrategy};
 use slice_serve::config::{EngineKind, PolicyKind, ServeConfig};
 #[cfg(feature = "pjrt")]
 use slice_serve::coordinator::task::TaskClass;
@@ -50,11 +52,14 @@ USAGE:
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
                     [--trace <file>] [--save-trace <file>]
   slice-serve cluster [--config <file>] [--replicas <n>]
+                    [--fleet edge-mixed|<tier,tier,...>]  (tiers: standard|lite|nano)
                     [--strategy round-robin|least-loaded|slo-aware]
+                    [--admission on|off] [--rt-queue <n>] [--nrt-queue <n>]
+                    [--migration on|off]
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
   slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
-                    cluster|all> [--n-tasks <n>] [--seed <n>] [--out <json>]
+                    cluster|hetero|all> [--n-tasks <n>] [--seed <n>] [--out <json>]
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -211,18 +216,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Route a synthetic workload across N sim replicas and report
+/// Parse an on/off flag value.
+fn flag_switch(name: &str, value: &str) -> Result<bool> {
+    match value {
+        "on" | "true" => Ok(true),
+        "off" | "false" => Ok(false),
+        other => bail!("--{name}: expected on|off, got '{other}'"),
+    }
+}
+
+/// Route a synthetic workload across a replica fleet and report
 /// fleet-wide plus per-replica SLO metrics.
 fn cmd_cluster(args: &Args) -> Result<()> {
     let mut cfg = build_config(args)?;
+    if args.flag("replicas").is_some() && args.flag("fleet").is_some() {
+        bail!("--replicas and --fleet are mutually exclusive (a fleet spec fixes the width)");
+    }
     if let Some(v) = args.flag_u64("replicas")? {
         if v < 1 {
             bail!("--replicas must be >= 1");
         }
         cfg.cluster_replicas = v as usize;
+        cfg.cluster_fleet = None; // --replicas overrides a config-file fleet
+    }
+    if let Some(s) = args.flag("fleet") {
+        let fleet = FleetSpec::preset(s)?.with_cycle_cap(cfg.cycle_cap);
+        cfg.cluster_replicas = fleet.len();
+        cfg.cluster_fleet = Some(fleet);
     }
     if let Some(s) = args.flag("strategy") {
         cfg.cluster_strategy = RoutingStrategy::parse(s)?;
+    }
+    let admission_flag = args.flag("admission");
+    if let Some(s) = admission_flag {
+        cfg.cluster_admission.enabled = flag_switch("admission", s)?;
+    }
+    // a bound flag implies admission unless --admission off was given —
+    // a configured bound must never be a silent no-op
+    let mut bound_set = false;
+    if let Some(v) = args.flag_u64("rt-queue")? {
+        if v < 1 {
+            bail!("--rt-queue must be >= 1");
+        }
+        cfg.cluster_admission.rt_queue_bound = v as usize;
+        bound_set = true;
+    }
+    if let Some(v) = args.flag_u64("nrt-queue")? {
+        if v < 1 {
+            bail!("--nrt-queue must be >= 1");
+        }
+        cfg.cluster_admission.nrt_queue_bound = v as usize;
+        bound_set = true;
+    }
+    if bound_set && admission_flag.is_none() {
+        cfg.cluster_admission.enabled = true;
+    }
+    if let Some(s) = args.flag("migration") {
+        cfg.cluster_migration = flag_switch("migration", s)?;
     }
 
     let workload =
@@ -230,9 +280,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             .generate();
     // same drain convention as cmd_serve: 300 virtual seconds past the
     // last arrival
-    let report = experiments::run_cluster(
+    let report = experiments::run_fleet(
         cfg.cluster_strategy,
-        cfg.cluster_replicas,
+        &cfg.fleet(),
         workload,
         &cfg,
         secs(300.0),
@@ -242,13 +292,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let fleet = Attainment::compute(&tasks);
     let lat = slice_serve::metrics::LatencySummary::compute(&tasks);
     println!(
-        "cluster policy={} strategy={} replicas={} tasks={} finished={} steps={}",
+        "cluster policy={} strategy={} replicas={} tasks={} finished={} steps={} \
+         shed={} migrations={}",
         report.policy(),
         report.strategy,
         report.replicas.len(),
         fleet.n_tasks,
         fleet.n_finished,
-        report.total_steps()
+        report.total_steps(),
+        report.rejected_count(),
+        report.migrations
     );
 
     let mut t = Table::new(&["fleet metric", "value"]);
@@ -277,7 +330,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("{}", t.render());
 
     let mut per = Table::new(&[
-        "replica", "routed", "finished", "SLO attainment", "steps", "last completion",
+        "replica", "profile", "routed", "migr in/out", "finished", "SLO attainment",
+        "steps", "last completion",
     ]);
     for r in &report.replicas {
         let a = Attainment::compute(&r.report.tasks);
@@ -290,7 +344,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             .map_or(f64::NAN, |c| c as f64 / 1e6);
         per.row(vec![
             r.replica.to_string(),
+            r.profile.to_string(),
             r.routed.to_string(),
+            format!("{}/{}", r.migrated_in, r.migrated_out),
             a.n_finished.to_string(),
             pct(a.slo),
             r.report.steps.to_string(),
@@ -328,6 +384,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "cluster" | "cluster_sweep" => {
             out = out.set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?)
         }
+        "hetero" | "hetero_sweep" => {
+            out = out.set("hetero_sweep", experiments::hetero_sweep::run(&cfg)?)
+        }
         "all" => {
             out = out
                 .set("fig1", experiments::fig1::run()?)
@@ -336,7 +395,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 .set("fig10", experiments::ratio_sweep::run(&cfg)?)
                 .set("fig11", experiments::rate_sweep::run(&cfg)?)
                 .set("ablation", experiments::ablation::run(&cfg)?)
-                .set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?);
+                .set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?)
+                .set("hetero_sweep", experiments::hetero_sweep::run(&cfg)?);
         }
         other => bail!("unknown experiment '{other}'"),
     }

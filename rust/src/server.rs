@@ -124,6 +124,15 @@ impl<C: Clock> Server<C> {
         self.arrivals.push_back(task);
     }
 
+    /// Withdraw every pushed-but-undelivered arrival, in queue order
+    /// (the cluster migration path). The scheduler never saw these
+    /// tasks — they were waiting between iteration boundaries — so
+    /// removing them cannot perturb policy state; the caller re-places
+    /// them (possibly on another replica) and re-pushes survivors.
+    pub fn withdraw_pending(&mut self) -> Vec<Task> {
+        self.arrivals.drain(..).collect()
+    }
+
     /// Deliver all arrivals due at or before `now`.
     fn deliver_arrivals(&mut self, now: Micros) {
         let mut ids: Vec<TaskId> = Vec::new();
@@ -399,6 +408,27 @@ mod tests {
         assert_eq!(s.now(), secs(5.0));
         assert_eq!(s.pool().len(), 0);
         assert_eq!(s.pending_arrivals().count(), 0);
+    }
+
+    #[test]
+    fn withdraw_pending_drains_undelivered_only() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        s.push_arrival(mk_task(0, TaskClass::Voice, 0, 5));
+        s.run_until(secs(1.0)).unwrap(); // task 0 delivered (and served)
+        s.push_arrival(mk_task(1, TaskClass::Voice, secs(2.0), 5));
+        s.push_arrival(mk_task(2, TaskClass::Voice, secs(3.0), 5));
+        let withdrawn = s.withdraw_pending();
+        assert_eq!(withdrawn.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(s.pending_arrivals().count(), 0);
+        assert_eq!(s.pool().len(), 1, "delivered task not withdrawn");
+        // the server keeps running normally afterwards
+        s.run_until(secs(5.0)).unwrap();
+        assert_eq!(s.now(), secs(5.0));
     }
 
     #[test]

@@ -137,6 +137,38 @@ fn cluster_subcommand_reports_fleet_and_replicas() {
 }
 
 #[test]
+fn cluster_fleet_and_guard_flags() {
+    let out = Command::new(bin())
+        .args([
+            "cluster", "--fleet", "edge-mixed", "--strategy", "slo-aware",
+            "--admission", "on", "--migration", "on", "--rate", "2.0", "--n-tasks",
+            "40", "--seed", "9",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("replicas=4"), "{text}");
+    assert!(text.contains("shed="), "{text}");
+    assert!(text.contains("migrations="), "{text}");
+    assert!(text.contains("nano"), "per-replica table lists tiers: {text}");
+
+    // unknown tier and malformed switch are argument-level errors
+    let out = Command::new(bin())
+        .args(["cluster", "--fleet", "warp"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown device profile"));
+    let out = Command::new(bin())
+        .args(["cluster", "--admission", "maybe"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("expected on|off"));
+}
+
+#[test]
 fn unknown_experiment_fails_cleanly() {
     let out = Command::new(bin())
         .args(["experiment", "fig99"])

@@ -1,0 +1,252 @@
+//! Heterogeneous-fleet integration tests: the ISSUE-3 acceptance
+//! contract. Width-1 equivalence with PR 2's cluster (guards off),
+//! migration invariants (exactly-once, determinism), admission-shed
+//! accounting, and the measured routing-quality threshold on the
+//! edge-mixed fleet (thresholds validated by the pysim mirror; see
+//! EXPERIMENTS.md "Hetero sweep").
+
+use slice_serve::cluster::{FleetSpec, RoutingStrategy};
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::Task;
+use slice_serve::experiments::hetero_sweep::LOAD_EQUIVALENTS;
+use slice_serve::experiments::{default_drain, run_cluster, run_fleet, run_sim};
+use slice_serve::workload::WorkloadSpec;
+
+fn workload(rate: f64, n: usize, seed: u64) -> Vec<Task> {
+    WorkloadSpec::paper_mix(rate, 0.7, n, seed).generate()
+}
+
+fn guarded(cfg: &ServeConfig) -> ServeConfig {
+    let mut cfg = cfg.clone();
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_migration = true;
+    cfg
+}
+
+fn mixed() -> FleetSpec {
+    FleetSpec::preset("edge-mixed").unwrap()
+}
+
+/// A width-1 homogeneous fleet with admission and migration disabled
+/// reproduces PR 2's single-replica cluster — and therefore the
+/// single-device `Server::run` — exactly: per-task timing records and
+/// engine step totals (the acceptance bit-exactness criterion).
+#[test]
+fn width1_guards_disabled_matches_single_device_exactly() {
+    for kind in [PolicyKind::Slice, PolicyKind::Orca, PolicyKind::FastServe] {
+        let cfg = ServeConfig { policy: kind, ..ServeConfig::default() };
+        assert!(!cfg.cluster_admission.enabled && !cfg.cluster_migration);
+        let wl = workload(1.0, 120, 9);
+        let single = run_sim(kind, wl.clone(), &cfg, default_drain()).unwrap();
+        let via_cluster =
+            run_cluster(RoutingStrategy::SloAware, 1, wl.clone(), &cfg, default_drain())
+                .unwrap();
+        let via_fleet = run_fleet(
+            RoutingStrategy::SloAware,
+            &cfg.fleet(),
+            wl,
+            &cfg,
+            default_drain(),
+        )
+        .unwrap();
+        for report in [via_cluster, via_fleet] {
+            assert_eq!(report.rejected_count(), 0);
+            assert_eq!(report.migrations, 0);
+            assert_eq!(report.total_steps(), single.steps, "{kind:?}");
+            let tasks = report.tasks();
+            assert_eq!(tasks.len(), single.tasks.len());
+            for (s, c) in single.tasks.iter().zip(&tasks) {
+                assert_eq!(s.id, c.id);
+                assert_eq!(s.first_token, c.first_token, "{kind:?}");
+                assert_eq!(s.last_token, c.last_token);
+                assert_eq!(s.completion, c.completion);
+                assert_eq!(s.tokens_generated, c.tokens_generated);
+                assert_eq!(s.max_token_gap, c.max_token_gap);
+            }
+        }
+    }
+}
+
+/// The acceptance threshold: on the edge-mixed fleet at its capacity
+/// knee, slo-aware routing with admission + migration attains at least
+/// round-robin (guarded or not). Measured (pysim mirror, seed 42):
+/// slo-aware guarded 0.8783 vs round-robin 0.8683 (plain and guarded);
+/// the inequality also holds at seeds 1/7/21/99 with 1.0–7.8 pp
+/// margins.
+#[test]
+fn mixed_fleet_slo_aware_guarded_at_least_round_robin() {
+    let cfg = ServeConfig::default();
+    let n = cfg.n_tasks * LOAD_EQUIVALENTS as usize; // 600
+    let wl = || workload(cfg.arrival_rate * LOAD_EQUIVALENTS, n, cfg.seed);
+    let slo_g = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed(),
+        wl(),
+        &guarded(&cfg),
+        default_drain(),
+    )
+    .unwrap();
+    let rr_p =
+        run_fleet(RoutingStrategy::RoundRobin, &mixed(), wl(), &cfg, default_drain())
+            .unwrap();
+    let rr_g = run_fleet(
+        RoutingStrategy::RoundRobin,
+        &mixed(),
+        wl(),
+        &guarded(&cfg),
+        default_drain(),
+    )
+    .unwrap();
+    let (a_slo, a_rr, a_rrg) =
+        (slo_g.fleet_attainment(), rr_p.fleet_attainment(), rr_g.fleet_attainment());
+    assert!(
+        a_slo.slo >= a_rr.slo,
+        "slo-aware+guards {} < round-robin {}",
+        a_slo.slo,
+        a_rr.slo
+    );
+    assert!(
+        a_slo.slo >= a_rrg.slo,
+        "slo-aware+guards {} < guarded round-robin {}",
+        a_slo.slo,
+        a_rrg.slo
+    );
+    // absolute bands around the measured cells (generous to the 1-ulp
+    // arrival-timestamp caveat recorded in EXPERIMENTS.md)
+    assert!(a_slo.slo > 0.86, "slo-aware+guards collapsed: {}", a_slo.slo);
+    assert!(a_rr.slo < 0.89, "round-robin unexpectedly strong: {}", a_rr.slo);
+    assert!(slo_g.migrations > 0, "knee cell must exercise migration");
+}
+
+/// Migration lifts real-time attainment on the mixed fleet (the Eq. 7
+/// overload signal fires on the slow replicas before RT deadlines are
+/// lost). Measured at seed 42: RT 0.9877 plain vs 0.9975 guarded,
+/// fleet 0.8750 vs 0.8783. Fleet attainment gets a small tolerance:
+/// across seeds the guards trade a task or two of non-RT for the RT
+/// lift (e.g. seed 99 in the pysim sweep), and the contract is "never
+/// meaningfully worse", not strict dominance.
+#[test]
+fn guards_do_not_hurt_slo_aware_on_mixed_fleet() {
+    let cfg = ServeConfig::default();
+    let n = cfg.n_tasks * LOAD_EQUIVALENTS as usize;
+    let wl = || workload(cfg.arrival_rate * LOAD_EQUIVALENTS, n, cfg.seed);
+    let plain =
+        run_fleet(RoutingStrategy::SloAware, &mixed(), wl(), &cfg, default_drain())
+            .unwrap()
+            .fleet_attainment();
+    let with_guards = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed(),
+        wl(),
+        &guarded(&cfg),
+        default_drain(),
+    )
+    .unwrap()
+    .fleet_attainment();
+    assert!(
+        with_guards.slo + 0.005 >= plain.slo,
+        "guards regressed fleet attainment: {} << {}",
+        with_guards.slo,
+        plain.slo
+    );
+    assert!(
+        with_guards.rt_slo >= plain.rt_slo,
+        "guards regressed RT attainment: {} < {}",
+        with_guards.rt_slo,
+        plain.rt_slo
+    );
+}
+
+/// Exactly-once delivery under migration and admission: at an overload
+/// cell (4.0 tasks/s, 800 tasks) every global id lands in the report
+/// exactly once — on a replica or the shed list — migrations stay
+/// within the one-hop cap, and shedding actually fires.
+#[test]
+fn exactly_once_under_migration_and_shedding() {
+    let cfg = guarded(&ServeConfig::default());
+    let report = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed(),
+        workload(4.0, 800, 42),
+        &cfg,
+        default_drain(),
+    )
+    .unwrap();
+    assert_eq!(
+        report.routed_ids(),
+        (0..800).collect::<Vec<u64>>(),
+        "lost or duplicated tasks"
+    );
+    let held: usize = report.replicas.iter().map(|r| r.routed).sum();
+    assert_eq!(held + report.rejected_count(), 800);
+    assert!(report.migrations > 0, "overload cell must migrate");
+    assert!(report.migrations <= 800, "a task migrated more than once");
+    let migrated_in: u64 = report.replicas.iter().map(|r| r.migrated_in).sum();
+    let migrated_out: u64 = report.replicas.iter().map(|r| r.migrated_out).sum();
+    assert_eq!(migrated_in, report.migrations);
+    assert_eq!(migrated_out, report.migrations);
+    assert!(report.rejected_count() > 0, "overload cell must shed");
+    // shed tasks count as violations: attainment denominators include them
+    let a = report.fleet_attainment();
+    assert_eq!(a.n_tasks, 800);
+    assert!(a.n_finished <= 800 - report.rejected_count());
+}
+
+/// Guarded heterogeneous runs are deterministic: identical workload
+/// seeds give identical per-task records, routing, shed lists and
+/// migration counts — across several seeds.
+#[test]
+fn guarded_runs_deterministic_across_seeds() {
+    let cfg = guarded(&ServeConfig::default());
+    for seed in [1u64, 7, 42] {
+        let run = || {
+            run_fleet(
+                RoutingStrategy::SloAware,
+                &mixed(),
+                workload(3.0, 300, seed),
+                &cfg,
+                default_drain(),
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.migrations, b.migrations, "seed {seed}");
+        assert_eq!(a.rejected_count(), b.rejected_count());
+        let (ta, tb) = (a.tasks(), b.tasks());
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.id, y.id, "seed {seed} routed differently");
+            assert_eq!(x.first_token, y.first_token);
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.tokens_generated, y.tokens_generated);
+        }
+        for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(ra.routed, rb.routed);
+            assert_eq!(ra.migrated_in, rb.migrated_in);
+            assert_eq!(ra.migrated_out, rb.migrated_out);
+            assert_eq!(ra.report.steps, rb.report.steps);
+        }
+    }
+}
+
+/// Profile plumbing: the mixed fleet reports its tier names in replica
+/// order, and load-aware strategies shift share away from slow tiers.
+#[test]
+fn mixed_fleet_profiles_and_load_shape() {
+    let cfg = ServeConfig::default();
+    let report = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed(),
+        workload(3.0, 600, 42),
+        &cfg,
+        default_drain(),
+    )
+    .unwrap();
+    let profiles: Vec<&str> = report.replicas.iter().map(|r| r.profile).collect();
+    assert_eq!(profiles, vec!["standard", "standard", "lite", "nano"]);
+    let routed: Vec<usize> = report.replicas.iter().map(|r| r.routed).collect();
+    assert!(
+        routed[3] < routed[0] && routed[3] < routed[1],
+        "nano should receive the smallest share, got {routed:?}"
+    );
+}

@@ -11,6 +11,10 @@ Stages:
   3. cluster_sweep — routing strategies x replica counts (SLICE policy),
      per-replica load held constant, plus the integration-test cells the
      Rust suite asserts (threshold validation).
+  4. rust cluster integration-test cells (threshold validation).
+  5. hetero_sweep — fleet mix (uniform-4 vs edge-mixed) x strategy x
+     admission/migration guards at the mixed fleet's capacity knee,
+     plus the hetero_fleet.rs integration-test cells.
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
 """
@@ -24,8 +28,9 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent))
 
 from slice_sim import (  # noqa: E402
-    CYCLE_CAP, DecodeMask, LatencyModel, OrcaPolicy, Rng, Server, SlicePolicy,
-    attainment, latency_summary, paper_mix, period_eq7, run_cluster,
+    CYCLE_CAP, AdmissionConfig, DecodeMask, DeviceProfile, LatencyModel,
+    OrcaPolicy, Rng, Server, SlicePolicy, attainment, edge_mixed,
+    latency_summary, paper_mix, period_eq7, run_cluster, run_fleet,
     select_tasks, secs,
 )
 
@@ -158,6 +163,82 @@ def cluster_cell(strategy, replicas, rate, rt_ratio, n_tasks, seed):
     }
 
 
+def hetero_cell(fleet_label, profiles, strategy, guarded,
+                rate=3.0, n_tasks=600, seed=42):
+    """Mirrors experiments::hetero_sweep::run_cell (LOAD_EQUIVALENTS=3)."""
+    wl = paper_mix(rate, 0.7, n_tasks, seed)
+    t0 = time.time()
+    tasks, per, router = run_fleet(
+        strategy, profiles, wl, secs(120.0),
+        admission=AdmissionConfig(enabled=guarded), migration=guarded)
+    wall = time.time() - t0
+    att = attainment(tasks)
+    lat = latency_summary(tasks)
+    return {
+        "fleet": fleet_label, "strategy": strategy, "guarded": guarded,
+        "profiles": [p.name for p in profiles],
+        "slo": att["slo"], "rt_slo": att["rt_slo"], "nrt_slo": att["nrt_slo"],
+        "n_tasks": att["n_tasks"], "n_finished": att["n_finished"],
+        "rejected": len(router.rejected), "migrations": router.migrations,
+        "tpot_p99_ms": lat["tpot"]["p99_ms"],
+        "routed": [p[1] for p in per], "harness_wall_s": round(wall, 2),
+    }
+
+
+def hetero_sweep():
+    print("stage 5: hetero_sweep (SLICE policy, offered load 3.0 standard-"
+          "equivalents, RT:NRT 7:3, 600 tasks, seed 42; guards = admission"
+          " + migration)")
+    shapes = [
+        ("uniform-4", lambda: [DeviceProfile.standard() for _ in range(4)]),
+        ("edge-mixed", edge_mixed),
+    ]
+    sweep = []
+    for label, mk in shapes:
+        for guarded in (False, True):
+            for strat in ("round-robin", "least-loaded", "slo-aware"):
+                cell = hetero_cell(label, mk(), strat, guarded)
+                sweep.append(cell)
+                print(f"  {label:<10} guards={'on' if guarded else 'off':<3} "
+                      f"{strat:<13} slo={cell['slo']:.4f} rt={cell['rt_slo']:.4f} "
+                      f"nrt={cell['nrt_slo']:.4f} shed={cell['rejected']} "
+                      f"mig={cell['migrations']} routed={cell['routed']} "
+                      f"({cell['harness_wall_s']}s)")
+    print()
+
+    print("stage 6: hetero_fleet.rs integration-test cells (threshold "
+          "validation)")
+    cells = {}
+    # mixed_fleet_slo_aware_guarded_at_least_round_robin (seed 42)
+    cells["slo_guarded"] = hetero_cell("edge-mixed", edge_mixed(), "slo-aware", True)
+    cells["rr_plain"] = hetero_cell("edge-mixed", edge_mixed(), "round-robin", False)
+    cells["rr_guarded"] = hetero_cell("edge-mixed", edge_mixed(), "round-robin", True)
+    cells["slo_plain"] = hetero_cell("edge-mixed", edge_mixed(), "slo-aware", False)
+    for k in ("slo_guarded", "rr_plain", "rr_guarded", "slo_plain"):
+        c = cells[k]
+        print(f"  {k:<12} slo={c['slo']:.4f} rt={c['rt_slo']:.4f} "
+              f"shed={c['rejected']} mig={c['migrations']}")
+    ok = (cells["slo_guarded"]["slo"] >= cells["rr_plain"]["slo"]
+          and cells["slo_guarded"]["slo"] >= cells["rr_guarded"]["slo"]
+          and cells["slo_guarded"]["slo"] > 0.86 and cells["rr_plain"]["slo"] < 0.89
+          and cells["slo_guarded"]["migrations"] > 0)
+    check(ok, "slo-aware+guards >= round-robin on edge-mixed (rust threshold)")
+    check(cells["slo_guarded"]["rt_slo"] >= cells["slo_plain"]["rt_slo"],
+          "guards lift slo-aware RT attainment")
+    # exactly_once_under_migration_and_shedding (rate 4.0, 800 tasks)
+    over = hetero_cell("edge-mixed", edge_mixed(), "slo-aware", True,
+                       rate=4.0, n_tasks=800)
+    cells["overload"] = over
+    print(f"  overload     slo={over['slo']:.4f} shed={over['rejected']} "
+          f"mig={over['migrations']}")
+    check(over["rejected"] > 0 and over["migrations"] > 0,
+          "overload cell sheds and migrates")
+    check(sum(over["routed"]) + over["rejected"] == 800,
+          "overload cell covers every task exactly once")
+    print()
+    return sweep, cells
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
@@ -211,7 +292,10 @@ def main():
         print(f"  unit cell {strat:<13} slo={a['slo']:.4f} rt={a['rt_slo']:.4f}")
     print()
 
-    doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells}
+    hetero, hetero_cells = hetero_sweep()
+
+    doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
+           "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")

@@ -11,8 +11,9 @@ table). Every algorithm here mirrors the Rust source line by line:
   DecodeMask        <- rust/src/coordinator/mask.rs      (Alg. 3)
   SlicePolicy       <- rust/src/coordinator/slice.rs     (Alg. 1/4)
   OrcaPolicy        <- rust/src/coordinator/orca.rs
-  Server            <- rust/src/server.rs (run / run_until / finish)
-  Replica / Router  <- rust/src/cluster/*.rs
+  Server            <- rust/src/server.rs (run / run_until / withdraw / finish)
+  DeviceProfile     <- rust/src/cluster/fleet.rs (tiers, admission bounds)
+  Replica / Router  <- rust/src/cluster/*.rs (staging, admission, migration)
   Attainment etc.   <- rust/src/metrics/mod.rs
   WorkloadSpec      <- rust/src/workload/mod.rs
 
@@ -141,6 +142,14 @@ class LatencyModel:
                 frac = (x - xa) / (xb - xa)
                 return rust_round(ya + frac * (yb - ya))
         return points[-1][1]
+
+    def scaled(self, factor: float) -> "LatencyModel":
+        assert factor > 0.0
+        return LatencyModel(
+            [(b, rust_round(us * factor)) for b, us in self.points],
+            [(b, rust_round(us * factor)) for b, us in self.prefill_points],
+            self.max_batch,
+        )
 
     def decode(self, b: int) -> int:
         v = self._decode_cache.get(b)
@@ -470,6 +479,11 @@ class Server:
         assert not self.arrivals or self.arrivals[-1].arrival <= task.arrival
         self.arrivals.append(task)
 
+    def withdraw_pending(self) -> List[Task]:
+        out = list(self.arrivals)
+        self.arrivals.clear()
+        return out
+
     def _deliver_arrivals(self, now: int) -> None:
         ids = []
         while self.arrivals and self.arrivals[0].arrival <= now:
@@ -547,20 +561,115 @@ class Server:
 # --------------------------------------------------------------- cluster --
 
 
+@dataclass
+class DeviceProfile:
+    """Mirrors cluster/fleet.rs DeviceProfile."""
+
+    name: str
+    latency: LatencyModel
+    max_batch: int
+    max_context: int
+    cycle_cap: int = CYCLE_CAP
+
+    @staticmethod
+    def standard() -> "DeviceProfile":
+        return DeviceProfile("standard", LatencyModel.paper_calibrated(), 32, 8192)
+
+    @staticmethod
+    def lite() -> "DeviceProfile":
+        return DeviceProfile(
+            "lite", LatencyModel.paper_calibrated().scaled(1.5), 16, 4096)
+
+    @staticmethod
+    def nano() -> "DeviceProfile":
+        return DeviceProfile(
+            "nano", LatencyModel.paper_calibrated().scaled(2.5), 8, 2048)
+
+    @staticmethod
+    def named(name: str) -> "DeviceProfile":
+        return {"standard": DeviceProfile.standard,
+                "lite": DeviceProfile.lite,
+                "nano": DeviceProfile.nano}[name]()
+
+
+def edge_mixed() -> List[DeviceProfile]:
+    return [DeviceProfile.standard(), DeviceProfile.standard(),
+            DeviceProfile.lite(), DeviceProfile.nano()]
+
+
+@dataclass
+class AdmissionConfig:
+    """Mirrors cluster/fleet.rs AdmissionConfig (defaults included)."""
+
+    enabled: bool = False
+    rt_queue_bound: int = 12
+    nrt_queue_bound: int = 10
+
+    def bound_for(self, task: Task) -> int:
+        return self.rt_queue_bound if task.is_real_time() else self.nrt_queue_bound
+
+
 class Replica:
-    def __init__(self, rid: int, make_policy, lat: LatencyModel) -> None:
+    """Mirrors cluster/replica.rs: staged tasks keep global ids; local
+    ids are assigned at push time (delivery order), so migration keeps
+    the pool's dense-id contract."""
+
+    def __init__(self, rid: int, make_policy, profile: DeviceProfile) -> None:
         self.id = rid
-        self.server = Server([], make_policy(), lat)
+        self.server = Server([], make_policy(profile), profile.latency)
         self.global_ids: List[int] = []
-        self.lat = lat
+        self.staged: List[Task] = []
+        self.profile = profile
+        self.routed = 0
+        self.migrated_in = 0
+        self.migrated_out = 0
+
+    def pending(self) -> int:
+        return len(self.staged) + len(self.server.arrivals)
+
+    def queued_in_class(self, cls: str) -> int:
+        waiting = sum(
+            1 for t in self.server.pool if t.cls == cls and t.state == WAITING)
+        return (waiting
+                + sum(1 for t in self.staged if t.cls == cls)
+                + sum(1 for t in self.server.arrivals if t.cls == cls))
 
     def assign(self, task: Task) -> None:
-        local = len(self.global_ids)
-        self.global_ids.append(task.id)
-        task.id = local
-        self.server.push_arrival(task)
+        at = _partition_point(self.staged, lambda t: t.arrival <= task.arrival)
+        self.staged.insert(at, task)
+        self.routed += 1
+
+    def receive_migrated(self, task: Task) -> None:
+        self.recall_pending()
+        self.assign(task)
+        self.migrated_in += 1
+
+    def recall_pending(self) -> None:
+        withdrawn = self.server.withdraw_pending()
+        if not withdrawn:
+            return
+        keep = len(self.global_ids) - len(withdrawn)
+        for t in withdrawn:
+            t.id = self.global_ids[t.id]
+        del self.global_ids[keep:]
+        self.staged = withdrawn + self.staged
+
+    def withdraw_unmigrated(self, migrated_before) -> List[Task]:
+        self.recall_pending()
+        out = [t for t in self.staged if t.id not in migrated_before]
+        self.staged = [t for t in self.staged if t.id in migrated_before]
+        self.routed -= len(out)
+        self.migrated_out += len(out)
+        return out
 
     def run_until(self, t: int) -> None:
+        due = _partition_point(self.staged, lambda task: task.arrival <= t)
+        for task in self.staged[:due]:
+            local = len(self.global_ids)
+            self.global_ids.append(task.id)
+            task.id = local
+            self.server.push_arrival(task)
+        del self.staged[:due]
         self.server.run_until(t)
 
     def load_tokens(self) -> int:
@@ -568,6 +677,7 @@ class Replica:
             t.remaining_tokens() for t in self.server.pool if not t.is_finished()
         )
         queued = sum(t.output_len for t in self.server.arrivals)
+        queued += sum(t.output_len for t in self.staged)
         return in_service + queued
 
     def demand_quotas(self) -> List[int]:
@@ -577,40 +687,95 @@ class Replica:
             if not t.is_finished()
         ]
         qs.extend(t.slo.tokens_per_cycle() for t in self.server.arrivals)
+        qs.extend(t.slo.tokens_per_cycle() for t in self.staged)
         return qs
 
-    def headroom(self, cand_quota: int, cycle_cap: int) -> int:
+    def headroom(self, cand_quota: int) -> int:
         vs = self.demand_quotas()
         vs.append(cand_quota)
         vs.sort(reverse=True)
-        return max(0, cycle_cap - period_eq7(vs, self.lat))
+        return max(0, self.profile.cycle_cap - period_eq7(vs, self.profile.latency))
+
+    def overloaded(self) -> bool:
+        vs = self.demand_quotas()
+        vs.sort(reverse=True)
+        return period_eq7(vs, self.profile.latency) > self.profile.cycle_cap
 
     def finish(self) -> List[Task]:
+        assert not self.staged, "finish() with staged arrivals"
         for t in self.server.pool:
             t.id = self.global_ids[t.id]
         return self.server.pool
 
 
+def _partition_point(xs, pred) -> int:
+    lo, hi = 0, len(xs)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if pred(xs[mid]):
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
 class Router:
-    def __init__(self, strategy: str, replicas: List[Replica], cycle_cap: int) -> None:
+    def __init__(self, strategy: str, replicas: List[Replica],
+                 admission: Optional[AdmissionConfig] = None,
+                 migration: bool = False) -> None:
         assert replicas
+        assert all(r.id == i for i, r in enumerate(replicas))
         self.strategy = strategy
         self.replicas = replicas
-        self.cycle_cap = cycle_cap
+        self.admission = admission or AdmissionConfig()
+        self.migration = migration
         self.rr_next = 0
+        self.migrated = set()
+        self.migrations = 0
+        self.rejected: List[Task] = []
 
-    def decide(self, task: Task) -> int:
+    def decide(self, task: Task) -> Optional[int]:
+        n = len(self.replicas)
+        if self.admission.enabled:
+            bound = self.admission.bound_for(task)
+            admissible = [r.queued_in_class(task.cls) < bound for r in self.replicas]
+        else:
+            admissible = [True] * n
+        if not any(admissible):
+            return None
         if self.strategy == "round-robin":
-            i = self.rr_next % len(self.replicas)
-            self.rr_next += 1
-            return i
+            start = self.rr_next
+            k = next(k for k in range(n) if admissible[(start + k) % n])
+            self.rr_next = start + k + 1
+            return (start + k) % n
         if self.strategy == "least-loaded":
-            return min((r.load_tokens(), r.id) for r in self.replicas)[1]
+            return min((r.load_tokens(), r.id)
+                       for r in self.replicas if admissible[r.id])[1]
         quota = task.slo.tokens_per_cycle()
-        return min(
-            (-r.headroom(quota, self.cycle_cap), r.load_tokens(), r.id)
-            for r in self.replicas
-        )[2]
+        return self.best_by_headroom(quota, lambda r: admissible[r.id])
+
+    def best_by_headroom(self, quota: int, eligible) -> Optional[int]:
+        cands = [(-r.headroom(quota), r.load_tokens(), r.id)
+                 for r in self.replicas if eligible(r)]
+        return min(cands)[2] if cands else None
+
+    def run_migrations(self) -> None:
+        if not self.migration or len(self.replicas) < 2:
+            return
+        for src in range(len(self.replicas)):
+            if not self.replicas[src].overloaded():
+                continue
+            if not any(r.id != src and not r.overloaded() for r in self.replicas):
+                continue
+            for task in self.replicas[src].withdraw_unmigrated(self.migrated):
+                quota = task.slo.tokens_per_cycle()
+                dst = self.best_by_headroom(
+                    quota, lambda r: r.id != src and not r.overloaded())
+                if dst is None:
+                    dst = self.best_by_headroom(quota, lambda r: r.id != src)
+                self.migrated.add(task.id)
+                self.migrations += 1
+                self.replicas[dst].receive_migrated(task)
 
     def run(self, workload: List[Task], drain: int):
         assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
@@ -618,23 +783,49 @@ class Router:
         for task in workload:
             for r in self.replicas:
                 r.run_until(task.arrival)
-            self.replicas[self.decide(task)].assign(task)
+            self.run_migrations()
+            pick = self.decide(task)
+            if pick is None:
+                self.rejected.append(task)
+            else:
+                self.replicas[pick].assign(task)
         horizon = last + drain
         for r in self.replicas:
             r.run_until(horizon)
-        per_replica = [(r.id, len(r.global_ids), r.server.steps) for r in self.replicas]
+            assert r.pending() == 0, "drain window too small"
+        per_replica = [(r.id, r.routed, r.server.steps) for r in self.replicas]
         tasks = [t for r in self.replicas for t in r.finish()]
+        tasks.extend(self.rejected)
         tasks.sort(key=lambda t: t.id)
         return tasks, per_replica
 
 
+def _default_policy(profile: DeviceProfile):
+    lat = LatencyModel(profile.latency.points, profile.latency.prefill_points,
+                       min(32, profile.max_batch))
+    return SlicePolicy(lat, cycle_cap=profile.cycle_cap)
+
+
 def run_cluster(strategy: str, replicas: int, workload: List[Task],
                 drain: int, make_policy: Optional[Callable] = None):
-    lat = LatencyModel.paper_calibrated()
-    mk = make_policy or (lambda: SlicePolicy(lat))
-    fleet = [Replica(i, mk, lat) for i in range(replicas)]
-    return Router("round-robin" if strategy == "rr" else strategy, fleet,
-                  CYCLE_CAP).run(workload, drain)
+    """Homogeneous fleet of standard devices (the PR 2 shape)."""
+    profiles = [DeviceProfile.standard() for _ in range(replicas)]
+    tasks, per, _router = run_fleet(strategy, profiles, workload, drain, make_policy)
+    return tasks, per
+
+
+def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task],
+              drain: int, make_policy: Optional[Callable] = None,
+              admission: Optional[AdmissionConfig] = None,
+              migration: bool = False):
+    """Mirrors experiments::run_fleet. Returns (tasks, per_replica) plus
+    shed/migration counters via the returned router's attributes."""
+    mk = make_policy or _default_policy
+    fleet = [Replica(i, mk, p) for i, p in enumerate(profiles)]
+    router = Router("round-robin" if strategy == "rr" else strategy, fleet,
+                    admission=admission, migration=migration)
+    tasks, per = router.run(workload, drain)
+    return tasks, per, router
 
 
 # --------------------------------------------------------------- metrics --
