@@ -34,6 +34,7 @@ fn candidates(n: usize, seed: u64) -> Vec<Candidate> {
             id: i as u64,
             utility: if rng.chance(0.7) { 100.0 } else { 1.0 },
             tpot: rng.range_u64(50, 250) * 1_000,
+            kv_bytes: rng.range_u64(1, 24) * 512 * 1024,
         })
         .collect()
 }
@@ -60,7 +61,14 @@ fn main() {
     for n in [8usize, 64, 256] {
         let cands = candidates(n, 1);
         let r = bench(&format!("selection/select_tasks/{n}"), budget, || {
-            select_tasks(&cands, &lat, CYCLE_CAP)
+            select_tasks(&cands, &lat, CYCLE_CAP, None)
+        });
+        println!("{}", r.report_line());
+
+        // the memory knapsack dimension rides the same greedy loop; its
+        // overhead per decision must stay negligible
+        let r = bench(&format!("selection/select_tasks_kv/{n}"), budget, || {
+            select_tasks(&cands, &lat, CYCLE_CAP, Some(96 * 1024 * 1024))
         });
         println!("{}", r.report_line());
     }
@@ -184,6 +192,24 @@ fn main() {
             &mixed,
             wl.clone(),
             &guarded_cfg,
+            secs(60.0),
+        )
+        .unwrap()
+    });
+    println!("{}", r.report_line());
+
+    // The memory-constrained path: the same guarded fleet under a tight
+    // KV capacity with running-task handoff — evictions, swap-ins and
+    // handoff pricing all on the serving loop's hot path.
+    let mut memory_cfg = guarded_cfg.clone();
+    memory_cfg.memory.kv_capacity = Some(96 * 1024 * 1024);
+    memory_cfg.cluster_migrate_running = true;
+    let r = bench("cluster/run/edge-mixed-memory/3x40", budget, || {
+        experiments::run_fleet(
+            RoutingStrategy::SloAware,
+            &mixed,
+            wl.clone(),
+            &memory_cfg,
             secs(60.0),
         )
         .unwrap()

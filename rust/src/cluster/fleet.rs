@@ -39,6 +39,16 @@ pub struct DeviceProfile {
     pub max_context: u32,
     /// Eq. 7 scheduling-cycle cap used for selection and headroom.
     pub cycle_cap: Micros,
+    /// This tier's share of the configured base KV capacity (standard
+    /// 1.0, lite 0.75, nano 0.5 — DRAM shrinks less steeply across
+    /// edge boards than compute does, and every tier must still hold
+    /// the longest single task's cache). Applied by
+    /// [`FleetSpec::with_kv_capacity`].
+    pub kv_fraction: f64,
+    /// Tier-scaled KV capacity in bytes; `None` (the default) models an
+    /// unconstrained device, reproducing every pre-memory run
+    /// bit-exactly.
+    pub kv_capacity: Option<u64>,
 }
 
 impl DeviceProfile {
@@ -52,6 +62,8 @@ impl DeviceProfile {
             max_batch: 32,
             max_context: 8192,
             cycle_cap: CYCLE_CAP,
+            kv_fraction: 1.0,
+            kv_capacity: None,
         }
     }
 
@@ -64,6 +76,8 @@ impl DeviceProfile {
             max_batch: 16,
             max_context: 4096,
             cycle_cap: CYCLE_CAP,
+            kv_fraction: 0.75,
+            kv_capacity: None,
         }
     }
 
@@ -76,6 +90,8 @@ impl DeviceProfile {
             max_batch: 8,
             max_context: 2048,
             cycle_cap: CYCLE_CAP,
+            kv_fraction: 0.5,
+            kv_capacity: None,
         }
     }
 
@@ -143,6 +159,17 @@ impl FleetSpec {
         self
     }
 
+    /// Apply a base KV capacity (a standard device's bytes) to every
+    /// profile, scaled by its tier fraction — how `[memory]
+    /// kv_capacity_mb` / `--kv-capacity` is threaded into a fleet.
+    /// `None` clears every capacity (unconstrained).
+    pub fn with_kv_capacity(mut self, base: Option<u64>) -> Self {
+        for p in &mut self.profiles {
+            p.kv_capacity = base.map(|b| (b as f64 * p.kv_fraction) as u64);
+        }
+        self
+    }
+
     /// Number of replicas the spec describes.
     pub fn len(&self) -> usize {
         self.profiles.len()
@@ -159,25 +186,58 @@ impl FleetSpec {
     }
 }
 
-/// Router admission control: per-SLO-class bounds on how many
-/// queued-but-unstarted tasks a replica may hold. A task is *deferred*
-/// to the strategy's next-best replica while any replica is under its
-/// class bound, and *shed* (rejected, counted SLO-violated) once every
-/// replica is at the bound. Disabled (the default) admits everything —
-/// the PR 2 behaviour.
+/// What signal decides whether a replica may accept one more task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionMode {
+    /// Per-class queued-but-unstarted depth bounds (the PR 3 signal).
+    #[default]
+    QueueDepth,
+    /// Eq. 7 cycle headroom: a replica is admissible while adding the
+    /// task's per-cycle quota leaves its scheduling cycle strictly
+    /// under the cap. A deep queue of fast tasks stays admissible;
+    /// a shallow queue of expensive ones does not (the ROADMAP
+    /// follow-on replacing depth with demand).
+    Headroom,
+}
+
+impl AdmissionMode {
+    /// Display name used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionMode::QueueDepth => "depth",
+            AdmissionMode::Headroom => "headroom",
+        }
+    }
+}
+
+/// Router admission control: a per-replica admissibility signal —
+/// per-SLO-class queue-depth bounds ([`AdmissionMode::QueueDepth`]) or
+/// Eq. 7 cycle headroom ([`AdmissionMode::Headroom`]). A task is
+/// *deferred* to the strategy's next-best admissible replica while one
+/// exists, and *shed* (rejected, counted SLO-violated) once none does.
+/// Disabled (the default) admits everything — the PR 2 behaviour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AdmissionConfig {
     /// Master switch; when false the bounds are ignored.
     pub enabled: bool,
-    /// Max queued-but-unstarted real-time tasks per replica.
+    /// Which admissibility signal the router reads.
+    pub mode: AdmissionMode,
+    /// Max queued-but-unstarted real-time tasks per replica
+    /// (`QueueDepth` mode).
     pub rt_queue_bound: usize,
-    /// Max queued-but-unstarted non-real-time tasks per replica.
+    /// Max queued-but-unstarted non-real-time tasks per replica
+    /// (`QueueDepth` mode).
     pub nrt_queue_bound: usize,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { enabled: false, rt_queue_bound: 12, nrt_queue_bound: 10 }
+        AdmissionConfig {
+            enabled: false,
+            mode: AdmissionMode::QueueDepth,
+            rt_queue_bound: 12,
+            nrt_queue_bound: 10,
+        }
     }
 }
 
@@ -246,8 +306,33 @@ mod tests {
     }
 
     #[test]
+    fn kv_capacity_scales_by_tier_fraction() {
+        let base = 256 * 1024 * 1024u64;
+        let f = FleetSpec::preset("edge-mixed").unwrap().with_kv_capacity(Some(base));
+        let caps: Vec<Option<u64>> =
+            f.profiles.iter().map(|p| p.kv_capacity).collect();
+        assert_eq!(
+            caps,
+            vec![Some(base), Some(base), Some(base * 3 / 4), Some(base / 2)]
+        );
+        // None clears it again (unconstrained default)
+        let f = f.with_kv_capacity(None);
+        assert!(f.profiles.iter().all(|p| p.kv_capacity.is_none()));
+        // and the default profiles are unconstrained
+        assert!(DeviceProfile::standard().kv_capacity.is_none());
+    }
+
+    #[test]
+    fn admission_mode_defaults_to_depth() {
+        let a = AdmissionConfig::default();
+        assert_eq!(a.mode, AdmissionMode::QueueDepth);
+        assert_eq!(AdmissionMode::QueueDepth.label(), "depth");
+        assert_eq!(AdmissionMode::Headroom.label(), "headroom");
+    }
+
+    #[test]
     fn admission_bounds_by_class() {
-        let a = AdmissionConfig { enabled: true, rt_queue_bound: 3, nrt_queue_bound: 7 };
+        let a = AdmissionConfig { enabled: true, rt_queue_bound: 3, nrt_queue_bound: 7, ..AdmissionConfig::default() };
         assert_eq!(a.bound_for(TaskClass::RealTime), 3);
         assert_eq!(a.bound_for(TaskClass::Voice), 7);
         assert_eq!(a.bound_for(TaskClass::TextQa), 7);

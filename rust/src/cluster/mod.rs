@@ -36,6 +36,6 @@ pub mod fleet;
 pub mod replica;
 pub mod router;
 
-pub use fleet::{AdmissionConfig, DeviceProfile, FleetSpec};
+pub use fleet::{AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec};
 pub use replica::{Replica, ReplicaReport};
 pub use router::{ClusterReport, Router, RoutingStrategy};

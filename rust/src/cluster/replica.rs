@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use crate::coordinator::mask::period_eq7;
 use crate::coordinator::scheduler::Policy;
-use crate::coordinator::task::{Task, TaskClass, TaskId, TaskState};
+use crate::coordinator::task::{Residency, Task, TaskClass, TaskId, TaskState};
 use crate::engine::clock::VirtualClock;
 use crate::engine::DecodeEngine;
 use crate::server::{RunReport, Server};
@@ -166,6 +166,70 @@ impl Replica {
         self.staged = withdrawn;
     }
 
+    /// Mid-generation tasks eligible for a KV-handoff migration:
+    /// delivered, prefilled, unfinished tasks the scheduler has
+    /// *paused* and the serving loop has already *evicted* — work that
+    /// is receiving zero service here and whose cache is off-device
+    /// anyway, so handing it to a peer costs this replica nothing.
+    /// (On an unconstrained device nothing is ever evicted, so the
+    /// running pass cannot fire — legacy runs stay bit-identical even
+    /// with the flag on.) Returned as `(utility, global id, per-cycle
+    /// quota, cached tokens)` sorted by ascending utility then id — the
+    /// order the router offers them in. Excludes tasks that already
+    /// migrated once (`migrated_before`) and earlier handoff husks.
+    pub fn running_candidates(
+        &self,
+        migrated_before: &HashSet<TaskId>,
+    ) -> Vec<(f64, TaskId, u32, u32)> {
+        let mut out: Vec<(f64, TaskId, u32, u32)> = self
+            .server
+            .pool()
+            .iter()
+            .filter(|t| {
+                !t.is_finished()
+                    && !t.migrated_away
+                    && t.prefill_end.is_some()
+                    && t.state == TaskState::Paused
+                    && t.residency == Residency::Swapped
+            })
+            .map(|t| {
+                (
+                    t.utility,
+                    self.global_ids[t.id as usize],
+                    t.slo.tokens_per_cycle(),
+                    t.seq_len(),
+                )
+            })
+            .filter(|&(_, gid, _, _)| !migrated_before.contains(&gid))
+            .collect();
+        out.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).expect("utilities are finite").then(a.1.cmp(&b.1))
+        });
+        out
+    }
+
+    /// Extract one running task for a KV handoff: the inner server
+    /// keeps a husk (excluded from scheduling and this replica's
+    /// report) and the returned task — global id restored, paused, its
+    /// cache marked in-flight with the pre-priced `handoff_fee` — is
+    /// ready for [`Replica::receive_migrated`] on the destination.
+    pub fn extract_running(&mut self, global_id: TaskId, handoff_fee: Micros) -> Task {
+        let local = self
+            .global_ids
+            .iter()
+            .position(|&g| g == global_id)
+            .expect("extracting a task this replica never served") as TaskId;
+        let now = self.server.now();
+        let mut task = self.server.extract_task(local, now);
+        task.id = global_id;
+        task.state = TaskState::Paused;
+        task.residency = Residency::Swapped;
+        task.pending_restore = handoff_fee;
+        self.routed -= 1;
+        self.migrated_out += 1;
+        task
+    }
+
     /// Withdraw every queued-but-unstarted task that has not migrated
     /// before (exactly-once: `migrated_before` filters repeat offers),
     /// in arrival order, for the router to re-place. Tasks that already
@@ -264,9 +328,12 @@ impl Replica {
     }
 
     /// Finish the replica's run and translate local ids back to global.
+    /// Husks of tasks handed off to another replica are dropped — the
+    /// destination's report carries their timing record.
     pub fn finish(self) -> ReplicaReport {
         assert!(self.staged.is_empty(), "finish() with staged arrivals");
         let mut report = self.server.finish();
+        report.tasks.retain(|t| !t.migrated_away);
         for t in &mut report.tasks {
             t.id = self.global_ids[t.id as usize];
         }
@@ -297,10 +364,102 @@ pub struct ReplicaReport {
     pub report: RunReport,
 }
 
+/// Test scaffolding shared by the replica and router suites: a policy
+/// and replica builder that deterministically manufacture the
+/// paused+evicted states the KV-handoff migration pass operates on.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::coordinator::pool::TaskPool;
+    use crate::coordinator::scheduler::{Policy, Step};
+    use crate::coordinator::task::{Task, TaskClass, TaskId, TaskState};
+    use crate::engine::memory::{KvCacheModel, MemoryConfig};
+    use crate::engine::sim::SimEngine;
+    use crate::util::Micros;
+
+    use super::super::fleet::DeviceProfile;
+    use super::Replica;
+
+    /// Prefills each delivered task once, pausing every previously
+    /// prefilled task first — under a tiny KV capacity the serving loop
+    /// then evicts the paused ones (the handoff candidate state).
+    pub(crate) struct PrefillThenPause {
+        seen: Vec<TaskId>,
+    }
+
+    impl PrefillThenPause {
+        pub(crate) fn new() -> Self {
+            PrefillThenPause { seen: Vec::new() }
+        }
+    }
+
+    impl Policy for PrefillThenPause {
+        fn name(&self) -> &'static str {
+            "prefill-then-pause"
+        }
+
+        fn on_arrival(&mut self, _pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+            self.seen.extend(ids.iter().copied());
+        }
+
+        fn on_completion(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {}
+
+        fn next_step(&mut self, pool: &mut TaskPool, _now: Micros) -> Step {
+            for &id in &self.seen {
+                let t = pool.get_mut(id);
+                if t.state == TaskState::Running && !t.is_finished() {
+                    t.state = TaskState::Paused;
+                }
+            }
+            for &id in &self.seen {
+                if pool.get(id).state == TaskState::Waiting {
+                    return Step::Prefill { task: id };
+                }
+            }
+            Step::Idle
+        }
+    }
+
+    /// A replica whose serving loop holds a tiny KV capacity (exactly
+    /// one 81-token cache's 6 blocks), driven by [`PrefillThenPause`]:
+    /// each new prefill evicts the previous paused task, leaving a
+    /// deterministic trail of paused+evicted handoff candidates. The
+    /// assigned real-time quotas overload the replica (4 x 20
+    /// tokens/cycle exceeds the 1 s cap on the standard curve).
+    pub(crate) fn evicting_replica(id: usize, n_tasks: u64) -> Replica {
+        let profile = DeviceProfile::standard();
+        let cap = 3 * 1024 * 1024u64; // bytes_for(81) exactly
+        let kv = KvCacheModel::new(
+            MemoryConfig { kv_capacity: Some(cap), ..MemoryConfig::default() },
+            Some(cap),
+            profile.latency.clone(),
+        );
+        let engine =
+            SimEngine::new(profile.latency.clone(), profile.max_context).with_memory(kv);
+        let mut r = Replica::new(
+            id,
+            Box::new(PrefillThenPause::new()),
+            Box::new(engine),
+            profile,
+        );
+        for i in 0..n_tasks {
+            r.assign(Task::new(
+                100 + i,
+                TaskClass::RealTime,
+                0,
+                80,
+                100,
+                100.0 + i as f64,
+            ));
+        }
+        r
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use std::collections::HashSet;
 
+    use super::testutil::evicting_replica;
     use super::*;
     use crate::coordinator::orca::OrcaPolicy;
     use crate::engine::sim::SimEngine;
@@ -423,6 +582,54 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 3, 5]);
         assert!(rep.report.tasks.iter().all(|t| t.is_finished()));
+    }
+
+    #[test]
+    fn running_candidates_are_paused_and_evicted_only() {
+        let mut r = evicting_replica(0, 4);
+        r.run_until(secs(5.0)).unwrap();
+        assert!(r.overloaded(), "4 RT quotas exceed the cycle cap");
+        // tasks 100..102 were paused then evicted by later prefills;
+        // 103 is paused but still resident — not a candidate
+        let cands = r.running_candidates(&HashSet::new());
+        let ids: Vec<TaskId> = cands.iter().map(|&(_, gid, _, _)| gid).collect();
+        assert_eq!(ids, vec![100, 101, 102], "cheapest utility first");
+        assert_eq!(cands[0].2, 20, "real-time quota");
+        assert_eq!(cands[0].3, 81, "cached tokens = prompt + prefill token");
+        // exactly-once filter
+        let migrated: HashSet<TaskId> = [100].into_iter().collect();
+        assert_eq!(r.running_candidates(&migrated).len(), 2);
+
+        let moved = r.extract_running(100, 7_500);
+        assert_eq!(moved.id, 100);
+        assert_eq!(moved.state, TaskState::Paused);
+        assert_eq!(moved.residency, Residency::Swapped);
+        assert_eq!(moved.pending_restore, 7_500);
+        assert!(moved.tokens_generated > 0, "timing record travels with the task");
+        assert_eq!(r.routed(), 3);
+        assert_eq!(r.migration_counts().1, 1);
+        assert!(r
+            .running_candidates(&HashSet::new())
+            .iter()
+            .all(|&(_, gid, _, _)| gid != 100));
+
+        // the husk never reaches the report
+        r.run_until(secs(6.0)).unwrap();
+        let rep = r.finish();
+        let mut ids: Vec<TaskId> = rep.report.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![101, 102, 103]);
+    }
+
+    #[test]
+    fn unconstrained_replica_has_no_handoff_candidates() {
+        // same Orca replica as the other tests: tasks run resident, so
+        // nothing is ever paused+evicted and the running pass cannot fire
+        let mut r = replica();
+        r.assign(Task::new(0, TaskClass::RealTime, 0, 16, 200, 100.0));
+        r.assign(Task::new(1, TaskClass::RealTime, 0, 16, 200, 100.0));
+        r.run_until(secs(1.0)).unwrap();
+        assert!(r.running_candidates(&HashSet::new()).is_empty());
     }
 
     #[test]

@@ -34,16 +34,32 @@
 //! migration is inherently load-driven). A task migrates at most once
 //! (exactly-once delivery), and a pass only fires while some peer
 //! still has positive headroom, so all-overloaded fleets do not churn.
+//!
+//! Running-task migration (opt-in on top of migration, DESIGN.md
+//! "Memory model"): when withdrawing the queue is not enough — the
+//! source is *still* overloaded by work already in service — the router
+//! may hand a mid-generation task's KV cache to a peer over the
+//! inter-replica link. Candidates are tasks the source has paused and
+//! already evicted (zero service, cache off-device — giving them away
+//! costs nothing; on an unconstrained device nothing is ever evicted,
+//! so the pass is inert and legacy runs stay bit-identical). A handoff
+//! only fires when the destination's Eq. 7 headroom for the task's
+//! quota strictly exceeds the modelled transfer time of its cache
+//! ([`MemoryConfig::handoff_cost`]); the fee is stamped on the task
+//! and charged by the destination's serving loop when the task next
+//! decodes, so handoff latency lands in the task's own timing record.
+//! Exactly-once, cheapest-utility-first, deterministic.
 
 use std::collections::HashSet;
 
 use anyhow::Result;
 
 use crate::coordinator::task::{Task, TaskId};
+use crate::engine::memory::{MemoryConfig, MemoryStats};
 use crate::metrics::{Attainment, LatencySummary};
 use crate::util::Micros;
 
-use super::fleet::AdmissionConfig;
+use super::fleet::{AdmissionConfig, AdmissionMode};
 use super::replica::{Replica, ReplicaReport};
 
 /// How the router picks a replica for each arriving task.
@@ -93,10 +109,17 @@ pub struct Router {
     replicas: Vec<Replica>,
     admission: AdmissionConfig,
     migration: bool,
+    /// Running-task KV handoff (requires `migration`).
+    migrate_running: bool,
+    /// Prices KV handoffs (bytes per token, link bandwidth).
+    memory: MemoryConfig,
     rr_next: usize,
     /// Global ids that have migrated once already (exactly-once cap).
     migrated: HashSet<TaskId>,
     migrations: u64,
+    migrated_running: u64,
+    handoff_bytes: u64,
+    handoff_us: Micros,
     rejected: Vec<Task>,
 }
 
@@ -104,7 +127,7 @@ impl Router {
     /// Build a router over pre-constructed replicas (at least one).
     /// Admission control and migration start disabled — the PR 2
     /// homogeneous behaviour; opt in via [`Router::with_admission`] /
-    /// [`Router::with_migration`].
+    /// [`Router::with_migration`] / [`Router::with_running_migration`].
     pub fn new(strategy: RoutingStrategy, replicas: Vec<Replica>) -> Self {
         assert!(!replicas.is_empty(), "a cluster needs at least one replica");
         // admission/migration bookkeeping indexes replicas by id
@@ -117,9 +140,14 @@ impl Router {
             replicas,
             admission: AdmissionConfig::default(),
             migration: false,
+            migrate_running: false,
+            memory: MemoryConfig::default(),
             rr_next: 0,
             migrated: HashSet::new(),
             migrations: 0,
+            migrated_running: 0,
+            handoff_bytes: 0,
+            handoff_us: 0,
             rejected: Vec::new(),
         }
     }
@@ -133,6 +161,14 @@ impl Router {
     /// Enable or disable overload migration.
     pub fn with_migration(mut self, migration: bool) -> Self {
         self.migration = migration;
+        self
+    }
+
+    /// Enable running-task KV-handoff migration, priced by `memory`
+    /// (takes effect only while [`Router::with_migration`] is on).
+    pub fn with_running_migration(mut self, enabled: bool, memory: MemoryConfig) -> Self {
+        self.migrate_running = enabled;
+        self.memory = memory;
         self
     }
 
@@ -152,13 +188,19 @@ impl Router {
         // on, keeping the default path allocation-free (the bench-
         // tracked cluster/decide hot path)
         let mask: Option<Vec<bool>> = if self.admission.enabled {
-            let bound = self.admission.bound_for(task.class);
-            Some(
-                self.replicas
-                    .iter()
-                    .map(|r| r.queued_in_class(task.class) < bound)
-                    .collect(),
-            )
+            Some(match self.admission.mode {
+                AdmissionMode::QueueDepth => {
+                    let bound = self.admission.bound_for(task.class);
+                    self.replicas
+                        .iter()
+                        .map(|r| r.queued_in_class(task.class) < bound)
+                        .collect()
+                }
+                AdmissionMode::Headroom => {
+                    let quota = task.slo.tokens_per_cycle();
+                    self.replicas.iter().map(|r| r.headroom(quota) > 0).collect()
+                }
+            })
         } else {
             None
         };
@@ -245,6 +287,52 @@ impl Router {
         }
     }
 
+    /// The running-task KV-handoff pass: after the queued pass, a
+    /// replica the queue withdrawal could not decongest hands off
+    /// mid-generation tasks it has paused *and* evicted (see
+    /// [`Replica::running_candidates`] — work receiving zero service
+    /// whose cache is off-device anyway), cheapest utility first, to
+    /// the peer with the most Eq. 7 headroom — but only when that
+    /// headroom gain strictly exceeds the modelled KV transfer time
+    /// over the inter-replica link, so a handoff never costs more
+    /// cycle time than it buys. The fee rides on the task
+    /// (`pending_restore`) and is charged by the destination's serving
+    /// loop at the task's next decode.
+    fn run_running_migrations(&mut self) {
+        if !self.migration || !self.migrate_running || self.replicas.len() < 2 {
+            return;
+        }
+        for src in 0..self.replicas.len() {
+            if !self.replicas[src].overloaded() {
+                continue;
+            }
+            let candidates = self.replicas[src].running_candidates(&self.migrated);
+            for (_, gid, quota, tokens) in candidates {
+                if !self.replicas[src].overloaded() {
+                    break;
+                }
+                let Some(dst) =
+                    self.best_by_headroom(quota, |r| r.id() != src && !r.overloaded())
+                else {
+                    break;
+                };
+                let fee = self.memory.handoff_cost(tokens);
+                if self.replicas[dst].headroom(quota) <= fee {
+                    // Eq. 7 gain does not cover this cache's transfer; a
+                    // later candidate may be smaller, so keep scanning
+                    continue;
+                }
+                let task = self.replicas[src].extract_running(gid, fee);
+                self.migrated.insert(gid);
+                self.migrations += 1;
+                self.migrated_running += 1;
+                self.handoff_bytes += self.memory.bytes_for(tokens);
+                self.handoff_us += fee;
+                self.replicas[dst].receive_migrated(task);
+            }
+        }
+    }
+
     /// Route and serve an entire workload (sorted by arrival, dense
     /// global ids), then drain the fleet for `drain` past the last
     /// arrival. Every replica ends at the same virtual horizon. `drain`
@@ -264,6 +352,7 @@ impl Router {
                 r.run_until(now)?;
             }
             self.run_migrations();
+            self.run_running_migrations();
             match self.decide(&task) {
                 Some(pick) => self.replicas[pick].assign(task),
                 None => self.rejected.push(task),
@@ -282,6 +371,9 @@ impl Router {
         Ok(ClusterReport {
             strategy: self.strategy.label(),
             migrations: self.migrations,
+            migrated_running: self.migrated_running,
+            handoff_bytes: self.handoff_bytes,
+            handoff_us: self.handoff_us,
             rejected: self.rejected,
             replicas: self.replicas.into_iter().map(Replica::finish).collect(),
         })
@@ -298,8 +390,16 @@ pub struct ClusterReport {
     /// count as SLO violations in every fleet metric.
     pub rejected: Vec<Task>,
     /// Tasks re-placed by the overload-migration pass (each counted
-    /// once; a task migrates at most once).
+    /// once; a task migrates at most once) — queued withdrawals plus
+    /// running handoffs.
     pub migrations: u64,
+    /// The subset of `migrations` that were running-task KV handoffs.
+    pub migrated_running: u64,
+    /// Total KV bytes transferred by running handoffs.
+    pub handoff_bytes: u64,
+    /// Total modelled transfer time of those handoffs (each fee also
+    /// lands in the migrated task's own timing record).
+    pub handoff_us: Micros,
 }
 
 impl ClusterReport {
@@ -340,6 +440,17 @@ impl ClusterReport {
     /// Total engine steps executed across the fleet.
     pub fn total_steps(&self) -> u64 {
         self.replicas.iter().map(|r| r.report.steps).sum()
+    }
+
+    /// Fleet-aggregated KV memory accounting: per-replica peaks summed
+    /// (each device holds its own high-water mark) plus total swap /
+    /// recompute / handoff transition counters.
+    pub fn fleet_memory(&self) -> MemoryStats {
+        let mut total = MemoryStats::default();
+        for r in &self.replicas {
+            total.merge(&r.report.memory);
+        }
+        total
     }
 
     /// Global ids across replica reports and the shed list: never
@@ -441,7 +552,7 @@ mod tests {
     #[test]
     fn admission_defers_then_sheds() {
         let admission =
-            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1 };
+            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1, ..AdmissionConfig::default() };
         let mut router =
             Router::new(RoutingStrategy::RoundRobin, fleet(2)).with_admission(admission);
         // both replicas take one queued voice task; round-robin cursor
@@ -458,6 +569,169 @@ mod tests {
         rt.class = TaskClass::RealTime;
         rt.slo = crate::coordinator::task::SloSpec::real_time();
         assert!(router.decide(&rt).is_some());
+    }
+
+    #[test]
+    fn headroom_admission_admits_deep_but_fast_queue() {
+        // 6 queued voice tasks: deeper than a depth bound of 4, but the
+        // Eq. 7 cycle with a 7th voice quota is 8*l(7) = 680 ms — well
+        // under the cap, so headroom admission keeps the replica open
+        let load = |mut replicas: Vec<Replica>| {
+            for i in 0..6 {
+                replicas[0].assign(task(i, 0, 5));
+            }
+            replicas
+        };
+        let depth = AdmissionConfig {
+            enabled: true,
+            mode: AdmissionMode::QueueDepth,
+            rt_queue_bound: 4,
+            nrt_queue_bound: 4,
+        };
+        let mut router =
+            Router::new(RoutingStrategy::SloAware, load(fleet(1))).with_admission(depth);
+        assert_eq!(router.decide(&task(6, 0, 5)), None, "depth bound sheds");
+
+        let headroom = AdmissionConfig { mode: AdmissionMode::Headroom, ..depth };
+        let mut router = Router::new(RoutingStrategy::SloAware, load(fleet(1)))
+            .with_admission(headroom);
+        assert_eq!(
+            router.decide(&task(6, 0, 5)),
+            Some(0),
+            "headroom admits the deep-but-fast queue"
+        );
+
+        // and headroom *sheds* a shallow queue of expensive tasks: four
+        // real-time quotas already exceed the cycle cap (20*l(4) > 1s)
+        let mut replicas = fleet(1);
+        for i in 0..4 {
+            let mut t = task(i, 0, 100);
+            t.class = TaskClass::RealTime;
+            t.slo = crate::coordinator::task::SloSpec::real_time();
+            replicas[0].assign(t);
+        }
+        let mut router =
+            Router::new(RoutingStrategy::SloAware, replicas).with_admission(headroom);
+        assert_eq!(router.decide(&task(9, 0, 5)), None, "no cycle headroom left");
+    }
+
+    #[test]
+    fn running_migration_hands_off_exactly_once_with_fee() {
+        use crate::cluster::replica::testutil::evicting_replica;
+        use crate::engine::memory::MemoryConfig;
+        // replica 0: overloaded, with three paused+evicted real-time
+        // tasks (see testutil::evicting_replica); replica 1 idles.
+        // Nothing is queued, so only the running pass can help.
+        let idle = Replica::new(
+            1,
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            DeviceProfile::standard(),
+        );
+        let replicas = vec![evicting_replica(0, 4), idle];
+        let mut router = Router::new(RoutingStrategy::SloAware, replicas)
+            .with_migration(true)
+            .with_running_migration(true, MemoryConfig::default());
+        router.replicas[0].run_until(secs(5.0)).unwrap();
+        router.replicas[1].run_until(secs(5.0)).unwrap();
+        assert!(router.replicas[0].overloaded());
+        router.run_migrations();
+        assert_eq!(router.migrations, 0, "nothing queued to withdraw");
+        router.run_running_migrations();
+        assert_eq!(
+            router.migrated_running, 1,
+            "one handoff clears the overload (4 -> 3 RT quotas)"
+        );
+        assert_eq!(router.migrations, 1);
+        assert!(router.handoff_us > 0, "handoff priced over the link");
+        assert!(router.handoff_bytes > 0);
+        assert!(!router.replicas[0].overloaded());
+        // the cheapest-utility candidate (global id 100) moved
+        assert!(router.migrated.contains(&100));
+        // a second pass is a no-op (no longer overloaded)
+        router.run_running_migrations();
+        assert_eq!(router.migrated_running, 1);
+
+        // drain: the moved task finishes on replica 1 with its handoff
+        // fee charged (pending_restore consumed at its first decode)
+        for r in &mut router.replicas {
+            r.run_until(secs(60.0)).unwrap();
+        }
+        let reports: Vec<_> = router.replicas.into_iter().map(Replica::finish).collect();
+        let mut ids: Vec<TaskId> = reports
+            .iter()
+            .flat_map(|r| r.report.tasks.iter().map(|t| t.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![100, 101, 102, 103]);
+        assert_eq!(reports[0].report.tasks.len(), 3, "husk dropped from source");
+        let moved = reports[1]
+            .report
+            .tasks
+            .iter()
+            .find(|t| t.id == 100)
+            .expect("handed-off task finishes on the destination");
+        assert!(moved.is_finished());
+        assert_eq!(moved.pending_restore, 0, "fee was charged on resume");
+        assert!(moved.swap_ins >= 1);
+        assert_eq!(reports[0].migrated_out, 1);
+        assert_eq!(reports[1].migrated_in, 1);
+        assert_eq!(
+            reports[1].report.memory.handoff_restores, 1,
+            "destination model counted the handoff restore"
+        );
+    }
+
+    #[test]
+    fn running_migration_requires_migration_gain_and_evicted_candidates() {
+        use crate::cluster::replica::testutil::evicting_replica;
+        use crate::engine::memory::MemoryConfig;
+        let mk = |second: Replica| {
+            let replicas = vec![evicting_replica(0, 4), second];
+            Router::new(RoutingStrategy::SloAware, replicas)
+        };
+        let standard = |id: usize| {
+            let profile = DeviceProfile::standard();
+            Replica::new(
+                id,
+                Box::new(OrcaPolicy::new(profile.max_batch)),
+                Box::new(SimEngine::paper_calibrated()),
+                profile,
+            )
+        };
+        // migrate_running without migration: the pass never fires
+        let mut router =
+            mk(standard(1)).with_running_migration(true, MemoryConfig::default());
+        router.replicas[0].run_until(secs(5.0)).unwrap();
+        router.run_running_migrations();
+        assert_eq!(router.migrated_running, 0);
+
+        // a link so slow the fee always exceeds the Eq. 7 gain: no handoff
+        let slow = MemoryConfig { handoff_bandwidth: 1_000, ..MemoryConfig::default() };
+        let mut router = mk(standard(1)).with_migration(true).with_running_migration(true, slow);
+        router.replicas[0].run_until(secs(5.0)).unwrap();
+        router.run_running_migrations();
+        assert_eq!(router.migrated_running, 0, "gain must exceed the transfer time");
+        assert!(router.replicas[0].overloaded(), "overload tolerated over paying");
+
+        // an unconstrained overloaded replica never evicts, so it has
+        // no handoff candidates: legacy runs are untouched even with
+        // the flag on
+        let mut replicas = fleet(2);
+        for i in 0..4 {
+            let mut t = task(i, 0, 60);
+            t.class = TaskClass::RealTime;
+            t.slo = crate::coordinator::task::SloSpec::real_time();
+            replicas[0].assign(t);
+        }
+        let mut router = Router::new(RoutingStrategy::SloAware, replicas)
+            .with_migration(true)
+            .with_running_migration(true, MemoryConfig::default());
+        router.replicas[0].run_until(secs(0.5)).unwrap();
+        router.replicas[1].run_until(secs(0.5)).unwrap();
+        assert!(router.replicas[0].overloaded());
+        router.run_running_migrations();
+        assert_eq!(router.migrated_running, 0, "no paused+evicted candidates");
     }
 
     #[test]
@@ -479,7 +753,7 @@ mod tests {
     #[test]
     fn shed_tasks_appear_in_report_as_violations() {
         let admission =
-            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1 };
+            AdmissionConfig { enabled: true, rt_queue_bound: 1, nrt_queue_bound: 1, ..AdmissionConfig::default() };
         // all tasks arrive at once: 2 replicas hold one each, rest shed
         let workload: Vec<Task> = (0..6).map(|i| task(i, 0, 10)).collect();
         let report = Router::new(RoutingStrategy::LeastLoaded, fleet(2))

@@ -17,10 +17,13 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::{AdmissionConfig, DeviceProfile, FleetSpec, RoutingStrategy};
+use crate::cluster::{
+    AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec, RoutingStrategy,
+};
 use crate::coordinator::fastserve::FastServeConfig;
 use crate::coordinator::preemption::UtilityAdaptor;
 use crate::coordinator::selection::CYCLE_CAP;
+use crate::engine::memory::{MemoryConfig, PreemptionMode};
 use crate::util::{secs, Micros};
 
 use self::toml::{TomlDoc, TomlTable, TomlValue};
@@ -104,6 +107,12 @@ pub struct ServeConfig {
     pub cluster_admission: AdmissionConfig,
     /// Cluster mode: overload migration (disabled by default).
     pub cluster_migration: bool,
+    /// Cluster mode: running-task KV-handoff migration (disabled by
+    /// default; requires `cluster_migration`).
+    pub cluster_migrate_running: bool,
+    /// KV-cache memory model (`[memory]`; unconstrained by default, so
+    /// every pre-memory run reproduces bit-exactly).
+    pub memory: MemoryConfig,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +135,8 @@ impl Default for ServeConfig {
             cluster_fleet: None,
             cluster_admission: AdmissionConfig::default(),
             cluster_migration: false,
+            cluster_migrate_running: false,
+            memory: MemoryConfig::default(),
         }
     }
 }
@@ -236,8 +247,75 @@ impl ServeConfig {
         if bound_set && admission_key.is_none() {
             cfg.cluster_admission.enabled = true;
         }
+        if let Some(v) = doc.get_str("cluster", "admission_mode")? {
+            cfg.cluster_admission.mode = match v.as_str() {
+                "depth" => AdmissionMode::QueueDepth,
+                "headroom" => AdmissionMode::Headroom,
+                other => bail!("unknown admission_mode '{other}' (depth|headroom)"),
+            };
+            if admission_key.is_none() {
+                // naming a mode opts in, like setting a bound does
+                cfg.cluster_admission.enabled = true;
+            }
+        }
+        if bound_set && cfg.cluster_admission.mode == AdmissionMode::Headroom {
+            // headroom admission never reads the depth bounds — a
+            // configured bound must never be a silent no-op
+            bail!(
+                "[cluster] rt_queue_bound/nrt_queue_bound apply to depth \
+                 admission; remove them or set admission_mode = \"depth\""
+            );
+        }
         if let Some(v) = doc.get_bool("cluster", "migration")? {
             cfg.cluster_migration = v;
+        }
+        let migrate_running_key = doc.get_bool("cluster", "migrate_running")?;
+        if let Some(v) = migrate_running_key {
+            cfg.cluster_migrate_running = v;
+            if v {
+                // running handoff rides on the migration pass it
+                // extends: enabling it always enables migration (even
+                // over an explicit `migration = false` — the same rule
+                // the CLI applies, so both surfaces agree)
+                cfg.cluster_migration = true;
+            }
+        }
+        // ---- [memory] --------------------------------------------------
+        if let Some(v) = doc.get_f64("memory", "kv_capacity_mb")? {
+            if v <= 0.0 {
+                bail!("[memory] kv_capacity_mb must be positive, got {v}");
+            }
+            cfg.memory.kv_capacity = Some((v * 1024.0 * 1024.0) as u64);
+        }
+        if let Some(v) = doc.get_i64("memory", "kv_bytes_per_token")? {
+            if v < 1 {
+                bail!("[memory] kv_bytes_per_token must be >= 1, got {v}");
+            }
+            cfg.memory.bytes_per_token = v as u64;
+        }
+        if let Some(v) = doc.get_i64("memory", "block_tokens")? {
+            if v < 1 {
+                bail!("[memory] block_tokens must be >= 1, got {v}");
+            }
+            cfg.memory.block_tokens = v as u32;
+        }
+        if let Some(v) = doc.get_f64("memory", "swap_bandwidth_mbps")? {
+            if v <= 0.0 {
+                bail!("[memory] swap_bandwidth_mbps must be positive, got {v}");
+            }
+            cfg.memory.swap_bandwidth = (v * 1e6) as u64;
+        }
+        if let Some(v) = doc.get_f64("memory", "handoff_bandwidth_mbps")? {
+            if v <= 0.0 {
+                bail!("[memory] handoff_bandwidth_mbps must be positive, got {v}");
+            }
+            cfg.memory.handoff_bandwidth = (v * 1e6) as u64;
+        }
+        if let Some(v) = doc.get_str("memory", "preemption")? {
+            cfg.memory.mode = PreemptionMode::parse(&v)?;
+        }
+        if let Some(v) = doc.get_bool("memory", "aware")? {
+            cfg.memory.aware = v;
         }
         let replica_tables = doc.get_tables("cluster.replica");
         if !replica_tables.is_empty() {
@@ -435,6 +513,67 @@ scale = 1.2
         assert!(ServeConfig::from_toml("[[cluster.replica]]\nscale = -1.0\n").is_err());
         let conflict = "[cluster]\nfleet = \"edge-mixed\"\n[[cluster.replica]]\n";
         assert!(ServeConfig::from_toml(conflict).is_err());
+    }
+
+    #[test]
+    fn parses_memory_section() {
+        let text = "[memory]\nkv_capacity_mb = 96.0\nkv_bytes_per_token = 16384\n\
+                    block_tokens = 8\nswap_bandwidth_mbps = 2000.0\n\
+                    handoff_bandwidth_mbps = 250.0\npreemption = \"recompute\"\n\
+                    aware = false\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert_eq!(c.memory.kv_capacity, Some(96 * 1024 * 1024));
+        assert_eq!(c.memory.bytes_per_token, 16384);
+        assert_eq!(c.memory.block_tokens, 8);
+        assert_eq!(c.memory.swap_bandwidth, 2_000_000_000);
+        assert_eq!(c.memory.handoff_bandwidth, 250_000_000);
+        assert_eq!(c.memory.mode, PreemptionMode::Recompute);
+        assert!(!c.memory.aware);
+        assert!(ServeConfig::from_toml("[memory]\nkv_capacity_mb = -1.0\n").is_err());
+        assert!(ServeConfig::from_toml("[memory]\npreemption = \"drop\"\n").is_err());
+        assert!(ServeConfig::from_toml("[memory]\nblock_tokens = 0\n").is_err());
+    }
+
+    #[test]
+    fn memory_defaults_are_unconstrained() {
+        let c = ServeConfig::default();
+        assert!(c.memory.kv_capacity.is_none());
+        assert!(!c.memory.constrained());
+        assert!(c.memory.aware);
+        assert!(!c.cluster_migrate_running);
+    }
+
+    #[test]
+    fn parses_admission_mode_and_migrate_running() {
+        let c = ServeConfig::from_toml("[cluster]\nadmission_mode = \"headroom\"\n")
+            .unwrap();
+        assert!(c.cluster_admission.enabled, "naming a mode opts in");
+        assert_eq!(c.cluster_admission.mode, AdmissionMode::Headroom);
+        let c = ServeConfig::from_toml(
+            "[cluster]\nadmission = false\nadmission_mode = \"headroom\"\n",
+        )
+        .unwrap();
+        assert!(!c.cluster_admission.enabled, "explicit off wins");
+        assert!(
+            ServeConfig::from_toml("[cluster]\nadmission_mode = \"magic\"\n").is_err()
+        );
+        // depth bounds are meaningless under headroom admission: reject
+        // rather than silently ignore a configured bound
+        assert!(ServeConfig::from_toml(
+            "[cluster]\nadmission_mode = \"headroom\"\nrt_queue_bound = 4\n",
+        )
+        .is_err());
+
+        let c = ServeConfig::from_toml("[cluster]\nmigrate_running = true\n").unwrap();
+        assert!(c.cluster_migrate_running);
+        assert!(c.cluster_migration, "running handoff implies migration");
+        // the implication is unconditional — identical to the CLI rule,
+        // so the two config surfaces never disagree
+        let c = ServeConfig::from_toml(
+            "[cluster]\nmigration = false\nmigrate_running = true\n",
+        )
+        .unwrap();
+        assert!(c.cluster_migration, "migrate_running always enables the pass");
     }
 
     #[test]

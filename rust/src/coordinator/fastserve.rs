@@ -155,8 +155,15 @@ impl Policy for FastServePolicy {
 
         // Prefill before decode, in priority order.
         for &id in &batch {
-            if pool.get(id).state == TaskState::Waiting {
-                pool.get_mut(id).state = TaskState::Admitted;
+            let t = pool.get_mut(id);
+            if t.state == TaskState::Waiting || t.state == TaskState::Paused {
+                // migrated-in tasks arrive prefilled (Paused): straight
+                // back to decode, never a second prefill
+                t.state = if t.prefill_end.is_some() {
+                    TaskState::Running
+                } else {
+                    TaskState::Admitted
+                };
             }
             if pool.get(id).state == TaskState::Admitted {
                 // charge the first token (produced by prefill) to the quantum

@@ -60,7 +60,14 @@ impl Policy for OrcaPolicy {
             if pool.get(id).is_finished() {
                 continue;
             }
-            pool.get_mut(id).state = TaskState::Admitted;
+            let t = pool.get_mut(id);
+            // a migrated-in task arrives with its prefill (and KV record)
+            // intact: it rejoins decode directly, no second prefill
+            t.state = if t.prefill_end.is_some() {
+                TaskState::Running
+            } else {
+                TaskState::Admitted
+            };
             self.running.push(id);
         }
 

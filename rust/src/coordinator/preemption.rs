@@ -6,9 +6,12 @@
 //!   * decaying the utility of tasks that have already generated many
 //!     tokens mimics Shortest-Job-First and avoids head-of-line blocking;
 //!   * boosting currently-running tasks makes scheduling sticky and
-//!     prevents mid-stream preemption.
+//!     prevents mid-stream preemption;
+//!   * charging an eviction penalty to tasks whose KV cache was swapped
+//!     out keeps selection honest about the restore cost a resume pays
+//!     under a finite memory capacity (DESIGN.md "Memory model").
 
-use super::task::{Task, TaskState};
+use super::task::{Residency, Task, TaskState};
 
 /// Pluggable utility-adaptation strategy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -20,6 +23,11 @@ pub enum UtilityAdaptor {
     SjfDecay { factor: f64, tau: u32 },
     /// Anti-preemption: running/paused tasks get U' = U * multiplier.
     StickyBoost { multiplier: f64 },
+    /// Memory-aware: tasks whose KV cache is swapped out get
+    /// U' = U * factor (factor in (0,1]) — re-admitting them costs a
+    /// swap-in/recompute transition the schedule must pay for, so
+    /// selection slightly prefers resident work of equal utility rate.
+    EvictionPenalty { factor: f64 },
 }
 
 impl UtilityAdaptor {
@@ -34,6 +42,13 @@ impl UtilityAdaptor {
             UtilityAdaptor::StickyBoost { multiplier } => {
                 if matches!(task.state, TaskState::Running | TaskState::Paused) {
                     task.utility * multiplier
+                } else {
+                    task.utility
+                }
+            }
+            UtilityAdaptor::EvictionPenalty { factor } => {
+                if task.residency == Residency::Swapped {
+                    task.utility * factor
                 } else {
                     task.utility
                 }
@@ -67,6 +82,25 @@ mod tests {
         assert_eq!(a.effective(&fresh), 10.0);
         assert!((a.effective(&old) - 2.5).abs() < 1e-12); // 10 * 0.5^2
         assert!(a.effective(&old) < a.effective(&fresh));
+    }
+
+    #[test]
+    fn eviction_penalty_discounts_swapped_tasks_only() {
+        let a = UtilityAdaptor::EvictionPenalty { factor: 0.8 };
+        let resident = {
+            let mut t = task_with_tokens(10);
+            t.residency = crate::coordinator::task::Residency::Resident;
+            t
+        };
+        let swapped = {
+            let mut t = task_with_tokens(10);
+            t.residency = crate::coordinator::task::Residency::Swapped;
+            t
+        };
+        assert_eq!(a.effective(&resident), 10.0);
+        assert!((a.effective(&swapped) - 8.0).abs() < 1e-12);
+        // tasks with no KV yet are untouched
+        assert_eq!(a.effective(&task_with_tokens(0)), 10.0);
     }
 
     #[test]

@@ -7,6 +7,16 @@
 //! Eq. (7) over the admitted quotas, and the first admission that pushes
 //! the cycle past the cap (1000 ms — one cycle must deliver every task's
 //! per-second quota) is rolled back, terminating selection.
+//!
+//! Memory extension (DESIGN.md "Memory model"): when the device's KV
+//! capacity is finite, selection carries a second knapsack dimension —
+//! each candidate's KV footprint ([`Candidate::kv_bytes`]; the SLICE
+//! policy projects the *current* block-rounded footprint, re-evaluated
+//! at every Alg. 4 reschedule). The admission that overflows capacity
+//! is rolled back and terminates selection with exactly the
+//! non-replacement semantics of the cycle cap, so a schedule is only
+//! emitted if its resident KV fits the device (cf. the
+//! projected-occupancy admission of SLOs-Serve, arXiv:2504.08784).
 
 use crate::engine::latency::LatencyModel;
 use crate::util::Micros;
@@ -23,6 +33,11 @@ pub struct Candidate {
     pub utility: f64,
     /// TPOT requirement in micros.
     pub tpot: Micros,
+    /// The candidate's KV footprint in bytes, as projected by the
+    /// caller (SLICE uses the current block-rounded footprint,
+    /// `MemoryBudget::footprint_bytes`). Ignored unless selection runs
+    /// with a finite KV capacity; zero for memory-oblivious callers.
+    pub kv_bytes: u64,
 }
 
 impl Candidate {
@@ -54,14 +69,20 @@ pub struct Selection {
 /// cannot honor any admitted task's TPOT SLO (paper §IV-C).
 pub const CYCLE_CAP: Micros = 1_000_000;
 
-/// Algorithm 2: greedy utility-rate admission with Eq. (7) feasibility.
+/// Algorithm 2: greedy utility-rate admission with Eq. (7) feasibility,
+/// plus an optional KV-memory knapsack dimension.
 ///
 /// `max_batch` additionally caps concurrent tasks (device memory limit;
 /// the paper's formulation leaves this implicit in l(b)'s domain).
+/// `kv_capacity` (when finite) bounds the cumulative projected KV
+/// footprint of the admitted set; the first admission overflowing it is
+/// rolled back and terminates selection, mirroring the cycle-cap
+/// semantics.
 pub fn select_tasks(
     candidates: &[Candidate],
     latency: &LatencyModel,
     cycle_cap: Micros,
+    kv_capacity: Option<u64>,
 ) -> Selection {
     let mut order: Vec<&Candidate> = candidates.iter().collect();
     // descending utility rate; deterministic tie-break by id
@@ -75,6 +96,7 @@ pub fn select_tasks(
     let mut selected: Vec<(TaskId, u32)> = Vec::new();
     let mut quotas_desc: Vec<u32> = Vec::new(); // maintained sorted desc
     let mut period: Micros = 0;
+    let mut kv_used: u64 = 0;
     let mut rejected: Vec<TaskId> = Vec::new();
     let mut stopped = false;
 
@@ -82,6 +104,15 @@ pub fn select_tasks(
         if stopped || selected.len() as u32 >= latency.max_batch {
             rejected.push(cand.id);
             continue;
+        }
+        if let Some(cap) = kv_capacity {
+            if kv_used + cand.kv_bytes > cap {
+                // memory overflow: roll back and terminate, exactly the
+                // non-replacement semantics of the cycle cap below
+                rejected.push(cand.id);
+                stopped = true;
+                continue;
+            }
         }
         let q = cand.quota();
         // insert into the descending quota list
@@ -97,6 +128,7 @@ pub fn select_tasks(
             continue;
         }
         period = p;
+        kv_used += cand.kv_bytes;
         selected.push((cand.id, q));
     }
 
@@ -113,7 +145,7 @@ mod tests {
     }
 
     fn cand(id: TaskId, utility: f64, tpot_ms: f64) -> Candidate {
-        Candidate { id, utility, tpot: ms(tpot_ms) }
+        Candidate { id, utility, tpot: ms(tpot_ms), kv_bytes: 0 }
     }
 
     #[test]
@@ -145,7 +177,7 @@ mod tests {
         for i in 7..9 {
             cands.push(cand(i, 1.0, 250.0));
         }
-        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
         assert_eq!(sel.selected.len(), 9, "all 9 tasks admissible (Table II)");
         assert!(sel.period < CYCLE_CAP);
         assert!(sel.rejected.is_empty());
@@ -156,7 +188,7 @@ mod tests {
         // many high-rate tasks cannot all fit in one cycle
         let cands: Vec<Candidate> =
             (0..30).map(|i| cand(i, 1.0, 50.0)).collect(); // 20 t/s each
-        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
         assert!(!sel.selected.is_empty());
         assert!(sel.selected.len() < 30);
         assert!(sel.period < CYCLE_CAP);
@@ -174,7 +206,7 @@ mod tests {
         let mut cands: Vec<Candidate> =
             (0..30).map(|i| cand(i, 1.0, 50.0)).collect();
         cands.push(cand(99, 100.0, 50.0));
-        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
         assert_eq!(sel.selected[0].0, 99, "highest utility rate admitted first");
     }
 
@@ -183,7 +215,7 @@ mod tests {
         // 4 t/s tasks: quota 4 each; many fit in one cycle
         let cands: Vec<Candidate> =
             (0..20).map(|i| cand(i, 1.0, 250.0)).collect();
-        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
         // 4 tokens/cycle => even at plateau l(16)=134ms, 4 columns of 16
         // tasks ≈ 536ms — well under the cap
         assert!(sel.selected.len() >= 16, "got {}", sel.selected.len());
@@ -195,14 +227,14 @@ mod tests {
         l.max_batch = 4;
         let cands: Vec<Candidate> =
             (0..10).map(|i| cand(i, 1.0, 250.0)).collect();
-        let sel = select_tasks(&cands, &l, CYCLE_CAP);
+        let sel = select_tasks(&cands, &l, CYCLE_CAP, None);
         assert_eq!(sel.selected.len(), 4);
         assert_eq!(sel.rejected.len(), 6);
     }
 
     #[test]
     fn empty_candidates() {
-        let sel = select_tasks(&[], &model(), CYCLE_CAP);
+        let sel = select_tasks(&[], &model(), CYCLE_CAP, None);
         assert!(sel.selected.is_empty());
         assert_eq!(sel.period, 0);
     }
@@ -211,7 +243,7 @@ mod tests {
     fn single_task_always_admitted() {
         // even the most demanding single task fits: quota*l(1) < 1000ms
         // for 20 t/s: 20 * 18ms = 360ms
-        let sel = select_tasks(&[cand(0, 1.0, 50.0)], &model(), CYCLE_CAP);
+        let sel = select_tasks(&[cand(0, 1.0, 50.0)], &model(), CYCLE_CAP, None);
         assert_eq!(sel.selected.len(), 1);
         assert_eq!(sel.period, 20 * model().decode(1));
     }
@@ -220,7 +252,7 @@ mod tests {
     fn rejected_plus_selected_covers_all() {
         let cands: Vec<Candidate> =
             (0..25).map(|i| cand(i, 1.0 + (i % 3) as f64, 50.0 + 10.0 * (i % 5) as f64)).collect();
-        let sel = select_tasks(&cands, &model(), CYCLE_CAP);
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
         let mut all: Vec<TaskId> = sel
             .selected
             .iter()
@@ -232,11 +264,49 @@ mod tests {
     }
 
     #[test]
+    fn kv_capacity_caps_the_admitted_footprint() {
+        // 10 tasks of 4 MiB projected footprint under a 24 MiB budget:
+        // exactly 6 admitted, the overflow rolled back, selection stops
+        let mb = 1024 * 1024;
+        let cands: Vec<Candidate> = (0..10)
+            .map(|i| Candidate { id: i, utility: 1.0, tpot: ms(250.0), kv_bytes: 4 * mb })
+            .collect();
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, Some(24 * mb));
+        assert_eq!(sel.selected.len(), 6);
+        assert_eq!(sel.rejected.len(), 4);
+        // the same candidates without a capacity all fit the cycle
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
+        assert_eq!(sel.selected.len(), 10);
+    }
+
+    #[test]
+    fn kv_dimension_preserves_utility_rate_order() {
+        // the high-rate task is admitted first and survives; the bulky
+        // low-rate tasks hit the memory wall
+        let mb = 1024 * 1024;
+        let mut cands: Vec<Candidate> = (0..5)
+            .map(|i| Candidate { id: i, utility: 1.0, tpot: ms(125.0), kv_bytes: 8 * mb })
+            .collect();
+        cands.push(Candidate { id: 9, utility: 100.0, tpot: ms(50.0), kv_bytes: 8 * mb });
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, Some(16 * mb));
+        assert_eq!(sel.selected.len(), 2);
+        assert_eq!(sel.selected[0].0, 9, "utility-rate order unchanged");
+    }
+
+    #[test]
+    fn zero_footprint_candidates_ignore_capacity() {
+        let cands: Vec<Candidate> = (0..9).map(|i| cand(i, 1.0, 120.0)).collect();
+        let unconstrained = select_tasks(&cands, &model(), CYCLE_CAP, None);
+        let constrained = select_tasks(&cands, &model(), CYCLE_CAP, Some(1));
+        assert_eq!(unconstrained.selected, constrained.selected);
+    }
+
+    #[test]
     fn selection_is_deterministic() {
         let cands: Vec<Candidate> =
             (0..25).map(|i| cand(i, 1.0, 100.0)).collect();
-        let a = select_tasks(&cands, &model(), CYCLE_CAP);
-        let b = select_tasks(&cands, &model(), CYCLE_CAP);
+        let a = select_tasks(&cands, &model(), CYCLE_CAP, None);
+        let b = select_tasks(&cands, &model(), CYCLE_CAP, None);
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.rejected, b.rejected);
     }

@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 
 use crate::engine::latency::LatencyModel;
+use crate::engine::memory::MemoryConfig;
 use crate::util::Micros;
 
 use super::mask::DecodeMask;
@@ -20,6 +21,42 @@ use super::preemption::UtilityAdaptor;
 use super::scheduler::{Policy, Step};
 use super::selection::{select_tasks, Candidate, Selection, CYCLE_CAP};
 use super::task::{TaskId, TaskState};
+
+/// Memory-aware selection parameters (DESIGN.md "Memory model"): the
+/// device's KV capacity plus the footprint geometry (delegated to the
+/// shared [`MemoryConfig`] rounding so selection's projections can
+/// never diverge from the serving loop's enforcement accounting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryBudget {
+    /// Device KV capacity in bytes (tier-scaled).
+    pub capacity: u64,
+    /// The paging geometry (bytes per token, block rounding).
+    pub cfg: MemoryConfig,
+}
+
+impl MemoryBudget {
+    /// Build from a memory config and a device capacity; `None` unless
+    /// the config is both constrained and memory-*aware* (an oblivious
+    /// policy under a finite capacity is the sweep's baseline).
+    pub fn from_config(cfg: &MemoryConfig, capacity: Option<u64>) -> Option<Self> {
+        match capacity {
+            Some(capacity) if cfg.aware => {
+                Some(MemoryBudget { capacity, cfg: cfg.clone() })
+            }
+            _ => None,
+        }
+    }
+
+    /// A task's *current* KV footprint (its sequence so far plus the
+    /// next token), block-rounded. Selection re-runs at every arrival
+    /// and departure (Alg. 4), so budgeting against current footprints
+    /// tracks occupancy as generations grow — a full-generation
+    /// worst-case projection proved so conservative it left the device
+    /// idle (measured in EXPERIMENTS.md "Memory sweep").
+    pub fn footprint_bytes(&self, seq_len: u32) -> u64 {
+        self.cfg.bytes_for(seq_len + 1)
+    }
+}
 
 /// SLICE scheduler configuration.
 #[derive(Debug, Clone)]
@@ -34,6 +71,11 @@ pub struct SliceConfig {
     /// steps only, so a burst of admissions can overrun the 1000 ms cap
     /// by the length of the prefill queue; this accounts for it.
     pub prefill_aware: bool,
+    /// Memory extension: when set, selection treats projected KV bytes
+    /// as a second knapsack dimension so the emitted schedule always
+    /// fits the device's cache (`None` = memory-oblivious, the
+    /// pre-memory behaviour).
+    pub memory: Option<MemoryBudget>,
 }
 
 impl Default for SliceConfig {
@@ -42,6 +84,7 @@ impl Default for SliceConfig {
             cycle_cap: CYCLE_CAP,
             adaptor: UtilityAdaptor::None,
             prefill_aware: false,
+            memory: None,
         }
     }
 }
@@ -95,6 +138,11 @@ impl SlicePolicy {
                 id: t.id,
                 utility: self.cfg.adaptor.effective(t),
                 tpot: t.slo.tpot,
+                kv_bytes: self
+                    .cfg
+                    .memory
+                    .as_ref()
+                    .map_or(0, |m| m.footprint_bytes(t.seq_len())),
             })
             .collect();
 
@@ -110,8 +158,9 @@ impl SlicePolicy {
         } else {
             self.cfg.cycle_cap
         };
+        let kv_capacity = self.cfg.memory.as_ref().map(|m| m.capacity);
         let Selection { selected, rejected, .. } =
-            select_tasks(&candidates, &self.latency, cycle_cap);
+            select_tasks(&candidates, &self.latency, cycle_cap, kv_capacity);
 
         // Update task states and the prefill queue.
         self.to_prefill.retain(|_| false);
@@ -330,15 +379,56 @@ mod tests {
         let mut p = SlicePolicy::new(
             lat,
             SliceConfig {
-                cycle_cap: CYCLE_CAP,
                 adaptor: UtilityAdaptor::SjfDecay { factor: 0.5, tau: 16 },
-                prefill_aware: false,
+                ..SliceConfig::default()
             },
         );
         p.on_arrival(&mut pool, &[1], 0);
         let step = p.next_step(&mut pool, 0);
         assert_eq!(step, Step::Prefill { task: 1 });
         assert_eq!(pool.get(0).state, TaskState::Paused, "long task preempted");
+    }
+
+    #[test]
+    fn memory_budget_limits_admissions() {
+        // 8 mid-generation voice tasks, each holding ~11.5 MiB of cache;
+        // a 32 MiB budget keeps only 2 scheduled, the rest pause
+        // (memory, not the cycle cap, binds)
+        let mk_tasks = || -> Vec<Task> {
+            (0..8)
+                .map(|i| {
+                    let mut t = Task::new(i, TaskClass::Voice, 0, 32, 400, 1.0);
+                    t.state = TaskState::Running;
+                    t.prefill_end = Some(1);
+                    t.tokens_generated = 335; // seq_len 367 -> 368-token footprint
+                    t
+                })
+                .collect()
+        };
+        // default geometry: 32 KiB/token, 16-token blocks
+        let budget = MemoryBudget {
+            capacity: 32 * 1024 * 1024,
+            cfg: MemoryConfig::default(),
+        };
+        assert_eq!(budget.footprint_bytes(367), 368 * 32 * 1024); // 11.5 MiB
+        let mut pool = pool_with(mk_tasks());
+        let ids: Vec<TaskId> = (0..8).collect();
+        let mut aware = SlicePolicy::new(
+            LatencyModel::paper_calibrated(),
+            SliceConfig { memory: Some(budget), ..SliceConfig::default() },
+        );
+        aware.on_arrival(&mut pool, &ids, 0);
+        let _ = aware.next_step(&mut pool, 0);
+        assert_eq!(aware.admitted().len(), 2, "32 MiB / 11.5 MiB = 2 tasks");
+        assert_eq!(pool.ids_in_state(TaskState::Paused).len(), 6);
+
+        // the oblivious policy keeps all 8 (cycle cap alone allows it)
+        let mut pool = pool_with(mk_tasks());
+        let mut oblivious =
+            SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        oblivious.on_arrival(&mut pool, &ids, 0);
+        let _ = oblivious.next_step(&mut pool, 0);
+        assert_eq!(oblivious.admitted().len(), 8);
     }
 
     #[test]

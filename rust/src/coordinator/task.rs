@@ -92,6 +92,22 @@ impl SloSpec {
     }
 }
 
+/// Where a task's KV cache lives (DESIGN.md "Memory model"). Tracked
+/// on the task so schedulers and the serving loop agree on residency
+/// without reaching into engine state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Residency {
+    /// No KV cache exists yet (prompt not prefilled).
+    #[default]
+    None,
+    /// The cache occupies device memory; the task can decode directly.
+    Resident,
+    /// The cache was evicted (swapped to host, dropped for recompute,
+    /// or in flight from another replica); resuming pays a restore
+    /// transition before the next decode.
+    Swapped,
+}
+
 /// Lifecycle state of a task inside the serving system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskState {
@@ -150,6 +166,22 @@ pub struct Task {
     pub max_token_gap: Micros,
     /// Generated token values (real engine only).
     pub generated: Vec<u8>,
+
+    // -- KV-cache memory state (DESIGN.md "Memory model") -------------------
+    /// Where this task's KV cache currently lives.
+    pub residency: Residency,
+    /// Pre-priced restore fee in micros (the KV-handoff transfer time
+    /// stamped by the cluster router when a running task migrates);
+    /// charged once by the destination when the task next decodes.
+    pub pending_restore: Micros,
+    /// Times this task's cache was evicted from device memory.
+    pub swap_outs: u32,
+    /// Times this task's cache was restored (swap-in or recompute).
+    pub swap_ins: u32,
+    /// Set when a running task was handed off to another replica: the
+    /// source keeps this husk out of scheduling and reports (the moved
+    /// copy carries the timing record forward).
+    pub migrated_away: bool,
 }
 
 impl Task {
@@ -180,6 +212,11 @@ impl Task {
             tokens_generated: 0,
             max_token_gap: 0,
             generated: Vec::new(),
+            residency: Residency::None,
+            pending_restore: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            migrated_away: false,
         }
     }
 
@@ -371,6 +408,15 @@ mod tests {
         t.on_token(ms(400.0)); // 250ms stutter
         t.on_token(ms(450.0));
         assert_eq!(t.max_token_gap, ms(250.0));
+    }
+
+    #[test]
+    fn fresh_task_has_no_kv_state() {
+        let t = rt_task();
+        assert_eq!(t.residency, Residency::None);
+        assert_eq!(t.pending_restore, 0);
+        assert_eq!((t.swap_outs, t.swap_ins), (0, 0));
+        assert!(!t.migrated_away);
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! KV-cache memory model: deterministic accounting of per-task resident
+//! KV bytes, device capacity, and the cost of residency transitions
+//! (DESIGN.md "Memory model").
+//!
+//! Edge devices are memory-bound before they are compute-bound: pausing
+//! a task (Alg. 4) is only free if its KV cache stays resident, and the
+//! paper's FastServe baseline explicitly prices proactive KV swapping.
+//! This module makes that cost first-class for the deterministic
+//! simulator, mirroring what the `pjrt` engine already measures
+//! (`PjrtEngine::peak_kv_bytes`):
+//!
+//!   * a task's cache occupies `bytes_per_token` per resident token,
+//!     rounded up to `block_tokens` paged blocks (vLLM-style paging,
+//!     so fragmentation is modelled, not wished away);
+//!   * evicting a task either **swaps** its blocks to host storage at
+//!     `swap_bandwidth` (restored at the same rate on resume) or
+//!     **recomputes** them on resume through the device's prefill
+//!     latency curve (eviction itself is then free);
+//!   * migrating a *running* task to another replica transfers its
+//!     blocks over the inter-replica link at `handoff_bandwidth`; the
+//!     pre-priced fee is charged when the destination first resumes it.
+//!
+//! The default [`MemoryConfig`] is unconstrained and free: no capacity,
+//! no swaps, no costed transitions — every pre-memory run reproduces
+//! bit-for-bit, and the subsystem is opt-in by construction.
+
+use crate::coordinator::task::TaskId;
+use crate::util::{Micros, MICROS_PER_SEC};
+
+use super::latency::LatencyModel;
+
+/// How an evicted task's KV cache is brought back on resume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptionMode {
+    /// Blocks are written to host storage on eviction and read back on
+    /// resume, both at [`MemoryConfig::swap_bandwidth`] (FastServe-style
+    /// proactive swapping).
+    Swap,
+    /// Blocks are dropped on eviction and re-derived on resume by a
+    /// prefill pass over the task's cached tokens (priced through the
+    /// device's prefill latency curve).
+    Recompute,
+}
+
+impl PreemptionMode {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "swap" => PreemptionMode::Swap,
+            "recompute" => PreemptionMode::Recompute,
+            other => anyhow::bail!("unknown preemption mode '{other}' (swap|recompute)"),
+        })
+    }
+
+    /// Display name used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreemptionMode::Swap => "swap",
+            PreemptionMode::Recompute => "recompute",
+        }
+    }
+}
+
+/// KV-cache memory parameters (the `[memory]` config section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// Device KV capacity in bytes for a standard-tier device; `None`
+    /// models an unconstrained device (the default — every pre-memory
+    /// run is reproduced bit-exactly). Slower tiers scale this down via
+    /// [`crate::cluster::DeviceProfile::kv_fraction`].
+    pub kv_capacity: Option<u64>,
+    /// Bytes of KV cache per resident token (default 32 KiB: a
+    /// ChatGLM2-6B-class MQA stack, the paper's testbed model family).
+    pub bytes_per_token: u64,
+    /// Block granularity in tokens: occupancy is rounded up to whole
+    /// blocks (paged KV allocation).
+    pub block_tokens: u32,
+    /// Swap bandwidth in bytes/s (swap-out and swap-in). Edge boards
+    /// have *unified* memory, so evicted caches go to storage, not
+    /// across PCIe: the default models eMMC-class flash (64 MB/s) — the
+    /// regime where thrashing is expensive enough to schedule around.
+    pub swap_bandwidth: u64,
+    /// Inter-replica link bandwidth in bytes/s for running-task KV
+    /// handoff.
+    pub handoff_bandwidth: u64,
+    /// How evicted caches are restored.
+    pub mode: PreemptionMode,
+    /// When true (default), the SLICE policy treats projected KV bytes
+    /// as a second knapsack dimension during selection (Alg. 2); when
+    /// false the policy is memory-*oblivious* and only the serving
+    /// loop's capacity enforcement protects the device (the baseline
+    /// the memory sweep compares against).
+    pub aware: bool,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            kv_capacity: None,
+            bytes_per_token: 32 * 1024,
+            block_tokens: 16,
+            swap_bandwidth: 64_000_000,     // eMMC-class storage swap
+            handoff_bandwidth: 125_000_000, // 1 Gbit/s edge link
+            mode: PreemptionMode::Swap,
+            aware: true,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// Block-rounded bytes occupied by `tokens` resident tokens.
+    pub fn bytes_for(&self, tokens: u32) -> u64 {
+        let block = self.block_tokens.max(1) as u64;
+        let blocks = (tokens as u64).div_ceil(block);
+        blocks * block * self.bytes_per_token
+    }
+
+    /// Time to move `bytes` over a link of `bandwidth` bytes/s, rounded
+    /// up to integer micros (deterministic).
+    pub fn transfer_cost(bytes: u64, bandwidth: u64) -> Micros {
+        if bandwidth == 0 {
+            return 0; // "free" link sentinel
+        }
+        bytes.saturating_mul(MICROS_PER_SEC).div_ceil(bandwidth)
+    }
+
+    /// KV-handoff transfer time for a task with `tokens` cached tokens.
+    pub fn handoff_cost(&self, tokens: u32) -> Micros {
+        Self::transfer_cost(self.bytes_for(tokens), self.handoff_bandwidth)
+    }
+
+    /// True when a finite capacity is configured.
+    pub fn constrained(&self) -> bool {
+        self.kv_capacity.is_some()
+    }
+}
+
+/// Counters a memory-aware run reports (all zero when unconstrained
+/// except the peak, which is tracked for every sim run — parity with
+/// `PjrtEngine::peak_kv_bytes`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryStats {
+    /// High-water mark of block-rounded resident KV bytes.
+    pub peak_kv_bytes: u64,
+    /// Evictions (capacity-driven swap-outs / drops).
+    pub swap_outs: u64,
+    /// Priced swap-ins (mode `swap`).
+    pub swap_ins: u64,
+    /// Priced recompute restores (mode `recompute`).
+    pub recomputes: u64,
+    /// Restores of migrated-in tasks priced by the handoff link.
+    pub handoff_restores: u64,
+    /// Total virtual time spent on swap/recompute/handoff transitions.
+    pub swap_delay: Micros,
+}
+
+impl MemoryStats {
+    /// Accumulate another run's counters (fleet aggregation; peaks are
+    /// summed — each replica's device holds its own high-water mark).
+    pub fn merge(&mut self, other: &MemoryStats) {
+        self.peak_kv_bytes += other.peak_kv_bytes;
+        self.swap_outs += other.swap_outs;
+        self.swap_ins += other.swap_ins;
+        self.recomputes += other.recomputes;
+        self.handoff_restores += other.handoff_restores;
+        self.swap_delay += other.swap_delay;
+    }
+}
+
+/// Per-task residency record inside a [`KvCacheModel`].
+#[derive(Debug, Clone, Copy)]
+struct KvSlot {
+    /// Cached sequence length in tokens.
+    tokens: u32,
+    /// True while the blocks occupy device memory.
+    resident: bool,
+}
+
+/// Deterministic KV-cache state for one device: per-task resident
+/// tokens, block-rounded occupancy against a capacity, and costed
+/// swap/recompute/handoff transitions. Owned by the sim engine and
+/// driven by the serving loop (`server::Server`), which enforces the
+/// occupancy-never-exceeds-capacity invariant for *every* policy.
+#[derive(Debug, Clone)]
+pub struct KvCacheModel {
+    cfg: MemoryConfig,
+    /// This device's capacity in bytes (already tier-scaled); `None` =
+    /// unconstrained.
+    capacity: Option<u64>,
+    /// Prefill curve used to price `recompute` restores.
+    recompute_curve: LatencyModel,
+    /// Slot per dense local task id.
+    slots: Vec<Option<KvSlot>>,
+    occupied: u64,
+    stats: MemoryStats,
+}
+
+impl KvCacheModel {
+    /// Build a model from the memory config, this device's (tier-scaled)
+    /// capacity, and its prefill curve for recompute pricing.
+    pub fn new(cfg: MemoryConfig, capacity: Option<u64>, recompute_curve: LatencyModel) -> Self {
+        KvCacheModel {
+            cfg,
+            capacity,
+            recompute_curve,
+            slots: Vec::new(),
+            occupied: 0,
+            stats: MemoryStats::default(),
+        }
+    }
+
+    /// An unconstrained, free model (pure peak accounting).
+    pub fn unlimited(recompute_curve: LatencyModel) -> Self {
+        Self::new(MemoryConfig::default(), None, recompute_curve)
+    }
+
+    /// The memory parameters this model prices with.
+    pub fn config(&self) -> &MemoryConfig {
+        &self.cfg
+    }
+
+    /// This device's capacity in bytes (`None` = unconstrained).
+    pub fn capacity(&self) -> Option<u64> {
+        self.capacity
+    }
+
+    /// True when a finite capacity is enforced.
+    pub fn constrained(&self) -> bool {
+        self.capacity.is_some()
+    }
+
+    /// Current block-rounded resident bytes.
+    pub fn occupied_bytes(&self) -> u64 {
+        self.occupied
+    }
+
+    /// Transition counters and the resident high-water mark.
+    pub fn stats(&self) -> MemoryStats {
+        self.stats
+    }
+
+    /// Block-rounded bytes for `tokens` cached tokens.
+    pub fn bytes_for(&self, tokens: u32) -> u64 {
+        self.cfg.bytes_for(tokens)
+    }
+
+    fn slot(&self, task: TaskId) -> Option<&KvSlot> {
+        self.slots.get(task as usize).and_then(|s| s.as_ref())
+    }
+
+    fn slot_mut(&mut self, task: TaskId) -> Option<&mut KvSlot> {
+        self.slots.get_mut(task as usize).and_then(|s| s.as_mut())
+    }
+
+    fn set_slot(&mut self, task: TaskId, slot: KvSlot) {
+        let idx = task as usize;
+        if self.slots.len() <= idx {
+            self.slots.resize(idx + 1, None);
+        }
+        self.slots[idx] = Some(slot);
+    }
+
+    fn bump_peak(&mut self) {
+        if self.occupied > self.stats.peak_kv_bytes {
+            self.stats.peak_kv_bytes = self.occupied;
+        }
+    }
+
+    /// True while `task`'s cache occupies device memory.
+    pub fn is_resident(&self, task: TaskId) -> bool {
+        self.slot(task).is_some_and(|s| s.resident)
+    }
+
+    /// Cached tokens recorded for `task` (resident or swapped).
+    pub fn tokens_of(&self, task: TaskId) -> Option<u32> {
+        self.slot(task).map(|s| s.tokens)
+    }
+
+    /// A task's prompt was prefilled: its cache becomes resident with
+    /// `tokens` cached tokens.
+    pub fn insert(&mut self, task: TaskId, tokens: u32) {
+        debug_assert!(self.slot(task).is_none(), "task {task} already has a KV slot");
+        self.occupied += self.cfg.bytes_for(tokens);
+        self.set_slot(task, KvSlot { tokens, resident: true });
+        self.bump_peak();
+    }
+
+    /// One more token was decoded into a resident cache.
+    pub fn note_token(&mut self, task: TaskId) {
+        let Some(slot) = self.slot_mut(task) else { return };
+        if !slot.resident {
+            return;
+        }
+        let before = slot.tokens;
+        slot.tokens = before + 1;
+        let grow = self.cfg.bytes_for(before + 1) - self.cfg.bytes_for(before);
+        if grow > 0 {
+            self.occupied += grow;
+            self.bump_peak();
+        }
+    }
+
+    /// Free a finished (or extracted) task's cache entirely.
+    pub fn release(&mut self, task: TaskId) {
+        let idx = task as usize;
+        if let Some(Some(slot)) = self.slots.get(idx) {
+            if slot.resident {
+                self.occupied -= self.cfg.bytes_for(slot.tokens);
+            }
+            self.slots[idx] = None;
+        }
+    }
+
+    /// Evict a resident task: frees its blocks and returns the virtual
+    /// time the transition costs (a swap-out write in `swap` mode; free
+    /// in `recompute` mode, where the cost moves to the resume side).
+    pub fn swap_out(&mut self, task: TaskId) -> Micros {
+        let mode = self.cfg.mode;
+        let swap_bw = self.cfg.swap_bandwidth;
+        let Some(slot) = self.slot_mut(task) else { return 0 };
+        if !slot.resident {
+            return 0;
+        }
+        slot.resident = false;
+        let tokens = slot.tokens;
+        let bytes = self.cfg.bytes_for(tokens);
+        self.occupied -= bytes;
+        self.stats.swap_outs += 1;
+        let cost = match mode {
+            PreemptionMode::Swap => MemoryConfig::transfer_cost(bytes, swap_bw),
+            PreemptionMode::Recompute => 0,
+        };
+        self.stats.swap_delay += cost;
+        cost
+    }
+
+    /// Make a task's cache resident again (before it can decode) and
+    /// return the transition cost. `tokens` is the task's current
+    /// sequence length — authoritative for migrated-in tasks the model
+    /// has never seen. `pending_restore` is a pre-priced fee (the KV
+    /// handoff time stamped by the router); when non-zero it replaces
+    /// the mode cost.
+    pub fn restore(&mut self, task: TaskId, tokens: u32, pending_restore: Micros) -> Micros {
+        if self.is_resident(task) {
+            return 0;
+        }
+        let bytes = self.cfg.bytes_for(tokens);
+        self.occupied += bytes;
+        self.set_slot(task, KvSlot { tokens, resident: true });
+        self.bump_peak();
+        let cost = if pending_restore > 0 {
+            self.stats.handoff_restores += 1;
+            pending_restore
+        } else {
+            match self.cfg.mode {
+                PreemptionMode::Swap => {
+                    self.stats.swap_ins += 1;
+                    MemoryConfig::transfer_cost(bytes, self.cfg.swap_bandwidth)
+                }
+                PreemptionMode::Recompute => {
+                    self.stats.recomputes += 1;
+                    self.recompute_curve.prefill(tokens)
+                }
+            }
+        };
+        self.stats.swap_delay += cost;
+        cost
+    }
+
+    /// Resident bytes held by tasks *outside* `protected` (the batch
+    /// about to decode) — what eviction can reclaim.
+    pub fn resident_outside(&self, protected: &[TaskId]) -> u64 {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(id, s)| s.as_ref().map(|s| (id as TaskId, s)))
+            .filter(|(id, s)| s.resident && !protected.contains(id))
+            .map(|(_, s)| self.cfg.bytes_for(s.tokens))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ms;
+
+    fn constrained(capacity: u64, mode: PreemptionMode) -> KvCacheModel {
+        let cfg = MemoryConfig {
+            kv_capacity: Some(capacity),
+            mode,
+            ..MemoryConfig::default()
+        };
+        KvCacheModel::new(cfg, Some(capacity), LatencyModel::paper_calibrated())
+    }
+
+    #[test]
+    fn block_rounding_and_growth() {
+        let cfg = MemoryConfig::default();
+        // 16-token blocks of 32 KiB/token = 512 KiB per block
+        assert_eq!(cfg.bytes_for(0), 0);
+        assert_eq!(cfg.bytes_for(1), 512 * 1024);
+        assert_eq!(cfg.bytes_for(16), 512 * 1024);
+        assert_eq!(cfg.bytes_for(17), 1024 * 1024);
+
+        let mut m = KvCacheModel::unlimited(LatencyModel::paper_calibrated());
+        m.insert(0, 16);
+        assert_eq!(m.occupied_bytes(), 512 * 1024);
+        m.note_token(0); // crosses into the second block
+        assert_eq!(m.occupied_bytes(), 1024 * 1024);
+        m.note_token(0); // stays inside it
+        assert_eq!(m.occupied_bytes(), 1024 * 1024);
+        assert_eq!(m.tokens_of(0), Some(18));
+        m.release(0);
+        assert_eq!(m.occupied_bytes(), 0);
+        assert_eq!(m.stats().peak_kv_bytes, 1024 * 1024);
+    }
+
+    #[test]
+    fn transfer_cost_rounds_up() {
+        // 1 MiB at 64 MB/s = 16384.0 us exactly
+        let bytes = 1024 * 1024;
+        let bw = 64_000_000u64;
+        assert_eq!(MemoryConfig::transfer_cost(bytes, bw), 16_384);
+        // one byte more rounds up
+        assert_eq!(MemoryConfig::transfer_cost(bytes + 1, bw), 16_385);
+        assert_eq!(MemoryConfig::transfer_cost(0, bw), 0);
+        assert_eq!(MemoryConfig::transfer_cost(bytes, 0), 0, "free-link sentinel");
+    }
+
+    #[test]
+    fn swap_roundtrip_prices_both_directions() {
+        let mut m = constrained(64 * 1024 * 1024, PreemptionMode::Swap);
+        m.insert(3, 100); // 7 blocks = 3.5 MiB
+        let bytes = m.bytes_for(100);
+        let out = m.swap_out(3);
+        assert_eq!(out, MemoryConfig::transfer_cost(bytes, m.config().swap_bandwidth));
+        assert!(!m.is_resident(3));
+        assert_eq!(m.occupied_bytes(), 0);
+        let back = m.restore(3, 100, 0);
+        assert_eq!(back, out, "swap-in mirrors swap-out");
+        assert!(m.is_resident(3));
+        let s = m.stats();
+        assert_eq!((s.swap_outs, s.swap_ins, s.recomputes), (1, 1, 0));
+        assert_eq!(s.swap_delay, out + back);
+    }
+
+    #[test]
+    fn recompute_mode_prices_resume_via_prefill_curve() {
+        let mut m = constrained(64 * 1024 * 1024, PreemptionMode::Recompute);
+        m.insert(0, 64);
+        assert_eq!(m.swap_out(0), 0, "recompute eviction is free");
+        let cost = m.restore(0, 64, 0);
+        assert_eq!(cost, LatencyModel::paper_calibrated().prefill(64));
+        assert_eq!(cost, ms(75.0));
+        let s = m.stats();
+        assert_eq!((s.swap_outs, s.swap_ins, s.recomputes), (1, 0, 1));
+    }
+
+    #[test]
+    fn pending_restore_fee_overrides_mode_cost() {
+        let mut m = constrained(64 * 1024 * 1024, PreemptionMode::Swap);
+        // a migrated-in task the model has never seen: adopted at its
+        // current length, charged the router's pre-priced handoff fee
+        let cost = m.restore(9, 200, 5_000);
+        assert_eq!(cost, 5_000);
+        assert!(m.is_resident(9));
+        assert_eq!(m.tokens_of(9), Some(200));
+        assert_eq!(m.stats().handoff_restores, 1);
+        assert_eq!(m.stats().swap_ins, 0);
+    }
+
+    #[test]
+    fn handoff_cost_uses_link_bandwidth() {
+        let cfg = MemoryConfig::default();
+        let bytes = cfg.bytes_for(160); // 10 blocks = 5 MiB
+        assert_eq!(cfg.handoff_cost(160), MemoryConfig::transfer_cost(bytes, 125_000_000));
+        // 5 MiB over 1 Gbit/s ~ 42 ms
+        assert!(cfg.handoff_cost(160) > ms(40.0) && cfg.handoff_cost(160) < ms(45.0));
+    }
+
+    #[test]
+    fn resident_outside_excludes_protected_and_swapped() {
+        let mut m = constrained(64 * 1024 * 1024, PreemptionMode::Swap);
+        m.insert(0, 16);
+        m.insert(1, 16);
+        m.insert(2, 16);
+        m.swap_out(2);
+        assert_eq!(m.resident_outside(&[0]), m.bytes_for(16));
+        assert_eq!(m.resident_outside(&[]), 2 * m.bytes_for(16));
+        assert_eq!(m.resident_outside(&[0, 1]), 0);
+    }
+
+    #[test]
+    fn merge_accumulates_fleet_stats() {
+        let mut a = MemoryStats {
+            peak_kv_bytes: 10,
+            swap_outs: 1,
+            swap_ins: 1,
+            recomputes: 0,
+            handoff_restores: 2,
+            swap_delay: 100,
+        };
+        let b = MemoryStats {
+            peak_kv_bytes: 5,
+            swap_outs: 2,
+            swap_ins: 0,
+            recomputes: 3,
+            handoff_restores: 0,
+            swap_delay: 50,
+        };
+        a.merge(&b);
+        assert_eq!(a.peak_kv_bytes, 15);
+        assert_eq!(a.swap_outs, 3);
+        assert_eq!(a.recomputes, 3);
+        assert_eq!(a.swap_delay, 150);
+    }
+
+    #[test]
+    fn unlimited_model_never_charges() {
+        let mut m = KvCacheModel::unlimited(LatencyModel::paper_calibrated());
+        assert!(!m.constrained());
+        m.insert(0, 500);
+        // the serving loop never evicts on an unconstrained model; peak
+        // accounting still works
+        assert!(m.stats().peak_kv_bytes > 0);
+        assert_eq!(m.stats().swap_delay, 0);
+    }
+
+    #[test]
+    fn preemption_mode_parses() {
+        assert_eq!(PreemptionMode::parse("swap").unwrap(), PreemptionMode::Swap);
+        assert_eq!(
+            PreemptionMode::parse("Recompute").unwrap(),
+            PreemptionMode::Recompute
+        );
+        assert!(PreemptionMode::parse("drop").is_err());
+        assert_eq!(PreemptionMode::Swap.label(), "swap");
+    }
+}

@@ -16,6 +16,7 @@
 
 pub mod clock;
 pub mod latency;
+pub mod memory;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sampler;
@@ -64,4 +65,18 @@ pub trait DecodeEngine {
 
     /// Human-readable backend name for reports.
     fn backend(&self) -> &'static str;
+
+    /// The engine's KV-cache memory model, if it keeps one. The serving
+    /// loop drives residency transitions (insert/evict/restore) through
+    /// this hook; engines without a deterministic memory model (the
+    /// real PJRT engine measures instead of modelling) return `None`
+    /// and the loop skips all memory accounting.
+    fn kv_model_mut(&mut self) -> Option<&mut memory::KvCacheModel> {
+        None
+    }
+
+    /// Read-only view of [`DecodeEngine::kv_model_mut`].
+    fn kv_model(&self) -> Option<&memory::KvCacheModel> {
+        None
+    }
 }

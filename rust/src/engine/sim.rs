@@ -11,6 +11,7 @@ use crate::coordinator::pool::TaskPool;
 use crate::coordinator::task::TaskId;
 
 use super::latency::LatencyModel;
+use super::memory::KvCacheModel;
 use super::{DecodeEngine, StepOutcome, TokenOut};
 
 /// Simulation engine: durations from [`LatencyModel`], synthetic tokens.
@@ -18,6 +19,11 @@ use super::{DecodeEngine, StepOutcome, TokenOut};
 pub struct SimEngine {
     latency: LatencyModel,
     max_context: u32,
+    /// Deterministic KV-cache memory model. Unconstrained and free by
+    /// default (pure peak accounting — parity with
+    /// `PjrtEngine::peak_kv_bytes`); [`SimEngine::with_memory`] swaps in
+    /// a capacity-constrained model.
+    kv: KvCacheModel,
     /// Prefill passes executed (reports).
     pub prefill_steps: u64,
     /// Decode iterations executed (reports).
@@ -29,9 +35,11 @@ pub struct SimEngine {
 impl SimEngine {
     /// Build a sim engine over a latency model and context limit.
     pub fn new(latency: LatencyModel, max_context: u32) -> Self {
+        let kv = KvCacheModel::unlimited(latency.clone());
         SimEngine {
             latency,
             max_context,
+            kv,
             prefill_steps: 0,
             decode_steps: 0,
             decoded_tokens: 0,
@@ -44,9 +52,21 @@ impl SimEngine {
         Self::new(LatencyModel::paper_calibrated(), 8192)
     }
 
+    /// Replace the engine's KV-cache model (capacity-constrained runs).
+    pub fn with_memory(mut self, kv: KvCacheModel) -> Self {
+        self.kv = kv;
+        self
+    }
+
     /// The latency model timing this engine.
     pub fn latency(&self) -> &LatencyModel {
         &self.latency
+    }
+
+    /// High-water mark of block-rounded resident KV bytes (parity with
+    /// `PjrtEngine::peak_kv_bytes`).
+    pub fn peak_kv_bytes(&self) -> u64 {
+        self.kv.stats().peak_kv_bytes
     }
 }
 
@@ -72,7 +92,9 @@ impl DecodeEngine for SimEngine {
         })
     }
 
-    fn release(&mut self, _task: TaskId) {}
+    fn release(&mut self, task: TaskId) {
+        self.kv.release(task);
+    }
 
     fn max_context(&self) -> u32 {
         self.max_context
@@ -80,6 +102,14 @@ impl DecodeEngine for SimEngine {
 
     fn backend(&self) -> &'static str {
         "sim"
+    }
+
+    fn kv_model_mut(&mut self) -> Option<&mut KvCacheModel> {
+        Some(&mut self.kv)
+    }
+
+    fn kv_model(&self) -> Option<&KvCacheModel> {
+        Some(&self.kv)
     }
 }
 
@@ -115,6 +145,24 @@ mod tests {
         assert!(b.duration > a.duration);
         assert_eq!(a.tokens.len(), 1);
         assert!(!a.tokens[0].eos);
+    }
+
+    #[test]
+    fn kv_model_is_exposed_and_tracks_peak() {
+        let mut e = SimEngine::paper_calibrated();
+        assert_eq!(e.peak_kv_bytes(), 0);
+        let kv = e.kv_model_mut().expect("sim engine always models KV");
+        assert!(!kv.constrained(), "default model is unconstrained");
+        kv.insert(0, 16);
+        kv.insert(1, 16);
+        assert!(e.peak_kv_bytes() > 0);
+        let peak = e.peak_kv_bytes();
+        // release keeps the high-water mark (parity with
+        // PjrtEngine::peak_kv_bytes)
+        e.release(0);
+        e.release(1);
+        assert_eq!(e.peak_kv_bytes(), peak);
+        assert_eq!(e.kv_model().unwrap().occupied_bytes(), 0);
     }
 
     #[test]

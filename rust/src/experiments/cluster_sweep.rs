@@ -13,7 +13,10 @@ use anyhow::Result;
 
 use crate::cluster::RoutingStrategy;
 use crate::config::ServeConfig;
-use crate::metrics::report::{latency_summary_json, ms2, nan_null, pct, Table};
+use crate::engine::memory::MemoryStats;
+use crate::metrics::report::{
+    latency_summary_json, memory_stats_json, ms2, nan_null, pct, Table,
+};
 use crate::metrics::{Attainment, LatencySummary};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
@@ -38,6 +41,8 @@ pub struct ClusterCell {
     pub latency: LatencySummary,
     /// Tasks routed to each replica (balance diagnostics).
     pub routed: Vec<usize>,
+    /// Fleet-aggregated KV accounting (peak bytes, swap counters).
+    pub memory: MemoryStats,
 }
 
 /// Run one cell: N replicas at N× the configured single-device load.
@@ -61,6 +66,7 @@ pub fn run_cell(
         attainment: Attainment::compute(&tasks),
         latency: LatencySummary::compute(&tasks),
         routed: report.replicas.iter().map(|r| r.routed).collect(),
+        memory: report.fleet_memory(),
     })
 }
 
@@ -107,6 +113,7 @@ pub fn run(cfg: &ServeConfig) -> Result<Json> {
                     .set("rt_slo", nan_null(c.attainment.rt_slo))
                     .set("nrt_slo", nan_null(c.attainment.nrt_slo))
                     .set("latency", latency_summary_json(&c.latency))
+                    .set("memory", memory_stats_json(&c.memory))
                     .set(
                         "routed",
                         c.routed.iter().map(|&r| Json::from(r)).collect::<Vec<_>>(),

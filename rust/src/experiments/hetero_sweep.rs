@@ -19,7 +19,10 @@ use anyhow::Result;
 
 use crate::cluster::{FleetSpec, RoutingStrategy};
 use crate::config::ServeConfig;
-use crate::metrics::report::{latency_summary_json, ms2, nan_null, pct, Table};
+use crate::engine::memory::MemoryStats;
+use crate::metrics::report::{
+    latency_summary_json, memory_stats_json, ms2, nan_null, pct, Table,
+};
 use crate::metrics::{Attainment, LatencySummary};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
@@ -60,6 +63,8 @@ pub struct HeteroCell {
     pub rejected: usize,
     /// Tasks re-placed by overload migration.
     pub migrations: u64,
+    /// Fleet-aggregated KV accounting (peak bytes, swap counters).
+    pub memory: MemoryStats,
 }
 
 /// Run one cell. `guarded` switches admission control and overload
@@ -93,6 +98,7 @@ pub fn run_cell(
         routed: report.replicas.iter().map(|r| r.routed).collect(),
         rejected: report.rejected_count(),
         migrations: report.migrations,
+        memory: report.fleet_memory(),
     })
 }
 
@@ -158,6 +164,7 @@ pub fn run(cfg: &ServeConfig) -> Result<Json> {
                     .set("rejected", c.rejected)
                     .set("migrations", c.migrations)
                     .set("latency", latency_summary_json(&c.latency))
+                    .set("memory", memory_stats_json(&c.memory))
                     .set(
                         "routed",
                         c.routed.iter().map(|&r| Json::from(r)).collect::<Vec<_>>(),

@@ -1,0 +1,242 @@
+//! Memory sweep — KV capacity × preemption mode × fleet shape
+//! (extension beyond the paper; see DESIGN.md "Memory model").
+//!
+//! Each fleet shape serves its usual offered load (the single standard
+//! device at the saturation-knee rate, the edge-mixed fleet at its ~3
+//! standard-equivalents) under three memory regimes: unconstrained
+//! (the pre-memory baseline — bit-identical to every earlier PR), a
+//! generous capacity that occasionally evicts, and a tight capacity
+//! where the scheduler lives or dies by how it spends cache. At each
+//! constrained point the sweep compares swap vs recompute preemption
+//! and memory-*aware* SLICE (projected KV as a second Alg. 2 knapsack
+//! dimension) against the memory-*oblivious* baseline (same policy,
+//! selection blind to memory, the serving loop's capacity enforcement
+//! thrashing on its behalf). Mixed-fleet cells run with admission +
+//! migration + running-task KV handoff enabled, so `migrated_running`
+//! and handoff totals appear in the JSON. The acceptance thresholds
+//! are asserted in `rust/tests/memory_model.rs` with pysim-validated
+//! margins (EXPERIMENTS.md "Memory sweep").
+
+use anyhow::Result;
+
+use crate::cluster::{FleetSpec, RoutingStrategy};
+use crate::config::ServeConfig;
+use crate::engine::memory::PreemptionMode;
+use crate::metrics::report::{ms2, nan_null, pct, Table};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::hetero_sweep::LOAD_EQUIVALENTS;
+use super::{default_drain, run_fleet};
+
+/// Generous capacity (MiB, standard tier): ~85% of the single-device
+/// knee cell's unconstrained peak (56 MiB measured), evicting only at
+/// bursts.
+pub const HIGH_CAPACITY_MB: u64 = 48;
+/// Tight capacity (MiB, standard tier): ~57% of the unconstrained
+/// peak, forcing sustained eviction — the cell where memory-aware
+/// selection has to earn its keep.
+pub const LOW_CAPACITY_MB: u64 = 32;
+
+/// One (fleet, capacity, preemption mode, awareness) cell.
+#[derive(Debug)]
+pub struct MemoryCell {
+    /// Fleet-shape label ("single" / "edge-mixed").
+    pub fleet: &'static str,
+    /// Standard-tier capacity in MiB (`None` = unconstrained).
+    pub capacity_mb: Option<u64>,
+    /// Preemption mode label.
+    pub mode: &'static str,
+    /// True when SLICE selection carried the KV knapsack dimension.
+    pub aware: bool,
+    /// Fleet-wide attainment (shed tasks count as violations).
+    pub attainment: Attainment,
+    /// Aggregated KV accounting across the fleet.
+    pub memory: crate::engine::memory::MemoryStats,
+    /// Tasks shed by admission control.
+    pub rejected: usize,
+    /// Total migrations (queued + running).
+    pub migrations: u64,
+    /// Running-task KV handoffs.
+    pub migrated_running: u64,
+    /// KV bytes moved by those handoffs.
+    pub handoff_bytes: u64,
+    /// Modelled handoff transfer time total (us).
+    pub handoff_us: u64,
+}
+
+/// Run one cell of the sweep.
+pub fn run_cell(
+    fleet: &'static str,
+    capacity_mb: Option<u64>,
+    mode: PreemptionMode,
+    aware: bool,
+    cfg: &ServeConfig,
+) -> Result<MemoryCell> {
+    let mut cfg = cfg.clone();
+    cfg.memory.kv_capacity = capacity_mb.map(|mb| mb * 1024 * 1024);
+    cfg.memory.mode = mode;
+    cfg.memory.aware = aware;
+    let (spec, workload) = match fleet {
+        "single" => (
+            FleetSpec::homogeneous(1, cfg.cycle_cap),
+            WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+                .generate(),
+        ),
+        "edge-mixed" => {
+            // guards + running handoff on: the regime the tentpole studies
+            cfg.cluster_admission.enabled = true;
+            cfg.cluster_migration = true;
+            cfg.cluster_migrate_running = true;
+            (
+                FleetSpec::preset("edge-mixed")?.with_cycle_cap(cfg.cycle_cap),
+                WorkloadSpec::paper_mix(
+                    cfg.arrival_rate * LOAD_EQUIVALENTS,
+                    cfg.rt_ratio,
+                    cfg.n_tasks * LOAD_EQUIVALENTS as usize,
+                    cfg.seed,
+                )
+                .generate(),
+            )
+        }
+        other => anyhow::bail!("unknown memory-sweep fleet '{other}'"),
+    };
+    let report = run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, default_drain())?;
+    let tasks = report.tasks();
+    Ok(MemoryCell {
+        fleet,
+        capacity_mb,
+        mode: mode.label(),
+        aware,
+        attainment: Attainment::compute(&tasks),
+        memory: report.fleet_memory(),
+        rejected: report.rejected_count(),
+        migrations: report.migrations,
+        migrated_running: report.migrated_running,
+        handoff_bytes: report.handoff_bytes,
+        handoff_us: report.handoff_us,
+    })
+}
+
+/// The pruned cell list: one unconstrained baseline per fleet, then
+/// (swap, aware) / (recompute, aware) / (swap, oblivious) at each
+/// constrained capacity.
+pub fn cells() -> Vec<(&'static str, Option<u64>, PreemptionMode, bool)> {
+    let mut out = Vec::new();
+    for fleet in ["single", "edge-mixed"] {
+        out.push((fleet, None, PreemptionMode::Swap, true));
+        for cap in [HIGH_CAPACITY_MB, LOW_CAPACITY_MB] {
+            out.push((fleet, Some(cap), PreemptionMode::Swap, true));
+            out.push((fleet, Some(cap), PreemptionMode::Recompute, true));
+            out.push((fleet, Some(cap), PreemptionMode::Swap, false));
+        }
+    }
+    out
+}
+
+/// Full sweep; prints the memory table and returns the JSON series.
+pub fn run(cfg: &ServeConfig) -> Result<Json> {
+    let mut rows: Vec<MemoryCell> = Vec::new();
+    for (fleet, cap, mode, aware) in cells() {
+        rows.push(run_cell(fleet, cap, mode, aware, cfg)?);
+    }
+
+    println!(
+        "Memory sweep — policy {:?}, rate {} (x{} on edge-mixed), RT ratio {}, seed {} \
+         (edge-mixed cells: admission + migration + running KV handoff on)\n",
+        cfg.policy, cfg.arrival_rate, LOAD_EQUIVALENTS, cfg.rt_ratio, cfg.seed
+    );
+    let mut t = Table::new(&[
+        "fleet", "capacity", "preempt", "aware", "fleet SLO", "RT SLO", "peak KV",
+        "swaps out/in", "recomp", "run-mig", "handoff",
+    ]);
+    for c in &rows {
+        t.row(vec![
+            c.fleet.to_string(),
+            c.capacity_mb
+                .map_or_else(|| "unlimited".to_string(), |m| format!("{m} MiB")),
+            c.mode.to_string(),
+            if c.aware { "yes" } else { "no" }.to_string(),
+            pct(c.attainment.slo),
+            pct(c.attainment.rt_slo),
+            format!("{:.1} MiB", c.memory.peak_kv_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{}/{}", c.memory.swap_outs, c.memory.swap_ins),
+            c.memory.recomputes.to_string(),
+            c.migrated_running.to_string(),
+            ms2(c.handoff_us as f64 / 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    Ok(Json::from(
+        rows.iter()
+            .map(|c| {
+                Json::obj()
+                    .set("fleet", c.fleet)
+                    .set(
+                        "capacity_mb",
+                        c.capacity_mb.map_or(Json::Null, Json::from),
+                    )
+                    .set("mode", c.mode)
+                    .set("aware", c.aware)
+                    .set("slo", nan_null(c.attainment.slo))
+                    .set("rt_slo", nan_null(c.attainment.rt_slo))
+                    .set("nrt_slo", nan_null(c.attainment.nrt_slo))
+                    .set("n_tasks", c.attainment.n_tasks)
+                    .set("n_finished", c.attainment.n_finished)
+                    .set("peak_kv_bytes", c.memory.peak_kv_bytes)
+                    .set("swap_outs", c.memory.swap_outs)
+                    .set("swap_ins", c.memory.swap_ins)
+                    .set("recomputes", c.memory.recomputes)
+                    .set("handoff_restores", c.memory.handoff_restores)
+                    .set("swap_delay_us", c.memory.swap_delay)
+                    .set("rejected", c.rejected)
+                    .set("migrations", c.migrations)
+                    .set("migrated_running", c.migrated_running)
+                    .set("handoff_bytes", c.handoff_bytes)
+                    .set("handoff_us", c.handoff_us)
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { n_tasks: 20, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn unconstrained_cell_never_swaps() {
+        let c = run_cell("single", None, PreemptionMode::Swap, true, &cfg()).unwrap();
+        assert_eq!(c.memory.swap_outs, 0);
+        assert_eq!(c.memory.swap_delay, 0);
+        assert!(c.memory.peak_kv_bytes > 0, "peak tracked even unconstrained");
+        assert_eq!(c.migrated_running, 0);
+    }
+
+    #[test]
+    fn cell_list_covers_capacity_by_mode_by_fleet() {
+        let all = cells();
+        assert_eq!(all.len(), 14);
+        assert!(all.iter().any(|&(f, c, m, a)| {
+            f == "edge-mixed"
+                && c == Some(LOW_CAPACITY_MB)
+                && m == PreemptionMode::Recompute
+                && a
+        }));
+        // exactly one unconstrained baseline per fleet
+        assert_eq!(all.iter().filter(|&&(_, c, _, _)| c.is_none()).count(), 2);
+    }
+
+    #[test]
+    fn constrained_cell_is_deterministic() {
+        let a = run_cell("single", Some(64), PreemptionMode::Swap, true, &cfg()).unwrap();
+        let b = run_cell("single", Some(64), PreemptionMode::Swap, true, &cfg()).unwrap();
+        assert_eq!(a.attainment.slo, b.attainment.slo);
+        assert_eq!(a.memory, b.memory);
+    }
+}

@@ -25,6 +25,7 @@ pub mod cluster_sweep;
 pub mod dynamic;
 pub mod fig1;
 pub mod hetero_sweep;
+pub mod memory_sweep;
 pub mod rate_sweep;
 pub mod ratio_sweep;
 pub mod static_mix;
@@ -38,9 +39,10 @@ use crate::config::{PolicyKind, ServeConfig};
 use crate::coordinator::fastserve::FastServePolicy;
 use crate::coordinator::orca::OrcaPolicy;
 use crate::coordinator::scheduler::Policy;
-use crate::coordinator::slice::{SliceConfig, SlicePolicy};
+use crate::coordinator::slice::{MemoryBudget, SliceConfig, SlicePolicy};
 use crate::coordinator::task::Task;
 use crate::engine::clock::VirtualClock;
+use crate::engine::memory::KvCacheModel;
 use crate::engine::sim::SimEngine;
 use crate::server::{RunReport, Server};
 use crate::util::{secs, Micros};
@@ -49,18 +51,31 @@ use crate::util::{secs, Micros};
 pub const ALL_POLICIES: [PolicyKind; 3] =
     [PolicyKind::Orca, PolicyKind::FastServe, PolicyKind::Slice];
 
+/// The single-device profile a serve config implies: the paper's
+/// standard device carrying the configured cycle cap and (tier-scaled)
+/// KV capacity.
+pub fn standard_profile(cfg: &ServeConfig) -> DeviceProfile {
+    let mut profile = DeviceProfile::standard();
+    profile.cycle_cap = cfg.cycle_cap;
+    profile.kv_capacity = cfg
+        .memory
+        .kv_capacity
+        .map(|b| (b as f64 * profile.kv_fraction) as u64);
+    profile
+}
+
 /// Instantiate a policy from its kind and the serve config, calibrated
 /// to the paper's standard device (the single-device path).
 pub fn build_policy(kind: PolicyKind, cfg: &ServeConfig) -> Box<dyn Policy> {
-    let mut profile = DeviceProfile::standard();
-    profile.cycle_cap = cfg.cycle_cap;
-    build_policy_for(kind, cfg, &profile)
+    build_policy_for(kind, cfg, &standard_profile(cfg))
 }
 
 /// Instantiate a policy calibrated to one replica's device profile: the
-/// scheduler sees the device's own latency curve, cycle cap and batch
-/// limit (further capped by the configured `max_batch`). For the
-/// standard profile this is exactly the single-device construction.
+/// scheduler sees the device's own latency curve, cycle cap, batch
+/// limit (further capped by the configured `max_batch`) and — when a
+/// finite KV capacity is configured and the policy is memory-aware —
+/// its KV budget. For the standard profile this is exactly the
+/// single-device construction.
 pub fn build_policy_for(
     kind: PolicyKind,
     cfg: &ServeConfig,
@@ -77,6 +92,7 @@ pub fn build_policy_for(
                     cycle_cap: profile.cycle_cap,
                     adaptor: cfg.adaptor,
                     prefill_aware: cfg.prefill_aware,
+                    memory: MemoryBudget::from_config(&cfg.memory, profile.kv_capacity),
                 },
             ))
         }
@@ -87,6 +103,17 @@ pub fn build_policy_for(
             Box::new(FastServePolicy::new(fs_cfg))
         }
     }
+}
+
+/// Build a sim engine calibrated to `profile`, carrying the configured
+/// memory model (unconstrained and free by default).
+pub fn build_engine_for(cfg: &ServeConfig, profile: &DeviceProfile) -> SimEngine {
+    let kv = KvCacheModel::new(
+        cfg.memory.clone(),
+        profile.kv_capacity,
+        profile.latency.clone(),
+    );
+    SimEngine::new(profile.latency.clone(), profile.max_context).with_memory(kv)
 }
 
 /// Run one (policy, workload) pair on the simulation engine in virtual
@@ -100,7 +127,7 @@ pub fn run_sim(
     let last_arrival = workload.last().map_or(0, |t| t.arrival);
     let horizon = last_arrival + drain;
     let policy = build_policy(kind, cfg);
-    let engine = Box::new(SimEngine::paper_calibrated());
+    let engine = Box::new(build_engine_for(cfg, &standard_profile(cfg)));
     Server::new(workload, policy, engine, VirtualClock::new()).run(horizon)
 }
 
@@ -126,8 +153,10 @@ pub fn run_cluster(
 /// Run one (strategy, fleet spec, workload) cluster configuration on
 /// the simulation engine. Every replica gets a fresh policy (from
 /// `cfg.policy`) and a sim engine, both calibrated to its own device
-/// profile; admission control and migration follow the config
-/// (`cluster_admission` / `cluster_migration`, both off by default).
+/// profile — including its tier-scaled KV capacity when the config
+/// constrains memory; admission control and migration follow the
+/// config (`cluster_admission` / `cluster_migration` /
+/// `cluster_migrate_running`, all off by default).
 pub fn run_fleet(
     strategy: RoutingStrategy,
     spec: &FleetSpec,
@@ -135,6 +164,15 @@ pub fn run_fleet(
     cfg: &ServeConfig,
     drain: Micros,
 ) -> Result<ClusterReport> {
+    // thread the configured base capacity into the spec unless the spec
+    // already carries explicit per-replica capacities
+    let spec = if cfg.memory.constrained()
+        && spec.profiles.iter().all(|p| p.kv_capacity.is_none())
+    {
+        spec.clone().with_kv_capacity(cfg.memory.kv_capacity)
+    } else {
+        spec.clone()
+    };
     let fleet: Vec<Replica> = spec
         .profiles
         .iter()
@@ -145,7 +183,7 @@ pub fn run_fleet(
             Replica::new(
                 i,
                 build_policy_for(cfg.policy, cfg, &profile),
-                Box::new(SimEngine::new(profile.latency.clone(), profile.max_context)),
+                Box::new(build_engine_for(cfg, &profile)),
                 profile,
             )
         })
@@ -153,6 +191,7 @@ pub fn run_fleet(
     Router::new(strategy, fleet)
         .with_admission(cfg.cluster_admission)
         .with_migration(cfg.cluster_migration)
+        .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
         .run(workload, drain)
 }
 

@@ -5,9 +5,12 @@
 //!   cluster     — route a workload across a replica fleet (homogeneous
 //!                 or a heterogeneous --fleet spec; round-robin,
 //!                 least-loaded or SLO-aware; optional admission control
-//!                 and overload migration) and report fleet metrics
+//!                 — queue-depth or Eq. 7 headroom — overload migration,
+//!                 KV capacity limits and running-task KV handoff) and
+//!                 report fleet + memory metrics
 //!   experiment  — regenerate a paper table/figure (fig1|table2|fig7|
-//!                 fig8|fig9|fig10|fig11|ablation|cluster|hetero|all)
+//!                 fig8|fig9|fig10|fig11|ablation|cluster|hetero|
+//!                 memory|all)
 //!   calibrate   — measure l(b) on the real PJRT engine and print a
 //!                 machine-local latency model
 //!   info        — print artifact/runtime information
@@ -30,7 +33,6 @@ use slice_serve::engine::latency::LatencyModel;
 use slice_serve::engine::pjrt::PjrtEngine;
 #[cfg(feature = "pjrt")]
 use slice_serve::engine::sampler::Sampler;
-use slice_serve::engine::sim::SimEngine;
 #[cfg(feature = "pjrt")]
 use slice_serve::engine::DecodeEngine;
 use slice_serve::experiments;
@@ -49,17 +51,24 @@ slice-serve — SLO-driven LLM inference scheduling (SLICE reproduction)
 USAGE:
   slice-serve serve [--config <file>] [--policy slice|orca|fastserve]
                     [--engine sim|pjrt] [--artifacts <dir>]
+                    [--kv-capacity <MiB>] [--swap-bandwidth <MB/s>]
+                    [--preemption swap|recompute] [--memory-aware on|off]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
                     [--trace <file>] [--save-trace <file>]
   slice-serve cluster [--config <file>] [--replicas <n>]
                     [--fleet edge-mixed|<tier,tier,...>]  (tiers: standard|lite|nano)
                     [--strategy round-robin|least-loaded|slo-aware]
-                    [--admission on|off] [--rt-queue <n>] [--nrt-queue <n>]
-                    [--migration on|off]
+                    [--admission on|off|depth|headroom]
+                    [--rt-queue <n>] [--nrt-queue <n>]
+                    [--migration on|off] [--migrate-running on|off]
+                    [--kv-capacity <MiB>] [--swap-bandwidth <MB/s>]
+                    [--handoff-bandwidth <MB/s>] [--preemption swap|recompute]
+                    [--memory-aware on|off]
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
   slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
-                    cluster|hetero|all> [--n-tasks <n>] [--seed <n>] [--out <json>]
+                    cluster|hetero|memory|all> [--n-tasks <n>] [--seed <n>]
+                    [--out <json>]
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -141,6 +150,31 @@ fn build_config(args: &Args) -> Result<ServeConfig> {
     if let Some(v) = args.flag_u64("seed")? {
         cfg.seed = v;
     }
+    // [memory] knobs (shared by serve and cluster)
+    if let Some(v) = args.flag_f64("kv-capacity")? {
+        if v <= 0.0 {
+            bail!("--kv-capacity must be positive MiB");
+        }
+        cfg.memory.kv_capacity = Some((v * 1024.0 * 1024.0) as u64);
+    }
+    if let Some(v) = args.flag_f64("swap-bandwidth")? {
+        if v <= 0.0 {
+            bail!("--swap-bandwidth must be positive MB/s");
+        }
+        cfg.memory.swap_bandwidth = (v * 1e6) as u64;
+    }
+    if let Some(v) = args.flag_f64("handoff-bandwidth")? {
+        if v <= 0.0 {
+            bail!("--handoff-bandwidth must be positive MB/s");
+        }
+        cfg.memory.handoff_bandwidth = (v * 1e6) as u64;
+    }
+    if let Some(v) = args.flag("preemption") {
+        cfg.memory.mode = slice_serve::engine::memory::PreemptionMode::parse(v)?;
+    }
+    if let Some(v) = args.flag("memory-aware") {
+        cfg.memory.aware = flag_switch("memory-aware", v)?;
+    }
     Ok(cfg)
 }
 
@@ -177,13 +211,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         EngineKind::Sim => {
             let workload = load_workload(false)?;
             let horizon = workload.last().map_or(0, |t| t.arrival) + secs(300.0);
-            Server::new(
-                workload,
-                policy,
-                Box::new(SimEngine::paper_calibrated()),
-                VirtualClock::new(),
-            )
-            .run(horizon)?
+            // the engine carries the configured memory model (an
+            // unconstrained model by default — bit-identical timings)
+            let engine = experiments::build_engine_for(
+                &cfg,
+                &experiments::standard_profile(&cfg),
+            );
+            Server::new(workload, policy, Box::new(engine), VirtualClock::new())
+                .run(horizon)?
         }
         #[cfg(feature = "pjrt")]
         EngineKind::Pjrt(dir) => {
@@ -212,6 +247,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["real-time SLO attainment".into(), pct(a.rt_slo)]);
     t.row(vec!["non-RT SLO attainment".into(), pct(a.nrt_slo)]);
     t.row(vec!["mean completion (all)".into(), secs2(a.mean_completion_all)]);
+    t.row(vec![
+        "peak KV resident".into(),
+        format!("{:.1} MiB", report.memory.peak_kv_bytes as f64 / (1024.0 * 1024.0)),
+    ]);
+    t.row(vec![
+        "swaps out / in / recompute".into(),
+        format!(
+            "{} / {} / {}",
+            report.memory.swap_outs, report.memory.swap_ins, report.memory.recomputes
+        ),
+    ]);
     println!("{}", t.render());
     Ok(())
 }
@@ -249,7 +295,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let admission_flag = args.flag("admission");
     if let Some(s) = admission_flag {
-        cfg.cluster_admission.enabled = flag_switch("admission", s)?;
+        // on/off keep the configured signal; naming a mode selects it
+        // and opts in
+        match s {
+            "depth" => {
+                cfg.cluster_admission.enabled = true;
+                cfg.cluster_admission.mode = slice_serve::cluster::AdmissionMode::QueueDepth;
+            }
+            "headroom" => {
+                cfg.cluster_admission.enabled = true;
+                cfg.cluster_admission.mode = slice_serve::cluster::AdmissionMode::Headroom;
+            }
+            other => cfg.cluster_admission.enabled = flag_switch("admission", other)?,
+        }
     }
     // a bound flag implies admission unless --admission off was given —
     // a configured bound must never be a silent no-op
@@ -271,8 +329,24 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if bound_set && admission_flag.is_none() {
         cfg.cluster_admission.enabled = true;
     }
+    let headroom_mode =
+        cfg.cluster_admission.mode == slice_serve::cluster::AdmissionMode::Headroom;
+    if bound_set && headroom_mode {
+        // headroom admission never reads the depth bounds — a
+        // configured bound must never be a silent no-op
+        bail!("--rt-queue/--nrt-queue apply to depth admission; use --admission depth");
+    }
     if let Some(s) = args.flag("migration") {
         cfg.cluster_migration = flag_switch("migration", s)?;
+    }
+    if let Some(s) = args.flag("migrate-running") {
+        cfg.cluster_migrate_running = flag_switch("migrate-running", s)?;
+        if cfg.cluster_migrate_running {
+            // running handoff rides on the migration pass it extends:
+            // enabling it always enables migration (same rule as the
+            // [cluster] migrate_running config key)
+            cfg.cluster_migration = true;
+        }
     }
 
     let workload =
@@ -293,7 +367,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let lat = slice_serve::metrics::LatencySummary::compute(&tasks);
     println!(
         "cluster policy={} strategy={} replicas={} tasks={} finished={} steps={} \
-         shed={} migrations={}",
+         shed={} migrations={} (running {})",
         report.policy(),
         report.strategy,
         report.replicas.len(),
@@ -301,7 +375,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         fleet.n_finished,
         report.total_steps(),
         report.rejected_count(),
-        report.migrations
+        report.migrations,
+        report.migrated_running
     );
 
     let mut t = Table::new(&["fleet metric", "value"]);
@@ -327,11 +402,29 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             ms2(lat.tpot.p99_ms)
         ),
     ]);
+    let mem = report.fleet_memory();
+    t.row(vec![
+        "peak KV (fleet sum)".into(),
+        format!("{:.1} MiB", mem.peak_kv_bytes as f64 / (1024.0 * 1024.0)),
+    ]);
+    t.row(vec![
+        "swaps out / in / recompute".into(),
+        format!("{} / {} / {}", mem.swap_outs, mem.swap_ins, mem.recomputes),
+    ]);
+    t.row(vec![
+        "KV handoffs (bytes / time)".into(),
+        format!(
+            "{} ({:.1} MiB / {})",
+            report.migrated_running,
+            report.handoff_bytes as f64 / (1024.0 * 1024.0),
+            ms2(report.handoff_us as f64 / 1e3)
+        ),
+    ]);
     println!("{}", t.render());
 
     let mut per = Table::new(&[
         "replica", "profile", "routed", "migr in/out", "finished", "SLO attainment",
-        "steps", "last completion",
+        "steps", "peak KV", "swaps", "last completion",
     ]);
     for r in &report.replicas {
         let a = Attainment::compute(&r.report.tasks);
@@ -350,6 +443,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             a.n_finished.to_string(),
             pct(a.slo),
             r.report.steps.to_string(),
+            format!(
+                "{:.1} MiB",
+                r.report.memory.peak_kv_bytes as f64 / (1024.0 * 1024.0)
+            ),
+            format!("{}/{}", r.report.memory.swap_outs, r.report.memory.swap_ins),
             secs2(last_completion),
         ]);
     }
@@ -387,6 +485,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "hetero" | "hetero_sweep" => {
             out = out.set("hetero_sweep", experiments::hetero_sweep::run(&cfg)?)
         }
+        "memory" | "memory_sweep" => {
+            out = out.set("memory_sweep", experiments::memory_sweep::run(&cfg)?)
+        }
         "all" => {
             out = out
                 .set("fig1", experiments::fig1::run()?)
@@ -396,7 +497,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 .set("fig11", experiments::rate_sweep::run(&cfg)?)
                 .set("ablation", experiments::ablation::run(&cfg)?)
                 .set("cluster_sweep", experiments::cluster_sweep::run(&cfg)?)
-                .set("hetero_sweep", experiments::hetero_sweep::run(&cfg)?);
+                .set("hetero_sweep", experiments::hetero_sweep::run(&cfg)?)
+                .set("memory_sweep", experiments::memory_sweep::run(&cfg)?);
         }
         other => bail!("unknown experiment '{other}'"),
     }

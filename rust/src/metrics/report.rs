@@ -1,6 +1,7 @@
 //! Report rendering: text tables for the CLI and JSON export for
 //! downstream plotting, shared by every experiment harness.
 
+use crate::engine::memory::MemoryStats;
 use crate::util::json::Json;
 
 use super::{Attainment, LatencySummary, Percentiles};
@@ -119,6 +120,17 @@ pub fn latency_summary_json(s: &LatencySummary) -> Json {
     Json::obj()
         .set("ttft", percentiles_json(&s.ttft))
         .set("tpot", percentiles_json(&s.tpot))
+}
+
+/// JSON encoding of a [`MemoryStats`] (KV peak + transition counters).
+pub fn memory_stats_json(m: &MemoryStats) -> Json {
+    Json::obj()
+        .set("peak_kv_bytes", m.peak_kv_bytes)
+        .set("swap_outs", m.swap_outs)
+        .set("swap_ins", m.swap_ins)
+        .set("recomputes", m.recomputes)
+        .set("handoff_restores", m.handoff_restores)
+        .set("swap_delay_us", m.swap_delay)
 }
 
 #[cfg(test)]

@@ -19,12 +19,13 @@
 
 use std::collections::VecDeque;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::pool::TaskPool;
 use crate::coordinator::scheduler::{Policy, Step};
-use crate::coordinator::task::{Task, TaskId, TaskState};
+use crate::coordinator::task::{Residency, Task, TaskId, TaskState};
 use crate::engine::clock::Clock;
+use crate::engine::memory::MemoryStats;
 use crate::engine::{DecodeEngine, StepOutcome};
 use crate::util::Micros;
 
@@ -43,6 +44,10 @@ pub struct RunReport {
     pub end_time: Micros,
     /// Policy name (for reports).
     pub policy: &'static str,
+    /// KV-cache accounting: resident peak plus swap/recompute/handoff
+    /// transition counters (all zero except the peak unless the run was
+    /// capacity-constrained).
+    pub memory: MemoryStats,
 }
 
 /// Streaming token callback: (task, token byte, timestamp). This is the
@@ -156,9 +161,13 @@ impl<C: Clock> Server<C> {
             }
             t.generated.push(tok.token);
             t.on_token(now);
+            if let Some(kv) = self.engine.kv_model_mut() {
+                kv.note_token(tok.task);
+            }
             if let Some(sink) = &mut self.token_sink {
                 sink(tok.task, tok.token, now);
             }
+            let t = self.pool.get_mut(tok.task);
             if tok.eos && !t.is_finished() {
                 t.finish(now);
             }
@@ -169,9 +178,159 @@ impl<C: Clock> Server<C> {
         if !completed.is_empty() {
             for &id in &completed {
                 self.engine.release(id);
+                self.pool.get_mut(id).residency = Residency::None;
             }
             self.policy.on_completion(&mut self.pool, &completed, now);
         }
+    }
+
+    /// True when the engine models a finite KV capacity the loop must
+    /// enforce.
+    fn memory_constrained(&self) -> bool {
+        self.engine.kv_model().is_some_and(|m| m.constrained())
+    }
+
+    /// The next eviction victim: a resident, unfinished task outside
+    /// `protected`. Deterministic order — paused (descheduled) tasks
+    /// first, then anything else, ascending id — so constrained runs
+    /// reproduce bit-for-bit.
+    fn pick_victim(&self, protected: &[TaskId]) -> Option<TaskId> {
+        self.pool
+            .iter()
+            .filter(|t| {
+                t.residency == Residency::Resident
+                    && !t.is_finished()
+                    && !protected.contains(&t.id)
+            })
+            .map(|t| (u8::from(t.state != TaskState::Paused), t.id))
+            .min()
+            .map(|(_, id)| id)
+    }
+
+    /// Evict one victim outside `protected`, charging the swap-out cost
+    /// and updating the task's residency record. Returns the cost, or
+    /// `None` when nothing outside `protected` is resident.
+    fn evict_one(&mut self, protected: &[TaskId]) -> Option<Micros> {
+        let victim = self.pick_victim(protected)?;
+        let cost = self
+            .engine
+            .kv_model_mut()
+            .expect("eviction only runs with a kv model")
+            .swap_out(victim);
+        let t = self.pool.get_mut(victim);
+        t.residency = Residency::Swapped;
+        t.swap_outs += 1;
+        Some(cost)
+    }
+
+    /// Make room for a prompt of `task` before prefill: evict resident
+    /// tasks (paused first) until the prompt's blocks fit. Returns the
+    /// total transition cost to charge before the prefill pass.
+    fn prepare_prefill(&mut self, task: TaskId) -> Result<Micros> {
+        if !self.memory_constrained() {
+            return Ok(0);
+        }
+        let kv = self.engine.kv_model().expect("constrained model");
+        let cap = kv.capacity().expect("constrained model");
+        let need = kv.bytes_for(self.pool.get(task).prompt_len + 1);
+        if need > cap {
+            bail!(
+                "kv capacity {cap} B cannot hold task {task}'s prompt footprint {need} B"
+            );
+        }
+        let mut cost = 0;
+        while self.engine.kv_model().expect("kv").occupied_bytes() + need > cap {
+            match self.evict_one(&[task]) {
+                Some(c) => cost += c,
+                None => break, // only finished remnants left; release freed them
+            }
+        }
+        Ok(cost)
+    }
+
+    /// Admit a decode batch against the KV capacity: trim the batch to
+    /// the prefix whose post-step footprint fits, evict resident
+    /// non-batch tasks until it does, and restore (swap-in / recompute /
+    /// pay the handoff fee of) every swapped batch member. Returns the
+    /// surviving batch and the total transition cost to charge before
+    /// the decode pass.
+    fn prepare_decode(&mut self, tasks: Vec<TaskId>) -> Result<(Vec<TaskId>, Micros)> {
+        if !self.memory_constrained() {
+            // even an unconstrained destination owes a migrated-in
+            // task's KV-handoff fee before it can decode (the only way
+            // residency is Swapped on an unconstrained device)
+            let mut cost = 0;
+            for &id in &tasks {
+                if self.pool.get(id).residency == Residency::Swapped {
+                    let (tokens, pending) = {
+                        let t = self.pool.get(id);
+                        (t.seq_len(), t.pending_restore)
+                    };
+                    match self.engine.kv_model_mut() {
+                        Some(kv) if pending > 0 => cost += kv.restore(id, tokens, pending),
+                        Some(kv) => kv.insert(id, tokens), // free-link adoption
+                        None => cost += pending,
+                    }
+                    let t = self.pool.get_mut(id);
+                    t.residency = Residency::Resident;
+                    t.pending_restore = 0;
+                    t.swap_ins += 1;
+                }
+            }
+            return Ok((tasks, cost));
+        }
+        let cap = self
+            .engine
+            .kv_model()
+            .and_then(|m| m.capacity())
+            .expect("constrained model");
+        // post-step footprint of the batch prefix that fits
+        let mut kept: Vec<TaskId> = Vec::with_capacity(tasks.len());
+        let mut need: u64 = 0;
+        {
+            let kv = self.engine.kv_model().expect("kv");
+            for &id in &tasks {
+                let b = kv.bytes_for(self.pool.get(id).seq_len() + 1);
+                if need + b <= cap {
+                    need += b;
+                    kept.push(id);
+                } else {
+                    break;
+                }
+            }
+        }
+        if kept.is_empty() {
+            bail!(
+                "kv capacity {cap} B cannot hold a single decode slot \
+                 (task {}'s footprint exceeds it)",
+                tasks[0]
+            );
+        }
+        let mut cost = 0;
+        while self.engine.kv_model().expect("kv").resident_outside(&kept) + need > cap {
+            match self.evict_one(&kept) {
+                Some(c) => cost += c,
+                None => break,
+            }
+        }
+        for &id in &kept {
+            if self.pool.get(id).residency != Residency::Resident {
+                let (tokens, pending) = {
+                    let t = self.pool.get(id);
+                    (t.seq_len(), t.pending_restore)
+                };
+                cost += self
+                    .engine
+                    .kv_model_mut()
+                    .expect("kv")
+                    .restore(id, tokens, pending);
+                let t = self.pool.get_mut(id);
+                t.residency = Residency::Resident;
+                t.pending_restore = 0;
+                t.swap_ins += 1;
+            }
+        }
+        Ok((kept, cost))
     }
 
     /// Execute one non-idle step: drive the engine, advance the clock,
@@ -181,20 +340,38 @@ impl<C: Clock> Server<C> {
         match step {
             Step::Idle => unreachable!("execute_step called with Idle"),
             Step::Prefill { task } => {
+                // capacity enforcement: evictions are charged *before*
+                // the prefill pass, so token timestamps include them
+                let mem_cost = self.prepare_prefill(task)?;
+                if mem_cost > 0 {
+                    self.clock.advance(mem_cost);
+                }
                 self.steps += 1;
                 self.prefill_steps += 1;
                 let outcome = self.engine.prefill(&self.pool, task)?;
                 self.clock.advance(outcome.duration);
                 let end = self.clock.now();
-                {
+                let prompt_len = {
                     let t = self.pool.get_mut(task);
                     t.state = TaskState::Running;
                     t.prefill_end = Some(end);
+                    t.residency = Residency::Resident;
+                    t.prompt_len
+                };
+                if let Some(kv) = self.engine.kv_model_mut() {
+                    kv.insert(task, prompt_len);
                 }
                 self.apply_outcome(outcome, end);
             }
             Step::Decode { tasks } => {
                 assert!(!tasks.is_empty(), "policy returned empty decode batch");
+                // swap-in / recompute / handoff fees and any forced
+                // evictions are paid before the forward pass (pause and
+                // resume are no longer free under a finite capacity)
+                let (tasks, mem_cost) = self.prepare_decode(tasks)?;
+                if mem_cost > 0 {
+                    self.clock.advance(mem_cost);
+                }
                 self.steps += 1;
                 self.decode_steps += 1;
                 let outcome = self.engine.decode(&self.pool, &tasks)?;
@@ -254,9 +431,35 @@ impl<C: Clock> Server<C> {
         }
     }
 
+    /// Extract one delivered, unfinished task for migration to another
+    /// replica (the cluster KV-handoff path). The pool keeps a husk —
+    /// marked `migrated_away`, excluded from scheduling and reports —
+    /// so local ids stay dense; the returned snapshot carries the full
+    /// timing record forward. The policy is told the task left service
+    /// (a completion event), which frees its capacity and, for SLICE,
+    /// triggers the Alg. 4 reschedule a departure implies.
+    pub fn extract_task(&mut self, id: TaskId, now: Micros) -> Task {
+        let snapshot = {
+            let t = self.pool.get_mut(id);
+            assert!(
+                !t.is_finished() && !t.migrated_away,
+                "extracting task {id} twice or after completion"
+            );
+            let snap = t.clone();
+            t.migrated_away = true;
+            t.state = TaskState::Finished;
+            t.residency = Residency::None;
+            snap
+        };
+        self.engine.release(id);
+        self.policy.on_completion(&mut self.pool, &[id], now);
+        snapshot
+    }
+
     /// Consume the server and build the final report at the current
     /// clock (the terminal step of the incremental path).
     pub fn finish(self) -> RunReport {
+        let memory = self.engine.kv_model().map(|m| m.stats()).unwrap_or_default();
         RunReport {
             policy: self.policy.name(),
             end_time: self.clock.now(),
@@ -264,6 +467,7 @@ impl<C: Clock> Server<C> {
             steps: self.steps,
             decode_steps: self.decode_steps,
             prefill_steps: self.prefill_steps,
+            memory,
         }
     }
 }
@@ -429,6 +633,116 @@ mod tests {
         // the server keeps running normally afterwards
         s.run_until(secs(5.0)).unwrap();
         assert_eq!(s.now(), secs(5.0));
+    }
+
+    fn constrained_engine(capacity: u64) -> Box<SimEngine> {
+        use crate::engine::memory::{KvCacheModel, MemoryConfig};
+        let lat = LatencyModel::paper_calibrated();
+        let kv = KvCacheModel::new(
+            MemoryConfig { kv_capacity: Some(capacity), ..MemoryConfig::default() },
+            Some(capacity),
+            lat.clone(),
+        );
+        Box::new(SimEngine::new(lat, 8192).with_memory(kv))
+    }
+
+    #[test]
+    fn memory_accounting_tracks_peak_without_charges_when_roomy() {
+        let workload = vec![mk_task(0, TaskClass::Voice, 0, 10)];
+        let server = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            constrained_engine(64 * 1024 * 1024),
+            VirtualClock::new(),
+        );
+        let report = server.run(secs(60.0)).unwrap();
+        assert!(report.memory.peak_kv_bytes > 0);
+        assert_eq!(report.memory.swap_outs, 0);
+        assert_eq!(report.memory.swap_delay, 0);
+        // completion released the cache: the peak is the only residue
+        assert!(report.tasks[0].is_finished());
+    }
+
+    #[test]
+    fn tight_capacity_charges_swap_latency_on_the_clock() {
+        // two long voice tasks under a capacity that holds only one
+        // cache: the serving loop must evict/restore, and the paid
+        // transitions show up as engine-time (slower completion), not
+        // as free preemption
+        let mk = || {
+            vec![
+                mk_task(0, TaskClass::Voice, 0, 150),
+                mk_task(1, TaskClass::Voice, 0, 150),
+            ]
+        };
+        let free = Server::new(
+            mk(),
+            Box::new(SlicePolicy::with_defaults(LatencyModel::paper_calibrated())),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        )
+        .run(secs(600.0))
+        .unwrap();
+        // each task's cache grows to ~6 MiB; 6 MiB holds one, not two
+        let tight = Server::new(
+            mk(),
+            Box::new(SlicePolicy::with_defaults(LatencyModel::paper_calibrated())),
+            constrained_engine(6 * 1024 * 1024),
+            VirtualClock::new(),
+        )
+        .run(secs(600.0))
+        .unwrap();
+        assert!(tight.memory.swap_outs > 0, "tight cell must evict");
+        assert!(tight.memory.swap_delay > 0, "transitions are not free");
+        assert!(tight.memory.peak_kv_bytes <= 6 * 1024 * 1024);
+        let done = |r: &RunReport| r.tasks.iter().filter_map(|t| t.completion).max();
+        assert!(
+            done(&tight).unwrap() > done(&free).unwrap(),
+            "swap latency must appear in task timings"
+        );
+        let swapped: u32 = tight.tasks.iter().map(|t| t.swap_outs).sum();
+        assert!(swapped > 0, "per-task swap counters recorded");
+    }
+
+    #[test]
+    fn extract_task_leaves_a_husk_and_returns_the_record() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        s.push_arrival(mk_task(0, TaskClass::Voice, 0, 50));
+        s.push_arrival(mk_task(1, TaskClass::Voice, 0, 50));
+        s.run_until(secs(1.0)).unwrap();
+        let now = s.now();
+        let snap = s.extract_task(0, now);
+        assert_eq!(snap.id, 0);
+        assert!(snap.tokens_generated > 0, "partial record travels");
+        assert!(!snap.migrated_away);
+        // the husk is finished-for-scheduling and flagged
+        assert!(s.pool().get(0).migrated_away);
+        assert!(s.pool().get(0).is_finished());
+        // the other task still runs to completion
+        s.run_until(secs(60.0)).unwrap();
+        let report = s.finish();
+        let t1 = &report.tasks[1];
+        assert!(t1.is_finished() && !t1.migrated_away);
+    }
+
+    #[test]
+    #[should_panic]
+    fn extract_finished_task_panics() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        s.push_arrival(mk_task(0, TaskClass::Voice, 0, 5));
+        s.run_until(secs(30.0)).unwrap(); // task 0 finished
+        let now = s.now();
+        let _ = s.extract_task(0, now);
     }
 
     #[test]

@@ -169,6 +169,38 @@ fn cluster_fleet_and_guard_flags() {
 }
 
 #[test]
+fn cluster_memory_flags_and_table_rows() {
+    let out = Command::new(bin())
+        .args([
+            "cluster", "--fleet", "edge-mixed", "--admission", "headroom",
+            "--migrate-running", "on", "--kv-capacity", "32", "--rate", "2.0",
+            "--n-tasks", "40", "--seed", "9",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("peak KV (fleet sum)"), "{text}");
+    assert!(text.contains("swaps out / in / recompute"), "{text}");
+    assert!(text.contains("KV handoffs (bytes / time)"), "{text}");
+    assert!(text.contains("(running "), "running-migration count printed: {text}");
+
+    // bad memory flags are argument-level errors
+    let out = Command::new(bin())
+        .args(["serve", "--kv-capacity", "-3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--kv-capacity"));
+    let out = Command::new(bin())
+        .args(["serve", "--preemption", "drop"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown preemption mode"));
+}
+
+#[test]
 fn unknown_experiment_fails_cleanly() {
     let out = Command::new(bin())
         .args(["experiment", "fig99"])

@@ -1,0 +1,341 @@
+//! KV-cache memory subsystem integration tests: the ISSUE-4 acceptance
+//! contract. Bit-exactness of the unconstrained path (the refactor is
+//! opt-in by construction), the occupancy-never-exceeds-capacity
+//! invariant under arbitrary seeds, swap round-trip determinism,
+//! memory-aware vs memory-oblivious SLICE at the tight capacity cell,
+//! and exactly-once running-task migration with the KV-handoff fee
+//! reflected in task timings. Thresholds validated by the pysim mirror
+//! (EXPERIMENTS.md "Memory sweep"): aware 0.9350 vs oblivious 0.8850 at
+//! single/32 MiB/swap, seed 42.
+
+use slice_serve::cluster::{AdmissionConfig, FleetSpec, RoutingStrategy};
+use slice_serve::config::{PolicyKind, ServeConfig};
+use slice_serve::coordinator::task::Task;
+use slice_serve::engine::memory::{MemoryConfig, PreemptionMode};
+use slice_serve::experiments::memory_sweep::{run_cell, LOW_CAPACITY_MB};
+use slice_serve::experiments::{default_drain, run_fleet, run_sim};
+use slice_serve::workload::WorkloadSpec;
+
+const MIB: u64 = 1024 * 1024;
+
+fn workload(rate: f64, n: usize, seed: u64) -> Vec<Task> {
+    WorkloadSpec::paper_mix(rate, 0.7, n, seed).generate()
+}
+
+fn constrained_cfg(capacity_mb: u64) -> ServeConfig {
+    ServeConfig {
+        memory: MemoryConfig {
+            kv_capacity: Some(capacity_mb * MIB),
+            ..MemoryConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+fn guarded(mut cfg: ServeConfig) -> ServeConfig {
+    cfg.cluster_admission = AdmissionConfig { enabled: true, ..AdmissionConfig::default() };
+    cfg.cluster_migration = true;
+    cfg.cluster_migrate_running = true;
+    cfg
+}
+
+/// A colossal capacity never evicts, so every task record is
+/// bit-identical to the default (unconstrained) run even though the
+/// constrained code paths execute — the refactor is opt-in by
+/// construction, not by luck.
+#[test]
+fn huge_capacity_is_bit_identical_to_unlimited() {
+    for kind in [PolicyKind::Slice, PolicyKind::Orca] {
+        let cfg = ServeConfig { policy: kind, ..ServeConfig::default() };
+        let unlimited =
+            run_sim(kind, workload(1.0, 150, 9), &cfg, default_drain()).unwrap();
+        let huge = {
+            let mut cfg = cfg.clone();
+            cfg.memory.kv_capacity = Some(64 * 1024 * MIB); // 64 GiB
+            run_sim(kind, workload(1.0, 150, 9), &cfg, default_drain()).unwrap()
+        };
+        assert_eq!(unlimited.steps, huge.steps, "{kind:?}");
+        for (a, b) in unlimited.tasks.iter().zip(&huge.tasks) {
+            assert_eq!(a.first_token, b.first_token, "{kind:?}");
+            assert_eq!(a.completion, b.completion);
+            assert_eq!(a.tokens_generated, b.tokens_generated);
+            assert_eq!(a.max_token_gap, b.max_token_gap);
+        }
+        assert_eq!(huge.memory.swap_outs, 0);
+        assert_eq!(huge.memory.swap_delay, 0);
+        // peak accounting works in both (parity with PjrtEngine)
+        assert!(unlimited.memory.peak_kv_bytes > 0);
+        assert_eq!(unlimited.memory.peak_kv_bytes, huge.memory.peak_kv_bytes);
+    }
+}
+
+/// A width-1 unlimited-memory cluster remains bit-exact vs the
+/// single-device path (the satellite's parity requirement), with the
+/// running-handoff flag enabled — an unconstrained device never evicts,
+/// so the flag is inert.
+#[test]
+fn width1_unlimited_cluster_matches_single_device() {
+    let cfg = ServeConfig {
+        cluster_migration: true,
+        cluster_migrate_running: true,
+        ..ServeConfig::default()
+    };
+    let single = run_sim(PolicyKind::Slice, workload(1.0, 120, 9), &cfg, default_drain())
+        .unwrap();
+    let fleet = FleetSpec::homogeneous(1, cfg.cycle_cap);
+    let report = run_fleet(
+        RoutingStrategy::SloAware,
+        &fleet,
+        workload(1.0, 120, 9),
+        &cfg,
+        default_drain(),
+    )
+    .unwrap();
+    assert_eq!(report.migrated_running, 0);
+    assert_eq!(report.total_steps(), single.steps);
+    let tasks = report.tasks();
+    for (a, b) in single.tasks.iter().zip(&tasks) {
+        assert_eq!(a.first_token, b.first_token);
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.tokens_generated, b.tokens_generated);
+    }
+    assert_eq!(
+        report.fleet_memory().peak_kv_bytes,
+        single.memory.peak_kv_bytes,
+        "sim peak KV parity across paths"
+    );
+}
+
+/// The occupancy invariant: under any workload seed, a constrained
+/// run's resident high-water mark never exceeds the configured
+/// capacity, for the memory-aware policy and the oblivious baseline
+/// alike (the serving loop is the enforcement point).
+#[test]
+fn occupancy_never_exceeds_capacity_under_any_seed() {
+    for seed in [1u64, 7, 42, 99] {
+        for aware in [true, false] {
+            let mut cfg = constrained_cfg(32);
+            cfg.memory.aware = aware;
+            let report =
+                run_sim(PolicyKind::Slice, workload(1.0, 120, seed), &cfg, default_drain())
+                    .unwrap();
+            assert!(
+                report.memory.peak_kv_bytes <= 32 * MIB,
+                "seed {seed} aware={aware}: peak {} exceeds capacity",
+                report.memory.peak_kv_bytes
+            );
+            // seed 7's burst pattern happens to peak just under 32 MiB
+            // (measured 31.5 MiB); every other seed must actually evict
+            if seed != 7 {
+                assert!(
+                    report.memory.swap_outs > 0,
+                    "seed {seed} aware={aware}: the 32 MiB cell must evict"
+                );
+            }
+        }
+    }
+    // tier-scaled capacities hold per replica on the mixed fleet
+    let cfg = guarded(constrained_cfg(32));
+    let report = run_fleet(
+        RoutingStrategy::SloAware,
+        &FleetSpec::preset("edge-mixed").unwrap(),
+        workload(3.0, 300, 42),
+        &cfg,
+        default_drain(),
+    )
+    .unwrap();
+    let fractions = [1.0, 1.0, 0.75, 0.5];
+    for (r, f) in report.replicas.iter().zip(fractions) {
+        let cap = (32.0 * f) as u64 * MIB;
+        assert!(
+            r.report.memory.peak_kv_bytes <= cap,
+            "replica {} ({}) peak {} exceeds tier capacity {}",
+            r.replica,
+            r.profile,
+            r.report.memory.peak_kv_bytes,
+            cap
+        );
+    }
+}
+
+/// Swap-out/swap-in round trips preserve determinism: two identical
+/// constrained runs produce identical per-task timing records and
+/// identical transition counters.
+#[test]
+fn swap_roundtrips_are_deterministic() {
+    for mode in [PreemptionMode::Swap, PreemptionMode::Recompute] {
+        let run = || {
+            let mut cfg = constrained_cfg(32);
+            cfg.memory.mode = mode;
+            run_sim(PolicyKind::Slice, workload(1.0, 150, 42), &cfg, default_drain())
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.memory, b.memory, "{mode:?}");
+        assert_eq!(a.steps, b.steps);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.first_token, y.first_token, "{mode:?}");
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.swap_outs, y.swap_outs);
+            assert_eq!(x.swap_ins, y.swap_ins);
+        }
+        // the mode determines which restore counter moves
+        match mode {
+            PreemptionMode::Swap => {
+                assert!(a.memory.swap_ins > 0);
+                assert_eq!(a.memory.recomputes, 0);
+            }
+            PreemptionMode::Recompute => {
+                assert!(a.memory.recomputes > 0);
+                assert_eq!(a.memory.swap_ins, 0);
+            }
+        }
+    }
+}
+
+/// The acceptance threshold: at the tight capacity cell, memory-aware
+/// SLICE (projected KV as a second Alg. 2 knapsack dimension) beats the
+/// memory-oblivious baseline on SLO attainment. Measured (pysim mirror,
+/// seed 42, 32 MiB, swap @ 64 MB/s): aware 0.9350 vs oblivious 0.8850.
+#[test]
+fn memory_aware_slice_beats_oblivious_at_tight_cell() {
+    let cfg = ServeConfig::default();
+    let aware = run_cell(
+        "single",
+        Some(LOW_CAPACITY_MB),
+        PreemptionMode::Swap,
+        true,
+        &cfg,
+    )
+    .unwrap();
+    let oblivious = run_cell(
+        "single",
+        Some(LOW_CAPACITY_MB),
+        PreemptionMode::Swap,
+        false,
+        &cfg,
+    )
+    .unwrap();
+    assert!(
+        aware.attainment.slo > oblivious.attainment.slo + 0.02,
+        "aware {} must beat oblivious {}",
+        aware.attainment.slo,
+        oblivious.attainment.slo
+    );
+    // absolute bands around the measured cells (generous to the 1-ulp
+    // arrival-timestamp caveat recorded in EXPERIMENTS.md)
+    assert!(aware.attainment.slo > 0.92, "aware collapsed: {}", aware.attainment.slo);
+    assert!(
+        oblivious.attainment.slo < 0.91,
+        "oblivious unexpectedly strong: {}",
+        oblivious.attainment.slo
+    );
+    assert!(
+        oblivious.memory.swap_outs > aware.memory.swap_outs,
+        "obliviousness must thrash more ({} vs {})",
+        oblivious.memory.swap_outs,
+        aware.memory.swap_outs
+    );
+}
+
+/// Running-task migration at the constrained mixed cell: handoffs fire,
+/// each task migrates at most once, the modelled transfer time is
+/// accounted, and every task still lands in the report exactly once.
+/// Measured (pysim, seed 42, 32 MiB base): 7 handoffs, ~398 ms total.
+#[test]
+fn running_handoff_fires_exactly_once_with_latency_accounted() {
+    let cfg = guarded(constrained_cfg(32));
+    let n = 600usize;
+    let run = || {
+        run_fleet(
+            RoutingStrategy::SloAware,
+            &FleetSpec::preset("edge-mixed").unwrap(),
+            workload(3.0, n, 42),
+            &cfg,
+            default_drain(),
+        )
+        .unwrap()
+    };
+    let report = run();
+    assert!(report.migrated_running > 0, "constrained knee cell must hand off");
+    assert!(report.migrated_running <= report.migrations);
+    assert!(report.migrations <= n as u64, "a task migrated more than once");
+    assert!(report.handoff_us > 0, "handoff latency must be modelled");
+    assert!(report.handoff_bytes > 0);
+    assert_eq!(
+        report.routed_ids(),
+        (0..n as u64).collect::<Vec<_>>(),
+        "lost or duplicated tasks under running migration"
+    );
+    assert_eq!(
+        report.fleet_memory().handoff_restores,
+        report.migrated_running,
+        "every handoff fee was charged on resume"
+    );
+    // deterministic across identical runs
+    let again = run();
+    assert_eq!(report.migrated_running, again.migrated_running);
+    assert_eq!(report.handoff_us, again.handoff_us);
+    assert_eq!(
+        report.fleet_attainment().slo,
+        again.fleet_attainment().slo
+    );
+}
+
+/// With memory unconstrained, the mixed guarded fleet with the running
+/// flag on reproduces the PR 3 hetero numbers exactly: nothing is ever
+/// evicted, so nothing can be handed off.
+#[test]
+fn unconstrained_mixed_fleet_reproduces_hetero_cell() {
+    let mut base = guarded(ServeConfig::default());
+    base.cluster_migrate_running = false;
+    let with_flag = guarded(ServeConfig::default());
+    let mixed = FleetSpec::preset("edge-mixed").unwrap();
+    let a = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed,
+        workload(3.0, 600, 42),
+        &base,
+        default_drain(),
+    )
+    .unwrap();
+    let b = run_fleet(
+        RoutingStrategy::SloAware,
+        &mixed,
+        workload(3.0, 600, 42),
+        &with_flag,
+        default_drain(),
+    )
+    .unwrap();
+    assert_eq!(b.migrated_running, 0);
+    assert_eq!(a.migrations, b.migrations);
+    let (ta, tb) = (a.tasks(), b.tasks());
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.first_token, y.first_token);
+        assert_eq!(x.completion, y.completion);
+    }
+    // the measured PR 3 band still holds (0.8783 at seed 42)
+    let slo = a.fleet_attainment().slo;
+    assert!(slo > 0.86, "hetero knee cell drifted: {slo}");
+}
+
+/// Recompute preemption prices resumes through the prefill curve and
+/// never touches the swap-in counter; at the tight single-device cell
+/// it matches the swap mode's attainment (measured: both 0.9350 —
+/// restores are cheap relative to the decode work between them).
+#[test]
+fn recompute_mode_restores_via_prefill_and_holds_attainment() {
+    let cfg = ServeConfig::default();
+    let cell = run_cell(
+        "single",
+        Some(LOW_CAPACITY_MB),
+        PreemptionMode::Recompute,
+        true,
+        &cfg,
+    )
+    .unwrap();
+    assert!(cell.memory.recomputes > 0);
+    assert_eq!(cell.memory.swap_ins, 0);
+    assert!(cell.attainment.slo > 0.92, "recompute cell: {}", cell.attainment.slo);
+}

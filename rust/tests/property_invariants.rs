@@ -19,6 +19,7 @@ fn random_candidates(rng: &mut Rng, n: usize) -> Vec<Candidate> {
             id: i as u64,
             utility: rng.range_u64(1, 1000) as f64 / 10.0,
             tpot: rng.range_u64(40, 400) * 1_000,
+            kv_bytes: rng.range_u64(1, 32) * 512 * 1024,
         })
         .collect()
 }
@@ -33,7 +34,7 @@ fn prop_selection_feasible_and_maximal_at_stop() {
         let mut rng = Rng::new(seed);
         let n = rng.range_usize(1, 40);
         let cands = random_candidates(&mut rng, n);
-        let sel = select_tasks(&cands, &lat, CYCLE_CAP);
+        let sel = select_tasks(&cands, &lat, CYCLE_CAP, None);
 
         let mut quotas: Vec<u32> = sel.selected.iter().map(|&(_, q)| q).collect();
         quotas.sort_unstable_by(|a, b| b.cmp(a));
@@ -109,7 +110,7 @@ fn prop_selection_respects_utility_rate_order() {
         let mut rng = Rng::new(3_000_000 + seed);
         let n = rng.range_usize(2, 30);
         let cands = random_candidates(&mut rng, n);
-        let sel = select_tasks(&cands, &lat, CYCLE_CAP);
+        let sel = select_tasks(&cands, &lat, CYCLE_CAP, None);
         if sel.selected.is_empty() || sel.rejected.is_empty() {
             continue;
         }
@@ -132,6 +133,33 @@ fn prop_selection_respects_utility_rate_order() {
         assert!(
             violations <= 1,
             "seed {seed}: {violations} rejected candidates outrank admitted ones"
+        );
+    }
+}
+
+/// The KV knapsack dimension never over-commits the budget, and a
+/// constrained selection is always a prefix of the unconstrained one
+/// (same greedy order, possibly earlier stop).
+#[test]
+fn prop_selection_kv_budget_respected() {
+    let lat = LatencyModel::paper_calibrated();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8_000_000 + seed);
+        let n = rng.range_usize(1, 40);
+        let cands = random_candidates(&mut rng, n);
+        let cap = rng.range_u64(4, 64) * 1024 * 1024;
+        let constrained = select_tasks(&cands, &lat, CYCLE_CAP, Some(cap));
+        let used: u64 = constrained
+            .selected
+            .iter()
+            .map(|&(id, _)| cands[id as usize].kv_bytes)
+            .sum();
+        assert!(used <= cap, "seed {seed}: {used} B over the {cap} B budget");
+        let unconstrained = select_tasks(&cands, &lat, CYCLE_CAP, None);
+        assert_eq!(
+            constrained.selected[..],
+            unconstrained.selected[..constrained.selected.len()],
+            "seed {seed}: constrained selection is not a prefix"
         );
     }
 }

@@ -15,6 +15,13 @@ Stages:
   5. hetero_sweep — fleet mix (uniform-4 vs edge-mixed) x strategy x
      admission/migration guards at the mixed fleet's capacity knee,
      plus the hetero_fleet.rs integration-test cells.
+  6. (inside 5) hetero_fleet.rs threshold validation.
+  7. memory_sweep — KV capacity x preemption mode x fleet shape
+     (memory-aware vs oblivious SLICE, swap vs recompute, running-task
+     KV handoff on the constrained mixed fleet).
+  8. memory_model.rs test-cell validation (bit-exactness of the
+     unconstrained path, aware > oblivious threshold, peak <= capacity,
+     handoff determinism).
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
 """
@@ -29,9 +36,9 @@ sys.path.insert(0, str(Path(__file__).parent))
 
 from slice_sim import (  # noqa: E402
     CYCLE_CAP, AdmissionConfig, DecodeMask, DeviceProfile, LatencyModel,
-    OrcaPolicy, Rng, Server, SlicePolicy, attainment, edge_mixed,
-    latency_summary, paper_mix, period_eq7, run_cluster, run_fleet,
-    select_tasks, secs,
+    MemoryConfig, OrcaPolicy, Rng, Server, SlicePolicy, attainment,
+    edge_mixed, latency_summary, paper_mix, period_eq7, run_cluster,
+    run_fleet, select_tasks, secs,
 )
 
 LAT = LatencyModel.paper_calibrated()
@@ -239,6 +246,102 @@ def hetero_sweep():
     return sweep, cells
 
 
+HIGH_CAPACITY_MB = 48
+LOW_CAPACITY_MB = 32
+
+
+def memory_cell(fleet, cap_mb, mode, aware):
+    """Mirrors experiments::memory_sweep::run_cell (slo-aware strategy;
+    edge-mixed cells run admission + migration + running KV handoff)."""
+    mem = MemoryConfig(
+        kv_capacity=cap_mb * 1024 * 1024 if cap_mb else None,
+        mode=mode, aware=aware)
+    if fleet == "single":
+        profiles = [DeviceProfile.standard()]
+        wl = paper_mix(1.0, 0.7, 200, 42)
+        adm, mig, runmig = None, False, False
+    else:
+        profiles = edge_mixed()
+        wl = paper_mix(3.0, 0.7, 600, 42)
+        adm, mig, runmig = AdmissionConfig(enabled=True), True, True
+    t0 = time.time()
+    tasks, per, router = run_fleet(
+        "slo-aware", profiles, wl, secs(120.0), admission=adm, migration=mig,
+        migrate_running=runmig, memory=mem)
+    wall = time.time() - t0
+    att = attainment(tasks)
+    stats = [r.server.kv.stats() for r in router.replicas]
+    tot = lambda k: sum(s[k] for s in stats)  # noqa: E731
+    return {
+        "fleet": fleet, "capacity_mb": cap_mb, "mode": mode, "aware": aware,
+        "slo": att["slo"], "rt_slo": att["rt_slo"], "nrt_slo": att["nrt_slo"],
+        "n_tasks": att["n_tasks"], "n_finished": att["n_finished"],
+        "peak_kv_bytes": tot("peak_kv_bytes"), "swap_outs": tot("swap_outs"),
+        "swap_ins": tot("swap_ins"), "recomputes": tot("recomputes"),
+        "handoff_restores": tot("handoff_restores"),
+        "swap_delay_us": tot("swap_delay_us"),
+        "per_replica_peak": [s["peak_kv_bytes"] for s in stats],
+        "per_replica_cap": [r.profile.kv_capacity for r in router.replicas],
+        "rejected": len(router.rejected), "migrations": router.migrations,
+        "migrated_running": router.migrated_running,
+        "handoff_bytes": router.handoff_bytes, "handoff_us": router.handoff_us,
+        "harness_wall_s": round(wall, 2),
+    }
+
+
+def memory_sweep():
+    print("stage 7: memory_sweep (SLICE slo-aware; single @ rate 1.0/200 "
+          "tasks, edge-mixed @ 3.0/600 with guards + running KV handoff; "
+          "seed 42; swap 64 MB/s, handoff 125 MB/s)")
+    cells = []
+    for fleet in ("single", "edge-mixed"):
+        plan = [(None, "swap", True)]
+        for cap in (HIGH_CAPACITY_MB, LOW_CAPACITY_MB):
+            plan += [(cap, "swap", True), (cap, "recompute", True),
+                     (cap, "swap", False)]
+        for cap, mode, aware in plan:
+            c = memory_cell(fleet, cap, mode, aware)
+            cells.append(c)
+            print(f"  {fleet:<10} cap={str(cap):>4} {mode:<9} "
+                  f"aware={'y' if aware else 'n'} slo={c['slo']:.4f} "
+                  f"rt={c['rt_slo']:.4f} nrt={c['nrt_slo']:.4f} "
+                  f"peak={c['peak_kv_bytes'] / 2**20:.1f}MiB "
+                  f"so/si/rc={c['swap_outs']}/{c['swap_ins']}/{c['recomputes']} "
+                  f"runmig={c['migrated_running']} "
+                  f"handoff={c['handoff_us'] / 1e3:.0f}ms "
+                  f"({c['harness_wall_s']}s)")
+    print()
+
+    print("stage 8: memory_model.rs test-cell validation")
+    by = {(c["fleet"], c["capacity_mb"], c["mode"], c["aware"]): c for c in cells}
+    base = by[("single", None, "swap", True)]
+    check(abs(base["slo"] - 0.97) < 1e-12 and base["swap_outs"] == 0,
+          "single unlimited == pre-memory width-1 cell (0.9700, no swaps)")
+    aware = by[("single", LOW_CAPACITY_MB, "swap", True)]
+    obliv = by[("single", LOW_CAPACITY_MB, "swap", False)]
+    print(f"  aware={aware['slo']:.4f} vs oblivious={obliv['slo']:.4f} "
+          f"@ {LOW_CAPACITY_MB} MiB")
+    check(aware["slo"] > obliv["slo"] + 0.02,
+          "swap-aware SLICE beats memory-oblivious at the tight cell")
+    for c in cells:
+        if c["capacity_mb"] is not None:
+            caps = c["per_replica_cap"]
+            ok = all(p <= cap for p, cap in zip(c["per_replica_peak"], caps))
+            check(ok, f"peak <= capacity at {c['fleet']}/{c['capacity_mb']}/"
+                      f"{c['mode']}/aware={c['aware']}")
+    mixed = by[("edge-mixed", LOW_CAPACITY_MB, "swap", True)]
+    check(mixed["migrated_running"] > 0 and mixed["handoff_us"] > 0,
+          "constrained mixed cell exercises running KV handoff")
+    unlim_mixed = by[("edge-mixed", None, "swap", True)]
+    check(unlim_mixed["migrated_running"] == 0,
+          "unconstrained fleet never evicts, so never hands off")
+    a = memory_cell("single", LOW_CAPACITY_MB, "swap", True)
+    check(a["slo"] == aware["slo"] and a["swap_outs"] == aware["swap_outs"],
+          "constrained cell deterministic")
+    print()
+    return cells
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
@@ -293,9 +396,11 @@ def main():
     print()
 
     hetero, hetero_cells = hetero_sweep()
+    memory = memory_sweep()
 
     doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
-           "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells}
+           "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells,
+           "memory_sweep": memory}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")

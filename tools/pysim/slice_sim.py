@@ -13,7 +13,9 @@ table). Every algorithm here mirrors the Rust source line by line:
   OrcaPolicy        <- rust/src/coordinator/orca.rs
   Server            <- rust/src/server.rs (run / run_until / withdraw / finish)
   DeviceProfile     <- rust/src/cluster/fleet.rs (tiers, admission bounds)
-  Replica / Router  <- rust/src/cluster/*.rs (staging, admission, migration)
+  Replica / Router  <- rust/src/cluster/*.rs (staging, admission, migration,
+                                              running-task KV handoff)
+  MemoryConfig etc. <- rust/src/engine/memory.rs (KV model, swap/recompute)
   Attainment etc.   <- rust/src/metrics/mod.rs
   WorkloadSpec      <- rust/src/workload/mod.rs
 
@@ -194,6 +196,9 @@ class SloSpec:
 
 WAITING, ADMITTED, RUNNING, PAUSED, FINISHED = range(5)
 
+# Residency (task.rs Residency)
+RES_NONE, RES_RESIDENT, RES_SWAPPED = range(3)
+
 
 @dataclass
 class Task:
@@ -211,6 +216,11 @@ class Task:
     completion: Optional[int] = None
     tokens_generated: int = 0
     max_token_gap: int = 0
+    residency: int = RES_NONE
+    pending_restore: int = 0
+    swap_outs: int = 0
+    swap_ins: int = 0
+    migrated_away: bool = False
 
     def __post_init__(self) -> None:
         if self.slo is None:
@@ -267,6 +277,147 @@ class Task:
     def remaining_tokens(self) -> int:
         return max(0, self.output_len - self.tokens_generated)
 
+    def seq_len(self) -> int:
+        return self.prompt_len + self.tokens_generated
+
+
+# -------------------------------------------------------- memory model ----
+
+
+@dataclass
+class MemoryConfig:
+    """Mirrors engine/memory.rs MemoryConfig."""
+
+    kv_capacity: Optional[int] = None  # standard-tier bytes; None = unlimited
+    bytes_per_token: int = 32 * 1024
+    block_tokens: int = 16
+    swap_bandwidth: int = 64_000_000  # eMMC-class storage swap
+    handoff_bandwidth: int = 125_000_000  # 1 Gbit/s edge link
+    mode: str = "swap"  # "swap" | "recompute"
+    aware: bool = True
+
+    def bytes_for(self, tokens: int) -> int:
+        block = max(1, self.block_tokens)
+        blocks = -(-tokens // block)
+        return blocks * block * self.bytes_per_token
+
+    @staticmethod
+    def transfer_cost(nbytes: int, bandwidth: int) -> int:
+        if bandwidth == 0:
+            return 0
+        return -(-(nbytes * 1_000_000) // bandwidth)
+
+    def handoff_cost(self, tokens: int) -> int:
+        return self.transfer_cost(self.bytes_for(tokens), self.handoff_bandwidth)
+
+    def constrained(self) -> bool:
+        return self.kv_capacity is not None
+
+    def footprint_bytes(self, seq_len: int) -> int:
+        """Current-footprint budget term (slice.rs MemoryBudget)."""
+        return self.bytes_for(seq_len + 1)
+
+
+class KvCacheModel:
+    """Mirrors engine/memory.rs KvCacheModel (slots keyed by local id)."""
+
+    def __init__(self, cfg: MemoryConfig, capacity: Optional[int],
+                 recompute_curve: LatencyModel) -> None:
+        self.cfg = cfg
+        self.capacity = capacity
+        self.curve = recompute_curve
+        self.slots = {}  # local id -> [tokens, resident]
+        self.occupied = 0
+        self.peak = 0
+        self.swap_outs_n = 0
+        self.swap_ins_n = 0
+        self.recomputes_n = 0
+        self.handoff_restores_n = 0
+        self.swap_delay = 0
+
+    def constrained(self) -> bool:
+        return self.capacity is not None
+
+    def bytes_for(self, tokens: int) -> int:
+        return self.cfg.bytes_for(tokens)
+
+    def _bump(self) -> None:
+        if self.occupied > self.peak:
+            self.peak = self.occupied
+
+    def is_resident(self, tid: int) -> bool:
+        s = self.slots.get(tid)
+        return s is not None and s[1]
+
+    def insert(self, tid: int, tokens: int) -> None:
+        assert tid not in self.slots
+        self.occupied += self.bytes_for(tokens)
+        self.slots[tid] = [tokens, True]
+        self._bump()
+
+    def note_token(self, tid: int) -> None:
+        s = self.slots.get(tid)
+        if s is None or not s[1]:
+            return
+        before = s[0]
+        s[0] = before + 1
+        grow = self.bytes_for(before + 1) - self.bytes_for(before)
+        if grow > 0:
+            self.occupied += grow
+            self._bump()
+
+    def release(self, tid: int) -> None:
+        s = self.slots.pop(tid, None)
+        if s is not None and s[1]:
+            self.occupied -= self.bytes_for(s[0])
+
+    def swap_out(self, tid: int) -> int:
+        s = self.slots.get(tid)
+        if s is None or not s[1]:
+            return 0
+        s[1] = False
+        nbytes = self.bytes_for(s[0])
+        self.occupied -= nbytes
+        self.swap_outs_n += 1
+        cost = (MemoryConfig.transfer_cost(nbytes, self.cfg.swap_bandwidth)
+                if self.cfg.mode == "swap" else 0)
+        self.swap_delay += cost
+        return cost
+
+    def restore(self, tid: int, tokens: int, pending: int) -> int:
+        if self.is_resident(tid):
+            return 0
+        nbytes = self.bytes_for(tokens)
+        self.occupied += nbytes
+        self.slots[tid] = [tokens, True]
+        self._bump()
+        if pending > 0:
+            self.handoff_restores_n += 1
+            cost = pending
+        elif self.cfg.mode == "swap":
+            self.swap_ins_n += 1
+            cost = MemoryConfig.transfer_cost(nbytes, self.cfg.swap_bandwidth)
+        else:
+            self.recomputes_n += 1
+            cost = self.curve.prefill(tokens)
+        self.swap_delay += cost
+        return cost
+
+    def resident_outside(self, protected) -> int:
+        prot = set(protected)
+        return sum(self.bytes_for(s[0]) for tid, s in self.slots.items()
+                   if s[1] and tid not in prot)
+
+    def stats(self) -> dict:
+        return {
+            "peak_kv_bytes": self.peak,
+            "swap_outs": self.swap_outs_n,
+            "swap_ins": self.swap_ins_n,
+            "recomputes": self.recomputes_n,
+            "handoff_restores": self.handoff_restores_n,
+            "swap_delay_us": self.swap_delay,
+        }
+
 
 # ------------------------------------------------------------ workload ----
 
@@ -312,16 +463,25 @@ def quota_of(tpot: int) -> int:
     return math.ceil(1e6 / tpot)
 
 
-def select_tasks(candidates, lat: LatencyModel, cycle_cap: int):
-    """candidates: list of (id, utility, tpot). Mirrors Alg. 2."""
+def select_tasks(candidates, lat: LatencyModel, cycle_cap: int,
+                 kv_capacity: Optional[int] = None):
+    """candidates: list of (id, utility, tpot[, kv_bytes]). Mirrors
+    Alg. 2 plus the optional KV knapsack dimension."""
     order = sorted(candidates, key=lambda c: (-(c[1] * (c[2] / 1e6)), c[0]))
     selected: List[Tuple[int, int]] = []
     quotas_desc: List[int] = []
     rejected: List[int] = []
+    kv_used = 0
     stopped = False
-    for cid, _u, tpot in order:
+    for cand in order:
+        cid, _u, tpot = cand[0], cand[1], cand[2]
+        kv_bytes = cand[3] if len(cand) > 3 else 0
         if stopped or len(selected) >= lat.max_batch:
             rejected.append(cid)
+            continue
+        if kv_capacity is not None and kv_used + kv_bytes > kv_capacity:
+            rejected.append(cid)
+            stopped = True
             continue
         q = quota_of(tpot)
         # partition_point(|v| v >= q) on a descending list
@@ -333,6 +493,7 @@ def select_tasks(candidates, lat: LatencyModel, cycle_cap: int):
             rejected.append(cid)
             stopped = True
             continue
+        kv_used += kv_bytes
         selected.append((cid, q))
     return selected, rejected
 
@@ -366,9 +527,15 @@ class DecodeMask:
 class SlicePolicy:
     name = "SLICE"
 
-    def __init__(self, lat: LatencyModel, cycle_cap: int = CYCLE_CAP) -> None:
+    def __init__(self, lat: LatencyModel, cycle_cap: int = CYCLE_CAP,
+                 memory: Optional[MemoryConfig] = None,
+                 kv_capacity: Optional[int] = None) -> None:
         self.lat = lat
         self.cycle_cap = cycle_cap
+        # memory-aware selection only when constrained AND aware
+        self.memory = memory if (memory is not None and memory.aware
+                                 and kv_capacity is not None) else None
+        self.kv_capacity = kv_capacity if self.memory is not None else None
         self.mask: Optional[DecodeMask] = None
         self.col = 0
         self.to_prefill: deque = deque()
@@ -383,10 +550,18 @@ class SlicePolicy:
 
     def _reschedule(self, pool) -> None:
         self.reschedules += 1
-        candidates = [
-            (t.id, t.utility, t.slo.tpot) for t in pool if not t.is_finished()
-        ]
-        selected, rejected = select_tasks(candidates, self.lat, self.cycle_cap)
+        if self.memory is not None:
+            candidates = [
+                (t.id, t.utility, t.slo.tpot,
+                 self.memory.footprint_bytes(t.seq_len()))
+                for t in pool if not t.is_finished()
+            ]
+        else:
+            candidates = [
+                (t.id, t.utility, t.slo.tpot) for t in pool if not t.is_finished()
+            ]
+        selected, rejected = select_tasks(
+            candidates, self.lat, self.cycle_cap, self.kv_capacity)
         self.to_prefill.clear()
         for tid, _q in selected:
             t = pool[tid]
@@ -444,7 +619,9 @@ class OrcaPolicy:
             tid = self.waiting.popleft()
             if pool[tid].is_finished():
                 continue
-            pool[tid].state = ADMITTED
+            # migrated-in tasks arrive prefilled: straight back to decode
+            pool[tid].state = (RUNNING if pool[tid].prefill_end is not None
+                               else ADMITTED)
             self.running.append(tid)
         for tid in self.running:
             if pool[tid].state == ADMITTED:
@@ -459,13 +636,15 @@ class OrcaPolicy:
 class Server:
     """Mirrors server.rs over the sim engine + virtual clock."""
 
-    def __init__(self, workload: List[Task], policy, lat: LatencyModel) -> None:
+    def __init__(self, workload: List[Task], policy, lat: LatencyModel,
+                 kv: Optional[KvCacheModel] = None) -> None:
         assert all(
             a.arrival <= b.arrival for a, b in zip(workload, workload[1:])
         ), "workload must be sorted by arrival"
         self.pool: List[Task] = []
         self.policy = policy
         self.lat = lat
+        self.kv = kv if kv is not None else KvCacheModel(MemoryConfig(), None, lat)
         self.clock = 0
         self.arrivals: deque = deque(workload)
         self.steps = 0
@@ -501,14 +680,113 @@ class Server:
             if t.is_finished():
                 continue
             t.on_token(now)
+            self.kv.note_token(tid)
             if t.is_finished():
                 completed.append(tid)
         if completed:
+            for tid in completed:
+                self.kv.release(tid)
+                self.pool[tid].residency = RES_NONE
             self.policy.on_completion(self.pool, completed, now)
+
+    def _memory_constrained(self) -> bool:
+        return self.kv.constrained()
+
+    def _pick_victim(self, protected) -> Optional[int]:
+        prot = set(protected)
+        best = None
+        for t in self.pool:
+            if (t.residency == RES_RESIDENT and not t.is_finished()
+                    and t.id not in prot):
+                key = (0 if t.state == PAUSED else 1, t.id)
+                if best is None or key < best:
+                    best = key
+        return None if best is None else best[1]
+
+    def _evict_one(self, protected) -> Optional[int]:
+        victim = self._pick_victim(protected)
+        if victim is None:
+            return None
+        cost = self.kv.swap_out(victim)
+        self.pool[victim].residency = RES_SWAPPED
+        self.pool[victim].swap_outs += 1
+        return cost
+
+    def _prepare_prefill(self, tid: int) -> int:
+        if not self._memory_constrained():
+            return 0
+        cap = self.kv.capacity
+        need = self.kv.bytes_for(self.pool[tid].prompt_len + 1)
+        assert need <= cap, "kv capacity below a single prompt footprint"
+        cost = 0
+        while self.kv.occupied + need > cap:
+            c = self._evict_one([tid])
+            if c is None:
+                break
+            cost += c
+        return cost
+
+    def _prepare_decode(self, tids: List[int]):
+        if not self._memory_constrained():
+            # a migrated-in task's handoff fee is owed even here (the
+            # only way residency is Swapped on an unconstrained device)
+            cost = 0
+            for tid in tids:
+                t = self.pool[tid]
+                if t.residency == RES_SWAPPED:
+                    if t.pending_restore > 0:
+                        cost += self.kv.restore(tid, t.seq_len(), t.pending_restore)
+                    else:
+                        self.kv.insert(tid, t.seq_len())
+                    t.residency = RES_RESIDENT
+                    t.pending_restore = 0
+                    t.swap_ins += 1
+            return tids, cost
+        cap = self.kv.capacity
+        kept: List[int] = []
+        need = 0
+        for tid in tids:
+            b = self.kv.bytes_for(self.pool[tid].seq_len() + 1)
+            if need + b <= cap:
+                need += b
+                kept.append(tid)
+            else:
+                break
+        assert kept, "kv capacity below a single decode slot"
+        cost = 0
+        while self.kv.resident_outside(kept) + need > cap:
+            c = self._evict_one(kept)
+            if c is None:
+                break
+            cost += c
+        for tid in kept:
+            t = self.pool[tid]
+            if t.residency != RES_RESIDENT:
+                cost += self.kv.restore(tid, t.seq_len(), t.pending_restore)
+                t.residency = RES_RESIDENT
+                t.pending_restore = 0
+                t.swap_ins += 1
+        return kept, cost
+
+    def extract_task(self, tid: int, now: int) -> Task:
+        import copy
+
+        t = self.pool[tid]
+        assert not t.is_finished() and not t.migrated_away
+        snap = copy.copy(t)
+        t.migrated_away = True
+        t.state = FINISHED
+        t.residency = RES_NONE
+        self.kv.release(tid)
+        self.policy.on_completion(self.pool, [tid], now)
+        return snap
 
     def _execute(self, step) -> None:
         kind, payload = step
         if kind == "prefill":
+            mem_cost = self._prepare_prefill(payload)
+            if mem_cost > 0:
+                self.clock += mem_cost
             self.steps += 1
             self.prefill_steps += 1
             duration = self.lat.prefill(self.pool[payload].prompt_len)
@@ -517,9 +795,14 @@ class Server:
             t = self.pool[payload]
             t.state = RUNNING
             t.prefill_end = end
+            t.residency = RES_RESIDENT
+            self.kv.insert(payload, t.prompt_len)
             self._apply_outcome([payload], end)
         else:
             assert payload, "empty decode batch"
+            payload, mem_cost = self._prepare_decode(payload)
+            if mem_cost > 0:
+                self.clock += mem_cost
             self.steps += 1
             self.decode_steps += 1
             duration = self.lat.decode(len(payload))
@@ -570,6 +853,8 @@ class DeviceProfile:
     max_batch: int
     max_context: int
     cycle_cap: int = CYCLE_CAP
+    kv_fraction: float = 1.0
+    kv_capacity: Optional[int] = None
 
     @staticmethod
     def standard() -> "DeviceProfile":
@@ -578,12 +863,14 @@ class DeviceProfile:
     @staticmethod
     def lite() -> "DeviceProfile":
         return DeviceProfile(
-            "lite", LatencyModel.paper_calibrated().scaled(1.5), 16, 4096)
+            "lite", LatencyModel.paper_calibrated().scaled(1.5), 16, 4096,
+            kv_fraction=0.75)
 
     @staticmethod
     def nano() -> "DeviceProfile":
         return DeviceProfile(
-            "nano", LatencyModel.paper_calibrated().scaled(2.5), 8, 2048)
+            "nano", LatencyModel.paper_calibrated().scaled(2.5), 8, 2048,
+            kv_fraction=0.5)
 
     @staticmethod
     def named(name: str) -> "DeviceProfile":
@@ -602,6 +889,7 @@ class AdmissionConfig:
     """Mirrors cluster/fleet.rs AdmissionConfig (defaults included)."""
 
     enabled: bool = False
+    mode: str = "depth"  # "depth" | "headroom"
     rt_queue_bound: int = 12
     nrt_queue_bound: int = 10
 
@@ -614,9 +902,13 @@ class Replica:
     ids are assigned at push time (delivery order), so migration keeps
     the pool's dense-id contract."""
 
-    def __init__(self, rid: int, make_policy, profile: DeviceProfile) -> None:
+    def __init__(self, rid: int, make_policy, profile: DeviceProfile,
+                 memory: Optional[MemoryConfig] = None) -> None:
         self.id = rid
-        self.server = Server([], make_policy(profile), profile.latency)
+        kv = None
+        if memory is not None:
+            kv = KvCacheModel(memory, profile.kv_capacity, profile.latency)
+        self.server = Server([], make_policy(profile), profile.latency, kv=kv)
         self.global_ids: List[int] = []
         self.staged: List[Task] = []
         self.profile = profile
@@ -662,6 +954,31 @@ class Replica:
         self.migrated_out += len(out)
         return out
 
+    def running_candidates(self, migrated_before):
+        out = []
+        for t in self.server.pool:
+            if t.is_finished() or t.migrated_away or t.prefill_end is None:
+                continue
+            if t.state != PAUSED or t.residency != RES_SWAPPED:
+                continue
+            gid = self.global_ids[t.id]
+            if gid in migrated_before:
+                continue
+            out.append((t.utility, gid, t.slo.tokens_per_cycle(), t.seq_len()))
+        out.sort(key=lambda c: (c[0], c[1]))
+        return out
+
+    def extract_running(self, gid: int, handoff_fee: int) -> Task:
+        local = self.global_ids.index(gid)
+        task = self.server.extract_task(local, self.server.now())
+        task.id = gid
+        task.state = PAUSED
+        task.residency = RES_SWAPPED
+        task.pending_restore = handoff_fee
+        self.routed -= 1
+        self.migrated_out += 1
+        return task
+
     def run_until(self, t: int) -> None:
         due = _partition_point(self.staged, lambda task: task.arrival <= t)
         for task in self.staged[:due]:
@@ -703,9 +1020,10 @@ class Replica:
 
     def finish(self) -> List[Task]:
         assert not self.staged, "finish() with staged arrivals"
-        for t in self.server.pool:
+        kept = [t for t in self.server.pool if not t.migrated_away]
+        for t in kept:
             t.id = self.global_ids[t.id]
-        return self.server.pool
+        return kept
 
 
 def _partition_point(xs, pred) -> int:
@@ -722,23 +1040,35 @@ def _partition_point(xs, pred) -> int:
 class Router:
     def __init__(self, strategy: str, replicas: List[Replica],
                  admission: Optional[AdmissionConfig] = None,
-                 migration: bool = False) -> None:
+                 migration: bool = False,
+                 migrate_running: bool = False,
+                 memory: Optional[MemoryConfig] = None) -> None:
         assert replicas
         assert all(r.id == i for i, r in enumerate(replicas))
         self.strategy = strategy
         self.replicas = replicas
         self.admission = admission or AdmissionConfig()
         self.migration = migration
+        self.migrate_running = migrate_running
+        self.memory = memory or MemoryConfig()
         self.rr_next = 0
         self.migrated = set()
         self.migrations = 0
+        self.migrated_running = 0
+        self.handoff_bytes = 0
+        self.handoff_us = 0
         self.rejected: List[Task] = []
 
     def decide(self, task: Task) -> Optional[int]:
         n = len(self.replicas)
         if self.admission.enabled:
-            bound = self.admission.bound_for(task)
-            admissible = [r.queued_in_class(task.cls) < bound for r in self.replicas]
+            if self.admission.mode == "headroom":
+                quota = task.slo.tokens_per_cycle()
+                admissible = [r.headroom(quota) > 0 for r in self.replicas]
+            else:
+                bound = self.admission.bound_for(task)
+                admissible = [r.queued_in_class(task.cls) < bound
+                              for r in self.replicas]
         else:
             admissible = [True] * n
         if not any(admissible):
@@ -777,6 +1107,31 @@ class Router:
                 self.migrations += 1
                 self.replicas[dst].receive_migrated(task)
 
+    def run_running_migrations(self) -> None:
+        if not self.migration or not self.migrate_running or len(self.replicas) < 2:
+            return
+        for src in range(len(self.replicas)):
+            if not self.replicas[src].overloaded():
+                continue
+            for _u, gid, quota, tokens in \
+                    self.replicas[src].running_candidates(self.migrated):
+                if not self.replicas[src].overloaded():
+                    break
+                dst = self.best_by_headroom(
+                    quota, lambda r: r.id != src and not r.overloaded())
+                if dst is None:
+                    break
+                fee = self.memory.handoff_cost(tokens)
+                if self.replicas[dst].headroom(quota) <= fee:
+                    continue
+                task = self.replicas[src].extract_running(gid, fee)
+                self.migrated.add(gid)
+                self.migrations += 1
+                self.migrated_running += 1
+                self.handoff_bytes += self.memory.bytes_for(tokens)
+                self.handoff_us += fee
+                self.replicas[dst].receive_migrated(task)
+
     def run(self, workload: List[Task], drain: int):
         assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
         last = workload[-1].arrival if workload else 0
@@ -784,6 +1139,7 @@ class Router:
             for r in self.replicas:
                 r.run_until(task.arrival)
             self.run_migrations()
+            self.run_running_migrations()
             pick = self.decide(task)
             if pick is None:
                 self.rejected.append(task)
@@ -800,10 +1156,11 @@ class Router:
         return tasks, per_replica
 
 
-def _default_policy(profile: DeviceProfile):
+def _default_policy(profile: DeviceProfile, memory: Optional[MemoryConfig] = None):
     lat = LatencyModel(profile.latency.points, profile.latency.prefill_points,
                        min(32, profile.max_batch))
-    return SlicePolicy(lat, cycle_cap=profile.cycle_cap)
+    return SlicePolicy(lat, cycle_cap=profile.cycle_cap, memory=memory,
+                       kv_capacity=profile.kv_capacity)
 
 
 def run_cluster(strategy: str, replicas: int, workload: List[Task],
@@ -817,13 +1174,30 @@ def run_cluster(strategy: str, replicas: int, workload: List[Task],
 def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task],
               drain: int, make_policy: Optional[Callable] = None,
               admission: Optional[AdmissionConfig] = None,
-              migration: bool = False):
+              migration: bool = False,
+              migrate_running: bool = False,
+              memory: Optional[MemoryConfig] = None):
     """Mirrors experiments::run_fleet. Returns (tasks, per_replica) plus
     shed/migration counters via the returned router's attributes."""
-    mk = make_policy or _default_policy
-    fleet = [Replica(i, mk, p) for i, p in enumerate(profiles)]
+    # thread the base capacity into a *copy* of the spec (the Rust
+    # run_fleet clones; mutating the caller's profiles would leak stale
+    # capacities across calls) unless it already carries explicit ones
+    if (memory is not None and memory.kv_capacity is not None
+            and all(p.kv_capacity is None for p in profiles)):
+        import copy
+
+        profiles = [copy.copy(p) for p in profiles]
+        for p in profiles:
+            p.kv_capacity = int(memory.kv_capacity * p.kv_fraction)
+    if make_policy is None:
+        def mk(profile):
+            return _default_policy(profile, memory)
+    else:
+        mk = make_policy
+    fleet = [Replica(i, mk, p, memory=memory) for i, p in enumerate(profiles)]
     router = Router("round-robin" if strategy == "rr" else strategy, fleet,
-                    admission=admission, migration=migration)
+                    admission=admission, migration=migration,
+                    migrate_running=migrate_running, memory=memory or MemoryConfig())
     tasks, per = router.run(workload, drain)
     return tasks, per, router
 
