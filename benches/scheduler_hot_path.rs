@@ -15,13 +15,18 @@ use slice_serve::cluster::{DeviceProfile, Replica, Router, RoutingStrategy};
 use slice_serve::config::ServeConfig;
 use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
 use slice_serve::coordinator::pool::TaskPool;
-use slice_serve::coordinator::scheduler::Policy;
-use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
+use slice_serve::coordinator::scheduler::{Policy, Step};
+use slice_serve::coordinator::selection::{
+    select_tasks_reference, select_tasks_with, Candidate, Selection, SelectionScratch,
+    CYCLE_CAP,
+};
 use slice_serve::coordinator::slice::SlicePolicy;
 use slice_serve::coordinator::task::{Task, TaskClass};
+use slice_serve::engine::clock::VirtualClock;
 use slice_serve::engine::latency::LatencyModel;
 use slice_serve::engine::sim::SimEngine;
 use slice_serve::experiments;
+use slice_serve::server::Server;
 use slice_serve::util::bench::{bench, report_header};
 use slice_serve::util::rng::Rng;
 use slice_serve::util::secs;
@@ -58,17 +63,37 @@ fn main() {
     let lat = LatencyModel::paper_calibrated();
     println!("{}", report_header());
 
-    for n in [8usize, 64, 256] {
+    // the PR 5 hot path: reusable scratch + incremental Eq. 7 — this is
+    // exactly how SlicePolicy::reschedule invokes selection, so the
+    // cell tracks what one Alg. 4 admission pass really costs
+    let mut scratch = SelectionScratch::new(lat.clone());
+    let mut sel_out = Selection::default();
+    for n in [8usize, 64, 256, 1024] {
         let cands = candidates(n, 1);
         let r = bench(&format!("selection/select_tasks/{n}"), budget, || {
-            select_tasks(&cands, &lat, CYCLE_CAP, None)
+            select_tasks_with(&mut scratch, &mut sel_out, &cands, CYCLE_CAP, None);
+            sel_out.selected.len()
         });
         println!("{}", r.report_line());
 
         // the memory knapsack dimension rides the same greedy loop; its
         // overhead per decision must stay negligible
         let r = bench(&format!("selection/select_tasks_kv/{n}"), budget, || {
-            select_tasks(&cands, &lat, CYCLE_CAP, Some(96 * 1024 * 1024))
+            select_tasks_with(
+                &mut scratch,
+                &mut sel_out,
+                &cands,
+                CYCLE_CAP,
+                Some(96 * 1024 * 1024),
+            );
+            sel_out.selected.len()
+        });
+        println!("{}", r.report_line());
+
+        // the pre-PR 5 implementation, kept as the speedup reference
+        // (comparator-recomputed sort + O(n) closed form per admission)
+        let r = bench(&format!("selection/select_tasks_ref/{n}"), budget, || {
+            select_tasks_reference(&cands, &lat, CYCLE_CAP, None)
         });
         println!("{}", r.report_line());
     }
@@ -102,6 +127,20 @@ fn main() {
         println!("{}", r.report_line());
     }
 
+    // One reschedule + one scheduling step, with the decode batch
+    // handed back like the serving loop does (Server::execute_step
+    // recycles it), so the cell measures the production steady state.
+    let step_and_recycle = |policy: &mut SlicePolicy, pool: &mut TaskPool| {
+        match policy.next_step(pool, 0) {
+            Step::Decode { tasks } => {
+                let batch = tasks.len();
+                policy.recycle_batch(tasks);
+                batch
+            }
+            _ => 0,
+        }
+    };
+
     // Full online reschedule: the cost paid on every arrival/completion.
     for n in [16usize, 64, 256] {
         let mut pool = pool_with_running(n);
@@ -109,7 +148,68 @@ fn main() {
         let ids: Vec<u64> = (0..n as u64).collect();
         let r = bench(&format!("slice/full_reschedule/{n}"), budget, || {
             policy.on_arrival(&mut pool, &ids, 0);
-            policy.next_step(&mut pool, 0)
+            step_and_recycle(&mut policy, &mut pool)
+        });
+        println!("{}", r.report_line());
+    }
+
+    // The PR 5 acceptance cells: one Alg. 4 reschedule over a deep
+    // queue (scratch-owned, allocation-free) vs the kept reference
+    // pipeline (candidate Vec + comparator-recomputed sort + O(n)
+    // closed form per admission + fresh mask build — what the pre-PR
+    // reschedule allocated and computed).
+    for n in [256usize, 1024] {
+        let mut pool = pool_with_running(n);
+        let mut policy = SlicePolicy::with_defaults(lat.clone());
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let r = bench(&format!("slice/reschedule/{n}"), budget, || {
+            policy.on_arrival(&mut pool, &ids, 0);
+            step_and_recycle(&mut policy, &mut pool)
+        });
+        println!("{}", r.report_line());
+
+        let pool = pool_with_running(n);
+        let r = bench(&format!("slice/reschedule_ref/{n}"), budget, || {
+            let candidates: Vec<Candidate> = pool
+                .iter()
+                .filter(|t| !t.is_finished())
+                .map(|t| Candidate {
+                    id: t.id,
+                    utility: t.utility,
+                    tpot: t.slo.tpot,
+                    kv_bytes: 0,
+                })
+                .collect();
+            let sel = select_tasks_reference(&candidates, &lat, CYCLE_CAP, None);
+            DecodeMask::build(sel.selected).n_tasks()
+        });
+        println!("{}", r.report_line());
+    }
+
+    // One serving-loop step at a deep pool: policy scan + engine decode
+    // + outcome application, stepped through Server::run_until in
+    // decode-sized quanta (tasks are effectively endless so the batch
+    // never drains mid-bench).
+    {
+        let n = 256usize;
+        let workload: Vec<Task> = (0..n as u64)
+            .map(|i| {
+                let class =
+                    if i % 3 == 0 { TaskClass::RealTime } else { TaskClass::Voice };
+                Task::new(i, class, 0, 16, 1_000_000, 1.0)
+            })
+            .collect();
+        let mut server = Server::new(
+            workload,
+            Box::new(SlicePolicy::with_defaults(lat.clone())),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        server.run_until(secs(1.0)).unwrap(); // deliver + prefill warmup
+        let mut until = server.now();
+        let r = bench("server/decode_step/256", budget, || {
+            until += 150_000; // ~one plateau decode step of virtual time
+            server.run_until(until).unwrap();
         });
         println!("{}", r.report_line());
     }
@@ -120,7 +220,7 @@ fn main() {
     policy.on_arrival(&mut pool, &(0..32).collect::<Vec<_>>(), 0);
     let _ = policy.next_step(&mut pool, 0); // trigger the reschedule once
     let r = bench("slice/next_step_steady/32", budget, || {
-        policy.next_step(&mut pool, 0)
+        step_and_recycle(&mut policy, &mut pool)
     });
     println!("{}", r.report_line());
 

@@ -17,6 +17,7 @@
 //! pushed them, so homogeneous runs reproduce bit-for-bit (asserted in
 //! `rust/tests/hetero_fleet.rs`).
 
+use std::cell::RefCell;
 use std::collections::HashSet;
 
 use anyhow::Result;
@@ -44,6 +45,11 @@ pub struct Replica {
     routed: usize,
     migrated_in: u64,
     migrated_out: u64,
+    /// Quota buffer reused by every Eq. 7 headroom/overload evaluation
+    /// (a routing decision evaluates one per replica, so the decision
+    /// loop must not allocate). Interior mutability keeps the
+    /// load-signal methods `&self` for the router's read-only scans.
+    quota_scratch: RefCell<Vec<u32>>,
 }
 
 impl Replica {
@@ -67,6 +73,7 @@ impl Replica {
             routed: 0,
             migrated_in: 0,
             migrated_out: 0,
+            quota_scratch: RefCell::new(Vec::new()),
         }
     }
 
@@ -102,14 +109,21 @@ impl Replica {
         self.staged.len() + self.server.pending_arrivals().count()
     }
 
+    /// Tasks this replica's server has delivered and not yet finished
+    /// (ascending id). Every load signal below walks this live set
+    /// instead of the full historic pool, so a routing decision stays
+    /// O(outstanding work) as completed tasks accumulate.
+    fn live_tasks(&self) -> impl Iterator<Item = &Task> {
+        let pool = self.server.pool();
+        self.server.live_ids().iter().map(move |&id| pool.get(id))
+    }
+
     /// Queued-but-unstarted tasks of one SLO class: staged, undelivered,
     /// or delivered but still waiting for the policy to admit them. This
     /// is the router's admission-control backpressure signal.
     pub fn queued_in_class(&self, class: TaskClass) -> usize {
         let waiting = self
-            .server
-            .pool()
-            .iter()
+            .live_tasks()
             .filter(|t| t.class == class && t.state == TaskState::Waiting)
             .count();
         waiting
@@ -182,9 +196,7 @@ impl Replica {
         migrated_before: &HashSet<TaskId>,
     ) -> Vec<(f64, TaskId, u32, u32)> {
         let mut out: Vec<(f64, TaskId, u32, u32)> = self
-            .server
-            .pool()
-            .iter()
+            .live_tasks()
             .filter(|t| {
                 !t.is_finished()
                     && !t.migrated_away
@@ -270,10 +282,7 @@ impl Replica {
     /// (staged or undelivered). This is the least-loaded routing signal.
     pub fn load_tokens(&self) -> u64 {
         let in_service: u64 = self
-            .server
-            .pool()
-            .iter()
-            .filter(|t| !t.is_finished())
+            .live_tasks()
             .map(|t| t.remaining_tokens() as u64)
             .sum();
         let queued: u64 = self
@@ -285,22 +294,25 @@ impl Replica {
         in_service + queued
     }
 
-    /// Per-cycle token quotas (v_i = ceil(1s / T_TPOT)) of every live
-    /// task on this replica — the Eq. 7 demand the device must serve
-    /// each scheduling cycle.
+    /// Fill `out` with the per-cycle token quotas (v_i = ceil(1s /
+    /// T_TPOT)) of every live task on this replica — the Eq. 7 demand
+    /// the device must serve each scheduling cycle.
+    fn collect_demand(&self, out: &mut Vec<u32>) {
+        out.extend(self.live_tasks().map(|t| t.slo.tokens_per_cycle()));
+        out.extend(
+            self.server
+                .pending_arrivals()
+                .chain(self.staged.iter())
+                .map(|t| t.slo.tokens_per_cycle()),
+        );
+    }
+
+    /// Per-cycle token quotas of every live task on this replica
+    /// (observability; the decision loops use the internal scratch).
     pub fn demand_quotas(&self) -> Vec<u32> {
-        self.server
-            .pool()
-            .iter()
-            .filter(|t| !t.is_finished())
-            .map(|t| t.slo.tokens_per_cycle())
-            .chain(
-                self.server
-                    .pending_arrivals()
-                    .chain(self.staged.iter())
-                    .map(|t| t.slo.tokens_per_cycle()),
-            )
-            .collect()
+        let mut out = Vec::new();
+        self.collect_demand(&mut out);
+        out
     }
 
     /// Scheduling-cycle headroom (Eq. 7) if a task with per-cycle quota
@@ -308,9 +320,13 @@ impl Replica {
     /// {candidate})` under this device's own latency curve and cycle
     /// cap, saturating at zero. The SLO-aware router sends a task where
     /// this is largest, which is where its Eq. 6 utility rate is most
-    /// likely to survive selection.
+    /// likely to survive selection. Runs against the shared quota
+    /// scratch — the routing decision loop evaluates one of these per
+    /// replica and must not allocate.
     pub fn headroom(&self, cand_quota: u32) -> Micros {
-        let mut vs = self.demand_quotas();
+        let mut vs = self.quota_scratch.borrow_mut();
+        vs.clear();
+        self.collect_demand(&mut vs);
         vs.push(cand_quota);
         vs.sort_unstable_by(|a, b| b.cmp(a));
         self.profile
@@ -322,7 +338,9 @@ impl Replica {
     /// cycle its queued demand implies already exceeds the device's
     /// cycle cap. The router's migration pass fires on this.
     pub fn overloaded(&self) -> bool {
-        let mut vs = self.demand_quotas();
+        let mut vs = self.quota_scratch.borrow_mut();
+        vs.clear();
+        self.collect_demand(&mut vs);
         vs.sort_unstable_by(|a, b| b.cmp(a));
         period_eq7(&vs, &self.profile.latency) > self.profile.cycle_cap
     }

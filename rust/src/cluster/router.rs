@@ -114,6 +114,14 @@ pub struct Router {
     /// Prices KV handoffs (bytes per token, link bandwidth).
     memory: MemoryConfig,
     rr_next: usize,
+    /// Admissibility-mask buffer reused across routing decisions (one
+    /// decision runs per arrival — the cluster hot path allocates
+    /// nothing whether or not admission control is on).
+    admission_scratch: Vec<bool>,
+    /// Per-replica headrooms computed by a headroom-admission pass,
+    /// reused by the SLO-aware pick in the same decision so each
+    /// replica's Eq. 7 demand is evaluated once per arrival, not twice.
+    headroom_scratch: Vec<Micros>,
     /// Global ids that have migrated once already (exactly-once cap).
     migrated: HashSet<TaskId>,
     migrations: u64,
@@ -143,6 +151,8 @@ impl Router {
             migrate_running: false,
             memory: MemoryConfig::default(),
             rr_next: 0,
+            admission_scratch: Vec::new(),
+            headroom_scratch: Vec::new(),
             migrated: HashSet::new(),
             migrations: 0,
             migrated_running: 0,
@@ -184,55 +194,83 @@ impl Router {
     /// by least load, then lowest replica index — so cluster runs are
     /// reproducible for a fixed seed.
     pub fn decide(&mut self, task: &Task) -> Option<usize> {
-        // the admissibility mask is only materialized when admission is
-        // on, keeping the default path allocation-free (the bench-
-        // tracked cluster/decide hot path)
-        let mask: Option<Vec<bool>> = if self.admission.enabled {
-            Some(match self.admission.mode {
+        // the admissibility mask lives in a scratch buffer reused
+        // across decisions (temporarily moved out so the strategy arms
+        // below can borrow the router), and is only filled when
+        // admission is on — the bench-tracked cluster/decide hot path
+        // never allocates in steady state
+        let mut mask = std::mem::take(&mut self.admission_scratch);
+        let mut headrooms = std::mem::take(&mut self.headroom_scratch);
+        mask.clear();
+        headrooms.clear();
+        let use_mask = self.admission.enabled;
+        if use_mask {
+            match self.admission.mode {
                 AdmissionMode::QueueDepth => {
                     let bound = self.admission.bound_for(task.class);
-                    self.replicas
-                        .iter()
-                        .map(|r| r.queued_in_class(task.class) < bound)
-                        .collect()
+                    mask.extend(
+                        self.replicas
+                            .iter()
+                            .map(|r| r.queued_in_class(task.class) < bound),
+                    );
                 }
                 AdmissionMode::Headroom => {
+                    // keep the computed headrooms: the SLO-aware pick
+                    // below reuses them, so headroom admission costs
+                    // one Eq. 7 evaluation per replica, not two
                     let quota = task.slo.tokens_per_cycle();
-                    self.replicas.iter().map(|r| r.headroom(quota) > 0).collect()
+                    for r in &self.replicas {
+                        let h = r.headroom(quota);
+                        headrooms.push(h);
+                        mask.push(h > 0);
+                    }
+                }
+            }
+        }
+        let open = |i: usize| !use_mask || mask[i];
+        let pick = if !(0..self.replicas.len()).any(open) {
+            None
+        } else {
+            Some(match self.strategy {
+                RoutingStrategy::RoundRobin => {
+                    // first admissible replica at or after the cursor
+                    let start = self.rr_next;
+                    let n = self.replicas.len();
+                    let k = (0..n)
+                        .find(|&k| open((start + k) % n))
+                        .expect("some replica is admissible");
+                    self.rr_next = start + k + 1;
+                    (start + k) % n
+                }
+                RoutingStrategy::LeastLoaded => self
+                    .replicas
+                    .iter()
+                    .filter(|r| open(r.id()))
+                    .map(|r| (r.load_tokens(), r.id()))
+                    .min()
+                    .map(|(_, id)| id)
+                    .unwrap(),
+                RoutingStrategy::SloAware if !headrooms.is_empty() => self
+                    .replicas
+                    .iter()
+                    .filter(|r| open(r.id()))
+                    .map(|r| {
+                        // same key as best_by_headroom, headroom cached
+                        (std::cmp::Reverse(headrooms[r.id()]), r.load_tokens(), r.id())
+                    })
+                    .min()
+                    .map(|(_, _, id)| id)
+                    .expect("some replica is admissible"),
+                RoutingStrategy::SloAware => {
+                    let quota = task.slo.tokens_per_cycle();
+                    self.best_by_headroom(quota, |r| open(r.id()))
+                        .expect("some replica is admissible")
                 }
             })
-        } else {
-            None
         };
-        let open = |i: usize| mask.as_ref().map_or(true, |m| m[i]);
-        if !(0..self.replicas.len()).any(|i| open(i)) {
-            return None;
-        }
-        Some(match self.strategy {
-            RoutingStrategy::RoundRobin => {
-                // first admissible replica at or after the cursor
-                let start = self.rr_next;
-                let n = self.replicas.len();
-                let k = (0..n)
-                    .find(|&k| open((start + k) % n))
-                    .expect("some replica is admissible");
-                self.rr_next = start + k + 1;
-                (start + k) % n
-            }
-            RoutingStrategy::LeastLoaded => self
-                .replicas
-                .iter()
-                .filter(|r| open(r.id()))
-                .map(|r| (r.load_tokens(), r.id()))
-                .min()
-                .map(|(_, id)| id)
-                .unwrap(),
-            RoutingStrategy::SloAware => {
-                let quota = task.slo.tokens_per_cycle();
-                self.best_by_headroom(quota, |r| open(r.id()))
-                    .expect("some replica is admissible")
-            }
-        })
+        self.admission_scratch = mask;
+        self.headroom_scratch = headrooms;
+        pick
     }
 
     /// The replica with the most Eq. 7 headroom for `quota` among those
@@ -240,12 +278,23 @@ impl Router {
     /// deterministic placement key shared by SLO-aware routing and
     /// migration re-placement). `None` when nothing is eligible.
     fn best_by_headroom<F: Fn(&Replica) -> bool>(&self, quota: u32, eligible: F) -> Option<usize> {
+        self.best_by_headroom_with(quota, eligible).map(|(id, _)| id)
+    }
+
+    /// [`Router::best_by_headroom`] returning the winner's headroom as
+    /// well, so callers comparing it against a fee don't re-evaluate
+    /// the replica's whole Eq. 7 demand.
+    fn best_by_headroom_with<F: Fn(&Replica) -> bool>(
+        &self,
+        quota: u32,
+        eligible: F,
+    ) -> Option<(usize, Micros)> {
         self.replicas
             .iter()
             .filter(|r| eligible(r))
             .map(|r| (std::cmp::Reverse(r.headroom(quota)), r.load_tokens(), r.id()))
             .min()
-            .map(|(_, _, id)| id)
+            .map(|(std::cmp::Reverse(headroom), _, id)| (id, headroom))
     }
 
     /// The migration pass run at each routing boundary: every
@@ -311,13 +360,13 @@ impl Router {
                 if !self.replicas[src].overloaded() {
                     break;
                 }
-                let Some(dst) =
-                    self.best_by_headroom(quota, |r| r.id() != src && !r.overloaded())
+                let Some((dst, dst_headroom)) =
+                    self.best_by_headroom_with(quota, |r| r.id() != src && !r.overloaded())
                 else {
                     break;
                 };
                 let fee = self.memory.handoff_cost(tokens);
-                if self.replicas[dst].headroom(quota) <= fee {
+                if dst_headroom <= fee {
                     // Eq. 7 gain does not cover this cache's transfer; a
                     // later candidate may be smaller, so keep scanning
                     continue;
@@ -440,6 +489,13 @@ impl ClusterReport {
     /// Total engine steps executed across the fleet.
     pub fn total_steps(&self) -> u64 {
         self.replicas.iter().map(|r| r.report.steps).sum()
+    }
+
+    /// Total scheduling decisions (policy reschedules) across the
+    /// fleet — the scale sweep's throughput numerator, alongside one
+    /// routing decision per arrival.
+    pub fn total_decisions(&self) -> u64 {
+        self.replicas.iter().map(|r| r.report.decisions).sum()
     }
 
     /// Fleet-aggregated KV memory accounting: per-replica peaks summed

@@ -34,18 +34,50 @@ impl DecodeMask {
     /// Build the matrix from (task, required tokens/cycle) pairs.
     /// Tasks with v = 0 are rejected (every scheduled task must make
     /// progress each cycle — Eq. 3/4).
-    pub fn build(mut tasks: Vec<(TaskId, u32)>) -> Self {
-        assert!(tasks.iter().all(|&(_, v)| v > 0), "zero-rate task in mask");
+    pub fn build(tasks: Vec<(TaskId, u32)>) -> Self {
+        let mut mask = DecodeMask { rows: tasks, columns: 0, batch_lens: Vec::new() };
+        mask.finish_build();
+        mask
+    }
+
+    /// An empty mask (no scheduled tasks, zero columns). Useful as the
+    /// initial state of a mask that is [`DecodeMask::rebuild`]-ed in
+    /// place on every reschedule.
+    pub fn empty() -> Self {
+        DecodeMask { rows: Vec::new(), columns: 0, batch_lens: Vec::new() }
+    }
+
+    /// Rebuild the matrix in place from a fresh admitted set, reusing
+    /// the row/column buffers (the Alg. 4 reschedule hot path performs
+    /// zero steady-state heap allocation). Produces exactly the matrix
+    /// [`DecodeMask::build`] would.
+    pub fn rebuild(&mut self, tasks: &[(TaskId, u32)]) {
+        self.rows.clear();
+        self.rows.extend_from_slice(tasks);
+        self.finish_build();
+    }
+
+    /// Reset to the empty mask, keeping buffers.
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.columns = 0;
+        self.batch_lens.clear();
+    }
+
+    /// Shared tail of [`DecodeMask::build`] / [`DecodeMask::rebuild`]:
+    /// sort rows and recompute the per-column prefix lengths.
+    fn finish_build(&mut self) {
+        assert!(self.rows.iter().all(|&(_, v)| v > 0), "zero-rate task in mask");
         // stable ordering: quota desc, id asc for determinism
-        tasks.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-        let columns = tasks.first().map_or(0, |&(_, v)| v);
-        let mut batch_lens = Vec::with_capacity(columns as usize);
-        for j in 0..columns {
+        self.rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        self.columns = self.rows.first().map_or(0, |&(_, v)| v);
+        self.batch_lens.clear();
+        self.batch_lens.reserve(self.columns as usize);
+        for j in 0..self.columns {
             // rows sorted desc -> prefix property
-            let n = tasks.partition_point(|&(_, v)| v > j);
-            batch_lens.push(n as u32);
+            let n = self.rows.partition_point(|&(_, v)| v > j);
+            self.batch_lens.push(n as u32);
         }
-        DecodeMask { rows: tasks, columns, batch_lens }
     }
 
     /// True when no tasks are scheduled.
@@ -127,6 +159,163 @@ pub fn period_eq7(vs_sorted_desc: &[u32], l: &LatencyModel) -> Micros {
         t += dv * l.decode(j as u32 + 1);
     }
     t
+}
+
+/// Incrementally maintained Eq. (7) cycle duration over a quota
+/// multiset — the per-admission engine behind
+/// `selection::select_tasks`, costing O(v_max) counter bumps
+/// independent of the queue depth (PR 5; DESIGN.md "Scheduler hot
+/// path").
+///
+/// The closed form rewrites as a column sum against the Δl curve:
+///
+///   T_period = Σ_j l(c(j)) = Σ_b (l(b) − l(b−1)) · v_(b)
+///
+/// where `c(j) = |{i : v_i > j}|` is the batch size of mask column `j`
+/// and `v_(b)` is the b-th largest quota (with l(0) = 0). Inserting a
+/// quota `q` therefore only grows columns `0..q` by one member each:
+/// the period moves by `Σ_{j<q} Δl(c(j)+1)`, touching `q ≤ v_max`
+/// column counters instead of re-evaluating the O(n) closed form over
+/// a freshly re-sorted quota list. `v_max` is bounded by the largest
+/// admissible per-cycle quota (≈ cycle_cap / l(1), ~55 on the paper
+/// curve), so one insert or remove is O(v_max) = O(1) in the number of
+/// queued tasks, with Δl memoised per batch size.
+///
+/// All arithmetic is exact integer addition over the same `Micros`
+/// values `period_eq7` multiplies out, so the maintained period is
+/// bit-identical to the closed form (asserted over randomized
+/// insert/remove sequences in `rust/tests/property_invariants.rs`).
+#[derive(Debug, Clone)]
+pub struct IncrementalPeriod {
+    latency: LatencyModel,
+    /// Memoised Δl: `delta[b-1] = l(b) − l(b−1)` (signed — a measured
+    /// curve from `LatencyModel::from_points` need not be monotone),
+    /// grown lazily as deeper batch sizes are touched.
+    delta: Vec<i64>,
+    /// `cols[j]` = number of live quotas strictly greater than `j`
+    /// (= the decode batch size of mask column `j`).
+    cols: Vec<u32>,
+    /// Number of quotas currently in the multiset.
+    n: usize,
+    /// Maintained Σ_j l(cols[j]), signed only so partial sums of Δl
+    /// stay exact on non-monotone curves; the total is always ≥ 0.
+    period: i64,
+}
+
+impl IncrementalPeriod {
+    /// An empty multiset over `latency`'s decode curve.
+    pub fn new(latency: LatencyModel) -> Self {
+        IncrementalPeriod { latency, delta: Vec::new(), cols: Vec::new(), n: 0, period: 0 }
+    }
+
+    /// The device curve this structure prices columns with.
+    pub fn latency(&self) -> &LatencyModel {
+        &self.latency
+    }
+
+    /// Remove every quota, keeping the memoised Δl table and column
+    /// buffer (the per-reschedule reset).
+    pub fn clear(&mut self) {
+        self.cols.clear();
+        self.n = 0;
+        self.period = 0;
+    }
+
+    /// Number of quotas in the multiset.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when no quotas are held.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The maintained cycle duration — always equal to
+    /// [`period_eq7`] over the current multiset sorted descending.
+    pub fn period(&self) -> Micros {
+        debug_assert!(self.period >= 0, "negative cycle duration");
+        self.period as Micros
+    }
+
+    /// Grow the memoised Δl table to cover batch sizes `1..=b`
+    /// (Δl(b) = l(b) − l(b−1) with l(0) = 0).
+    fn ensure_delta(&mut self, b: u32) {
+        while (self.delta.len() as u32) < b {
+            let next = self.delta.len() as u32 + 1;
+            let hi = self.latency.decode(next) as i64;
+            let lo = if next == 1 { 0 } else { self.latency.decode(next - 1) as i64 };
+            self.delta.push(hi - lo);
+        }
+    }
+
+    /// The period this multiset would have after inserting quota `q`,
+    /// without mutating anything — the selection loop's feasibility
+    /// check. Costs O(min(q, deepest committed quota)): columns beyond
+    /// the materialized prefix are empty, so a deeper probe prices its
+    /// tail in closed form ((q − len) · Δl(1)) instead of walking it —
+    /// a pathological quota (e.g. a hand-written trace with a zero
+    /// TPOT) is rejected without ever materializing q counters.
+    /// Exactly equals [`IncrementalPeriod::insert`]'s return for the
+    /// same `q` (identical integer arithmetic).
+    pub fn probe(&mut self, q: u32) -> Micros {
+        assert!(q > 0, "zero-rate quota in period structure");
+        let deepest = self.cols.first().map_or(1, |&c| c + 1);
+        self.ensure_delta(deepest);
+        let delta = &self.delta;
+        let known = (q as usize).min(self.cols.len());
+        let mut moved: i64 = 0;
+        for &col in &self.cols[..known] {
+            // Δl(col + 1) lives at delta[col]
+            moved += delta[col as usize];
+        }
+        if q as usize > self.cols.len() {
+            // untouched tail columns go 0 -> 1, each costing Δl(1)
+            moved += (q as usize - self.cols.len()) as i64 * delta[0];
+        }
+        let p = self.period + moved;
+        debug_assert!(p >= 0, "negative cycle duration");
+        p as Micros
+    }
+
+    /// Insert one per-cycle quota (v > 0) and return the new period.
+    pub fn insert(&mut self, q: u32) -> Micros {
+        assert!(q > 0, "zero-rate quota in period structure");
+        if self.cols.len() < q as usize {
+            self.cols.resize(q as usize, 0);
+        }
+        // column 0 always holds the largest count, so one table grow
+        // covers every bumped column
+        let deepest = self.cols.first().map_or(1, |&c| c + 1);
+        self.ensure_delta(deepest);
+        let delta = &self.delta;
+        let mut moved: i64 = 0;
+        for col in &mut self.cols[..q as usize] {
+            *col += 1;
+            moved += delta[(*col - 1) as usize];
+        }
+        self.period += moved;
+        self.n += 1;
+        self.period()
+    }
+
+    /// Remove one previously inserted quota (the exact inverse of
+    /// [`IncrementalPeriod::insert`] — selection's rollback path).
+    pub fn remove(&mut self, q: u32) {
+        assert!(
+            q > 0 && self.cols.len() >= q as usize,
+            "removing a quota never inserted"
+        );
+        let delta = &self.delta;
+        let mut moved: i64 = 0;
+        for col in &mut self.cols[..q as usize] {
+            assert!(*col > 0, "removing a quota never inserted");
+            moved += delta[(*col - 1) as usize];
+            *col -= 1;
+        }
+        self.period -= moved;
+        self.n -= 1;
+    }
 }
 
 #[cfg(test)]
@@ -255,5 +444,133 @@ mod tests {
         assert_eq!(m.columns(), 0);
         assert_eq!(m.batch_len(0), 0);
         assert_eq!(m.period_exact(&model()), 0);
+    }
+
+    #[test]
+    fn rebuild_matches_build_and_reuses_buffers() {
+        let sets: [&[(TaskId, u32)]; 4] = [
+            &[(0, 6), (1, 4), (2, 2), (3, 1)],
+            &[(5, 2), (9, 7), (1, 7), (3, 4)],
+            &[(7, 3)],
+            &[(0, 5), (1, 5), (2, 5)],
+        ];
+        let mut reused = DecodeMask::empty();
+        assert!(reused.is_empty());
+        for rows in sets {
+            reused.rebuild(rows);
+            let fresh = DecodeMask::build(rows.to_vec());
+            assert_eq!(reused.rows(), fresh.rows());
+            assert_eq!(reused.columns(), fresh.columns());
+            assert_eq!(reused.as_bit_matrix(), fresh.as_bit_matrix());
+            for j in 0..fresh.columns() + 1 {
+                assert_eq!(reused.batch_len(j), fresh.batch_len(j));
+            }
+            assert_eq!(reused.period_exact(&model()), fresh.period_exact(&model()));
+        }
+        reused.clear();
+        assert!(reused.is_empty());
+        assert_eq!(reused.columns(), 0);
+        assert_eq!(reused.period_exact(&model()), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rebuild_rejects_zero_quota() {
+        let mut m = DecodeMask::empty();
+        m.rebuild(&[(0, 0)]);
+    }
+
+    #[test]
+    fn incremental_period_fig4_example() {
+        let l = model();
+        let mut inc = IncrementalPeriod::new(l.clone());
+        assert!(inc.is_empty());
+        assert_eq!(inc.period(), 0);
+        // insert the Fig. 4 quotas in admission (unsorted) order
+        let mut sorted: Vec<u32> = Vec::new();
+        for q in [4u32, 6, 1, 2] {
+            let probed = inc.probe(q);
+            let p = inc.insert(q);
+            assert_eq!(probed, p, "probe must price the insert exactly");
+            sorted.push(q);
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(p, period_eq7(&sorted, &l), "after inserting {q}");
+            assert_eq!(p, inc.period());
+        }
+        assert_eq!(inc.len(), 4);
+        let m = DecodeMask::build(vec![(0, 6), (1, 4), (2, 2), (3, 1)]);
+        assert_eq!(inc.period(), m.period_exact(&l));
+        // rollback is the exact inverse
+        inc.remove(2);
+        assert_eq!(inc.period(), period_eq7(&[6, 4, 1], &l));
+        inc.remove(6);
+        assert_eq!(inc.period(), period_eq7(&[4, 1], &l));
+        inc.clear();
+        assert!(inc.is_empty());
+        assert_eq!(inc.period(), 0);
+        assert_eq!(inc.insert(5), period_eq7(&[5], &l), "reusable after clear");
+    }
+
+    #[test]
+    fn incremental_period_matches_eq7_randomized_with_removals() {
+        let l = model();
+        let mut rng = crate::util::rng::Rng::new(2025);
+        for case in 0..200 {
+            let mut inc = IncrementalPeriod::new(l.clone());
+            let mut live: Vec<u32> = Vec::new();
+            for _ in 0..rng.range_usize(1, 40) {
+                if !live.is_empty() && rng.chance(0.3) {
+                    let at = rng.range_usize(0, live.len() - 1);
+                    let q = live.swap_remove(at);
+                    inc.remove(q);
+                } else {
+                    let q = rng.range_u64(1, 30) as u32;
+                    live.push(q);
+                    inc.insert(q);
+                }
+                let mut sorted = live.clone();
+                sorted.sort_unstable_by(|a, b| b.cmp(a));
+                assert_eq!(
+                    inc.period(),
+                    period_eq7(&sorted, &l),
+                    "case {case}: live={live:?}"
+                );
+                assert_eq!(inc.len(), live.len());
+            }
+        }
+    }
+
+    #[test]
+    fn probe_prices_deep_tail_without_materializing() {
+        let l = model();
+        let mut inc = IncrementalPeriod::new(l.clone());
+        inc.insert(4);
+        // probing far past the materialized columns prices the empty
+        // tail in closed form: 4 bumped columns + (q - 4) fresh l(1)
+        // columns — and leaves the structure untouched
+        let q = 1_000_000u32;
+        let expected = {
+            let mut vs = vec![4u32, q];
+            vs.sort_unstable_by(|a, b| b.cmp(a));
+            period_eq7(&vs, &l)
+        };
+        assert_eq!(inc.probe(q), expected);
+        assert_eq!(inc.len(), 1, "probe must not mutate");
+        assert_eq!(inc.period(), period_eq7(&[4], &l));
+    }
+
+    #[test]
+    #[should_panic]
+    fn incremental_period_rejects_zero_quota() {
+        let mut inc = IncrementalPeriod::new(model());
+        inc.insert(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn incremental_period_rejects_unmatched_remove() {
+        let mut inc = IncrementalPeriod::new(model());
+        inc.insert(3);
+        inc.remove(5);
     }
 }

@@ -25,11 +25,14 @@ pub mod slice;
 pub mod task;
 
 pub use fastserve::{FastServeConfig, FastServePolicy};
-pub use mask::{period_eq7, DecodeMask};
+pub use mask::{period_eq7, DecodeMask, IncrementalPeriod};
 pub use orca::OrcaPolicy;
 pub use pool::TaskPool;
 pub use preemption::UtilityAdaptor;
 pub use scheduler::{Policy, Step};
-pub use selection::{select_tasks, Candidate, Selection, CYCLE_CAP};
+pub use selection::{
+    select_tasks, select_tasks_reference, select_tasks_with, Candidate, Selection,
+    SelectionScratch, CYCLE_CAP,
+};
 pub use slice::{SliceConfig, SlicePolicy};
 pub use task::{SloSpec, Task, TaskClass, TaskId, TaskState};

@@ -47,4 +47,19 @@ pub trait Policy {
 
     /// Decide the next step. Must not return `Decode` with an empty list.
     fn next_step(&mut self, pool: &mut TaskPool, now: Micros) -> Step;
+
+    /// The serving loop hands the decode-batch buffer back after the
+    /// engine has consumed it, so a policy can reuse the allocation for
+    /// its next [`Step::Decode`] — the steady-state decode scan then
+    /// performs zero heap allocation (DESIGN.md "Scheduler hot path").
+    /// Default: drop the buffer (baselines that build batches their own
+    /// way lose nothing).
+    fn recycle_batch(&mut self, _batch: Vec<TaskId>) {}
+
+    /// Scheduling decisions taken so far — full Alg. 4 reschedules for
+    /// SLICE, zero for policies that don't count (observability for the
+    /// scale sweep; lands in `server::RunReport::decisions`).
+    fn decisions(&self) -> u64 {
+        0
+    }
 }

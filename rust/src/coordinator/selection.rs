@@ -17,11 +17,19 @@
 //! non-replacement semantics of the cycle cap, so a schedule is only
 //! emitted if its resident KV fits the device (cf. the
 //! projected-occupancy admission of SLOs-Serve, arXiv:2504.08784).
+//!
+//! Hot path (DESIGN.md "Scheduler hot path"): the greedy loop runs at
+//! every arrival/departure, so [`select_tasks_with`] evaluates each
+//! admission with the incremental Σ Δl·v structure
+//! ([`super::mask::IncrementalPeriod`]) and reusable scratch buffers —
+//! O(n log n) per reschedule, zero steady-state allocation — while
+//! [`select_tasks_reference`] preserves the pre-optimization O(n²)
+//! path for equivalence tests and the bench trajectory.
 
 use crate::engine::latency::LatencyModel;
 use crate::util::Micros;
 
-use super::mask::period_eq7;
+use super::mask::{period_eq7, IncrementalPeriod};
 use super::task::TaskId;
 
 /// A candidate for selection.
@@ -54,7 +62,7 @@ impl Candidate {
 }
 
 /// Result of one selection round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Selection {
     /// Admitted (task, per-cycle quota), in admission order.
     pub selected: Vec<(TaskId, u32)>,
@@ -69,16 +77,161 @@ pub struct Selection {
 /// cannot honor any admitted task's TPOT SLO (paper §IV-C).
 pub const CYCLE_CAP: Micros = 1_000_000;
 
+/// Reusable working memory for [`select_tasks_with`]: the sort keys,
+/// precomputed quotas and the incremental Eq. 7 structure. Owned by the
+/// caller (e.g. `SlicePolicy`) so a steady-state reschedule performs
+/// zero heap allocation once the buffers have grown to the workload's
+/// high-water mark.
+#[derive(Debug)]
+pub struct SelectionScratch {
+    /// (descending-rate key, id, index into `candidates`): sorting this
+    /// ascending yields utility rate descending, then id ascending,
+    /// then input order — the reference comparator's total order with
+    /// the rate computed once per candidate instead of O(n log n)
+    /// times inside the comparator.
+    keys: Vec<(u64, TaskId, u32)>,
+    /// Per-candidate quota v_i = ceil(1s / T_TPOT), precomputed once.
+    quotas: Vec<u32>,
+    /// Incremental Eq. 7 evaluator over the admitted quotas.
+    period: IncrementalPeriod,
+}
+
+impl SelectionScratch {
+    /// Fresh scratch calibrated to one device curve. The curve both
+    /// prices admissions (Eq. 7) and caps the batch (`max_batch`), so
+    /// it lives with the scratch rather than being re-passed per call.
+    pub fn new(latency: LatencyModel) -> Self {
+        SelectionScratch {
+            keys: Vec::new(),
+            quotas: Vec::new(),
+            period: IncrementalPeriod::new(latency),
+        }
+    }
+
+    /// The device curve selections run against.
+    pub fn latency(&self) -> &LatencyModel {
+        self.period.latency()
+    }
+}
+
+/// Total-order sort key for a utility rate, descending: IEEE-754
+/// doubles order by their sign-adjusted bit pattern, so one integer
+/// compare replaces the reference comparator's two rate recomputations
+/// plus `partial_cmp`. `-0.0` is normalised onto `+0.0` (the reference
+/// treats them as equal and falls through to the id tie-break); NaN
+/// panics exactly like the reference comparator's `unwrap`.
+#[inline]
+fn rate_key_desc(rate: f64) -> u64 {
+    assert!(!rate.is_nan(), "utility rate is NaN");
+    let bits = (rate + 0.0).to_bits();
+    let ascending = if bits >> 63 == 1 { !bits } else { bits | (1 << 63) };
+    !ascending
+}
+
 /// Algorithm 2: greedy utility-rate admission with Eq. (7) feasibility,
 /// plus an optional KV-memory knapsack dimension.
 ///
-/// `max_batch` additionally caps concurrent tasks (device memory limit;
-/// the paper's formulation leaves this implicit in l(b)'s domain).
-/// `kv_capacity` (when finite) bounds the cumulative projected KV
-/// footprint of the admitted set; the first admission overflowing it is
-/// rolled back and terminates selection, mirroring the cycle-cap
-/// semantics.
+/// `max_batch` (carried by the scratch's latency model) additionally
+/// caps concurrent tasks (device memory limit; the paper's formulation
+/// leaves this implicit in l(b)'s domain). `kv_capacity` (when finite)
+/// bounds the cumulative projected KV footprint of the admitted set;
+/// the first admission overflowing it is rolled back and terminates
+/// selection, mirroring the cycle-cap semantics.
+///
+/// This is the allocation-free hot path: results land in `out`
+/// (cleared first) and all working memory lives in `scratch`. One
+/// admission probes and commits O(v_max) column counters instead of
+/// the reference path's O(n) sorted insert + O(n) closed form, so the
+/// greedy loop is O(n log n) overall — the candidate sort — rather
+/// than O(n²) (bit-exact equivalence with [`select_tasks_reference`]
+/// is asserted in `rust/tests/equivalence.rs`).
+pub fn select_tasks_with(
+    scratch: &mut SelectionScratch,
+    out: &mut Selection,
+    candidates: &[Candidate],
+    cycle_cap: Micros,
+    kv_capacity: Option<u64>,
+) {
+    scratch.keys.clear();
+    scratch.quotas.clear();
+    scratch.period.clear();
+    for (idx, c) in candidates.iter().enumerate() {
+        // same expressions as Candidate::utility_rate / Candidate::quota,
+        // evaluated once per candidate before the sort (not inside the
+        // comparator)
+        let rate = c.utility * (c.tpot as f64 / 1e6);
+        scratch.keys.push((rate_key_desc(rate), c.id, idx as u32));
+        scratch.quotas.push((1e6 / c.tpot as f64).ceil() as u32);
+    }
+    // ascending on the packed key = rate desc, id asc, input order —
+    // a total order, so the unstable sort reproduces the reference
+    // path's stable sort exactly
+    scratch.keys.sort_unstable();
+
+    out.selected.clear();
+    out.rejected.clear();
+    out.period = 0;
+    let max_batch = scratch.period.latency().max_batch;
+    let mut kv_used: u64 = 0;
+    let mut stopped = false;
+
+    for &(_, id, idx) in &scratch.keys {
+        if stopped || out.selected.len() as u32 >= max_batch {
+            out.rejected.push(id);
+            continue;
+        }
+        let kv_bytes = candidates[idx as usize].kv_bytes;
+        if let Some(cap) = kv_capacity {
+            if kv_used + kv_bytes > cap {
+                // memory overflow: roll back and terminate, exactly the
+                // non-replacement semantics of the cycle cap below
+                out.rejected.push(id);
+                stopped = true;
+                continue;
+            }
+        }
+        let q = scratch.quotas[idx as usize];
+        // probe-then-commit: a rejected admission never mutates the
+        // structure (non-replacement iteration, Alg. 2 line 13-17),
+        // and a quota too large to ever fit is priced in closed form
+        // without materializing its columns
+        let p = scratch.period.probe(q);
+        if p >= cycle_cap {
+            out.rejected.push(id);
+            stopped = true;
+            continue;
+        }
+        let committed = scratch.period.insert(q);
+        debug_assert_eq!(committed, p, "probe and insert must agree");
+        out.period = committed;
+        kv_used += kv_bytes;
+        out.selected.push((id, q));
+    }
+}
+
+/// Convenience wrapper over [`select_tasks_with`] allocating fresh
+/// scratch and output per call (tests, experiments, one-shot callers).
+/// The serving loop's reschedule path uses the scratch API directly.
 pub fn select_tasks(
+    candidates: &[Candidate],
+    latency: &LatencyModel,
+    cycle_cap: Micros,
+    kv_capacity: Option<u64>,
+) -> Selection {
+    let mut scratch = SelectionScratch::new(latency.clone());
+    let mut out = Selection::default();
+    select_tasks_with(&mut scratch, &mut out, candidates, cycle_cap, kv_capacity);
+    out
+}
+
+/// The pre-PR 5 implementation of Algorithm 2, kept temporarily as the
+/// equivalence/bench reference: re-sorts with rates recomputed inside
+/// the comparator and re-runs the O(n) Eq. 7 closed form after an O(n)
+/// sorted insert per admission. `rust/tests/equivalence.rs` asserts
+/// [`select_tasks`] reproduces it bit-for-bit; the
+/// `selection/select_tasks_ref/*` bench cells track the speedup. Remove
+/// once the perf trajectory is established.
+pub fn select_tasks_reference(
     candidates: &[Candidate],
     latency: &LatencyModel,
     cycle_cap: Micros,
@@ -309,5 +462,81 @@ mod tests {
         let b = select_tasks(&cands, &model(), CYCLE_CAP, None);
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.rejected, b.rejected);
+    }
+
+    #[test]
+    fn pathological_quota_rejected_like_reference() {
+        // a hand-written trace can carry a near-zero TPOT whose quota
+        // (ceil(1e6/tpot)) is enormous; both paths must reject it (and
+        // everything after it, non-replacement) without the fast path
+        // materializing quota-sized column state
+        let mut cands = vec![cand(0, 1.0, 100.0), cand(1, 1.0, 250.0)];
+        cands.insert(1, Candidate { id: 9, utility: 1e9, tpot: 1, kv_bytes: 0 });
+        let fast = select_tasks(&cands, &model(), CYCLE_CAP, None);
+        let reference = select_tasks_reference(&cands, &model(), CYCLE_CAP, None);
+        assert_eq!(fast.selected, reference.selected);
+        assert_eq!(fast.rejected, reference.rejected);
+        assert_eq!(fast.period, reference.period);
+        assert!(fast.rejected.contains(&9));
+    }
+
+    #[test]
+    fn rate_key_orders_like_partial_cmp() {
+        // descending key: bigger rate -> smaller key
+        let rates = [-3.5, -0.0, 0.0, 1e-300, 0.125, 1.0, 5.0, 1e12, f64::INFINITY];
+        for w in rates.windows(2) {
+            assert!(
+                rate_key_desc(w[0]) > rate_key_desc(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        // the reference comparator treats -0.0 == +0.0 and tie-breaks
+        // by id; the packed key must collide the same way
+        assert_eq!(rate_key_desc(-0.0), rate_key_desc(0.0));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_and_reference() {
+        // exercise one scratch across shapes that grow and shrink, with
+        // and without the KV dimension — stale state would corrupt
+        // later rounds
+        let mut scratch = SelectionScratch::new(model());
+        let mut out = Selection::default();
+        let mb = 1024 * 1024;
+        let rounds: Vec<(Vec<Candidate>, Option<u64>)> = vec![
+            ((0..30).map(|i| cand(i, 1.0, 50.0)).collect(), None),
+            (vec![cand(7, 100.0, 50.0)], None),
+            (
+                (0..10)
+                    .map(|i| Candidate {
+                        id: i,
+                        utility: 1.0 + (i % 4) as f64,
+                        tpot: ms(250.0),
+                        kv_bytes: 4 * mb,
+                    })
+                    .collect(),
+                Some(24 * mb),
+            ),
+            (Vec::new(), None),
+            (
+                (0..25)
+                    .map(|i| cand(i, 1.0 + (i % 3) as f64, 50.0 + 10.0 * (i % 5) as f64))
+                    .collect(),
+                None,
+            ),
+        ];
+        for (cands, cap) in rounds {
+            select_tasks_with(&mut scratch, &mut out, &cands, CYCLE_CAP, cap);
+            let fresh = select_tasks(&cands, &model(), CYCLE_CAP, cap);
+            let reference = select_tasks_reference(&cands, &model(), CYCLE_CAP, cap);
+            assert_eq!(out.selected, fresh.selected);
+            assert_eq!(out.rejected, fresh.rejected);
+            assert_eq!(out.period, fresh.period);
+            assert_eq!(out.selected, reference.selected);
+            assert_eq!(out.rejected, reference.rejected);
+            assert_eq!(out.period, reference.period);
+        }
     }
 }

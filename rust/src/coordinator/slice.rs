@@ -19,7 +19,7 @@ use super::mask::DecodeMask;
 use super::pool::TaskPool;
 use super::preemption::UtilityAdaptor;
 use super::scheduler::{Policy, Step};
-use super::selection::{select_tasks, Candidate, Selection, CYCLE_CAP};
+use super::selection::{select_tasks_with, Candidate, Selection, SelectionScratch, CYCLE_CAP};
 use super::task::{TaskId, TaskState};
 
 /// Memory-aware selection parameters (DESIGN.md "Memory model"): the
@@ -90,11 +90,21 @@ impl Default for SliceConfig {
 }
 
 /// The online SLICE policy.
+///
+/// Hot-path note (DESIGN.md "Scheduler hot path"): the policy owns
+/// every buffer the Alg. 4 reschedule and the column scan touch — the
+/// candidate list, the selection scratch (sort keys + incremental
+/// Eq. 7 structure), the selection output, the mask rows and the
+/// decode-batch buffer (recycled by the serving loop via
+/// [`Policy::recycle_batch`]) — so steady-state scheduling performs
+/// zero heap allocation once the buffers reach the workload's
+/// high-water mark.
 pub struct SlicePolicy {
     latency: LatencyModel,
     cfg: SliceConfig,
-    /// Current rate-allocation matrix over the admitted set.
-    mask: Option<DecodeMask>,
+    /// Current rate-allocation matrix over the admitted set (empty =
+    /// nothing scheduled); rebuilt in place at each reschedule.
+    mask: DecodeMask,
     /// Next column to scan.
     col: u32,
     /// Admitted tasks whose prompt has not been prefilled yet.
@@ -104,19 +114,32 @@ pub struct SlicePolicy {
     needs_reschedule: bool,
     /// Reschedule counter (observability / tests).
     pub reschedules: u64,
+    /// Candidate buffer rebuilt from the pool at each reschedule.
+    candidates: Vec<Candidate>,
+    /// Selection working memory (sort keys, quotas, incremental period).
+    scratch: SelectionScratch,
+    /// Selection output, reused across reschedules.
+    sel: Selection,
+    /// Decode-batch buffer, recycled by the serving loop.
+    batch: Vec<TaskId>,
 }
 
 impl SlicePolicy {
     /// Build the policy from a device latency model and config.
     pub fn new(latency: LatencyModel, cfg: SliceConfig) -> Self {
+        let scratch = SelectionScratch::new(latency.clone());
         SlicePolicy {
             latency,
             cfg,
-            mask: None,
+            mask: DecodeMask::empty(),
             col: 0,
             to_prefill: VecDeque::new(),
             needs_reschedule: false,
             reschedules: 0,
+            candidates: Vec::new(),
+            scratch,
+            sel: Selection::default(),
+            batch: Vec::new(),
         }
     }
 
@@ -130,11 +153,20 @@ impl SlicePolicy {
     fn reschedule(&mut self, pool: &mut TaskPool, _now: Micros) {
         self.reschedules += 1;
 
-        // Alg. 4 line 17: adapt utilities before selection.
-        let candidates: Vec<Candidate> = pool
-            .iter()
-            .filter(|t| !t.is_finished())
-            .map(|t| Candidate {
+        // One pass over the pool builds the candidate list (Alg. 4
+        // line 17: adapt utilities before selection) and accumulates
+        // the pending prefill debt the prefill-aware extension charges
+        // against the cycle budget (see SliceConfig).
+        self.candidates.clear();
+        let mut prefill_debt: Micros = 0;
+        for t in pool.iter() {
+            if t.is_finished() {
+                continue;
+            }
+            if self.cfg.prefill_aware && t.prefill_end.is_none() {
+                prefill_debt += self.latency.prefill(t.prompt_len);
+            }
+            self.candidates.push(Candidate {
                 id: t.id,
                 utility: self.cfg.adaptor.effective(t),
                 tpot: t.slo.tpot,
@@ -143,28 +175,25 @@ impl SlicePolicy {
                     .memory
                     .as_ref()
                     .map_or(0, |m| m.footprint_bytes(t.seq_len())),
-            })
-            .collect();
-
-        // Extension: charge pending prefill work against the cycle budget
-        // so a burst of admissions cannot overrun the cap (see SliceConfig).
+            });
+        }
         let cycle_cap = if self.cfg.prefill_aware {
-            let prefill_debt: Micros = pool
-                .iter()
-                .filter(|t| !t.is_finished() && t.prefill_end.is_none())
-                .map(|t| self.latency.prefill(t.prompt_len))
-                .sum();
             self.cfg.cycle_cap.saturating_sub(prefill_debt.min(self.cfg.cycle_cap / 2))
         } else {
             self.cfg.cycle_cap
         };
         let kv_capacity = self.cfg.memory.as_ref().map(|m| m.capacity);
-        let Selection { selected, rejected, .. } =
-            select_tasks(&candidates, &self.latency, cycle_cap, kv_capacity);
+        select_tasks_with(
+            &mut self.scratch,
+            &mut self.sel,
+            &self.candidates,
+            cycle_cap,
+            kv_capacity,
+        );
 
         // Update task states and the prefill queue.
-        self.to_prefill.retain(|_| false);
-        for &(id, _) in &selected {
+        self.to_prefill.clear();
+        for &(id, _) in &self.sel.selected {
             let t = pool.get_mut(id);
             match t.state {
                 TaskState::Waiting | TaskState::Admitted => {
@@ -176,7 +205,7 @@ impl SlicePolicy {
                 TaskState::Finished => unreachable!("finished task selected"),
             }
         }
-        for &id in &rejected {
+        for &id in &self.sel.rejected {
             let t = pool.get_mut(id);
             if matches!(t.state, TaskState::Running | TaskState::Admitted) {
                 // deselected mid-flight: pause (KV retained; decode stops)
@@ -188,21 +217,18 @@ impl SlicePolicy {
             }
         }
 
-        self.mask = if selected.is_empty() {
-            None
+        if self.sel.selected.is_empty() {
+            self.mask.clear();
         } else {
-            Some(DecodeMask::build(selected))
-        };
+            self.mask.rebuild(&self.sel.selected);
+        }
         self.col = 0;
         self.needs_reschedule = false;
     }
 
     /// Currently admitted tasks, in mask order (tests / observability).
     pub fn admitted(&self) -> Vec<TaskId> {
-        self.mask
-            .as_ref()
-            .map(|m| m.rows().iter().map(|&(id, _)| id).collect())
-            .unwrap_or_default()
+        self.mask.rows().iter().map(|&(id, _)| id).collect()
     }
 }
 
@@ -232,28 +258,46 @@ impl Policy for SlicePolicy {
             }
         }
 
-        let Some(mask) = &self.mask else { return Step::Idle };
-        if mask.is_empty() {
+        if self.mask.is_empty() {
             return Step::Idle;
         }
 
         // Column scan: skip columns whose batch is entirely finished
         // (can happen between a completion event and the reschedule).
-        let columns = mask.columns();
+        // The batch is the column's prefix of the mask rows filtered to
+        // running tasks, written into the recycled buffer — the server
+        // hands it back via recycle_batch, so the steady-state scan
+        // allocates nothing.
+        let columns = self.mask.columns();
         for _ in 0..columns {
             let j = self.col;
             self.col = (self.col + 1) % columns;
-            let batch: Vec<TaskId> = mask
-                .column_batch(j)
-                .iter()
-                .map(|&(id, _)| id)
-                .filter(|&id| pool.get(id).state == TaskState::Running)
-                .collect();
-            if !batch.is_empty() {
-                return Step::Decode { tasks: batch };
+            self.batch.clear();
+            self.batch.extend(
+                self.mask
+                    .column_batch(j)
+                    .iter()
+                    .map(|&(id, _)| id)
+                    .filter(|&id| pool.get(id).state == TaskState::Running),
+            );
+            if !self.batch.is_empty() {
+                return Step::Decode { tasks: std::mem::take(&mut self.batch) };
             }
         }
         Step::Idle
+    }
+
+    fn recycle_batch(&mut self, mut batch: Vec<TaskId>) {
+        batch.clear();
+        // keep whichever buffer holds the larger allocation (the server
+        // may hand back a trimmed batch it rebuilt under memory pressure)
+        if batch.capacity() > self.batch.capacity() {
+            self.batch = batch;
+        }
+    }
+
+    fn decisions(&self) -> u64 {
+        self.reschedules
     }
 }
 

@@ -19,6 +19,7 @@
 //! | `ablation`    | design-choice ablations (DESIGN.md)         |
 //! | `cluster_sweep` | routing strategies × replica counts (ext.)|
 //! | `hetero_sweep`  | fleet mix × strategy × admission (ext.)   |
+//! | `scale_sweep`   | scheduler throughput at 1k-10k tasks (ext.)|
 
 pub mod ablation;
 pub mod cluster_sweep;
@@ -28,6 +29,7 @@ pub mod hetero_sweep;
 pub mod memory_sweep;
 pub mod rate_sweep;
 pub mod ratio_sweep;
+pub mod scale_sweep;
 pub mod static_mix;
 
 use anyhow::Result;

@@ -1,0 +1,228 @@
+//! Scale sweep — scheduler throughput at 1k/4k/10k queued tasks
+//! (extension beyond the paper; DESIGN.md "Scheduler hot path").
+//!
+//! The paper's "Challenge 2" is scheduling overhead: Alg. 4 re-runs
+//! selection + rate allocation on *every* arrival and departure, so one
+//! decision must cost far less than one decode step even when thousands
+//! of tasks are queued (cf. the iteration-level schedulers of Orca,
+//! OSDI '22, and Sarathi-Serve, OSDI '24). Each cell floods a fleet
+//! with an n-task burst (the whole workload arrives inside a fixed
+//! window, so the live set grows to ~n), serves it to a drain horizon,
+//! and reports *host* wall time plus decisions-per-second — scheduler
+//! reschedules (and, for fleets, routing decisions) divided by the wall
+//! seconds the whole co-simulation took. Unfinished tasks at the
+//! horizon are expected (the burst is deliberately far past capacity);
+//! the sweep measures scheduling throughput, not attainment.
+//!
+//! Cells: `single` (one standard device, SLICE) and `edge-mixed` (the
+//! 4-replica heterogeneous fleet, SLO-aware routing with Eq. 7
+//! headroom admission + overload migration — the guard configuration
+//! whose per-decision cost scales with the live set).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::{AdmissionMode, FleetSpec, RoutingStrategy};
+use crate::config::{PolicyKind, ServeConfig};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::util::{secs, Micros};
+use crate::workload::WorkloadSpec;
+
+use super::{run_fleet, run_sim};
+
+/// Default task counts the sweep runs (override with `--tasks`).
+pub const DEFAULT_SIZES: [usize; 3] = [1_000, 4_000, 10_000];
+
+/// Virtual seconds the whole burst arrives within — the arrival rate is
+/// `n / ARRIVAL_WINDOW_S`, so the standing queue reaches ~n tasks for
+/// every sweep size.
+pub const ARRIVAL_WINDOW_S: f64 = 120.0;
+
+/// Virtual drain past the last arrival. Short on purpose: the burst is
+/// far past capacity, so the cell measures scheduling throughput under
+/// a maximal live set rather than waiting hours of virtual time for
+/// the backlog to clear.
+pub const DRAIN_S: f64 = 60.0;
+
+/// One (fleet shape, task count) cell.
+#[derive(Debug)]
+pub struct ScaleCell {
+    /// Fleet-shape label ("single" / "edge-mixed").
+    pub fleet: &'static str,
+    /// Workload size.
+    pub n_tasks: usize,
+    /// Offered arrival rate (tasks/s).
+    pub rate: f64,
+    /// Host wall-clock seconds for the whole co-simulation.
+    pub wall_s: f64,
+    /// Virtual span of the run (seconds).
+    pub virtual_s: f64,
+    /// Scheduling decisions: policy reschedules plus (for fleets) one
+    /// routing decision per arrival.
+    pub decisions: u64,
+    /// `decisions / wall_s`.
+    pub decisions_per_sec: f64,
+    /// Engine steps executed.
+    pub steps: u64,
+    /// `steps / wall_s`.
+    pub steps_per_sec: f64,
+    /// Tasks finished by the horizon (the rest count as violations).
+    pub finished: usize,
+    /// Tasks shed by admission control (edge-mixed cells).
+    pub rejected: usize,
+    /// SLO attainment at the horizon (expected low: the burst is
+    /// deliberately past capacity).
+    pub slo: f64,
+}
+
+/// Run one cell of the sweep.
+pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Result<ScaleCell> {
+    let mut cfg = cfg.clone();
+    cfg.n_tasks = n_tasks;
+    cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
+    cfg.policy = PolicyKind::Slice;
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let drain: Micros = secs(DRAIN_S);
+
+    let start = Instant::now();
+    let (decisions, steps, end_time, finished, rejected, slo) = match fleet {
+        "single" => {
+            let report = run_sim(PolicyKind::Slice, workload, &cfg, drain)?;
+            let a = Attainment::compute(&report.tasks);
+            (report.decisions, report.steps, report.end_time, a.n_finished, 0, a.slo)
+        }
+        "edge-mixed" => {
+            // headroom admission + overload migration: the guard
+            // configuration whose routing cost scales with live work
+            cfg.cluster_admission.enabled = true;
+            cfg.cluster_admission.mode = AdmissionMode::Headroom;
+            cfg.cluster_migration = true;
+            let spec = FleetSpec::preset("edge-mixed")?.with_cycle_cap(cfg.cycle_cap);
+            let report =
+                run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, drain)?;
+            let tasks = report.tasks();
+            let a = Attainment::compute(&tasks);
+            let end = report
+                .replicas
+                .iter()
+                .map(|r| r.report.end_time)
+                .max()
+                .unwrap_or(0);
+            (
+                // one routing decision per arrival plus every replica's
+                // reschedules
+                report.total_decisions() + a.n_tasks as u64,
+                report.total_steps(),
+                end,
+                a.n_finished,
+                report.rejected_count(),
+                a.slo,
+            )
+        }
+        other => anyhow::bail!("unknown scale-sweep fleet '{other}'"),
+    };
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    Ok(ScaleCell {
+        fleet,
+        n_tasks,
+        rate: cfg.arrival_rate,
+        wall_s,
+        virtual_s: end_time as f64 / 1e6,
+        decisions,
+        decisions_per_sec: decisions as f64 / wall_s,
+        steps,
+        steps_per_sec: steps as f64 / wall_s,
+        finished,
+        rejected,
+        slo,
+    })
+}
+
+/// Full sweep over `sizes`; prints the throughput table and returns
+/// the JSON series (BENCH_5.json shape).
+pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
+    use crate::metrics::report::{nan_null, pct, Table};
+
+    let mut rows: Vec<ScaleCell> = Vec::new();
+    for &n in sizes {
+        for fleet in ["single", "edge-mixed"] {
+            rows.push(run_cell(fleet, n, cfg)?);
+        }
+    }
+
+    println!(
+        "Scale sweep — SLICE, {ARRIVAL_WINDOW_S:.0}s arrival window, \
+         {DRAIN_S:.0}s drain, seed {} (edge-mixed: slo-aware + headroom \
+         admission + migration)\n",
+        cfg.seed
+    );
+    let mut t = Table::new(&[
+        "fleet", "tasks", "rate/s", "wall s", "decisions", "decisions/s", "steps",
+        "steps/s", "finished", "shed", "SLO",
+    ]);
+    for c in &rows {
+        t.row(vec![
+            c.fleet.to_string(),
+            c.n_tasks.to_string(),
+            format!("{:.1}", c.rate),
+            format!("{:.3}", c.wall_s),
+            c.decisions.to_string(),
+            format!("{:.0}", c.decisions_per_sec),
+            c.steps.to_string(),
+            format!("{:.0}", c.steps_per_sec),
+            c.finished.to_string(),
+            c.rejected.to_string(),
+            pct(c.slo),
+        ]);
+    }
+    println!("{}", t.render());
+
+    Ok(Json::from(
+        rows.iter()
+            .map(|c| {
+                Json::obj()
+                    .set("fleet", c.fleet)
+                    .set("n_tasks", c.n_tasks)
+                    .set("rate", c.rate)
+                    .set("wall_s", c.wall_s)
+                    .set("virtual_s", c.virtual_s)
+                    .set("decisions", c.decisions)
+                    .set("decisions_per_sec", c.decisions_per_sec)
+                    .set("steps", c.steps)
+                    .set("steps_per_sec", c.steps_per_sec)
+                    .set("finished", c.finished)
+                    .set("rejected", c.rejected)
+                    .set("slo", nan_null(c.slo))
+            })
+            .collect::<Vec<_>>(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_cells_complete_and_count_decisions() {
+        let cfg = ServeConfig::default();
+        let c = run_cell("single", 40, &cfg).unwrap();
+        assert_eq!(c.n_tasks, 40);
+        assert!(c.decisions > 0, "SLICE reschedules must be counted");
+        assert!(c.decisions_per_sec > 0.0);
+        assert!(c.steps > 0);
+        let c = run_cell("edge-mixed", 40, &cfg).unwrap();
+        // at least one routing decision per arrival rides on top of
+        // the per-replica reschedules
+        assert!(c.decisions >= 40);
+    }
+
+    #[test]
+    fn unknown_fleet_rejected() {
+        assert!(run_cell("mesh", 10, &ServeConfig::default()).is_err());
+    }
+}

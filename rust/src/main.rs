@@ -10,7 +10,8 @@
 //!                 report fleet + memory metrics
 //!   experiment  — regenerate a paper table/figure (fig1|table2|fig7|
 //!                 fig8|fig9|fig10|fig11|ablation|cluster|hetero|
-//!                 memory|all)
+//!                 memory|scale|all; scale = the 1k/4k/10k scheduler
+//!                 throughput sweep, excluded from 'all')
 //!   calibrate   — measure l(b) on the real PJRT engine and print a
 //!                 machine-local latency model
 //!   info        — print artifact/runtime information
@@ -67,8 +68,10 @@ USAGE:
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
   slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
-                    cluster|hetero|memory|all> [--n-tasks <n>] [--seed <n>]
+                    cluster|hetero|memory|scale|all> [--n-tasks <n>] [--seed <n>]
                     [--out <json>]
+                    (scale: [--tasks <n>] runs one custom size instead of
+                     the 1k/4k/10k default; excluded from 'all')
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -487,6 +490,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "memory" | "memory_sweep" => {
             out = out.set("memory_sweep", experiments::memory_sweep::run(&cfg)?)
+        }
+        "scale" | "scale_sweep" => {
+            // --tasks <n> runs a single custom size (CI smoke);
+            // default: the 1k/4k/10k sweep
+            let sizes: Vec<usize> = match args.flag_u64("tasks")? {
+                Some(n) if n >= 1 => vec![n as usize],
+                Some(_) => bail!("--tasks must be >= 1"),
+                None => experiments::scale_sweep::DEFAULT_SIZES.to_vec(),
+            };
+            out = out.set("scale_sweep", experiments::scale_sweep::run(&cfg, &sizes)?)
         }
         "all" => {
             out = out

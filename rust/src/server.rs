@@ -40,6 +40,10 @@ pub struct RunReport {
     pub decode_steps: u64,
     /// Prefill passes executed.
     pub prefill_steps: u64,
+    /// Scheduling decisions the policy reports (full Alg. 4
+    /// reschedules for SLICE; zero for policies that don't count) —
+    /// the numerator of the scale sweep's decisions-per-second.
+    pub decisions: u64,
     /// Time of the last event processed.
     pub end_time: Micros,
     /// Policy name (for reports).
@@ -63,10 +67,33 @@ pub struct Server<C: Clock> {
     clock: C,
     /// Future arrivals, sorted by arrival time.
     arrivals: VecDeque<Task>,
+    /// Delivered-but-unfinished task ids, ascending (the live set).
+    /// Maintained at delivery/completion/extraction so per-step scans
+    /// (and the cluster layer's load/headroom signals) touch only live
+    /// work instead of every task the pool ever accepted.
+    live: Vec<TaskId>,
+    /// Unfinished tasks whose KV cache is resident, ascending.
+    /// Maintained at every residency transition so eviction victim
+    /// search is O(resident) instead of O(pool).
+    resident: Vec<TaskId>,
     steps: u64,
     decode_steps: u64,
     prefill_steps: u64,
     token_sink: Option<TokenSink>,
+}
+
+/// Insert `id` into a sorted id index (no-op if present).
+fn index_insert(index: &mut Vec<TaskId>, id: TaskId) {
+    if let Err(at) = index.binary_search(&id) {
+        index.insert(at, id);
+    }
+}
+
+/// Remove `id` from a sorted id index (no-op if absent).
+fn index_remove(index: &mut Vec<TaskId>, id: TaskId) {
+    if let Ok(at) = index.binary_search(&id) {
+        index.remove(at);
+    }
 }
 
 impl<C: Clock> Server<C> {
@@ -88,6 +115,8 @@ impl<C: Clock> Server<C> {
             engine,
             clock,
             arrivals: workload.into(),
+            live: Vec::new(),
+            resident: Vec::new(),
             steps: 0,
             decode_steps: 0,
             prefill_steps: 0,
@@ -110,6 +139,15 @@ impl<C: Clock> Server<C> {
     /// The task pool (read-only observability for routers/tests).
     pub fn pool(&self) -> &TaskPool {
         &self.pool
+    }
+
+    /// Ids of delivered, unfinished tasks, ascending — exactly the
+    /// tasks `pool().iter().filter(|t| !t.is_finished())` would yield,
+    /// without scanning every task the pool ever accepted. Routers read
+    /// their load/headroom signals through this (the per-decision hot
+    /// path at cluster scale).
+    pub fn live_ids(&self) -> &[TaskId] {
+        &self.live
     }
 
     /// Arrivals that have been pushed/loaded but not yet delivered to
@@ -144,6 +182,11 @@ impl<C: Clock> Server<C> {
         while self.arrivals.front().map_or(false, |t| t.arrival <= now) {
             let t = self.arrivals.pop_front().unwrap();
             ids.push(t.id);
+            // dense pool ids arrive ascending, so this is a push; a
+            // migrated-in task can arrive with its cache already marked
+            // in transit, but never resident
+            index_insert(&mut self.live, t.id);
+            debug_assert!(t.residency != Residency::Resident);
             self.pool.insert(t);
         }
         if !ids.is_empty() {
@@ -179,6 +222,8 @@ impl<C: Clock> Server<C> {
             for &id in &completed {
                 self.engine.release(id);
                 self.pool.get_mut(id).residency = Residency::None;
+                index_remove(&mut self.live, id);
+                index_remove(&mut self.resident, id);
             }
             self.policy.on_completion(&mut self.pool, &completed, now);
         }
@@ -193,11 +238,17 @@ impl<C: Clock> Server<C> {
     /// The next eviction victim: a resident, unfinished task outside
     /// `protected`. Deterministic order — paused (descheduled) tasks
     /// first, then anything else, ascending id — so constrained runs
-    /// reproduce bit-for-bit.
+    /// reproduce bit-for-bit. The search walks the resident index (kept
+    /// at every residency transition) instead of the whole pool, so one
+    /// eviction is O(resident) even with thousands of tasks queued.
     fn pick_victim(&self, protected: &[TaskId]) -> Option<TaskId> {
-        self.pool
+        self.resident
             .iter()
+            .map(|&id| self.pool.get(id))
             .filter(|t| {
+                // index members are resident and unfinished by
+                // construction; the original predicate stays as a
+                // belt-and-braces filter
                 t.residency == Residency::Resident
                     && !t.is_finished()
                     && !protected.contains(&t.id)
@@ -220,6 +271,7 @@ impl<C: Clock> Server<C> {
         let t = self.pool.get_mut(victim);
         t.residency = Residency::Swapped;
         t.swap_outs += 1;
+        index_remove(&mut self.resident, victim);
         Some(cost)
     }
 
@@ -275,6 +327,7 @@ impl<C: Clock> Server<C> {
                     t.residency = Residency::Resident;
                     t.pending_restore = 0;
                     t.swap_ins += 1;
+                    index_insert(&mut self.resident, id);
                 }
             }
             return Ok((tasks, cost));
@@ -284,28 +337,32 @@ impl<C: Clock> Server<C> {
             .kv_model()
             .and_then(|m| m.capacity())
             .expect("constrained model");
-        // post-step footprint of the batch prefix that fits
-        let mut kept: Vec<TaskId> = Vec::with_capacity(tasks.len());
+        // post-step footprint of the batch prefix that fits; the kept
+        // set is always a prefix, so the incoming buffer is truncated
+        // in place and stays recyclable (no per-step allocation)
         let mut need: u64 = 0;
+        let mut keep_len = 0usize;
         {
             let kv = self.engine.kv_model().expect("kv");
             for &id in &tasks {
                 let b = kv.bytes_for(self.pool.get(id).seq_len() + 1);
                 if need + b <= cap {
                     need += b;
-                    kept.push(id);
+                    keep_len += 1;
                 } else {
                     break;
                 }
             }
         }
-        if kept.is_empty() {
+        if keep_len == 0 {
             bail!(
                 "kv capacity {cap} B cannot hold a single decode slot \
                  (task {}'s footprint exceeds it)",
                 tasks[0]
             );
         }
+        let mut kept = tasks;
+        kept.truncate(keep_len);
         let mut cost = 0;
         while self.engine.kv_model().expect("kv").resident_outside(&kept) + need > cap {
             match self.evict_one(&kept) {
@@ -328,6 +385,7 @@ impl<C: Clock> Server<C> {
                 t.residency = Residency::Resident;
                 t.pending_restore = 0;
                 t.swap_ins += 1;
+                index_insert(&mut self.resident, id);
             }
         }
         Ok((kept, cost))
@@ -358,6 +416,7 @@ impl<C: Clock> Server<C> {
                     t.residency = Residency::Resident;
                     t.prompt_len
                 };
+                index_insert(&mut self.resident, task);
                 if let Some(kv) = self.engine.kv_model_mut() {
                     kv.insert(task, prompt_len);
                 }
@@ -378,6 +437,9 @@ impl<C: Clock> Server<C> {
                 self.clock.advance(outcome.duration);
                 let end = self.clock.now();
                 self.apply_outcome(outcome, end);
+                // hand the batch buffer back so the policy's next
+                // column scan reuses the allocation
+                self.policy.recycle_batch(tasks);
             }
         }
         Ok(())
@@ -451,6 +513,8 @@ impl<C: Clock> Server<C> {
             t.residency = Residency::None;
             snap
         };
+        index_remove(&mut self.live, id);
+        index_remove(&mut self.resident, id);
         self.engine.release(id);
         self.policy.on_completion(&mut self.pool, &[id], now);
         snapshot
@@ -463,6 +527,7 @@ impl<C: Clock> Server<C> {
         RunReport {
             policy: self.policy.name(),
             end_time: self.clock.now(),
+            decisions: self.policy.decisions(),
             tasks: self.pool.into_tasks(),
             steps: self.steps,
             decode_steps: self.decode_steps,
@@ -598,6 +663,35 @@ mod tests {
             assert_eq!(a.completion, b.completion);
             assert_eq!(a.tokens_generated, b.tokens_generated);
         }
+    }
+
+    #[test]
+    fn live_ids_track_delivery_completion_and_extraction() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        assert!(s.live_ids().is_empty());
+        s.push_arrival(mk_task(0, TaskClass::Voice, 0, 5));
+        s.push_arrival(mk_task(1, TaskClass::Voice, 0, 500));
+        s.push_arrival(mk_task(2, TaskClass::Voice, 0, 500));
+        s.run_until(secs(2.0)).unwrap(); // task 0 (5 tokens) finishes
+        assert_eq!(s.live_ids(), &[1, 2], "finished task left the live set");
+        // the live set always mirrors the pool's unfinished filter
+        let expected: Vec<TaskId> = s
+            .pool()
+            .iter()
+            .filter(|t| !t.is_finished())
+            .map(|t| t.id)
+            .collect();
+        assert_eq!(s.live_ids(), &expected[..]);
+        let now = s.now();
+        let _ = s.extract_task(1, now);
+        assert_eq!(s.live_ids(), &[2], "extracted husk left the live set");
+        s.run_until(secs(120.0)).unwrap();
+        assert!(s.live_ids().is_empty(), "drained server has no live work");
     }
 
     #[test]

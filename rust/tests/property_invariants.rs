@@ -3,7 +3,7 @@
 //! the in-repo deterministic RNG with many random cases per property,
 //! and every failure prints the case's seed for replay).
 
-use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
+use slice_serve::coordinator::mask::{period_eq7, DecodeMask, IncrementalPeriod};
 use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
 use slice_serve::coordinator::task::{SloSpec, Task, TaskClass};
 use slice_serve::engine::latency::LatencyModel;
@@ -161,6 +161,66 @@ fn prop_selection_kv_budget_respected() {
             unconstrained.selected[..constrained.selected.len()],
             "seed {seed}: constrained selection is not a prefix"
         );
+    }
+}
+
+/// The incremental Eq. 7 structure stays bit-identical to both the
+/// closed form and the mask's exact column sum over 500 randomized
+/// insert/remove sequences, on the paper curve and on random measured
+/// curves (PR 5 tentpole invariant; DESIGN.md "Scheduler hot path").
+#[test]
+fn prop_incremental_period_matches_eq7_and_mask() {
+    for seed in 0..500u64 {
+        let mut rng = Rng::new(11_000_000 + seed);
+        // half the cases run on a random monotone measured-style curve
+        let lat = if seed % 2 == 0 {
+            LatencyModel::paper_calibrated()
+        } else {
+            let mut points = Vec::new();
+            let mut b = 0u32;
+            let mut us = rng.range_u64(1_000, 20_000);
+            for _ in 0..rng.range_usize(2, 8) {
+                b += rng.range_u64(1, 6) as u32;
+                us += rng.range_u64(0, 30_000);
+                points.push((b, us));
+            }
+            let max_b = points.last().unwrap().0;
+            LatencyModel::from_points(points, vec![], max_b)
+        };
+        let mut inc = IncrementalPeriod::new(lat.clone());
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..rng.range_usize(1, 30) {
+            if !live.is_empty() && rng.chance(0.35) {
+                let at = rng.range_usize(0, live.len() - 1);
+                let q = live.swap_remove(at);
+                inc.remove(q);
+            } else {
+                let q = rng.range_u64(1, 25) as u32;
+                live.push(q);
+                let probed = inc.probe(q);
+                let p = inc.insert(q);
+                assert_eq!(probed, p, "seed {seed}: probe != insert");
+                assert_eq!(p, inc.period(), "seed {seed}");
+            }
+            let mut sorted = live.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(
+                inc.period(),
+                period_eq7(&sorted, &lat),
+                "seed {seed}: incremental != closed form, live={live:?}"
+            );
+            if !live.is_empty() {
+                let rows: Vec<(u64, u32)> =
+                    live.iter().enumerate().map(|(i, &v)| (i as u64, v)).collect();
+                let mask = DecodeMask::build(rows);
+                assert_eq!(
+                    inc.period(),
+                    mask.period_exact(&lat),
+                    "seed {seed}: incremental != exact column sum, live={live:?}"
+                );
+            }
+            assert_eq!(inc.len(), live.len(), "seed {seed}");
+        }
     }
 }
 

@@ -22,8 +22,18 @@ Stages:
   8. memory_model.rs test-cell validation (bit-exactness of the
      unconstrained path, aware > oblivious threshold, peak <= capacity,
      handoff determinism).
+  9. scheduler hot path (PR 5) — select_tasks_fast == select_tasks over
+     randomized cases (the equivalence.rs mirror), a Rust-faithful
+     old-vs-new reschedule-pipeline timing at n in {64, 256, 1024}
+     (the old path recomputes utility rates inside the comparator and
+     re-runs the Eq. 7 closed form per admission, as the pre-PR 5 Rust
+     did), and the scale sweep (1k/4k/10k single + guarded edge-mixed)
+     measuring decisions-per-second — the BENCH_5.json inputs. Note
+     stages 1-8 themselves now run through select_tasks_fast, so their
+     unchanged cells are an end-to-end bit-exactness proof.
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
+       [--scale-sizes 1000,4000,10000]
 """
 
 import json
@@ -35,10 +45,10 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent))
 
 from slice_sim import (  # noqa: E402
-    CYCLE_CAP, AdmissionConfig, DecodeMask, DeviceProfile, LatencyModel,
-    MemoryConfig, OrcaPolicy, Rng, Server, SlicePolicy, attainment,
-    edge_mixed, latency_summary, paper_mix, period_eq7, run_cluster,
-    run_fleet, select_tasks, secs,
+    CYCLE_CAP, AdmissionConfig, DecodeMask, DeviceProfile, IncrementalPeriod,
+    LatencyModel, MemoryConfig, OrcaPolicy, Rng, Server, SlicePolicy,
+    attainment, edge_mixed, latency_summary, paper_mix, period_eq7,
+    run_cluster, run_fleet, select_tasks, select_tasks_fast, secs,
 )
 
 LAT = LatencyModel.paper_calibrated()
@@ -342,10 +352,167 @@ def memory_sweep():
     return cells
 
 
+def _rand_candidates(rng, n, with_kv):
+    cands = []
+    for i in range(n):
+        c = (i, rng.range_u64(1, 1000) / 10.0, rng.range_u64(40, 400) * 1000)
+        if with_kv:
+            c = c + (rng.range_u64(1, 32) * 512 * 1024,)
+        cands.append(c)
+    return cands
+
+
+def _select_ref_rustlike(cands, lat, cycle_cap):
+    """The pre-PR 5 Rust cost structure: utility rates recomputed inside
+    the sort comparator (the Rust sort_by closure), then an O(n) sorted
+    insert + O(n) period_eq7 closed form per admission."""
+    import functools
+    from bisect import bisect_left
+
+    def cmp(a, b):
+        ra = a[1] * (a[2] / 1e6)
+        rb = b[1] * (b[2] / 1e6)
+        if ra != rb:
+            return -1 if ra > rb else 1
+        return -1 if a[0] < b[0] else (1 if a[0] > b[0] else 0)
+
+    order = sorted(cands, key=functools.cmp_to_key(cmp))
+    selected, quotas_desc, rejected = [], [], []
+    stopped = False
+    for cand in order:
+        if stopped or len(selected) >= lat.max_batch:
+            rejected.append(cand[0])
+            continue
+        q = math.ceil(1e6 / cand[2])
+        pos = bisect_left([-v for v in quotas_desc], -q)
+        quotas_desc.insert(pos, q)
+        p = period_eq7(quotas_desc, lat)
+        if p >= cycle_cap:
+            quotas_desc.pop(pos)
+            rejected.append(cand[0])
+            stopped = True
+            continue
+        selected.append((cand[0], q))
+    return selected, rejected
+
+
+def hot_path_stage(scale_sizes):
+    print("stage 9: scheduler hot path (PR 5) — equivalence, micro timing, "
+          "scale sweep")
+
+    # -- equivalence: fast == reference over randomized cases ----------
+    cases = 0
+    for seed in range(300):
+        rng = Rng(9_000_000 + seed)
+        n = rng.range_u64(0, 60)
+        cands = _rand_candidates(rng, n, with_kv=True)
+        cap = (rng.range_u64(4, 64) * 1024 * 1024
+               if rng.range_u64(0, 1) == 1 else None)
+        a = select_tasks(cands, LAT, CYCLE_CAP, cap)
+        b = select_tasks_fast(cands, LAT, CYCLE_CAP, cap)
+        if a != b:
+            raise SystemExit(f"stage 9: selection diverged at seed {seed}")
+        cases += 1
+    check(cases == 300, "select_tasks_fast == select_tasks over 300 cases")
+
+    # incremental period == closed form under insert/remove churn
+    for seed in range(200):
+        rng = Rng(11_000_000 + seed)
+        inc = IncrementalPeriod(LAT)
+        live = []
+        for _ in range(rng.range_u64(1, 30)):
+            if live and rng.range_u64(0, 99) < 35:
+                q = live.pop(rng.range_u64(0, len(live) - 1))
+                inc.remove(q)
+            else:
+                q = rng.range_u64(1, 25)
+                live.append(q)
+                inc.insert(q)
+            if inc.period != period_eq7(sorted(live, reverse=True), LAT):
+                raise SystemExit(f"stage 9: period diverged at seed {seed}")
+    check(True, "IncrementalPeriod == period_eq7 over 200 churn sequences")
+
+    # -- micro timing: old vs new reschedule pipeline ------------------
+    micro = []
+    for n in (64, 256, 1024):
+        rng = Rng(7)
+        cands = _rand_candidates(rng, n, with_kv=False)
+        reps = max(3, 2000 // n)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ref = _select_ref_rustlike(cands, LAT, CYCLE_CAP)
+        old_s = (time.perf_counter() - t0) / reps
+        inc = IncrementalPeriod(LAT)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            new = select_tasks_fast(cands, LAT, CYCLE_CAP, period=inc)
+        new_s = (time.perf_counter() - t0) / reps
+        if ref != new:
+            raise SystemExit(f"stage 9: micro cell n={n} diverged")
+        micro.append({
+            "n": n,
+            "old_us": round(old_s * 1e6, 1),
+            "new_us": round(new_s * 1e6, 1),
+            "old_decisions_per_sec": round(1.0 / old_s, 1),
+            "new_decisions_per_sec": round(1.0 / new_s, 1),
+            "speedup": round(old_s / new_s, 2),
+        })
+        print(f"  select n={n:>5}: old {old_s * 1e6:8.1f}us  "
+              f"new {new_s * 1e6:8.1f}us  speedup x{old_s / new_s:.2f}")
+
+    # -- scale sweep ---------------------------------------------------
+    scale = []
+    for n in scale_sizes:
+        rate = n / 120.0
+        for fleet in ("single", "edge-mixed"):
+            wl = paper_mix(rate, 0.7, n, 42)
+            horizon_drain = secs(60.0)
+            t0 = time.perf_counter()
+            if fleet == "single":
+                s = Server(wl, SlicePolicy(LAT), LAT)
+                s.run((wl[-1].arrival if wl else 0) + horizon_drain)
+                decisions = s.policy.reschedules
+                steps = s.steps
+                tasks = s.pool
+                rejected = 0
+            else:
+                admission = AdmissionConfig(enabled=True, mode="headroom")
+                tasks, _per, router = run_fleet(
+                    "slo-aware", edge_mixed(), wl, horizon_drain,
+                    admission=admission, migration=True)
+                decisions = sum(r.server.policy.reschedules
+                                for r in router.replicas) + n
+                steps = sum(r.server.steps for r in router.replicas)
+                rejected = len(router.rejected)
+            wall = time.perf_counter() - t0
+            a = attainment(tasks)
+            cell = {
+                "fleet": fleet, "n_tasks": n, "rate": round(rate, 2),
+                "harness_wall_s": round(wall, 2),
+                "decisions": decisions,
+                "decisions_per_sec": round(decisions / wall, 1),
+                "steps": steps,
+                "steps_per_sec": round(steps / wall, 1),
+                "finished": a["n_finished"], "rejected": rejected,
+                "slo": a["slo"],
+            }
+            scale.append(cell)
+            print(f"  scale {fleet:<10} n={n:>5}: wall={wall:7.2f}s  "
+                  f"decisions={decisions:>6} ({cell['decisions_per_sec']:>9.1f}/s) "
+                  f"steps={steps:>6} finished={a['n_finished']:>5} "
+                  f"shed={rejected}")
+    print()
+    return {"micro": micro, "scale": scale}
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
         out_path = sys.argv[sys.argv.index("--out") + 1]
+    scale_sizes = [1000, 4000, 10000]
+    if "--scale-sizes" in sys.argv:
+        raw = sys.argv[sys.argv.index("--scale-sizes") + 1]
+        scale_sizes = [int(v) for v in raw.split(",") if v]
 
     self_check()
 
@@ -397,10 +564,11 @@ def main():
 
     hetero, hetero_cells = hetero_sweep()
     memory = memory_sweep()
+    hot_path = hot_path_stage(scale_sizes)
 
     doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
            "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells,
-           "memory_sweep": memory}
+           "memory_sweep": memory, "scheduler_hot_path": hot_path}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")

@@ -498,6 +498,113 @@ def select_tasks(candidates, lat: LatencyModel, cycle_cap: int,
     return selected, rejected
 
 
+class IncrementalPeriod:
+    """Mirrors coordinator/mask.rs IncrementalPeriod (PR 5): the Eq. 7
+    cycle duration maintained as a column sum against the Δl curve —
+    inserting quota q touches columns 0..q instead of re-running the
+    O(n) closed form."""
+
+    def __init__(self, lat: LatencyModel) -> None:
+        self.lat = lat
+        self.delta: List[int] = []
+        self.cols: List[int] = []
+        self.n = 0
+        self.period = 0
+
+    def clear(self) -> None:
+        self.cols.clear()
+        self.n = 0
+        self.period = 0
+
+    def _delta(self, b: int) -> int:
+        while len(self.delta) < b:
+            nx = len(self.delta) + 1
+            hi = self.lat.decode(nx)
+            lo = self.lat.decode(nx - 1) if nx > 1 else 0
+            self.delta.append(hi - lo)
+        return self.delta[b - 1]
+
+    def probe(self, q: int) -> int:
+        """Period after inserting q, without mutating (mirrors
+        IncrementalPeriod::probe): empty tail columns priced in closed
+        form so a pathological quota never materializes q counters."""
+        assert q > 0
+        deepest = (self.cols[0] + 1) if self.cols else 1
+        self._delta(deepest)
+        moved = 0
+        for col in self.cols[: min(q, len(self.cols))]:
+            moved += self.delta[col]
+        if q > len(self.cols):
+            moved += (q - len(self.cols)) * self.delta[0]
+        return self.period + moved
+
+    def insert(self, q: int) -> int:
+        assert q > 0
+        if len(self.cols) < q:
+            self.cols.extend([0] * (q - len(self.cols)))
+        cols = self.cols
+        for j in range(q):
+            cols[j] += 1
+            self.period += self._delta(cols[j])
+        self.n += 1
+        return self.period
+
+    def remove(self, q: int) -> None:
+        assert 0 < q <= len(self.cols), "removing a quota never inserted"
+        cols = self.cols
+        for j in range(q):
+            assert cols[j] > 0, "removing a quota never inserted"
+            self.period -= self._delta(cols[j])
+            cols[j] -= 1
+        self.n -= 1
+
+
+def select_tasks_fast(candidates, lat: LatencyModel, cycle_cap: int,
+                      kv_capacity: Optional[int] = None,
+                      period: Optional[IncrementalPeriod] = None):
+    """Mirrors the PR 5 selection hot path (selection.rs
+    select_tasks_with): rates/quotas precomputed once per candidate
+    before the sort, Eq. 7 evaluated incrementally. Bit-identical to
+    select_tasks (asserted in run_experiments.py stage 9)."""
+    keys = []
+    quotas = []
+    for idx, c in enumerate(candidates):
+        rate = c[1] * (c[2] / 1e6)
+        keys.append((-rate, c[0], idx))
+        quotas.append(quota_of(c[2]))
+    keys.sort()
+
+    inc = period if period is not None else IncrementalPeriod(lat)
+    inc.clear()
+    selected: List[Tuple[int, int]] = []
+    rejected: List[int] = []
+    kv_used = 0
+    stopped = False
+    for _, cid, idx in keys:
+        if stopped or len(selected) >= lat.max_batch:
+            rejected.append(cid)
+            continue
+        cand = candidates[idx]
+        kv_bytes = cand[3] if len(cand) > 3 else 0
+        if kv_capacity is not None and kv_used + kv_bytes > kv_capacity:
+            rejected.append(cid)
+            stopped = True
+            continue
+        q = quotas[idx]
+        # probe-then-commit (mirrors select_tasks_with): a rejected
+        # admission never mutates the structure
+        p = inc.probe(q)
+        if p >= cycle_cap:
+            rejected.append(cid)
+            stopped = True
+            continue
+        committed = inc.insert(q)
+        assert committed == p, "probe and insert must agree"
+        kv_used += kv_bytes
+        selected.append((cid, q))
+    return selected, rejected
+
+
 class DecodeMask:
     def __init__(self, tasks: List[Tuple[int, int]]) -> None:
         assert all(v > 0 for _, v in tasks)
@@ -541,6 +648,11 @@ class SlicePolicy:
         self.to_prefill: deque = deque()
         self.needs_reschedule = False
         self.reschedules = 0
+        # PR 5 mirror: the policy owns its incremental-period scratch
+        # and reschedules through the fast selection (bit-identical to
+        # select_tasks — asserted in run_experiments.py stage 9, and by
+        # stages 1-8 reproducing every earlier PR's cells unchanged)
+        self._inc = IncrementalPeriod(lat)
 
     def on_arrival(self, pool, ids, now) -> None:
         self.needs_reschedule = True
@@ -560,8 +672,9 @@ class SlicePolicy:
             candidates = [
                 (t.id, t.utility, t.slo.tpot) for t in pool if not t.is_finished()
             ]
-        selected, rejected = select_tasks(
-            candidates, self.lat, self.cycle_cap, self.kv_capacity)
+        selected, rejected = select_tasks_fast(
+            candidates, self.lat, self.cycle_cap, self.kv_capacity,
+            period=self._inc)
         self.to_prefill.clear()
         for tid, _q in selected:
             t = pool[tid]
@@ -1061,10 +1174,15 @@ class Router:
 
     def decide(self, task: Task) -> Optional[int]:
         n = len(self.replicas)
+        headrooms = None
         if self.admission.enabled:
             if self.admission.mode == "headroom":
+                # keep the computed headrooms: the slo-aware pick reuses
+                # them (mirrors router.rs decide), one Eq. 7 evaluation
+                # per replica per decision
                 quota = task.slo.tokens_per_cycle()
-                admissible = [r.headroom(quota) > 0 for r in self.replicas]
+                headrooms = [r.headroom(quota) for r in self.replicas]
+                admissible = [h > 0 for h in headrooms]
             else:
                 bound = self.admission.bound_for(task)
                 admissible = [r.queued_in_class(task.cls) < bound
@@ -1081,6 +1199,9 @@ class Router:
         if self.strategy == "least-loaded":
             return min((r.load_tokens(), r.id)
                        for r in self.replicas if admissible[r.id])[1]
+        if headrooms is not None:
+            return min((-headrooms[r.id], r.load_tokens(), r.id)
+                       for r in self.replicas if admissible[r.id])[2]
         quota = task.slo.tokens_per_cycle()
         return self.best_by_headroom(quota, lambda r: admissible[r.id])
 
