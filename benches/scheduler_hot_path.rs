@@ -229,6 +229,8 @@ fn main() {
     // inter-arrival gap even at 8 replicas; the full-run bench tracks
     // end-to-end co-simulation cost as the fleet widens.
     let cfg = ServeConfig::default();
+    let mut event_cfg = cfg.clone();
+    event_cfg.cluster_engine = slice_serve::config::ClusterEngine::Event;
     let make_fleet = |n: usize, loaded: bool| -> Vec<Replica> {
         (0..n)
             .map(|i| {
@@ -276,6 +278,56 @@ fn main() {
             .unwrap()
         });
         println!("{}", r.report_line());
+
+        // the same cell through the event engine — bit-exact results
+        // (rust/tests/equivalence.rs), so any delta is pure engine
+        // overhead/savings
+        let r = bench(&format!("cluster/run_event/slo-aware/{n}x40"), budget, || {
+            experiments::run_cluster(
+                RoutingStrategy::SloAware,
+                n,
+                wl.clone(),
+                &event_cfg,
+                secs(60.0),
+            )
+            .unwrap()
+        });
+        println!("{}", r.report_line());
+    }
+
+    // Fleet-width scaling: a fixed 200-task burst over progressively
+    // wider round-robin fleets. Lockstep pays O(arrivals × replicas)
+    // advancement calls, the event engine only wakes busy nodes — the
+    // widest pair is the PR 6 acceptance signal (BENCH_6.json carries
+    // the full 16/64/256 × 10k-100k sweep).
+    for width in [16usize, 64] {
+        let wl = WorkloadSpec::paper_mix(8.0, 0.7, 200, 7).generate();
+        let r = bench(&format!("cluster/run/round-robin/{width}x200"), budget, || {
+            experiments::run_cluster(
+                RoutingStrategy::RoundRobin,
+                width,
+                wl.clone(),
+                &cfg,
+                secs(60.0),
+            )
+            .unwrap()
+        });
+        println!("{}", r.report_line());
+        let r = bench(
+            &format!("cluster/run_event/round-robin/{width}x200"),
+            budget,
+            || {
+                experiments::run_cluster(
+                    RoutingStrategy::RoundRobin,
+                    width,
+                    wl.clone(),
+                    &event_cfg,
+                    secs(60.0),
+                )
+                .unwrap()
+            },
+        );
+        println!("{}", r.report_line());
     }
 
     // The heterogeneous path: a guarded edge-mixed fleet pays for
@@ -310,6 +362,23 @@ fn main() {
             &mixed,
             wl.clone(),
             &memory_cfg,
+            secs(60.0),
+        )
+        .unwrap()
+    });
+    println!("{}", r.report_line());
+
+    // the fullest configuration through the event engine: migration
+    // passes run at every arrival boundary here, so this cell bounds
+    // the event engine's worst case (no advancement savings to win)
+    let mut memory_event_cfg = memory_cfg.clone();
+    memory_event_cfg.cluster_engine = slice_serve::config::ClusterEngine::Event;
+    let r = bench("cluster/run_event/edge-mixed-memory/3x40", budget, || {
+        experiments::run_fleet(
+            RoutingStrategy::SloAware,
+            &mixed,
+            wl.clone(),
+            &memory_event_cfg,
             secs(60.0),
         )
         .unwrap()

@@ -1,0 +1,308 @@
+//! The cluster controller: every routing/admission/migration *decision*
+//! the cluster layer makes, factored out of the engines that drive
+//! replica time forward (DESIGN.md "Event-driven cluster engine").
+//!
+//! Two engines share this code verbatim:
+//!   * [`crate::cluster::Router`] — the lockstep reference engine,
+//!     which advances every replica to every arrival;
+//!   * [`crate::cluster::Orchestrator`] — the event-driven engine,
+//!     which advances a replica only when it has work.
+//!
+//! The controller is generic over `AsRef<Replica>`/`AsMut<Replica>` so
+//! both a bare [`Replica`] slice (lockstep) and a
+//! [`crate::cluster::Node`] slice (event engine) run the *identical*
+//! decision code — the bit-exactness contract between the engines rests
+//! on there being exactly one copy of it.
+//!
+//! Everything here reads replica load signals that are
+//! clock-independent (`queued_in_class`, `load_tokens`, `headroom`,
+//! `overloaded` — all counting staged + pending + live work, never the
+//! clock), which is what lets the event engine skip advancing idle
+//! replicas without perturbing a single decision.
+
+use std::collections::HashSet;
+
+use crate::coordinator::task::{Task, TaskId};
+use crate::engine::memory::MemoryConfig;
+use crate::util::Micros;
+
+use super::fleet::{AdmissionConfig, AdmissionMode};
+use super::replica::Replica;
+use super::router::{ClusterReport, RoutingStrategy};
+
+/// Routing/admission/migration decision state shared by both cluster
+/// engines. Owns every counter the final [`ClusterReport`] aggregates.
+pub(crate) struct Controller {
+    pub(crate) strategy: RoutingStrategy,
+    pub(crate) admission: AdmissionConfig,
+    pub(crate) migration: bool,
+    /// Running-task KV handoff (requires `migration`).
+    pub(crate) migrate_running: bool,
+    /// Prices KV handoffs (bytes per token, link bandwidth).
+    pub(crate) memory: MemoryConfig,
+    rr_next: usize,
+    /// Admissibility-mask buffer reused across routing decisions (one
+    /// decision runs per arrival — the cluster hot path allocates
+    /// nothing whether or not admission control is on).
+    admission_scratch: Vec<bool>,
+    /// Per-replica headrooms computed by a headroom-admission pass,
+    /// reused by the SLO-aware pick in the same decision so each
+    /// replica's Eq. 7 demand is evaluated once per arrival, not twice.
+    headroom_scratch: Vec<Micros>,
+    /// Global ids that have migrated once already (exactly-once cap).
+    pub(crate) migrated: HashSet<TaskId>,
+    pub(crate) migrations: u64,
+    pub(crate) migrated_running: u64,
+    pub(crate) handoff_bytes: u64,
+    pub(crate) handoff_us: Micros,
+    pub(crate) rejected: Vec<Task>,
+}
+
+impl Controller {
+    pub(crate) fn new(strategy: RoutingStrategy) -> Self {
+        Controller {
+            strategy,
+            admission: AdmissionConfig::default(),
+            migration: false,
+            migrate_running: false,
+            memory: MemoryConfig::default(),
+            rr_next: 0,
+            admission_scratch: Vec::new(),
+            headroom_scratch: Vec::new(),
+            migrated: HashSet::new(),
+            migrations: 0,
+            migrated_running: 0,
+            handoff_bytes: 0,
+            handoff_us: 0,
+            rejected: Vec::new(),
+        }
+    }
+
+    /// Pick the replica for `task` under the configured strategy, or
+    /// `None` when admission control sheds it (every replica is at its
+    /// class bound). Tie-breaks are deterministic: least-loaded breaks
+    /// ties by lowest replica index, and SLO-aware breaks headroom ties
+    /// by least load, then lowest replica index — so cluster runs are
+    /// reproducible for a fixed seed.
+    pub(crate) fn decide<R: AsRef<Replica>>(
+        &mut self,
+        replicas: &[R],
+        task: &Task,
+    ) -> Option<usize> {
+        // the admissibility mask lives in a scratch buffer reused
+        // across decisions (temporarily moved out so the strategy arms
+        // below can borrow the controller), and is only filled when
+        // admission is on — the bench-tracked cluster/decide hot path
+        // never allocates in steady state
+        let mut mask = std::mem::take(&mut self.admission_scratch);
+        let mut headrooms = std::mem::take(&mut self.headroom_scratch);
+        mask.clear();
+        headrooms.clear();
+        let use_mask = self.admission.enabled;
+        if use_mask {
+            match self.admission.mode {
+                AdmissionMode::QueueDepth => {
+                    let bound = self.admission.bound_for(task.class);
+                    mask.extend(
+                        replicas
+                            .iter()
+                            .map(|r| r.as_ref().queued_in_class(task.class) < bound),
+                    );
+                }
+                AdmissionMode::Headroom => {
+                    // keep the computed headrooms: the SLO-aware pick
+                    // below reuses them, so headroom admission costs
+                    // one Eq. 7 evaluation per replica, not two
+                    let quota = task.slo.tokens_per_cycle();
+                    for r in replicas {
+                        let h = r.as_ref().headroom(quota);
+                        headrooms.push(h);
+                        mask.push(h > 0);
+                    }
+                }
+            }
+        }
+        let open = |i: usize| !use_mask || mask[i];
+        let pick = if !(0..replicas.len()).any(open) {
+            None
+        } else {
+            Some(match self.strategy {
+                RoutingStrategy::RoundRobin => {
+                    // first admissible replica at or after the cursor
+                    let start = self.rr_next;
+                    let n = replicas.len();
+                    let k = (0..n)
+                        .find(|&k| open((start + k) % n))
+                        .expect("some replica is admissible");
+                    self.rr_next = start + k + 1;
+                    (start + k) % n
+                }
+                RoutingStrategy::LeastLoaded => replicas
+                    .iter()
+                    .map(AsRef::as_ref)
+                    .filter(|r| open(r.id()))
+                    .map(|r| (r.load_tokens(), r.id()))
+                    .min()
+                    .map(|(_, id)| id)
+                    .unwrap(),
+                RoutingStrategy::SloAware if !headrooms.is_empty() => replicas
+                    .iter()
+                    .map(AsRef::as_ref)
+                    .filter(|r| open(r.id()))
+                    .map(|r| {
+                        // same key as best_by_headroom, headroom cached
+                        (std::cmp::Reverse(headrooms[r.id()]), r.load_tokens(), r.id())
+                    })
+                    .min()
+                    .map(|(_, _, id)| id)
+                    .expect("some replica is admissible"),
+                RoutingStrategy::SloAware => {
+                    let quota = task.slo.tokens_per_cycle();
+                    best_by_headroom(replicas, quota, |r| open(r.id()))
+                        .expect("some replica is admissible")
+                }
+            })
+        };
+        self.admission_scratch = mask;
+        self.headroom_scratch = headrooms;
+        pick
+    }
+
+    /// The migration pass run at each routing boundary: every
+    /// overloaded replica offers its not-yet-migrated queued tasks
+    /// back, and each is re-placed on the best *non-overloaded* peer by
+    /// (headroom, load, index) — a task never burns its single allowed
+    /// migration moving onto a replica that is itself overloaded. If
+    /// every peer fills up mid-pass, the remaining offers fall back to
+    /// the least-bad peer. Skipped entirely unless some peer has
+    /// positive headroom. Migrated tasks were admitted when first
+    /// routed, so re-placement deliberately ignores admission queue
+    /// bounds (bounds govern new arrivals, not work already accepted).
+    pub(crate) fn run_migrations<R: AsRef<Replica> + AsMut<Replica>>(
+        &mut self,
+        replicas: &mut [R],
+    ) {
+        if !self.migration || replicas.len() < 2 {
+            return;
+        }
+        for src in 0..replicas.len() {
+            if !replicas[src].as_ref().overloaded() {
+                continue;
+            }
+            let peer_has_headroom = replicas
+                .iter()
+                .map(AsRef::as_ref)
+                .any(|r| r.id() != src && !r.overloaded());
+            if !peer_has_headroom {
+                continue;
+            }
+            let offered = replicas[src].as_mut().withdraw_unmigrated(&self.migrated);
+            for task in offered {
+                let quota = task.slo.tokens_per_cycle();
+                let dst = best_by_headroom(replicas, quota, |r| {
+                    r.id() != src && !r.overloaded()
+                })
+                .or_else(|| best_by_headroom(replicas, quota, |r| r.id() != src))
+                .expect("fleet has at least two replicas");
+                self.migrated.insert(task.id);
+                self.migrations += 1;
+                replicas[dst].as_mut().receive_migrated(task);
+            }
+        }
+    }
+
+    /// The running-task KV-handoff pass: after the queued pass, a
+    /// replica the queue withdrawal could not decongest hands off
+    /// mid-generation tasks it has paused *and* evicted (see
+    /// [`Replica::running_candidates`] — work receiving zero service
+    /// whose cache is off-device anyway), cheapest utility first, to
+    /// the peer with the most Eq. 7 headroom — but only when that
+    /// headroom gain strictly exceeds the modelled KV transfer time
+    /// over the inter-replica link, so a handoff never costs more
+    /// cycle time than it buys. The fee rides on the task
+    /// (`pending_restore`) and is charged by the destination's serving
+    /// loop at the task's next decode.
+    pub(crate) fn run_running_migrations<R: AsRef<Replica> + AsMut<Replica>>(
+        &mut self,
+        replicas: &mut [R],
+    ) {
+        if !self.migration || !self.migrate_running || replicas.len() < 2 {
+            return;
+        }
+        for src in 0..replicas.len() {
+            if !replicas[src].as_ref().overloaded() {
+                continue;
+            }
+            let candidates = replicas[src].as_ref().running_candidates(&self.migrated);
+            for (_, gid, quota, tokens) in candidates {
+                if !replicas[src].as_ref().overloaded() {
+                    break;
+                }
+                let Some((dst, dst_headroom)) =
+                    best_by_headroom_with(replicas, quota, |r| {
+                        r.id() != src && !r.overloaded()
+                    })
+                else {
+                    break;
+                };
+                let fee = self.memory.handoff_cost(tokens);
+                if dst_headroom <= fee {
+                    // Eq. 7 gain does not cover this cache's transfer; a
+                    // later candidate may be smaller, so keep scanning
+                    continue;
+                }
+                let task = replicas[src].as_mut().extract_running(gid, fee);
+                self.migrated.insert(gid);
+                self.migrations += 1;
+                self.migrated_running += 1;
+                self.handoff_bytes += self.memory.bytes_for(tokens);
+                self.handoff_us += fee;
+                replicas[dst].as_mut().receive_migrated(task);
+            }
+        }
+    }
+
+    /// Consume the controller and the drained fleet into the final
+    /// [`ClusterReport`] — the single construction point both engines
+    /// share, so the report shape cannot drift between them.
+    pub(crate) fn into_report(self, replicas: Vec<Replica>) -> ClusterReport {
+        ClusterReport {
+            strategy: self.strategy.label(),
+            migrations: self.migrations,
+            migrated_running: self.migrated_running,
+            handoff_bytes: self.handoff_bytes,
+            handoff_us: self.handoff_us,
+            rejected: self.rejected,
+            replicas: replicas.into_iter().map(Replica::finish).collect(),
+        }
+    }
+}
+
+/// The replica with the most Eq. 7 headroom for `quota` among those
+/// `eligible` — ties broken by least load, then lowest index (the
+/// deterministic placement key shared by SLO-aware routing and
+/// migration re-placement). `None` when nothing is eligible.
+fn best_by_headroom<R: AsRef<Replica>, F: Fn(&Replica) -> bool>(
+    replicas: &[R],
+    quota: u32,
+    eligible: F,
+) -> Option<usize> {
+    best_by_headroom_with(replicas, quota, eligible).map(|(id, _)| id)
+}
+
+/// [`best_by_headroom`] returning the winner's headroom as well, so
+/// callers comparing it against a fee don't re-evaluate the replica's
+/// whole Eq. 7 demand.
+fn best_by_headroom_with<R: AsRef<Replica>, F: Fn(&Replica) -> bool>(
+    replicas: &[R],
+    quota: u32,
+    eligible: F,
+) -> Option<(usize, Micros)> {
+    replicas
+        .iter()
+        .map(AsRef::as_ref)
+        .filter(|r| eligible(r))
+        .map(|r| (std::cmp::Reverse(r.headroom(quota)), r.load_tokens(), r.id()))
+        .min()
+        .map(|(std::cmp::Reverse(headroom), _, id)| (id, headroom))
+}

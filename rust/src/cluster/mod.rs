@@ -1,18 +1,27 @@
 //! Cluster layer: multi-replica edge serving above L3 (DESIGN.md
-//! "Cluster layer" / "Heterogeneous fleets").
+//! "Cluster layer" / "Heterogeneous fleets" / "Event-driven cluster
+//! engine").
 //!
-//! The paper schedules one edge device. This layer scales SLICE out: a
-//! [`Router`] dispatches the arrival stream across N [`Replica`]s —
-//! each a complete single-device stack (`server::Server` + a `Policy` +
-//! a sim engine on its own virtual clock) built from a per-replica
-//! [`DeviceProfile`] — under a pluggable [`RoutingStrategy`]
-//! (round-robin, least-loaded, or SLO-aware Eq. 7 headroom). Replica
-//! clocks are advanced in lockstep to each arrival, so routing sees
-//! device load exactly when a real front-end would. Fleets may be
-//! heterogeneous ([`FleetSpec`]: mixed device tiers), the router can
-//! apply per-class admission bounds ([`AdmissionConfig`]), and
-//! overloaded replicas can offer queued tasks back for re-placement
-//! (migration) — both opt-in.
+//! The paper schedules one edge device. This layer scales SLICE out
+//! across N [`Replica`]s — each a complete single-device stack
+//! (`server::Server` + a `Policy` + a sim engine on its own virtual
+//! clock) built from a per-replica [`DeviceProfile`] — under a
+//! pluggable [`RoutingStrategy`] (round-robin, least-loaded, or
+//! SLO-aware Eq. 7 headroom). Fleets may be heterogeneous
+//! ([`FleetSpec`]: mixed device tiers), the fleet can apply per-class
+//! admission bounds ([`AdmissionConfig`]), and overloaded replicas can
+//! offer queued tasks back for re-placement (migration) — both opt-in.
+//!
+//! Two engines drive the fleet, sharing every decision through the
+//! internal `controller` module:
+//!   * [`Router`] — the **lockstep reference engine**: advances every
+//!     replica's clock to every arrival before routing it, so load
+//!     signals are read exactly when a real front-end would read them;
+//!   * [`Orchestrator`] — the **event-driven engine**: a global
+//!     [`EventHeap`] of next-arrival / per-node wake / drain-boundary
+//!     events; a replica ([`Node`]) is advanced only when it has work.
+//!     Bit-exact with the router (pinned by
+//!     `rust/tests/equivalence.rs`), and the one to use at fleet scale.
 //!
 //! Contracts:
 //!   * the scheduler code each replica runs is byte-identical to the
@@ -20,6 +29,9 @@
 //!     migration disabled) reproduces `Server::run` exactly (asserted
 //!     in `rust/tests/cluster_integration.rs` and
 //!     `rust/tests/hetero_fleet.rs`);
+//!   * both engines produce identical [`ClusterReport`]s for the same
+//!     inputs — the event engine's heap order `(time, kind, replica,
+//!     task)` reproduces lockstep's decision order;
 //!   * cluster runs are deterministic for a fixed workload seed: every
 //!     routing, admission and migration tie-break is deterministic
 //!     (lowest replica index last);
@@ -32,10 +44,15 @@
 //! Multi-replica serving is an **extension**, not part of the paper —
 //! see DESIGN.md "Deviations from the paper".
 
+pub(crate) mod controller;
 pub mod fleet;
+pub mod node;
+pub mod orchestrator;
 pub mod replica;
 pub mod router;
 
 pub use fleet::{AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec};
+pub use node::Node;
+pub use orchestrator::{Event, EventHeap, EventKind, Orchestrator};
 pub use replica::{Replica, ReplicaReport};
 pub use router::{ClusterReport, Router, RoutingStrategy};

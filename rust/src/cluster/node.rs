@@ -1,0 +1,115 @@
+//! One event-engine node: a [`Replica`] plus the bookkeeping the
+//! [`crate::cluster::Orchestrator`] needs to advance it lazily —
+//! its scheduled wake time, the last boundary it was advanced to, and
+//! an advancement counter (the observable that proves an idle replica
+//! is never stepped, which the lockstep engine cannot do).
+//!
+//! A node exposes the *time of its next interesting event*
+//! ([`Node::next_event_time`], delegating to
+//! [`Replica::next_event_time`]): the earliest instant at which
+//! advancing the replica would do real work (deliver an arrival or run
+//! an engine step) rather than just move its clock. The orchestrator
+//! only schedules wake events at these times; everything else about
+//! routing-visible replica state (`queued_in_class`, `load_tokens`,
+//! `headroom`, `overloaded`) is clock-independent, so a lagging clock
+//! on an idle node is unobservable to the shared
+//! [`Controller`](super::controller::Controller) decision code.
+
+use anyhow::Result;
+
+use crate::util::Micros;
+
+use super::replica::Replica;
+
+/// A replica wrapped with event-engine advancement bookkeeping.
+pub struct Node {
+    replica: Replica,
+    /// The wake time currently scheduled in the orchestrator's event
+    /// heap, if any. An entry popping with a different time is stale
+    /// (the wake was refreshed after assignment/migration) and dropped.
+    wake: Option<Micros>,
+    /// The last routing boundary this node was advanced to.
+    advanced_to: Option<Micros>,
+    /// Number of `run_until` advancements issued to the replica — the
+    /// event engine's cost model, and the proof obligation of the
+    /// idle-replica property test (an unused replica stays at zero).
+    advancements: u64,
+}
+
+impl Node {
+    /// Wrap a replica for event-driven advancement.
+    pub fn new(replica: Replica) -> Self {
+        Node { replica, wake: None, advanced_to: None, advancements: 0 }
+    }
+
+    /// The wrapped replica (read-only).
+    pub fn replica(&self) -> &Replica {
+        &self.replica
+    }
+
+    /// Unwrap into the replica (for [`Replica::finish`]).
+    pub fn into_replica(self) -> Replica {
+        self.replica
+    }
+
+    /// The wake time currently scheduled in the event heap, if any.
+    pub fn wake(&self) -> Option<Micros> {
+        self.wake
+    }
+
+    /// Record that a wake event for time `t` is now in the heap.
+    pub fn set_wake(&mut self, t: Micros) {
+        self.wake = Some(t);
+    }
+
+    /// Record that this node's scheduled wake was consumed (or that any
+    /// remaining heap entries for it are stale).
+    pub fn clear_wake(&mut self) {
+        self.wake = None;
+    }
+
+    /// The last routing boundary this node was advanced to.
+    pub fn advanced_to(&self) -> Option<Micros> {
+        self.advanced_to
+    }
+
+    /// How many advancement calls this node has received.
+    pub fn advancements(&self) -> u64 {
+        self.advancements
+    }
+
+    /// Advance the replica's simulation to boundary `t` (counted — this
+    /// is real work: delivering arrivals and running engine steps).
+    pub fn advance_to(&mut self, t: Micros) -> Result<()> {
+        self.advancements += 1;
+        self.advanced_to = Some(t);
+        self.replica.run_until(t)
+    }
+
+    /// Move the replica's clock to `t` without running the serving loop
+    /// (uncounted — used at the drain boundary for replicas that never
+    /// had work, so their reports end at the common horizon exactly as
+    /// under lockstep while the zero-advancement property still holds).
+    pub fn sync_clock(&mut self, t: Micros) {
+        self.replica.sync_clock(t);
+    }
+
+    /// Earliest time at which advancing this replica would do real
+    /// work, or `None` when it is fully idle (no live, staged, or
+    /// pending-arrival tasks).
+    pub fn next_event_time(&self) -> Option<Micros> {
+        self.replica.next_event_time()
+    }
+}
+
+impl AsRef<Replica> for Node {
+    fn as_ref(&self) -> &Replica {
+        &self.replica
+    }
+}
+
+impl AsMut<Replica> for Node {
+    fn as_mut(&mut self) -> &mut Replica {
+        &mut self.replica
+    }
+}

@@ -1,0 +1,379 @@
+//! The event-driven cluster engine: a global binary-heap event queue
+//! over per-replica [`Node`]s, advancing a replica only when it has
+//! work (DESIGN.md "Event-driven cluster engine").
+//!
+//! The lockstep reference engine ([`crate::cluster::Router`]) advances
+//! every replica to every arrival — O(arrivals × replicas) `run_until`
+//! calls, almost all of them no-ops on wide fleets. This engine keeps
+//! one [`EventHeap`] ordered by the deterministic key
+//! `(time, kind, replica, task)` and pops three event kinds:
+//!
+//!   * [`EventKind::Wake`] — a node's next-interesting-event time was
+//!     reached: advance *that node* to the current routing boundary
+//!     (one `run_until`, the same call lockstep would have made);
+//!   * [`EventKind::RescheduleBoundary`] — the final drain boundary at
+//!     the common horizon;
+//!   * [`EventKind::Arrival`] — route one task: run the shared
+//!     [`Controller`] migration passes, decide, assign.
+//!
+//! Exactly one `Arrival` event is in the heap at a time (the next one
+//! is pushed after the current one is handled), so the heap holds at
+//! most one wake per node plus two boundary events — O(events log
+//! replicas) total work.
+//!
+//! ## Why this reproduces lockstep bit-for-bit
+//!
+//! The engine only ever calls `run_until` with *boundary times* — the
+//! same arrival-time/horizon targets the lockstep loop uses — and it
+//! skips exactly the calls that would have been no-ops: a replica with
+//! no live, staged, or pending work neither delivers arrivals nor runs
+//! engine steps under `run_until`, it only moves its clock, and every
+//! routing-visible load signal is clock-independent. Wake events sort
+//! *before* same-time `Arrival`/`RescheduleBoundary` events (the kind
+//! rank), so every node with work due by a boundary is advanced to it
+//! before the boundary's decision runs — the lockstep order. Migration
+//! passes run *inline* in the `Arrival` handler (not as separate heap
+//! events): lockstep interleaves (migrate, decide) per task even for
+//! same-time arrivals, and the kind-major tie-break would otherwise
+//! batch all same-time reschedules ahead of all same-time arrivals,
+//! changing decision order. The equivalence suite
+//! (`rust/tests/equivalence.rs`) pins all of this: every cluster /
+//! hetero-fleet / memory cell must produce an identical
+//! [`ClusterReport`] under both engines.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::coordinator::task::{Task, TaskId};
+use crate::engine::memory::MemoryConfig;
+use crate::util::Micros;
+
+use super::controller::Controller;
+use super::fleet::AdmissionConfig;
+use super::node::Node;
+use super::replica::Replica;
+use super::router::{ClusterReport, RoutingStrategy};
+
+/// What a popped event asks the orchestrator to do. The discriminant
+/// order is the heap tie-break rank at equal times: wakes first (nodes
+/// reach the boundary before any decision runs there), then the drain
+/// boundary, then arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A node's next-interesting-event time arrived: advance it.
+    Wake,
+    /// The common drain horizon: advance everything with work, finish.
+    RescheduleBoundary,
+    /// Route the next workload task.
+    Arrival,
+}
+
+/// One scheduled event. Ordering is the documented deterministic
+/// contract: time, then kind rank, then replica id, then task id —
+/// derived lexicographically from the field order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Event {
+    /// Virtual time the event fires at.
+    pub time: Micros,
+    /// What to do (and the same-time rank; see [`EventKind`]).
+    pub kind: EventKind,
+    /// Node the event concerns (wake events; 0 otherwise).
+    pub replica: usize,
+    /// Task the event concerns (arrival events; 0 otherwise).
+    pub task: TaskId,
+}
+
+/// A min-heap of [`Event`]s popping in `(time, kind, replica, task)`
+/// order. Public so the property suite can drive it directly (the
+/// never-pops-out-of-order invariant).
+#[derive(Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventHeap {
+    /// An empty heap.
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new() }
+    }
+
+    /// Schedule an event.
+    pub fn push(&mut self, event: Event) {
+        self.heap.push(Reverse(event));
+    }
+
+    /// Pop the least event under the deterministic key.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// The least event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(e)| e)
+    }
+
+    /// Number of scheduled events (stale wake entries included).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// The event-driven cluster engine: same construction surface and same
+/// [`ClusterReport`] as [`crate::cluster::Router`], different time
+/// advancement.
+pub struct Orchestrator {
+    nodes: Vec<Node>,
+    ctl: Controller,
+}
+
+impl Orchestrator {
+    /// Build an orchestrator over pre-constructed replicas (at least
+    /// one), mirroring [`crate::cluster::Router::new`].
+    pub fn new(strategy: RoutingStrategy, replicas: Vec<Replica>) -> Self {
+        assert!(!replicas.is_empty(), "a cluster needs at least one replica");
+        assert!(
+            replicas.iter().enumerate().all(|(i, r)| r.id() == i),
+            "replica ids must equal their fleet position"
+        );
+        Orchestrator {
+            nodes: replicas.into_iter().map(Node::new).collect(),
+            ctl: Controller::new(strategy),
+        }
+    }
+
+    /// Enable/configure per-class admission bounds.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.ctl.admission = admission;
+        self
+    }
+
+    /// Enable or disable overload migration.
+    pub fn with_migration(mut self, migration: bool) -> Self {
+        self.ctl.migration = migration;
+        self
+    }
+
+    /// Enable running-task KV-handoff migration, priced by `memory`.
+    pub fn with_running_migration(mut self, enabled: bool, memory: MemoryConfig) -> Self {
+        self.ctl.migrate_running = enabled;
+        self.ctl.memory = memory;
+        self
+    }
+
+    /// Number of replicas in the fleet.
+    pub fn replica_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Recompute a node's wake time after its workload changed
+    /// (assignment or migration) and reschedule it in the heap. Stale
+    /// heap entries are invalidated by the wake-time mismatch on pop.
+    fn refresh_wake(&mut self, idx: usize, heap: &mut EventHeap) {
+        let node = &mut self.nodes[idx];
+        let next = node.next_event_time();
+        if node.wake() == next {
+            return; // already scheduled at the right time
+        }
+        match next {
+            Some(t) => {
+                node.set_wake(t);
+                heap.push(Event { time: t, kind: EventKind::Wake, replica: idx, task: 0 });
+            }
+            None => node.clear_wake(),
+        }
+    }
+
+    /// Route and serve an entire workload, then drain to `last_arrival
+    /// + drain` — the same contract as [`crate::cluster::Router::run`],
+    /// with identical output.
+    pub fn run(self, workload: Vec<Task>, drain: Micros) -> Result<ClusterReport> {
+        self.run_counted(workload, drain).map(|(report, _)| report)
+    }
+
+    /// [`Orchestrator::run`], additionally returning the per-node
+    /// advancement counts (how many `run_until` calls each replica
+    /// received) — the observability hook the idle-replica property
+    /// test and the scale sweep's activity accounting use.
+    pub fn run_counted(
+        mut self,
+        workload: Vec<Task>,
+        drain: Micros,
+    ) -> Result<(ClusterReport, Vec<u64>)> {
+        assert!(
+            workload.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "workload must be sorted by arrival"
+        );
+        let last_arrival = workload.last().map_or(0, |t| t.arrival);
+        let horizon = last_arrival + drain;
+        let mut arrivals = workload.into_iter();
+        let mut heap = EventHeap::new();
+        // nodes that reached the current boundary and whose recomputed
+        // wake is *at* the boundary (still busy there): re-armed after
+        // the boundary advances, so a busy node cannot wake-loop
+        let mut parked: Vec<usize> = Vec::new();
+        // the single in-flight arrival (its heap event carries the id)
+        let mut next_arrival: Option<Task> = None;
+        // time of the next Arrival event, or the horizon once the
+        // workload is exhausted — every wake advances its node here
+        let mut next_boundary = match arrivals.next() {
+            Some(t) => {
+                let at = t.arrival;
+                heap.push(Event { time: at, kind: EventKind::Arrival, replica: 0, task: t.id });
+                next_arrival = Some(t);
+                at
+            }
+            None => {
+                heap.push(Event {
+                    time: horizon,
+                    kind: EventKind::RescheduleBoundary,
+                    replica: 0,
+                    task: 0,
+                });
+                horizon
+            }
+        };
+
+        loop {
+            let ev = heap
+                .pop()
+                .expect("the boundary-event chain keeps the heap non-empty");
+            match ev.kind {
+                EventKind::Wake => {
+                    let node = &mut self.nodes[ev.replica];
+                    if node.wake() != Some(ev.time) {
+                        continue; // stale entry: the wake was refreshed
+                    }
+                    node.clear_wake();
+                    if node.advanced_to() == Some(next_boundary) {
+                        // already at the boundary and busy there —
+                        // re-arm only after the boundary moves on
+                        parked.push(ev.replica);
+                        continue;
+                    }
+                    node.advance_to(next_boundary)?;
+                    if let Some(t) = node.next_event_time() {
+                        node.set_wake(t);
+                        heap.push(Event {
+                            time: t,
+                            kind: EventKind::Wake,
+                            replica: ev.replica,
+                            task: 0,
+                        });
+                    }
+                }
+                EventKind::Arrival => {
+                    let task = next_arrival.take().expect("arrival event without its task");
+                    debug_assert_eq!(task.id, ev.task);
+                    if self.ctl.migration {
+                        // a migrated-in task may carry an arrival time
+                        // earlier than this boundary, so an *idle*
+                        // destination must have its clock at the
+                        // boundary — where lockstep left it — before
+                        // the task lands, or it would be delivered (and
+                        // prefilled) in the destination's past. Busy
+                        // nodes are already here via their wakes; idle
+                        // ones only need the clock moved (uncounted —
+                        // no arrivals to deliver, no steps to run).
+                        for node in &mut self.nodes {
+                            if node.advanced_to() != Some(ev.time)
+                                && node.next_event_time().is_none()
+                            {
+                                node.sync_clock(ev.time);
+                            }
+                        }
+                    }
+                    // inline migration passes, then decide — the exact
+                    // per-task interleaving the lockstep loop runs
+                    self.ctl.run_migrations(&mut self.nodes);
+                    self.ctl.run_running_migrations(&mut self.nodes);
+                    let pick = self.ctl.decide(&self.nodes, &task);
+                    match pick {
+                        Some(p) => self.nodes[p].as_mut().assign(task),
+                        None => self.ctl.rejected.push(task),
+                    }
+                    // move the boundary forward *before* re-arming
+                    // wakes, so a wake at this same time advances
+                    // instead of parking forever
+                    next_boundary = match arrivals.next() {
+                        Some(t) => {
+                            let at = t.arrival;
+                            heap.push(Event {
+                                time: at,
+                                kind: EventKind::Arrival,
+                                replica: 0,
+                                task: t.id,
+                            });
+                            next_arrival = Some(t);
+                            at
+                        }
+                        None => {
+                            heap.push(Event {
+                                time: horizon,
+                                kind: EventKind::RescheduleBoundary,
+                                replica: 0,
+                                task: 0,
+                            });
+                            horizon
+                        }
+                    };
+                    if self.ctl.migration {
+                        // migration may have moved work between any
+                        // pair of nodes: re-arm the whole fleet (the
+                        // pass itself is already O(replicas))
+                        for i in 0..self.nodes.len() {
+                            self.refresh_wake(i, &mut heap);
+                        }
+                        parked.clear();
+                    } else {
+                        // only the assigned node's workload changed
+                        for i in std::mem::take(&mut parked) {
+                            self.refresh_wake(i, &mut heap);
+                        }
+                        if let Some(p) = pick {
+                            self.refresh_wake(p, &mut heap);
+                        }
+                    }
+                }
+                EventKind::RescheduleBoundary => {
+                    debug_assert_eq!(ev.time, horizon);
+                    // the drain boundary: same-time wakes already
+                    // popped (kind rank), so every node with live work
+                    // has been advanced to the horizon. Nodes that had
+                    // work earlier but idled drain with a (counted)
+                    // advancement, exactly like lockstep; nodes that
+                    // never had work only sync their clock so reports
+                    // end at the common horizon with zero advancements.
+                    for node in &mut self.nodes {
+                        if node.advanced_to() == Some(horizon) {
+                            // drained by its own wake
+                        } else if node.advancements() > 0 || node.wake().is_some() {
+                            node.advance_to(horizon)?;
+                        } else {
+                            node.sync_clock(horizon);
+                        }
+                        let r = node.as_ref();
+                        assert!(
+                            r.pending() == 0,
+                            "drain window too small: replica {} has {} undelivered arrivals",
+                            r.id(),
+                            r.pending()
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+
+        let counts: Vec<u64> = self.nodes.iter().map(Node::advancements).collect();
+        let replicas: Vec<Replica> =
+            self.nodes.into_iter().map(Node::into_replica).collect();
+        Ok((self.ctl.into_report(replicas), counts))
+    }
+}

@@ -263,6 +263,36 @@ impl Replica {
         out
     }
 
+    /// Earliest time at which advancing this replica would do real work
+    /// — run an engine step or deliver an arrival — or `None` when it
+    /// is fully idle. This is the event engine's wake signal
+    /// (DESIGN.md "Event-driven cluster engine"): the orchestrator
+    /// never advances a replica before this time, and a `None` replica
+    /// is never advanced at all.
+    pub fn next_event_time(&self) -> Option<Micros> {
+        let staged = self.staged.first().map(|t| t.arrival);
+        match (self.server.next_event_time(), staged) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Move this replica's clock to `t` without running the serving
+    /// loop. Only meaningful while the replica is fully idle
+    /// ([`Replica::next_event_time`] is `None`): for an idle replica,
+    /// [`Replica::run_until`] would deliver nothing and step nothing —
+    /// the clock move is all it does — so the event engine uses this to
+    /// keep idle clocks at routing boundaries without charging an
+    /// advancement.
+    pub fn sync_clock(&mut self, t: Micros) {
+        debug_assert!(
+            self.next_event_time().is_none(),
+            "sync_clock would skip real work on replica {}",
+            self.id
+        );
+        self.server.sync_clock(t);
+    }
+
     /// Advance this replica's simulation to time `t`, handing staged
     /// arrivals due by then to the server (assigning their dense local
     /// ids in delivery order).
@@ -363,6 +393,22 @@ impl Replica {
             migrated_out: self.migrated_out,
             report,
         }
+    }
+}
+
+/// Identity impls so the shared [`Controller`](super::controller)
+/// decision code runs verbatim over bare replica slices (the lockstep
+/// router) and over [`Node`](super::node::Node) slices (the event
+/// engine).
+impl AsRef<Replica> for Replica {
+    fn as_ref(&self) -> &Replica {
+        self
+    }
+}
+
+impl AsMut<Replica> for Replica {
+    fn as_mut(&mut self) -> &mut Replica {
+        self
     }
 }
 
@@ -648,6 +694,29 @@ mod tests {
         r.assign(Task::new(1, TaskClass::RealTime, 0, 16, 200, 100.0));
         r.run_until(secs(1.0)).unwrap();
         assert!(r.running_candidates(&HashSet::new()).is_empty());
+    }
+
+    #[test]
+    fn next_event_time_covers_staged_pending_and_live_work() {
+        let mut r = replica();
+        assert_eq!(r.next_event_time(), None, "fresh replica is idle");
+        r.sync_clock(secs(3.0));
+        assert_eq!(r.now(), secs(3.0), "idle clock syncs without advancement");
+        r.assign(Task::new(0, TaskClass::Voice, secs(5.0), 16, 400, 1.0));
+        assert_eq!(
+            r.next_event_time(),
+            Some(secs(5.0)),
+            "staged arrival is the next event"
+        );
+        r.run_until(secs(5.5)).unwrap();
+        assert_eq!(
+            r.next_event_time(),
+            Some(r.now()),
+            "live unfinished work wakes immediately"
+        );
+        r.run_until(secs(60.0)).unwrap();
+        assert_eq!(r.next_event_time(), None, "drained replica is idle again");
+        let _ = r.finish();
     }
 
     #[test]

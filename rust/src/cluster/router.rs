@@ -3,11 +3,21 @@
 //! and overload migration (DESIGN.md "Cluster layer" / "Heterogeneous
 //! fleets").
 //!
-//! The router is a discrete-event co-simulation driver: before each
-//! routing decision it advances every replica's virtual clock to the
-//! task's arrival time, so load signals are read at the moment the task
-//! arrives — the same information a real front-end would have. After the
-//! last arrival the fleet drains to a common horizon.
+//! The router is the **lockstep reference engine**: a discrete-event
+//! co-simulation driver that, before each routing decision, advances
+//! every replica's virtual clock to the task's arrival time, so load
+//! signals are read at the moment the task arrives — the same
+//! information a real front-end would have. After the last arrival the
+//! fleet drains to a common horizon. The event-driven engine
+//! ([`crate::cluster::Orchestrator`]) reproduces this engine
+//! bit-for-bit while only advancing replicas that have work; the
+//! lockstep loop stays in-tree as the semantic reference the
+//! equivalence suite pins the event engine against (DESIGN.md
+//! "Event-driven cluster engine").
+//!
+//! All routing/admission/migration *decisions* live in the shared
+//! [`Controller`](super::controller::Controller) — the router only owns
+//! the lockstep time-advancement loop.
 //!
 //! Strategies (cf. SLOs-Serve, arXiv:2504.08784, and the deadline-aware
 //! routing argument of arXiv:2504.14966):
@@ -50,8 +60,6 @@
 //! decodes, so handoff latency lands in the task's own timing record.
 //! Exactly-once, cheapest-utility-first, deterministic.
 
-use std::collections::HashSet;
-
 use anyhow::Result;
 
 use crate::coordinator::task::{Task, TaskId};
@@ -59,7 +67,8 @@ use crate::engine::memory::{MemoryConfig, MemoryStats};
 use crate::metrics::{Attainment, LatencySummary};
 use crate::util::Micros;
 
-use super::fleet::{AdmissionConfig, AdmissionMode};
+use super::controller::Controller;
+use super::fleet::AdmissionConfig;
 use super::replica::{Replica, ReplicaReport};
 
 /// How the router picks a replica for each arriving task.
@@ -103,32 +112,11 @@ impl RoutingStrategy {
     }
 }
 
-/// Dispatches tasks across a fleet of [`Replica`]s.
+/// Dispatches tasks across a fleet of [`Replica`]s in lockstep (the
+/// reference engine).
 pub struct Router {
-    strategy: RoutingStrategy,
-    replicas: Vec<Replica>,
-    admission: AdmissionConfig,
-    migration: bool,
-    /// Running-task KV handoff (requires `migration`).
-    migrate_running: bool,
-    /// Prices KV handoffs (bytes per token, link bandwidth).
-    memory: MemoryConfig,
-    rr_next: usize,
-    /// Admissibility-mask buffer reused across routing decisions (one
-    /// decision runs per arrival — the cluster hot path allocates
-    /// nothing whether or not admission control is on).
-    admission_scratch: Vec<bool>,
-    /// Per-replica headrooms computed by a headroom-admission pass,
-    /// reused by the SLO-aware pick in the same decision so each
-    /// replica's Eq. 7 demand is evaluated once per arrival, not twice.
-    headroom_scratch: Vec<Micros>,
-    /// Global ids that have migrated once already (exactly-once cap).
-    migrated: HashSet<TaskId>,
-    migrations: u64,
-    migrated_running: u64,
-    handoff_bytes: u64,
-    handoff_us: Micros,
-    rejected: Vec<Task>,
+    pub(crate) replicas: Vec<Replica>,
+    pub(crate) ctl: Controller,
 }
 
 impl Router {
@@ -143,42 +131,26 @@ impl Router {
             replicas.iter().enumerate().all(|(i, r)| r.id() == i),
             "replica ids must equal their fleet position"
         );
-        Router {
-            strategy,
-            replicas,
-            admission: AdmissionConfig::default(),
-            migration: false,
-            migrate_running: false,
-            memory: MemoryConfig::default(),
-            rr_next: 0,
-            admission_scratch: Vec::new(),
-            headroom_scratch: Vec::new(),
-            migrated: HashSet::new(),
-            migrations: 0,
-            migrated_running: 0,
-            handoff_bytes: 0,
-            handoff_us: 0,
-            rejected: Vec::new(),
-        }
+        Router { replicas, ctl: Controller::new(strategy) }
     }
 
     /// Enable/configure per-class admission bounds.
     pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
-        self.admission = admission;
+        self.ctl.admission = admission;
         self
     }
 
     /// Enable or disable overload migration.
     pub fn with_migration(mut self, migration: bool) -> Self {
-        self.migration = migration;
+        self.ctl.migration = migration;
         self
     }
 
     /// Enable running-task KV-handoff migration, priced by `memory`
     /// (takes effect only while [`Router::with_migration`] is on).
     pub fn with_running_migration(mut self, enabled: bool, memory: MemoryConfig) -> Self {
-        self.migrate_running = enabled;
-        self.memory = memory;
+        self.ctl.migrate_running = enabled;
+        self.ctl.memory = memory;
         self
     }
 
@@ -188,198 +160,20 @@ impl Router {
     }
 
     /// Pick the replica for `task` under the configured strategy, or
-    /// `None` when admission control sheds it (every replica is at its
-    /// class bound). Tie-breaks are deterministic: least-loaded breaks
-    /// ties by lowest replica index, and SLO-aware breaks headroom ties
-    /// by least load, then lowest replica index — so cluster runs are
-    /// reproducible for a fixed seed.
+    /// `None` when admission control sheds it (see
+    /// [`Controller::decide`], which both engines share).
     pub fn decide(&mut self, task: &Task) -> Option<usize> {
-        // the admissibility mask lives in a scratch buffer reused
-        // across decisions (temporarily moved out so the strategy arms
-        // below can borrow the router), and is only filled when
-        // admission is on — the bench-tracked cluster/decide hot path
-        // never allocates in steady state
-        let mut mask = std::mem::take(&mut self.admission_scratch);
-        let mut headrooms = std::mem::take(&mut self.headroom_scratch);
-        mask.clear();
-        headrooms.clear();
-        let use_mask = self.admission.enabled;
-        if use_mask {
-            match self.admission.mode {
-                AdmissionMode::QueueDepth => {
-                    let bound = self.admission.bound_for(task.class);
-                    mask.extend(
-                        self.replicas
-                            .iter()
-                            .map(|r| r.queued_in_class(task.class) < bound),
-                    );
-                }
-                AdmissionMode::Headroom => {
-                    // keep the computed headrooms: the SLO-aware pick
-                    // below reuses them, so headroom admission costs
-                    // one Eq. 7 evaluation per replica, not two
-                    let quota = task.slo.tokens_per_cycle();
-                    for r in &self.replicas {
-                        let h = r.headroom(quota);
-                        headrooms.push(h);
-                        mask.push(h > 0);
-                    }
-                }
-            }
-        }
-        let open = |i: usize| !use_mask || mask[i];
-        let pick = if !(0..self.replicas.len()).any(open) {
-            None
-        } else {
-            Some(match self.strategy {
-                RoutingStrategy::RoundRobin => {
-                    // first admissible replica at or after the cursor
-                    let start = self.rr_next;
-                    let n = self.replicas.len();
-                    let k = (0..n)
-                        .find(|&k| open((start + k) % n))
-                        .expect("some replica is admissible");
-                    self.rr_next = start + k + 1;
-                    (start + k) % n
-                }
-                RoutingStrategy::LeastLoaded => self
-                    .replicas
-                    .iter()
-                    .filter(|r| open(r.id()))
-                    .map(|r| (r.load_tokens(), r.id()))
-                    .min()
-                    .map(|(_, id)| id)
-                    .unwrap(),
-                RoutingStrategy::SloAware if !headrooms.is_empty() => self
-                    .replicas
-                    .iter()
-                    .filter(|r| open(r.id()))
-                    .map(|r| {
-                        // same key as best_by_headroom, headroom cached
-                        (std::cmp::Reverse(headrooms[r.id()]), r.load_tokens(), r.id())
-                    })
-                    .min()
-                    .map(|(_, _, id)| id)
-                    .expect("some replica is admissible"),
-                RoutingStrategy::SloAware => {
-                    let quota = task.slo.tokens_per_cycle();
-                    self.best_by_headroom(quota, |r| open(r.id()))
-                        .expect("some replica is admissible")
-                }
-            })
-        };
-        self.admission_scratch = mask;
-        self.headroom_scratch = headrooms;
-        pick
+        self.ctl.decide(&self.replicas, task)
     }
 
-    /// The replica with the most Eq. 7 headroom for `quota` among those
-    /// `eligible` — ties broken by least load, then lowest index (the
-    /// deterministic placement key shared by SLO-aware routing and
-    /// migration re-placement). `None` when nothing is eligible.
-    fn best_by_headroom<F: Fn(&Replica) -> bool>(&self, quota: u32, eligible: F) -> Option<usize> {
-        self.best_by_headroom_with(quota, eligible).map(|(id, _)| id)
-    }
-
-    /// [`Router::best_by_headroom`] returning the winner's headroom as
-    /// well, so callers comparing it against a fee don't re-evaluate
-    /// the replica's whole Eq. 7 demand.
-    fn best_by_headroom_with<F: Fn(&Replica) -> bool>(
-        &self,
-        quota: u32,
-        eligible: F,
-    ) -> Option<(usize, Micros)> {
-        self.replicas
-            .iter()
-            .filter(|r| eligible(r))
-            .map(|r| (std::cmp::Reverse(r.headroom(quota)), r.load_tokens(), r.id()))
-            .min()
-            .map(|(std::cmp::Reverse(headroom), _, id)| (id, headroom))
-    }
-
-    /// The migration pass run at each routing boundary: every
-    /// overloaded replica offers its not-yet-migrated queued tasks
-    /// back, and each is re-placed on the best *non-overloaded* peer by
-    /// (headroom, load, index) — a task never burns its single allowed
-    /// migration moving onto a replica that is itself overloaded. If
-    /// every peer fills up mid-pass, the remaining offers fall back to
-    /// the least-bad peer. Skipped entirely unless some peer has
-    /// positive headroom. Migrated tasks were admitted when first
-    /// routed, so re-placement deliberately ignores admission queue
-    /// bounds (bounds govern new arrivals, not work already accepted).
+    /// The queued-task migration pass (shared [`Controller`] code).
     fn run_migrations(&mut self) {
-        if !self.migration || self.replicas.len() < 2 {
-            return;
-        }
-        for src in 0..self.replicas.len() {
-            if !self.replicas[src].overloaded() {
-                continue;
-            }
-            let peer_has_headroom = self
-                .replicas
-                .iter()
-                .any(|r| r.id() != src && !r.overloaded());
-            if !peer_has_headroom {
-                continue;
-            }
-            let offered = self.replicas[src].withdraw_unmigrated(&self.migrated);
-            for task in offered {
-                let quota = task.slo.tokens_per_cycle();
-                let dst = self
-                    .best_by_headroom(quota, |r| r.id() != src && !r.overloaded())
-                    .or_else(|| self.best_by_headroom(quota, |r| r.id() != src))
-                    .expect("fleet has at least two replicas");
-                self.migrated.insert(task.id);
-                self.migrations += 1;
-                self.replicas[dst].receive_migrated(task);
-            }
-        }
+        self.ctl.run_migrations(&mut self.replicas);
     }
 
-    /// The running-task KV-handoff pass: after the queued pass, a
-    /// replica the queue withdrawal could not decongest hands off
-    /// mid-generation tasks it has paused *and* evicted (see
-    /// [`Replica::running_candidates`] — work receiving zero service
-    /// whose cache is off-device anyway), cheapest utility first, to
-    /// the peer with the most Eq. 7 headroom — but only when that
-    /// headroom gain strictly exceeds the modelled KV transfer time
-    /// over the inter-replica link, so a handoff never costs more
-    /// cycle time than it buys. The fee rides on the task
-    /// (`pending_restore`) and is charged by the destination's serving
-    /// loop at the task's next decode.
+    /// The running-task KV-handoff pass (shared [`Controller`] code).
     fn run_running_migrations(&mut self) {
-        if !self.migration || !self.migrate_running || self.replicas.len() < 2 {
-            return;
-        }
-        for src in 0..self.replicas.len() {
-            if !self.replicas[src].overloaded() {
-                continue;
-            }
-            let candidates = self.replicas[src].running_candidates(&self.migrated);
-            for (_, gid, quota, tokens) in candidates {
-                if !self.replicas[src].overloaded() {
-                    break;
-                }
-                let Some((dst, dst_headroom)) =
-                    self.best_by_headroom_with(quota, |r| r.id() != src && !r.overloaded())
-                else {
-                    break;
-                };
-                let fee = self.memory.handoff_cost(tokens);
-                if dst_headroom <= fee {
-                    // Eq. 7 gain does not cover this cache's transfer; a
-                    // later candidate may be smaller, so keep scanning
-                    continue;
-                }
-                let task = self.replicas[src].extract_running(gid, fee);
-                self.migrated.insert(gid);
-                self.migrations += 1;
-                self.migrated_running += 1;
-                self.handoff_bytes += self.memory.bytes_for(tokens);
-                self.handoff_us += fee;
-                self.replicas[dst].receive_migrated(task);
-            }
-        }
+        self.ctl.run_running_migrations(&mut self.replicas);
     }
 
     /// Route and serve an entire workload (sorted by arrival, dense
@@ -402,9 +196,9 @@ impl Router {
             }
             self.run_migrations();
             self.run_running_migrations();
-            match self.decide(&task) {
+            match self.ctl.decide(&self.replicas, &task) {
                 Some(pick) => self.replicas[pick].assign(task),
-                None => self.rejected.push(task),
+                None => self.ctl.rejected.push(task),
             }
         }
         let horizon = last_arrival + drain;
@@ -417,15 +211,7 @@ impl Router {
                 r.pending()
             );
         }
-        Ok(ClusterReport {
-            strategy: self.strategy.label(),
-            migrations: self.migrations,
-            migrated_running: self.migrated_running,
-            handoff_bytes: self.handoff_bytes,
-            handoff_us: self.handoff_us,
-            rejected: self.rejected,
-            replicas: self.replicas.into_iter().map(Replica::finish).collect(),
-        })
+        Ok(self.ctl.into_report(self.replicas))
     }
 }
 
@@ -527,7 +313,7 @@ impl ClusterReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::fleet::DeviceProfile;
+    use crate::cluster::fleet::{AdmissionMode, DeviceProfile};
     use crate::coordinator::orca::OrcaPolicy;
     use crate::coordinator::task::TaskClass;
     use crate::engine::sim::SimEngine;
@@ -692,21 +478,21 @@ mod tests {
         router.replicas[1].run_until(secs(5.0)).unwrap();
         assert!(router.replicas[0].overloaded());
         router.run_migrations();
-        assert_eq!(router.migrations, 0, "nothing queued to withdraw");
+        assert_eq!(router.ctl.migrations, 0, "nothing queued to withdraw");
         router.run_running_migrations();
         assert_eq!(
-            router.migrated_running, 1,
+            router.ctl.migrated_running, 1,
             "one handoff clears the overload (4 -> 3 RT quotas)"
         );
-        assert_eq!(router.migrations, 1);
-        assert!(router.handoff_us > 0, "handoff priced over the link");
-        assert!(router.handoff_bytes > 0);
+        assert_eq!(router.ctl.migrations, 1);
+        assert!(router.ctl.handoff_us > 0, "handoff priced over the link");
+        assert!(router.ctl.handoff_bytes > 0);
         assert!(!router.replicas[0].overloaded());
         // the cheapest-utility candidate (global id 100) moved
-        assert!(router.migrated.contains(&100));
+        assert!(router.ctl.migrated.contains(&100));
         // a second pass is a no-op (no longer overloaded)
         router.run_running_migrations();
-        assert_eq!(router.migrated_running, 1);
+        assert_eq!(router.ctl.migrated_running, 1);
 
         // drain: the moved task finishes on replica 1 with its handoff
         // fee charged (pending_restore consumed at its first decode)
@@ -760,14 +546,14 @@ mod tests {
             mk(standard(1)).with_running_migration(true, MemoryConfig::default());
         router.replicas[0].run_until(secs(5.0)).unwrap();
         router.run_running_migrations();
-        assert_eq!(router.migrated_running, 0);
+        assert_eq!(router.ctl.migrated_running, 0);
 
         // a link so slow the fee always exceeds the Eq. 7 gain: no handoff
         let slow = MemoryConfig { handoff_bandwidth: 1_000, ..MemoryConfig::default() };
         let mut router = mk(standard(1)).with_migration(true).with_running_migration(true, slow);
         router.replicas[0].run_until(secs(5.0)).unwrap();
         router.run_running_migrations();
-        assert_eq!(router.migrated_running, 0, "gain must exceed the transfer time");
+        assert_eq!(router.ctl.migrated_running, 0, "gain must exceed the transfer time");
         assert!(router.replicas[0].overloaded(), "overload tolerated over paying");
 
         // an unconstrained overloaded replica never evicts, so it has
@@ -787,7 +573,7 @@ mod tests {
         router.replicas[1].run_until(secs(0.5)).unwrap();
         assert!(router.replicas[0].overloaded());
         router.run_running_migrations();
-        assert_eq!(router.migrated_running, 0, "no paused+evicted candidates");
+        assert_eq!(router.ctl.migrated_running, 0, "no paused+evicted candidates");
     }
 
     #[test]

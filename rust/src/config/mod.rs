@@ -60,6 +60,39 @@ impl PolicyKind {
     }
 }
 
+/// Which cluster engine advances the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClusterEngine {
+    /// Lockstep reference engine ([`crate::cluster::Router`]): every
+    /// replica is advanced to every arrival. The in-tree semantic
+    /// reference; the default.
+    #[default]
+    Lockstep,
+    /// Event-driven engine ([`crate::cluster::Orchestrator`]): a global
+    /// event heap advances replicas only when they have work. Bit-exact
+    /// with lockstep; the one to use at fleet scale.
+    Event,
+}
+
+impl ClusterEngine {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "lockstep" | "router" => ClusterEngine::Lockstep,
+            "event" | "orchestrator" => ClusterEngine::Event,
+            other => bail!("unknown cluster engine '{other}' (lockstep|event)"),
+        })
+    }
+
+    /// Display name used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClusterEngine::Lockstep => "lockstep",
+            ClusterEngine::Event => "event",
+        }
+    }
+}
+
 /// Engine backend selection.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EngineKind {
@@ -110,6 +143,10 @@ pub struct ServeConfig {
     /// Cluster mode: running-task KV-handoff migration (disabled by
     /// default; requires `cluster_migration`).
     pub cluster_migrate_running: bool,
+    /// Cluster mode: which engine advances the fleet (lockstep
+    /// reference by default; the event engine is bit-exact and faster
+    /// at scale).
+    pub cluster_engine: ClusterEngine,
     /// KV-cache memory model (`[memory]`; unconstrained by default, so
     /// every pre-memory run reproduces bit-exactly).
     pub memory: MemoryConfig,
@@ -136,6 +173,7 @@ impl Default for ServeConfig {
             cluster_admission: AdmissionConfig::default(),
             cluster_migration: false,
             cluster_migrate_running: false,
+            cluster_engine: ClusterEngine::Lockstep,
             memory: MemoryConfig::default(),
         }
     }
@@ -266,6 +304,9 @@ impl ServeConfig {
                  admission; remove them or set admission_mode = \"depth\""
             );
         }
+        if let Some(v) = doc.get_str("cluster", "engine")? {
+            cfg.cluster_engine = ClusterEngine::parse(&v)?;
+        }
         if let Some(v) = doc.get_bool("cluster", "migration")? {
             cfg.cluster_migration = v;
         }
@@ -299,18 +340,22 @@ impl ServeConfig {
             }
             cfg.memory.block_tokens = v as u32;
         }
-        if let Some(v) = doc.get_f64("memory", "swap_bandwidth_mbps")? {
-            if v <= 0.0 {
-                bail!("[memory] swap_bandwidth_mbps must be positive, got {v}");
-            }
-            cfg.memory.swap_bandwidth = (v * 1e6) as u64;
-        }
-        if let Some(v) = doc.get_f64("memory", "handoff_bandwidth_mbps")? {
-            if v <= 0.0 {
-                bail!("[memory] handoff_bandwidth_mbps must be positive, got {v}");
-            }
-            cfg.memory.handoff_bandwidth = (v * 1e6) as u64;
-        }
+        // bandwidth keys: `*_mb_per_s` is the current spelling; the
+        // original `*_mbps` (ambiguous — read megaBITS by some tools)
+        // keys are still parsed for back-compat (DESIGN.md "Deviations
+        // from the paper", deprecation note). Setting both is an error.
+        cfg.memory.swap_bandwidth = parse_bandwidth(
+            &doc,
+            "swap_bandwidth_mb_per_s",
+            "swap_bandwidth_mbps",
+            cfg.memory.swap_bandwidth,
+        )?;
+        cfg.memory.handoff_bandwidth = parse_bandwidth(
+            &doc,
+            "handoff_bandwidth_mb_per_s",
+            "handoff_bandwidth_mbps",
+            cfg.memory.handoff_bandwidth,
+        )?;
         if let Some(v) = doc.get_str("memory", "preemption")? {
             cfg.memory.mode = PreemptionMode::parse(&v)?;
         }
@@ -349,6 +394,27 @@ impl ServeConfig {
             Some(f) => f.clone(),
             None => FleetSpec::homogeneous(self.cluster_replicas, self.cycle_cap),
         }
+    }
+}
+
+/// Parse a `[memory]` bandwidth key in MB/s, preferring the current
+/// `*_mb_per_s` spelling and still accepting the deprecated `*_mbps`
+/// one. Naming both is a conflict; naming neither keeps `default`.
+fn parse_bandwidth(
+    doc: &TomlDoc,
+    key: &str,
+    deprecated: &str,
+    default: u64,
+) -> Result<u64> {
+    let new = doc.get_f64("memory", key)?;
+    let old = doc.get_f64("memory", deprecated)?;
+    if new.is_some() && old.is_some() {
+        bail!("[memory] {key} conflicts with deprecated {deprecated}; set only one");
+    }
+    match new.or(old) {
+        None => Ok(default),
+        Some(v) if v > 0.0 => Ok((v * 1e6) as u64),
+        Some(v) => bail!("[memory] {key} must be positive, got {v}"),
     }
 }
 
@@ -532,6 +598,39 @@ scale = 1.2
         assert!(ServeConfig::from_toml("[memory]\nkv_capacity_mb = -1.0\n").is_err());
         assert!(ServeConfig::from_toml("[memory]\npreemption = \"drop\"\n").is_err());
         assert!(ServeConfig::from_toml("[memory]\nblock_tokens = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_renamed_bandwidth_keys() {
+        // current `*_mb_per_s` spellings land on the same fields...
+        let text = "[memory]\nswap_bandwidth_mb_per_s = 2000.0\n\
+                    handoff_bandwidth_mb_per_s = 250.0\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert_eq!(c.memory.swap_bandwidth, 2_000_000_000);
+        assert_eq!(c.memory.handoff_bandwidth, 250_000_000);
+        // ...naming both spellings of one key is a conflict, not a
+        // silent precedence rule
+        assert!(ServeConfig::from_toml(
+            "[memory]\nswap_bandwidth_mb_per_s = 64.0\nswap_bandwidth_mbps = 64.0\n",
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[memory]\nswap_bandwidth_mb_per_s = -5.0\n",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_cluster_engine() {
+        let c = ServeConfig::default();
+        assert_eq!(c.cluster_engine, ClusterEngine::Lockstep);
+        let c = ServeConfig::from_toml("[cluster]\nengine = \"event\"\n").unwrap();
+        assert_eq!(c.cluster_engine, ClusterEngine::Event);
+        let c = ServeConfig::from_toml("[cluster]\nengine = \"lockstep\"\n").unwrap();
+        assert_eq!(c.cluster_engine, ClusterEngine::Lockstep);
+        assert_eq!(ClusterEngine::parse("orchestrator").unwrap(), ClusterEngine::Event);
+        assert_eq!(ClusterEngine::Event.label(), "event");
+        assert!(ServeConfig::from_toml("[cluster]\nengine = \"warp\"\n").is_err());
     }
 
     #[test]

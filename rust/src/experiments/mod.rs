@@ -35,9 +35,10 @@ pub mod static_mix;
 use anyhow::Result;
 
 use crate::cluster::{
-    ClusterReport, DeviceProfile, FleetSpec, Replica, Router, RoutingStrategy,
+    ClusterReport, DeviceProfile, FleetSpec, Orchestrator, Replica, Router,
+    RoutingStrategy,
 };
-use crate::config::{PolicyKind, ServeConfig};
+use crate::config::{ClusterEngine, PolicyKind, ServeConfig};
 use crate::coordinator::fastserve::FastServePolicy;
 use crate::coordinator::orca::OrcaPolicy;
 use crate::coordinator::scheduler::Policy;
@@ -190,11 +191,20 @@ pub fn run_fleet(
             )
         })
         .collect();
-    Router::new(strategy, fleet)
-        .with_admission(cfg.cluster_admission)
-        .with_migration(cfg.cluster_migration)
-        .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
-        .run(workload, drain)
+    // the two engines are bit-exact (rust/tests/equivalence.rs); the
+    // config picks which one advances the fleet
+    match cfg.cluster_engine {
+        ClusterEngine::Lockstep => Router::new(strategy, fleet)
+            .with_admission(cfg.cluster_admission)
+            .with_migration(cfg.cluster_migration)
+            .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+            .run(workload, drain),
+        ClusterEngine::Event => Orchestrator::new(strategy, fleet)
+            .with_admission(cfg.cluster_admission)
+            .with_migration(cfg.cluster_migration)
+            .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+            .run(workload, drain),
+    }
 }
 
 /// Default drain window after the last arrival (virtual seconds).

@@ -18,13 +18,23 @@
 //! 4-replica heterogeneous fleet, SLO-aware routing with Eq. 7
 //! headroom admission + overload migration — the guard configuration
 //! whose per-decision cost scales with the live set).
+//!
+//! The `--replicas` axis (BENCH_6.json) instead sweeps fleet *width*:
+//! homogeneous round-robin fleets of 16/64/256 standard devices at
+//! 10k–100k tasks, run through both cluster engines. The lockstep
+//! reference advances every replica to every arrival (O(arrivals ×
+//! replicas) advancement calls), so its wall time grows linearly in
+//! width even when most replicas are idle; the event engine only
+//! advances replicas with work, so its wall time is sublinear in
+//! width. Lockstep reference cells run at the smallest task count only
+//! — the reference engine exists for equivalence, not scale.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cluster::{AdmissionMode, FleetSpec, RoutingStrategy};
-use crate::config::{PolicyKind, ServeConfig};
+use crate::config::{ClusterEngine, PolicyKind, ServeConfig};
 use crate::metrics::Attainment;
 use crate::util::json::Json;
 use crate::util::{secs, Micros};
@@ -34,6 +44,14 @@ use super::{run_fleet, run_sim};
 
 /// Default task counts the sweep runs (override with `--tasks`).
 pub const DEFAULT_SIZES: [usize; 3] = [1_000, 4_000, 10_000];
+
+/// Default fleet widths for the replica axis (override the axis with
+/// `--replicas`).
+pub const DEFAULT_REPLICA_COUNTS: [usize; 3] = [16, 64, 256];
+
+/// Default task counts for the replica axis — wider fleets need larger
+/// bursts to keep every replica busy (override with `--tasks`).
+pub const DEFAULT_REPLICA_SIZES: [usize; 2] = [10_000, 100_000];
 
 /// Virtual seconds the whole burst arrives within — the arrival rate is
 /// `n / ARRIVAL_WINDOW_S`, so the standing queue reaches ~n tasks for
@@ -49,8 +67,12 @@ pub const DRAIN_S: f64 = 60.0;
 /// One (fleet shape, task count) cell.
 #[derive(Debug)]
 pub struct ScaleCell {
-    /// Fleet-shape label ("single" / "edge-mixed").
+    /// Fleet-shape label ("single" / "edge-mixed" / "replicas-N").
     pub fleet: &'static str,
+    /// Cluster engine that drove the cell.
+    pub engine: ClusterEngine,
+    /// Fleet width (1 for "single", 4 for "edge-mixed").
+    pub replicas: usize,
     /// Workload size.
     pub n_tasks: usize,
     /// Offered arrival rate (tasks/s).
@@ -129,6 +151,8 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
 
     Ok(ScaleCell {
         fleet,
+        engine: cfg.cluster_engine,
+        replicas: if fleet == "single" { 1 } else { 4 },
         n_tasks,
         rate: cfg.arrival_rate,
         wall_s,
@@ -143,31 +167,70 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
     })
 }
 
-/// Full sweep over `sizes`; prints the throughput table and returns
-/// the JSON series (BENCH_5.json shape).
-pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
-    use crate::metrics::report::{nan_null, pct, Table};
+/// Run one replica-axis cell: a homogeneous round-robin fleet of
+/// `replicas` standard devices under an `n_tasks` burst, driven by
+/// `engine`. Round-robin with admission and migration off keeps the
+/// routing decision O(1), so the cell isolates *engine advancement*
+/// cost: lockstep pays O(arrivals × replicas) `run_until` calls, the
+/// event engine only wakes replicas that have work.
+pub fn run_replica_cell(
+    engine: ClusterEngine,
+    replicas: usize,
+    n_tasks: usize,
+    cfg: &ServeConfig,
+) -> Result<ScaleCell> {
+    let mut cfg = cfg.clone();
+    cfg.n_tasks = n_tasks;
+    cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
+    cfg.policy = PolicyKind::Slice;
+    cfg.cluster_engine = engine;
+    cfg.cluster_admission.enabled = false;
+    cfg.cluster_migration = false;
+    cfg.cluster_migrate_running = false;
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let spec = FleetSpec::homogeneous(replicas, cfg.cycle_cap);
 
-    let mut rows: Vec<ScaleCell> = Vec::new();
-    for &n in sizes {
-        for fleet in ["single", "edge-mixed"] {
-            rows.push(run_cell(fleet, n, cfg)?);
-        }
-    }
+    let start = Instant::now();
+    let report =
+        super::run_fleet(RoutingStrategy::RoundRobin, &spec, workload, &cfg, secs(DRAIN_S))?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
 
-    println!(
-        "Scale sweep — SLICE, {ARRIVAL_WINDOW_S:.0}s arrival window, \
-         {DRAIN_S:.0}s drain, seed {} (edge-mixed: slo-aware + headroom \
-         admission + migration)\n",
-        cfg.seed
-    );
+    let tasks = report.tasks();
+    let a = Attainment::compute(&tasks);
+    let end = report.replicas.iter().map(|r| r.report.end_time).max().unwrap_or(0);
+    let decisions = report.total_decisions() + a.n_tasks as u64;
+    let steps = report.total_steps();
+    Ok(ScaleCell {
+        fleet: "replicas",
+        engine,
+        replicas,
+        n_tasks,
+        rate: cfg.arrival_rate,
+        wall_s,
+        virtual_s: end as f64 / 1e6,
+        decisions,
+        decisions_per_sec: decisions as f64 / wall_s,
+        steps,
+        steps_per_sec: steps as f64 / wall_s,
+        finished: a.n_finished,
+        rejected: report.rejected_count(),
+        slo: a.slo,
+    })
+}
+
+fn render_rows(rows: &[ScaleCell]) {
+    use crate::metrics::report::{pct, Table};
     let mut t = Table::new(&[
-        "fleet", "tasks", "rate/s", "wall s", "decisions", "decisions/s", "steps",
-        "steps/s", "finished", "shed", "SLO",
+        "fleet", "engine", "repl", "tasks", "rate/s", "wall s", "decisions",
+        "decisions/s", "steps", "steps/s", "finished", "shed", "SLO",
     ]);
-    for c in &rows {
+    for c in rows {
         t.row(vec![
             c.fleet.to_string(),
+            c.engine.label().to_string(),
+            c.replicas.to_string(),
             c.n_tasks.to_string(),
             format!("{:.1}", c.rate),
             format!("{:.3}", c.wall_s),
@@ -181,12 +244,17 @@ pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
         ]);
     }
     println!("{}", t.render());
+}
 
-    Ok(Json::from(
+fn rows_to_json(rows: &[ScaleCell]) -> Json {
+    use crate::metrics::report::nan_null;
+    Json::from(
         rows.iter()
             .map(|c| {
                 Json::obj()
                     .set("fleet", c.fleet)
+                    .set("engine", c.engine.label())
+                    .set("replicas", c.replicas)
                     .set("n_tasks", c.n_tasks)
                     .set("rate", c.rate)
                     .set("wall_s", c.wall_s)
@@ -200,7 +268,57 @@ pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
                     .set("slo", nan_null(c.slo))
             })
             .collect::<Vec<_>>(),
-    ))
+    )
+}
+
+/// Full sweep over `sizes`; prints the throughput table and returns
+/// the JSON series (BENCH_5.json shape plus engine/replicas columns).
+pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
+    let mut rows: Vec<ScaleCell> = Vec::new();
+    for &n in sizes {
+        for fleet in ["single", "edge-mixed"] {
+            rows.push(run_cell(fleet, n, cfg)?);
+        }
+    }
+
+    println!(
+        "Scale sweep — SLICE, {ARRIVAL_WINDOW_S:.0}s arrival window, \
+         {DRAIN_S:.0}s drain, seed {} (edge-mixed: slo-aware + headroom \
+         admission + migration)\n",
+        cfg.seed
+    );
+    render_rows(&rows);
+    Ok(rows_to_json(&rows))
+}
+
+/// Replica-axis sweep (BENCH_6.json): event-engine cells at every
+/// (width, size) pair, lockstep reference cells at the smallest size
+/// only — wide lockstep cells cost O(arrivals × replicas) wall time by
+/// construction, and the reference engine exists for equivalence, not
+/// scale. Prints the table and returns the JSON series.
+pub fn run_replicas(
+    cfg: &ServeConfig,
+    replica_counts: &[usize],
+    sizes: &[usize],
+) -> Result<Json> {
+    let mut rows: Vec<ScaleCell> = Vec::new();
+    for &width in replica_counts {
+        for (i, &n) in sizes.iter().enumerate() {
+            rows.push(run_replica_cell(ClusterEngine::Event, width, n, cfg)?);
+            if i == 0 {
+                rows.push(run_replica_cell(ClusterEngine::Lockstep, width, n, cfg)?);
+            }
+        }
+    }
+
+    println!(
+        "Replica-scale sweep — SLICE, round-robin homogeneous fleets, \
+         {ARRIVAL_WINDOW_S:.0}s arrival window, {DRAIN_S:.0}s drain, seed {} \
+         (lockstep reference at the smallest size)\n",
+        cfg.seed
+    );
+    render_rows(&rows);
+    Ok(rows_to_json(&rows))
 }
 
 #[cfg(test)]
@@ -224,5 +342,19 @@ mod tests {
     #[test]
     fn unknown_fleet_rejected() {
         assert!(run_cell("mesh", 10, &ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn replica_cells_agree_across_engines() {
+        let cfg = ServeConfig::default();
+        let ev = run_replica_cell(ClusterEngine::Event, 4, 60, &cfg).unwrap();
+        let ls = run_replica_cell(ClusterEngine::Lockstep, 4, 60, &cfg).unwrap();
+        // wall time differs; every simulation observable must not
+        assert_eq!(ev.decisions, ls.decisions);
+        assert_eq!(ev.steps, ls.steps);
+        assert_eq!(ev.finished, ls.finished);
+        assert_eq!(ev.virtual_s, ls.virtual_s);
+        assert_eq!(ev.replicas, 4);
+        assert_eq!(ev.engine.label(), "event");
     }
 }

@@ -22,7 +22,7 @@ use std::process::ExitCode;
 use anyhow::{bail, Context, Result};
 
 use slice_serve::cluster::{FleetSpec, RoutingStrategy};
-use slice_serve::config::{EngineKind, PolicyKind, ServeConfig};
+use slice_serve::config::{ClusterEngine, EngineKind, PolicyKind, ServeConfig};
 #[cfg(feature = "pjrt")]
 use slice_serve::coordinator::task::TaskClass;
 use slice_serve::engine::clock::VirtualClock;
@@ -57,6 +57,7 @@ USAGE:
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
                     [--trace <file>] [--save-trace <file>]
   slice-serve cluster [--config <file>] [--replicas <n>]
+                    [--engine lockstep|event]  (cluster engine; lockstep = reference)
                     [--fleet edge-mixed|<tier,tier,...>]  (tiers: standard|lite|nano)
                     [--strategy round-robin|least-loaded|slo-aware]
                     [--admission on|off|depth|headroom]
@@ -71,7 +72,9 @@ USAGE:
                     cluster|hetero|memory|scale|all> [--n-tasks <n>] [--seed <n>]
                     [--out <json>]
                     (scale: [--tasks <n>] runs one custom size instead of
-                     the 1k/4k/10k default; excluded from 'all')
+                     the 1k/4k/10k default; [--replicas <n[,n,...]>] runs the
+                     replica-width axis — event + lockstep engines over
+                     homogeneous fleets, BENCH_6.json; excluded from 'all')
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -133,12 +136,19 @@ fn build_config(args: &Args) -> Result<ServeConfig> {
         cfg.policy = PolicyKind::parse(p)?;
     }
     if let Some(e) = args.flag("engine") {
-        cfg.engine = match e {
-            "sim" => EngineKind::Sim,
-            "pjrt" => EngineKind::Pjrt(PathBuf::from(
-                args.flag("artifacts").unwrap_or("artifacts"),
-            )),
-            other => bail!("unknown engine '{other}'"),
+        match e {
+            "sim" => cfg.engine = EngineKind::Sim,
+            "pjrt" => {
+                cfg.engine = EngineKind::Pjrt(PathBuf::from(
+                    args.flag("artifacts").unwrap_or("artifacts"),
+                ))
+            }
+            // cluster-engine spellings share the flag: the value sets
+            // are disjoint, so `--engine event` can never mean pjrt
+            "lockstep" | "router" | "event" | "orchestrator" => {
+                cfg.cluster_engine = ClusterEngine::parse(e)?
+            }
+            other => bail!("unknown engine '{other}' (sim|pjrt|lockstep|event)"),
         };
     }
     if let Some(v) = args.flag_f64("rate")? {
@@ -493,13 +503,42 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "scale" | "scale_sweep" => {
             // --tasks <n> runs a single custom size (CI smoke);
-            // default: the 1k/4k/10k sweep
-            let sizes: Vec<usize> = match args.flag_u64("tasks")? {
-                Some(n) if n >= 1 => vec![n as usize],
+            // default: the 1k/4k/10k sweep. --replicas <n[,n,...]>
+            // switches to the replica-width axis (BENCH_6.json shape).
+            let tasks = match args.flag_u64("tasks")? {
+                Some(n) if n >= 1 => Some(n as usize),
                 Some(_) => bail!("--tasks must be >= 1"),
-                None => experiments::scale_sweep::DEFAULT_SIZES.to_vec(),
+                None => None,
             };
-            out = out.set("scale_sweep", experiments::scale_sweep::run(&cfg, &sizes)?)
+            if let Some(spec) = args.flag("replicas") {
+                let counts = spec
+                    .split(',')
+                    .map(|s| {
+                        let n: usize = s
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("--replicas: bad count '{s}'"))?;
+                        if n < 1 {
+                            bail!("--replicas counts must be >= 1");
+                        }
+                        Ok(n)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let sizes = match tasks {
+                    Some(n) => vec![n],
+                    None => experiments::scale_sweep::DEFAULT_REPLICA_SIZES.to_vec(),
+                };
+                out = out.set(
+                    "replica_sweep",
+                    experiments::scale_sweep::run_replicas(&cfg, &counts, &sizes)?,
+                )
+            } else {
+                let sizes = match tasks {
+                    Some(n) => vec![n],
+                    None => experiments::scale_sweep::DEFAULT_SIZES.to_vec(),
+                };
+                out = out.set("scale_sweep", experiments::scale_sweep::run(&cfg, &sizes)?)
+            }
         }
         "all" => {
             out = out

@@ -25,7 +25,7 @@ use crate::coordinator::pool::TaskPool;
 use crate::coordinator::scheduler::{Policy, Step};
 use crate::coordinator::task::{Residency, Task, TaskId, TaskState};
 use crate::engine::clock::Clock;
-use crate::engine::memory::MemoryStats;
+use crate::engine::memory::{KvCacheModel, MemoryStats};
 use crate::engine::{DecodeEngine, StepOutcome};
 use crate::util::Micros;
 
@@ -96,6 +96,25 @@ fn index_remove(index: &mut Vec<TaskId>, id: TaskId) {
     }
 }
 
+/// Bring one swapped batch member's cache back on-device and return the
+/// cost to charge before the pass. A task with no pending fee *and* no
+/// slot in this device's model is a zero-fee migrated-in cache: it
+/// arrived over the link already paid for, so it is adopted free
+/// (`insert`). Everything else — a pending handoff fee, or a slot this
+/// device evicted locally — pays `restore`'s priced transition. One
+/// code path for constrained and unconstrained destinations, so a
+/// zero-fee migrated-in task is priced identically on both (the PR 4
+/// carried-forward fix; pinned by `zero_fee_handoff_restores_free_*`
+/// tests below).
+fn restore_swapped(kv: &mut KvCacheModel, id: TaskId, tokens: u32, pending: Micros) -> Micros {
+    if pending == 0 && kv.tokens_of(id).is_none() {
+        kv.insert(id, tokens); // free-link adoption
+        0
+    } else {
+        kv.restore(id, tokens, pending)
+    }
+}
+
 impl<C: Clock> Server<C> {
     /// Build a server over a pre-generated workload. Tasks must be sorted
     /// by arrival time and have dense ids in arrival order.
@@ -154,6 +173,32 @@ impl<C: Clock> Server<C> {
     /// the policy (they still count toward a replica's future load).
     pub fn pending_arrivals(&self) -> impl Iterator<Item = &Task> {
         self.arrivals.iter()
+    }
+
+    /// Earliest time at which [`Server::run_until`] would do real work:
+    /// `now` while any delivered task is unfinished (the serving loop
+    /// has live work this instant), else the first pending arrival's
+    /// time, else `None` (fully idle — running the loop would only move
+    /// the clock). This is the cluster event engine's next-event query
+    /// (DESIGN.md "Event-driven cluster engine").
+    pub fn next_event_time(&self) -> Option<Micros> {
+        if !self.live.is_empty() {
+            return Some(self.clock.now());
+        }
+        self.arrivals.front().map(|t| t.arrival)
+    }
+
+    /// Move the clock to `t` (monotonic — never backwards) without
+    /// running the serving loop. Only meaningful while
+    /// [`Server::next_event_time`] is `None`: an idle server's
+    /// `run_until` delivers nothing and steps nothing, so the clock
+    /// move is the entire effect.
+    pub fn sync_clock(&mut self, t: Micros) {
+        debug_assert!(
+            self.next_event_time().is_none(),
+            "sync_clock would skip real serving work"
+        );
+        self.clock.advance_to(t);
     }
 
     /// Inject one externally routed arrival (the cluster path). Arrivals
@@ -319,8 +364,7 @@ impl<C: Clock> Server<C> {
                         (t.seq_len(), t.pending_restore)
                     };
                     match self.engine.kv_model_mut() {
-                        Some(kv) if pending > 0 => cost += kv.restore(id, tokens, pending),
-                        Some(kv) => kv.insert(id, tokens), // free-link adoption
+                        Some(kv) => cost += restore_swapped(kv, id, tokens, pending),
                         None => cost += pending,
                     }
                     let t = self.pool.get_mut(id);
@@ -376,11 +420,8 @@ impl<C: Clock> Server<C> {
                     let t = self.pool.get(id);
                     (t.seq_len(), t.pending_restore)
                 };
-                cost += self
-                    .engine
-                    .kv_model_mut()
-                    .expect("kv")
-                    .restore(id, tokens, pending);
+                let kv = self.engine.kv_model_mut().expect("kv");
+                cost += restore_swapped(kv, id, tokens, pending);
                 let t = self.pool.get_mut(id);
                 t.residency = Residency::Resident;
                 t.pending_restore = 0;
@@ -850,6 +891,90 @@ mod tests {
         );
         s.push_arrival(mk_task(0, TaskClass::Voice, secs(2.0), 5));
         s.push_arrival(mk_task(1, TaskClass::Voice, secs(1.0), 5));
+    }
+
+    #[test]
+    fn next_event_time_tracks_live_then_pending_then_idle() {
+        let mut s = Server::new(
+            Vec::new(),
+            Box::new(OrcaPolicy::new(32)),
+            Box::new(SimEngine::paper_calibrated()),
+            VirtualClock::new(),
+        );
+        assert_eq!(s.next_event_time(), None, "fresh server is idle");
+        s.sync_clock(secs(1.0));
+        assert_eq!(s.now(), secs(1.0), "idle clock moves without the loop");
+        s.push_arrival(mk_task(0, TaskClass::Voice, secs(2.0), 500));
+        assert_eq!(
+            s.next_event_time(),
+            Some(secs(2.0)),
+            "pending arrival is the next event"
+        );
+        s.run_until(secs(2.5)).unwrap();
+        assert_eq!(
+            s.next_event_time(),
+            Some(s.now()),
+            "live unfinished work means the next event is now"
+        );
+        s.run_until(secs(60.0)).unwrap();
+        assert_eq!(s.next_event_time(), None, "drained server is idle again");
+    }
+
+    #[test]
+    fn zero_fee_handoff_restores_free_on_both_destination_kinds() {
+        // The PR 4 carried-forward fix: a migrated-in cache with no
+        // pending fee and no slot on the destination adopts for free —
+        // identically whether the destination is capacity-constrained
+        // or not.
+        use crate::engine::memory::{KvCacheModel, MemoryConfig};
+        let lat = LatencyModel::paper_calibrated();
+        let cap = 64 * 1024 * 1024u64;
+        let mut constrained = KvCacheModel::new(
+            MemoryConfig { kv_capacity: Some(cap), ..MemoryConfig::default() },
+            Some(cap),
+            lat.clone(),
+        );
+        let mut unconstrained =
+            KvCacheModel::new(MemoryConfig::default(), None, lat.clone());
+        for kv in [&mut constrained, &mut unconstrained] {
+            assert_eq!(
+                restore_swapped(kv, 7, 81, 0),
+                0,
+                "zero-fee migrated-in cache is adopted free"
+            );
+            assert!(kv.is_resident(7));
+            let stats = kv.stats();
+            assert_eq!(stats.swap_ins, 0, "adoption is not a swap-in");
+            assert_eq!(stats.handoff_restores, 0);
+            assert_eq!(stats.swap_delay, 0, "no transition time charged");
+        }
+
+        // a *priced* handoff fee is charged verbatim on both kinds
+        let mut constrained = KvCacheModel::new(
+            MemoryConfig { kv_capacity: Some(cap), ..MemoryConfig::default() },
+            Some(cap),
+            lat.clone(),
+        );
+        let mut unconstrained = KvCacheModel::new(MemoryConfig::default(), None, lat);
+        for kv in [&mut constrained, &mut unconstrained] {
+            assert_eq!(restore_swapped(kv, 3, 81, 12_345), 12_345);
+            let stats = kv.stats();
+            assert_eq!(stats.handoff_restores, 1);
+            assert_eq!(stats.swap_delay, 12_345);
+        }
+
+        // and a locally evicted slot (present, non-resident, zero fee)
+        // still pays the constrained device's swap-in transition
+        let mut kv = KvCacheModel::new(
+            MemoryConfig { kv_capacity: Some(cap), ..MemoryConfig::default() },
+            Some(cap),
+            LatencyModel::paper_calibrated(),
+        );
+        kv.insert(9, 81);
+        kv.swap_out(9);
+        let cost = restore_swapped(&mut kv, 9, 81, 0);
+        assert!(cost > 0, "local eviction round-trip is never free");
+        assert_eq!(kv.stats().swap_ins, 1);
     }
 
     #[test]

@@ -11,6 +11,13 @@
 //! copy of the pre-PR 5 `SlicePolicy` control flow building fresh
 //! vectors everywhere. Delete both together once the perf trajectory
 //! has a few PRs of CI history.
+//!
+//! PR 6 adds the cluster-engine half (DESIGN.md "Event-driven cluster
+//! engine"): the event-driven `Orchestrator` must reproduce the
+//! lockstep `Router` — identical `ClusterReport`s down to per-task
+//! timings, per-replica routing/step counts, migration and memory
+//! counters — across strategies, fleet shapes, admission modes,
+//! migration and KV-handoff configurations.
 
 use std::collections::VecDeque;
 
@@ -410,5 +417,184 @@ fn cluster_runs_match_reference() {
             assert_eq!(ra.routed, rb.routed, "seed {seed}: routing diverged");
             assert_eq!(ra.report.steps, rb.report.steps, "seed {seed}");
         }
+    }
+}
+
+// ---- Event engine vs lockstep reference (PR 6) -------------------------
+
+use slice_serve::cluster::{AdmissionMode, ClusterReport, FleetSpec, RoutingStrategy};
+use slice_serve::config::{ClusterEngine, ServeConfig};
+use slice_serve::experiments;
+
+/// Full `ClusterReport` equality: fleet counters, the shed list, and
+/// every replica's routing counts plus its entire `RunReport` (per-task
+/// timings, steps, memory stats).
+fn assert_cluster_reports_eq(a: &ClusterReport, b: &ClusterReport, ctx: &str) {
+    assert_eq!(a.strategy, b.strategy, "{ctx}: strategy");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(a.migrated_running, b.migrated_running, "{ctx}: migrated_running");
+    assert_eq!(a.handoff_bytes, b.handoff_bytes, "{ctx}: handoff_bytes");
+    assert_eq!(a.handoff_us, b.handoff_us, "{ctx}: handoff_us");
+    let shed_a: Vec<u64> = a.rejected.iter().map(|t| t.id).collect();
+    let shed_b: Vec<u64> = b.rejected.iter().map(|t| t.id).collect();
+    assert_eq!(shed_a, shed_b, "{ctx}: shed list");
+    assert_eq!(a.replicas.len(), b.replicas.len(), "{ctx}: fleet width");
+    for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+        let c = format!("{ctx}: replica {}", ra.replica);
+        assert_eq!(ra.replica, rb.replica, "{c}: id");
+        assert_eq!(ra.profile, rb.profile, "{c}: profile");
+        assert_eq!(ra.routed, rb.routed, "{c}: routed");
+        assert_eq!(ra.migrated_in, rb.migrated_in, "{c}: migrated_in");
+        assert_eq!(ra.migrated_out, rb.migrated_out, "{c}: migrated_out");
+        assert_reports_eq(&ra.report, &rb.report, &c);
+    }
+}
+
+/// Run one cluster cell through both engines and assert bit-exactness.
+fn run_engine_pair(
+    cfg: &ServeConfig,
+    strategy: RoutingStrategy,
+    spec: &FleetSpec,
+    rate: f64,
+    n_tasks: usize,
+    seed: u64,
+    ctx: &str,
+) {
+    let workload = WorkloadSpec::paper_mix(rate, 0.7, n_tasks, seed).generate();
+    let mut lockstep = cfg.clone();
+    lockstep.cluster_engine = ClusterEngine::Lockstep;
+    let mut event = cfg.clone();
+    event.cluster_engine = ClusterEngine::Event;
+    let a = experiments::run_fleet(strategy, spec, workload.clone(), &lockstep, secs(120.0))
+        .unwrap();
+    let b = experiments::run_fleet(strategy, spec, workload, &event, secs(120.0)).unwrap();
+    assert_cluster_reports_eq(&a, &b, ctx);
+}
+
+/// Homogeneous 4-replica fleets: every routing strategy, across seeds.
+#[test]
+fn event_engine_matches_lockstep_across_strategies() {
+    let cfg = ServeConfig::default();
+    let spec = FleetSpec::homogeneous(4, cfg.cycle_cap);
+    for strategy in RoutingStrategy::ALL {
+        for seed in [7u64, 42, 1234] {
+            run_engine_pair(
+                &cfg,
+                strategy,
+                &spec,
+                4.0,
+                160,
+                seed,
+                &format!("{strategy:?}/seed{seed}"),
+            );
+        }
+    }
+}
+
+/// A 1-replica fleet — the degenerate cell where both engines must also
+/// reproduce the single-device serving path.
+#[test]
+fn event_engine_matches_lockstep_single_replica() {
+    let cfg = ServeConfig::default();
+    let spec = FleetSpec::homogeneous(1, cfg.cycle_cap);
+    for seed in SEEDS {
+        run_engine_pair(
+            &cfg,
+            RoutingStrategy::SloAware,
+            &spec,
+            1.0,
+            120,
+            seed,
+            &format!("single/seed{seed}"),
+        );
+    }
+}
+
+/// Heterogeneous edge-mixed fleets under both admission modes (shed
+/// lists must match element for element).
+#[test]
+fn event_engine_matches_lockstep_hetero_admission() {
+    let base = ServeConfig::default();
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(base.cycle_cap);
+    for (mode, label) in
+        [(AdmissionMode::QueueDepth, "depth"), (AdmissionMode::Headroom, "headroom")]
+    {
+        let mut cfg = base.clone();
+        cfg.cluster_admission.enabled = true;
+        cfg.cluster_admission.mode = mode;
+        for seed in [7u64, 42, 1234] {
+            run_engine_pair(
+                &cfg,
+                RoutingStrategy::SloAware,
+                &spec,
+                6.0,
+                200,
+                seed,
+                &format!("hetero-{label}/seed{seed}"),
+            );
+        }
+    }
+}
+
+/// Overload migration on a heterogeneous fleet: migration counts,
+/// per-replica in/out tallies and post-migration timings must agree.
+#[test]
+fn event_engine_matches_lockstep_migration() {
+    let mut cfg = ServeConfig::default();
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(cfg.cycle_cap);
+    for seed in [7u64, 42, 1234] {
+        run_engine_pair(
+            &cfg,
+            RoutingStrategy::SloAware,
+            &spec,
+            6.0,
+            200,
+            seed,
+            &format!("migration/seed{seed}"),
+        );
+    }
+}
+
+/// Constrained KV memory with running-task handoff migration — the
+/// fullest configuration: swap/restore counters, handoff bytes and
+/// delays, and per-task swap tallies must all be bit-identical.
+#[test]
+fn event_engine_matches_lockstep_memory_and_handoff() {
+    let mut cfg = ServeConfig::default();
+    cfg.memory.kv_capacity = Some(48 * 1024 * 1024);
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    cfg.cluster_migrate_running = true;
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(cfg.cycle_cap);
+    for seed in [7u64, 42, 1234] {
+        run_engine_pair(
+            &cfg,
+            RoutingStrategy::SloAware,
+            &spec,
+            6.0,
+            200,
+            seed,
+            &format!("memory-handoff/seed{seed}"),
+        );
+    }
+    // constrained memory without migration as well: the serving loop's
+    // eviction/restore clocking must agree without the handoff path
+    let mut cfg = ServeConfig::default();
+    cfg.memory.kv_capacity = Some(32 * 1024 * 1024);
+    let spec = FleetSpec::homogeneous(4, cfg.cycle_cap);
+    for seed in [7u64, 42] {
+        run_engine_pair(
+            &cfg,
+            RoutingStrategy::LeastLoaded,
+            &spec,
+            4.0,
+            160,
+            seed,
+            &format!("memory-only/seed{seed}"),
+        );
     }
 }

@@ -3,12 +3,14 @@
 //! the in-repo deterministic RNG with many random cases per property,
 //! and every failure prints the case's seed for replay).
 
+use slice_serve::cluster::{Event, EventHeap, EventKind, Orchestrator, RoutingStrategy};
 use slice_serve::coordinator::mask::{period_eq7, DecodeMask, IncrementalPeriod};
 use slice_serve::coordinator::selection::{select_tasks, Candidate, CYCLE_CAP};
 use slice_serve::coordinator::task::{SloSpec, Task, TaskClass};
 use slice_serve::engine::latency::LatencyModel;
 use slice_serve::util::json::Json;
 use slice_serve::util::rng::Rng;
+use slice_serve::util::secs;
 use slice_serve::workload::trace;
 
 const CASES: u64 = 300;
@@ -336,6 +338,114 @@ fn prop_trace_round_trip_fuzz() {
             assert_eq!(a.slo.tpot, b.slo.tpot, "seed {seed}");
             assert_eq!(a.slo.deadline, b.slo.deadline, "seed {seed}");
         }
+    }
+}
+
+/// The event heap is a strict priority queue under the documented
+/// `(time, kind, replica, task)` order: over random interleavings of
+/// pushes and pops, every pop returns exactly the minimum of the
+/// elements currently in the heap — never out of order, never a
+/// dropped or duplicated element (DESIGN.md "Event-driven cluster
+/// engine").
+#[test]
+fn prop_event_heap_never_pops_out_of_order() {
+    let kinds =
+        [EventKind::Wake, EventKind::RescheduleBoundary, EventKind::Arrival];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(12_000_000 + seed);
+        let mut heap = EventHeap::new();
+        let mut mirror: Vec<Event> = Vec::new();
+        let mut last_popped: Option<Event> = None;
+        for _ in 0..rng.range_usize(1, 60) {
+            if !mirror.is_empty() && rng.chance(0.4) {
+                let got = heap.pop().expect("mirror says non-empty");
+                let min = *mirror.iter().min().unwrap();
+                assert_eq!(got, min, "seed {seed}: pop is not the minimum");
+                let at = mirror.iter().position(|e| *e == min).unwrap();
+                mirror.swap_remove(at);
+                if let Some(prev) = last_popped {
+                    // pops between pushes are monotone in heap order
+                    if prev.time == got.time {
+                        assert!(prev <= got, "seed {seed}: same-time order");
+                    }
+                }
+                last_popped = Some(got);
+            } else {
+                // duplicates on purpose: ties must be handled, not lost
+                let e = Event {
+                    time: rng.range_u64(0, 20),
+                    kind: kinds[rng.range_usize(0, 2)],
+                    replica: rng.range_usize(0, 4),
+                    task: rng.range_u64(0, 6),
+                };
+                heap.push(e);
+                mirror.push(e);
+                last_popped = None;
+            }
+        }
+        // drain: the remainder comes out fully sorted
+        let mut drained: Vec<Event> = Vec::new();
+        while let Some(e) = heap.pop() {
+            drained.push(e);
+        }
+        assert_eq!(drained.len(), mirror.len(), "seed {seed}: element count");
+        assert!(drained.windows(2).all(|w| w[0] <= w[1]), "seed {seed}: drain order");
+        assert!(heap.is_empty() && heap.pop().is_none(), "seed {seed}");
+    }
+}
+
+/// An idle replica receives zero advancement calls over a full run
+/// (the event engine's core economy, which lockstep cannot offer):
+/// with a 5-task trickle round-robined over a 12-wide fleet, the seven
+/// replicas that route nothing and receive no migrations must report
+/// zero `run_until` calls and zero engine steps — while every busy
+/// replica is advanced at least once.
+#[test]
+fn prop_idle_replicas_receive_zero_advancements() {
+    use slice_serve::cluster::{DeviceProfile, Replica};
+    use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+    use slice_serve::engine::sim::SimEngine;
+
+    for seed in [7u64, 42, 1234, 777] {
+        // a light trickle across a wide round-robin fleet: replicas
+        // beyond the task count never see work
+        let n_tasks = 5;
+        let width = 12;
+        let workload =
+            slice_serve::workload::WorkloadSpec::paper_mix(0.5, 0.7, n_tasks, seed)
+                .generate();
+        let replicas: Vec<Replica> = (0..width)
+            .map(|i| {
+                Replica::new(
+                    i,
+                    Box::new(SlicePolicy::new(
+                        LatencyModel::paper_calibrated(),
+                        SliceConfig::default(),
+                    )),
+                    Box::new(SimEngine::paper_calibrated()),
+                    DeviceProfile::standard(),
+                )
+            })
+            .collect();
+        let (report, advancements) =
+            Orchestrator::new(RoutingStrategy::RoundRobin, replicas)
+                .run_counted(workload, secs(60.0))
+                .unwrap();
+        assert_eq!(advancements.len(), width);
+        for (i, slot) in report.replicas.iter().enumerate() {
+            if slot.routed == 0 && slot.migrated_in == 0 {
+                assert_eq!(
+                    advancements[i], 0,
+                    "seed {seed}: idle replica {i} was advanced"
+                );
+                assert_eq!(slot.report.steps, 0, "seed {seed}: idle replica stepped");
+            } else {
+                assert!(advancements[i] > 0, "seed {seed}: busy replica {i} never ran");
+            }
+        }
+        // round-robin over 12 replicas with 5 tasks: exactly 7 idle
+        let idle = report.replicas.iter().filter(|s| s.routed == 0).count();
+        assert_eq!(idle, width - n_tasks, "seed {seed}");
     }
 }
 

@@ -31,9 +31,18 @@ Stages:
      measuring decisions-per-second — the BENCH_5.json inputs. Note
      stages 1-8 themselves now run through select_tasks_fast, so their
      unchanged cells are an end-to-end bit-exactness proof.
+ 10. event engine (PR 6) — (a) bit-exactness: every cluster / hetero /
+     memory shape runs through both the lockstep Router and the
+     heap-scheduled Orchestrator and must produce identical per-task
+     timestamps, per-replica step counts and migration/shed counters;
+     (b) the replica-width scale sweep (round-robin homogeneous fleets,
+     event engine at every size, lockstep reference at the smallest) —
+     the BENCH_6.json input.
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
        [--scale-sizes 1000,4000,10000]
+       [--replica-widths 16,64,256] [--replica-sizes 10000,100000]
+       [--bench6-out BENCH_6.json] [--stage10]
 """
 
 import json
@@ -505,6 +514,108 @@ def hot_path_stage(scale_sizes):
     return {"micro": micro, "scale": scale}
 
 
+def _engine_pair(label, mk_profiles, strategy, rate, n, seed,
+                 admission=None, migration=False, migrate_running=False,
+                 memory=None, drain_s=120.0):
+    """Run one cell through both engines; fail loudly on any divergence."""
+    runs = []
+    for engine in ("lockstep", "event"):
+        wl = paper_mix(rate, 0.7, n, seed)
+        runs.append(run_fleet(
+            strategy, mk_profiles(), wl, secs(drain_s), admission=admission,
+            migration=migration, migrate_running=migrate_running,
+            memory=memory, engine=engine))
+    (ta, pa, ra), (tb, pb, rb) = runs
+    ok = (pa == pb and len(ta) == len(tb)
+          and all(x.id == y.id and x.first_token == y.first_token
+                  and x.completion == y.completion
+                  and x.tokens_generated == y.tokens_generated
+                  for x, y in zip(ta, tb))
+          and ra.migrations == rb.migrations
+          and ra.migrated_running == rb.migrated_running
+          and ra.handoff_bytes == rb.handoff_bytes
+          and ra.handoff_us == rb.handoff_us
+          and [t.id for t in ra.rejected] == [t.id for t in rb.rejected])
+    check(ok, f"event == lockstep: {label} (seed {seed})")
+    return ok
+
+
+def replica_scale_cell(engine, replicas, n, seed=42):
+    """Mirrors experiments::scale_sweep::run_replica_cell: round-robin
+    homogeneous standard fleet, guards off, SLICE policy."""
+    rate = n / 120.0
+    wl = paper_mix(rate, 0.7, n, seed)
+    t0 = time.perf_counter()
+    tasks, per, router = run_fleet(
+        "round-robin", [DeviceProfile.standard() for _ in range(replicas)],
+        wl, secs(60.0), engine=engine)
+    wall = time.perf_counter() - t0
+    a = attainment(tasks)
+    decisions = sum(r.server.policy.reschedules for r in router.replicas) + n
+    steps = sum(r.server.steps for r in router.replicas)
+    return {
+        "engine": engine, "fleet": "replicas", "replicas": replicas,
+        "n_tasks": n, "rate": round(rate, 2),
+        "harness_wall_s": round(wall, 2),
+        "decisions": decisions,
+        "decisions_per_sec": round(decisions / wall, 1),
+        "steps": steps, "steps_per_sec": round(steps / wall, 1),
+        "finished": a["n_finished"], "rejected": len(router.rejected),
+        "slo": a["slo"],
+    }
+
+
+def event_engine_stage(replica_widths, replica_sizes):
+    print("stage 10: event-driven cluster engine (PR 6) — bit-exactness, "
+          "replica-width scale sweep")
+
+    uniform4 = lambda: [DeviceProfile.standard() for _ in range(4)]  # noqa: E731
+    single = lambda: [DeviceProfile.standard()]  # noqa: E731
+    mem48 = MemoryConfig(kv_capacity=HIGH_CAPACITY_MB * 1024 * 1024)
+    pairs = [
+        ("uniform-4 round-robin", uniform4, "round-robin", 4.0, 160, 42, {}),
+        ("uniform-4 least-loaded", uniform4, "least-loaded", 4.0, 160, 42, {}),
+        ("uniform-4 slo-aware", uniform4, "slo-aware", 4.0, 160, 42, {}),
+        ("uniform-4 slo-aware", uniform4, "slo-aware", 4.0, 160, 7, {}),
+        ("single-replica slo-aware", single, "slo-aware", 1.0, 120, 7, {}),
+        ("edge-mixed depth admission", edge_mixed, "slo-aware", 6.0, 200, 42,
+         {"admission": AdmissionConfig(enabled=True, mode="depth")}),
+        ("edge-mixed headroom admission", edge_mixed, "slo-aware", 6.0, 200, 42,
+         {"admission": AdmissionConfig(enabled=True, mode="headroom")}),
+        ("edge-mixed admission+migration", edge_mixed, "slo-aware", 6.0, 200, 42,
+         {"admission": AdmissionConfig(enabled=True, mode="headroom"),
+          "migration": True}),
+        ("edge-mixed memory+handoff", edge_mixed, "slo-aware", 6.0, 200, 42,
+         {"admission": AdmissionConfig(enabled=True, mode="headroom"),
+          "migration": True, "migrate_running": True, "memory": mem48}),
+    ]
+    for label, mk, strat, rate, n, seed, kw in pairs:
+        _engine_pair(label, mk, strat, rate, n, seed, **kw)
+
+    sweep = []
+    for width in replica_widths:
+        for i, n in enumerate(replica_sizes):
+            for engine in (["event", "lockstep"] if i == 0 else ["event"]):
+                cell = replica_scale_cell(engine, width, n)
+                sweep.append(cell)
+                print(f"  {engine:<8} replicas={width:>4} n={n:>6}: "
+                      f"wall={cell['harness_wall_s']:8.2f}s "
+                      f"decisions={cell['decisions']:>7} "
+                      f"({cell['decisions_per_sec']:>9.1f}/s) "
+                      f"steps={cell['steps']:>7} "
+                      f"finished={cell['finished']:>6} slo={cell['slo']:.4f}")
+    # event vs lockstep at the reference size must agree cell-for-cell
+    by = {(c["engine"], c["replicas"], c["n_tasks"]): c for c in sweep}
+    for width in replica_widths:
+        n0 = replica_sizes[0]
+        ev, ls = by[("event", width, n0)], by[("lockstep", width, n0)]
+        same = all(ev[k] == ls[k] for k in
+                   ("decisions", "steps", "finished", "rejected", "slo"))
+        check(same, f"replica sweep engines agree at width {width}, n={n0}")
+    print()
+    return sweep
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
@@ -513,6 +624,24 @@ def main():
     if "--scale-sizes" in sys.argv:
         raw = sys.argv[sys.argv.index("--scale-sizes") + 1]
         scale_sizes = [int(v) for v in raw.split(",") if v]
+    replica_widths = [16, 64, 256]
+    if "--replica-widths" in sys.argv:
+        raw = sys.argv[sys.argv.index("--replica-widths") + 1]
+        replica_widths = [int(v) for v in raw.split(",") if v]
+    replica_sizes = [10_000, 100_000]
+    if "--replica-sizes" in sys.argv:
+        raw = sys.argv[sys.argv.index("--replica-sizes") + 1]
+        replica_sizes = [int(v) for v in raw.split(",") if v]
+    bench6_out = None
+    if "--bench6-out" in sys.argv:
+        bench6_out = sys.argv[sys.argv.index("--bench6-out") + 1]
+
+    if "--stage10" in sys.argv:
+        # iterate on the event engine without re-running stages 1-9
+        sweep = event_engine_stage(replica_widths, replica_sizes)
+        if bench6_out:
+            _write_bench6(bench6_out, sweep)
+        return
 
     self_check()
 
@@ -565,13 +694,36 @@ def main():
     hetero, hetero_cells = hetero_sweep()
     memory = memory_sweep()
     hot_path = hot_path_stage(scale_sizes)
+    replica_sweep = event_engine_stage(replica_widths, replica_sizes)
 
     doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
            "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells,
-           "memory_sweep": memory, "scheduler_hot_path": hot_path}
+           "memory_sweep": memory, "scheduler_hot_path": hot_path,
+           "replica_sweep": replica_sweep}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")
+    if bench6_out:
+        _write_bench6(bench6_out, replica_sweep)
+
+
+def _write_bench6(path, sweep):
+    doc = {
+        "schema": "slice-serve-bench/v6",
+        "source": ("tools/pysim/run_experiments.py stage 10 — the bit-exact "
+                   "Python mirror (no Rust toolchain in the build env); "
+                   "reproduce natively with `slice-serve experiment scale "
+                   "--replicas 16,64,256`"),
+        "workload": ("paper_mix, rate = n_tasks/120 s across the fleet, "
+                     "RT:NRT 7:3, seed 42; round-robin homogeneous standard "
+                     "fleet, SLICE policy, guards off, 60 s drain"),
+        "note": ("event cells at every size; lockstep reference cells at the "
+                 "smallest size only (the lockstep engine is the in-tree "
+                 "equivalence reference, not the scale path)"),
+        "replica_sweep": sweep,
+    }
+    Path(path).write_text(json.dumps(doc, indent=2))
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,8 @@ table). Every algorithm here mirrors the Rust source line by line:
   DeviceProfile     <- rust/src/cluster/fleet.rs (tiers, admission bounds)
   Replica / Router  <- rust/src/cluster/*.rs (staging, admission, migration,
                                               running-task KV handoff)
+  Orchestrator      <- rust/src/cluster/orchestrator.rs (event-driven engine:
+                                              heap-scheduled replica wakes)
   MemoryConfig etc. <- rust/src/engine/memory.rs (KV model, swap/recompute)
   Attainment etc.   <- rust/src/metrics/mod.rs
   WorkloadSpec      <- rust/src/workload/mod.rs
@@ -28,6 +30,7 @@ which can shift an arrival timestamp by at most 1 µs).
 
 from __future__ import annotations
 
+import heapq
 import math
 from bisect import bisect_left
 from collections import deque
@@ -763,9 +766,28 @@ class Server:
         self.steps = 0
         self.decode_steps = 0
         self.prefill_steps = 0
+        # delivered-but-unfinished count (mirrors server.rs `live`):
+        # the O(1) backing for next_event_time
+        self.live_count = 0
 
     def now(self) -> int:
         return self.clock
+
+    def next_event_time(self) -> Optional[int]:
+        """Mirrors Server::next_event_time: `now` while any delivered
+        task is unfinished, else the first pending arrival's time, else
+        None (fully idle)."""
+        if self.live_count > 0:
+            return self.clock
+        return self.arrivals[0].arrival if self.arrivals else None
+
+    def sync_clock(self, t: int) -> None:
+        """Mirrors Server::sync_clock: move the clock monotonically
+        without serving (only valid while fully idle)."""
+        assert self.next_event_time() is None, \
+            "sync_clock would skip real serving work"
+        if t > self.clock:
+            self.clock = t
 
     def push_arrival(self, task: Task) -> None:
         assert not self.arrivals or self.arrivals[-1].arrival <= task.arrival
@@ -784,6 +806,7 @@ class Server:
             ids.append(t.id)
             self.pool.append(t)
         if ids:
+            self.live_count += len(ids)
             self.policy.on_arrival(self.pool, ids, now)
 
     def _apply_outcome(self, token_ids: List[int], now: int) -> None:
@@ -797,6 +820,7 @@ class Server:
             if t.is_finished():
                 completed.append(tid)
         if completed:
+            self.live_count -= len(completed)
             for tid in completed:
                 self.kv.release(tid)
                 self.pool[tid].residency = RES_NONE
@@ -839,6 +863,16 @@ class Server:
             cost += c
         return cost
 
+    def _restore_swapped(self, tid: int, tokens: int, pending: int) -> int:
+        """Mirrors server.rs restore_swapped: a migrated-in task with no
+        outstanding handoff fee and no kv slot is admitted free (its
+        bytes were handed off, not swapped out locally); everything else
+        pays the kv restore price."""
+        if pending == 0 and tid not in self.kv.slots:
+            self.kv.insert(tid, tokens)
+            return 0
+        return self.kv.restore(tid, tokens, pending)
+
     def _prepare_decode(self, tids: List[int]):
         if not self._memory_constrained():
             # a migrated-in task's handoff fee is owed even here (the
@@ -847,10 +881,8 @@ class Server:
             for tid in tids:
                 t = self.pool[tid]
                 if t.residency == RES_SWAPPED:
-                    if t.pending_restore > 0:
-                        cost += self.kv.restore(tid, t.seq_len(), t.pending_restore)
-                    else:
-                        self.kv.insert(tid, t.seq_len())
+                    cost += self._restore_swapped(tid, t.seq_len(),
+                                                  t.pending_restore)
                     t.residency = RES_RESIDENT
                     t.pending_restore = 0
                     t.swap_ins += 1
@@ -875,7 +907,8 @@ class Server:
         for tid in kept:
             t = self.pool[tid]
             if t.residency != RES_RESIDENT:
-                cost += self.kv.restore(tid, t.seq_len(), t.pending_restore)
+                cost += self._restore_swapped(tid, t.seq_len(),
+                                              t.pending_restore)
                 t.residency = RES_RESIDENT
                 t.pending_restore = 0
                 t.swap_ins += 1
@@ -890,6 +923,7 @@ class Server:
         t.migrated_away = True
         t.state = FINISHED
         t.residency = RES_NONE
+        self.live_count -= 1
         self.kv.release(tid)
         self.policy.on_completion(self.pool, [tid], now)
         return snap
@@ -1102,6 +1136,21 @@ class Replica:
         del self.staged[:due]
         self.server.run_until(t)
 
+    def next_event_time(self) -> Optional[int]:
+        """Mirrors Replica::next_event_time: min of the server's next
+        interesting time and the first staged (undelivered) arrival."""
+        s = self.server.next_event_time()
+        st = self.staged[0].arrival if self.staged else None
+        if s is None:
+            return st
+        if st is None:
+            return s
+        return min(s, st)
+
+    def sync_clock(self, t: int) -> None:
+        assert not self.staged, "sync_clock with staged arrivals"
+        self.server.sync_clock(t)
+
     def load_tokens(self) -> int:
         in_service = sum(
             t.remaining_tokens() for t in self.server.pool if not t.is_finished()
@@ -1277,6 +1326,127 @@ class Router:
         return tasks, per_replica
 
 
+class Orchestrator:
+    """Mirrors cluster/orchestrator.rs: the event-driven cluster engine.
+
+    Decisions (routing, admission, migration) are delegated to an
+    embedded Router over the same replicas — only the advancement
+    machinery differs. Events are heapq tuples ordered exactly like the
+    Rust Event struct: (time, kind, replica, task) with kind ranks
+    WAKE < BOUNDARY < ARRIVAL. Bit-exact with Router.run by
+    construction; stage 10 asserts it.
+    """
+
+    WAKE, BOUNDARY, ARRIVAL = 0, 1, 2
+
+    def __init__(self, ctl: Router) -> None:
+        self.ctl = ctl
+        self.replicas = ctl.replicas
+        n = len(self.replicas)
+        self.wake: List[Optional[int]] = [None] * n
+        self.advanced_to: List[Optional[int]] = [None] * n
+        self.advancements = [0] * n
+
+    def _advance(self, i: int, t: int) -> None:
+        self.advancements[i] += 1
+        self.advanced_to[i] = t
+        self.replicas[i].run_until(t)
+
+    def _refresh_wake(self, i: int, heap: List) -> None:
+        nxt = self.replicas[i].next_event_time()
+        if self.wake[i] == nxt:
+            return
+        self.wake[i] = nxt
+        if nxt is not None:
+            heapq.heappush(heap, (nxt, self.WAKE, i, 0))
+
+    def run(self, workload: List[Task], drain: int):
+        ctl = self.ctl
+        assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
+        last = workload[-1].arrival if workload else 0
+        horizon = last + drain
+        arrivals = iter(workload)
+        heap: List = []
+        parked: List[int] = []
+        nxt = next(arrivals, None)
+        next_arrival = nxt
+        if nxt is not None:
+            next_boundary = nxt.arrival
+            heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
+        else:
+            next_boundary = horizon
+            heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
+        while True:
+            time, kind, ridx, tid = heapq.heappop(heap)
+            if kind == self.WAKE:
+                if self.wake[ridx] != time:
+                    continue  # stale: the replica's horizon moved
+                self.wake[ridx] = None
+                if self.advanced_to[ridx] == next_boundary:
+                    parked.append(ridx)
+                    continue
+                self._advance(ridx, next_boundary)
+                t = self.replicas[ridx].next_event_time()
+                if t is not None:
+                    self.wake[ridx] = t
+                    heapq.heappush(heap, (t, self.WAKE, ridx, 0))
+            elif kind == self.ARRIVAL:
+                task = next_arrival
+                next_arrival = None
+                assert task is not None and task.id == tid
+                if ctl.migration:
+                    # migration reads every replica's clock: idle ones
+                    # never woke, so sync them to the boundary first
+                    for i, r in enumerate(self.replicas):
+                        if (self.advanced_to[i] != time
+                                and r.next_event_time() is None):
+                            r.sync_clock(time)
+                ctl.run_migrations()
+                ctl.run_running_migrations()
+                pick = ctl.decide(task)
+                if pick is None:
+                    ctl.rejected.append(task)
+                else:
+                    self.replicas[pick].assign(task)
+                # advance the boundary and queue its event BEFORE
+                # re-arming wakes, so fresh wakes park against the new
+                # boundary rather than the one just consumed
+                nxt = next(arrivals, None)
+                next_arrival = nxt
+                if nxt is not None:
+                    next_boundary = nxt.arrival
+                    heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
+                else:
+                    next_boundary = horizon
+                    heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
+                if ctl.migration:
+                    for i in range(len(self.replicas)):
+                        self._refresh_wake(i, heap)
+                    parked.clear()
+                else:
+                    for i in parked:
+                        self._refresh_wake(i, heap)
+                    del parked[:]
+                    if pick is not None:
+                        self._refresh_wake(pick, heap)
+            else:  # BOUNDARY — the final drain at the horizon
+                assert time == horizon
+                for i, r in enumerate(self.replicas):
+                    if self.advanced_to[i] == horizon:
+                        pass
+                    elif self.advancements[i] > 0 or self.wake[i] is not None:
+                        self._advance(i, horizon)
+                    else:
+                        r.sync_clock(horizon)
+                    assert r.pending() == 0, "drain window too small"
+                break
+        per_replica = [(r.id, r.routed, r.server.steps) for r in self.replicas]
+        tasks = [t for r in self.replicas for t in r.finish()]
+        tasks.extend(ctl.rejected)
+        tasks.sort(key=lambda t: t.id)
+        return tasks, per_replica
+
+
 def _default_policy(profile: DeviceProfile, memory: Optional[MemoryConfig] = None):
     lat = LatencyModel(profile.latency.points, profile.latency.prefill_points,
                        min(32, profile.max_batch))
@@ -1297,9 +1467,12 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
               admission: Optional[AdmissionConfig] = None,
               migration: bool = False,
               migrate_running: bool = False,
-              memory: Optional[MemoryConfig] = None):
+              memory: Optional[MemoryConfig] = None,
+              engine: str = "lockstep"):
     """Mirrors experiments::run_fleet. Returns (tasks, per_replica) plus
-    shed/migration counters via the returned router's attributes."""
+    shed/migration counters via the returned router's attributes.
+    engine="event" drives the same Router decisions through the
+    heap-scheduled Orchestrator (bit-exact with "lockstep")."""
     # thread the base capacity into a *copy* of the spec (the Rust
     # run_fleet clones; mutating the caller's profiles would leak stale
     # capacities across calls) unless it already carries explicit ones
@@ -1319,7 +1492,11 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
     router = Router("round-robin" if strategy == "rr" else strategy, fleet,
                     admission=admission, migration=migration,
                     migrate_running=migrate_running, memory=memory or MemoryConfig())
-    tasks, per = router.run(workload, drain)
+    if engine == "event":
+        tasks, per = Orchestrator(router).run(workload, drain)
+    else:
+        assert engine == "lockstep", f"unknown cluster engine {engine!r}"
+        tasks, per = router.run(workload, drain)
     return tasks, per, router
 
 
