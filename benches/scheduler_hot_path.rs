@@ -384,4 +384,26 @@ fn main() {
         .unwrap()
     });
     println!("{}", r.report_line());
+
+    // Elastic fleet under seeded churn (PR 7): lifecycle events, crash
+    // evacuation and re-placement on top of the guarded path — prices
+    // the membership machinery itself, since the all-disabled elastic
+    // path is bit-exact with the cell above.
+    let mut churn_cfg = guarded_cfg.clone();
+    churn_cfg.cluster_engine = slice_serve::config::ClusterEngine::Event;
+    churn_cfg.lifecycle.churn_rate = 0.05;
+    churn_cfg.lifecycle.seed = 7;
+    churn_cfg.lifecycle.min_replicas = 2;
+    churn_cfg.lifecycle.max_replicas = 8;
+    let r = bench("cluster/run_event/churn/4x120", budget, || {
+        experiments::run_fleet(
+            RoutingStrategy::SloAware,
+            &mixed,
+            wl.clone(),
+            &churn_cfg,
+            secs(60.0),
+        )
+        .unwrap()
+    });
+    println!("{}", r.report_line());
 }

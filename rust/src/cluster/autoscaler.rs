@@ -1,0 +1,199 @@
+//! Fleet autoscaling on SLICE admission signals (DESIGN.md "Elastic
+//! fleets").
+//!
+//! The autoscaler observes every routing boundary and votes
+//! [`ScaleDecision`]s; the [`Orchestrator`](super::Orchestrator)
+//! applies them (a grow admits a factory-built replica, a shrink
+//! retires one leave-style — its work is evacuated, not dropped).
+//!
+//! Signals are the free by-products of the decisions the cluster
+//! already makes, so the scaler adds no per-boundary Eq. 7 work:
+//!
+//!   * **deficit** — the router shed this arrival. Under headroom
+//!     admission a shed means *no* alive, healthy replica had positive
+//!     Eq. 7 cycle headroom for the task, i.e. the fleet is at zero
+//!     headroom — exactly the paper's overload signal. Without
+//!     admission the fallback is every placeable replica overrunning
+//!     its cycle.
+//!   * **idle** — some alive replica has no scheduled work at all
+//!     (no queue, no live tasks, no pending event) and nothing was
+//!     shed: the fleet is over-provisioned.
+//!
+//! Hysteresis: a signal must persist for `deficit_streak` /
+//! `idle_streak` consecutive boundaries (opposite observations reset
+//! the run), and after any action the scaler sleeps for `cooldown`
+//! virtual time. Size is bounded by the lifecycle `min_replicas` /
+//! `max_replicas`. Everything is a pure function of the observation
+//! stream — reruns of one seed scale identically.
+
+use super::lifecycle::AutoscalerConfig;
+use crate::util::Micros;
+
+/// What the autoscaler wants done to the fleet at this boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// No change.
+    Hold,
+    /// Admit one fresh replica.
+    Grow,
+    /// Retire the replica with this id (idle at decision time).
+    Shrink(usize),
+}
+
+/// Streak-and-cooldown scaler over shed/idle observations.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    min_replicas: usize,
+    max_replicas: usize,
+    deficit_run: u32,
+    idle_run: u32,
+    ready_at: Micros,
+    grows: u64,
+    shrinks: u64,
+}
+
+impl Autoscaler {
+    /// New scaler with the given signal shape and fleet bounds.
+    pub fn new(cfg: AutoscalerConfig, min_replicas: usize, max_replicas: usize) -> Self {
+        assert!(min_replicas >= 1, "fleet lower bound must be at least 1");
+        assert!(
+            min_replicas <= max_replicas,
+            "fleet bounds inverted: min {} > max {}",
+            min_replicas,
+            max_replicas
+        );
+        Autoscaler {
+            cfg,
+            min_replicas,
+            max_replicas,
+            deficit_run: 0,
+            idle_run: 0,
+            ready_at: 0,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    /// Actions taken so far, `(grows, shrinks)`.
+    pub fn actions(&self) -> (u64, u64) {
+        (self.grows, self.shrinks)
+    }
+
+    /// Feed one routing-boundary observation and get the decision.
+    ///
+    /// * `now` — boundary time.
+    /// * `deficit` — the fleet had no capacity for this arrival (shed,
+    ///   or all-placeable-overloaded fallback).
+    /// * `idle_replica` — an alive replica with no work at all, if any
+    ///   (the shrink victim; caller picks deterministically).
+    /// * `alive` — current alive count (bounds check).
+    ///
+    /// The caller must apply the returned action for the counters and
+    /// cooldown to stay truthful.
+    pub fn observe(
+        &mut self,
+        now: Micros,
+        deficit: bool,
+        idle_replica: Option<usize>,
+        alive: usize,
+    ) -> ScaleDecision {
+        // A boundary is deficit, idle, or neither; a deficit boundary
+        // always breaks an idle streak and vice versa.
+        if deficit {
+            self.deficit_run += 1;
+            self.idle_run = 0;
+        } else if idle_replica.is_some() {
+            self.idle_run += 1;
+            self.deficit_run = 0;
+        } else {
+            self.deficit_run = 0;
+            self.idle_run = 0;
+        }
+        if now < self.ready_at {
+            return ScaleDecision::Hold;
+        }
+        if self.deficit_run >= self.cfg.deficit_streak && alive < self.max_replicas {
+            self.deficit_run = 0;
+            self.idle_run = 0;
+            self.ready_at = now.saturating_add(self.cfg.cooldown);
+            self.grows += 1;
+            return ScaleDecision::Grow;
+        }
+        if self.idle_run >= self.cfg.idle_streak && alive > self.min_replicas {
+            if let Some(victim) = idle_replica {
+                self.deficit_run = 0;
+                self.idle_run = 0;
+                self.ready_at = now.saturating_add(self.cfg.cooldown);
+                self.shrinks += 1;
+                return ScaleDecision::Shrink(victim);
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            enabled: true,
+            deficit_streak: 2,
+            idle_streak: 3,
+            cooldown: 1_000,
+        }
+    }
+
+    #[test]
+    fn grows_after_sustained_deficit_only() {
+        let mut a = Autoscaler::new(cfg(), 1, 8);
+        assert_eq!(a.observe(0, true, None, 4), ScaleDecision::Hold);
+        assert_eq!(a.observe(10, true, None, 4), ScaleDecision::Grow);
+        assert_eq!(a.actions(), (1, 0));
+    }
+
+    #[test]
+    fn opposite_signal_resets_streak() {
+        let mut a = Autoscaler::new(cfg(), 1, 8);
+        assert_eq!(a.observe(0, true, None, 4), ScaleDecision::Hold);
+        // an idle boundary wipes the deficit run
+        assert_eq!(a.observe(10, false, Some(2), 4), ScaleDecision::Hold);
+        assert_eq!(a.observe(20, true, None, 4), ScaleDecision::Hold);
+        assert_eq!(a.observe(30, true, None, 4), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_actions() {
+        let mut a = Autoscaler::new(cfg(), 1, 8);
+        a.observe(0, true, None, 4);
+        assert_eq!(a.observe(10, true, None, 4), ScaleDecision::Grow);
+        // streak re-satisfied inside the cooldown window: held
+        a.observe(20, true, None, 5);
+        assert_eq!(a.observe(30, true, None, 5), ScaleDecision::Hold);
+        // past the cooldown the pent-up streak fires
+        assert_eq!(a.observe(1_200, true, None, 5), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn respects_fleet_bounds() {
+        let mut a = Autoscaler::new(cfg(), 2, 4);
+        a.observe(0, true, None, 4);
+        assert_eq!(a.observe(10, true, None, 4), ScaleDecision::Hold, "at max");
+        let mut b = Autoscaler::new(cfg(), 2, 4);
+        for t in 0..3 {
+            let d = b.observe(t * 10, false, Some(1), 2);
+            assert_eq!(d, ScaleDecision::Hold, "at min");
+        }
+    }
+
+    #[test]
+    fn shrinks_idle_replica_after_streak() {
+        let mut a = Autoscaler::new(cfg(), 1, 8);
+        assert_eq!(a.observe(0, false, Some(3), 4), ScaleDecision::Hold);
+        assert_eq!(a.observe(10, false, Some(3), 4), ScaleDecision::Hold);
+        assert_eq!(a.observe(20, false, Some(3), 4), ScaleDecision::Shrink(3));
+        assert_eq!(a.actions(), (0, 1));
+    }
+}

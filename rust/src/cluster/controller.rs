@@ -28,7 +28,7 @@ use crate::util::Micros;
 
 use super::fleet::{AdmissionConfig, AdmissionMode};
 use super::replica::Replica;
-use super::router::{ClusterReport, RoutingStrategy};
+use super::router::{ClusterReport, ElasticStats, RoutingStrategy};
 
 /// Routing/admission/migration decision state shared by both cluster
 /// engines. Owns every counter the final [`ClusterReport`] aggregates.
@@ -56,6 +56,28 @@ pub(crate) struct Controller {
     pub(crate) handoff_bytes: u64,
     pub(crate) handoff_us: Micros,
     pub(crate) rejected: Vec<Task>,
+    /// Per-replica liveness under lifecycle events. **Empty for static
+    /// fleets** — the empty-mask fast path is what keeps elastic
+    /// support out of the static hot path entirely (`is_alive` treats
+    /// a missing entry as alive). The event engine fills it when any
+    /// elastic feature is on.
+    pub(crate) alive: Vec<bool>,
+    /// Per-replica health verdicts (same empty-for-static contract).
+    /// Degraded replicas are skipped by placement and migration; if
+    /// *every* alive replica is degraded, placement relaxes to
+    /// alive-only — total shed would be worse than slow service.
+    pub(crate) degraded: Vec<bool>,
+    /// Eligibility-mask buffer (alive ∧ ¬degraded per decision),
+    /// reused like the admission scratch.
+    eligible_scratch: Vec<bool>,
+    pub(crate) crashes: u64,
+    pub(crate) joins: u64,
+    pub(crate) leaves: u64,
+    pub(crate) evac_requeued: u64,
+    pub(crate) evac_restarted: u64,
+    pub(crate) evac_recompute_us: Micros,
+    pub(crate) autoscale_grows: u64,
+    pub(crate) autoscale_shrinks: u64,
 }
 
 impl Controller {
@@ -75,6 +97,42 @@ impl Controller {
             handoff_bytes: 0,
             handoff_us: 0,
             rejected: Vec::new(),
+            alive: Vec::new(),
+            degraded: Vec::new(),
+            eligible_scratch: Vec::new(),
+            crashes: 0,
+            joins: 0,
+            leaves: 0,
+            evac_requeued: 0,
+            evac_restarted: 0,
+            evac_recompute_us: 0,
+            autoscale_grows: 0,
+            autoscale_shrinks: 0,
+        }
+    }
+
+    /// Liveness under lifecycle events; a missing entry (static fleet)
+    /// is alive.
+    pub(crate) fn is_alive(&self, i: usize) -> bool {
+        self.alive.get(i).copied().unwrap_or(true)
+    }
+
+    /// Health verdict; a missing entry (static fleet) is healthy.
+    pub(crate) fn is_degraded(&self, i: usize) -> bool {
+        self.degraded.get(i).copied().unwrap_or(false)
+    }
+
+    /// Replicas placement may target: alive and not degraded.
+    pub(crate) fn placeable(&self, i: usize) -> bool {
+        self.is_alive(i) && !self.is_degraded(i)
+    }
+
+    /// Alive replicas right now (fleet-bound checks).
+    pub(crate) fn alive_count(&self, fleet_len: usize) -> usize {
+        if self.alive.is_empty() {
+            fleet_len
+        } else {
+            self.alive.iter().filter(|&&a| a).count()
         }
     }
 
@@ -96,8 +154,24 @@ impl Controller {
         // never allocates in steady state
         let mut mask = std::mem::take(&mut self.admission_scratch);
         let mut headrooms = std::mem::take(&mut self.headroom_scratch);
+        let mut elig = std::mem::take(&mut self.eligible_scratch);
         mask.clear();
         headrooms.clear();
+        elig.clear();
+        // eligibility (alive ∧ ¬degraded) only exists under lifecycle
+        // events — static fleets take the empty-mask fast path and this
+        // whole block is a no-op
+        let use_elig = !self.alive.is_empty();
+        if use_elig {
+            elig.extend((0..replicas.len()).map(|i| self.placeable(i)));
+            if !elig.iter().any(|&e| e) {
+                // every alive replica is degraded: relax to alive-only
+                // rather than shedding the whole arrival stream
+                for (i, e) in elig.iter_mut().enumerate() {
+                    *e = self.is_alive(i);
+                }
+            }
+        }
         let use_mask = self.admission.enabled;
         if use_mask {
             match self.admission.mode {
@@ -122,7 +196,7 @@ impl Controller {
                 }
             }
         }
-        let open = |i: usize| !use_mask || mask[i];
+        let open = |i: usize| (!use_elig || elig[i]) && (!use_mask || mask[i]);
         let pick = if !(0..replicas.len()).any(open) {
             None
         } else {
@@ -165,6 +239,7 @@ impl Controller {
         };
         self.admission_scratch = mask;
         self.headroom_scratch = headrooms;
+        self.eligible_scratch = elig;
         pick
     }
 
@@ -186,13 +261,16 @@ impl Controller {
             return;
         }
         for src in 0..replicas.len() {
-            if !replicas[src].as_ref().overloaded() {
+            if !self.is_alive(src) || !replicas[src].as_ref().overloaded() {
                 continue;
             }
+            // the eligible-peer check runs *before* withdrawing: with a
+            // churning fleet the only peers may be dead or degraded, and
+            // an offer with nowhere to go must never leave the queue
             let peer_has_headroom = replicas
                 .iter()
                 .map(AsRef::as_ref)
-                .any(|r| r.id() != src && !r.overloaded());
+                .any(|r| r.id() != src && self.placeable(r.id()) && !r.overloaded());
             if !peer_has_headroom {
                 continue;
             }
@@ -200,10 +278,14 @@ impl Controller {
             for task in offered {
                 let quota = task.slo.tokens_per_cycle();
                 let dst = best_by_headroom(replicas, quota, |r| {
-                    r.id() != src && !r.overloaded()
+                    r.id() != src && self.placeable(r.id()) && !r.overloaded()
                 })
-                .or_else(|| best_by_headroom(replicas, quota, |r| r.id() != src))
-                .expect("fleet has at least two replicas");
+                .or_else(|| {
+                    best_by_headroom(replicas, quota, |r| {
+                        r.id() != src && self.placeable(r.id())
+                    })
+                })
+                .expect("an eligible peer exists (checked before withdrawing)");
                 self.migrated.insert(task.id);
                 self.migrations += 1;
                 replicas[dst].as_mut().receive_migrated(task);
@@ -230,7 +312,7 @@ impl Controller {
             return;
         }
         for src in 0..replicas.len() {
-            if !replicas[src].as_ref().overloaded() {
+            if !self.is_alive(src) || !replicas[src].as_ref().overloaded() {
                 continue;
             }
             let candidates = replicas[src].as_ref().running_candidates(&self.migrated);
@@ -240,7 +322,7 @@ impl Controller {
                 }
                 let Some((dst, dst_headroom)) =
                     best_by_headroom_with(replicas, quota, |r| {
-                        r.id() != src && !r.overloaded()
+                        r.id() != src && self.placeable(r.id()) && !r.overloaded()
                     })
                 else {
                     break;
@@ -262,10 +344,110 @@ impl Controller {
         }
     }
 
+    /// Evacuate a replica that is leaving the fleet (`crash`: it died
+    /// losing its resident KV; otherwise a graceful leave). The caller
+    /// has already marked it dead in `alive`, so every placement below
+    /// naturally excludes it.
+    ///
+    /// Queued-but-unstarted tasks are withdrawn and re-placed for free
+    /// (their state never left this replica). In-service tasks are
+    /// extracted and re-admitted on the best eligible peer with a
+    /// restore fee stamped on the task and charged by the destination
+    /// at the task's next decode: after a crash the fee is a full
+    /// prefill *recompute* of the cached sequence **on the
+    /// destination's own latency curve** (the cache is gone); after a
+    /// leave it is the PR 4 KV *handoff* transfer time over the
+    /// inter-replica link. Evacuation bypasses the exactly-once
+    /// overload-migration set — losing a replica is not an overload
+    /// decision, and a previously-migrated task must still move off a
+    /// dead one.
+    pub(crate) fn evacuate<R: AsRef<Replica> + AsMut<Replica>>(
+        &mut self,
+        replicas: &mut [R],
+        src: usize,
+        crash: bool,
+    ) {
+        // queued tasks first: free re-placement, arrival order
+        let queued = replicas[src].as_mut().withdraw_all();
+        for task in queued {
+            let quota = task.slo.tokens_per_cycle();
+            let dst = best_by_headroom(replicas, quota, |r| {
+                r.id() != src && self.placeable(r.id()) && !r.overloaded()
+            })
+            .or_else(|| {
+                best_by_headroom(replicas, quota, |r| {
+                    r.id() != src && self.is_alive(r.id())
+                })
+            });
+            match dst {
+                Some(d) => {
+                    self.evac_requeued += 1;
+                    replicas[d].as_mut().receive_migrated(task);
+                }
+                // unreachable while min_replicas >= 1 (the lifecycle
+                // bound keeps an alive peer); shed defensively
+                None => self.rejected.push(task),
+            }
+        }
+        // then everything in service, delivery order
+        let manifest = replicas[src].as_ref().evacuees();
+        for (gid, quota, tokens, prefilled) in manifest {
+            let dst = best_by_headroom(replicas, quota, |r| {
+                r.id() != src && self.placeable(r.id()) && !r.overloaded()
+            })
+            .or_else(|| {
+                best_by_headroom(replicas, quota, |r| {
+                    r.id() != src && self.is_alive(r.id())
+                })
+            });
+            let Some(d) = dst else {
+                // no alive peer (unreachable under the lifecycle
+                // bounds): the task stays on the dead replica and its
+                // report counts it as an SLO violation
+                continue;
+            };
+            let mut task = replicas[src].as_mut().extract_evacuee(gid);
+            if prefilled {
+                let fee = if crash {
+                    replicas[d].as_ref().profile().latency.prefill(tokens)
+                } else {
+                    self.memory.handoff_cost(tokens)
+                };
+                task.pending_restore = fee;
+                if crash {
+                    self.evac_recompute_us += fee;
+                } else {
+                    self.handoff_bytes += self.memory.bytes_for(tokens);
+                    self.handoff_us += fee;
+                }
+                self.evac_restarted += 1;
+            } else {
+                self.evac_requeued += 1;
+            }
+            replicas[d].as_mut().receive_migrated(task);
+        }
+    }
+
     /// Consume the controller and the drained fleet into the final
     /// [`ClusterReport`] — the single construction point both engines
     /// share, so the report shape cannot drift between them.
     pub(crate) fn into_report(self, replicas: Vec<Replica>) -> ClusterReport {
+        let elastic = ElasticStats {
+            crashes: self.crashes,
+            joins: self.joins,
+            leaves: self.leaves,
+            evac_requeued: self.evac_requeued,
+            evac_restarted: self.evac_restarted,
+            evac_recompute_us: self.evac_recompute_us,
+            autoscale_grows: self.autoscale_grows,
+            autoscale_shrinks: self.autoscale_shrinks,
+        };
+        let mut reports: Vec<_> = replicas.into_iter().map(Replica::finish).collect();
+        if !self.alive.is_empty() {
+            for r in &mut reports {
+                r.alive = self.alive[r.replica];
+            }
+        }
         ClusterReport {
             strategy: self.strategy.label(),
             migrations: self.migrations,
@@ -273,7 +455,8 @@ impl Controller {
             handoff_bytes: self.handoff_bytes,
             handoff_us: self.handoff_us,
             rejected: self.rejected,
-            replicas: replicas.into_iter().map(Replica::finish).collect(),
+            replicas: reports,
+            elastic,
         }
     }
 }

@@ -1,0 +1,135 @@
+//! Router health scoring: an EWMA of per-replica boundary lag with a
+//! recent-failure penalty (DESIGN.md "Elastic fleets").
+//!
+//! At every routing boundary the tracker samples each alive replica's
+//! *cycle lag* — how far its Eq. 7 period currently overruns the cycle
+//! cap (`period_eq7(demand) − cycle_cap`, clamped at zero; the same
+//! quantity whose sign drives `Replica::overloaded`). The health score
+//! is an exponentially-weighted moving average of that lag plus a flat
+//! `failure_penalty` whenever the replica is overrunning at all, so a
+//! replica that keeps brushing overload degrades faster than its raw
+//! lag suggests:
+//!
+//! ```text
+//! sample_i = lag_i + penalty · 1[lag_i > 0]
+//! score_i ← (1 − alpha) · score_i + alpha · sample_i
+//! degraded_i ⇔ score_i > lag_threshold
+//! ```
+//!
+//! Degraded replicas are excluded from placement and migration targets
+//! (the controller falls back to alive-only if *every* alive replica
+//! is degraded — shedding everything because the whole fleet is slow
+//! would be worse than placing on the least-bad replica). Scores decay
+//! back under the threshold once the replica catches up, so degradation
+//! is a temporary routing state, not a lifecycle transition.
+
+use super::lifecycle::HealthConfig;
+use crate::util::Micros;
+
+/// Per-replica EWMA lag scores and the degraded verdicts they imply.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    scores: Vec<f64>,
+}
+
+impl HealthTracker {
+    /// New tracker for `n` replicas, all starting healthy (score 0).
+    pub fn new(cfg: HealthConfig, n: usize) -> Self {
+        assert!(
+            cfg.alpha > 0.0 && cfg.alpha <= 1.0,
+            "health alpha must be in (0, 1], got {}",
+            cfg.alpha
+        );
+        HealthTracker { cfg, scores: vec![0.0; n] }
+    }
+
+    /// Grow the score table when replicas join (new entries healthy).
+    pub fn ensure(&mut self, n: usize) {
+        if self.scores.len() < n {
+            self.scores.resize(n, 0.0);
+        }
+    }
+
+    /// Fold one boundary's lag sample for replica `i` into its score.
+    /// Dead replicas are simply not observed — their score freezes.
+    pub fn observe(&mut self, i: usize, lag: Micros) {
+        let sample = if lag > 0 {
+            (lag + self.cfg.failure_penalty) as f64
+        } else {
+            0.0
+        };
+        let a = self.cfg.alpha;
+        self.scores[i] = (1.0 - a) * self.scores[i] + a * sample;
+    }
+
+    /// Current score for replica `i` (µs of smoothed cycle overrun).
+    pub fn score(&self, i: usize) -> f64 {
+        self.scores[i]
+    }
+
+    /// True when replica `i`'s smoothed lag exceeds the threshold.
+    pub fn degraded(&self, i: usize) -> bool {
+        self.scores[i] > self.cfg.lag_threshold as f64
+    }
+
+    /// Write the degraded verdicts into the controller's mask.
+    pub fn fill_mask(&self, mask: &mut [bool]) {
+        for (i, d) in mask.iter_mut().enumerate() {
+            *d = self.degraded(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            enabled: true,
+            alpha: 0.5,
+            lag_threshold: 1_000,
+            failure_penalty: 500,
+        }
+    }
+
+    #[test]
+    fn sustained_lag_degrades_and_recovery_heals() {
+        let mut h = HealthTracker::new(cfg(), 2);
+        assert!(!h.degraded(0));
+        // sample = 2_000 + 500; EWMA alpha 0.5: 1250, 1875 > 1000
+        h.observe(0, 2_000);
+        assert!(h.degraded(0), "one big overrun already crosses at alpha 0.5");
+        h.observe(0, 2_000);
+        assert!(h.degraded(0));
+        assert!(!h.degraded(1), "scores are per-replica");
+        // lag gone: score halves each boundary, back under threshold
+        h.observe(0, 0);
+        h.observe(0, 0);
+        assert!(!h.degraded(0), "healthy boundaries decay the score");
+    }
+
+    #[test]
+    fn penalty_applies_only_while_overrunning() {
+        let mut h = HealthTracker::new(cfg(), 1);
+        h.observe(0, 1);
+        // sample = 1 + 500 penalty
+        assert!((h.score(0) - 250.5).abs() < 1e-9);
+        h.observe(0, 0);
+        // zero-lag sample carries no penalty
+        assert!((h.score(0) - 125.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ensure_adds_healthy_entries() {
+        let mut h = HealthTracker::new(cfg(), 1);
+        h.observe(0, 5_000);
+        h.ensure(3);
+        assert!(h.degraded(0));
+        assert!(!h.degraded(1) && !h.degraded(2));
+        let mut mask = vec![false; 3];
+        h.fill_mask(&mut mask);
+        assert_eq!(mask, vec![true, false, false]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Replica lifecycle events: deterministic join/leave/crash streams for
+//! elastic fleets (DESIGN.md "Elastic fleets").
+//!
+//! A lifecycle stream is fixed before the run starts: explicit events
+//! (configured times, `[cluster.lifecycle]` / `--crash-at`) merged with
+//! a seeded Poisson churn stream (`churn_rate` events/s, xoshiro256++
+//! seeded by `seed`), sorted by time. The
+//! [`Orchestrator`](super::Orchestrator) injects the schedule through
+//! its event heap as [`EventKind::Lifecycle`](super::EventKind) events
+//! — same heap, same deterministic `(time, kind, replica, task)`
+//! tie-break — so reruns of one seed replay the identical churn
+//! history, failures included.
+//!
+//! Semantics (enforced by the orchestrator):
+//!   * **Crash** — the replica dies *with* its resident KV: queued
+//!     tasks are withdrawn and re-placed for free, mid-generation tasks
+//!     are re-admitted elsewhere with a full prefill *recompute* fee
+//!     priced on the destination's own latency curve (the cache is
+//!     gone; PR 4's restore machinery charges the fee on the clock).
+//!   * **Leave** — a graceful exit: same evacuation, but surviving KV
+//!     is handed off over the inter-replica link at the PR 4 handoff
+//!     price.
+//!   * **Join** — a fresh replica appends to the fleet (built by the
+//!     caller-supplied factory), immediately placeable.
+//!
+//! Events that would push the alive count outside
+//! [`min_replicas`, `max_replicas`] are skipped, not clamped — the
+//! bound is on the *fleet*, and a skipped event consumes no randomness,
+//! so determinism survives.
+
+use crate::util::rng::Rng;
+use crate::util::Micros;
+
+/// What a lifecycle event does to the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleAction {
+    /// A fresh replica joins (factory-built, next fleet index).
+    Join,
+    /// A replica exits gracefully: its KV survives and is handed off.
+    Leave,
+    /// A replica dies losing its resident KV and its queue.
+    Crash,
+}
+
+impl LifecycleAction {
+    /// Display name used in reports and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LifecycleAction::Join => "join",
+            LifecycleAction::Leave => "leave",
+            LifecycleAction::Crash => "crash",
+        }
+    }
+}
+
+/// One scheduled fleet change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LifecycleEvent {
+    /// Virtual time the event fires at.
+    pub time: Micros,
+    /// What happens.
+    pub action: LifecycleAction,
+    /// Replica it targets (exits only). `None` picks uniformly among
+    /// the alive replicas with the schedule's seeded RNG at fire time.
+    pub target: Option<usize>,
+}
+
+/// Autoscaler signal shape (the fleet bounds live on
+/// [`LifecycleConfig`] — they bound churn joins/exits too).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Master switch (off by default: static fleets stay static).
+    pub enabled: bool,
+    /// Consecutive deficit observations (an arrival shed, or every
+    /// alive healthy replica overloaded) before a grow fires.
+    pub deficit_streak: u32,
+    /// Consecutive idle observations (some alive replica fully idle,
+    /// nothing shed) before a shrink fires.
+    pub idle_streak: u32,
+    /// Minimum time between scale actions (hysteresis).
+    pub cooldown: Micros,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            enabled: false,
+            deficit_streak: 2,
+            idle_streak: 64,
+            cooldown: 500_000, // 0.5 s
+        }
+    }
+}
+
+/// Router health-scoring shape: an EWMA of per-replica boundary lag
+/// (Eq. 7 cycle overrun at each routing boundary) plus a
+/// recent-failure penalty while the replica is overrunning. See
+/// [`HealthTracker`](super::HealthTracker) for the formula.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthConfig {
+    /// Master switch (off by default).
+    pub enabled: bool,
+    /// EWMA weight of the newest lag sample (0 < alpha <= 1).
+    pub alpha: f64,
+    /// Score above which a replica is degraded (µs of cycle overrun).
+    pub lag_threshold: Micros,
+    /// Added to the lag sample while the replica is overloaded — a
+    /// failure episode weighs more than its raw overrun.
+    pub failure_penalty: Micros,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            enabled: false,
+            alpha: 0.2,
+            lag_threshold: 500_000,  // 0.5 s of cycle overrun
+            failure_penalty: 250_000, // 0.25 s per overloaded observation
+        }
+    }
+}
+
+/// The elastic-fleet knob surface (`[cluster.lifecycle]` /
+/// `[cluster.autoscaler]` / `[cluster.health]`): an explicit event
+/// schedule, a seeded churn stream, fleet-size bounds, and the
+/// autoscaler/health sub-configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleConfig {
+    /// Explicit events (configured times; merged with churn).
+    pub events: Vec<LifecycleEvent>,
+    /// Seeded Poisson churn rate in events/s (0 = off).
+    pub churn_rate: f64,
+    /// Seed for the churn stream and untargeted exit picks.
+    pub seed: u64,
+    /// The fleet never shrinks below this many alive replicas.
+    pub min_replicas: usize,
+    /// The fleet never grows past this many alive replicas.
+    pub max_replicas: usize,
+    /// Autoscaler signals/hysteresis.
+    pub autoscaler: AutoscalerConfig,
+    /// Health scoring shape.
+    pub health: HealthConfig,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            events: Vec::new(),
+            churn_rate: 0.0,
+            seed: 1,
+            min_replicas: 1,
+            max_replicas: 64,
+            autoscaler: AutoscalerConfig::default(),
+            health: HealthConfig::default(),
+        }
+    }
+}
+
+impl LifecycleConfig {
+    /// True when the run has lifecycle events to inject (explicit or
+    /// churn).
+    pub fn has_events(&self) -> bool {
+        !self.events.is_empty() || self.churn_rate > 0.0
+    }
+
+    /// True when *any* elastic feature is on — the gate for attaching
+    /// the elastic machinery to a run (and for refusing the lockstep
+    /// engine, which cannot inject lifecycle events).
+    pub fn any_enabled(&self) -> bool {
+        self.has_events() || self.autoscaler.enabled || self.health.enabled
+    }
+
+    /// Materialize the full schedule up to `horizon`: explicit events
+    /// merged with the seeded churn stream, sorted by time (stable —
+    /// explicit events win ties). Deterministic for a fixed config.
+    pub fn schedule(&self, horizon: Micros) -> Vec<LifecycleEvent> {
+        let mut out: Vec<LifecycleEvent> =
+            self.events.iter().copied().filter(|e| e.time < horizon).collect();
+        out.sort_by_key(|e| e.time);
+        if self.churn_rate > 0.0 {
+            let mut rng = Rng::new(self.seed);
+            let mut t: Micros = 0;
+            loop {
+                let dt = rng.exponential(self.churn_rate); // seconds
+                t = t.saturating_add((dt * 1e6) as Micros);
+                if t >= horizon {
+                    break;
+                }
+                // 40% crash / 40% join / 20% graceful leave: churn that
+                // holds the expected fleet size roughly steady
+                let u = rng.f64();
+                let action = if u < 0.4 {
+                    LifecycleAction::Crash
+                } else if u < 0.8 {
+                    LifecycleAction::Join
+                } else {
+                    LifecycleAction::Leave
+                };
+                out.push(LifecycleEvent { time: t, action, target: None });
+            }
+            out.sort_by_key(|e| e.time);
+        }
+        out
+    }
+
+    /// The RNG stream untargeted exits draw their victim from — a
+    /// distinct stream from the schedule's, so adding an explicit event
+    /// never shifts which replicas churn picks.
+    pub fn target_rng(&self) -> Rng {
+        Rng::new(self.seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0x243F6A8885A308D3))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::secs;
+
+    #[test]
+    fn schedule_is_deterministic_and_sorted() {
+        let cfg = LifecycleConfig {
+            churn_rate: 0.5,
+            seed: 9,
+            ..LifecycleConfig::default()
+        };
+        let a = cfg.schedule(secs(120.0));
+        let b = cfg.schedule(secs(120.0));
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty(), "0.5 ev/s over 120 s churns");
+        assert!(a.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(a.iter().all(|e| e.time < secs(120.0)));
+        let c = LifecycleConfig { seed: 10, ..cfg }.schedule(secs(120.0));
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn explicit_events_merge_in_time_order() {
+        let cfg = LifecycleConfig {
+            events: vec![
+                LifecycleEvent {
+                    time: secs(50.0),
+                    action: LifecycleAction::Crash,
+                    target: Some(0),
+                },
+                LifecycleEvent {
+                    time: secs(10.0),
+                    action: LifecycleAction::Join,
+                    target: None,
+                },
+            ],
+            ..LifecycleConfig::default()
+        };
+        let s = cfg.schedule(secs(60.0));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].action, LifecycleAction::Join);
+        assert_eq!(s[1].target, Some(0));
+        // events at/after the horizon are dropped
+        assert_eq!(cfg.schedule(secs(30.0)).len(), 1);
+    }
+
+    #[test]
+    fn enablement_gates() {
+        let mut cfg = LifecycleConfig::default();
+        assert!(!cfg.has_events() && !cfg.any_enabled());
+        cfg.autoscaler.enabled = true;
+        assert!(!cfg.has_events() && cfg.any_enabled());
+        cfg.autoscaler.enabled = false;
+        cfg.churn_rate = 1.0;
+        assert!(cfg.has_events() && cfg.any_enabled());
+    }
+}

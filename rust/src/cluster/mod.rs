@@ -41,18 +41,37 @@
 //!     with global task ids restored, counting shed tasks as SLO
 //!     violations.
 //!
+//! Fleets can be **elastic** (DESIGN.md "Elastic fleets", all opt-in):
+//! a deterministic [`LifecycleEvent`] stream (join/leave/crash,
+//! explicit times or seeded churn) injected through the event heap, an
+//! [`Autoscaler`] growing/shrinking on shed/idle signals with
+//! hysteresis, and [`HealthTracker`] EWMA lag scoring that keeps
+//! placement off degraded replicas. A crash loses resident KV — its
+//! queue is re-placed free and its running tasks re-admitted at the
+//! PR 4 recompute price; a graceful leave hands KV off at the modelled
+//! link cost. With everything disabled the masks stay empty and both
+//! engines reproduce the static-fleet reports bit-for-bit.
+//!
 //! Multi-replica serving is an **extension**, not part of the paper —
 //! see DESIGN.md "Deviations from the paper".
 
 pub(crate) mod controller;
+pub mod autoscaler;
 pub mod fleet;
+pub mod health;
+pub mod lifecycle;
 pub mod node;
 pub mod orchestrator;
 pub mod replica;
 pub mod router;
 
+pub use autoscaler::{Autoscaler, ScaleDecision};
 pub use fleet::{AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec};
+pub use health::HealthTracker;
+pub use lifecycle::{
+    AutoscalerConfig, HealthConfig, LifecycleAction, LifecycleConfig, LifecycleEvent,
+};
 pub use node::Node;
 pub use orchestrator::{Event, EventHeap, EventKind, Orchestrator};
 pub use replica::{Replica, ReplicaReport};
-pub use router::{ClusterReport, Router, RoutingStrategy};
+pub use router::{ClusterReport, ElasticStats, Router, RoutingStrategy};

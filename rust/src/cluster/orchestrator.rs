@@ -6,20 +6,27 @@
 //! every replica to every arrival — O(arrivals × replicas) `run_until`
 //! calls, almost all of them no-ops on wide fleets. This engine keeps
 //! one [`EventHeap`] ordered by the deterministic key
-//! `(time, kind, replica, task)` and pops three event kinds:
+//! `(time, kind, replica, task)` and pops four event kinds:
 //!
 //!   * [`EventKind::Wake`] — a node's next-interesting-event time was
 //!     reached: advance *that node* to the current routing boundary
 //!     (one `run_until`, the same call lockstep would have made);
+//!   * [`EventKind::Lifecycle`] — a replica joins, leaves, or crashes
+//!     (elastic fleets, [`Orchestrator::with_lifecycle`]): apply the
+//!     fleet change and evacuate the casualty;
 //!   * [`EventKind::RescheduleBoundary`] — the final drain boundary at
 //!     the common horizon;
 //!   * [`EventKind::Arrival`] — route one task: run the shared
-//!     [`Controller`] migration passes, decide, assign.
+//!     [`Controller`] migration passes, decide, assign (plus health
+//!     scoring and the autoscaler's observation when elastic).
 //!
-//! Exactly one `Arrival` event is in the heap at a time (the next one
-//! is pushed after the current one is handled), so the heap holds at
-//! most one wake per node plus two boundary events — O(events log
-//! replicas) total work.
+//! Exactly one `Arrival` and one `Lifecycle` event are in the heap at
+//! a time (each stream pushes its next entry when the current one
+//! pops), so the heap holds at most one wake per node plus a few
+//! boundary events — O(events log replicas) total work. The effective
+//! routing boundary every wake advances to is the *earlier* of the
+//! next arrival and the next lifecycle event, so no node ever runs
+//! past a crash instant.
 //!
 //! ## Why this reproduces lockstep bit-for-bit
 //!
@@ -48,22 +55,31 @@ use anyhow::Result;
 
 use crate::coordinator::task::{Task, TaskId};
 use crate::engine::memory::MemoryConfig;
+use crate::util::rng::Rng;
 use crate::util::Micros;
 
+use super::autoscaler::{Autoscaler, ScaleDecision};
 use super::controller::Controller;
 use super::fleet::AdmissionConfig;
+use super::health::HealthTracker;
+use super::lifecycle::{LifecycleAction, LifecycleConfig, LifecycleEvent};
 use super::node::Node;
 use super::replica::Replica;
 use super::router::{ClusterReport, RoutingStrategy};
 
 /// What a popped event asks the orchestrator to do. The discriminant
-/// order is the heap tie-break rank at equal times: wakes first (nodes
-/// reach the boundary before any decision runs there), then the drain
-/// boundary, then arrivals.
+/// order is the heap tie-break rank at equal times — the documented
+/// lifecycle ordering contract (DESIGN.md "Elastic fleets"): wakes
+/// first (nodes reach the boundary before anything decides there),
+/// then fleet changes (a crash at `t` is visible to every same-time
+/// decision), then the drain boundary, then arrivals (routed against
+/// the already-changed fleet).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
     /// A node's next-interesting-event time arrived: advance it.
     Wake,
+    /// A replica joins, leaves, or crashes (elastic fleets).
+    Lifecycle,
     /// The common drain horizon: advance everything with work, finish.
     RescheduleBoundary,
     /// Route the next workload task.
@@ -131,6 +147,12 @@ impl EventHeap {
 pub struct Orchestrator {
     nodes: Vec<Node>,
     ctl: Controller,
+    /// Elastic-fleet configuration (inert default for static runs).
+    lifecycle: LifecycleConfig,
+    /// Builds the replica for fleet index `i` when one joins mid-run.
+    factory: Option<Box<dyn FnMut(usize) -> Replica>>,
+    autoscaler: Option<Autoscaler>,
+    health: Option<HealthTracker>,
 }
 
 impl Orchestrator {
@@ -145,6 +167,10 @@ impl Orchestrator {
         Orchestrator {
             nodes: replicas.into_iter().map(Node::new).collect(),
             ctl: Controller::new(strategy),
+            lifecycle: LifecycleConfig::default(),
+            factory: None,
+            autoscaler: None,
+            health: None,
         }
     }
 
@@ -167,9 +193,115 @@ impl Orchestrator {
         self
     }
 
+    /// Attach the elastic-fleet machinery: the lifecycle event stream
+    /// (explicit + seeded churn), the autoscaler and health tracker
+    /// when their configs enable them, and a `factory` that builds the
+    /// replica for each fleet index that joins mid-run (it must mint
+    /// replicas with `id == index`, calibrated like the initial fleet).
+    ///
+    /// The liveness/health masks are initialized even when every
+    /// sub-feature is disabled, so an all-disabled elastic run
+    /// exercises the elastic decision paths for real — and must still
+    /// be bit-exact with a static-fleet run (pinned by
+    /// `rust/tests/equivalence.rs`).
+    pub fn with_lifecycle(
+        mut self,
+        cfg: LifecycleConfig,
+        factory: Box<dyn FnMut(usize) -> Replica>,
+    ) -> Self {
+        let n = self.nodes.len();
+        self.ctl.alive = vec![true; n];
+        self.ctl.degraded = vec![false; n];
+        if cfg.autoscaler.enabled {
+            self.autoscaler = Some(Autoscaler::new(
+                cfg.autoscaler.clone(),
+                cfg.min_replicas,
+                cfg.max_replicas,
+            ));
+        }
+        if cfg.health.enabled {
+            self.health = Some(HealthTracker::new(cfg.health.clone(), n));
+        }
+        self.lifecycle = cfg;
+        self.factory = Some(factory);
+        self
+    }
+
     /// Number of replicas in the fleet.
     pub fn replica_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Admit a factory-built replica at the next fleet index, its
+    /// clock synced to `now`, alive and healthy.
+    fn admit_replica(&mut self, now: Micros) -> usize {
+        let factory = self
+            .factory
+            .as_mut()
+            .expect("elastic runs carry a replica factory");
+        let id = self.nodes.len();
+        let replica = factory(id);
+        assert_eq!(replica.id(), id, "factory must mint the next fleet index");
+        let mut node = Node::new(replica);
+        node.sync_clock(now);
+        self.nodes.push(node);
+        self.ctl.alive.push(true);
+        self.ctl.degraded.push(false);
+        if let Some(h) = &mut self.health {
+            h.ensure(id + 1);
+        }
+        id
+    }
+
+    /// Mark `target` dead and evacuate it (the caller bumps the
+    /// matching counter). Dead first: every placement inside the
+    /// evacuation then naturally excludes it.
+    fn retire_replica(&mut self, target: usize, crash: bool) {
+        self.ctl.alive[target] = false;
+        self.ctl.evacuate(&mut self.nodes, target, crash);
+    }
+
+    /// Apply one lifecycle event at `now`. Events that would push the
+    /// alive count outside the configured fleet bounds — or that target
+    /// an already-dead replica — are skipped (not clamped), consuming
+    /// no randomness.
+    fn apply_lifecycle(&mut self, e: LifecycleEvent, now: Micros, target_rng: &mut Rng) {
+        let alive = self.ctl.alive_count(self.nodes.len());
+        match e.action {
+            LifecycleAction::Join => {
+                if alive >= self.lifecycle.max_replicas {
+                    return;
+                }
+                self.admit_replica(now);
+                self.ctl.joins += 1;
+            }
+            LifecycleAction::Leave | LifecycleAction::Crash => {
+                if alive <= self.lifecycle.min_replicas {
+                    return;
+                }
+                let target = match e.target {
+                    Some(t) => {
+                        if t >= self.nodes.len() || !self.ctl.is_alive(t) {
+                            return;
+                        }
+                        t
+                    }
+                    None => {
+                        let alive_ids: Vec<usize> = (0..self.nodes.len())
+                            .filter(|&i| self.ctl.is_alive(i))
+                            .collect();
+                        alive_ids[target_rng.range_usize(0, alive_ids.len() - 1)]
+                    }
+                };
+                let crash = e.action == LifecycleAction::Crash;
+                if crash {
+                    self.ctl.crashes += 1;
+                } else {
+                    self.ctl.leaves += 1;
+                }
+                self.retire_replica(target, crash);
+            }
+        }
     }
 
     /// Recompute a node's wake time after its workload changed
@@ -220,9 +352,17 @@ impl Orchestrator {
         let mut parked: Vec<usize> = Vec::new();
         // the single in-flight arrival (its heap event carries the id)
         let mut next_arrival: Option<Task> = None;
+        // the lifecycle stream mirrors the arrival stream: one event in
+        // the heap at a time, the next pushed when it pops
+        let mut lifecycle_events = self.lifecycle.schedule(horizon).into_iter();
+        let mut target_rng = self.lifecycle.target_rng();
+        let mut next_lifecycle = lifecycle_events.next();
+        if let Some(e) = next_lifecycle {
+            heap.push(Event { time: e.time, kind: EventKind::Lifecycle, replica: 0, task: 0 });
+        }
         // time of the next Arrival event, or the horizon once the
-        // workload is exhausted — every wake advances its node here
-        let mut next_boundary = match arrivals.next() {
+        // workload is exhausted
+        let mut arrival_boundary = match arrivals.next() {
             Some(t) => {
                 let at = t.arrival;
                 heap.push(Event { time: at, kind: EventKind::Arrival, replica: 0, task: t.id });
@@ -239,6 +379,13 @@ impl Orchestrator {
                 horizon
             }
         };
+        // the effective boundary every wake advances its node to: the
+        // next arrival *or* the next fleet change, whichever is first —
+        // a node must never run past a crash instant
+        let eff = |arrival: Micros, lc: &Option<LifecycleEvent>| {
+            lc.map_or(arrival, |e| arrival.min(e.time))
+        };
+        let mut next_boundary = eff(arrival_boundary, &next_lifecycle);
 
         loop {
             let ev = heap
@@ -271,16 +418,17 @@ impl Orchestrator {
                 EventKind::Arrival => {
                     let task = next_arrival.take().expect("arrival event without its task");
                     debug_assert_eq!(task.id, ev.task);
-                    if self.ctl.migration {
-                        // a migrated-in task may carry an arrival time
-                        // earlier than this boundary, so an *idle*
-                        // destination must have its clock at the
-                        // boundary — where lockstep left it — before
-                        // the task lands, or it would be delivered (and
-                        // prefilled) in the destination's past. Busy
-                        // nodes are already here via their wakes; idle
-                        // ones only need the clock moved (uncounted —
-                        // no arrivals to deliver, no steps to run).
+                    if self.ctl.migration || self.autoscaler.is_some() {
+                        // a migrated-in (or shrink-evacuated) task may
+                        // carry an arrival time earlier than this
+                        // boundary, so an *idle* destination must have
+                        // its clock at the boundary — where lockstep
+                        // left it — before the task lands, or it would
+                        // be delivered (and prefilled) in the
+                        // destination's past. Busy nodes are already
+                        // here via their wakes; idle ones only need the
+                        // clock moved (uncounted — no arrivals to
+                        // deliver, no steps to run).
                         for node in &mut self.nodes {
                             if node.advanced_to() != Some(ev.time)
                                 && node.next_event_time().is_none()
@@ -288,6 +436,18 @@ impl Orchestrator {
                                 node.sync_clock(ev.time);
                             }
                         }
+                    }
+                    // health scores fold in this boundary's lag *before*
+                    // anything decides, so migration targets and the
+                    // routing pick see the same verdicts
+                    if let Some(h) = &mut self.health {
+                        for node in &self.nodes {
+                            let r = node.as_ref();
+                            if self.ctl.is_alive(r.id()) {
+                                h.observe(r.id(), r.cycle_lag());
+                            }
+                        }
+                        h.fill_mask(&mut self.ctl.degraded);
                     }
                     // inline migration passes, then decide — the exact
                     // per-task interleaving the lockstep loop runs
@@ -298,10 +458,58 @@ impl Orchestrator {
                         Some(p) => self.nodes[p].as_mut().assign(task),
                         None => self.ctl.rejected.push(task),
                     }
+                    // the autoscaler observes the decision's outcome
+                    // (after the assign: the picked node no longer
+                    // reads as idle, so it cannot be the shrink victim)
+                    let mut scaled = false;
+                    if self.autoscaler.is_some() {
+                        let mut deficit = pick.is_none();
+                        if !deficit && !self.ctl.admission.enabled {
+                            // without admission nothing is ever shed;
+                            // the deficit signal falls back to "every
+                            // placeable replica is overrunning"
+                            deficit = self
+                                .nodes
+                                .iter()
+                                .map(AsRef::as_ref)
+                                .filter(|r| self.ctl.placeable(r.id()))
+                                .all(|r| r.overloaded());
+                        }
+                        // shrink victim: an alive replica with no work
+                        // at all — prefer degraded, then highest index
+                        let mut idle: Option<(bool, usize)> = None;
+                        for (i, node) in self.nodes.iter().enumerate() {
+                            if self.ctl.is_alive(i) && node.next_event_time().is_none() {
+                                let key = (self.ctl.is_degraded(i), i);
+                                if idle.map_or(true, |b| key > b) {
+                                    idle = Some(key);
+                                }
+                            }
+                        }
+                        let alive = self.ctl.alive_count(self.nodes.len());
+                        let decision = self
+                            .autoscaler
+                            .as_mut()
+                            .expect("checked is_some above")
+                            .observe(ev.time, deficit, idle.map(|(_, i)| i), alive);
+                        match decision {
+                            ScaleDecision::Hold => {}
+                            ScaleDecision::Grow => {
+                                self.admit_replica(ev.time);
+                                self.ctl.autoscale_grows += 1;
+                                scaled = true;
+                            }
+                            ScaleDecision::Shrink(idx) => {
+                                self.ctl.autoscale_shrinks += 1;
+                                self.retire_replica(idx, false);
+                                scaled = true;
+                            }
+                        }
+                    }
                     // move the boundary forward *before* re-arming
                     // wakes, so a wake at this same time advances
                     // instead of parking forever
-                    next_boundary = match arrivals.next() {
+                    arrival_boundary = match arrivals.next() {
                         Some(t) => {
                             let at = t.arrival;
                             heap.push(Event {
@@ -323,10 +531,12 @@ impl Orchestrator {
                             horizon
                         }
                     };
-                    if self.ctl.migration {
-                        // migration may have moved work between any
-                        // pair of nodes: re-arm the whole fleet (the
-                        // pass itself is already O(replicas))
+                    next_boundary = eff(arrival_boundary, &next_lifecycle);
+                    if self.ctl.migration || scaled {
+                        // migration (or a scale action's evacuation) may
+                        // have moved work between any pair of nodes:
+                        // re-arm the whole fleet (the pass itself is
+                        // already O(replicas))
                         for i in 0..self.nodes.len() {
                             self.refresh_wake(i, &mut heap);
                         }
@@ -340,6 +550,38 @@ impl Orchestrator {
                             self.refresh_wake(p, &mut heap);
                         }
                     }
+                }
+                EventKind::Lifecycle => {
+                    let e = next_lifecycle.take().expect("lifecycle event without its entry");
+                    debug_assert_eq!(e.time, ev.time);
+                    // same contract as the arrival boundary: evacuated
+                    // tasks may land on idle peers, whose clocks must
+                    // be at the event time first (uncounted moves)
+                    for node in &mut self.nodes {
+                        if node.advanced_to() != Some(ev.time)
+                            && node.next_event_time().is_none()
+                        {
+                            node.sync_clock(ev.time);
+                        }
+                    }
+                    self.apply_lifecycle(e, ev.time, &mut target_rng);
+                    next_lifecycle = lifecycle_events.next();
+                    if let Some(nl) = next_lifecycle {
+                        heap.push(Event {
+                            time: nl.time,
+                            kind: EventKind::Lifecycle,
+                            replica: 0,
+                            task: 0,
+                        });
+                    }
+                    next_boundary = eff(arrival_boundary, &next_lifecycle);
+                    // the fleet changed shape: re-arm everything (this
+                    // also clears a dead node's stale wake and arms a
+                    // joiner / every evacuation destination)
+                    for i in 0..self.nodes.len() {
+                        self.refresh_wake(i, &mut heap);
+                    }
+                    parked.clear();
                 }
                 EventKind::RescheduleBoundary => {
                     debug_assert_eq!(ev.time, horizon);

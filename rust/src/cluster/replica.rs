@@ -263,6 +263,80 @@ impl Replica {
         out
     }
 
+    /// Withdraw *every* queued-but-unstarted task — migration history
+    /// notwithstanding — in arrival order. This is the evacuation path:
+    /// when this replica leaves the fleet its queue must move, even
+    /// tasks that already migrated once (the exactly-once contract is
+    /// per overload pass, not per lifecycle event).
+    pub fn withdraw_all(&mut self) -> Vec<Task> {
+        self.recall_pending();
+        let out = std::mem::take(&mut self.staged);
+        self.routed -= out.len();
+        self.migrated_out += out.len() as u64;
+        out
+    }
+
+    /// Manifest of every task in service on this replica — delivered,
+    /// unfinished, not handed off — as `(global id, per-cycle quota,
+    /// cached tokens, prefilled)` in delivery order. The evacuation
+    /// pass prices each entry (recompute after a crash, KV handoff
+    /// after a graceful leave) before extracting it.
+    pub fn evacuees(&self) -> Vec<(TaskId, u32, u32, bool)> {
+        self.live_tasks()
+            .filter(|t| !t.is_finished() && !t.migrated_away)
+            .map(|t| {
+                (
+                    self.global_ids[t.id as usize],
+                    t.slo.tokens_per_cycle(),
+                    t.seq_len(),
+                    t.prefill_end.is_some(),
+                )
+            })
+            .collect()
+    }
+
+    /// Extract one in-service task for evacuation. The inner server
+    /// keeps a husk (dropped from this replica's report); the returned
+    /// task carries its global id and timing record. A prefilled task
+    /// leaves paused with its cache "in flight" — the caller stamps
+    /// `pending_restore` once the destination (and hence the price:
+    /// recompute vs. handoff) is known; an unprefilled task reverts to
+    /// a fresh waiting arrival.
+    pub fn extract_evacuee(&mut self, global_id: TaskId) -> Task {
+        let local = self
+            .global_ids
+            .iter()
+            .position(|&g| g == global_id)
+            .expect("evacuating a task this replica never served") as TaskId;
+        let now = self.server.now();
+        let mut task = self.server.extract_task(local, now);
+        task.id = global_id;
+        if task.prefill_end.is_some() {
+            task.state = TaskState::Paused;
+            task.residency = Residency::Swapped;
+        } else {
+            task.state = TaskState::Waiting;
+            task.residency = Residency::None;
+        }
+        task.pending_restore = 0;
+        self.routed -= 1;
+        self.migrated_out += 1;
+        task
+    }
+
+    /// How far this replica's Eq. 7 period currently overruns its cycle
+    /// cap, zero while it fits — the health tracker's boundary-lag
+    /// sample ([`crate::cluster::HealthTracker`]): the signed
+    /// complement of [`Replica::headroom`], sharing its scratch and
+    /// cost model.
+    pub fn cycle_lag(&self) -> Micros {
+        let mut vs = self.quota_scratch.borrow_mut();
+        vs.clear();
+        self.collect_demand(&mut vs);
+        vs.sort_unstable_by(|a, b| b.cmp(a));
+        period_eq7(&vs, &self.profile.latency).saturating_sub(self.profile.cycle_cap)
+    }
+
     /// Earliest time at which advancing this replica would do real work
     /// — run an engine step or deliver an arrival — or `None` when it
     /// is fully idle. This is the event engine's wake signal
@@ -391,6 +465,7 @@ impl Replica {
             profile: self.profile.name,
             migrated_in: self.migrated_in,
             migrated_out: self.migrated_out,
+            alive: true,
             report,
         }
     }
@@ -424,6 +499,11 @@ pub struct ReplicaReport {
     pub migrated_in: u64,
     /// Tasks this replica offered back under overload.
     pub migrated_out: u64,
+    /// False when the replica crashed or left before the run ended
+    /// (the controller stamps the final mask; static fleets are all
+    /// alive). A dead replica's report still carries every task it
+    /// finished before dying.
+    pub alive: bool,
     /// Its full single-device run report.
     pub report: RunReport,
 }
@@ -717,6 +797,109 @@ mod tests {
         r.run_until(secs(60.0)).unwrap();
         assert_eq!(r.next_event_time(), None, "drained replica is idle again");
         let _ = r.finish();
+    }
+
+    #[test]
+    fn withdraw_all_ignores_migration_history() {
+        let mut r = replica();
+        r.assign(Task::new(7, TaskClass::Voice, 0, 16, 5, 1.0));
+        r.assign(Task::new(8, TaskClass::Voice, secs(1.0), 16, 5, 1.0));
+        // withdraw_unmigrated would leave 7 behind; evacuation must not
+        let out = r.withdraw_all();
+        assert_eq!(out.iter().map(|t| t.id).collect::<Vec<_>>(), vec![7, 8]);
+        assert_eq!(r.routed(), 0);
+        assert_eq!(r.migration_counts().1, 2);
+        assert!(r.evacuees().is_empty(), "nothing was in service");
+        let _ = r.finish();
+    }
+
+    #[test]
+    fn evacuees_price_as_restarts_and_extract_keeps_record() {
+        let mut r = evicting_replica(0, 3);
+        r.run_until(secs(5.0)).unwrap();
+        let manifest = r.evacuees();
+        assert_eq!(manifest.len(), 3, "all delivered tasks are in service");
+        assert!(
+            manifest.iter().all(|&(_, q, tok, pre)| q == 20 && tok == 81 && pre),
+            "real-time quotas, 81 cached tokens, all prefilled"
+        );
+        let t = r.extract_evacuee(100);
+        assert_eq!(t.id, 100);
+        assert_eq!(t.state, TaskState::Paused);
+        assert_eq!(t.residency, Residency::Swapped);
+        assert_eq!(t.pending_restore, 0, "caller prices the restore");
+        assert!(t.tokens_generated > 0, "timing record travels with the task");
+        assert_eq!(r.evacuees().len(), 2, "husk left the manifest");
+        assert_eq!(r.routed(), 2);
+        // the husk never reaches the report
+        r.run_until(secs(6.0)).unwrap();
+        let rep = r.finish();
+        assert!(rep.report.tasks.iter().all(|t| t.id != 100));
+        assert!(rep.alive, "finish() defaults to alive; the controller stamps");
+    }
+
+    #[test]
+    fn unprefilled_evacuee_reverts_to_fresh_arrival() {
+        // a policy that never schedules: delivered tasks stay Waiting
+        struct NeverRun;
+        impl crate::coordinator::scheduler::Policy for NeverRun {
+            fn name(&self) -> &'static str {
+                "never-run"
+            }
+            fn on_arrival(
+                &mut self,
+                _pool: &mut crate::coordinator::pool::TaskPool,
+                _ids: &[TaskId],
+                _now: Micros,
+            ) {
+            }
+            fn on_completion(
+                &mut self,
+                _pool: &mut crate::coordinator::pool::TaskPool,
+                _ids: &[TaskId],
+                _now: Micros,
+            ) {
+            }
+            fn next_step(
+                &mut self,
+                _pool: &mut crate::coordinator::pool::TaskPool,
+                _now: Micros,
+            ) -> crate::coordinator::scheduler::Step {
+                crate::coordinator::scheduler::Step::Idle
+            }
+        }
+        let profile = DeviceProfile::standard();
+        let mut r = Replica::new(
+            0,
+            Box::new(NeverRun),
+            Box::new(SimEngine::new(profile.latency.clone(), profile.max_context)),
+            profile,
+        );
+        r.assign(Task::new(42, TaskClass::Voice, 0, 16, 5, 1.0));
+        r.run_until(secs(1.0)).unwrap();
+        let manifest = r.evacuees();
+        assert_eq!(manifest.len(), 1);
+        assert!(!manifest[0].3, "never prefilled");
+        let t = r.extract_evacuee(42);
+        assert_eq!(t.state, TaskState::Waiting);
+        assert_eq!(t.residency, Residency::None);
+        assert_eq!(t.pending_restore, 0);
+    }
+
+    #[test]
+    fn cycle_lag_is_headrooms_signed_complement() {
+        let mut r = replica();
+        assert_eq!(r.cycle_lag(), 0, "idle replica has no lag");
+        for i in 0..3 {
+            r.assign(Task::new(i, TaskClass::RealTime, 0, 16, 100, 100.0));
+        }
+        assert_eq!(r.cycle_lag(), 0, "3 RT quotas fit the standard cycle");
+        assert!(!r.overloaded());
+        for i in 3..6 {
+            r.assign(Task::new(i, TaskClass::RealTime, 0, 16, 100, 100.0));
+        }
+        assert!(r.overloaded());
+        assert!(r.cycle_lag() > 0, "overload implies positive lag");
     }
 
     #[test]

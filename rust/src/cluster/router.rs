@@ -215,6 +215,32 @@ impl Router {
     }
 }
 
+/// Elastic-fleet counters: lifecycle events applied, evacuation
+/// outcomes, and autoscaler actions. All-zero (`Default`) for static
+/// runs — the equivalence suite pins that.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ElasticStats {
+    /// Replicas that crashed (resident KV lost).
+    pub crashes: u64,
+    /// Replicas that joined mid-run (lifecycle events; autoscaler grows
+    /// count separately below).
+    pub joins: u64,
+    /// Replicas that left gracefully (KV handed off).
+    pub leaves: u64,
+    /// Evacuated tasks that were still queued (re-placed for free).
+    pub evac_requeued: u64,
+    /// Evacuated tasks that had started (re-admitted with a restore
+    /// fee: recompute after a crash, KV handoff after a leave).
+    pub evac_restarted: u64,
+    /// Total recompute time charged to crash survivors (each fee also
+    /// lands in the task's own timing record).
+    pub evac_recompute_us: Micros,
+    /// Fleet grows the autoscaler fired.
+    pub autoscale_grows: u64,
+    /// Fleet shrinks the autoscaler fired.
+    pub autoscale_shrinks: u64,
+}
+
 /// Outcome of a full cluster run.
 pub struct ClusterReport {
     /// Routing strategy label (for reports).
@@ -235,6 +261,8 @@ pub struct ClusterReport {
     /// Total modelled transfer time of those handoffs (each fee also
     /// lands in the migrated task's own timing record).
     pub handoff_us: Micros,
+    /// Elastic-fleet counters (all-zero for static runs).
+    pub elastic: ElasticStats,
 }
 
 impl ClusterReport {
@@ -293,6 +321,18 @@ impl ClusterReport {
             total.merge(&r.report.memory);
         }
         total
+    }
+
+    /// Replicas still alive when the run ended (static fleets: all).
+    pub fn alive_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// Every task the run could not serve: admission-shed arrivals plus
+    /// tasks the replicas shed mid-run (evacuation with no placement,
+    /// or a KV cache too small for even one slot).
+    pub fn shed_total(&self) -> u64 {
+        self.rejected.len() as u64 + self.replicas.iter().map(|r| r.report.shed).sum::<u64>()
     }
 
     /// Global ids across replica reports and the shed list: never

@@ -18,7 +18,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{
-    AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec, RoutingStrategy,
+    AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec, LifecycleAction,
+    LifecycleConfig, LifecycleEvent, RoutingStrategy,
 };
 use crate::coordinator::fastserve::FastServeConfig;
 use crate::coordinator::preemption::UtilityAdaptor;
@@ -147,6 +148,12 @@ pub struct ServeConfig {
     /// reference by default; the event engine is bit-exact and faster
     /// at scale).
     pub cluster_engine: ClusterEngine,
+    /// Cluster mode: elastic-fleet knobs — lifecycle events (explicit
+    /// schedule + seeded churn), fleet-size bounds, autoscaler and
+    /// health scoring (`[cluster.lifecycle]` / `[cluster.autoscaler]` /
+    /// `[cluster.health]`; all off by default). Any enabled elastic
+    /// feature requires the event engine.
+    pub lifecycle: LifecycleConfig,
     /// KV-cache memory model (`[memory]`; unconstrained by default, so
     /// every pre-memory run reproduces bit-exactly).
     pub memory: MemoryConfig,
@@ -174,6 +181,7 @@ impl Default for ServeConfig {
             cluster_migration: false,
             cluster_migrate_running: false,
             cluster_engine: ClusterEngine::Lockstep,
+            lifecycle: LifecycleConfig::default(),
             memory: MemoryConfig::default(),
         }
     }
@@ -304,8 +312,9 @@ impl ServeConfig {
                  admission; remove them or set admission_mode = \"depth\""
             );
         }
-        if let Some(v) = doc.get_str("cluster", "engine")? {
-            cfg.cluster_engine = ClusterEngine::parse(&v)?;
+        let engine_key = doc.get_str("cluster", "engine")?;
+        if let Some(v) = &engine_key {
+            cfg.cluster_engine = ClusterEngine::parse(v)?;
         }
         if let Some(v) = doc.get_bool("cluster", "migration")? {
             cfg.cluster_migration = v;
@@ -320,6 +329,113 @@ impl ServeConfig {
                 // the CLI applies, so both surfaces agree)
                 cfg.cluster_migration = true;
             }
+        }
+        // ---- [cluster.lifecycle] / [cluster.autoscaler] / [cluster.health]
+        for (key, action) in [
+            ("crash_at_s", LifecycleAction::Crash),
+            ("leave_at_s", LifecycleAction::Leave),
+            ("join_at_s", LifecycleAction::Join),
+        ] {
+            for t in parse_secs_array(&doc, "cluster.lifecycle", key)? {
+                // config events are untargeted: the victim is drawn from
+                // the schedule's seeded RNG at fire time
+                cfg.lifecycle.events.push(LifecycleEvent {
+                    time: secs(t),
+                    action,
+                    target: None,
+                });
+            }
+        }
+        cfg.lifecycle.events.sort_by_key(|e| e.time);
+        if let Some(v) = doc.get_f64("cluster.lifecycle", "churn_rate")? {
+            if v < 0.0 {
+                bail!("[cluster.lifecycle] churn_rate must be >= 0 events/s, got {v}");
+            }
+            cfg.lifecycle.churn_rate = v;
+        }
+        if let Some(v) = doc.get_i64("cluster.lifecycle", "seed")? {
+            cfg.lifecycle.seed = v as u64;
+        }
+        if let Some(v) = doc.get_i64("cluster.lifecycle", "min_replicas")? {
+            if v < 1 {
+                bail!("[cluster.lifecycle] min_replicas must be >= 1, got {v}");
+            }
+            cfg.lifecycle.min_replicas = v as usize;
+        }
+        if let Some(v) = doc.get_i64("cluster.lifecycle", "max_replicas")? {
+            if v < 1 {
+                bail!("[cluster.lifecycle] max_replicas must be >= 1, got {v}");
+            }
+            cfg.lifecycle.max_replicas = v as usize;
+        }
+        if cfg.lifecycle.min_replicas > cfg.lifecycle.max_replicas {
+            bail!(
+                "[cluster.lifecycle] min_replicas {} exceeds max_replicas {}",
+                cfg.lifecycle.min_replicas,
+                cfg.lifecycle.max_replicas
+            );
+        }
+        // naming any autoscaler/health knob opts the feature in unless
+        // `enabled = false` is explicit — a configured knob must never
+        // be a silent no-op (the admission-bound rule above)
+        let autoscaler_key = doc.get_bool("cluster.autoscaler", "enabled")?;
+        let mut autoscaler_knob = false;
+        if let Some(v) = doc.get_i64("cluster.autoscaler", "deficit_streak")? {
+            if v < 1 {
+                bail!("[cluster.autoscaler] deficit_streak must be >= 1, got {v}");
+            }
+            cfg.lifecycle.autoscaler.deficit_streak = v as u32;
+            autoscaler_knob = true;
+        }
+        if let Some(v) = doc.get_i64("cluster.autoscaler", "idle_streak")? {
+            if v < 1 {
+                bail!("[cluster.autoscaler] idle_streak must be >= 1, got {v}");
+            }
+            cfg.lifecycle.autoscaler.idle_streak = v as u32;
+            autoscaler_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.autoscaler", "cooldown_s")? {
+            if v < 0.0 {
+                bail!("[cluster.autoscaler] cooldown_s must be >= 0, got {v}");
+            }
+            cfg.lifecycle.autoscaler.cooldown = secs(v);
+            autoscaler_knob = true;
+        }
+        cfg.lifecycle.autoscaler.enabled = autoscaler_key.unwrap_or(autoscaler_knob);
+        let health_key = doc.get_bool("cluster.health", "enabled")?;
+        let mut health_knob = false;
+        if let Some(v) = doc.get_f64("cluster.health", "alpha")? {
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("[cluster.health] alpha must be in (0, 1], got {v}");
+            }
+            cfg.lifecycle.health.alpha = v;
+            health_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.health", "lag_threshold_ms")? {
+            if v <= 0.0 {
+                bail!("[cluster.health] lag_threshold_ms must be positive, got {v}");
+            }
+            cfg.lifecycle.health.lag_threshold = (v * 1000.0) as Micros;
+            health_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.health", "failure_penalty_ms")? {
+            if v < 0.0 {
+                bail!("[cluster.health] failure_penalty_ms must be >= 0, got {v}");
+            }
+            cfg.lifecycle.health.failure_penalty = (v * 1000.0) as Micros;
+            health_knob = true;
+        }
+        cfg.lifecycle.health.enabled = health_key.unwrap_or(health_knob);
+        if cfg.lifecycle.any_enabled() {
+            // lifecycle events ride the event heap, which the lockstep
+            // reference engine does not have
+            if engine_key.is_some() && cfg.cluster_engine == ClusterEngine::Lockstep {
+                bail!(
+                    "[cluster] engine = \"lockstep\" cannot run elastic fleets \
+                     (lifecycle/autoscaler/health); use engine = \"event\""
+                );
+            }
+            cfg.cluster_engine = ClusterEngine::Event;
         }
         // ---- [memory] --------------------------------------------------
         if let Some(v) = doc.get_f64("memory", "kv_capacity_mb")? {
@@ -416,6 +532,27 @@ fn parse_bandwidth(
         Some(v) if v > 0.0 => Ok((v * 1e6) as u64),
         Some(v) => bail!("[memory] {key} must be positive, got {v}"),
     }
+}
+
+/// Parse a flat array of non-negative times in seconds
+/// (`crash_at_s = [40.0, 80.0]`). Missing key => empty.
+fn parse_secs_array(doc: &TomlDoc, section: &str, key: &str) -> Result<Vec<f64>> {
+    let Some(v) = doc.get(section, key) else {
+        return Ok(Vec::new());
+    };
+    let TomlValue::Array(items) = v else {
+        bail!("[{section}].{key}: expected an array of seconds, got {v:?}");
+    };
+    items
+        .iter()
+        .map(|it| match it {
+            TomlValue::Float(f) if *f >= 0.0 => Ok(*f),
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as f64),
+            other => {
+                bail!("[{section}].{key}: expected non-negative seconds, got {other:?}")
+            }
+        })
+        .collect()
 }
 
 /// Parse one `[[cluster.replica]]` table: a named `device` tier
@@ -673,6 +810,96 @@ scale = 1.2
         )
         .unwrap();
         assert!(c.cluster_migration, "migrate_running always enables the pass");
+    }
+
+    #[test]
+    fn parses_lifecycle_section_and_implies_event_engine() {
+        let text = r#"
+[cluster]
+replicas = 4
+
+[cluster.lifecycle]
+crash_at_s = [40.0, 80]
+join_at_s = [60.0]
+churn_rate = 0.1
+seed = 9
+min_replicas = 2
+max_replicas = 16
+"#;
+        let c = ServeConfig::from_toml(text).unwrap();
+        let lc = &c.lifecycle;
+        assert_eq!(lc.events.len(), 3);
+        assert!(lc.events.windows(2).all(|w| w[0].time <= w[1].time));
+        assert_eq!(lc.events[0].time, secs(40.0));
+        assert_eq!(lc.events[0].action, LifecycleAction::Crash);
+        assert_eq!(lc.events[1].action, LifecycleAction::Join);
+        assert_eq!(lc.events[2].time, secs(80.0), "integer seconds widen");
+        assert!(lc.events.iter().all(|e| e.target.is_none()));
+        assert_eq!(lc.churn_rate, 0.1);
+        assert_eq!(lc.seed, 9);
+        assert_eq!((lc.min_replicas, lc.max_replicas), (2, 16));
+        assert!(lc.has_events() && lc.any_enabled());
+        assert_eq!(
+            c.cluster_engine,
+            ClusterEngine::Event,
+            "elastic implies the event engine"
+        );
+        // an explicit lockstep engine conflicts with elastic features
+        assert!(ServeConfig::from_toml(
+            "[cluster]\nengine = \"lockstep\"\n[cluster.lifecycle]\nchurn_rate = 0.1\n",
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.lifecycle]\nchurn_rate = -0.5\n",
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.lifecycle]\nmin_replicas = 8\nmax_replicas = 2\n",
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.lifecycle]\ncrash_at_s = 40.0\n",
+        )
+        .is_err(), "scalar where an array is expected");
+    }
+
+    #[test]
+    fn autoscaler_and_health_knobs_imply_enabled() {
+        let text = "[cluster.autoscaler]\ndeficit_streak = 3\ncooldown_s = 1.0\n\
+                    [cluster.health]\nalpha = 0.5\nlag_threshold_ms = 250.0\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert!(c.lifecycle.autoscaler.enabled, "a knob is never a silent no-op");
+        assert_eq!(c.lifecycle.autoscaler.deficit_streak, 3);
+        assert_eq!(c.lifecycle.autoscaler.cooldown, secs(1.0));
+        assert!(c.lifecycle.health.enabled);
+        assert_eq!(c.lifecycle.health.alpha, 0.5);
+        assert_eq!(c.lifecycle.health.lag_threshold, 250_000);
+        assert_eq!(c.cluster_engine, ClusterEngine::Event);
+        // explicit off wins over named knobs
+        let c = ServeConfig::from_toml(
+            "[cluster.autoscaler]\nenabled = false\nidle_streak = 8\n",
+        )
+        .unwrap();
+        assert!(!c.lifecycle.autoscaler.enabled, "explicit off wins");
+        assert_eq!(c.lifecycle.autoscaler.idle_streak, 8);
+        assert_eq!(
+            c.cluster_engine,
+            ClusterEngine::Lockstep,
+            "nothing enabled: engine stays the default"
+        );
+        assert!(ServeConfig::from_toml("[cluster.health]\nalpha = 1.5\n").is_err());
+        assert!(
+            ServeConfig::from_toml("[cluster.autoscaler]\nidle_streak = 0\n").is_err()
+        );
+    }
+
+    #[test]
+    fn lifecycle_defaults_are_static() {
+        let c = ServeConfig::default();
+        assert!(!c.lifecycle.any_enabled());
+        assert!(c.lifecycle.events.is_empty());
+        assert_eq!(c.lifecycle.churn_rate, 0.0);
+        assert!(!c.lifecycle.autoscaler.enabled && !c.lifecycle.health.enabled);
     }
 
     #[test]

@@ -182,6 +182,12 @@ pub struct Task {
     /// source keeps this husk out of scheduling and reports (the moved
     /// copy carries the timing record forward).
     pub migrated_away: bool,
+    /// Set when the server shed the task mid-run (its footprint could
+    /// not fit the device's KV capacity). Shed tasks are terminal
+    /// (`Finished` state so they leave the live indexes) but *never*
+    /// count as served: `slo_met` is false and the attainment metrics
+    /// exclude them from the finished set.
+    pub shed: bool,
 }
 
 impl Task {
@@ -217,6 +223,7 @@ impl Task {
             swap_outs: 0,
             swap_ins: 0,
             migrated_away: false,
+            shed: false,
         }
     }
 
@@ -274,7 +281,7 @@ impl Task {
     /// Paper §VI-A: real-time SLO = completion before deadline;
     /// non-real-time SLO = TTFT SLO **and** TPOT SLO both met.
     pub fn slo_met(&self) -> bool {
-        if !self.is_finished() {
+        if self.shed || !self.is_finished() {
             return false;
         }
         if let Some(deadline) = self.slo.deadline {

@@ -1,0 +1,311 @@
+//! Elastic-fleet sweep — SLO attainment and shed rate under failures
+//! and autoscaling (extension beyond the paper; DESIGN.md "Elastic
+//! fleets").
+//!
+//! The scale sweep's 10k-task edge-mixed overload cell sheds nearly the
+//! whole burst: four replicas cannot absorb an 83 tasks/s window no
+//! matter how the scheduler orders work. This sweep measures what the
+//! elastic machinery buys back. Each task count runs four variants of
+//! the same edge-mixed overload cell (SLO-aware routing, Eq. 7 headroom
+//! admission, overload migration, event engine):
+//!
+//!   * `static`      — the PR 6 baseline, no elastic features.
+//!   * `crash`       — two deterministic crashes (replicas 0 and 1 at
+//!                     40 s and 80 s) with no autoscaler: the failure
+//!                     floor.
+//!   * `autoscale`   — the autoscaler grows the fleet (up to
+//!                     [`AUTOSCALE_MAX`]) on sustained admission
+//!                     deficit and shrinks it on sustained idleness.
+//!   * `autoscale+crash` — both: recovery under failures.
+//!
+//! The acceptance gate for the elastic work is the 10k cell:
+//! `autoscale` must shed strictly fewer tasks than `static`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::{
+    AdmissionMode, FleetSpec, LifecycleAction, LifecycleConfig, LifecycleEvent,
+    RoutingStrategy,
+};
+use crate::config::{ClusterEngine, PolicyKind, ServeConfig};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::util::{secs, Micros};
+use crate::workload::WorkloadSpec;
+
+use super::run_fleet;
+
+/// Default task counts the sweep runs (override with `--tasks`). The
+/// larger size is the scale sweep's overload cell.
+pub const DEFAULT_SIZES: [usize; 2] = [1_000, 10_000];
+
+/// Variants every size runs, in report order.
+pub const VARIANTS: [&str; 4] = ["static", "crash", "autoscale", "autoscale+crash"];
+
+/// Virtual seconds the whole burst arrives within (same window as the
+/// scale sweep, so the 10k cell is the same overload).
+pub const ARRIVAL_WINDOW_S: f64 = 120.0;
+
+/// Virtual drain past the last arrival.
+pub const DRAIN_S: f64 = 60.0;
+
+/// Fleet ceiling for the autoscaled variants.
+pub const AUTOSCALE_MAX: usize = 64;
+
+/// One (variant, task count) cell.
+#[derive(Debug)]
+pub struct ElasticCell {
+    /// Variant label (see [`VARIANTS`]).
+    pub variant: &'static str,
+    /// Workload size.
+    pub n_tasks: usize,
+    /// Offered arrival rate (tasks/s).
+    pub rate: f64,
+    /// Fleet width at t=0 (the edge-mixed preset: 4).
+    pub replicas_start: usize,
+    /// Alive replicas at the horizon.
+    pub replicas_final: usize,
+    /// Tasks finished by the horizon.
+    pub finished: usize,
+    /// Tasks shed fleet-wide: admission rejections plus per-replica
+    /// memory sheds.
+    pub shed: u64,
+    /// `shed / n_tasks`.
+    pub shed_rate: f64,
+    /// SLO attainment over every routed *and* shed task.
+    pub slo: f64,
+    /// Lifecycle counters.
+    pub crashes: u64,
+    pub joins: u64,
+    pub leaves: u64,
+    /// Autoscaler actions.
+    pub grows: u64,
+    pub shrinks: u64,
+    /// Evacuation counters: queued tasks re-placed for free, started
+    /// tasks re-admitted with a restore fee, total recompute charged.
+    pub evac_requeued: u64,
+    pub evac_restarted: u64,
+    pub evac_recompute_us: Micros,
+    /// Host wall-clock seconds for the cell.
+    pub wall_s: f64,
+}
+
+/// The lifecycle config a variant name implies. Crash variants kill
+/// replicas 0 and 1 (by explicit target — no RNG involved) at 40 s and
+/// 80 s; autoscale variants hold the fleet at [4, [`AUTOSCALE_MAX`]] so
+/// the autoscaler never shrinks below the starting width.
+pub fn lifecycle_for(variant: &str) -> Result<LifecycleConfig> {
+    let mut lc = LifecycleConfig::default();
+    let (crash, autoscale) = match variant {
+        "static" => (false, false),
+        "crash" => (true, false),
+        "autoscale" => (false, true),
+        "autoscale+crash" => (true, true),
+        other => anyhow::bail!("unknown elastic-sweep variant '{other}'"),
+    };
+    if crash {
+        lc.events = vec![
+            LifecycleEvent {
+                time: secs(40.0),
+                action: LifecycleAction::Crash,
+                target: Some(0),
+            },
+            LifecycleEvent {
+                time: secs(80.0),
+                action: LifecycleAction::Crash,
+                target: Some(1),
+            },
+        ];
+    }
+    if autoscale {
+        lc.autoscaler.enabled = true;
+        lc.min_replicas = 4;
+        lc.max_replicas = AUTOSCALE_MAX;
+    }
+    Ok(lc)
+}
+
+/// Run one cell: the scale sweep's edge-mixed overload shape with the
+/// variant's lifecycle config attached.
+pub fn run_cell(
+    variant: &'static str,
+    n_tasks: usize,
+    cfg: &ServeConfig,
+) -> Result<ElasticCell> {
+    let mut cfg = cfg.clone();
+    cfg.n_tasks = n_tasks;
+    cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
+    cfg.policy = PolicyKind::Slice;
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    cfg.lifecycle = lifecycle_for(variant)?;
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let spec = FleetSpec::preset("edge-mixed")?.with_cycle_cap(cfg.cycle_cap);
+    let replicas_start = spec.profiles.len();
+
+    let start = Instant::now();
+    let report = run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, secs(DRAIN_S))?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let a = Attainment::compute(&report.tasks());
+    let shed = report.shed_total();
+    let e = &report.elastic;
+    Ok(ElasticCell {
+        variant,
+        n_tasks,
+        rate: cfg.arrival_rate,
+        replicas_start,
+        replicas_final: report.alive_replicas(),
+        finished: a.n_finished,
+        shed,
+        shed_rate: shed as f64 / n_tasks as f64,
+        slo: a.slo,
+        crashes: e.crashes,
+        joins: e.joins,
+        leaves: e.leaves,
+        grows: e.autoscale_grows,
+        shrinks: e.autoscale_shrinks,
+        evac_requeued: e.evac_requeued,
+        evac_restarted: e.evac_restarted,
+        evac_recompute_us: e.evac_recompute_us,
+        wall_s,
+    })
+}
+
+fn render_rows(rows: &[ElasticCell]) {
+    use crate::metrics::report::{pct, Table};
+    let mut t = Table::new(&[
+        "variant", "tasks", "rate/s", "repl", "alive", "finished", "shed",
+        "shed%", "SLO", "crash", "join", "grow", "shrink", "evac", "restart",
+        "recompute s",
+    ]);
+    for c in rows {
+        t.row(vec![
+            c.variant.to_string(),
+            c.n_tasks.to_string(),
+            format!("{:.1}", c.rate),
+            c.replicas_start.to_string(),
+            c.replicas_final.to_string(),
+            c.finished.to_string(),
+            c.shed.to_string(),
+            pct(c.shed_rate),
+            pct(c.slo),
+            c.crashes.to_string(),
+            c.joins.to_string(),
+            c.grows.to_string(),
+            c.shrinks.to_string(),
+            c.evac_requeued.to_string(),
+            c.evac_restarted.to_string(),
+            format!("{:.1}", c.evac_recompute_us as f64 / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn rows_to_json(rows: &[ElasticCell]) -> Json {
+    use crate::metrics::report::nan_null;
+    Json::from(
+        rows.iter()
+            .map(|c| {
+                Json::obj()
+                    .set("variant", c.variant)
+                    .set("n_tasks", c.n_tasks)
+                    .set("rate", c.rate)
+                    .set("replicas_start", c.replicas_start)
+                    .set("replicas_final", c.replicas_final)
+                    .set("finished", c.finished)
+                    .set("shed", c.shed)
+                    .set("shed_rate", c.shed_rate)
+                    .set("slo", nan_null(c.slo))
+                    .set("crashes", c.crashes)
+                    .set("joins", c.joins)
+                    .set("leaves", c.leaves)
+                    .set("grows", c.grows)
+                    .set("shrinks", c.shrinks)
+                    .set("evac_requeued", c.evac_requeued)
+                    .set("evac_restarted", c.evac_restarted)
+                    .set("evac_recompute_us", c.evac_recompute_us)
+                    .set("wall_s", c.wall_s)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Full sweep over `sizes`; prints the table (plus the
+/// autoscaled-vs-static shed verdict at the largest size) and returns
+/// the JSON series (BENCH_7.json shape).
+pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
+    let mut rows: Vec<ElasticCell> = Vec::new();
+    for &n in sizes {
+        for variant in VARIANTS {
+            rows.push(run_cell(variant, n, cfg)?);
+        }
+    }
+
+    println!(
+        "Elastic sweep — SLICE, edge-mixed fleet, slo-aware + headroom \
+         admission + migration, {ARRIVAL_WINDOW_S:.0}s arrival window, \
+         {DRAIN_S:.0}s drain, seed {}\n",
+        cfg.seed
+    );
+    render_rows(&rows);
+    if let Some(&n) = sizes.last() {
+        let find = |v: &str| rows.iter().find(|c| c.n_tasks == n && c.variant == v);
+        if let (Some(st), Some(au)) = (find("static"), find("autoscale")) {
+            println!(
+                "\nshed at {n} tasks: static {} vs autoscaled {} — {}",
+                st.shed,
+                au.shed,
+                if au.shed < st.shed {
+                    "autoscaling reduces shed"
+                } else {
+                    "AUTOSCALING DID NOT REDUCE SHED"
+                }
+            );
+        }
+    }
+    Ok(rows_to_json(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_cell_runs_without_elastic_machinery() {
+        let c = run_cell("static", 60, &ServeConfig::default()).unwrap();
+        assert_eq!(c.replicas_start, 4);
+        assert_eq!(c.replicas_final, 4);
+        assert_eq!(c.crashes + c.joins + c.leaves + c.grows + c.shrinks, 0);
+    }
+
+    #[test]
+    fn crash_cell_kills_both_targets() {
+        let c = run_cell("crash", 60, &ServeConfig::default()).unwrap();
+        assert_eq!(c.crashes, 2, "both explicit crashes fire");
+        assert_eq!(c.replicas_final, 2);
+        assert!(c.grows == 0 && c.shrinks == 0);
+    }
+
+    #[test]
+    fn autoscale_cell_respects_bounds_and_is_deterministic() {
+        let cfg = ServeConfig::default();
+        let a = run_cell("autoscale", 120, &cfg).unwrap();
+        let b = run_cell("autoscale", 120, &cfg).unwrap();
+        assert!(a.replicas_final >= 4 && a.replicas_final <= AUTOSCALE_MAX);
+        assert_eq!(a.finished, b.finished, "same seed, same run");
+        assert_eq!(a.shed, b.shed);
+        assert_eq!((a.grows, a.shrinks), (b.grows, b.shrinks));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(lifecycle_for("mesh").is_err());
+    }
+}

@@ -20,10 +20,12 @@
 //! | `cluster_sweep` | routing strategies × replica counts (ext.)|
 //! | `hetero_sweep`  | fleet mix × strategy × admission (ext.)   |
 //! | `scale_sweep`   | scheduler throughput at 1k-10k tasks (ext.)|
+//! | `elastic_sweep` | shed/SLO under crashes + autoscaling (ext.) |
 
 pub mod ablation;
 pub mod cluster_sweep;
 pub mod dynamic;
+pub mod elastic_sweep;
 pub mod fig1;
 pub mod hetero_sweep;
 pub mod memory_sweep;
@@ -32,7 +34,7 @@ pub mod ratio_sweep;
 pub mod scale_sweep;
 pub mod static_mix;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cluster::{
     ClusterReport, DeviceProfile, FleetSpec, Orchestrator, Replica, Router,
@@ -159,7 +161,10 @@ pub fn run_cluster(
 /// profile — including its tier-scaled KV capacity when the config
 /// constrains memory; admission control and migration follow the
 /// config (`cluster_admission` / `cluster_migration` /
-/// `cluster_migrate_running`, all off by default).
+/// `cluster_migrate_running`, all off by default). When any elastic
+/// feature is enabled (`cfg.lifecycle`) the event engine attaches the
+/// lifecycle machinery; replicas that join mid-run are built from the
+/// spec's first profile (the fleet's standard tier).
 pub fn run_fleet(
     strategy: RoutingStrategy,
     spec: &FleetSpec,
@@ -194,16 +199,47 @@ pub fn run_fleet(
     // the two engines are bit-exact (rust/tests/equivalence.rs); the
     // config picks which one advances the fleet
     match cfg.cluster_engine {
-        ClusterEngine::Lockstep => Router::new(strategy, fleet)
-            .with_admission(cfg.cluster_admission)
-            .with_migration(cfg.cluster_migration)
-            .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
-            .run(workload, drain),
-        ClusterEngine::Event => Orchestrator::new(strategy, fleet)
-            .with_admission(cfg.cluster_admission)
-            .with_migration(cfg.cluster_migration)
-            .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
-            .run(workload, drain),
+        ClusterEngine::Lockstep => {
+            if cfg.lifecycle.any_enabled() {
+                bail!(
+                    "elastic fleets (lifecycle/autoscaler/health) need the event \
+                     engine; the lockstep reference cannot inject lifecycle events"
+                );
+            }
+            Router::new(strategy, fleet)
+                .with_admission(cfg.cluster_admission)
+                .with_migration(cfg.cluster_migration)
+                .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+                .run(workload, drain)
+        }
+        ClusterEngine::Event => {
+            let mut orch = Orchestrator::new(strategy, fleet)
+                .with_admission(cfg.cluster_admission)
+                .with_migration(cfg.cluster_migration)
+                .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone());
+            if cfg.lifecycle.any_enabled() {
+                // joins clone the fleet's first profile — the spec's
+                // standard tier — calibrated exactly like the initial
+                // replicas
+                let template = spec.profiles[0].clone();
+                let factory_cfg = cfg.clone();
+                orch = orch.with_lifecycle(
+                    cfg.lifecycle.clone(),
+                    Box::new(move |id| {
+                        let mut profile = template.clone();
+                        profile.latency.max_batch =
+                            factory_cfg.max_batch.min(profile.max_batch);
+                        Replica::new(
+                            id,
+                            build_policy_for(factory_cfg.policy, &factory_cfg, &profile),
+                            Box::new(build_engine_for(&factory_cfg, &profile)),
+                            profile,
+                        )
+                    }),
+                );
+            }
+            orch.run(workload, drain)
+        }
     }
 }
 

@@ -21,7 +21,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use slice_serve::cluster::{FleetSpec, RoutingStrategy};
+use slice_serve::cluster::{FleetSpec, LifecycleAction, LifecycleEvent, RoutingStrategy};
 use slice_serve::config::{ClusterEngine, EngineKind, PolicyKind, ServeConfig};
 #[cfg(feature = "pjrt")]
 use slice_serve::coordinator::task::TaskClass;
@@ -66,15 +66,21 @@ USAGE:
                     [--kv-capacity <MiB>] [--swap-bandwidth <MB/s>]
                     [--handoff-bandwidth <MB/s>] [--preemption swap|recompute]
                     [--memory-aware on|off]
+                    [--crash-at <s[,s,...]>] [--churn <events/s>] [--churn-seed <n>]
+                    [--autoscale on|off] [--fleet-min <n>] [--fleet-max <n>]
+                    [--health on|off]  (elastic flags imply --engine event)
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
   slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
-                    cluster|hetero|memory|scale|all> [--n-tasks <n>] [--seed <n>]
-                    [--out <json>]
+                    cluster|hetero|memory|scale|elastic|all> [--n-tasks <n>]
+                    [--seed <n>] [--out <json>]
                     (scale: [--tasks <n>] runs one custom size instead of
                      the 1k/4k/10k default; [--replicas <n[,n,...]>] runs the
                      replica-width axis — event + lockstep engines over
                      homogeneous fleets, BENCH_6.json; excluded from 'all')
+                    (elastic: static/crash/autoscale variants of the
+                     edge-mixed overload cell, BENCH_7.json; [--tasks <n>]
+                     runs one custom size; excluded from 'all')
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -361,6 +367,65 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             cfg.cluster_migration = true;
         }
     }
+    // elastic-fleet flags (mirror the [cluster.lifecycle] section)
+    if let Some(spec) = args.flag("crash-at") {
+        for s in spec.split(',') {
+            let t: f64 = s
+                .trim()
+                .parse()
+                .with_context(|| format!("--crash-at: bad seconds '{s}'"))?;
+            if t < 0.0 {
+                bail!("--crash-at times must be non-negative seconds");
+            }
+            cfg.lifecycle.events.push(LifecycleEvent {
+                time: secs(t),
+                action: LifecycleAction::Crash,
+                target: None,
+            });
+        }
+        cfg.lifecycle.events.sort_by_key(|e| e.time);
+    }
+    if let Some(v) = args.flag_f64("churn")? {
+        if v < 0.0 {
+            bail!("--churn must be a non-negative event rate");
+        }
+        cfg.lifecycle.churn_rate = v;
+    }
+    if let Some(v) = args.flag_u64("churn-seed")? {
+        cfg.lifecycle.seed = v;
+    }
+    if let Some(v) = args.flag_u64("fleet-min")? {
+        if v < 1 {
+            bail!("--fleet-min must be >= 1");
+        }
+        cfg.lifecycle.min_replicas = v as usize;
+    }
+    if let Some(v) = args.flag_u64("fleet-max")? {
+        if v < 1 {
+            bail!("--fleet-max must be >= 1");
+        }
+        cfg.lifecycle.max_replicas = v as usize;
+    }
+    if cfg.lifecycle.min_replicas > cfg.lifecycle.max_replicas {
+        bail!("--fleet-min must not exceed --fleet-max");
+    }
+    if let Some(s) = args.flag("autoscale") {
+        cfg.lifecycle.autoscaler.enabled = flag_switch("autoscale", s)?;
+    }
+    if let Some(s) = args.flag("health") {
+        cfg.lifecycle.health.enabled = flag_switch("health", s)?;
+    }
+    if cfg.lifecycle.any_enabled() && cfg.cluster_engine == ClusterEngine::Lockstep {
+        // same rule as the config parser: elastic implies the event
+        // engine; naming lockstep alongside it is a contradiction
+        if matches!(args.flag("engine"), Some("lockstep") | Some("router")) {
+            bail!(
+                "--engine lockstep cannot run elastic fleets \
+                 (lifecycle/autoscale/health need the event engine)"
+            );
+        }
+        cfg.cluster_engine = ClusterEngine::Event;
+    }
 
     let workload =
         WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
@@ -433,6 +498,30 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             ms2(report.handoff_us as f64 / 1e3)
         ),
     ]);
+    if cfg.lifecycle.any_enabled() {
+        let e = &report.elastic;
+        t.row(vec![
+            "lifecycle crash / join / leave".into(),
+            format!("{} / {} / {}", e.crashes, e.joins, e.leaves),
+        ]);
+        t.row(vec![
+            "autoscale grow / shrink".into(),
+            format!("{} / {}", e.autoscale_grows, e.autoscale_shrinks),
+        ]);
+        t.row(vec![
+            "evacuated (requeued / restarted)".into(),
+            format!(
+                "{} / {} ({} recompute)",
+                e.evac_requeued,
+                e.evac_restarted,
+                secs2(e.evac_recompute_us as f64 / 1e6)
+            ),
+        ]);
+        t.row(vec![
+            "alive replicas at horizon".into(),
+            format!("{}/{}", report.alive_replicas(), report.replicas.len()),
+        ]);
+    }
     println!("{}", t.render());
 
     let mut per = Table::new(&[
@@ -539,6 +628,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 };
                 out = out.set("scale_sweep", experiments::scale_sweep::run(&cfg, &sizes)?)
             }
+        }
+        "elastic" | "elastic_sweep" => {
+            // --tasks <n> runs a single custom size (CI smoke);
+            // default: the 1k/10k sweep (BENCH_7.json shape).
+            let sizes = match args.flag_u64("tasks")? {
+                Some(n) if n >= 1 => vec![n as usize],
+                Some(_) => bail!("--tasks must be >= 1"),
+                None => experiments::elastic_sweep::DEFAULT_SIZES.to_vec(),
+            };
+            out = out.set("elastic_sweep", experiments::elastic_sweep::run(&cfg, &sizes)?)
         }
         "all" => {
             out = out

@@ -9,7 +9,10 @@
 //! Attainment definitions follow the paper exactly:
 //!   * real-time task SLO met  ⇔ completed before its deadline;
 //!   * non-real-time SLO met   ⇔ TTFT SLO **and** TPOT SLO both met;
-//!   * unfinished tasks count as violations.
+//!   * unfinished tasks count as violations;
+//!   * shed tasks (admission-rejected or dropped mid-run for memory)
+//!     count as violations and are never "finished" — their partial
+//!     latency records are excluded from every distribution.
 
 pub mod report;
 
@@ -21,7 +24,8 @@ use crate::util::stats::Samples;
 pub struct Attainment {
     /// Tasks in the evaluated set.
     pub n_tasks: usize,
-    /// Tasks that finished before the horizon.
+    /// Tasks that finished (served to completion) before the horizon —
+    /// shed tasks are terminal but never count here.
     pub n_finished: usize,
     /// Overall SLO attainment in [0,1].
     pub slo: f64,
@@ -72,14 +76,18 @@ impl Attainment {
         let met = tasks.iter().filter(|t| t.slo_met()).count();
         let rt_met = rt.iter().filter(|t| t.slo_met()).count();
         let nrt_met = nrt.iter().filter(|t| t.slo_met()).count();
-        let nrt_ttft_met =
-            nrt.iter().filter(|t| t.is_finished() && t.ttft_met()).count();
-        let nrt_tpot_met =
-            nrt.iter().filter(|t| t.is_finished() && t.tpot_met()).count();
+        let nrt_ttft_met = nrt
+            .iter()
+            .filter(|t| t.is_finished() && !t.shed && t.ttft_met())
+            .count();
+        let nrt_tpot_met = nrt
+            .iter()
+            .filter(|t| t.is_finished() && !t.shed && t.tpot_met())
+            .count();
 
         Attainment {
             n_tasks: tasks.len(),
-            n_finished: tasks.iter().filter(|t| t.is_finished()).count(),
+            n_finished: tasks.iter().filter(|t| t.is_finished() && !t.shed).count(),
             slo: frac(met, tasks.len()),
             rt_slo: frac(rt_met, rt.len()),
             rt_count: rt.len(),
@@ -138,11 +146,11 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    /// Compute over the finished tasks in `tasks` (unfinished tasks
-    /// have no complete latency record; attainment already counts them
-    /// as violations).
+    /// Compute over the served-to-completion tasks in `tasks`
+    /// (unfinished and shed tasks have no complete latency record;
+    /// attainment already counts them as violations).
     pub fn compute(tasks: &[Task]) -> Self {
-        let finished = || tasks.iter().filter(|t| t.is_finished());
+        let finished = || tasks.iter().filter(|t| t.is_finished() && !t.shed);
         LatencySummary {
             ttft: Percentiles::compute(finished().filter_map(|t| t.ttft())),
             tpot: Percentiles::compute(finished().filter_map(|t| t.avg_tpot())),
@@ -237,6 +245,25 @@ mod tests {
         let a = Attainment::compute(&[unfinished]);
         assert_eq!(a.n_finished, 0);
         assert_eq!(a.slo, 0.0);
+    }
+
+    #[test]
+    fn shed_tasks_are_violations_not_finished() {
+        // a shed task is in Finished state (terminal) but must never
+        // count as served: not in n_finished, not in any latency
+        // distribution, always an SLO violation
+        let mut dropped = finished_voice(4, 500.0, 100.0);
+        dropped.shed = true;
+        let tasks = vec![finished_voice(0, 500.0, 100.0), dropped];
+        let a = Attainment::compute(&tasks);
+        assert_eq!(a.n_tasks, 2);
+        assert_eq!(a.n_finished, 1, "shed is terminal but never served");
+        assert!((a.slo - 0.5).abs() < 1e-12);
+        assert!((a.nrt_slo - 0.5).abs() < 1e-12);
+        assert!((a.nrt_ttft - 0.5).abs() < 1e-12, "shed out of TTFT numerator");
+        let s = LatencySummary::compute(&tasks);
+        assert_eq!(s.ttft.n, 1, "shed partial record excluded");
+        assert_eq!(s.tpot.n, 1);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use std::collections::VecDeque;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::coordinator::pool::TaskPool;
 use crate::coordinator::scheduler::{Policy, Step};
@@ -44,6 +44,10 @@ pub struct RunReport {
     /// reschedules for SLICE; zero for policies that don't count) —
     /// the numerator of the scale sweep's decisions-per-second.
     pub decisions: u64,
+    /// Tasks shed mid-run because their KV footprint could never fit
+    /// the device's capacity (each is terminal, unserved, and counts
+    /// as an SLO violation — see [`Task::shed`]).
+    pub shed: u64,
     /// Time of the last event processed.
     pub end_time: Micros,
     /// Policy name (for reports).
@@ -79,6 +83,7 @@ pub struct Server<C: Clock> {
     steps: u64,
     decode_steps: u64,
     prefill_steps: u64,
+    shed: u64,
     token_sink: Option<TokenSink>,
 }
 
@@ -139,6 +144,7 @@ impl<C: Clock> Server<C> {
             steps: 0,
             decode_steps: 0,
             prefill_steps: 0,
+            shed: 0,
             token_sink: None,
         }
     }
@@ -320,20 +326,47 @@ impl<C: Clock> Server<C> {
         Some(cost)
     }
 
+    /// Terminate a delivered task this device can never serve (its KV
+    /// footprint exceeds the whole capacity, so no eviction sequence
+    /// helps). The task keeps its partial record but becomes terminal:
+    /// `Finished` state with [`Task::shed`] set and no completion
+    /// timestamp, so it leaves the live indexes and counts as an SLO
+    /// violation in every report. The policy sees a completion event —
+    /// capacity is freed and SLICE reschedules — exactly as it does
+    /// when a task is extracted for migration.
+    fn shed_task(&mut self, id: TaskId, now: Micros) {
+        {
+            let t = self.pool.get_mut(id);
+            debug_assert!(!t.is_finished() && !t.migrated_away);
+            t.shed = true;
+            t.state = TaskState::Finished;
+            t.residency = Residency::None;
+            t.pending_restore = 0;
+        }
+        index_remove(&mut self.live, id);
+        index_remove(&mut self.resident, id);
+        self.engine.release(id);
+        self.shed += 1;
+        self.policy.on_completion(&mut self.pool, &[id], now);
+    }
+
     /// Make room for a prompt of `task` before prefill: evict resident
     /// tasks (paused first) until the prompt's blocks fit. Returns the
-    /// total transition cost to charge before the prefill pass.
-    fn prepare_prefill(&mut self, task: TaskId) -> Result<Micros> {
+    /// total transition cost to charge before the prefill pass, or
+    /// `None` when the prompt alone exceeds the device capacity and the
+    /// task was shed (a memory-oblivious policy can schedule such a
+    /// prefill; the run must survive it).
+    fn prepare_prefill(&mut self, task: TaskId) -> Option<Micros> {
         if !self.memory_constrained() {
-            return Ok(0);
+            return Some(0);
         }
         let kv = self.engine.kv_model().expect("constrained model");
         let cap = kv.capacity().expect("constrained model");
         let need = kv.bytes_for(self.pool.get(task).prompt_len + 1);
         if need > cap {
-            bail!(
-                "kv capacity {cap} B cannot hold task {task}'s prompt footprint {need} B"
-            );
+            let now = self.clock.now();
+            self.shed_task(task, now);
+            return None;
         }
         let mut cost = 0;
         while self.engine.kv_model().expect("kv").occupied_bytes() + need > cap {
@@ -342,16 +375,20 @@ impl<C: Clock> Server<C> {
                 None => break, // only finished remnants left; release freed them
             }
         }
-        Ok(cost)
+        Some(cost)
     }
 
     /// Admit a decode batch against the KV capacity: trim the batch to
     /// the prefix whose post-step footprint fits, evict resident
     /// non-batch tasks until it does, and restore (swap-in / recompute /
-    /// pay the handoff fee of) every swapped batch member. Returns the
-    /// surviving batch and the total transition cost to charge before
-    /// the decode pass.
-    fn prepare_decode(&mut self, tasks: Vec<TaskId>) -> Result<(Vec<TaskId>, Micros)> {
+    /// pay the handoff fee of) every swapped batch member. A batch head
+    /// whose footprint alone exceeds the whole capacity can never
+    /// decode again — it is shed (counted SLO-violated) and the rest of
+    /// the batch retried, so a memory-oblivious policy cannot kill the
+    /// run by growing one task past the device. Returns the surviving
+    /// batch (possibly empty) and the total transition cost to charge
+    /// before the decode pass.
+    fn prepare_decode(&mut self, tasks: Vec<TaskId>) -> (Vec<TaskId>, Micros) {
         if !self.memory_constrained() {
             // even an unconstrained destination owes a migrated-in
             // task's KV-handoff fee before it can decode (the only way
@@ -374,7 +411,7 @@ impl<C: Clock> Server<C> {
                     index_insert(&mut self.resident, id);
                 }
             }
-            return Ok((tasks, cost));
+            return (tasks, cost);
         }
         let cap = self
             .engine
@@ -383,30 +420,39 @@ impl<C: Clock> Server<C> {
             .expect("constrained model");
         // post-step footprint of the batch prefix that fits; the kept
         // set is always a prefix, so the incoming buffer is truncated
-        // in place and stays recyclable (no per-step allocation)
-        let mut need: u64 = 0;
-        let mut keep_len = 0usize;
-        {
-            let kv = self.engine.kv_model().expect("kv");
-            for &id in &tasks {
-                let b = kv.bytes_for(self.pool.get(id).seq_len() + 1);
-                if need + b <= cap {
-                    need += b;
-                    keep_len += 1;
-                } else {
-                    break;
+        // in place and stays recyclable (no per-step allocation). A
+        // head that fits nothing is shed and the scan restarted on the
+        // remainder (the rare outgrown-the-device path).
+        let mut kept = tasks;
+        let mut need: u64;
+        loop {
+            need = 0;
+            let mut keep_len = 0usize;
+            {
+                let kv = self.engine.kv_model().expect("kv");
+                for &id in &kept {
+                    let b = kv.bytes_for(self.pool.get(id).seq_len() + 1);
+                    if need + b <= cap {
+                        need += b;
+                        keep_len += 1;
+                    } else {
+                        break;
+                    }
                 }
             }
+            if keep_len > 0 {
+                kept.truncate(keep_len);
+                break;
+            }
+            match kept.first().copied() {
+                Some(head) => {
+                    let now = self.clock.now();
+                    self.shed_task(head, now);
+                    kept.remove(0);
+                }
+                None => return (kept, 0),
+            }
         }
-        if keep_len == 0 {
-            bail!(
-                "kv capacity {cap} B cannot hold a single decode slot \
-                 (task {}'s footprint exceeds it)",
-                tasks[0]
-            );
-        }
-        let mut kept = tasks;
-        kept.truncate(keep_len);
         let mut cost = 0;
         while self.engine.kv_model().expect("kv").resident_outside(&kept) + need > cap {
             match self.evict_one(&kept) {
@@ -429,7 +475,7 @@ impl<C: Clock> Server<C> {
                 index_insert(&mut self.resident, id);
             }
         }
-        Ok((kept, cost))
+        (kept, cost)
     }
 
     /// Execute one non-idle step: drive the engine, advance the clock,
@@ -441,7 +487,11 @@ impl<C: Clock> Server<C> {
             Step::Prefill { task } => {
                 // capacity enforcement: evictions are charged *before*
                 // the prefill pass, so token timestamps include them
-                let mem_cost = self.prepare_prefill(task)?;
+                let Some(mem_cost) = self.prepare_prefill(task) else {
+                    // the prompt can never fit: the task was shed, no
+                    // engine pass runs, and no step is counted
+                    return Ok(());
+                };
                 if mem_cost > 0 {
                     self.clock.advance(mem_cost);
                 }
@@ -468,7 +518,13 @@ impl<C: Clock> Server<C> {
                 // swap-in / recompute / handoff fees and any forced
                 // evictions are paid before the forward pass (pause and
                 // resume are no longer free under a finite capacity)
-                let (tasks, mem_cost) = self.prepare_decode(tasks)?;
+                let (tasks, mem_cost) = self.prepare_decode(tasks);
+                if tasks.is_empty() {
+                    // every batch member was shed: nothing to run this
+                    // iteration; hand the buffer back and re-decide
+                    self.policy.recycle_batch(tasks);
+                    return Ok(());
+                }
                 if mem_cost > 0 {
                     self.clock.advance(mem_cost);
                 }
@@ -573,6 +629,7 @@ impl<C: Clock> Server<C> {
             steps: self.steps,
             decode_steps: self.decode_steps,
             prefill_steps: self.prefill_steps,
+            shed: self.shed,
             memory,
         }
     }
@@ -837,6 +894,57 @@ mod tests {
         );
         let swapped: u32 = tight.tasks.iter().map(|t| t.swap_outs).sum();
         assert!(swapped > 0, "per-task swap counters recorded");
+    }
+
+    #[test]
+    fn oversized_prompt_is_shed_not_fatal() {
+        // a prompt whose footprint exceeds the whole KV capacity can
+        // never prefill; the run must shed it and keep serving, not
+        // abort with an error (the PR 4 carried-forward fix)
+        let workload = vec![
+            Task::new(0, TaskClass::Voice, 0, 1000, 10, 1.0), // ~33 MiB prompt
+            mk_task(1, TaskClass::Voice, 0, 10),
+        ];
+        let report = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            constrained_engine(2 * 1024 * 1024),
+            VirtualClock::new(),
+        )
+        .run(secs(60.0))
+        .unwrap();
+        assert_eq!(report.shed, 1);
+        let t0 = &report.tasks[0];
+        assert!(t0.shed && t0.is_finished() && !t0.slo_met());
+        assert_eq!(t0.tokens_generated, 0, "shed before any engine pass");
+        assert_eq!(t0.completion_time(), None, "shed is not completion");
+        let t1 = &report.tasks[1];
+        assert!(t1.is_finished() && !t1.shed, "the fleet keeps serving");
+    }
+
+    #[test]
+    fn task_outgrowing_capacity_is_shed_mid_decode() {
+        // a memory-oblivious policy grows one task's cache past the
+        // device: once even a solo decode slot no longer fits, the
+        // task is shed with its partial record and the run continues
+        let workload = vec![mk_task(0, TaskClass::Voice, 0, 200)];
+        // cap = 4 blocks of 16 tokens: prefill (16-token prompt) fits,
+        // decode stops fitting once seq_len + 1 > 64
+        let report = Server::new(
+            workload,
+            Box::new(OrcaPolicy::new(32)),
+            constrained_engine(2 * 1024 * 1024),
+            VirtualClock::new(),
+        )
+        .run(secs(600.0))
+        .unwrap();
+        assert_eq!(report.shed, 1);
+        let t = &report.tasks[0];
+        assert!(t.shed && t.is_finished() && !t.slo_met());
+        assert_eq!(t.tokens_generated, 48, "partial record kept (64 - 16)");
+        assert!(t.first_token.is_some());
+        // the shed task's cache was released, not leaked
+        assert!(report.memory.peak_kv_bytes <= 2 * 1024 * 1024);
     }
 
     #[test]

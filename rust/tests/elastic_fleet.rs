@@ -1,0 +1,313 @@
+//! Elastic-fleet invariants (DESIGN.md "Elastic fleets"): placement
+//! never targets dead replicas, fleet size respects its configured
+//! bounds under seeded churn, crashed work is re-admitted exactly once
+//! at the recompute price, the autoscaler actually buys capacity under
+//! overload, and every elastic run is deterministic for a fixed seed.
+
+use slice_serve::cluster::{
+    AdmissionMode, ClusterReport, DeviceProfile, FleetSpec, LifecycleAction,
+    LifecycleConfig, LifecycleEvent, Orchestrator, Replica, RoutingStrategy,
+};
+use slice_serve::config::{ClusterEngine, ServeConfig};
+use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::experiments::run_fleet;
+use slice_serve::util::{secs, Micros};
+use slice_serve::workload::WorkloadSpec;
+
+fn std_replica(i: usize) -> Replica {
+    Replica::new(
+        i,
+        Box::new(SlicePolicy::new(
+            LatencyModel::paper_calibrated(),
+            SliceConfig::default(),
+        )),
+        Box::new(SimEngine::paper_calibrated()),
+        DeviceProfile::standard(),
+    )
+}
+
+fn crash(at: Micros, target: usize) -> LifecycleEvent {
+    LifecycleEvent { time: at, action: LifecycleAction::Crash, target: Some(target) }
+}
+
+/// Every workload task lands in the report exactly once — on one
+/// replica or the shed list — whatever the fleet did meanwhile.
+fn assert_conserved(report: &ClusterReport, n_tasks: usize, ctx: &str) {
+    let mut seen = vec![0u32; n_tasks];
+    for r in &report.replicas {
+        for t in &r.report.tasks {
+            seen[t.id as usize] += 1;
+        }
+    }
+    for t in &report.rejected {
+        seen[t.id as usize] += 1;
+    }
+    for (id, &c) in seen.iter().enumerate() {
+        assert_eq!(c, 1, "{ctx}: task {id} appears {c} times");
+    }
+}
+
+/// Replicas crashed before the first arrival route nothing, step
+/// nothing, and hold nothing — placement never targets a dead replica.
+#[test]
+fn placement_never_targets_dead_replicas() {
+    let n_tasks = 30;
+    let workload = WorkloadSpec::paper_mix(2.0, 0.7, n_tasks, 7).generate();
+    let lc = LifecycleConfig {
+        events: vec![crash(0, 0), crash(0, 1), crash(0, 2)],
+        ..LifecycleConfig::default()
+    };
+    let report = Orchestrator::new(
+        RoutingStrategy::SloAware,
+        (0..4).map(std_replica).collect(),
+    )
+    .with_lifecycle(lc, Box::new(std_replica))
+    .run(workload, secs(120.0))
+    .unwrap();
+
+    assert_eq!(report.elastic.crashes, 3);
+    assert_eq!(report.alive_replicas(), 1);
+    for r in &report.replicas[..3] {
+        assert!(!r.alive, "replica {} crashed at t=0", r.replica);
+        assert_eq!(r.routed, 0, "replica {} was dead before any arrival", r.replica);
+        assert_eq!(r.report.steps, 0, "replica {} stepped while dead", r.replica);
+        assert!(r.report.tasks.is_empty(), "replica {} holds tasks", r.replica);
+    }
+    let survivor = &report.replicas[3];
+    assert!(survivor.alive);
+    assert_eq!(survivor.routed, n_tasks, "everything routes to the survivor");
+    assert_conserved(&report, n_tasks, "dead-placement");
+}
+
+/// A crash mid-run evacuates every unfinished task to the survivors
+/// exactly once, and started tasks pay a recompute fee on the clock:
+/// whatever finishes after evacuation finishes strictly after the
+/// crash instant.
+#[test]
+fn crashed_tasks_are_readmitted_exactly_once_with_recompute_fees() {
+    let n_tasks = 80;
+    let crash_t = secs(8.0);
+    // round-robin pins task id % 4 to its replica, so evacuees are
+    // identifiable in the final report
+    let workload = WorkloadSpec::paper_mix(8.0, 0.7, n_tasks, 42).generate();
+    let lc = LifecycleConfig {
+        events: vec![crash(crash_t, 0)],
+        ..LifecycleConfig::default()
+    };
+    let report = Orchestrator::new(
+        RoutingStrategy::RoundRobin,
+        (0..4).map(std_replica).collect(),
+    )
+    .with_lifecycle(lc, Box::new(std_replica))
+    .run(workload, secs(120.0))
+    .unwrap();
+
+    let e = &report.elastic;
+    assert_eq!(e.crashes, 1);
+    assert!(e.evac_requeued + e.evac_restarted > 0, "the crash evacuated work");
+    assert!(e.evac_restarted > 0, "8s of overload leaves started tasks to restart");
+    assert!(e.evac_recompute_us > 0, "restarts are priced, not free");
+    assert_conserved(&report, n_tasks, "crash-evac");
+
+    // the dead replica keeps only work it finished before dying
+    let dead = &report.replicas[0];
+    assert!(!dead.alive);
+    assert!(
+        dead.report.tasks.iter().all(|t| t.is_finished()),
+        "replica 0 died holding live tasks"
+    );
+    // every pre-crash replica-0 task found elsewhere is an evacuee;
+    // their count matches the counters and none completes before the
+    // crash it survived
+    let mut evacuated = 0u64;
+    for r in report.replicas.iter().skip(1) {
+        for t in &r.report.tasks {
+            if t.id % 4 == 0 && t.arrival < crash_t {
+                evacuated += 1;
+                if let Some(c) = t.completion {
+                    assert!(c > crash_t, "task {} finished before its crash", t.id);
+                }
+            }
+        }
+    }
+    assert_eq!(evacuated, e.evac_requeued + e.evac_restarted, "evacuee census");
+}
+
+/// 500 seeded churn sequences: the alive count never ends outside
+/// [min_replicas, max_replicas], the counter identity `alive = start +
+/// joins + grows − crashes − leaves − shrinks` holds, and every task is
+/// conserved through arbitrary crash/join/leave interleavings.
+#[test]
+fn fleet_bounds_hold_across_500_seeded_churn_sequences() {
+    for seed in 0..500u64 {
+        let n_tasks = 8;
+        let width = 3usize;
+        let lc = LifecycleConfig {
+            churn_rate: 1.0,
+            seed,
+            min_replicas: 1,
+            max_replicas: 5,
+            ..LifecycleConfig::default()
+        };
+        let workload = WorkloadSpec::paper_mix(2.0, 0.7, n_tasks, seed).generate();
+        let report = Orchestrator::new(
+            RoutingStrategy::SloAware,
+            (0..width).map(std_replica).collect(),
+        )
+        .with_lifecycle(lc.clone(), Box::new(std_replica))
+        .run(workload, secs(15.0))
+        .unwrap();
+
+        let alive = report.alive_replicas();
+        assert!(
+            (lc.min_replicas..=lc.max_replicas).contains(&alive),
+            "seed {seed}: alive {alive} outside [{}, {}]",
+            lc.min_replicas,
+            lc.max_replicas
+        );
+        let e = &report.elastic;
+        assert_eq!(
+            alive as i64,
+            width as i64 + (e.joins + e.autoscale_grows) as i64
+                - (e.crashes + e.leaves + e.autoscale_shrinks) as i64,
+            "seed {seed}: alive-count identity"
+        );
+        assert_conserved(&report, n_tasks, &format!("churn seed {seed}"));
+    }
+}
+
+/// Under a sustained admission deficit the autoscaler grows the fleet
+/// (bounded), and the grown fleet sheds strictly less than the static
+/// one — the headline the elastic sweep measures at 10k tasks.
+#[test]
+fn autoscaler_grows_under_deficit_and_reduces_shed() {
+    let mut cfg = ServeConfig::default();
+    cfg.arrival_rate = 20.0;
+    cfg.n_tasks = 200;
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    let spec = FleetSpec::homogeneous(2, cfg.cycle_cap);
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, 7).generate();
+
+    let static_report = run_fleet(
+        RoutingStrategy::SloAware,
+        &spec,
+        workload.clone(),
+        &cfg,
+        secs(60.0),
+    )
+    .unwrap();
+    assert!(static_report.shed_total() > 0, "the cell must be an overload");
+
+    let mut auto_cfg = cfg.clone();
+    auto_cfg.lifecycle.autoscaler.enabled = true;
+    auto_cfg.lifecycle.min_replicas = 2;
+    auto_cfg.lifecycle.max_replicas = 16;
+    let auto_report =
+        run_fleet(RoutingStrategy::SloAware, &spec, workload, &auto_cfg, secs(60.0))
+            .unwrap();
+
+    let e = &auto_report.elastic;
+    assert!(e.autoscale_grows > 0, "sustained deficit must grow the fleet");
+    assert!(auto_report.alive_replicas() <= 16, "growth is bounded");
+    assert!(
+        auto_report.shed_total() < static_report.shed_total(),
+        "autoscaled shed {} must beat static shed {}",
+        auto_report.shed_total(),
+        static_report.shed_total()
+    );
+    assert_conserved(&auto_report, cfg.n_tasks, "autoscale");
+}
+
+/// The full elastic stack — churn, autoscaler, health, admission,
+/// migration, heterogeneous fleet — replays bit-identically for a
+/// fixed seed: same fleet trajectory, same per-task timings.
+#[test]
+fn elastic_runs_are_deterministic_for_a_fixed_seed() {
+    let mut cfg = ServeConfig::default();
+    cfg.arrival_rate = 6.0;
+    cfg.n_tasks = 120;
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    cfg.lifecycle.churn_rate = 0.5;
+    cfg.lifecycle.seed = 11;
+    cfg.lifecycle.min_replicas = 2;
+    cfg.lifecycle.max_replicas = 8;
+    cfg.lifecycle.autoscaler.enabled = true;
+    cfg.lifecycle.health.enabled = true;
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(cfg.cycle_cap);
+
+    let run = || {
+        let workload =
+            WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, 7)
+                .generate();
+        run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, secs(60.0)).unwrap()
+    };
+    let a = run();
+    let b = run();
+
+    let ea = &a.elastic;
+    let eb = &b.elastic;
+    assert_eq!(
+        (ea.crashes, ea.joins, ea.leaves, ea.autoscale_grows, ea.autoscale_shrinks),
+        (eb.crashes, eb.joins, eb.leaves, eb.autoscale_grows, eb.autoscale_shrinks),
+        "fleet trajectory diverged"
+    );
+    assert_eq!(ea.evac_requeued, eb.evac_requeued);
+    assert_eq!(ea.evac_restarted, eb.evac_restarted);
+    assert_eq!(ea.evac_recompute_us, eb.evac_recompute_us);
+    assert_eq!(a.replicas.len(), b.replicas.len());
+    assert_eq!(a.alive_replicas(), b.alive_replicas());
+    let ta = a.tasks();
+    let tb = b.tasks();
+    assert_eq!(ta.len(), tb.len());
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.first_token, y.first_token, "task {}", x.id);
+        assert_eq!(x.completion, y.completion, "task {}", x.id);
+        assert_eq!(x.tokens_generated, y.tokens_generated, "task {}", x.id);
+    }
+    assert_conserved(&a, cfg.n_tasks, "deterministic rerun");
+}
+
+/// At light load no replica ever overruns, so enabling health scoring
+/// changes nothing: the run is bit-exact with the static event-engine
+/// run — degradation is a response to lag, never noise.
+#[test]
+fn health_scoring_is_inert_without_lag() {
+    let mut cfg = ServeConfig::default();
+    cfg.arrival_rate = 0.5;
+    cfg.n_tasks = 30;
+    cfg.cluster_engine = ClusterEngine::Event;
+    let spec = FleetSpec::homogeneous(4, cfg.cycle_cap);
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, 7).generate();
+
+    let plain =
+        run_fleet(RoutingStrategy::SloAware, &spec, workload.clone(), &cfg, secs(120.0))
+            .unwrap();
+    let mut health_cfg = cfg.clone();
+    health_cfg.lifecycle.health.enabled = true;
+    let health =
+        run_fleet(RoutingStrategy::SloAware, &spec, workload, &health_cfg, secs(120.0))
+            .unwrap();
+
+    let ta = plain.tasks();
+    let tb = health.tasks();
+    assert_eq!(ta.len(), tb.len());
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.first_token, y.first_token, "task {}", x.id);
+        assert_eq!(x.completion, y.completion, "task {}", x.id);
+    }
+    for (ra, rb) in plain.replicas.iter().zip(&health.replicas) {
+        assert_eq!(ra.routed, rb.routed, "replica {} routing diverged", ra.replica);
+    }
+    assert!(health.replicas.iter().all(|r| r.alive));
+}

@@ -598,3 +598,159 @@ fn event_engine_matches_lockstep_memory_and_handoff() {
         );
     }
 }
+
+// ---- All-disabled elastic runs vs static fleets (PR 7) -----------------
+
+use slice_serve::cluster::{LifecycleConfig, Orchestrator, Replica};
+use slice_serve::coordinator::task::Task;
+
+/// The same fleet `experiments::run_fleet` builds for `cfg`/`spec`:
+/// per-profile policy + engine, `max_batch` capped, the configured KV
+/// capacity threaded in when the config constrains memory.
+fn build_fleet(cfg: &ServeConfig, spec: &FleetSpec) -> Vec<Replica> {
+    let spec = if cfg.memory.constrained()
+        && spec.profiles.iter().all(|p| p.kv_capacity.is_none())
+    {
+        spec.clone().with_kv_capacity(cfg.memory.kv_capacity)
+    } else {
+        spec.clone()
+    };
+    spec.profiles
+        .iter()
+        .enumerate()
+        .map(|(i, profile)| {
+            let mut profile = profile.clone();
+            profile.latency.max_batch = cfg.max_batch.min(profile.max_batch);
+            Replica::new(
+                i,
+                experiments::build_policy_for(cfg.policy, cfg, &profile),
+                Box::new(experiments::build_engine_for(cfg, &profile)),
+                profile,
+            )
+        })
+        .collect()
+}
+
+/// An event-engine run with the elastic machinery *attached* but every
+/// feature disabled: the liveness/health masks are initialized and the
+/// elastic decision paths run for real.
+fn run_elastic_noop(
+    cfg: &ServeConfig,
+    strategy: RoutingStrategy,
+    spec: &FleetSpec,
+    workload: Vec<Task>,
+) -> ClusterReport {
+    let factory_cfg = cfg.clone();
+    Orchestrator::new(strategy, build_fleet(cfg, spec))
+        .with_admission(cfg.cluster_admission)
+        .with_migration(cfg.cluster_migration)
+        .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+        .with_lifecycle(
+            LifecycleConfig::default(),
+            Box::new(move |id| {
+                let profile = experiments::standard_profile(&factory_cfg);
+                Replica::new(
+                    id,
+                    experiments::build_policy_for(factory_cfg.policy, &factory_cfg, &profile),
+                    Box::new(experiments::build_engine_for(&factory_cfg, &profile)),
+                    profile,
+                )
+            }),
+        )
+        .run(workload, secs(120.0))
+        .unwrap()
+}
+
+/// An all-disabled elastic run must be bit-exact with the PR 6 static
+/// fleets on *both* engines, across the existing nine equivalence
+/// shapes: the masks exist, the lifecycle stream is empty, and nothing
+/// else may change — no stray joins, no elastic counters, every replica
+/// alive.
+#[test]
+fn all_disabled_elastic_is_bit_exact_with_static_fleets() {
+    let base = ServeConfig::default();
+    let homog = FleetSpec::homogeneous(4, base.cycle_cap);
+    let single = FleetSpec::homogeneous(1, base.cycle_cap);
+    let hetero = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(base.cycle_cap);
+
+    let admission = |mode: AdmissionMode| {
+        let mut c = base.clone();
+        c.cluster_admission.enabled = true;
+        c.cluster_admission.mode = mode;
+        c
+    };
+    let migration = {
+        let mut c = admission(AdmissionMode::Headroom);
+        c.cluster_migration = true;
+        c
+    };
+    let memory_handoff = {
+        let mut c = migration.clone();
+        c.memory.kv_capacity = Some(48 * 1024 * 1024);
+        c.cluster_migrate_running = true;
+        c
+    };
+    let memory_only = {
+        let mut c = base.clone();
+        c.memory.kv_capacity = Some(32 * 1024 * 1024);
+        c
+    };
+
+    let shapes: Vec<(&str, ServeConfig, RoutingStrategy, &FleetSpec, f64, usize)> = vec![
+        ("round-robin", base.clone(), RoutingStrategy::RoundRobin, &homog, 4.0, 160),
+        ("least-loaded", base.clone(), RoutingStrategy::LeastLoaded, &homog, 4.0, 160),
+        ("slo-aware", base.clone(), RoutingStrategy::SloAware, &homog, 4.0, 160),
+        ("single", base.clone(), RoutingStrategy::SloAware, &single, 1.0, 120),
+        (
+            "hetero-depth",
+            admission(AdmissionMode::QueueDepth),
+            RoutingStrategy::SloAware,
+            &hetero,
+            6.0,
+            200,
+        ),
+        (
+            "hetero-headroom",
+            admission(AdmissionMode::Headroom),
+            RoutingStrategy::SloAware,
+            &hetero,
+            6.0,
+            200,
+        ),
+        ("migration", migration.clone(), RoutingStrategy::SloAware, &hetero, 6.0, 200),
+        (
+            "memory-handoff",
+            memory_handoff,
+            RoutingStrategy::SloAware,
+            &hetero,
+            6.0,
+            200,
+        ),
+        ("memory-only", memory_only, RoutingStrategy::LeastLoaded, &homog, 4.0, 160),
+    ];
+
+    for (label, cfg, strategy, spec, rate, n_tasks) in shapes {
+        let workload = WorkloadSpec::paper_mix(rate, 0.7, n_tasks, 7).generate();
+        let mut lockstep = cfg.clone();
+        lockstep.cluster_engine = ClusterEngine::Lockstep;
+        let mut event = cfg.clone();
+        event.cluster_engine = ClusterEngine::Event;
+        let ls = experiments::run_fleet(strategy, spec, workload.clone(), &lockstep, secs(120.0))
+            .unwrap();
+        let ev = experiments::run_fleet(strategy, spec, workload.clone(), &event, secs(120.0))
+            .unwrap();
+        let noop = run_elastic_noop(&cfg, strategy, spec, workload);
+        assert_cluster_reports_eq(&noop, &ls, &format!("{label}: noop vs lockstep"));
+        assert_cluster_reports_eq(&noop, &ev, &format!("{label}: noop vs event"));
+        // nothing elastic may have happened
+        let e = &noop.elastic;
+        assert_eq!(
+            (e.crashes, e.joins, e.leaves, e.autoscale_grows, e.autoscale_shrinks),
+            (0, 0, 0, 0, 0),
+            "{label}: elastic counters on an all-disabled run"
+        );
+        assert_eq!(e.evac_requeued + e.evac_restarted, 0, "{label}: evacuations");
+        assert!(noop.replicas.iter().all(|r| r.alive), "{label}: every replica alive");
+        assert_eq!(noop.alive_replicas(), spec.len(), "{label}: fleet width");
+    }
+}

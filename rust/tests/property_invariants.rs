@@ -349,8 +349,12 @@ fn prop_trace_round_trip_fuzz() {
 /// engine").
 #[test]
 fn prop_event_heap_never_pops_out_of_order() {
-    let kinds =
-        [EventKind::Wake, EventKind::RescheduleBoundary, EventKind::Arrival];
+    let kinds = [
+        EventKind::Wake,
+        EventKind::Lifecycle,
+        EventKind::RescheduleBoundary,
+        EventKind::Arrival,
+    ];
     for seed in 0..CASES {
         let mut rng = Rng::new(12_000_000 + seed);
         let mut heap = EventHeap::new();
@@ -374,7 +378,7 @@ fn prop_event_heap_never_pops_out_of_order() {
                 // duplicates on purpose: ties must be handled, not lost
                 let e = Event {
                     time: rng.range_u64(0, 20),
-                    kind: kinds[rng.range_usize(0, 2)],
+                    kind: kinds[rng.range_usize(0, 3)],
                     replica: rng.range_usize(0, 4),
                     task: rng.range_u64(0, 6),
                 };
@@ -446,6 +450,124 @@ fn prop_idle_replicas_receive_zero_advancements() {
         // round-robin over 12 replicas with 5 tasks: exactly 7 idle
         let idle = report.replicas.iter().filter(|s| s.routed == 0).count();
         assert_eq!(idle, width - n_tasks, "seed {seed}");
+    }
+}
+
+/// The documented same-time ordering contract (DESIGN.md "Elastic
+/// fleets"): `Wake < Lifecycle < RescheduleBoundary < Arrival`. Nodes
+/// reach a boundary before anything decides there; a fleet change at
+/// `t` is visible to every same-time decision; arrivals route against
+/// the already-changed fleet. Pinned both on the enum rank and on the
+/// heap's actual pop order over every push permutation.
+#[test]
+fn prop_lifecycle_tie_break_order_contract() {
+    assert!(EventKind::Wake < EventKind::Lifecycle);
+    assert!(EventKind::Lifecycle < EventKind::RescheduleBoundary);
+    assert!(EventKind::RescheduleBoundary < EventKind::Arrival);
+
+    let expected = [
+        EventKind::Wake,
+        EventKind::Lifecycle,
+        EventKind::RescheduleBoundary,
+        EventKind::Arrival,
+    ];
+    // all 24 push orders of the four same-time kinds pop identically
+    for seed in 0..CASES {
+        let mut rng = Rng::new(13_000_000 + seed);
+        let mut kinds = expected;
+        for i in (1..kinds.len()).rev() {
+            kinds.swap(i, rng.range_usize(0, i));
+        }
+        let mut heap = EventHeap::new();
+        for kind in kinds {
+            heap.push(Event { time: 5, kind, replica: 1, task: 2 });
+        }
+        let mut popped = Vec::new();
+        while let Some(e) = heap.pop() {
+            popped.push(e.kind);
+        }
+        assert_eq!(popped, expected, "seed {seed}: same-time kind order");
+    }
+}
+
+/// Task conservation across arbitrary crash/join/leave sequences: every
+/// workload task ends the run in exactly one report — finished, shed,
+/// or still in flight on some replica (or the admission-rejected list)
+/// — never duplicated by an evacuation, never lost with a crashed
+/// replica. The fleet also never ends outside its configured bounds,
+/// and the counter identity `alive = start + joins + grows − crashes −
+/// leaves − shrinks` holds.
+#[test]
+fn prop_task_conservation_under_churn() {
+    use slice_serve::cluster::{DeviceProfile, LifecycleConfig, Replica};
+    use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+    use slice_serve::engine::sim::SimEngine;
+
+    let std_replica = |i: usize| {
+        Replica::new(
+            i,
+            Box::new(SlicePolicy::new(
+                LatencyModel::paper_calibrated(),
+                SliceConfig::default(),
+            )),
+            Box::new(SimEngine::paper_calibrated()),
+            DeviceProfile::standard(),
+        )
+    };
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(14_000_000 + seed);
+        let n_tasks = rng.range_usize(10, 40);
+        let rate = 1.0 + rng.range_u64(0, 30) as f64 / 10.0;
+        let mut lc = LifecycleConfig {
+            churn_rate: 0.05 + rng.range_u64(0, 20) as f64 / 100.0,
+            seed,
+            min_replicas: 1,
+            max_replicas: 8,
+            ..LifecycleConfig::default()
+        };
+        lc.autoscaler.enabled = rng.chance(0.3);
+        let width = 4;
+        let workload = slice_serve::workload::WorkloadSpec::paper_mix(
+            rate, 0.7, n_tasks, seed,
+        )
+        .generate();
+        let report = Orchestrator::new(
+            RoutingStrategy::SloAware,
+            (0..width).map(std_replica).collect(),
+        )
+        .with_lifecycle(lc.clone(), Box::new(std_replica))
+        .run(workload, secs(60.0))
+        .unwrap();
+
+        // conservation: every task exactly once, ids 0..n
+        let tasks = report.tasks();
+        assert_eq!(tasks.len(), n_tasks, "seed {seed}: task count");
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.id, i as u64, "seed {seed}: duplicated or lost task");
+        }
+        // dead replicas hold no unfinished work (everything evacuated)
+        for r in &report.replicas {
+            if !r.alive {
+                assert!(
+                    r.report.tasks.iter().all(|t| t.is_finished()),
+                    "seed {seed}: replica {} died holding live tasks",
+                    r.replica
+                );
+            }
+        }
+        // fleet bounds + counter identity
+        let e = &report.elastic;
+        let alive = report.alive_replicas() as i64;
+        assert!(
+            (lc.min_replicas as i64..=lc.max_replicas as i64).contains(&alive),
+            "seed {seed}: alive {alive} outside bounds"
+        );
+        assert_eq!(
+            alive,
+            width as i64 + (e.joins + e.autoscale_grows) as i64
+                - (e.crashes + e.leaves + e.autoscale_shrinks) as i64,
+            "seed {seed}: alive-count identity"
+        );
     }
 }
 

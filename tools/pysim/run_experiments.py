@@ -38,11 +38,20 @@ Stages:
      (b) the replica-width scale sweep (round-robin homogeneous fleets,
      event engine at every size, lockstep reference at the smallest) —
      the BENCH_6.json input.
+ 11. elastic fleets (PR 7) — (a) unit mirrors of the Rust lifecycle/
+     autoscaler/health suites; (b) all-disabled elastic machinery
+     bit-exact with static fleets across the stage-10 shapes; (c) task
+     conservation + determinism under explicit crashes, seeded churn
+     and health-based routing; (d) the failure sweep (static / crash /
+     autoscale / autoscale+crash at each size) with the acceptance
+     gate: autoscaling strictly reduces shed at the largest size — the
+     BENCH_7.json input.
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
        [--scale-sizes 1000,4000,10000]
        [--replica-widths 16,64,256] [--replica-sizes 10000,100000]
        [--bench6-out BENCH_6.json] [--stage10]
+       [--elastic-sizes 1000,10000] [--bench7-out BENCH_7.json] [--stage11]
 """
 
 import json
@@ -54,8 +63,10 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent))
 
 from slice_sim import (  # noqa: E402
-    CYCLE_CAP, AdmissionConfig, DecodeMask, DeviceProfile, IncrementalPeriod,
-    LatencyModel, MemoryConfig, OrcaPolicy, Rng, Server, SlicePolicy,
+    CRASH, CYCLE_CAP, AdmissionConfig, Autoscaler, AutoscalerConfig,
+    DecodeMask, DeviceProfile, HealthConfig, HealthTracker, IncrementalPeriod,
+    LatencyModel, LifecycleConfig, LifecycleEvent, MemoryConfig, OrcaPolicy,
+    Orchestrator, Replica, Rng, Router, Server, SlicePolicy, _default_policy,
     attainment, edge_mixed, latency_summary, paper_mix, period_eq7,
     run_cluster, run_fleet, select_tasks, select_tasks_fast, secs,
 )
@@ -565,14 +576,13 @@ def replica_scale_cell(engine, replicas, n, seed=42):
     }
 
 
-def event_engine_stage(replica_widths, replica_sizes):
-    print("stage 10: event-driven cluster engine (PR 6) — bit-exactness, "
-          "replica-width scale sweep")
-
+def _engine_shapes():
+    """The nine cluster shapes both the stage-10 engine-equivalence and
+    the stage-11 elastic-noop checks sweep."""
     uniform4 = lambda: [DeviceProfile.standard() for _ in range(4)]  # noqa: E731
     single = lambda: [DeviceProfile.standard()]  # noqa: E731
     mem48 = MemoryConfig(kv_capacity=HIGH_CAPACITY_MB * 1024 * 1024)
-    pairs = [
+    return [
         ("uniform-4 round-robin", uniform4, "round-robin", 4.0, 160, 42, {}),
         ("uniform-4 least-loaded", uniform4, "least-loaded", 4.0, 160, 42, {}),
         ("uniform-4 slo-aware", uniform4, "slo-aware", 4.0, 160, 42, {}),
@@ -589,7 +599,13 @@ def event_engine_stage(replica_widths, replica_sizes):
          {"admission": AdmissionConfig(enabled=True, mode="headroom"),
           "migration": True, "migrate_running": True, "memory": mem48}),
     ]
-    for label, mk, strat, rate, n, seed, kw in pairs:
+
+
+def event_engine_stage(replica_widths, replica_sizes):
+    print("stage 10: event-driven cluster engine (PR 6) — bit-exactness, "
+          "replica-width scale sweep")
+
+    for label, mk, strat, rate, n, seed, kw in _engine_shapes():
         _engine_pair(label, mk, strat, rate, n, seed, **kw)
 
     sweep = []
@@ -616,6 +632,244 @@ def event_engine_stage(replica_widths, replica_sizes):
     return sweep
 
 
+# -------------------------------------------------- stage 11: elastic --
+
+
+ELASTIC_WINDOW_S = 120.0
+ELASTIC_DRAIN_S = 60.0
+AUTOSCALE_MAX = 64
+ELASTIC_VARIANTS = ("static", "crash", "autoscale", "autoscale+crash")
+
+
+def _elastic_lifecycle(variant):
+    """Mirrors experiments::elastic_sweep::lifecycle_for."""
+    assert variant in ELASTIC_VARIANTS, f"unknown elastic variant {variant!r}"
+    lc = LifecycleConfig()
+    if variant in ("crash", "autoscale+crash"):
+        lc.events = [LifecycleEvent(secs(40.0), CRASH, 0),
+                     LifecycleEvent(secs(80.0), CRASH, 1)]
+    if variant in ("autoscale", "autoscale+crash"):
+        lc.autoscaler.enabled = True
+        lc.min_replicas = 4
+        lc.max_replicas = AUTOSCALE_MAX
+    return lc
+
+
+def elastic_cell(variant, n, seed=42):
+    """Mirrors experiments::elastic_sweep::run_cell: the scale sweep's
+    edge-mixed overload shape (slo-aware + headroom admission +
+    migration, event engine) with the variant's lifecycle attached."""
+    rate = n / ELASTIC_WINDOW_S
+    wl = paper_mix(rate, 0.7, n, seed)
+    t0 = time.perf_counter()
+    tasks, _per, router = run_fleet(
+        "slo-aware", edge_mixed(), wl, secs(ELASTIC_DRAIN_S),
+        admission=AdmissionConfig(enabled=True, mode="headroom"),
+        migration=True, engine="event", lifecycle=_elastic_lifecycle(variant))
+    wall = max(time.perf_counter() - t0, 1e-9)
+    a = attainment(tasks)
+    shed = len(router.rejected) + sum(r.server.shed for r in router.replicas)
+    cell = {
+        "variant": variant, "n_tasks": n, "rate": round(rate, 4),
+        "replicas_start": 4, "replicas_final": router.alive_count(),
+        "finished": a["n_finished"], "shed": shed,
+        "shed_rate": round(shed / n, 4), "slo": a["slo"],
+        "crashes": router.crashes, "joins": router.joins,
+        "leaves": router.leaves, "grows": router.autoscale_grows,
+        "shrinks": router.autoscale_shrinks,
+        "evac_requeued": router.evac_requeued,
+        "evac_restarted": router.evac_restarted,
+        "evac_recompute_us": router.evac_recompute_us,
+        "wall_s": round(wall, 2),
+    }
+    return cell, tasks
+
+
+def _run_event(mk_profiles, strategy, wl, drain, admission=None,
+               migration=False, migrate_running=False, memory=None,
+               elastic=False):
+    """One event-engine run. elastic=True force-attaches the
+    *all-disabled* elastic machinery (live alive/degraded masks, no
+    events, no autoscaler, no health) — run_fleet only attaches it when
+    a feature is on, but the noop check needs the elastic decision
+    paths exercised with everything off."""
+    import copy
+
+    profiles = mk_profiles()
+    if (memory is not None and memory.kv_capacity is not None
+            and all(p.kv_capacity is None for p in profiles)):
+        profiles = [copy.copy(p) for p in profiles]
+        for p in profiles:
+            p.kv_capacity = int(memory.kv_capacity * p.kv_fraction)
+    mk = lambda p: _default_policy(p, memory)  # noqa: E731
+    fleet = [Replica(i, mk, p, memory=memory) for i, p in enumerate(profiles)]
+    router = Router(strategy, fleet, admission=admission,
+                    migration=migration, migrate_running=migrate_running,
+                    memory=memory or MemoryConfig())
+    if elastic:
+        factory = lambda rid: Replica(  # noqa: E731
+            rid, mk, copy.copy(profiles[0]), memory=memory)
+        orch = Orchestrator(router, lifecycle=LifecycleConfig(),
+                            factory=factory)
+    else:
+        orch = Orchestrator(router)
+    tasks, per = orch.run(wl, drain)
+    return tasks, per, router
+
+
+def _elastic_noop_pair(label, mk_profiles, strategy, rate, n, seed,
+                       admission=None, migration=False,
+                       migrate_running=False, memory=None, drain_s=120.0):
+    """All-disabled elastic must be bit-exact with the static event
+    engine (the Rust equivalence.rs elastic-noop contract)."""
+    runs = []
+    for elastic in (False, True):
+        wl = paper_mix(rate, 0.7, n, seed)
+        runs.append(_run_event(
+            mk_profiles, strategy, wl, secs(drain_s), admission=admission,
+            migration=migration, migrate_running=migrate_running,
+            memory=memory, elastic=elastic))
+    (ta, pa, ra), (tb, pb, rb) = runs
+    untouched = (rb.crashes + rb.joins + rb.leaves + rb.autoscale_grows
+                 + rb.autoscale_shrinks + rb.evac_requeued
+                 + rb.evac_restarted) == 0
+    ok = (pa == pb and len(ta) == len(tb)
+          and all(x.id == y.id and x.first_token == y.first_token
+                  and x.completion == y.completion
+                  and x.tokens_generated == y.tokens_generated
+                  for x, y in zip(ta, tb))
+          and ra.migrations == rb.migrations
+          and ra.handoff_bytes == rb.handoff_bytes
+          and [t.id for t in ra.rejected] == [t.id for t in rb.rejected]
+          and untouched)
+    check(ok, f"elastic noop == static event: {label} (seed {seed})")
+
+
+def _elastic_conservation(tasks, n, label):
+    ids = sorted(t.id for t in tasks)
+    check(ids == list(range(n)), f"task conservation: {label}")
+
+
+def elastic_stage(elastic_sizes):
+    print("stage 11: elastic fleets (PR 7) — lifecycle/autoscaler/health "
+          "mirrors, elastic-noop equivalence, failure sweep")
+
+    # -- unit mirrors of the Rust lifecycle/autoscaler/health suites ---
+    lc = LifecycleConfig(churn_rate=0.5, seed=9)
+    a = lc.schedule(secs(120.0))
+    b = lc.schedule(secs(120.0))
+    check(a == b and len(a) > 0
+          and all(x.time <= y.time for x, y in zip(a, a[1:]))
+          and all(e.time < secs(120.0) for e in a),
+          "churn schedule deterministic, sorted, horizon-bounded")
+    c = LifecycleConfig(churn_rate=0.5, seed=10).schedule(secs(120.0))
+    check(a != c, "different churn seed, different schedule")
+
+    scaler = Autoscaler(AutoscalerConfig(True, 2, 3, 1_000), 1, 8)
+    d = [scaler.observe(0, True, None, 4), scaler.observe(10, True, None, 4),
+         scaler.observe(20, True, None, 5), scaler.observe(30, True, None, 5),
+         scaler.observe(1_200, True, None, 5)]
+    check(d == [None, "grow", None, None, "grow"],
+          "autoscaler grows on sustained deficit, holds through cooldown")
+    scaler = Autoscaler(AutoscalerConfig(True, 2, 3, 1_000), 1, 8)
+    s = [scaler.observe(t * 10, False, 3, 4) for t in range(3)]
+    check(s == [None, None, ("shrink", 3)],
+          "autoscaler shrinks the idle replica after the streak")
+    scaler = Autoscaler(AutoscalerConfig(True, 2, 3, 1_000), 2, 4)
+    check(scaler.observe(0, True, None, 4) is None
+          and scaler.observe(10, True, None, 4) is None,
+          "autoscaler respects the fleet ceiling")
+
+    h = HealthTracker(HealthConfig(True, 0.5, 1_000, 500), 2)
+    h.observe(0, 2_000)
+    degraded_once = h.degraded(0)
+    h.observe(0, 2_000)
+    still = h.degraded(0) and not h.degraded(1)
+    h.observe(0, 0)
+    h.observe(0, 0)
+    check(degraded_once and still and not h.degraded(0),
+          "health EWMA degrades under lag and heals on recovery")
+    h = HealthTracker(HealthConfig(True, 0.5, 1_000, 500), 1)
+    h.observe(0, 1)
+    check(abs(h.scores[0] - 250.5) < 1e-9,
+          "failure penalty applies only while overrunning")
+
+    # -- all-disabled elastic is bit-exact with static fleets ----------
+    for label, mk, strat, rate, n, seed, kw in _engine_shapes():
+        _elastic_noop_pair(label, mk, strat, rate, n, seed, **kw)
+
+    # -- lifecycle semantics on small cells ----------------------------
+    cell, tasks = elastic_cell("static", 60)
+    check(cell["replicas_final"] == 4
+          and cell["crashes"] + cell["joins"] + cell["leaves"]
+          + cell["grows"] + cell["shrinks"] == 0,
+          "static cell runs without elastic machinery")
+    _elastic_conservation(tasks, 60, "static cell")
+    cell, tasks = elastic_cell("crash", 60)
+    check(cell["crashes"] == 2 and cell["replicas_final"] == 2
+          and cell["grows"] == 0 and cell["shrinks"] == 0,
+          "both explicit crashes fire")
+    _elastic_conservation(tasks, 60, "crash cell")
+    a1, t1 = elastic_cell("autoscale", 120)
+    a2, _ = elastic_cell("autoscale", 120)
+    same = ({k: v for k, v in a1.items() if k != "wall_s"}
+            == {k: v for k, v in a2.items() if k != "wall_s"})
+    check(4 <= a1["replicas_final"] <= AUTOSCALE_MAX and same,
+          "autoscale cell respects bounds and is deterministic")
+    _elastic_conservation(t1, 120, "autoscale cell")
+
+    # -- conservation + determinism under seeded churn -----------------
+    for seed in (1, 2, 3):
+        lc = LifecycleConfig(churn_rate=1.0, seed=seed, min_replicas=2,
+                             max_replicas=8)
+        wl = paper_mix(4.0, 0.7, 240, 42)
+        tasks, _per, router = run_fleet(
+            "slo-aware", edge_mixed(), wl, secs(60.0),
+            admission=AdmissionConfig(enabled=True, mode="headroom"),
+            migration=True, engine="event", lifecycle=lc)
+        _elastic_conservation(tasks, 240, f"churn seed {seed}")
+        check(router.crashes + router.joins + router.leaves > 0,
+              f"churn seed {seed} fired lifecycle events")
+
+    # -- health-based routing smoke: conserved and deterministic -------
+    lc = LifecycleConfig()
+    lc.health.enabled = True
+    lc.health.lag_threshold = 100_000  # degrade readily under overload
+    outs = []
+    for _ in range(2):
+        wl = paper_mix(8.0, 0.7, 480, 42)
+        tasks, _per, router = run_fleet(
+            "slo-aware", edge_mixed(), wl, secs(60.0), migration=True,
+            engine="event", lifecycle=lc)
+        _elastic_conservation(tasks, 480, "health-routing cell")
+        outs.append((attainment(tasks)["slo"], len(router.rejected)))
+    check(outs[0] == outs[1], "health-based routing is deterministic")
+
+    # -- the failure sweep (BENCH_7 rows) ------------------------------
+    rows = []
+    for n in elastic_sizes:
+        for variant in ELASTIC_VARIANTS:
+            cell, _tasks = elastic_cell(variant, n)
+            rows.append(cell)
+            print(f"  {variant:<15} n={n:>6}: wall={cell['wall_s']:7.2f}s "
+                  f"alive={cell['replicas_final']:>2} "
+                  f"finished={cell['finished']:>6} shed={cell['shed']:>6} "
+                  f"slo={cell['slo']:.4f} crash={cell['crashes']} "
+                  f"grow={cell['grows']} shrink={cell['shrinks']} "
+                  f"evac={cell['evac_requeued']}+{cell['evac_restarted']}")
+    n = elastic_sizes[-1]
+    st = next(c for c in rows
+              if c["n_tasks"] == n and c["variant"] == "static")
+    au = next(c for c in rows
+              if c["n_tasks"] == n and c["variant"] == "autoscale")
+    print(f"  shed at {n} tasks: static {st['shed']} vs "
+          f"autoscaled {au['shed']}")
+    check(au["shed"] < st["shed"],
+          f"autoscaling strictly reduces shed at {n} tasks")
+    print()
+    return rows
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
@@ -635,12 +889,25 @@ def main():
     bench6_out = None
     if "--bench6-out" in sys.argv:
         bench6_out = sys.argv[sys.argv.index("--bench6-out") + 1]
+    elastic_sizes = [1000, 10_000]
+    if "--elastic-sizes" in sys.argv:
+        raw = sys.argv[sys.argv.index("--elastic-sizes") + 1]
+        elastic_sizes = [int(v) for v in raw.split(",") if v]
+    bench7_out = None
+    if "--bench7-out" in sys.argv:
+        bench7_out = sys.argv[sys.argv.index("--bench7-out") + 1]
 
     if "--stage10" in sys.argv:
         # iterate on the event engine without re-running stages 1-9
         sweep = event_engine_stage(replica_widths, replica_sizes)
         if bench6_out:
             _write_bench6(bench6_out, sweep)
+        return
+    if "--stage11" in sys.argv:
+        # iterate on the elastic machinery without re-running stages 1-10
+        rows = elastic_stage(elastic_sizes)
+        if bench7_out:
+            _write_bench7(bench7_out, rows)
         return
 
     self_check()
@@ -695,16 +962,19 @@ def main():
     memory = memory_sweep()
     hot_path = hot_path_stage(scale_sizes)
     replica_sweep = event_engine_stage(replica_widths, replica_sizes)
+    elastic_rows = elastic_stage(elastic_sizes)
 
     doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
            "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells,
            "memory_sweep": memory, "scheduler_hot_path": hot_path,
-           "replica_sweep": replica_sweep}
+           "replica_sweep": replica_sweep, "elastic_sweep": elastic_rows}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")
     if bench6_out:
         _write_bench6(bench6_out, replica_sweep)
+    if bench7_out:
+        _write_bench7(bench7_out, elastic_rows)
 
 
 def _write_bench6(path, sweep):
@@ -721,6 +991,28 @@ def _write_bench6(path, sweep):
                  "smallest size only (the lockstep engine is the in-tree "
                  "equivalence reference, not the scale path)"),
         "replica_sweep": sweep,
+    }
+    Path(path).write_text(json.dumps(doc, indent=2))
+    print(f"wrote {path}")
+
+
+def _write_bench7(path, rows):
+    doc = {
+        "schema": "slice-serve-bench/v7",
+        "source": ("tools/pysim/run_experiments.py stage 11 — the bit-exact "
+                   "Python mirror (no Rust toolchain in the build env); "
+                   "reproduce natively with `slice-serve experiment elastic`"),
+        "workload": ("paper_mix, rate = n_tasks/120 s, RT:NRT 7:3, seed 42; "
+                     "edge-mixed fleet, SLICE policy, slo-aware routing + "
+                     "headroom admission + overload migration, event engine, "
+                     "60 s drain"),
+        "variants": ("static = PR 6 baseline; crash = replicas 0/1 die at "
+                     "40 s/80 s; autoscale = grow on sustained admission "
+                     "deficit up to 64 replicas, shrink on sustained idle "
+                     "(never below the starting 4); autoscale+crash = both"),
+        "gate": ("at the largest size the autoscale variant must shed "
+                 "strictly fewer tasks than static (asserted by stage 11)"),
+        "elastic_sweep": rows,
     }
     Path(path).write_text(json.dumps(doc, indent=2))
     print(f"wrote {path}")

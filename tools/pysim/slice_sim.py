@@ -224,6 +224,9 @@ class Task:
     swap_outs: int = 0
     swap_ins: int = 0
     migrated_away: bool = False
+    # set when the server shed the task mid-run (footprint can never
+    # fit the device KV capacity): terminal, unserved, SLO-violated
+    shed: bool = False
 
     def __post_init__(self) -> None:
         if self.slo is None:
@@ -262,7 +265,7 @@ class Task:
         return None if self.completion is None else self.completion - self.arrival
 
     def slo_met(self) -> bool:
-        if not self.is_finished():
+        if self.shed or not self.is_finished():
             return False
         if self.slo.deadline is not None:
             c = self.completion_time()
@@ -766,6 +769,7 @@ class Server:
         self.steps = 0
         self.decode_steps = 0
         self.prefill_steps = 0
+        self.shed = 0
         # delivered-but-unfinished count (mirrors server.rs `live`):
         # the O(1) backing for next_event_time
         self.live_count = 0
@@ -849,12 +853,31 @@ class Server:
         self.pool[victim].swap_outs += 1
         return cost
 
-    def _prepare_prefill(self, tid: int) -> int:
+    def _shed_task(self, tid: int, now: int) -> None:
+        """Mirrors server.rs shed_task: terminal, unserved, counted an
+        SLO violation; the policy sees a completion so capacity frees."""
+        t = self.pool[tid]
+        assert not t.is_finished() and not t.migrated_away
+        t.shed = True
+        t.state = FINISHED
+        t.residency = RES_NONE
+        t.pending_restore = 0
+        self.live_count -= 1
+        self.kv.release(tid)
+        self.shed += 1
+        self.policy.on_completion(self.pool, [tid], now)
+
+    def _prepare_prefill(self, tid: int) -> Optional[int]:
+        """Returns the eviction cost, or None when the prompt alone
+        exceeds the device capacity and the task was shed (mirrors
+        server.rs prepare_prefill)."""
         if not self._memory_constrained():
             return 0
         cap = self.kv.capacity
         need = self.kv.bytes_for(self.pool[tid].prompt_len + 1)
-        assert need <= cap, "kv capacity below a single prompt footprint"
+        if need > cap:
+            self._shed_task(tid, self.clock)
+            return None
         cost = 0
         while self.kv.occupied + need > cap:
             c = self._evict_one([tid])
@@ -888,16 +911,26 @@ class Server:
                     t.swap_ins += 1
             return tids, cost
         cap = self.kv.capacity
-        kept: List[int] = []
-        need = 0
-        for tid in tids:
-            b = self.kv.bytes_for(self.pool[tid].seq_len() + 1)
-            if need + b <= cap:
-                need += b
-                kept.append(tid)
-            else:
+        # prefix of the batch whose post-step footprint fits; a head
+        # that fits nothing is shed and the scan restarted (mirrors
+        # server.rs prepare_decode's outgrown-the-device path)
+        kept = list(tids)
+        while True:
+            need = 0
+            keep_len = 0
+            for tid in kept:
+                b = self.kv.bytes_for(self.pool[tid].seq_len() + 1)
+                if need + b <= cap:
+                    need += b
+                    keep_len += 1
+                else:
+                    break
+            if keep_len > 0:
+                del kept[keep_len:]
                 break
-        assert kept, "kv capacity below a single decode slot"
+            if not kept:
+                return kept, 0
+            self._shed_task(kept.pop(0), self.clock)
         cost = 0
         while self.kv.resident_outside(kept) + need > cap:
             c = self._evict_one(kept)
@@ -932,6 +965,8 @@ class Server:
         kind, payload = step
         if kind == "prefill":
             mem_cost = self._prepare_prefill(payload)
+            if mem_cost is None:
+                return  # shed: no engine pass, no step counted
             if mem_cost > 0:
                 self.clock += mem_cost
             self.steps += 1
@@ -948,6 +983,8 @@ class Server:
         else:
             assert payload, "empty decode batch"
             payload, mem_cost = self._prepare_decode(payload)
+            if not payload:
+                return  # every member shed: nothing to run, re-decide
             if mem_cost > 0:
                 self.clock += mem_cost
             self.steps += 1
@@ -1044,6 +1081,179 @@ class AdmissionConfig:
         return self.rt_queue_bound if task.is_real_time() else self.nrt_queue_bound
 
 
+# ------------------------------------------------------ elastic fleets --
+
+
+JOIN, LEAVE, CRASH = "join", "leave", "crash"
+
+
+@dataclass
+class LifecycleEvent:
+    """Mirrors cluster/lifecycle.rs LifecycleEvent."""
+
+    time: int
+    action: str  # JOIN | LEAVE | CRASH
+    target: Optional[int] = None
+
+
+@dataclass
+class AutoscalerConfig:
+    """Mirrors cluster/lifecycle.rs AutoscalerConfig (defaults included)."""
+
+    enabled: bool = False
+    deficit_streak: int = 2
+    idle_streak: int = 64
+    cooldown: int = 500_000  # 0.5 s
+
+    def copy(self) -> "AutoscalerConfig":
+        return AutoscalerConfig(self.enabled, self.deficit_streak,
+                                self.idle_streak, self.cooldown)
+
+
+@dataclass
+class HealthConfig:
+    """Mirrors cluster/lifecycle.rs HealthConfig (defaults included)."""
+
+    enabled: bool = False
+    alpha: float = 0.2
+    lag_threshold: int = 500_000  # 0.5 s of cycle overrun
+    failure_penalty: int = 250_000  # 0.25 s per overloaded observation
+
+
+@dataclass
+class LifecycleConfig:
+    """Mirrors cluster/lifecycle.rs LifecycleConfig: explicit events
+    merged with a seeded Poisson churn stream, fleet-size bounds, and
+    the autoscaler/health sub-configs."""
+
+    events: List[LifecycleEvent] = field(default_factory=list)
+    churn_rate: float = 0.0  # events/s (0 = off)
+    seed: int = 1
+    min_replicas: int = 1
+    max_replicas: int = 64
+    autoscaler: AutoscalerConfig = field(default_factory=AutoscalerConfig)
+    health: HealthConfig = field(default_factory=HealthConfig)
+
+    def has_events(self) -> bool:
+        return bool(self.events) or self.churn_rate > 0.0
+
+    def any_enabled(self) -> bool:
+        return (self.has_events() or self.autoscaler.enabled
+                or self.health.enabled)
+
+    def schedule(self, horizon: int) -> List[LifecycleEvent]:
+        """Explicit events merged with the churn stream, sorted by time
+        (stable — explicit events win ties)."""
+        out = [e for e in self.events if e.time < horizon]
+        out.sort(key=lambda e: e.time)
+        if self.churn_rate > 0.0:
+            rng = Rng(self.seed)
+            t = 0
+            while True:
+                dt = rng.exponential(self.churn_rate)  # seconds
+                # Rust `(dt * 1e6) as Micros` truncates toward zero
+                t = min(t + int(dt * 1e6), MASK64)
+                if t >= horizon:
+                    break
+                # 40% crash / 40% join / 20% graceful leave
+                u = rng.f64()
+                if u < 0.4:
+                    action = CRASH
+                elif u < 0.8:
+                    action = JOIN
+                else:
+                    action = LEAVE
+                out.append(LifecycleEvent(t, action, None))
+            out.sort(key=lambda e: e.time)
+        return out
+
+    def target_rng(self) -> Rng:
+        """Distinct stream for untargeted exit picks — adding an
+        explicit event never shifts which replicas churn picks."""
+        return Rng((self.seed * 0x9E3779B97F4A7C15 + 0x243F6A8885A308D3)
+                   & MASK64)
+
+
+class Autoscaler:
+    """Mirrors cluster/autoscaler.rs: streak-and-cooldown scaler over
+    deficit/idle observations. observe() returns None (hold), "grow",
+    or ("shrink", victim)."""
+
+    def __init__(self, cfg: AutoscalerConfig, min_replicas: int,
+                 max_replicas: int) -> None:
+        assert min_replicas >= 1
+        assert min_replicas <= max_replicas
+        self.cfg = cfg
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.deficit_run = 0
+        self.idle_run = 0
+        self.ready_at = 0
+        self.grows = 0
+        self.shrinks = 0
+
+    def observe(self, now: int, deficit: bool,
+                idle_replica: Optional[int], alive: int):
+        if deficit:
+            self.deficit_run += 1
+            self.idle_run = 0
+        elif idle_replica is not None:
+            self.idle_run += 1
+            self.deficit_run = 0
+        else:
+            self.deficit_run = 0
+            self.idle_run = 0
+        if now < self.ready_at:
+            return None
+        if (self.deficit_run >= self.cfg.deficit_streak
+                and alive < self.max_replicas):
+            self.deficit_run = 0
+            self.idle_run = 0
+            self.ready_at = now + self.cfg.cooldown
+            self.grows += 1
+            return "grow"
+        if (self.idle_run >= self.cfg.idle_streak
+                and alive > self.min_replicas
+                and idle_replica is not None):
+            self.deficit_run = 0
+            self.idle_run = 0
+            self.ready_at = now + self.cfg.cooldown
+            self.shrinks += 1
+            return ("shrink", idle_replica)
+        return None
+
+
+class HealthTracker:
+    """Mirrors cluster/health.rs: EWMA of per-replica boundary lag with
+    a flat failure penalty while the replica is overrunning.
+
+        sample = lag + penalty * 1[lag > 0]
+        score <- (1 - alpha) * score + alpha * sample
+        degraded <=> score > lag_threshold
+    """
+
+    def __init__(self, cfg: HealthConfig, n: int) -> None:
+        assert 0.0 < cfg.alpha <= 1.0
+        self.cfg = cfg
+        self.scores = [0.0] * n
+
+    def ensure(self, n: int) -> None:
+        if len(self.scores) < n:
+            self.scores.extend([0.0] * (n - len(self.scores)))
+
+    def observe(self, i: int, lag: int) -> None:
+        sample = float(lag + self.cfg.failure_penalty) if lag > 0 else 0.0
+        a = self.cfg.alpha
+        self.scores[i] = (1.0 - a) * self.scores[i] + a * sample
+
+    def degraded(self, i: int) -> bool:
+        return self.scores[i] > float(self.cfg.lag_threshold)
+
+    def fill_mask(self, mask: List[bool]) -> None:
+        for i in range(len(mask)):
+            mask[i] = self.degraded(i)
+
+
 class Replica:
     """Mirrors cluster/replica.rs: staged tasks keep global ids; local
     ids are assigned at push time (delivery order), so migration keeps
@@ -1100,6 +1310,54 @@ class Replica:
         self.routed -= len(out)
         self.migrated_out += len(out)
         return out
+
+    def withdraw_all(self) -> List[Task]:
+        """Mirrors Replica::withdraw_all: every queued (staged or
+        delivered-but-waiting) task leaves, migration history ignored —
+        evacuation of a dead replica must not strand anything."""
+        self.recall_pending()
+        out = self.staged
+        self.staged = []
+        self.routed -= len(out)
+        self.migrated_out += len(out)
+        return out
+
+    def evacuees(self):
+        """Manifest of every in-service task as (global id, quota,
+        cached tokens, prefilled) in delivery order (= pool order)."""
+        out = []
+        for t in self.server.pool:
+            if t.is_finished() or t.migrated_away:
+                continue
+            out.append((self.global_ids[t.id], t.slo.tokens_per_cycle(),
+                        t.seq_len(), t.prefill_end is not None))
+        return out
+
+    def extract_evacuee(self, gid: int) -> Task:
+        """Extract one in-service task for evacuation; the caller prices
+        the restore (recompute vs. handoff) once the destination is
+        known. Unprefilled evacuees revert to fresh waiting arrivals."""
+        local = self.global_ids.index(gid)
+        task = self.server.extract_task(local, self.server.now())
+        task.id = gid
+        if task.prefill_end is not None:
+            task.state = PAUSED
+            task.residency = RES_SWAPPED
+        else:
+            task.state = WAITING
+            task.residency = RES_NONE
+        task.pending_restore = 0
+        self.routed -= 1
+        self.migrated_out += 1
+        return task
+
+    def cycle_lag(self) -> int:
+        """How far the Eq. 7 period overruns the cycle cap (0 if it
+        fits) — the health tracker's boundary-lag sample."""
+        vs = self.demand_quotas()
+        vs.sort(reverse=True)
+        return max(0, period_eq7(vs, self.profile.latency)
+                   - self.profile.cycle_cap)
 
     def running_candidates(self, migrated_before):
         out = []
@@ -1220,9 +1478,43 @@ class Router:
         self.handoff_bytes = 0
         self.handoff_us = 0
         self.rejected: List[Task] = []
+        # elastic state (mirrors cluster/controller.rs): an *empty*
+        # alive mask is the static fleet — every index alive, the fast
+        # path. The event engine fills it when any elastic feature is on.
+        self.alive: List[bool] = []
+        self.degraded: List[bool] = []
+        self.crashes = 0
+        self.joins = 0
+        self.leaves = 0
+        self.evac_requeued = 0
+        self.evac_restarted = 0
+        self.evac_recompute_us = 0
+        self.autoscale_grows = 0
+        self.autoscale_shrinks = 0
+
+    def is_alive(self, i: int) -> bool:
+        return self.alive[i] if i < len(self.alive) else True
+
+    def is_degraded(self, i: int) -> bool:
+        return self.degraded[i] if i < len(self.degraded) else False
+
+    def placeable(self, i: int) -> bool:
+        return self.is_alive(i) and not self.is_degraded(i)
+
+    def alive_count(self) -> int:
+        return sum(self.alive) if self.alive else len(self.replicas)
 
     def decide(self, task: Task) -> Optional[int]:
         n = len(self.replicas)
+        # eligibility (alive ∧ ¬degraded) only exists under lifecycle
+        # events — static fleets skip this block entirely
+        elig = None
+        if self.alive:
+            elig = [self.placeable(i) for i in range(n)]
+            if not any(elig):
+                # every alive replica is degraded: relax to alive-only
+                # rather than shedding the whole arrival stream
+                elig = [self.is_alive(i) for i in range(n)]
         headrooms = None
         if self.admission.enabled:
             if self.admission.mode == "headroom":
@@ -1238,6 +1530,10 @@ class Router:
                               for r in self.replicas]
         else:
             admissible = [True] * n
+        if elig is not None:
+            # open(i) = elig(i) ∧ admissible(i) — the admission mask is
+            # still computed over *all* replicas (headrooms included)
+            admissible = [a and e for a, e in zip(admissible, elig)]
         if not any(admissible):
             return None
         if self.strategy == "round-robin":
@@ -1263,16 +1559,22 @@ class Router:
         if not self.migration or len(self.replicas) < 2:
             return
         for src in range(len(self.replicas)):
-            if not self.replicas[src].overloaded():
+            if not self.is_alive(src) or not self.replicas[src].overloaded():
                 continue
-            if not any(r.id != src and not r.overloaded() for r in self.replicas):
+            # eligible-peer check *before* withdrawing: with a churning
+            # fleet the only peers may be dead or degraded, and an offer
+            # with nowhere to go must never leave the queue
+            if not any(r.id != src and self.placeable(r.id)
+                       and not r.overloaded() for r in self.replicas):
                 continue
             for task in self.replicas[src].withdraw_unmigrated(self.migrated):
                 quota = task.slo.tokens_per_cycle()
                 dst = self.best_by_headroom(
-                    quota, lambda r: r.id != src and not r.overloaded())
+                    quota, lambda r: (r.id != src and self.placeable(r.id)
+                                      and not r.overloaded()))
                 if dst is None:
-                    dst = self.best_by_headroom(quota, lambda r: r.id != src)
+                    dst = self.best_by_headroom(
+                        quota, lambda r: r.id != src and self.placeable(r.id))
                 self.migrated.add(task.id)
                 self.migrations += 1
                 self.replicas[dst].receive_migrated(task)
@@ -1281,14 +1583,15 @@ class Router:
         if not self.migration or not self.migrate_running or len(self.replicas) < 2:
             return
         for src in range(len(self.replicas)):
-            if not self.replicas[src].overloaded():
+            if not self.is_alive(src) or not self.replicas[src].overloaded():
                 continue
             for _u, gid, quota, tokens in \
                     self.replicas[src].running_candidates(self.migrated):
                 if not self.replicas[src].overloaded():
                     break
                 dst = self.best_by_headroom(
-                    quota, lambda r: r.id != src and not r.overloaded())
+                    quota, lambda r: (r.id != src and self.placeable(r.id)
+                                      and not r.overloaded()))
                 if dst is None:
                     break
                 fee = self.memory.handoff_cost(tokens)
@@ -1301,6 +1604,52 @@ class Router:
                 self.handoff_bytes += self.memory.bytes_for(tokens)
                 self.handoff_us += fee
                 self.replicas[dst].receive_migrated(task)
+
+    def evacuate(self, src: int, crash: bool) -> None:
+        """Mirrors Controller::evacuate. The caller has already marked
+        `src` dead, so every placement below naturally excludes it.
+        Queued tasks are re-placed for free; in-service tasks carry a
+        restore fee (full prefill *recompute* on the destination's own
+        latency curve after a crash, PR 4 KV handoff after a leave).
+        Bypasses the exactly-once overload-migration set."""
+        for task in self.replicas[src].withdraw_all():
+            quota = task.slo.tokens_per_cycle()
+            dst = self.best_by_headroom(
+                quota, lambda r: (r.id != src and self.placeable(r.id)
+                                  and not r.overloaded()))
+            if dst is None:
+                # note the relaxed fallback: any *alive* peer, degraded
+                # or overloaded — losing work would be worse
+                dst = self.best_by_headroom(
+                    quota, lambda r: r.id != src and self.is_alive(r.id))
+            if dst is None:
+                self.rejected.append(task)  # no alive peer: shed
+                continue
+            self.evac_requeued += 1
+            self.replicas[dst].receive_migrated(task)
+        for gid, quota, tokens, prefilled in self.replicas[src].evacuees():
+            dst = self.best_by_headroom(
+                quota, lambda r: (r.id != src and self.placeable(r.id)
+                                  and not r.overloaded()))
+            if dst is None:
+                dst = self.best_by_headroom(
+                    quota, lambda r: r.id != src and self.is_alive(r.id))
+            if dst is None:
+                continue  # stays on the dead replica; reported as a miss
+            task = self.replicas[src].extract_evacuee(gid)
+            if prefilled:
+                if crash:
+                    fee = self.replicas[dst].profile.latency.prefill(tokens)
+                    self.evac_recompute_us += fee
+                else:
+                    fee = self.memory.handoff_cost(tokens)
+                    self.handoff_bytes += self.memory.bytes_for(tokens)
+                    self.handoff_us += fee
+                task.pending_restore = fee
+                self.evac_restarted += 1
+            else:
+                self.evac_requeued += 1
+            self.replicas[dst].receive_migrated(task)
 
     def run(self, workload: List[Task], drain: int):
         assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
@@ -1333,19 +1682,96 @@ class Orchestrator:
     embedded Router over the same replicas — only the advancement
     machinery differs. Events are heapq tuples ordered exactly like the
     Rust Event struct: (time, kind, replica, task) with kind ranks
-    WAKE < BOUNDARY < ARRIVAL. Bit-exact with Router.run by
-    construction; stage 10 asserts it.
+    WAKE < LIFECYCLE < BOUNDARY < ARRIVAL — nodes reach a boundary
+    before anything decides there, a crash at t is visible to every
+    same-time decision, and arrivals route against the already-changed
+    fleet. Bit-exact with Router.run by construction; stage 10 asserts
+    it (and stage 11 asserts the all-disabled elastic run changes
+    nothing).
+
+    Passing a LifecycleConfig (with a factory building the replica for
+    each joining fleet index) attaches the elastic machinery, mirroring
+    Orchestrator::with_lifecycle: the liveness/health masks are
+    initialized even when every sub-feature is disabled.
     """
 
-    WAKE, BOUNDARY, ARRIVAL = 0, 1, 2
+    WAKE, LIFECYCLE, BOUNDARY, ARRIVAL = 0, 1, 2, 3
 
-    def __init__(self, ctl: Router) -> None:
+    def __init__(self, ctl: Router,
+                 lifecycle: Optional[LifecycleConfig] = None,
+                 factory: Optional[Callable] = None) -> None:
         self.ctl = ctl
         self.replicas = ctl.replicas
         n = len(self.replicas)
         self.wake: List[Optional[int]] = [None] * n
         self.advanced_to: List[Optional[int]] = [None] * n
         self.advancements = [0] * n
+        self.lifecycle = lifecycle or LifecycleConfig()
+        self.factory = factory
+        self.autoscaler: Optional[Autoscaler] = None
+        self.health: Optional[HealthTracker] = None
+        if lifecycle is not None:
+            assert factory is not None, "elastic runs carry a replica factory"
+            ctl.alive = [True] * n
+            ctl.degraded = [False] * n
+            if lifecycle.autoscaler.enabled:
+                self.autoscaler = Autoscaler(
+                    lifecycle.autoscaler, lifecycle.min_replicas,
+                    lifecycle.max_replicas)
+            if lifecycle.health.enabled:
+                self.health = HealthTracker(lifecycle.health, n)
+
+    def _admit_replica(self, now: int) -> int:
+        """Factory-built replica at the next fleet index, clock synced
+        to now, alive and healthy (Orchestrator::admit_replica)."""
+        rid = len(self.replicas)
+        replica = self.factory(rid)
+        assert replica.id == rid, "factory must mint the next fleet index"
+        replica.sync_clock(now)
+        self.replicas.append(replica)
+        self.ctl.alive.append(True)
+        self.ctl.degraded.append(False)
+        self.wake.append(None)
+        self.advanced_to.append(None)
+        self.advancements.append(0)
+        if self.health is not None:
+            self.health.ensure(rid + 1)
+        return rid
+
+    def _retire_replica(self, target: int, crash: bool) -> None:
+        # dead first: every placement inside the evacuation excludes it
+        self.ctl.alive[target] = False
+        self.ctl.evacuate(target, crash)
+
+    def _apply_lifecycle(self, e: LifecycleEvent, now: int,
+                         target_rng: Rng) -> None:
+        """Events that would push the alive count outside the fleet
+        bounds — or that target a dead replica — are skipped (not
+        clamped), consuming no randomness."""
+        ctl = self.ctl
+        alive = ctl.alive_count()
+        if e.action == JOIN:
+            if alive >= self.lifecycle.max_replicas:
+                return
+            self._admit_replica(now)
+            ctl.joins += 1
+            return
+        if alive <= self.lifecycle.min_replicas:
+            return
+        if e.target is not None:
+            if e.target >= len(self.replicas) or not ctl.is_alive(e.target):
+                return
+            target = e.target
+        else:
+            alive_ids = [i for i in range(len(self.replicas))
+                         if ctl.is_alive(i)]
+            target = alive_ids[target_rng.range_u64(0, len(alive_ids) - 1)]
+        crash = e.action == CRASH
+        if crash:
+            ctl.crashes += 1
+        else:
+            ctl.leaves += 1
+        self._retire_replica(target, crash)
 
     def _advance(self, i: int, t: int) -> None:
         self.advancements[i] += 1
@@ -1368,14 +1794,31 @@ class Orchestrator:
         arrivals = iter(workload)
         heap: List = []
         parked: List[int] = []
+        # the lifecycle stream mirrors the arrival stream: one event in
+        # the heap at a time, the next pushed when it pops
+        lifecycle_events = iter(self.lifecycle.schedule(horizon))
+        target_rng = self.lifecycle.target_rng()
+        next_lifecycle = next(lifecycle_events, None)
+        if next_lifecycle is not None:
+            heapq.heappush(heap, (next_lifecycle.time, self.LIFECYCLE, 0, 0))
         nxt = next(arrivals, None)
         next_arrival = nxt
         if nxt is not None:
-            next_boundary = nxt.arrival
+            arrival_boundary = nxt.arrival
             heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
         else:
-            next_boundary = horizon
+            arrival_boundary = horizon
             heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
+
+        def eff(arrival: int) -> int:
+            # the effective boundary every wake advances its node to:
+            # the next arrival *or* the next fleet change, whichever is
+            # first — a node must never run past a crash instant
+            if next_lifecycle is None:
+                return arrival
+            return min(arrival, next_lifecycle.time)
+
+        next_boundary = eff(arrival_boundary)
         while True:
             time, kind, ridx, tid = heapq.heappop(heap)
             if kind == self.WAKE:
@@ -1394,13 +1837,22 @@ class Orchestrator:
                 task = next_arrival
                 next_arrival = None
                 assert task is not None and task.id == tid
-                if ctl.migration:
-                    # migration reads every replica's clock: idle ones
-                    # never woke, so sync them to the boundary first
+                if ctl.migration or self.autoscaler is not None:
+                    # migration (and shrink evacuation) reads every
+                    # replica's clock: idle ones never woke, so sync
+                    # them to the boundary first
                     for i, r in enumerate(self.replicas):
                         if (self.advanced_to[i] != time
                                 and r.next_event_time() is None):
                             r.sync_clock(time)
+                if self.health is not None:
+                    # fold in this boundary's lag *before* anything
+                    # decides, so migration targets and the routing
+                    # pick see the same verdicts
+                    for r in self.replicas:
+                        if ctl.is_alive(r.id):
+                            self.health.observe(r.id, r.cycle_lag())
+                    self.health.fill_mask(ctl.degraded)
                 ctl.run_migrations()
                 ctl.run_running_migrations()
                 pick = ctl.decide(task)
@@ -1408,18 +1860,51 @@ class Orchestrator:
                     ctl.rejected.append(task)
                 else:
                     self.replicas[pick].assign(task)
+                # the autoscaler observes the decision's outcome (after
+                # the assign: the picked replica no longer reads as
+                # idle, so it cannot be the shrink victim)
+                scaled = False
+                if self.autoscaler is not None:
+                    deficit = pick is None
+                    if not deficit and not ctl.admission.enabled:
+                        # without admission nothing is ever shed; the
+                        # signal falls back to "every placeable replica
+                        # is overrunning"
+                        deficit = all(r.overloaded() for r in self.replicas
+                                      if ctl.placeable(r.id))
+                    # shrink victim: an alive replica with no work at
+                    # all — prefer degraded, then highest index
+                    idle = None
+                    for i, r in enumerate(self.replicas):
+                        if ctl.is_alive(i) and r.next_event_time() is None:
+                            key = (ctl.is_degraded(i), i)
+                            if idle is None or key > idle:
+                                idle = key
+                    decision = self.autoscaler.observe(
+                        time, deficit,
+                        idle[1] if idle is not None else None,
+                        ctl.alive_count())
+                    if decision == "grow":
+                        self._admit_replica(time)
+                        ctl.autoscale_grows += 1
+                        scaled = True
+                    elif decision is not None:  # ("shrink", victim)
+                        ctl.autoscale_shrinks += 1
+                        self._retire_replica(decision[1], False)
+                        scaled = True
                 # advance the boundary and queue its event BEFORE
                 # re-arming wakes, so fresh wakes park against the new
                 # boundary rather than the one just consumed
                 nxt = next(arrivals, None)
                 next_arrival = nxt
                 if nxt is not None:
-                    next_boundary = nxt.arrival
+                    arrival_boundary = nxt.arrival
                     heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
                 else:
-                    next_boundary = horizon
+                    arrival_boundary = horizon
                     heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
-                if ctl.migration:
+                next_boundary = eff(arrival_boundary)
+                if ctl.migration or scaled:
                     for i in range(len(self.replicas)):
                         self._refresh_wake(i, heap)
                     parked.clear()
@@ -1429,6 +1914,28 @@ class Orchestrator:
                     del parked[:]
                     if pick is not None:
                         self._refresh_wake(pick, heap)
+            elif kind == self.LIFECYCLE:
+                e = next_lifecycle
+                assert e is not None and e.time == time
+                # same contract as the arrival boundary: evacuated
+                # tasks may land on idle peers, whose clocks must be at
+                # the event time first (uncounted moves)
+                for i, r in enumerate(self.replicas):
+                    if (self.advanced_to[i] != time
+                            and r.next_event_time() is None):
+                        r.sync_clock(time)
+                self._apply_lifecycle(e, time, target_rng)
+                next_lifecycle = next(lifecycle_events, None)
+                if next_lifecycle is not None:
+                    heapq.heappush(
+                        heap, (next_lifecycle.time, self.LIFECYCLE, 0, 0))
+                next_boundary = eff(arrival_boundary)
+                # the fleet changed shape: re-arm everything (clears a
+                # dead replica's stale wake, arms a joiner and every
+                # evacuation destination)
+                for i in range(len(self.replicas)):
+                    self._refresh_wake(i, heap)
+                parked.clear()
             else:  # BOUNDARY — the final drain at the horizon
                 assert time == horizon
                 for i, r in enumerate(self.replicas):
@@ -1468,11 +1975,15 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
               migration: bool = False,
               migrate_running: bool = False,
               memory: Optional[MemoryConfig] = None,
-              engine: str = "lockstep"):
+              engine: str = "lockstep",
+              lifecycle: Optional[LifecycleConfig] = None):
     """Mirrors experiments::run_fleet. Returns (tasks, per_replica) plus
-    shed/migration counters via the returned router's attributes.
-    engine="event" drives the same Router decisions through the
-    heap-scheduled Orchestrator (bit-exact with "lockstep")."""
+    shed/migration/elastic counters via the returned router's
+    attributes. engine="event" drives the same Router decisions through
+    the heap-scheduled Orchestrator (bit-exact with "lockstep"). When
+    any elastic feature is enabled (`lifecycle.any_enabled()`) the
+    event engine attaches the lifecycle machinery; replicas that join
+    mid-run clone the fleet's first profile (the standard tier)."""
     # thread the base capacity into a *copy* of the spec (the Rust
     # run_fleet clones; mutating the caller's profiles would leak stale
     # capacities across calls) unless it already carries explicit ones
@@ -1493,9 +2004,23 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
                     admission=admission, migration=migration,
                     migrate_running=migrate_running, memory=memory or MemoryConfig())
     if engine == "event":
-        tasks, per = Orchestrator(router).run(workload, drain)
+        orch_lc = None
+        factory = None
+        if lifecycle is not None and lifecycle.any_enabled():
+            import copy
+
+            template = profiles[0]
+
+            def factory(rid, _mk=mk, _p=template, _mem=memory):
+                return Replica(rid, _mk, copy.copy(_p), memory=_mem)
+
+            orch_lc = lifecycle
+        tasks, per = Orchestrator(router, lifecycle=orch_lc,
+                                  factory=factory).run(workload, drain)
     else:
         assert engine == "lockstep", f"unknown cluster engine {engine!r}"
+        assert lifecycle is None or not lifecycle.any_enabled(), \
+            "elastic fleets need the event engine"
         tasks, per = router.run(workload, drain)
     return tasks, per, router
 
@@ -1524,23 +2049,25 @@ def attainment(tasks: Iterable[Task]) -> dict:
 
     return {
         "n_tasks": len(ts),
-        "n_finished": sum(t.is_finished() for t in ts),
+        "n_finished": sum(t.is_finished() and not t.shed for t in ts),
         "slo": frac(sum(t.slo_met() for t in ts), len(ts)),
         "rt_slo": frac(sum(t.slo_met() for t in rt), len(rt)),
         "rt_count": len(rt),
         "nrt_slo": frac(sum(t.slo_met() for t in nrt), len(nrt)),
         "nrt_count": len(nrt),
         "nrt_ttft": frac(
-            sum(t.is_finished() and t.ttft_met() for t in nrt), len(nrt)
+            sum(t.is_finished() and not t.shed and t.ttft_met() for t in nrt),
+            len(nrt)
         ),
         "nrt_tpot": frac(
-            sum(t.is_finished() and t.tpot_met() for t in nrt), len(nrt)
+            sum(t.is_finished() and not t.shed and t.tpot_met() for t in nrt),
+            len(nrt)
         ),
     }
 
 
 def latency_summary(tasks: Iterable[Task]) -> dict:
-    ts = [t for t in tasks if t.is_finished()]
+    ts = [t for t in tasks if t.is_finished() and not t.shed]
     ttft = sorted(t.ttft() / 1e3 for t in ts if t.ttft() is not None)
     tpot = sorted(t.avg_tpot() / 1e3 for t in ts if t.avg_tpot() is not None)
 
