@@ -143,6 +143,7 @@ mod tests {
             deficit_streak: 2,
             idle_streak: 3,
             cooldown: 1_000,
+            boot_delay: 0,
         }
     }
 

@@ -53,9 +53,24 @@ pub(crate) struct Controller {
     pub(crate) migrated: HashSet<TaskId>,
     pub(crate) migrations: u64,
     pub(crate) migrated_running: u64,
+    /// Migration pass pairs actually executed past the enablement gate
+    /// (one count per [`Controller::run_migrations`] invocation). The
+    /// lockstep engine pays one per arrival boundary; the event engine
+    /// pays one per `MigrationCheck` that found an overloaded replica.
+    pub(crate) migration_passes: u64,
+    /// Edge-triggered `MigrationCheck` events handled by the event
+    /// engine (lockstep runs keep this 0).
+    pub(crate) migration_checks: u64,
     pub(crate) handoff_bytes: u64,
     pub(crate) handoff_us: Micros,
     pub(crate) rejected: Vec<Task>,
+    /// Streaming mode (million-task traces): fold shed arrivals into a
+    /// counter instead of retaining the `Task` — a shed task is an SLO
+    /// miss by definition, so per-task records add nothing the cell
+    /// metrics need, and retaining them is what unbounds memory.
+    pub(crate) fold_rejects: bool,
+    /// Shed arrivals folded under `fold_rejects`.
+    pub(crate) rejected_folded: u64,
     /// Per-replica liveness under lifecycle events. **Empty for static
     /// fleets** — the empty-mask fast path is what keeps elastic
     /// support out of the static hot path entirely (`is_alive` treats
@@ -78,6 +93,8 @@ pub(crate) struct Controller {
     pub(crate) evac_recompute_us: Micros,
     pub(crate) autoscale_grows: u64,
     pub(crate) autoscale_shrinks: u64,
+    /// Grow decisions still booting at run end (boot-delayed joins).
+    pub(crate) autoscale_pending_boots: u64,
 }
 
 impl Controller {
@@ -94,9 +111,13 @@ impl Controller {
             migrated: HashSet::new(),
             migrations: 0,
             migrated_running: 0,
+            migration_passes: 0,
+            migration_checks: 0,
             handoff_bytes: 0,
             handoff_us: 0,
             rejected: Vec::new(),
+            fold_rejects: false,
+            rejected_folded: 0,
             alive: Vec::new(),
             degraded: Vec::new(),
             eligible_scratch: Vec::new(),
@@ -108,6 +129,18 @@ impl Controller {
             evac_recompute_us: 0,
             autoscale_grows: 0,
             autoscale_shrinks: 0,
+            autoscale_pending_boots: 0,
+        }
+    }
+
+    /// Record a shed arrival: retained on `rejected` (the default,
+    /// every report/test observes the full `Task`) or folded to a
+    /// counter in streaming mode (`fold_rejects`).
+    pub(crate) fn reject(&mut self, task: Task) {
+        if self.fold_rejects {
+            self.rejected_folded += 1;
+        } else {
+            self.rejected.push(task);
         }
     }
 
@@ -260,6 +293,7 @@ impl Controller {
         if !self.migration || replicas.len() < 2 {
             return;
         }
+        self.migration_passes += 1;
         for src in 0..replicas.len() {
             if !self.is_alive(src) || !replicas[src].as_ref().overloaded() {
                 continue;
@@ -386,7 +420,7 @@ impl Controller {
                 }
                 // unreachable while min_replicas >= 1 (the lifecycle
                 // bound keeps an alive peer); shed defensively
-                None => self.rejected.push(task),
+                None => self.reject(task),
             }
         }
         // then everything in service, delivery order
@@ -441,6 +475,7 @@ impl Controller {
             evac_recompute_us: self.evac_recompute_us,
             autoscale_grows: self.autoscale_grows,
             autoscale_shrinks: self.autoscale_shrinks,
+            autoscale_pending_boots: self.autoscale_pending_boots,
         };
         let mut reports: Vec<_> = replicas.into_iter().map(Replica::finish).collect();
         if !self.alive.is_empty() {
@@ -452,9 +487,12 @@ impl Controller {
             strategy: self.strategy.label(),
             migrations: self.migrations,
             migrated_running: self.migrated_running,
+            migration_passes: self.migration_passes,
+            migration_checks: self.migration_checks,
             handoff_bytes: self.handoff_bytes,
             handoff_us: self.handoff_us,
             rejected: self.rejected,
+            rejected_folded: self.rejected_folded,
             replicas: reports,
             elastic,
         }

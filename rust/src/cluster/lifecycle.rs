@@ -79,6 +79,12 @@ pub struct AutoscalerConfig {
     pub idle_streak: u32,
     /// Minimum time between scale actions (hysteresis).
     pub cooldown: Micros,
+    /// Provisioning latency for a grow: the replica joins this long
+    /// after the scale decision (a `Boot` event in the orchestrator
+    /// heap). Booting replicas count toward the observed fleet size so
+    /// grows in flight suppress further grows. 0 (the default) admits
+    /// instantly — bit-exact with the pre-boot-delay engine.
+    pub boot_delay: Micros,
 }
 
 impl Default for AutoscalerConfig {
@@ -88,6 +94,7 @@ impl Default for AutoscalerConfig {
             deficit_streak: 2,
             idle_streak: 64,
             cooldown: 500_000, // 0.5 s
+            boot_delay: 0,
         }
     }
 }

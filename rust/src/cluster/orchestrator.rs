@@ -14,11 +14,18 @@
 //!   * [`EventKind::Lifecycle`] — a replica joins, leaves, or crashes
 //!     (elastic fleets, [`Orchestrator::with_lifecycle`]): apply the
 //!     fleet change and evacuate the casualty;
+//!   * [`EventKind::Boot`] — a boot-delayed autoscaler grow completes
+//!     and the replica joins the fleet
+//!     (`[cluster.autoscaler] boot_delay_s`);
 //!   * [`EventKind::RescheduleBoundary`] — the final drain boundary at
 //!     the common horizon;
-//!   * [`EventKind::Arrival`] — route one task: run the shared
-//!     [`Controller`] migration passes, decide, assign (plus health
-//!     scoring and the autoscaler's observation when elastic).
+//!   * [`EventKind::MigrationCheck`] — overload-triggered migration
+//!     (DESIGN.md "Control-plane incrementality"): armed only when a
+//!     replica's Eq. 7 headroom crosses the overload threshold, it runs
+//!     the shared [`Controller`] migration passes just before the
+//!     same-time arrival routes;
+//!   * [`EventKind::Arrival`] — route one task: decide, assign (plus
+//!     health scoring and the autoscaler's observation when elastic).
 //!
 //! Exactly one `Arrival` and one `Lifecycle` event are in the heap at
 //! a time (each stream pushes its next entry when the current one
@@ -26,7 +33,10 @@
 //! boundary events — O(events log replicas) total work. The effective
 //! routing boundary every wake advances to is the *earlier* of the
 //! next arrival and the next lifecycle event, so no node ever runs
-//! past a crash instant.
+//! past a crash instant. Arrivals are pulled one at a time from the
+//! caller's iterator, so a seeded [`crate::workload::ArrivalStream`]
+//! drives million-task traces in constant memory
+//! ([`Orchestrator::run_stream`]).
 //!
 //! ## Why this reproduces lockstep bit-for-bit
 //!
@@ -38,15 +48,31 @@
 //! routing-visible load signal is clock-independent. Wake events sort
 //! *before* same-time `Arrival`/`RescheduleBoundary` events (the kind
 //! rank), so every node with work due by a boundary is advanced to it
-//! before the boundary's decision runs — the lockstep order. Migration
-//! passes run *inline* in the `Arrival` handler (not as separate heap
-//! events): lockstep interleaves (migrate, decide) per task even for
-//! same-time arrivals, and the kind-major tie-break would otherwise
-//! batch all same-time reschedules ahead of all same-time arrivals,
-//! changing decision order. The equivalence suite
-//! (`rust/tests/equivalence.rs`) pins all of this: every cluster /
-//! hetero-fleet / memory cell must produce an identical
-//! [`ClusterReport`] under both engines.
+//! before the boundary's decision runs — the lockstep order.
+//!
+//! Migration is *edge-triggered*: the lockstep reference runs the (per
+//! replica, mostly no-op) migration passes at every arrival boundary,
+//! while this engine maintains a per-node overload shadow — refreshed
+//! only where load can grow (an assignment, a migration, an
+//! evacuation) — and arms a `MigrationCheck` at the in-flight
+//! arrival's time only while some replica is overloaded. The check
+//! sorts before the same-time `Arrival` (kind rank), so the passes
+//! still run at exactly the boundaries where the lockstep pass would
+//! have *acted* (its per-source gate is `alive ∧ overloaded`), and the
+//! migrated-task set matches lockstep bit-for-bit; only the
+//! pass/check counters differ — O(overload episodes) instead of
+//! O(arrivals) — which is the relaxed part of the equivalence story
+//! (`ClusterReport::{migration_passes, migration_checks}` are excluded
+//! from the engine-pair comparison and asserted `event ≤ lockstep`
+//! instead). One ordering note: health scores now fold in an arrival
+//! boundary's lag *after* any same-time migration pass (the check pops
+//! first), so a health+migration combination sees verdicts one
+//! boundary staler than the old inline order did — no pinned
+//! experiment enables both.
+//!
+//! The equivalence suite (`rust/tests/equivalence.rs`) pins all of
+//! this: every cluster / hetero-fleet / memory cell must produce an
+//! identical [`ClusterReport`] under both engines.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -72,16 +98,23 @@ use super::router::{ClusterReport, RoutingStrategy};
 /// lifecycle ordering contract (DESIGN.md "Elastic fleets"): wakes
 /// first (nodes reach the boundary before anything decides there),
 /// then fleet changes (a crash at `t` is visible to every same-time
-/// decision), then the drain boundary, then arrivals (routed against
-/// the already-changed fleet).
+/// decision, and a boot joins before anything routes at `t`), then the
+/// drain boundary, then migration checks (the passes run against the
+/// settled fleet, just ahead of the same-time arrival), then arrivals
+/// (routed against the already-changed, already-rebalanced fleet).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
     /// A node's next-interesting-event time arrived: advance it.
     Wake,
     /// A replica joins, leaves, or crashes (elastic fleets).
     Lifecycle,
+    /// A boot-delayed autoscaler grow completes: admit the replica.
+    Boot,
     /// The common drain horizon: advance everything with work, finish.
     RescheduleBoundary,
+    /// Some replica crossed the overload threshold: run the migration
+    /// passes before the same-time arrival routes (edge-triggered).
+    MigrationCheck,
     /// Route the next workload task.
     Arrival,
 }
@@ -153,6 +186,15 @@ pub struct Orchestrator {
     factory: Option<Box<dyn FnMut(usize) -> Replica>>,
     autoscaler: Option<Autoscaler>,
     health: Option<HealthTracker>,
+    /// Per-node overload shadow (`alive ∧ overloaded`), maintained only
+    /// while migration is enabled and refreshed only where load can
+    /// grow — the edge-trigger that arms [`EventKind::MigrationCheck`]
+    /// (DESIGN.md "Control-plane incrementality"). Stale-`true` entries
+    /// cost one cheap re-check; stale-`false` is impossible by
+    /// construction.
+    overload: Vec<bool>,
+    /// Number of `true` entries in `overload`.
+    overload_count: usize,
 }
 
 impl Orchestrator {
@@ -164,6 +206,7 @@ impl Orchestrator {
             replicas.iter().enumerate().all(|(i, r)| r.id() == i),
             "replica ids must equal their fleet position"
         );
+        let n = replicas.len();
         Orchestrator {
             nodes: replicas.into_iter().map(Node::new).collect(),
             ctl: Controller::new(strategy),
@@ -171,6 +214,8 @@ impl Orchestrator {
             factory: None,
             autoscaler: None,
             health: None,
+            overload: vec![false; n],
+            overload_count: 0,
         }
     }
 
@@ -190,6 +235,15 @@ impl Orchestrator {
     pub fn with_running_migration(mut self, enabled: bool, memory: MemoryConfig) -> Self {
         self.ctl.migrate_running = enabled;
         self.ctl.memory = memory;
+        self
+    }
+
+    /// Fold rejected tasks into a counter instead of retaining them,
+    /// so shedding stays O(1) memory on streaming traces (the
+    /// per-task reject list would otherwise grow with the trace).
+    /// `ClusterReport::rejected_folded` carries the count.
+    pub fn with_fold_rejects(mut self, fold: bool) -> Self {
+        self.ctl.fold_rejects = fold;
         self
     }
 
@@ -247,6 +301,7 @@ impl Orchestrator {
         self.nodes.push(node);
         self.ctl.alive.push(true);
         self.ctl.degraded.push(false);
+        self.overload.push(false); // a joiner is idle
         if let Some(h) = &mut self.health {
             h.ensure(id + 1);
         }
@@ -259,6 +314,61 @@ impl Orchestrator {
     fn retire_replica(&mut self, target: usize, crash: bool) {
         self.ctl.alive[target] = false;
         self.ctl.evacuate(&mut self.nodes, target, crash);
+        if self.overload[target] {
+            // dead nodes never source a migration pass
+            self.overload[target] = false;
+            self.overload_count -= 1;
+        }
+    }
+
+    /// Re-evaluate one node's overload-shadow entry. Only called while
+    /// migration is enabled (the shadow is inert otherwise).
+    fn refresh_overload(&mut self, idx: usize) {
+        let over = self.ctl.is_alive(idx) && self.nodes[idx].as_ref().overloaded();
+        if self.overload[idx] != over {
+            self.overload[idx] = over;
+            if over {
+                self.overload_count += 1;
+            } else {
+                self.overload_count -= 1;
+            }
+        }
+    }
+
+    /// Re-evaluate the whole shadow — used after fleet-wide load
+    /// movement (a migration pass, an evacuation, a lifecycle event)
+    /// and inside the check handler to drop stale-`true` entries.
+    fn refresh_overload_all(&mut self) {
+        for i in 0..self.nodes.len() {
+            self.refresh_overload(i);
+        }
+    }
+
+    /// Arm a [`EventKind::MigrationCheck`] at the in-flight arrival's
+    /// boundary when migration is on and the shadow reports overload —
+    /// at most one per boundary (`armed_at` dedups), never at the
+    /// drain horizon (lockstep runs no pass there either).
+    fn arm_migration_check(
+        &self,
+        heap: &mut EventHeap,
+        armed_at: &mut Option<Micros>,
+        boundary: Micros,
+        has_arrival: bool,
+    ) {
+        if !self.ctl.migration
+            || self.overload_count == 0
+            || !has_arrival
+            || *armed_at == Some(boundary)
+        {
+            return;
+        }
+        *armed_at = Some(boundary);
+        heap.push(Event {
+            time: boundary,
+            kind: EventKind::MigrationCheck,
+            replica: 0,
+            task: 0,
+        });
     }
 
     /// Apply one lifecycle event at `now`. Events that would push the
@@ -334,7 +444,7 @@ impl Orchestrator {
     /// received) — the observability hook the idle-replica property
     /// test and the scale sweep's activity accounting use.
     pub fn run_counted(
-        mut self,
+        self,
         workload: Vec<Task>,
         drain: Micros,
     ) -> Result<(ClusterReport, Vec<u64>)> {
@@ -343,8 +453,50 @@ impl Orchestrator {
             "workload must be sorted by arrival"
         );
         let last_arrival = workload.last().map_or(0, |t| t.arrival);
-        let horizon = last_arrival + drain;
-        let mut arrivals = workload.into_iter();
+        self.run_events(workload.into_iter(), Some(last_arrival + drain), drain)
+    }
+
+    /// Route a pull-based arrival stream (e.g. a seeded
+    /// [`crate::workload::ArrivalStream`]) without materializing the
+    /// workload: tasks are pulled one at a time, so a million-task
+    /// trace runs in memory bounded by the fleet's in-flight work, not
+    /// the trace length. The drain horizon is `last pulled arrival +
+    /// drain`, discovered when the stream ends. Streaming runs use
+    /// static fleets (the lifecycle schedule needs the horizon up
+    /// front); pair with [`Orchestrator::with_fold_rejects`] to keep
+    /// shedding O(1) memory too.
+    pub fn run_stream<I>(self, arrivals: I, drain: Micros) -> Result<(ClusterReport, Vec<u64>)>
+    where
+        I: IntoIterator<Item = Task>,
+    {
+        assert!(
+            self.factory.is_none(),
+            "streaming runs use static fleets (no lifecycle schedule)"
+        );
+        self.run_events(arrivals.into_iter(), None, drain)
+    }
+
+    /// The event loop shared by [`Orchestrator::run_counted`] (horizon
+    /// known up front, lifecycle schedulable) and
+    /// [`Orchestrator::run_stream`] (horizon discovered at stream end).
+    fn run_events<I>(
+        mut self,
+        mut arrivals: I,
+        lifecycle_horizon: Option<Micros>,
+        drain: Micros,
+    ) -> Result<(ClusterReport, Vec<u64>)>
+    where
+        I: Iterator<Item = Task>,
+    {
+        // refined to `last pulled arrival + drain` when the stream
+        // ends; until then only boundary bookkeeping reads it
+        let mut horizon: Micros = drain;
+        let mut last_seen: Micros = 0;
+        let boot_delay = self.lifecycle.autoscaler.boot_delay;
+        let mut pending_boots: std::collections::VecDeque<Micros> =
+            std::collections::VecDeque::new();
+        // dedup flag: at most one MigrationCheck per arrival boundary
+        let mut migration_check_at: Option<Micros> = None;
         let mut heap = EventHeap::new();
         // nodes that reached the current boundary and whose recomputed
         // wake is *at* the boundary (still busy there): re-armed after
@@ -353,8 +505,13 @@ impl Orchestrator {
         // the single in-flight arrival (its heap event carries the id)
         let mut next_arrival: Option<Task> = None;
         // the lifecycle stream mirrors the arrival stream: one event in
-        // the heap at a time, the next pushed when it pops
-        let mut lifecycle_events = self.lifecycle.schedule(horizon).into_iter();
+        // the heap at a time, the next pushed when it pops (streaming
+        // runs have no lifecycle schedule — asserted by `run_stream`)
+        let mut lifecycle_events = match lifecycle_horizon {
+            Some(h) => self.lifecycle.schedule(h),
+            None => Vec::new(),
+        }
+        .into_iter();
         let mut target_rng = self.lifecycle.target_rng();
         let mut next_lifecycle = lifecycle_events.next();
         if let Some(e) = next_lifecycle {
@@ -365,11 +522,13 @@ impl Orchestrator {
         let mut arrival_boundary = match arrivals.next() {
             Some(t) => {
                 let at = t.arrival;
+                last_seen = at;
                 heap.push(Event { time: at, kind: EventKind::Arrival, replica: 0, task: t.id });
                 next_arrival = Some(t);
                 at
             }
             None => {
+                horizon = last_seen + drain;
                 heap.push(Event {
                     time: horizon,
                     kind: EventKind::RescheduleBoundary,
@@ -449,14 +608,15 @@ impl Orchestrator {
                         }
                         h.fill_mask(&mut self.ctl.degraded);
                     }
-                    // inline migration passes, then decide — the exact
-                    // per-task interleaving the lockstep loop runs
-                    self.ctl.run_migrations(&mut self.nodes);
-                    self.ctl.run_running_migrations(&mut self.nodes);
+                    // migration passes no longer run inline here: a
+                    // same-time MigrationCheck (armed only while some
+                    // replica is overloaded) already popped and ran
+                    // them — at every boundary where the lockstep pass
+                    // would have acted, and only those
                     let pick = self.ctl.decide(&self.nodes, &task);
                     match pick {
                         Some(p) => self.nodes[p].as_mut().assign(task),
-                        None => self.ctl.rejected.push(task),
+                        None => self.ctl.reject(task),
                     }
                     // the autoscaler observes the decision's outcome
                     // (after the assign: the picked node no longer
@@ -486,7 +646,12 @@ impl Orchestrator {
                                 }
                             }
                         }
-                        let alive = self.ctl.alive_count(self.nodes.len());
+                        // booting replicas count toward the observed
+                        // fleet size so the autoscaler cannot overshoot
+                        // max_replicas while grows are in flight (empty
+                        // when boot_delay is 0 — the bit-exact default)
+                        let alive =
+                            self.ctl.alive_count(self.nodes.len()) + pending_boots.len();
                         let decision = self
                             .autoscaler
                             .as_mut()
@@ -495,9 +660,22 @@ impl Orchestrator {
                         match decision {
                             ScaleDecision::Hold => {}
                             ScaleDecision::Grow => {
-                                self.admit_replica(ev.time);
                                 self.ctl.autoscale_grows += 1;
-                                scaled = true;
+                                if boot_delay == 0 {
+                                    self.admit_replica(ev.time);
+                                    scaled = true;
+                                } else {
+                                    // deferred: the replica joins when
+                                    // its Boot event fires
+                                    let at = ev.time + boot_delay;
+                                    pending_boots.push_back(at);
+                                    heap.push(Event {
+                                        time: at,
+                                        kind: EventKind::Boot,
+                                        replica: 0,
+                                        task: 0,
+                                    });
+                                }
                             }
                             ScaleDecision::Shrink(idx) => {
                                 self.ctl.autoscale_shrinks += 1;
@@ -512,6 +690,8 @@ impl Orchestrator {
                     arrival_boundary = match arrivals.next() {
                         Some(t) => {
                             let at = t.arrival;
+                            debug_assert!(at >= last_seen, "arrivals must be time-ordered");
+                            last_seen = at;
                             heap.push(Event {
                                 time: at,
                                 kind: EventKind::Arrival,
@@ -522,6 +702,7 @@ impl Orchestrator {
                             at
                         }
                         None => {
+                            horizon = last_seen + drain;
                             heap.push(Event {
                                 time: horizon,
                                 kind: EventKind::RescheduleBoundary,
@@ -532,23 +713,39 @@ impl Orchestrator {
                         }
                     };
                     next_boundary = eff(arrival_boundary, &next_lifecycle);
-                    if self.ctl.migration || scaled {
-                        // migration (or a scale action's evacuation) may
-                        // have moved work between any pair of nodes:
-                        // re-arm the whole fleet (the pass itself is
-                        // already O(replicas))
+                    if scaled {
+                        // a scale action's evacuation may have moved
+                        // work between any pair of nodes: re-arm the
+                        // whole fleet
                         for i in 0..self.nodes.len() {
                             self.refresh_wake(i, &mut heap);
                         }
                         parked.clear();
                     } else {
-                        // only the assigned node's workload changed
+                        // only the assigned node's workload changed —
+                        // migration moves happen in the MigrationCheck
+                        // handler, which re-arms the fleet itself
                         for i in std::mem::take(&mut parked) {
                             self.refresh_wake(i, &mut heap);
                         }
                         if let Some(p) = pick {
                             self.refresh_wake(p, &mut heap);
                         }
+                    }
+                    if self.ctl.migration {
+                        // the only load that grew outside a scale
+                        // action is the assigned node's
+                        if scaled {
+                            self.refresh_overload_all();
+                        } else if let Some(p) = pick {
+                            self.refresh_overload(p);
+                        }
+                        self.arm_migration_check(
+                            &mut heap,
+                            &mut migration_check_at,
+                            arrival_boundary,
+                            next_arrival.is_some(),
+                        );
                     }
                 }
                 EventKind::Lifecycle => {
@@ -582,6 +779,65 @@ impl Orchestrator {
                         self.refresh_wake(i, &mut heap);
                     }
                     parked.clear();
+                    if self.ctl.migration {
+                        // evacuations may have overloaded destinations
+                        self.refresh_overload_all();
+                        self.arm_migration_check(
+                            &mut heap,
+                            &mut migration_check_at,
+                            arrival_boundary,
+                            next_arrival.is_some(),
+                        );
+                    }
+                }
+                EventKind::Boot => {
+                    let due = pending_boots
+                        .pop_front()
+                        .expect("boot event without a pending boot");
+                    debug_assert_eq!(due, ev.time);
+                    // bounds re-check at boot time: explicit joins may
+                    // have filled the fleet since the grow was decided
+                    // (the grow stays counted; the boot is dropped)
+                    if self.ctl.alive_count(self.nodes.len()) < self.lifecycle.max_replicas {
+                        self.admit_replica(ev.time);
+                    }
+                    // the joiner is idle: no wake to arm, no load moved
+                }
+                EventKind::MigrationCheck => {
+                    migration_check_at = None;
+                    self.ctl.migration_checks += 1;
+                    // idle-clock sync first — the same contract as the
+                    // arrival boundary (a migrated-in task may carry an
+                    // arrival time earlier than this boundary, so an
+                    // idle destination's clock must be here before the
+                    // task lands), and the exact order the old inline
+                    // passes ran under
+                    for node in &mut self.nodes {
+                        if node.advanced_to() != Some(ev.time)
+                            && node.next_event_time().is_none()
+                        {
+                            node.sync_clock(ev.time);
+                        }
+                    }
+                    // the shadow may be stale-true (service progress
+                    // since arming drained the overload): re-check
+                    // against live state before paying for a pass
+                    self.refresh_overload_all();
+                    if self.overload_count > 0 {
+                        self.ctl.run_migrations(&mut self.nodes);
+                        self.ctl.run_running_migrations(&mut self.nodes);
+                        // migration may have moved work between any
+                        // pair: refresh the shadow and re-arm the fleet
+                        self.refresh_overload_all();
+                        for i in 0..self.nodes.len() {
+                            self.refresh_wake(i, &mut heap);
+                        }
+                        parked.clear();
+                    }
+                    // no re-arm here even if overload persists: the
+                    // same-time arrival's handler arms the *next*
+                    // boundary — the lockstep one-pass-per-boundary
+                    // cadence, and no same-time check storm
                 }
                 EventKind::RescheduleBoundary => {
                     debug_assert_eq!(ev.time, horizon);
@@ -614,6 +870,7 @@ impl Orchestrator {
         }
 
         let counts: Vec<u64> = self.nodes.iter().map(Node::advancements).collect();
+        self.ctl.autoscale_pending_boots = pending_boots.len() as u64;
         let replicas: Vec<Replica> =
             self.nodes.into_iter().map(Node::into_replica).collect();
         Ok((self.ctl.into_report(replicas), counts))

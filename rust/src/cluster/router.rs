@@ -198,7 +198,7 @@ impl Router {
             self.run_running_migrations();
             match self.ctl.decide(&self.replicas, &task) {
                 Some(pick) => self.replicas[pick].assign(task),
-                None => self.ctl.rejected.push(task),
+                None => self.ctl.reject(task),
             }
         }
         let horizon = last_arrival + drain;
@@ -239,6 +239,10 @@ pub struct ElasticStats {
     pub autoscale_grows: u64,
     /// Fleet shrinks the autoscaler fired.
     pub autoscale_shrinks: u64,
+    /// Grow decisions whose replica was still booting when the run
+    /// ended (only with `[cluster.autoscaler] boot_delay_s` > 0; the
+    /// default instant-warm joins keep this 0).
+    pub autoscale_pending_boots: u64,
 }
 
 /// Outcome of a full cluster run.
@@ -250,6 +254,10 @@ pub struct ClusterReport {
     /// Tasks shed by admission control, untouched since arrival. They
     /// count as SLO violations in every fleet metric.
     pub rejected: Vec<Task>,
+    /// Shed arrivals folded to a count in streaming mode (million-task
+    /// traces) instead of being retained here — each is an SLO miss by
+    /// definition. 0 outside streaming runs.
+    pub rejected_folded: u64,
     /// Tasks re-placed by the overload-migration pass (each counted
     /// once; a task migrates at most once) — queued withdrawals plus
     /// running handoffs.
@@ -261,6 +269,14 @@ pub struct ClusterReport {
     /// Total modelled transfer time of those handoffs (each fee also
     /// lands in the migrated task's own timing record).
     pub handoff_us: Micros,
+    /// Migration passes actually executed (queued + running pass pairs
+    /// past the enablement gate). The lockstep engine pays one per
+    /// arrival boundary; the event engine pays O(overload episodes) —
+    /// the ratio BENCH_8.json reports.
+    pub migration_passes: u64,
+    /// Edge-triggered `MigrationCheck` events the event engine handled
+    /// (armed on overload transitions; 0 for lockstep runs).
+    pub migration_checks: u64,
     /// Elastic-fleet counters (all-zero for static runs).
     pub elastic: ElasticStats,
 }
@@ -285,9 +301,9 @@ impl ClusterReport {
         all
     }
 
-    /// Tasks shed by admission control.
+    /// Tasks shed by admission control (retained plus folded).
     pub fn rejected_count(&self) -> usize {
-        self.rejected.len()
+        self.rejected.len() + self.rejected_folded as usize
     }
 
     /// Fleet-wide SLO attainment over every routed *and* shed task.
@@ -312,6 +328,12 @@ impl ClusterReport {
         self.replicas.iter().map(|r| r.report.decisions).sum()
     }
 
+    /// Total reschedules the fleet's policies proved unnecessary and
+    /// skipped (see [`crate::server::RunReport::decisions_skipped`]).
+    pub fn total_decisions_skipped(&self) -> u64 {
+        self.replicas.iter().map(|r| r.report.decisions_skipped).sum()
+    }
+
     /// Fleet-aggregated KV memory accounting: per-replica peaks summed
     /// (each device holds its own high-water mark) plus total swap /
     /// recompute / handoff transition counters.
@@ -332,7 +354,9 @@ impl ClusterReport {
     /// tasks the replicas shed mid-run (evacuation with no placement,
     /// or a KV cache too small for even one slot).
     pub fn shed_total(&self) -> u64 {
-        self.rejected.len() as u64 + self.replicas.iter().map(|r| r.report.shed).sum::<u64>()
+        self.rejected.len() as u64
+            + self.rejected_folded
+            + self.replicas.iter().map(|r| r.report.shed).sum::<u64>()
     }
 
     /// Global ids across replica reports and the shed list: never

@@ -116,6 +116,11 @@ pub struct ServeConfig {
     pub adaptor: UtilityAdaptor,
     /// SLICE extension: charge pending prefill work to the cycle budget.
     pub prefill_aware: bool,
+    /// SLICE: cached candidate sets + reschedule skipping (DESIGN.md
+    /// "Control-plane incrementality"). Bit-exact with `false` by
+    /// construction; the off-switch exists for A/B runs and so the
+    /// equivalence suite can pin that claim.
+    pub incremental: bool,
     /// Orca / FastServe: max concurrent batch.
     pub max_batch: u32,
     /// FastServe MLFQ shape.
@@ -167,6 +172,7 @@ impl Default for ServeConfig {
             cycle_cap: CYCLE_CAP,
             adaptor: UtilityAdaptor::None,
             prefill_aware: false,
+            incremental: true,
             max_batch: 32,
             fastserve: FastServeConfig::default(),
             arrival_rate: 1.0,
@@ -211,6 +217,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_bool("scheduler", "prefill_aware")? {
             cfg.prefill_aware = v;
+        }
+        if let Some(v) = doc.get_bool("scheduler", "incremental")? {
+            cfg.incremental = v;
         }
         if let Some(v) = doc.get_str("scheduler", "adaptor")? {
             cfg.adaptor = match v.as_str() {
@@ -399,6 +408,13 @@ impl ServeConfig {
                 bail!("[cluster.autoscaler] cooldown_s must be >= 0, got {v}");
             }
             cfg.lifecycle.autoscaler.cooldown = secs(v);
+            autoscaler_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.autoscaler", "boot_delay_s")? {
+            if v < 0.0 {
+                bail!("[cluster.autoscaler] boot_delay_s must be >= 0, got {v}");
+            }
+            cfg.lifecycle.autoscaler.boot_delay = secs(v);
             autoscaler_knob = true;
         }
         cfg.lifecycle.autoscaler.enabled = autoscaler_key.unwrap_or(autoscaler_knob);
@@ -866,11 +882,17 @@ max_replicas = 16
     #[test]
     fn autoscaler_and_health_knobs_imply_enabled() {
         let text = "[cluster.autoscaler]\ndeficit_streak = 3\ncooldown_s = 1.0\n\
+                    boot_delay_s = 2.5\n\
                     [cluster.health]\nalpha = 0.5\nlag_threshold_ms = 250.0\n";
         let c = ServeConfig::from_toml(text).unwrap();
         assert!(c.lifecycle.autoscaler.enabled, "a knob is never a silent no-op");
         assert_eq!(c.lifecycle.autoscaler.deficit_streak, 3);
         assert_eq!(c.lifecycle.autoscaler.cooldown, secs(1.0));
+        assert_eq!(c.lifecycle.autoscaler.boot_delay, secs(2.5));
+        assert!(ServeConfig::from_toml(
+            "[cluster.autoscaler]\nboot_delay_s = -1.0\n",
+        )
+        .is_err());
         assert!(c.lifecycle.health.enabled);
         assert_eq!(c.lifecycle.health.alpha, 0.5);
         assert_eq!(c.lifecycle.health.lag_threshold, 250_000);

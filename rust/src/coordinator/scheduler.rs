@@ -62,4 +62,15 @@ pub trait Policy {
     fn decisions(&self) -> u64 {
         0
     }
+
+    /// Reschedules the policy proved unnecessary and skipped outright
+    /// (DESIGN.md "Control-plane incrementality"): for SLICE, arrival
+    /// boundaries whose new tasks provably cannot alter the admitted
+    /// set. Zero for policies without a skip path. The accounting
+    /// invariant `decisions + decisions_skipped` equals the decision
+    /// count of a skip-disabled run is pinned by the equivalence suite;
+    /// lands in `server::RunReport::decisions_skipped`.
+    fn decisions_skipped(&self) -> u64 {
+        0
+    }
 }

@@ -25,6 +25,16 @@
 //! O(n log n) per reschedule, zero steady-state allocation — while
 //! [`select_tasks_reference`] preserves the pre-optimization O(n²)
 //! path for equivalence tests and the bench trajectory.
+//!
+//! Cached-candidate path (DESIGN.md "Control-plane incrementality"):
+//! when candidate keys are immutable between reschedules (no utility
+//! adaptor, no memory dimension, no prefill debt), the caller maintains
+//! the sorted `(key, id, quota)` list incrementally across decisions
+//! and runs [`select_tasks_sorted`] — the greedy loop without the
+//! per-reschedule rebuild and sort. Because `(key, id)` pairs are
+//! unique, an order-maintained list reproduces the full sort
+//! bit-for-bit; [`admission_entry`] computes a single entry with
+//! exactly the expressions [`select_tasks_with`] uses.
 
 use crate::engine::latency::LatencyModel;
 use crate::util::Micros;
@@ -112,6 +122,17 @@ impl SelectionScratch {
     pub fn latency(&self) -> &LatencyModel {
         self.period.latency()
     }
+
+    /// Export the post-sort candidate order as maintained-cache entries
+    /// `(key, id, quota)` — the state [`select_tasks_sorted`] consumes.
+    /// Valid right after a [`select_tasks_with`] call; used to (re)seed
+    /// `SlicePolicy`'s cached list from a full rebuild.
+    pub fn export_sorted(&self, out: &mut Vec<(u64, TaskId, u32)>) {
+        out.clear();
+        out.extend(
+            self.keys.iter().map(|&(k, id, idx)| (k, id, self.quotas[idx as usize])),
+        );
+    }
 }
 
 /// Total-order sort key for a utility rate, descending: IEEE-754
@@ -126,6 +147,20 @@ fn rate_key_desc(rate: f64) -> u64 {
     let bits = (rate + 0.0).to_bits();
     let ascending = if bits >> 63 == 1 { !bits } else { bits | (1 << 63) };
     !ascending
+}
+
+/// One maintained-candidate entry `(packed descending-rate key, id,
+/// quota)` for the cached-candidate fast path: the exact expressions
+/// [`select_tasks_with`] evaluates per candidate, exposed so
+/// `SlicePolicy` can insert/remove single entries into its sorted cache
+/// without rebuilding the whole set. Sorting entries ascending by
+/// `(key, id)` reproduces the full path's total order because the pair
+/// is unique per pool (ids are unique and the idx tie-break is never
+/// reached).
+#[inline]
+pub fn admission_entry(utility: f64, tpot: Micros, id: TaskId) -> (u64, TaskId, u32) {
+    let rate = utility * (tpot as f64 / 1e6);
+    (rate_key_desc(rate), id, (1e6 / tpot as f64).ceil() as u32)
 }
 
 /// Algorithm 2: greedy utility-rate admission with Eq. (7) feasibility,
@@ -145,13 +180,18 @@ fn rate_key_desc(rate: f64) -> u64 {
 /// greedy loop is O(n log n) overall — the candidate sort — rather
 /// than O(n²) (bit-exact equivalence with [`select_tasks_reference`]
 /// is asserted in `rust/tests/equivalence.rs`).
+///
+/// Returns `true` iff selection terminated on a resource stop (cycle
+/// cap or KV overflow) rather than admitting everything / filling
+/// `max_batch` — the stop reason the reschedule-skip precondition needs
+/// to pick a sound admission threshold.
 pub fn select_tasks_with(
     scratch: &mut SelectionScratch,
     out: &mut Selection,
     candidates: &[Candidate],
     cycle_cap: Micros,
     kv_capacity: Option<u64>,
-) {
+) -> bool {
     scratch.keys.clear();
     scratch.quotas.clear();
     scratch.period.clear();
@@ -207,6 +247,48 @@ pub fn select_tasks_with(
         kv_used += kv_bytes;
         out.selected.push((id, q));
     }
+    stopped
+}
+
+/// The cached-candidate greedy loop: Algorithm 2 over an already-sorted
+/// maintained `(key, id, quota)` list, skipping the per-reschedule
+/// rebuild, re-adapt and sort of [`select_tasks_with`]. Only valid in
+/// the immutable-key regime (no utility adaptor, no memory dimension,
+/// no prefill debt — `SlicePolicy` gates on exactly that), where the
+/// KV dimension is inert and `cycle_cap` is the configured constant.
+/// Admission order over the same multiset of `(key, id)` pairs is
+/// identical to the full path's, so the output is bit-for-bit equal —
+/// pinned by `sorted_path_matches_full_path` below and the property
+/// suite. Returns the same stop-reason bool as [`select_tasks_with`].
+pub fn select_tasks_sorted(
+    scratch: &mut SelectionScratch,
+    out: &mut Selection,
+    sorted: &[(u64, TaskId, u32)],
+    cycle_cap: Micros,
+) -> bool {
+    scratch.period.clear();
+    out.selected.clear();
+    out.rejected.clear();
+    out.period = 0;
+    let max_batch = scratch.period.latency().max_batch;
+    let mut stopped = false;
+    for &(_, id, q) in sorted {
+        if stopped || out.selected.len() as u32 >= max_batch {
+            out.rejected.push(id);
+            continue;
+        }
+        let p = scratch.period.probe(q);
+        if p >= cycle_cap {
+            out.rejected.push(id);
+            stopped = true;
+            continue;
+        }
+        let committed = scratch.period.insert(q);
+        debug_assert_eq!(committed, p, "probe and insert must agree");
+        out.period = committed;
+        out.selected.push((id, q));
+    }
+    stopped
 }
 
 /// Convenience wrapper over [`select_tasks_with`] allocating fresh
@@ -538,5 +620,76 @@ mod tests {
             assert_eq!(out.rejected, reference.rejected);
             assert_eq!(out.period, reference.period);
         }
+    }
+
+    #[test]
+    fn admission_entry_matches_full_path_keys() {
+        // the maintained-cache entry must be byte-identical to what the
+        // full path computes and exports for the same candidate
+        let cands: Vec<Candidate> = (0..25)
+            .map(|i| cand(i, 1.0 + (i % 3) as f64, 50.0 + 10.0 * (i % 5) as f64))
+            .collect();
+        let mut scratch = SelectionScratch::new(model());
+        let mut out = Selection::default();
+        select_tasks_with(&mut scratch, &mut out, &cands, CYCLE_CAP, None);
+        let mut exported = Vec::new();
+        scratch.export_sorted(&mut exported);
+        assert_eq!(exported.len(), cands.len());
+        let mut built: Vec<(u64, TaskId, u32)> = cands
+            .iter()
+            .map(|c| admission_entry(c.utility, c.tpot, c.id))
+            .collect();
+        built.sort_unstable();
+        assert_eq!(exported, built);
+    }
+
+    #[test]
+    fn sorted_path_matches_full_path() {
+        // immutable-regime shapes (kv_bytes 0, no capacity): running the
+        // greedy loop over the exported sorted entries reproduces the
+        // full rebuild path bit-for-bit, including the stop reason
+        let shapes: Vec<Vec<Candidate>> = vec![
+            (0..30).map(|i| cand(i, 1.0, 50.0)).collect(), // cycle-stop
+            (0..9).map(|i| cand(i, 1.0, 120.0)).collect(), // all admitted
+            (0..25)
+                .map(|i| cand(i, 1.0 + (i % 3) as f64, 50.0 + 10.0 * (i % 5) as f64))
+                .collect(),
+            Vec::new(),
+        ];
+        for cands in shapes {
+            let mut scratch = SelectionScratch::new(model());
+            let mut full = Selection::default();
+            let full_stop =
+                select_tasks_with(&mut scratch, &mut full, &cands, CYCLE_CAP, None);
+            let mut sorted = Vec::new();
+            scratch.export_sorted(&mut sorted);
+            let mut fast = Selection::default();
+            let fast_stop =
+                select_tasks_sorted(&mut scratch, &mut fast, &sorted, CYCLE_CAP);
+            assert_eq!(full_stop, fast_stop);
+            assert_eq!(full.selected, fast.selected);
+            assert_eq!(full.rejected, fast.rejected);
+            assert_eq!(full.period, fast.period);
+        }
+    }
+
+    #[test]
+    fn sorted_path_respects_max_batch_without_stop() {
+        let mut l = model();
+        l.max_batch = 4;
+        let cands: Vec<Candidate> =
+            (0..10).map(|i| cand(i, 1.0, 250.0)).collect();
+        let mut scratch = SelectionScratch::new(l);
+        let mut full = Selection::default();
+        let full_stop =
+            select_tasks_with(&mut scratch, &mut full, &cands, CYCLE_CAP, None);
+        assert!(!full_stop, "max_batch cap is not a resource stop");
+        let mut sorted = Vec::new();
+        scratch.export_sorted(&mut sorted);
+        let mut fast = Selection::default();
+        let fast_stop = select_tasks_sorted(&mut scratch, &mut fast, &sorted, CYCLE_CAP);
+        assert!(!fast_stop);
+        assert_eq!(full.selected, fast.selected);
+        assert_eq!(full.rejected, fast.rejected);
     }
 }

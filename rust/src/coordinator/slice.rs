@@ -8,6 +8,17 @@
 //! dynamically-regrouped decode batch per column; a full sweep is one
 //! scheduling cycle delivering every admitted task its per-second token
 //! quota.
+//!
+//! Control-plane incrementality (DESIGN.md chapter of the same name):
+//! when candidate keys cannot change between reschedules — no utility
+//! adaptor, no memory dimension, no prefill-aware debt — the policy
+//! keeps the sorted `(key, id, quota)` candidate list alive *across*
+//! decisions, maintaining it with O(log n) binary insert/remove per
+//! arrival/departure instead of an O(n log n) rebuild, and skips a
+//! reschedule outright when every new arrival provably sorts past the
+//! last admission boundary (the admitted prefix cannot change). Both
+//! fast paths are bit-exact with the rebuild-every-time reference;
+//! `SliceConfig::incremental` turns them off for the equivalence suite.
 
 use std::collections::VecDeque;
 
@@ -19,7 +30,10 @@ use super::mask::DecodeMask;
 use super::pool::TaskPool;
 use super::preemption::UtilityAdaptor;
 use super::scheduler::{Policy, Step};
-use super::selection::{select_tasks_with, Candidate, Selection, SelectionScratch, CYCLE_CAP};
+use super::selection::{
+    admission_entry, select_tasks_sorted, select_tasks_with, Candidate, Selection,
+    SelectionScratch, CYCLE_CAP,
+};
 use super::task::{TaskId, TaskState};
 
 /// Memory-aware selection parameters (DESIGN.md "Memory model"): the
@@ -76,6 +90,13 @@ pub struct SliceConfig {
     /// fits the device's cache (`None` = memory-oblivious, the
     /// pre-memory behaviour).
     pub memory: Option<MemoryBudget>,
+    /// Enable the cross-decision fast paths (cached candidate list +
+    /// reschedule skipping) where they are sound — the immutable-key
+    /// regime: no adaptor, no memory dimension, not prefill-aware.
+    /// Bit-exact with `false` by construction; the switch exists so the
+    /// equivalence suite can pin that claim and so `decisions` keeps
+    /// its pre-PR 8 meaning when disabled.
+    pub incremental: bool,
 }
 
 impl Default for SliceConfig {
@@ -85,6 +106,7 @@ impl Default for SliceConfig {
             adaptor: UtilityAdaptor::None,
             prefill_aware: false,
             memory: None,
+            incremental: true,
         }
     }
 }
@@ -114,6 +136,14 @@ pub struct SlicePolicy {
     needs_reschedule: bool,
     /// Reschedule counter (observability / tests).
     pub reschedules: u64,
+    /// Arrival boundaries skipped by the precondition (observability;
+    /// `reschedules + decisions_skipped` equals a skip-disabled run's
+    /// `reschedules` exactly — pinned in `rust/tests/equivalence.rs`).
+    pub decisions_skipped: u64,
+    /// Reschedules that had to rebuild + re-sort the candidate list
+    /// from the pool instead of reusing the maintained cache (0 in the
+    /// immutable-key regime by construction).
+    pub full_rebuilds: u64,
     /// Candidate buffer rebuilt from the pool at each reschedule.
     candidates: Vec<Candidate>,
     /// Selection working memory (sort keys, quotas, incremental period).
@@ -122,12 +152,34 @@ pub struct SlicePolicy {
     sel: Selection,
     /// Decode-batch buffer, recycled by the serving loop.
     batch: Vec<TaskId>,
+    /// True iff candidate keys are provably constant between
+    /// reschedules under this config (see module doc) — the gate for
+    /// both cross-decision fast paths.
+    immutable: bool,
+    /// The maintained candidate cache, ascending by `(key, id)` —
+    /// exactly the full path's sort order (the pair is unique).
+    sorted: Vec<(u64, TaskId, u32)>,
+    /// Pool-mutation epoch: bumped on every arrival/completion batch.
+    generation: u64,
+    /// Epoch the cache was last synchronized at; the cached path runs
+    /// only when equal to `generation` (staleness guard).
+    cache_generation: u64,
+    /// Skip-precondition threshold from the last real selection: the
+    /// `(key, id)` of the admission boundary element. An arrival batch
+    /// whose entries all sort strictly after it cannot change the
+    /// admitted prefix. `None` = never skip (everything was admitted,
+    /// or no selection has run since the last departure).
+    threshold: Option<(u64, TaskId)>,
 }
 
 impl SlicePolicy {
     /// Build the policy from a device latency model and config.
     pub fn new(latency: LatencyModel, cfg: SliceConfig) -> Self {
         let scratch = SelectionScratch::new(latency.clone());
+        let immutable = cfg.incremental
+            && matches!(cfg.adaptor, UtilityAdaptor::None)
+            && cfg.memory.is_none()
+            && !cfg.prefill_aware;
         SlicePolicy {
             latency,
             cfg,
@@ -136,10 +188,17 @@ impl SlicePolicy {
             to_prefill: VecDeque::new(),
             needs_reschedule: false,
             reschedules: 0,
+            decisions_skipped: 0,
+            full_rebuilds: 0,
             candidates: Vec::new(),
             scratch,
             sel: Selection::default(),
             batch: Vec::new(),
+            immutable,
+            sorted: Vec::new(),
+            generation: 0,
+            cache_generation: 0,
+            threshold: None,
         }
     }
 
@@ -153,43 +212,91 @@ impl SlicePolicy {
     fn reschedule(&mut self, pool: &mut TaskPool, _now: Micros) {
         self.reschedules += 1;
 
-        // One pass over the pool builds the candidate list (Alg. 4
-        // line 17: adapt utilities before selection) and accumulates
-        // the pending prefill debt the prefill-aware extension charges
-        // against the cycle budget (see SliceConfig).
-        self.candidates.clear();
-        let mut prefill_debt: Micros = 0;
-        for t in pool.iter() {
-            if t.is_finished() {
-                continue;
-            }
-            if self.cfg.prefill_aware && t.prefill_end.is_none() {
-                prefill_debt += self.latency.prefill(t.prompt_len);
-            }
-            self.candidates.push(Candidate {
-                id: t.id,
-                utility: self.cfg.adaptor.effective(t),
-                tpot: t.slo.tpot,
-                kv_bytes: self
-                    .cfg
-                    .memory
-                    .as_ref()
-                    .map_or(0, |m| m.footprint_bytes(t.seq_len())),
-            });
-        }
-        let cycle_cap = if self.cfg.prefill_aware {
-            self.cfg.cycle_cap.saturating_sub(prefill_debt.min(self.cfg.cycle_cap / 2))
+        let stopped = if self.immutable && self.cache_generation == self.generation {
+            // Cached path: keys are immutable and the maintained sorted
+            // list is in sync with the pool, so the greedy loop runs
+            // directly over it — no pool pass, no re-adapt, no sort.
+            select_tasks_sorted(
+                &mut self.scratch,
+                &mut self.sel,
+                &self.sorted,
+                self.cfg.cycle_cap,
+            )
         } else {
-            self.cfg.cycle_cap
+            self.full_rebuilds += 1;
+            // One pass over the pool builds the candidate list (Alg. 4
+            // line 17: adapt utilities before selection) and accumulates
+            // the pending prefill debt the prefill-aware extension
+            // charges against the cycle budget (see SliceConfig).
+            self.candidates.clear();
+            let mut prefill_debt: Micros = 0;
+            for t in pool.iter() {
+                if t.is_finished() {
+                    continue;
+                }
+                if self.cfg.prefill_aware && t.prefill_end.is_none() {
+                    prefill_debt += self.latency.prefill(t.prompt_len);
+                }
+                self.candidates.push(Candidate {
+                    id: t.id,
+                    utility: self.cfg.adaptor.effective(t),
+                    tpot: t.slo.tpot,
+                    kv_bytes: self
+                        .cfg
+                        .memory
+                        .as_ref()
+                        .map_or(0, |m| m.footprint_bytes(t.seq_len())),
+                });
+            }
+            let cycle_cap = if self.cfg.prefill_aware {
+                self.cfg.cycle_cap.saturating_sub(prefill_debt.min(self.cfg.cycle_cap / 2))
+            } else {
+                self.cfg.cycle_cap
+            };
+            let kv_capacity = self.cfg.memory.as_ref().map(|m| m.capacity);
+            let stopped = select_tasks_with(
+                &mut self.scratch,
+                &mut self.sel,
+                &self.candidates,
+                cycle_cap,
+                kv_capacity,
+            );
+            if self.immutable {
+                // (re)seed the maintained cache from the rebuild so the
+                // cached path takes over from here
+                self.scratch.export_sorted(&mut self.sorted);
+                self.cache_generation = self.generation;
+            }
+            stopped
         };
-        let kv_capacity = self.cfg.memory.as_ref().map(|m| m.capacity);
-        select_tasks_with(
-            &mut self.scratch,
-            &mut self.sel,
-            &self.candidates,
-            cycle_cap,
-            kv_capacity,
-        );
+
+        // Skip-precondition threshold (see `threshold` field): the
+        // admission boundary after this selection. Only meaningful in
+        // the immutable regime, where `sorted` mirrors the selection
+        // order — `selected` is exactly its k-long prefix.
+        self.threshold = if !self.immutable {
+            None
+        } else {
+            let k = self.sel.selected.len();
+            if k == self.sorted.len() {
+                // everything admitted: any arrival could extend the set
+                None
+            } else if stopped {
+                // resource stop: the first rejected element triggered
+                // it; an arrival sorting before it would be probed
+                // earlier and might fit, so it is the boundary
+                let (key, id, _) = self.sorted[k];
+                Some((key, id))
+            } else if k > 0 {
+                // max_batch stop: the boundary is the worst admitted
+                // element — anything sorting after it lands in the
+                // rejected region regardless
+                let (key, id, _) = self.sorted[k - 1];
+                Some((key, id))
+            } else {
+                None // max_batch == 0 degenerate shape
+            }
+        };
 
         // Update task states and the prefill queue.
         self.to_prefill.clear();
@@ -230,6 +337,14 @@ impl SlicePolicy {
     pub fn admitted(&self) -> Vec<TaskId> {
         self.mask.rows().iter().map(|&(id, _)| id).collect()
     }
+
+    /// The maintained candidate cache, ascending by `(key, id)` — the
+    /// property suite pins it against a fresh pool rebuild after
+    /// arbitrary mutation sequences. Empty until the first reschedule
+    /// seeds it; meaningless outside the immutable regime.
+    pub fn cached_candidates(&self) -> &[(u64, TaskId, u32)] {
+        &self.sorted
+    }
 }
 
 impl Policy for SlicePolicy {
@@ -237,12 +352,68 @@ impl Policy for SlicePolicy {
         "SLICE"
     }
 
-    fn on_arrival(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
-        // interruption event: re-run the offline algorithm (Alg. 4)
-        self.needs_reschedule = true;
+    fn on_arrival(&mut self, pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        self.generation += 1;
+        if !self.immutable {
+            // interruption event: re-run the offline algorithm (Alg. 4)
+            self.needs_reschedule = true;
+            return;
+        }
+        // Maintain the sorted cache (binary insert per task) and
+        // evaluate the skip precondition in the same pass: the batch is
+        // skippable iff a threshold from a live selection exists, no
+        // other interruption is pending, and every new entry sorts
+        // strictly after the admission boundary.
+        let mut skip = !self.needs_reschedule && self.threshold.is_some() && !ids.is_empty();
+        let (t_key, t_id) = self.threshold.unwrap_or((0, 0));
+        for &id in ids {
+            let t = pool.get(id);
+            let entry = admission_entry(self.cfg.adaptor.effective(t), t.slo.tpot, id);
+            if skip && (entry.0, entry.1) <= (t_key, t_id) {
+                skip = false;
+            }
+            let pos = self
+                .sorted
+                .partition_point(|&(k, tid, _)| (k, tid) < (entry.0, entry.1));
+            self.sorted.insert(pos, entry);
+        }
+        self.cache_generation = self.generation;
+        if skip {
+            // Provably a no-op reschedule: the admitted prefix, mask and
+            // prefill queue are untouched; the new tasks stay Waiting,
+            // exactly what the rebuild would leave. The one side effect
+            // a real reschedule has on the scan — resetting the column
+            // cursor — is replicated so decode order stays bit-exact.
+            self.decisions_skipped += 1;
+            self.col = 0;
+        } else {
+            self.needs_reschedule = true;
+        }
     }
 
-    fn on_completion(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
+    fn on_completion(&mut self, pool: &mut TaskPool, ids: &[TaskId], _now: Micros) {
+        self.generation += 1;
+        if self.immutable {
+            // Departures notify with the finished husk still pooled
+            // (utility and TPOT intact), so the removal key is exactly
+            // the insertion key — binary remove per task.
+            for &id in ids {
+                let t = pool.get(id);
+                let (key, _, _) = admission_entry(self.cfg.adaptor.effective(t), t.slo.tpot, id);
+                let pos = self
+                    .sorted
+                    .partition_point(|&(k, tid, _)| (k, tid) < (key, id));
+                debug_assert!(
+                    pos < self.sorted.len() && self.sorted[pos].1 == id,
+                    "departing task missing from candidate cache"
+                );
+                self.sorted.remove(pos);
+            }
+            self.cache_generation = self.generation;
+        }
+        // A departure shrinks the admitted set (freed quota may admit a
+        // paused task), so it always forces a reschedule; the stale
+        // threshold is guarded by needs_reschedule until then.
         self.needs_reschedule = true;
     }
 
@@ -298,6 +469,10 @@ impl Policy for SlicePolicy {
 
     fn decisions(&self) -> u64 {
         self.reschedules
+    }
+
+    fn decisions_skipped(&self) -> u64 {
+        self.decisions_skipped
     }
 }
 
@@ -480,5 +655,128 @@ mod tests {
         let mut pool = TaskPool::new();
         let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
         assert_eq!(p.next_step(&mut pool, 0), Step::Idle);
+    }
+
+    /// Drive the incremental and the skip-disabled policy in lockstep,
+    /// asserting identical steps (prefills replayed into both pools).
+    fn lockstep_steps(
+        a: &mut SlicePolicy,
+        pool_a: &mut TaskPool,
+        b: &mut SlicePolicy,
+        pool_b: &mut TaskPool,
+        now: &mut Micros,
+        n: usize,
+    ) {
+        for _ in 0..n {
+            let sa = a.next_step(pool_a, *now);
+            let sb = b.next_step(pool_b, *now);
+            assert_eq!(sa, sb, "incremental and disabled policies diverged");
+            *now += 1;
+            if let Step::Prefill { task } = sa {
+                mark_prefilled(pool_a, task, *now);
+                mark_prefilled(pool_b, task, *now);
+            }
+        }
+    }
+
+    #[test]
+    fn low_rate_arrival_is_skipped_bit_exactly() {
+        // overloaded pool (cycle-stop): a later arrival sorting past the
+        // admission boundary is provably a no-op — the incremental
+        // policy skips the reschedule, the disabled one pays for it,
+        // and the emitted steps stay identical
+        let mk_pool = || {
+            pool_with(
+                (0..30)
+                    .map(|i| Task::new(i, TaskClass::RealTime, 0, 16, 50, 100.0))
+                    .collect(),
+            )
+        };
+        let mut pool_a = mk_pool();
+        let mut pool_b = mk_pool();
+        let mut a = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        let mut b = SlicePolicy::new(
+            LatencyModel::paper_calibrated(),
+            SliceConfig { incremental: false, ..SliceConfig::default() },
+        );
+        let ids: Vec<TaskId> = (0..30).collect();
+        a.on_arrival(&mut pool_a, &ids, 0);
+        b.on_arrival(&mut pool_b, &ids, 0);
+        let mut now: Micros = 0;
+        lockstep_steps(&mut a, &mut pool_a, &mut b, &mut pool_b, &mut now, 5);
+        assert_eq!(a.reschedules, 1);
+
+        // rate 0.001 * 0.05 — far below the boundary: skip
+        pool_a.insert(Task::new(100, TaskClass::Voice, now, 16, 50, 0.001));
+        pool_b.insert(Task::new(100, TaskClass::Voice, now, 16, 50, 0.001));
+        a.on_arrival(&mut pool_a, &[100], now);
+        b.on_arrival(&mut pool_b, &[100], now);
+        assert_eq!(a.decisions_skipped, 1, "arrival past the boundary skips");
+        assert_eq!(a.reschedules, 1);
+        lockstep_steps(&mut a, &mut pool_a, &mut b, &mut pool_b, &mut now, 10);
+        assert_eq!(b.reschedules, 2);
+        assert_eq!(
+            a.reschedules + a.decisions_skipped,
+            b.reschedules,
+            "skip accounting identity"
+        );
+        assert_eq!(pool_a.get(100).state, pool_b.get(100).state);
+
+        // a high-rate arrival beats the boundary: both must reschedule
+        pool_a.insert(Task::new(101, TaskClass::RealTime, now, 16, 50, 1e6));
+        pool_b.insert(Task::new(101, TaskClass::RealTime, now, 16, 50, 1e6));
+        a.on_arrival(&mut pool_a, &[101], now);
+        b.on_arrival(&mut pool_b, &[101], now);
+        lockstep_steps(&mut a, &mut pool_a, &mut b, &mut pool_b, &mut now, 10);
+        assert_eq!(a.decisions_skipped, 1);
+        assert_eq!(b.reschedules, 3);
+        assert_eq!(a.reschedules + a.decisions_skipped, b.reschedules);
+        assert_eq!(a.full_rebuilds, 0, "immutable regime never rebuilds");
+    }
+
+    #[test]
+    fn no_skip_when_everything_is_admitted() {
+        // 2 tasks, both admitted -> no admission boundary -> a third
+        // arrival must reschedule even though its rate is the lowest
+        let mut pool = pool_with(vec![
+            Task::new(0, TaskClass::RealTime, 0, 16, 10, 100.0),
+            Task::new(1, TaskClass::Voice, 0, 16, 10, 1.0),
+        ]);
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &[0, 1], 0);
+        let _ = p.next_step(&mut pool, 0);
+        pool.insert(Task::new(2, TaskClass::Voice, 0, 16, 10, 0.001));
+        p.on_arrival(&mut pool, &[2], 0);
+        let _ = p.next_step(&mut pool, 0);
+        assert_eq!(p.decisions_skipped, 0);
+        assert_eq!(p.reschedules, 2);
+        assert!(p.admitted().contains(&2), "third task joins the admitted set");
+    }
+
+    #[test]
+    fn completion_blocks_skip_until_next_selection() {
+        // overload, then a completion (stale boundary), then a low-rate
+        // arrival before any next_step: the skip must not fire
+        let mut pool = pool_with(
+            (0..30)
+                .map(|i| Task::new(i, TaskClass::RealTime, 0, 16, 50, 100.0))
+                .collect(),
+        );
+        let ids: Vec<TaskId> = (0..30).collect();
+        let mut p = SlicePolicy::with_defaults(LatencyModel::paper_calibrated());
+        p.on_arrival(&mut pool, &ids, 0);
+        let _ = p.next_step(&mut pool, 0);
+        // finish task 0 by hand (as the serving loop would after its
+        // last token) and notify
+        mark_prefilled(&mut pool, 0, 1);
+        let t = pool.get_mut(0);
+        t.tokens_generated = 50;
+        t.state = TaskState::Finished;
+        p.on_completion(&mut pool, &[0], 2);
+        pool.insert(Task::new(100, TaskClass::Voice, 2, 16, 50, 0.001));
+        p.on_arrival(&mut pool, &[100], 2);
+        assert_eq!(p.decisions_skipped, 0, "pending departure blocks the skip");
+        let _ = p.next_step(&mut pool, 3);
+        assert_eq!(p.reschedules, 2);
     }
 }

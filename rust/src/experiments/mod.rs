@@ -98,6 +98,7 @@ pub fn build_policy_for(
                     adaptor: cfg.adaptor,
                     prefill_aware: cfg.prefill_aware,
                     memory: MemoryBudget::from_config(&cfg.memory, profile.kv_capacity),
+                    incremental: cfg.incremental,
                 },
             ))
         }
@@ -172,30 +173,7 @@ pub fn run_fleet(
     cfg: &ServeConfig,
     drain: Micros,
 ) -> Result<ClusterReport> {
-    // thread the configured base capacity into the spec unless the spec
-    // already carries explicit per-replica capacities
-    let spec = if cfg.memory.constrained()
-        && spec.profiles.iter().all(|p| p.kv_capacity.is_none())
-    {
-        spec.clone().with_kv_capacity(cfg.memory.kv_capacity)
-    } else {
-        spec.clone()
-    };
-    let fleet: Vec<Replica> = spec
-        .profiles
-        .iter()
-        .enumerate()
-        .map(|(i, profile)| {
-            let mut profile = profile.clone();
-            profile.latency.max_batch = cfg.max_batch.min(profile.max_batch);
-            Replica::new(
-                i,
-                build_policy_for(cfg.policy, cfg, &profile),
-                Box::new(build_engine_for(cfg, &profile)),
-                profile,
-            )
-        })
-        .collect();
+    let (spec, fleet) = build_fleet_for(spec, cfg);
     // the two engines are bit-exact (rust/tests/equivalence.rs); the
     // config picks which one advances the fleet
     match cfg.cluster_engine {
@@ -241,6 +219,65 @@ pub fn run_fleet(
             orch.run(workload, drain)
         }
     }
+}
+
+/// Materialize a fleet from a spec: thread the configured base KV
+/// capacity into the spec unless it already carries explicit
+/// per-replica capacities, then build each replica with a fresh policy
+/// and engine calibrated to its own profile.
+fn build_fleet_for(spec: &FleetSpec, cfg: &ServeConfig) -> (FleetSpec, Vec<Replica>) {
+    let spec = if cfg.memory.constrained()
+        && spec.profiles.iter().all(|p| p.kv_capacity.is_none())
+    {
+        spec.clone().with_kv_capacity(cfg.memory.kv_capacity)
+    } else {
+        spec.clone()
+    };
+    let fleet: Vec<Replica> = spec
+        .profiles
+        .iter()
+        .enumerate()
+        .map(|(i, profile)| {
+            let mut profile = profile.clone();
+            profile.latency.max_batch = cfg.max_batch.min(profile.max_batch);
+            Replica::new(
+                i,
+                build_policy_for(cfg.policy, cfg, &profile),
+                Box::new(build_engine_for(cfg, &profile)),
+                profile,
+            )
+        })
+        .collect();
+    (spec, fleet)
+}
+
+/// [`run_fleet`] over a pull-based arrival stream: the event engine
+/// consumes tasks one at a time (constant memory in the trace length)
+/// and folds rejected tasks into a counter
+/// (`ClusterReport::rejected_folded`) instead of retaining them — the
+/// million-task scale-sweep path. Static fleets only (streaming has no
+/// horizon up front, which the lifecycle schedule needs).
+pub fn run_fleet_stream<I>(
+    strategy: RoutingStrategy,
+    spec: &FleetSpec,
+    arrivals: I,
+    cfg: &ServeConfig,
+    drain: Micros,
+) -> Result<ClusterReport>
+where
+    I: IntoIterator<Item = Task>,
+{
+    if cfg.lifecycle.any_enabled() {
+        bail!("streaming runs use static fleets (no lifecycle/autoscaler/health)");
+    }
+    let (_, fleet) = build_fleet_for(spec, cfg);
+    Orchestrator::new(strategy, fleet)
+        .with_admission(cfg.cluster_admission)
+        .with_migration(cfg.cluster_migration)
+        .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+        .with_fold_rejects(true)
+        .run_stream(arrivals, drain)
+        .map(|(report, _)| report)
 }
 
 /// Default drain window after the last arrival (virtual seconds).

@@ -53,6 +53,11 @@ pub const DEFAULT_REPLICA_COUNTS: [usize; 3] = [16, 64, 256];
 /// bursts to keep every replica busy (override with `--tasks`).
 pub const DEFAULT_REPLICA_SIZES: [usize; 2] = [10_000, 100_000];
 
+/// Default task counts for the streaming axis (`--stream`, BENCH_8.json):
+/// one comparison point shared with the eager sweep plus the million-task
+/// cell that only fits in memory because arrivals are pulled lazily.
+pub const DEFAULT_STREAM_SIZES: [usize; 2] = [10_000, 1_000_000];
+
 /// Virtual seconds the whole burst arrives within — the arrival rate is
 /// `n / ARRIVAL_WINDOW_S`, so the standing queue reaches ~n tasks for
 /// every sweep size.
@@ -84,6 +89,16 @@ pub struct ScaleCell {
     /// Scheduling decisions: policy reschedules plus (for fleets) one
     /// routing decision per arrival.
     pub decisions: u64,
+    /// Reschedules the O(changes) control plane proved unnecessary and
+    /// skipped (DESIGN.md "Control-plane incrementality");
+    /// `decisions + decisions_skipped` equals the decision count with
+    /// skipping disabled.
+    pub decisions_skipped: u64,
+    /// Full migration passes the controller ran (edge-mixed cells; the
+    /// event engine runs O(overload episodes), lockstep O(arrivals)).
+    pub migration_passes: u64,
+    /// Overload-triggered migration checks (event engine only).
+    pub migration_checks: u64,
     /// `decisions / wall_s`.
     pub decisions_per_sec: f64,
     /// Engine steps executed.
@@ -111,11 +126,20 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
     let drain: Micros = secs(DRAIN_S);
 
     let start = Instant::now();
-    let (decisions, steps, end_time, finished, rejected, slo) = match fleet {
+    let (decisions, skipped, mig, steps, end_time, finished, rejected, slo) = match fleet {
         "single" => {
             let report = run_sim(PolicyKind::Slice, workload, &cfg, drain)?;
             let a = Attainment::compute(&report.tasks);
-            (report.decisions, report.steps, report.end_time, a.n_finished, 0, a.slo)
+            (
+                report.decisions,
+                report.decisions_skipped,
+                (0, 0),
+                report.steps,
+                report.end_time,
+                a.n_finished,
+                0,
+                a.slo,
+            )
         }
         "edge-mixed" => {
             // headroom admission + overload migration: the guard
@@ -138,6 +162,8 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
                 // one routing decision per arrival plus every replica's
                 // reschedules
                 report.total_decisions() + a.n_tasks as u64,
+                report.total_decisions_skipped(),
+                (report.migration_passes, report.migration_checks),
                 report.total_steps(),
                 end,
                 a.n_finished,
@@ -158,11 +184,74 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
         wall_s,
         virtual_s: end_time as f64 / 1e6,
         decisions,
+        decisions_skipped: skipped,
+        migration_passes: mig.0,
+        migration_checks: mig.1,
         decisions_per_sec: decisions as f64 / wall_s,
         steps,
         steps_per_sec: steps as f64 / wall_s,
         finished,
         rejected,
+        slo,
+    })
+}
+
+/// Run one streaming cell: the edge-mixed guard fleet fed by a seeded
+/// [`crate::workload::ArrivalStream`] through the event engine with
+/// folded rejects — constant memory in the trace length, which is what
+/// makes the million-task cell feasible. Attainment counts folded shed
+/// tasks as misses, matching the materialized cells' semantics.
+pub fn run_stream_cell(n_tasks: usize, cfg: &ServeConfig) -> Result<ScaleCell> {
+    let mut cfg = cfg.clone();
+    cfg.n_tasks = n_tasks;
+    cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
+    cfg.policy = PolicyKind::Slice;
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    cfg.cluster_engine = ClusterEngine::Event;
+    let stream =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .stream();
+    let spec = FleetSpec::preset("edge-mixed")?.with_cycle_cap(cfg.cycle_cap);
+    let drain: Micros = secs(DRAIN_S);
+
+    let start = Instant::now();
+    let report =
+        super::run_fleet_stream(RoutingStrategy::SloAware, &spec, stream, &cfg, drain)?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let tasks = report.tasks();
+    let a = Attainment::compute(&tasks);
+    let end = report.replicas.iter().map(|r| r.report.end_time).max().unwrap_or(0);
+    let decisions = report.total_decisions() + n_tasks as u64;
+    let steps = report.total_steps();
+    // folded rejects never reach `tasks()`: scale the routed-set
+    // attainment so each folded shed counts as a miss, the same
+    // denominator the materialized cells use
+    let denom = a.n_tasks as u64 + report.rejected_folded;
+    let slo = if denom == 0 || a.n_tasks == 0 {
+        f64::NAN
+    } else {
+        a.slo * a.n_tasks as f64 / denom as f64
+    };
+    Ok(ScaleCell {
+        fleet: "edge-stream",
+        engine: ClusterEngine::Event,
+        replicas: 4,
+        n_tasks,
+        rate: cfg.arrival_rate,
+        wall_s,
+        virtual_s: end as f64 / 1e6,
+        decisions,
+        decisions_skipped: report.total_decisions_skipped(),
+        migration_passes: report.migration_passes,
+        migration_checks: report.migration_checks,
+        decisions_per_sec: decisions as f64 / wall_s,
+        steps,
+        steps_per_sec: steps as f64 / wall_s,
+        finished: a.n_finished,
+        rejected: report.rejected_count(),
         slo,
     })
 }
@@ -211,6 +300,9 @@ pub fn run_replica_cell(
         wall_s,
         virtual_s: end as f64 / 1e6,
         decisions,
+        decisions_skipped: report.total_decisions_skipped(),
+        migration_passes: report.migration_passes,
+        migration_checks: report.migration_checks,
         decisions_per_sec: decisions as f64 / wall_s,
         steps,
         steps_per_sec: steps as f64 / wall_s,
@@ -224,7 +316,8 @@ fn render_rows(rows: &[ScaleCell]) {
     use crate::metrics::report::{pct, Table};
     let mut t = Table::new(&[
         "fleet", "engine", "repl", "tasks", "rate/s", "wall s", "decisions",
-        "decisions/s", "steps", "steps/s", "finished", "shed", "SLO",
+        "skipped", "mig pass", "decisions/s", "steps", "steps/s", "finished",
+        "shed", "SLO",
     ]);
     for c in rows {
         t.row(vec![
@@ -235,6 +328,8 @@ fn render_rows(rows: &[ScaleCell]) {
             format!("{:.1}", c.rate),
             format!("{:.3}", c.wall_s),
             c.decisions.to_string(),
+            c.decisions_skipped.to_string(),
+            c.migration_passes.to_string(),
             format!("{:.0}", c.decisions_per_sec),
             c.steps.to_string(),
             format!("{:.0}", c.steps_per_sec),
@@ -260,6 +355,9 @@ fn rows_to_json(rows: &[ScaleCell]) -> Json {
                     .set("wall_s", c.wall_s)
                     .set("virtual_s", c.virtual_s)
                     .set("decisions", c.decisions)
+                    .set("decisions_skipped", c.decisions_skipped)
+                    .set("migration_passes", c.migration_passes)
+                    .set("migration_checks", c.migration_checks)
                     .set("decisions_per_sec", c.decisions_per_sec)
                     .set("steps", c.steps)
                     .set("steps_per_sec", c.steps_per_sec)
@@ -285,6 +383,27 @@ pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
         "Scale sweep — SLICE, {ARRIVAL_WINDOW_S:.0}s arrival window, \
          {DRAIN_S:.0}s drain, seed {} (edge-mixed: slo-aware + headroom \
          admission + migration)\n",
+        cfg.seed
+    );
+    render_rows(&rows);
+    Ok(rows_to_json(&rows))
+}
+
+/// Streaming sweep (`experiment scale --stream`, BENCH_8.json): one
+/// edge-mixed cell per size, fed by the constant-memory
+/// [`crate::workload::ArrivalStream`] with folded rejects — the only
+/// way the million-task cell fits in memory. Prints the table and
+/// returns the JSON series (same keys as [`run`]).
+pub fn run_streaming(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
+    let mut rows: Vec<ScaleCell> = Vec::new();
+    for &n in sizes {
+        rows.push(run_stream_cell(n, cfg)?);
+    }
+
+    println!(
+        "Streaming scale sweep — SLICE edge-mixed, pull-based arrivals + \
+         folded rejects, {ARRIVAL_WINDOW_S:.0}s arrival window, {DRAIN_S:.0}s \
+         drain, seed {}\n",
         cfg.seed
     );
     render_rows(&rows);
@@ -342,6 +461,32 @@ mod tests {
     #[test]
     fn unknown_fleet_rejected() {
         assert!(run_cell("mesh", 10, &ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn stream_cell_matches_materialized_run() {
+        // the streaming path (pull-based arrivals + folded rejects)
+        // must reproduce the materialized edge-mixed cell's simulation
+        // observables; only wall time may differ
+        let mut cfg = ServeConfig::default();
+        cfg.cluster_engine = ClusterEngine::Event;
+        let eager = run_cell("edge-mixed", 300, &cfg).unwrap();
+        let streamed = run_stream_cell(300, &cfg).unwrap();
+        assert_eq!(streamed.decisions, eager.decisions);
+        assert_eq!(streamed.decisions_skipped, eager.decisions_skipped);
+        assert_eq!(streamed.steps, eager.steps);
+        assert_eq!(streamed.finished, eager.finished);
+        assert_eq!(streamed.rejected, eager.rejected, "folded count = list count");
+        assert_eq!(streamed.virtual_s, eager.virtual_s);
+        assert_eq!(streamed.migration_passes, eager.migration_passes);
+        if !eager.slo.is_nan() {
+            assert!(
+                (streamed.slo - eager.slo).abs() < 1e-12,
+                "shed-as-miss attainment must match: {} vs {}",
+                streamed.slo,
+                eager.slo
+            );
+        }
     }
 
     #[test]

@@ -67,7 +67,8 @@ USAGE:
                     [--handoff-bandwidth <MB/s>] [--preemption swap|recompute]
                     [--memory-aware on|off]
                     [--crash-at <s[,s,...]>] [--churn <events/s>] [--churn-seed <n>]
-                    [--autoscale on|off] [--fleet-min <n>] [--fleet-max <n>]
+                    [--autoscale on|off] [--boot-delay <s>]
+                    [--fleet-min <n>] [--fleet-max <n>]
                     [--health on|off]  (elastic flags imply --engine event)
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
@@ -77,7 +78,10 @@ USAGE:
                     (scale: [--tasks <n>] runs one custom size instead of
                      the 1k/4k/10k default; [--replicas <n[,n,...]>] runs the
                      replica-width axis — event + lockstep engines over
-                     homogeneous fleets, BENCH_6.json; excluded from 'all')
+                     homogeneous fleets, BENCH_6.json; [--stream] runs the
+                     constant-memory streaming axis — pull-based arrivals +
+                     folded rejects up to 1M tasks, BENCH_8.json; excluded
+                     from 'all')
                     (elastic: static/crash/autoscale variants of the
                      edge-mixed overload cell, BENCH_7.json; [--tasks <n>]
                      runs one custom size; excluded from 'all')
@@ -95,9 +99,16 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = Vec::new();
         let mut i = 0;
+        // flags that take no value (presence is the signal)
+        const BARE_FLAGS: &[&str] = &["stream"];
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
+                if BARE_FLAGS.contains(&name) {
+                    flags.push((name.to_string(), "on".to_string()));
+                    i += 1;
+                    continue;
+                }
                 let value = argv
                     .get(i + 1)
                     .with_context(|| format!("flag --{name} needs a value"))?
@@ -412,6 +423,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(s) = args.flag("autoscale") {
         cfg.lifecycle.autoscaler.enabled = flag_switch("autoscale", s)?;
     }
+    if let Some(v) = args.flag_f64("boot-delay")? {
+        if v < 0.0 {
+            bail!("--boot-delay must be non-negative seconds");
+        }
+        cfg.lifecycle.autoscaler.boot_delay = secs(v);
+        // same rule as the [cluster.autoscaler] keys: a named knob opts
+        // the autoscaler in unless --autoscale off is explicit
+        if args.flag("autoscale").is_none() {
+            cfg.lifecycle.autoscaler.enabled = true;
+        }
+    }
     if let Some(s) = args.flag("health") {
         cfg.lifecycle.health.enabled = flag_switch("health", s)?;
     }
@@ -599,7 +621,19 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 Some(_) => bail!("--tasks must be >= 1"),
                 None => None,
             };
-            if let Some(spec) = args.flag("replicas") {
+            if args.flag("stream").is_some() {
+                if args.flag("replicas").is_some() {
+                    bail!("--stream and --replicas are different scale axes; pick one");
+                }
+                let sizes = match tasks {
+                    Some(n) => vec![n],
+                    None => experiments::scale_sweep::DEFAULT_STREAM_SIZES.to_vec(),
+                };
+                out = out.set(
+                    "stream_sweep",
+                    experiments::scale_sweep::run_streaming(&cfg, &sizes)?,
+                )
+            } else if let Some(spec) = args.flag("replicas") {
                 let counts = spec
                     .split(',')
                     .map(|s| {

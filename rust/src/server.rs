@@ -44,6 +44,11 @@ pub struct RunReport {
     /// reschedules for SLICE; zero for policies that don't count) —
     /// the numerator of the scale sweep's decisions-per-second.
     pub decisions: u64,
+    /// Reschedules the policy proved unnecessary and skipped (SLICE's
+    /// arrival-boundary precondition, DESIGN.md "Control-plane
+    /// incrementality"); `decisions + decisions_skipped` equals the
+    /// decision count of a skip-disabled run exactly.
+    pub decisions_skipped: u64,
     /// Tasks shed mid-run because their KV footprint could never fit
     /// the device's capacity (each is terminal, unserved, and counts
     /// as an SLO violation — see [`Task::shed`]).
@@ -625,6 +630,7 @@ impl<C: Clock> Server<C> {
             policy: self.policy.name(),
             end_time: self.clock.now(),
             decisions: self.policy.decisions(),
+            decisions_skipped: self.policy.decisions_skipped(),
             tasks: self.pool.into_tasks(),
             steps: self.steps,
             decode_steps: self.decode_steps,

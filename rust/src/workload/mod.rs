@@ -141,36 +141,90 @@ impl WorkloadSpec {
     }
 
     /// Generate the workload: tasks with dense ids, sorted by arrival.
+    /// Exactly [`WorkloadSpec::stream`] collected — pinned by
+    /// `stream_matches_generate`.
     pub fn generate(&self) -> Vec<Task> {
-        let mut rng = Rng::new(self.seed);
-        let weights: Vec<f64> = self.mix.iter().map(|&(_, w)| w).collect();
-        let mut tasks = Vec::with_capacity(self.n_tasks);
-        let mut t = 0.0f64; // seconds
-        for id in 0..self.n_tasks {
-            if id > 0 {
-                t += rng.exponential(self.arrival_rate);
-            }
-            let profile = self.mix[rng.weighted_index(&weights)].0;
-            let prompt_len =
-                rng.range_u64(profile.prompt_range.0 as u64, profile.prompt_range.1 as u64) as u32;
-            let output_len =
-                rng.range_u64(profile.output_range.0 as u64, profile.output_range.1 as u64) as u32;
-            let mut task = Task::new(
-                id as u64,
-                profile.class,
-                secs(t),
-                prompt_len,
-                output_len,
-                profile.utility,
-            );
-            if self.with_prompt_bytes {
-                task.prompt = synthetic_prompt(profile.class, prompt_len, &mut rng);
-            }
-            tasks.push(task);
+        self.stream().collect()
+    }
+
+    /// Pull-based generation: the same seeded task sequence as
+    /// [`WorkloadSpec::generate`] (identical RNG draw order, so the
+    /// tasks are bit-identical), produced one at a time so million-task
+    /// traces never materialize — the constant-memory source for
+    /// [`crate::cluster::Orchestrator::run_stream`].
+    pub fn stream(&self) -> ArrivalStream {
+        ArrivalStream {
+            rng: Rng::new(self.seed),
+            weights: self.mix.iter().map(|&(_, w)| w).collect(),
+            mix: self.mix.clone(),
+            with_prompt_bytes: self.with_prompt_bytes,
+            arrival_rate: self.arrival_rate,
+            remaining: self.n_tasks,
+            next_id: 0,
+            t: 0.0,
         }
-        tasks
     }
 }
+
+/// Seeded, deterministic, constant-memory workload iterator — see
+/// [`WorkloadSpec::stream`]. Yields tasks with dense ids sorted by
+/// arrival; memory use is O(mix), independent of the trace length.
+pub struct ArrivalStream {
+    rng: Rng,
+    weights: Vec<f64>,
+    mix: Vec<(ClassProfile, f64)>,
+    with_prompt_bytes: bool,
+    arrival_rate: f64,
+    remaining: usize,
+    next_id: u64,
+    /// Current arrival time (seconds — the generator's native unit).
+    t: f64,
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Task;
+
+    fn next(&mut self) -> Option<Task> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        // one task = the exact per-task draw order `generate` used:
+        // gap (after the first), class, prompt len, output len, prompt
+        if id > 0 {
+            self.t += self.rng.exponential(self.arrival_rate);
+        }
+        let profile = self.mix[self.rng.weighted_index(&self.weights)].0;
+        let prompt_len = self
+            .rng
+            .range_u64(profile.prompt_range.0 as u64, profile.prompt_range.1 as u64)
+            as u32;
+        let output_len = self
+            .rng
+            .range_u64(profile.output_range.0 as u64, profile.output_range.1 as u64)
+            as u32;
+        let mut task = Task::new(
+            id,
+            profile.class,
+            secs(self.t),
+            prompt_len,
+            output_len,
+            profile.utility,
+        );
+        if self.with_prompt_bytes {
+            task.prompt = synthetic_prompt(profile.class, prompt_len, &mut self.rng);
+        }
+        Some(task)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for ArrivalStream {}
 
 /// Build the paper's Table II static workload: all tasks arrive at t=0
 /// with custom TPOT SLOs — 3x Type A (100 ms), 4x Type B (120 ms),
@@ -236,6 +290,29 @@ mod tests {
         }
         let c = WorkloadSpec::paper_mix(1.0, 0.7, 100, 8).generate();
         assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn stream_matches_generate() {
+        // the pull-based stream must reproduce the eager generator
+        // bit-for-bit, prompt bytes included — `generate` is defined
+        // as `stream().collect()`, and this pins the per-task RNG draw
+        // order against regressions in either path
+        let mut spec = WorkloadSpec::edge_mix(1.3, 0.7, 500, 42);
+        spec.with_prompt_bytes = true;
+        let eager = spec.generate();
+        let streamed: Vec<Task> = spec.stream().collect();
+        assert_eq!(eager.len(), streamed.len());
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.utility, b.utility);
+            assert_eq!(a.prompt, b.prompt);
+        }
+        assert_eq!(spec.stream().len(), 500, "ExactSizeIterator contract");
     }
 
     #[test]

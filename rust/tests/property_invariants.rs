@@ -226,6 +226,80 @@ fn prop_incremental_period_matches_eq7_and_mask() {
     }
 }
 
+/// The maintained candidate cache stays bit-identical to a freshly
+/// adapted-and-sorted rebuild from the pool after arbitrary mutation
+/// sequences — random arrival batches, random departures, interleaved
+/// scheduling steps (which may reschedule *or* skip) — checked after
+/// every event over 500 sequences (PR 8 tentpole invariant; DESIGN.md
+/// "Control-plane incrementality").
+#[test]
+fn prop_cached_candidates_match_fresh_rebuild() {
+    use slice_serve::coordinator::pool::TaskPool;
+    use slice_serve::coordinator::scheduler::Policy;
+    use slice_serve::coordinator::selection::admission_entry;
+    use slice_serve::coordinator::slice::SlicePolicy;
+    use slice_serve::coordinator::task::TaskState;
+
+    let lat = LatencyModel::paper_calibrated();
+    for seed in 0..500u64 {
+        let mut rng = Rng::new(12_000_000 + seed);
+        let mut pool = TaskPool::new();
+        let mut p = SlicePolicy::with_defaults(lat.clone());
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id: u64 = 0;
+        let mut now: u64 = 0;
+        for _ in 0..rng.range_usize(1, 40) {
+            now += rng.range_u64(1, 50_000);
+            if !live.is_empty() && rng.chance(0.3) {
+                // departure: finish a random live task by hand (as the
+                // serving loop would) and notify with the husk pooled
+                let at = rng.range_usize(0, live.len() - 1);
+                let id = live.swap_remove(at);
+                let t = pool.get_mut(id);
+                t.tokens_generated = t.output_len;
+                t.state = TaskState::Finished;
+                p.on_completion(&mut pool, &[id], now);
+            } else {
+                let n = rng.range_usize(1, 3);
+                let ids: Vec<u64> = (0..n)
+                    .map(|_| {
+                        let id = next_id;
+                        next_id += 1;
+                        let class = match rng.range_u64(0, 2) {
+                            0 => TaskClass::RealTime,
+                            1 => TaskClass::Voice,
+                            _ => TaskClass::TextQa,
+                        };
+                        let utility = rng.range_u64(1, 1000) as f64 / 10.0;
+                        let out = rng.range_u64(1, 60) as u32;
+                        pool.insert(Task::new(id, class, now, 16, out, utility));
+                        live.push(id);
+                        id
+                    })
+                    .collect();
+                p.on_arrival(&mut pool, &ids, now);
+            }
+            if rng.chance(0.5) {
+                let _ = p.next_step(&mut pool, now);
+            }
+            // the invariant: cache == fresh pool rebuild, after *every*
+            // mutation (the cached path may consume it at any boundary)
+            let mut expect: Vec<(u64, u64, u32)> = pool
+                .iter()
+                .filter(|t| !t.is_finished())
+                .map(|t| admission_entry(t.utility, t.slo.tpot, t.id))
+                .collect();
+            expect.sort_unstable();
+            assert_eq!(
+                p.cached_candidates(),
+                &expect[..],
+                "seed {seed}: cache diverged from fresh rebuild"
+            );
+        }
+        assert_eq!(p.full_rebuilds, 0, "seed {seed}: immutable regime rebuilt");
+    }
+}
+
 /// Task SLO accounting is consistent: slo_met implies is_finished, and
 /// for real-time tasks equals the deadline check.
 #[test]

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from bisect import bisect_left
+from bisect import bisect_left, insort
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, List, Optional, Tuple
@@ -434,12 +434,16 @@ PROFILES = {
 }
 
 
-def paper_mix(arrival_rate: float, rt_ratio: float, n_tasks: int, seed: int):
+def paper_mix_stream(arrival_rate: float, rt_ratio: float, n_tasks: int,
+                     seed: int):
+    """Mirrors workload::ArrivalStream (PR 8): the exact draw sequence of
+    paper_mix, yielded one task at a time so million-task traces never
+    materialize — `list(paper_mix_stream(...)) == paper_mix(...)` is
+    asserted by run_experiments.py stage 12."""
     nrt = max(1.0 - rt_ratio, 0.0)
     mix = [(RT, rt_ratio), (VOICE, nrt / 2.0), (TEXTQA, nrt / 2.0)]
     rng = Rng(seed)
     weights = [w for _, w in mix]
-    tasks = []
     t = 0.0
     for tid in range(n_tasks):
         if tid > 0:
@@ -448,8 +452,11 @@ def paper_mix(arrival_rate: float, rt_ratio: float, n_tasks: int, seed: int):
         utility, prange, orange = PROFILES[cls]
         prompt_len = rng.range_u64(prange[0], prange[1])
         output_len = rng.range_u64(orange[0], orange[1])
-        tasks.append(Task(tid, cls, secs(t), prompt_len, output_len, utility))
-    return tasks
+        yield Task(tid, cls, secs(t), prompt_len, output_len, utility)
+
+
+def paper_mix(arrival_rate: float, rt_ratio: float, n_tasks: int, seed: int):
+    return list(paper_mix_stream(arrival_rate, rt_ratio, n_tasks, seed))
 
 
 # ----------------------------------------------------------- selection ----
@@ -642,7 +649,8 @@ class SlicePolicy:
 
     def __init__(self, lat: LatencyModel, cycle_cap: int = CYCLE_CAP,
                  memory: Optional[MemoryConfig] = None,
-                 kv_capacity: Optional[int] = None) -> None:
+                 kv_capacity: Optional[int] = None,
+                 incremental: bool = True) -> None:
         self.lat = lat
         self.cycle_cap = cycle_cap
         # memory-aware selection only when constrained AND aware
@@ -659,28 +667,143 @@ class SlicePolicy:
         # select_tasks — asserted in run_experiments.py stage 9, and by
         # stages 1-8 reproducing every earlier PR's cells unchanged)
         self._inc = IncrementalPeriod(lat)
+        # PR 8 mirror (slice.rs "Control-plane incrementality"): in the
+        # immutable-key regime — no memory dimension; the mirror has no
+        # utility adaptor or prefill-aware extension — the sorted
+        # candidate cache lives across decisions and arrival boundaries
+        # past the admission threshold skip the reschedule outright.
+        # Ascending (-rate, id) reproduces the Rust packed-key order
+        # exactly: rates are the same IEEE doubles on both sides, and
+        # -0.0 collides with 0.0 under tuple comparison just as
+        # rate_key_desc normalises it.
+        self.incremental = incremental
+        self.immutable = incremental and self.memory is None
+        self.sorted: List[Tuple[float, int, int]] = []  # (-rate, id, quota)
+        self.generation = 0
+        self.cache_generation = 0
+        self.threshold: Optional[Tuple[float, int]] = None
+        self.decisions_skipped = 0
+        self.full_rebuilds = 0
+
+    @staticmethod
+    def _entry(t: Task) -> Tuple[float, int, int]:
+        """Mirrors selection.rs admission_entry (key order, id, quota)."""
+        rate = t.utility * (t.slo.tpot / 1e6)
+        return (-rate, t.id, quota_of(t.slo.tpot))
 
     def on_arrival(self, pool, ids, now) -> None:
-        self.needs_reschedule = True
+        self.generation += 1
+        if not self.immutable:
+            self.needs_reschedule = True
+            return
+        # maintain the sorted cache (binary insert per task) and
+        # evaluate the skip precondition in the same pass: skippable iff
+        # a threshold from a live selection exists, no other
+        # interruption is pending, and every new entry sorts strictly
+        # after the admission boundary
+        skip = (not self.needs_reschedule and self.threshold is not None
+                and bool(ids))
+        for tid in ids:
+            entry = self._entry(pool[tid])
+            if skip and (entry[0], entry[1]) <= self.threshold:
+                skip = False
+            insort(self.sorted, entry)
+        self.cache_generation = self.generation
+        if skip:
+            # provably a no-op reschedule; the one side effect a real
+            # reschedule has on the scan — resetting the column cursor —
+            # is replicated so decode order stays bit-exact
+            self.decisions_skipped += 1
+            self.col = 0
+        else:
+            self.needs_reschedule = True
 
     def on_completion(self, pool, ids, now) -> None:
+        self.generation += 1
+        if self.immutable:
+            # departures notify with the finished husk still pooled, so
+            # the removal key is exactly the insertion key
+            for tid in ids:
+                key, _tid, _q = self._entry(pool[tid])
+                pos = bisect_left(self.sorted, (key, tid))
+                assert (pos < len(self.sorted)
+                        and self.sorted[pos][1] == tid), \
+                    "departing task missing from candidate cache"
+                self.sorted.pop(pos)
+            self.cache_generation = self.generation
+        # a departure shrinks the admitted set (freed quota may admit a
+        # paused task), so it always forces a reschedule
         self.needs_reschedule = True
+
+    def _select_cached(self):
+        """Mirrors selection.rs select_tasks_sorted: Alg. 2 straight over
+        the maintained cache — no pool pass, no re-sort."""
+        inc = self._inc
+        inc.clear()
+        selected: List[Tuple[int, int]] = []
+        rejected: List[int] = []
+        stopped = False
+        for _key, cid, q in self.sorted:
+            if stopped or len(selected) >= self.lat.max_batch:
+                rejected.append(cid)
+                continue
+            p = inc.probe(q)
+            if p >= self.cycle_cap:
+                rejected.append(cid)
+                stopped = True
+                continue
+            inc.insert(q)
+            selected.append((cid, q))
+        return selected, rejected, stopped
 
     def _reschedule(self, pool) -> None:
         self.reschedules += 1
-        if self.memory is not None:
-            candidates = [
-                (t.id, t.utility, t.slo.tpot,
-                 self.memory.footprint_bytes(t.seq_len()))
-                for t in pool if not t.is_finished()
-            ]
+        if self.immutable and self.cache_generation == self.generation:
+            selected, rejected, stopped = self._select_cached()
         else:
-            candidates = [
-                (t.id, t.utility, t.slo.tpot) for t in pool if not t.is_finished()
-            ]
-        selected, rejected = select_tasks_fast(
-            candidates, self.lat, self.cycle_cap, self.kv_capacity,
-            period=self._inc)
+            self.full_rebuilds += 1
+            if self.memory is not None:
+                candidates = [
+                    (t.id, t.utility, t.slo.tpot,
+                     self.memory.footprint_bytes(t.seq_len()))
+                    for t in pool if not t.is_finished()
+                ]
+            else:
+                candidates = [
+                    (t.id, t.utility, t.slo.tpot)
+                    for t in pool if not t.is_finished()
+                ]
+            selected, rejected = select_tasks_fast(
+                candidates, self.lat, self.cycle_cap, self.kv_capacity,
+                period=self._inc)
+            # reconstruct the stop reason: once any candidate is
+            # rejected, the first rejection was a resource stop iff the
+            # admitted prefix never reached max_batch (the only other
+            # way to reject)
+            stopped = bool(rejected) and len(selected) < self.lat.max_batch
+            if self.immutable:
+                # (re)seed the maintained cache so the cached path takes
+                # over from here
+                self.sorted = sorted(self._entry(t) for t in pool
+                                     if not t.is_finished())
+                self.cache_generation = self.generation
+        # skip-precondition threshold: the admission boundary after this
+        # selection (mirrors slice.rs; `selected` is the k-long prefix
+        # of the cache)
+        if not self.immutable:
+            self.threshold = None
+        else:
+            k = len(selected)
+            if k == len(self.sorted):
+                self.threshold = None  # everything admitted
+            elif stopped:
+                e = self.sorted[k]  # resource stop: first rejected
+                self.threshold = (e[0], e[1])
+            elif k > 0:
+                e = self.sorted[k - 1]  # max_batch stop: worst admitted
+                self.threshold = (e[0], e[1])
+            else:
+                self.threshold = None  # max_batch == 0 degenerate shape
         self.to_prefill.clear()
         for tid, _q in selected:
             t = pool[tid]
@@ -1104,10 +1227,12 @@ class AutoscalerConfig:
     deficit_streak: int = 2
     idle_streak: int = 64
     cooldown: int = 500_000  # 0.5 s
+    boot_delay: int = 0  # µs between a grow decision and the joiner booting
 
     def copy(self) -> "AutoscalerConfig":
         return AutoscalerConfig(self.enabled, self.deficit_streak,
-                                self.idle_streak, self.cooldown)
+                                self.idle_streak, self.cooldown,
+                                self.boot_delay)
 
 
 @dataclass
@@ -1475,9 +1600,20 @@ class Router:
         self.migrated = set()
         self.migrations = 0
         self.migrated_running = 0
+        # PR 8 counters (mirror cluster/controller.rs): passes are
+        # migration-pass pairs executed past the enablement gate — one
+        # per arrival boundary under lockstep, one per productive
+        # MigrationCheck under the event engine; checks count the
+        # edge-triggered events themselves (0 for lockstep)
+        self.migration_passes = 0
+        self.migration_checks = 0
         self.handoff_bytes = 0
         self.handoff_us = 0
         self.rejected: List[Task] = []
+        # streaming mode (million-task traces): fold shed arrivals into
+        # a counter instead of retaining the Task
+        self.fold_rejects = False
+        self.rejected_folded = 0
         # elastic state (mirrors cluster/controller.rs): an *empty*
         # alive mask is the static fleet — every index alive, the fast
         # path. The event engine fills it when any elastic feature is on.
@@ -1491,6 +1627,15 @@ class Router:
         self.evac_recompute_us = 0
         self.autoscale_grows = 0
         self.autoscale_shrinks = 0
+        self.autoscale_pending_boots = 0
+
+    def reject(self, task: Task) -> None:
+        """Shed an arrival. Streaming runs fold the task into a counter
+        so a million-task trace never accumulates shed Task objects."""
+        if self.fold_rejects:
+            self.rejected_folded += 1
+        else:
+            self.rejected.append(task)
 
     def is_alive(self, i: int) -> bool:
         return self.alive[i] if i < len(self.alive) else True
@@ -1558,6 +1703,7 @@ class Router:
     def run_migrations(self) -> None:
         if not self.migration or len(self.replicas) < 2:
             return
+        self.migration_passes += 1
         for src in range(len(self.replicas)):
             if not self.is_alive(src) or not self.replicas[src].overloaded():
                 continue
@@ -1623,7 +1769,7 @@ class Router:
                 dst = self.best_by_headroom(
                     quota, lambda r: r.id != src and self.is_alive(r.id))
             if dst is None:
-                self.rejected.append(task)  # no alive peer: shed
+                self.reject(task)  # no alive peer: shed
                 continue
             self.evac_requeued += 1
             self.replicas[dst].receive_migrated(task)
@@ -1661,7 +1807,7 @@ class Router:
             self.run_running_migrations()
             pick = self.decide(task)
             if pick is None:
-                self.rejected.append(task)
+                self.reject(task)
             else:
                 self.replicas[pick].assign(task)
         horizon = last + drain
@@ -1682,12 +1828,15 @@ class Orchestrator:
     embedded Router over the same replicas — only the advancement
     machinery differs. Events are heapq tuples ordered exactly like the
     Rust Event struct: (time, kind, replica, task) with kind ranks
-    WAKE < LIFECYCLE < BOUNDARY < ARRIVAL — nodes reach a boundary
-    before anything decides there, a crash at t is visible to every
-    same-time decision, and arrivals route against the already-changed
-    fleet. Bit-exact with Router.run by construction; stage 10 asserts
-    it (and stage 11 asserts the all-disabled elastic run changes
-    nothing).
+    WAKE < LIFECYCLE < BOOT < BOUNDARY < MIGRATION_CHECK < ARRIVAL —
+    nodes reach a boundary before anything decides there, a crash at t
+    is visible to every same-time decision, an overload check runs its
+    migration pass before the same-instant arrival routes, and arrivals
+    route against the already-changed fleet. Bit-exact with Router.run
+    by construction for everything except migration-pass *timing*
+    (edge-triggered MigrationCheck events vs one pass per boundary —
+    same migrated tasks, fewer passes); stage 10 asserts it (and stage
+    11 asserts the all-disabled elastic run changes nothing).
 
     Passing a LifecycleConfig (with a factory building the replica for
     each joining fleet index) attaches the elastic machinery, mirroring
@@ -1695,7 +1844,8 @@ class Orchestrator:
     initialized even when every sub-feature is disabled.
     """
 
-    WAKE, LIFECYCLE, BOUNDARY, ARRIVAL = 0, 1, 2, 3
+    WAKE, LIFECYCLE, BOOT, BOUNDARY, MIGRATION_CHECK, ARRIVAL = \
+        0, 1, 2, 3, 4, 5
 
     def __init__(self, ctl: Router,
                  lifecycle: Optional[LifecycleConfig] = None,
@@ -1706,6 +1856,13 @@ class Orchestrator:
         self.wake: List[Optional[int]] = [None] * n
         self.advanced_to: List[Optional[int]] = [None] * n
         self.advancements = [0] * n
+        # overload shadow (mirrors orchestrator.rs): refreshed wherever
+        # load can grow, it arms MIGRATION_CHECK events edge-triggered.
+        # Stale-true entries cost one cheap re-check; stale-false is
+        # impossible by construction.
+        self.overload: List[bool] = [False] * n
+        self.overload_count = 0
+        self._migration_check_at: Optional[int] = None
         self.lifecycle = lifecycle or LifecycleConfig()
         self.factory = factory
         self.autoscaler: Optional[Autoscaler] = None
@@ -1734,6 +1891,7 @@ class Orchestrator:
         self.wake.append(None)
         self.advanced_to.append(None)
         self.advancements.append(0)
+        self.overload.append(False)
         if self.health is not None:
             self.health.ensure(rid + 1)
         return rid
@@ -1742,6 +1900,33 @@ class Orchestrator:
         # dead first: every placement inside the evacuation excludes it
         self.ctl.alive[target] = False
         self.ctl.evacuate(target, crash)
+        if self.overload[target]:
+            # dead nodes never source a migration pass
+            self.overload[target] = False
+            self.overload_count -= 1
+
+    def _refresh_overload(self, i: int) -> None:
+        over = self.ctl.is_alive(i) and self.replicas[i].overloaded()
+        if self.overload[i] != over:
+            self.overload[i] = over
+            self.overload_count += 1 if over else -1
+
+    def _refresh_overload_all(self) -> None:
+        for i in range(len(self.replicas)):
+            self._refresh_overload(i)
+
+    def _arm_migration_check(self, heap: List, boundary: int,
+                             has_arrival: bool) -> None:
+        """Arm a MIGRATION_CHECK at the in-flight arrival's boundary
+        when migration is on and the shadow reports overload — at most
+        one per boundary, never at the drain horizon (lockstep runs no
+        pass there either)."""
+        if (not self.ctl.migration or self.overload_count == 0
+                or not has_arrival
+                or self._migration_check_at == boundary):
+            return
+        self._migration_check_at = boundary
+        heapq.heappush(heap, (boundary, self.MIGRATION_CHECK, 0, 0))
 
     def _apply_lifecycle(self, e: LifecycleEvent, now: int,
                          target_rng: Rng) -> None:
@@ -1787,16 +1972,38 @@ class Orchestrator:
             heapq.heappush(heap, (nxt, self.WAKE, i, 0))
 
     def run(self, workload: List[Task], drain: int):
-        ctl = self.ctl
         assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
         last = workload[-1].arrival if workload else 0
-        horizon = last + drain
-        arrivals = iter(workload)
+        return self._run_events(iter(workload), last + drain, drain)
+
+    def run_stream(self, arrivals: Iterable[Task], drain: int):
+        """Mirrors Orchestrator::run_stream: drive a lazily generated
+        arrival stream without materializing it — O(live set) memory.
+        Lifecycle schedules need the horizon upfront, which a stream
+        cannot provide, so streaming runs are static fleets (the
+        autoscaler, which is schedule-free, is the exception in Rust
+        too — but the pinned streaming cells keep it off)."""
+        assert self.factory is None, \
+            "streaming runs use static fleets (no lifecycle schedule)"
+        return self._run_events(iter(arrivals), None, drain)
+
+    def _run_events(self, arrivals, lifecycle_horizon: Optional[int],
+                    drain: int):
+        ctl = self.ctl
+        # refined to `last pulled arrival + drain` when the stream
+        # ends; until then only boundary bookkeeping reads it
+        horizon = drain
+        last_seen = 0
+        boot_delay = self.lifecycle.autoscaler.boot_delay
+        pending_boots: deque = deque()
+        self._migration_check_at = None
         heap: List = []
         parked: List[int] = []
         # the lifecycle stream mirrors the arrival stream: one event in
         # the heap at a time, the next pushed when it pops
-        lifecycle_events = iter(self.lifecycle.schedule(horizon))
+        lifecycle_events = iter(
+            self.lifecycle.schedule(lifecycle_horizon)
+            if lifecycle_horizon is not None else ())
         target_rng = self.lifecycle.target_rng()
         next_lifecycle = next(lifecycle_events, None)
         if next_lifecycle is not None:
@@ -1804,9 +2011,11 @@ class Orchestrator:
         nxt = next(arrivals, None)
         next_arrival = nxt
         if nxt is not None:
+            last_seen = nxt.arrival
             arrival_boundary = nxt.arrival
             heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
         else:
+            horizon = last_seen + drain
             arrival_boundary = horizon
             heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
 
@@ -1853,11 +2062,14 @@ class Orchestrator:
                         if ctl.is_alive(r.id):
                             self.health.observe(r.id, r.cycle_lag())
                     self.health.fill_mask(ctl.degraded)
-                ctl.run_migrations()
-                ctl.run_running_migrations()
+                # migration passes no longer run inline here: a
+                # same-time MIGRATION_CHECK (armed only while some
+                # replica is overloaded) already popped and ran them —
+                # at every boundary where the lockstep pass would have
+                # acted, and only those
                 pick = ctl.decide(task)
                 if pick is None:
-                    ctl.rejected.append(task)
+                    ctl.reject(task)
                 else:
                     self.replicas[pick].assign(task)
                 # the autoscaler observes the decision's outcome (after
@@ -1880,14 +2092,25 @@ class Orchestrator:
                             key = (ctl.is_degraded(i), i)
                             if idle is None or key > idle:
                                 idle = key
+                    # booting replicas count toward the observed fleet
+                    # size so the autoscaler cannot overshoot
+                    # max_replicas while grows are in flight (empty
+                    # when boot_delay is 0 — the bit-exact default)
                     decision = self.autoscaler.observe(
                         time, deficit,
                         idle[1] if idle is not None else None,
-                        ctl.alive_count())
+                        ctl.alive_count() + len(pending_boots))
                     if decision == "grow":
-                        self._admit_replica(time)
                         ctl.autoscale_grows += 1
-                        scaled = True
+                        if boot_delay == 0:
+                            self._admit_replica(time)
+                            scaled = True
+                        else:
+                            # deferred: the replica joins when its
+                            # Boot event fires
+                            at = time + boot_delay
+                            pending_boots.append(at)
+                            heapq.heappush(heap, (at, self.BOOT, 0, 0))
                     elif decision is not None:  # ("shrink", victim)
                         ctl.autoscale_shrinks += 1
                         self._retire_replica(decision[1], False)
@@ -1898,13 +2121,17 @@ class Orchestrator:
                 nxt = next(arrivals, None)
                 next_arrival = nxt
                 if nxt is not None:
+                    assert nxt.arrival >= last_seen, \
+                        "arrivals must be time-ordered"
+                    last_seen = nxt.arrival
                     arrival_boundary = nxt.arrival
                     heapq.heappush(heap, (nxt.arrival, self.ARRIVAL, 0, nxt.id))
                 else:
+                    horizon = last_seen + drain
                     arrival_boundary = horizon
                     heapq.heappush(heap, (horizon, self.BOUNDARY, 0, 0))
                 next_boundary = eff(arrival_boundary)
-                if ctl.migration or scaled:
+                if scaled:
                     for i in range(len(self.replicas)):
                         self._refresh_wake(i, heap)
                     parked.clear()
@@ -1914,6 +2141,15 @@ class Orchestrator:
                     del parked[:]
                     if pick is not None:
                         self._refresh_wake(pick, heap)
+                if ctl.migration:
+                    # only this arrival's destination (or, after a
+                    # scale event, anything) can have gained load
+                    if scaled:
+                        self._refresh_overload_all()
+                    elif pick is not None:
+                        self._refresh_overload(pick)
+                    self._arm_migration_check(heap, arrival_boundary,
+                                              next_arrival is not None)
             elif kind == self.LIFECYCLE:
                 e = next_lifecycle
                 assert e is not None and e.time == time
@@ -1936,6 +2172,49 @@ class Orchestrator:
                 for i in range(len(self.replicas)):
                     self._refresh_wake(i, heap)
                 parked.clear()
+                if ctl.migration:
+                    # evacuations may have overloaded destinations
+                    self._refresh_overload_all()
+                    self._arm_migration_check(heap, arrival_boundary,
+                                              next_arrival is not None)
+            elif kind == self.BOOT:
+                due = pending_boots.popleft()
+                assert due == time, "boot event without its pending boot"
+                # bounds re-check at boot time: explicit joins may have
+                # filled the fleet since the grow was decided (the grow
+                # stays counted; the boot is dropped)
+                if ctl.alive_count() < self.lifecycle.max_replicas:
+                    self._admit_replica(time)
+                # the joiner is idle: no wake to arm, no load moved
+            elif kind == self.MIGRATION_CHECK:
+                self._migration_check_at = None
+                ctl.migration_checks += 1
+                # idle-clock sync first — the same contract as the
+                # arrival boundary (a migrated-in task may carry an
+                # arrival time earlier than this boundary, so an idle
+                # destination's clock must be here before the task
+                # lands), and the exact order the old inline pass saw
+                for i, r in enumerate(self.replicas):
+                    if (self.advanced_to[i] != time
+                            and r.next_event_time() is None):
+                        r.sync_clock(time)
+                # the shadow may be stale-true (service progress since
+                # arming drained the overload): re-check against live
+                # state before paying for a pass
+                self._refresh_overload_all()
+                if self.overload_count > 0:
+                    ctl.run_migrations()
+                    ctl.run_running_migrations()
+                    # migration may have moved work between any pair:
+                    # refresh the shadow and re-arm the fleet
+                    self._refresh_overload_all()
+                    for i in range(len(self.replicas)):
+                        self._refresh_wake(i, heap)
+                    parked.clear()
+                # no re-arm here even if overload persists: the
+                # same-time arrival's handler arms the *next* boundary —
+                # the lockstep one-pass-per-boundary cadence, and no
+                # same-time check storm
             else:  # BOUNDARY — the final drain at the horizon
                 assert time == horizon
                 for i, r in enumerate(self.replicas):
@@ -1947,6 +2226,7 @@ class Orchestrator:
                         r.sync_clock(horizon)
                     assert r.pending() == 0, "drain window too small"
                 break
+        ctl.autoscale_pending_boots = len(pending_boots)
         per_replica = [(r.id, r.routed, r.server.steps) for r in self.replicas]
         tasks = [t for r in self.replicas for t in r.finish()]
         tasks.extend(ctl.rejected)
@@ -1954,11 +2234,12 @@ class Orchestrator:
         return tasks, per_replica
 
 
-def _default_policy(profile: DeviceProfile, memory: Optional[MemoryConfig] = None):
+def _default_policy(profile: DeviceProfile, memory: Optional[MemoryConfig] = None,
+                    incremental: bool = True):
     lat = LatencyModel(profile.latency.points, profile.latency.prefill_points,
                        min(32, profile.max_batch))
     return SlicePolicy(lat, cycle_cap=profile.cycle_cap, memory=memory,
-                       kv_capacity=profile.kv_capacity)
+                       kv_capacity=profile.kv_capacity, incremental=incremental)
 
 
 def run_cluster(strategy: str, replicas: int, workload: List[Task],
@@ -2022,6 +2303,25 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
         assert lifecycle is None or not lifecycle.any_enabled(), \
             "elastic fleets need the event engine"
         tasks, per = router.run(workload, drain)
+    return tasks, per, router
+
+
+def run_fleet_stream(strategy: str, profiles: List[DeviceProfile],
+                     arrivals: Iterable[Task], drain: int,
+                     admission: Optional[AdmissionConfig] = None,
+                     migration: bool = False,
+                     fold_rejects: bool = True):
+    """Mirrors experiments::scale_sweep run_stream_cell's engine setup:
+    a static fleet driven by Orchestrator.run_stream over a pull-based
+    arrival stream, shedding folded into a counter so a million-task
+    trace never materializes (O(live set) memory)."""
+    fleet = [Replica(i, lambda p: _default_policy(p), p)
+             for i, p in enumerate(profiles)]
+    router = Router("round-robin" if strategy == "rr" else strategy, fleet,
+                    admission=admission, migration=migration,
+                    migrate_running=False, memory=MemoryConfig())
+    router.fold_rejects = fold_rejects
+    tasks, per = Orchestrator(router).run_stream(arrivals, drain)
     return tasks, per, router
 
 
