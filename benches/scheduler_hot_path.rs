@@ -371,6 +371,34 @@ fn main() {
         println!("{}", r.report_line());
     }
 
+    // Epoch-parallel advancement (PR 9): the widest event cell again at
+    // 1 vs 4 workers. Reports are bit-exact across thread counts
+    // (rust/tests/equivalence.rs), so the delta between the two cells
+    // is pure advancement parallelism; BENCH_9.json carries the full
+    // threads × width sweep at experiment scale.
+    {
+        let wl = WorkloadSpec::paper_mix(16.0, 0.7, 400, 7).generate();
+        for threads in [1usize, 4] {
+            let mut par_cfg = event_cfg.clone();
+            par_cfg.cluster_threads = threads;
+            let r = bench(
+                &format!("cluster/run_event/parallel/t{threads}/64x400"),
+                budget,
+                || {
+                    experiments::run_cluster(
+                        RoutingStrategy::RoundRobin,
+                        64,
+                        wl.clone(),
+                        &par_cfg,
+                        secs(60.0),
+                    )
+                    .unwrap()
+                },
+            );
+            println!("{}", r.report_line());
+        }
+    }
+
     // The heterogeneous path: a guarded edge-mixed fleet pays for
     // admission checks and migration passes on top of routing; this
     // tracks that overhead end-to-end against the homogeneous run above.

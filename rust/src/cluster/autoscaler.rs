@@ -14,7 +14,10 @@
 //!     Eq. 7 cycle headroom for the task, i.e. the fleet is at zero
 //!     headroom — exactly the paper's overload signal. Without
 //!     admission the fallback is every placeable replica overrunning
-//!     its cycle.
+//!     its cycle. Under `grow_on_headroom` the deficit observation is
+//!     instead the fleet's mean Eq. 7 headroom dropping to the
+//!     configured floor, so the fleet grows *before* it sheds — see
+//!     [`AutoscalerConfig::grow_on_headroom`].
 //!   * **idle** — some alive replica has no scheduled work at all
 //!     (no queue, no live tasks, no pending event) and nothing was
 //!     shed: the fleet is over-provisioned.
@@ -143,7 +146,7 @@ mod tests {
             deficit_streak: 2,
             idle_streak: 3,
             cooldown: 1_000,
-            boot_delay: 0,
+            ..AutoscalerConfig::default()
         }
     }
 

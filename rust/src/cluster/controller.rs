@@ -169,6 +169,18 @@ impl Controller {
         }
     }
 
+    /// A read-only snapshot of the liveness/degradation masks — the
+    /// *only* controller state the parallel event engine's epoch
+    /// workers may observe (DESIGN.md "Parallel event engine"). Workers
+    /// receive disjoint `&mut Node`s plus this snapshot, never `&mut
+    /// Controller`: advancement reads no decision state, so the Send
+    /// audit for the worker closure reduces to `Node: Send`, and every
+    /// decision that *writes* controller state stays on the
+    /// orchestrator thread between epochs.
+    pub(crate) fn mask_snapshot(&self) -> MaskSnapshot<'_> {
+        MaskSnapshot { alive: &self.alive, degraded: &self.degraded }
+    }
+
     /// Pick the replica for `task` under the configured strategy, or
     /// `None` when admission control sheds it (every replica is at its
     /// class bound). Tie-breaks are deterministic: least-loaded breaks
@@ -496,6 +508,28 @@ impl Controller {
             replicas: reports,
             elastic,
         }
+    }
+}
+
+/// Immutable view of the controller's liveness/degradation masks,
+/// shareable with epoch worker threads (same empty-for-static contract
+/// as [`Controller::is_alive`]/[`Controller::is_degraded`]).
+#[derive(Clone, Copy)]
+pub(crate) struct MaskSnapshot<'a> {
+    alive: &'a [bool],
+    degraded: &'a [bool],
+}
+
+impl MaskSnapshot<'_> {
+    /// Liveness; a missing entry (static fleet) is alive.
+    pub(crate) fn is_alive(&self, i: usize) -> bool {
+        self.alive.get(i).copied().unwrap_or(true)
+    }
+
+    /// Health verdict; a missing entry (static fleet) is healthy.
+    #[allow(dead_code)] // symmetry with is_alive; kept for worker use
+    pub(crate) fn is_degraded(&self, i: usize) -> bool {
+        self.degraded.get(i).copied().unwrap_or(false)
     }
 }
 

@@ -85,6 +85,19 @@ pub struct AutoscalerConfig {
     /// grows in flight suppress further grows. 0 (the default) admits
     /// instantly — bit-exact with the pre-boot-delay engine.
     pub boot_delay: Micros,
+    /// Grow on *aggregate Eq. 7 headroom* instead of the shed/overload
+    /// deficit: the deficit observation becomes "mean cycle headroom
+    /// across the placeable fleet (for the arriving task's quota) is at
+    /// or below [`AutoscalerConfig::headroom_min`]". A shed arrival
+    /// still registers (a shed means zero placeable headroom, so the
+    /// mean is zero), but the fleet now also grows *before* it starts
+    /// shedding, as slack drains toward the floor. Same streak and
+    /// cooldown machinery; off by default (the PR 7 deficit signal).
+    pub grow_on_headroom: bool,
+    /// Mean-headroom floor in µs of Eq. 7 cycle slack, used only under
+    /// [`AutoscalerConfig::grow_on_headroom`]. 0 fires only at full
+    /// saturation (every placeable replica at zero headroom).
+    pub headroom_min: Micros,
 }
 
 impl Default for AutoscalerConfig {
@@ -95,6 +108,8 @@ impl Default for AutoscalerConfig {
             idle_streak: 64,
             cooldown: 500_000, // 0.5 s
             boot_delay: 0,
+            grow_on_headroom: false,
+            headroom_min: 0,
         }
     }
 }

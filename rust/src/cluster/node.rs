@@ -102,6 +102,13 @@ impl Node {
     }
 }
 
+// Compile-time Send audit (DESIGN.md "Parallel event engine"): epoch
+// workers receive `&mut Node`, so everything a node owns — replica,
+// server, policy, engine, token sink — must be able to cross threads.
+// This fails to compile if any layer regresses to a thread-pinned type.
+const fn assert_send<T: Send>() {}
+const _: () = assert_send::<Node>();
+
 impl AsRef<Replica> for Node {
     fn as_ref(&self) -> &Replica {
         &self.replica

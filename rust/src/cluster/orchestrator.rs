@@ -38,6 +38,21 @@
 //! drives million-task traces in constant memory
 //! ([`Orchestrator::run_stream`]).
 //!
+//! ## Epoch-batched parallel advancement
+//!
+//! With `[cluster] threads = N` / `--threads N` above 1, the engine
+//! batches the heap into *epochs*: the maximal run of wake events
+//! leading the heap — everything scheduled before the next
+//! control-plane event — is popped at once, stale-filtered, and the
+//! woken nodes advance to the boundary concurrently on scoped worker
+//! threads ([`Orchestrator::run_epoch`]). Between two control-plane
+//! events node advancement is cross-replica independent, so the merge
+//! (wake refresh + parking, applied in replica-index order on the
+//! orchestrator thread) reproduces the sequential engine bit-for-bit
+//! at *any* thread count; `threads = 1` (the default) runs today's
+//! exact sequential path. DESIGN.md "Parallel event engine" carries
+//! the full determinism argument and the Send audit.
+//!
 //! ## Why this reproduces lockstep bit-for-bit
 //!
 //! The engine only ever calls `run_until` with *boundary times* — the
@@ -195,6 +210,26 @@ pub struct Orchestrator {
     overload: Vec<bool>,
     /// Number of `true` entries in `overload`.
     overload_count: usize,
+    /// Worker threads for epoch-batched wake advancement (DESIGN.md
+    /// "Parallel event engine"). 1 — the default — runs the exact
+    /// sequential engine; N > 1 advances each epoch's nodes on up to N
+    /// scoped worker threads, bit-exact with 1 by the merge-order
+    /// argument on [`Orchestrator::run_epoch`].
+    threads: usize,
+    /// When set, every epoch's replica batch (in pop order) is
+    /// recorded — the observability hook of the epoch property test.
+    epoch_log: Option<Vec<Vec<usize>>>,
+}
+
+/// Reusable buffers for epoch collection, so the parallel engine's
+/// steady state allocates only the per-epoch worker handles.
+#[derive(Default)]
+struct EpochScratch {
+    /// Replicas to advance this epoch, in heap pop order.
+    batch: Vec<usize>,
+    /// Per-replica in-batch flags (sized to the fleet on demand), used
+    /// to split the node slice into disjoint `&mut Node` work items.
+    mask: Vec<bool>,
 }
 
 impl Orchestrator {
@@ -216,6 +251,8 @@ impl Orchestrator {
             health: None,
             overload: vec![false; n],
             overload_count: 0,
+            threads: 1,
+            epoch_log: None,
         }
     }
 
@@ -244,6 +281,16 @@ impl Orchestrator {
     /// `ClusterReport::rejected_folded` carries the count.
     pub fn with_fold_rejects(mut self, fold: bool) -> Self {
         self.ctl.fold_rejects = fold;
+        self
+    }
+
+    /// Set the worker-thread count for epoch-batched wake advancement
+    /// (`[cluster] threads` / `--threads`; clamped to at least 1).
+    /// Every thread count produces the bit-identical [`ClusterReport`]
+    /// — the knob only buys wall time on wide fleets, where the nodes
+    /// woken between two control-plane events advance concurrently.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -432,6 +479,156 @@ impl Orchestrator {
         }
     }
 
+    /// Pop one complete *epoch* — the maximal run of [`EventKind::Wake`]
+    /// events leading the heap, i.e. everything scheduled before the
+    /// next control-plane event (arrival, lifecycle, boot, migration
+    /// check, or the drain boundary: anything that reads cross-replica
+    /// state) — and advance the woken nodes to `next_boundary` on up to
+    /// `self.threads` scoped worker threads. `first` is the wake the
+    /// caller already popped.
+    ///
+    /// Why any thread count is bit-exact with the sequential path:
+    ///
+    ///   * After the stale filter each replica appears **at most once**
+    ///     per epoch: a valid wake consumes `Node::wake`, so a second
+    ///     heap entry for the same node cannot match it (pinned by the
+    ///     epoch property test in `rust/tests/property_invariants.rs`).
+    ///   * Advancement is **cross-node independent**: `Node::advance_to`
+    ///     touches only that node's replica — server, policy, engine
+    ///     and RNG are all per-replica — never the controller or a
+    ///     peer, so per-node results cannot depend on worker schedule.
+    ///     Workers observe nothing else (see
+    ///     [`Controller::mask_snapshot`] for the read-only mask
+    ///     contract); every controller *write* stays between epochs on
+    ///     the orchestrator thread.
+    ///   * Every observable merge effect — wake refreshes, parking —
+    ///     is applied after the workers join, on this thread, in
+    ///     **replica-index order**. Heap content is unobservable except
+    ///     through pop order (deterministic by the event key), and the
+    ///     parked set is drained order-insensitively, so the merge
+    ///     fixes all visible state.
+    ///
+    /// A node that is busy exactly *at* the boundary after advancing is
+    /// parked directly instead of re-pushing a same-time wake the
+    /// sequential loop would immediately pop and park — same end state
+    /// (wake consumed, node parked), one less heap round-trip.
+    ///
+    /// Worker errors are collected per node and the one whose replica
+    /// pops first in the epoch is propagated, matching the sequential
+    /// path's first-failure semantics.
+    fn run_epoch(
+        &mut self,
+        first: Event,
+        heap: &mut EventHeap,
+        parked: &mut Vec<usize>,
+        next_boundary: Micros,
+        scratch: &mut EpochScratch,
+    ) -> Result<()> {
+        // collect: drain the leading wake run, stale-filtering and
+        // parking exactly like the sequential arm
+        scratch.batch.clear();
+        let mut ev = Some(first);
+        while let Some(e) = ev.take() {
+            let node = &mut self.nodes[e.replica];
+            if node.wake() == Some(e.time) {
+                node.clear_wake();
+                if node.advanced_to() == Some(next_boundary) {
+                    parked.push(e.replica);
+                } else {
+                    scratch.batch.push(e.replica);
+                }
+            }
+            if matches!(heap.peek(), Some(p) if p.kind == EventKind::Wake) {
+                ev = heap.pop();
+            }
+        }
+        if let Some(log) = &mut self.epoch_log {
+            log.push(scratch.batch.clone());
+        }
+        let masks = self.ctl.mask_snapshot();
+        debug_assert!(
+            scratch.batch.iter().all(|&i| masks.is_alive(i)),
+            "dead replicas must not wake inside an epoch"
+        );
+        // advance: disjoint `&mut Node`s, chunked across the workers
+        let workers = self.threads.min(scratch.batch.len());
+        if workers <= 1 {
+            for &i in &scratch.batch {
+                self.nodes[i].advance_to(next_boundary)?;
+            }
+        } else {
+            if scratch.mask.len() < self.nodes.len() {
+                scratch.mask.resize(self.nodes.len(), false);
+            }
+            for &i in &scratch.batch {
+                scratch.mask[i] = true;
+            }
+            let mask = &scratch.mask;
+            let mut slots: Vec<(usize, &mut Node)> = self
+                .nodes
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| mask[*i])
+                .collect();
+            let per = slots.len().div_ceil(workers);
+            let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = slots
+                    .chunks_mut(per)
+                    .map(|chunk| {
+                        s.spawn(move || {
+                            for (idx, node) in chunk.iter_mut() {
+                                if let Err(e) = node.advance_to(next_boundary) {
+                                    return Some((*idx, e));
+                                }
+                            }
+                            None
+                        })
+                    })
+                    .collect();
+                for handle in handles {
+                    let outcome = match handle.join() {
+                        Ok(o) => o,
+                        Err(panic) => std::panic::resume_unwind(panic),
+                    };
+                    if let Some(failure) = outcome {
+                        failures.push(failure);
+                    }
+                }
+            });
+            for &i in &scratch.batch {
+                scratch.mask[i] = false;
+            }
+            if !failures.is_empty() {
+                // deterministic propagation: the failure whose replica
+                // pops first this epoch, as the sequential loop would
+                let at = scratch
+                    .batch
+                    .iter()
+                    .find_map(|r| failures.iter().position(|(i, _)| i == r))
+                    .expect("worker failures reference batch replicas");
+                return Err(failures.swap_remove(at).1);
+            }
+        }
+        // merge: refresh wakes / park in replica-index order — the
+        // deterministic order every run shares regardless of threads
+        scratch.batch.sort_unstable();
+        for &i in &scratch.batch {
+            let node = &mut self.nodes[i];
+            match node.next_event_time() {
+                Some(t) if t > next_boundary => {
+                    node.set_wake(t);
+                    heap.push(Event { time: t, kind: EventKind::Wake, replica: i, task: 0 });
+                }
+                // busy exactly at the boundary: park directly (the
+                // sequential loop re-pushes and immediately parks)
+                Some(_) => parked.push(i),
+                None => {}
+            }
+        }
+        Ok(())
+    }
+
     /// Route and serve an entire workload, then drain to `last_arrival
     /// + drain` — the same contract as [`crate::cluster::Router::run`],
     /// with identical output.
@@ -448,6 +645,26 @@ impl Orchestrator {
         workload: Vec<Task>,
         drain: Micros,
     ) -> Result<(ClusterReport, Vec<u64>)> {
+        assert!(
+            workload.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "workload must be sorted by arrival"
+        );
+        let last_arrival = workload.last().map_or(0, |t| t.arrival);
+        self.run_events(workload.into_iter(), Some(last_arrival + drain), drain)
+            .map(|(report, counts, _)| (report, counts))
+    }
+
+    /// [`Orchestrator::run_counted`], additionally returning every
+    /// epoch's replica batch in heap pop order — the observability
+    /// hook of the epoch property tests
+    /// (`rust/tests/property_invariants.rs`). Epochs only form on the
+    /// parallel path, so the log is empty at `threads = 1`.
+    pub fn run_counted_logged(
+        mut self,
+        workload: Vec<Task>,
+        drain: Micros,
+    ) -> Result<(ClusterReport, Vec<u64>, Vec<Vec<usize>>)> {
+        self.epoch_log = Some(Vec::new());
         assert!(
             workload.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "workload must be sorted by arrival"
@@ -474,6 +691,7 @@ impl Orchestrator {
             "streaming runs use static fleets (no lifecycle schedule)"
         );
         self.run_events(arrivals.into_iter(), None, drain)
+            .map(|(report, counts, _)| (report, counts))
     }
 
     /// The event loop shared by [`Orchestrator::run_counted`] (horizon
@@ -484,7 +702,7 @@ impl Orchestrator {
         mut arrivals: I,
         lifecycle_horizon: Option<Micros>,
         drain: Micros,
-    ) -> Result<(ClusterReport, Vec<u64>)>
+    ) -> Result<(ClusterReport, Vec<u64>, Vec<Vec<usize>>)>
     where
         I: Iterator<Item = Task>,
     {
@@ -502,6 +720,8 @@ impl Orchestrator {
         // wake is *at* the boundary (still busy there): re-armed after
         // the boundary advances, so a busy node cannot wake-loop
         let mut parked: Vec<usize> = Vec::new();
+        // reusable epoch buffers (parallel path only; threads > 1)
+        let mut epoch = EpochScratch::default();
         // the single in-flight arrival (its heap event carries the id)
         let mut next_arrival: Option<Task> = None;
         // the lifecycle stream mirrors the arrival stream: one event in
@@ -552,26 +772,34 @@ impl Orchestrator {
                 .expect("the boundary-event chain keeps the heap non-empty");
             match ev.kind {
                 EventKind::Wake => {
-                    let node = &mut self.nodes[ev.replica];
-                    if node.wake() != Some(ev.time) {
-                        continue; // stale entry: the wake was refreshed
-                    }
-                    node.clear_wake();
-                    if node.advanced_to() == Some(next_boundary) {
-                        // already at the boundary and busy there —
-                        // re-arm only after the boundary moves on
-                        parked.push(ev.replica);
-                        continue;
-                    }
-                    node.advance_to(next_boundary)?;
-                    if let Some(t) = node.next_event_time() {
-                        node.set_wake(t);
-                        heap.push(Event {
-                            time: t,
-                            kind: EventKind::Wake,
-                            replica: ev.replica,
-                            task: 0,
-                        });
+                    if self.threads <= 1 {
+                        // the sequential path — today's exact engine,
+                        // byte for byte (the parallel path below must
+                        // reproduce it; DESIGN.md "Parallel event
+                        // engine" carries the argument)
+                        let node = &mut self.nodes[ev.replica];
+                        if node.wake() != Some(ev.time) {
+                            continue; // stale entry: the wake was refreshed
+                        }
+                        node.clear_wake();
+                        if node.advanced_to() == Some(next_boundary) {
+                            // already at the boundary and busy there —
+                            // re-arm only after the boundary moves on
+                            parked.push(ev.replica);
+                            continue;
+                        }
+                        node.advance_to(next_boundary)?;
+                        if let Some(t) = node.next_event_time() {
+                            node.set_wake(t);
+                            heap.push(Event {
+                                time: t,
+                                kind: EventKind::Wake,
+                                replica: ev.replica,
+                                task: 0,
+                            });
+                        }
+                    } else {
+                        self.run_epoch(ev, &mut heap, &mut parked, next_boundary, &mut epoch)?;
                     }
                 }
                 EventKind::Arrival => {
@@ -613,6 +841,16 @@ impl Orchestrator {
                     // replica is overloaded) already popped and ran
                     // them — at every boundary where the lockstep pass
                     // would have acted, and only those
+                    //
+                    // the arriving task's per-cycle quota, read before
+                    // the decision consumes the task (the headroom-mode
+                    // autoscaler aggregates the fleet's Eq. 7 headroom
+                    // for exactly this quota)
+                    let quota = if self.lifecycle.autoscaler.grow_on_headroom {
+                        task.slo.tokens_per_cycle()
+                    } else {
+                        0
+                    };
                     let pick = self.ctl.decide(&self.nodes, &task);
                     match pick {
                         Some(p) => self.nodes[p].as_mut().assign(task),
@@ -634,6 +872,28 @@ impl Orchestrator {
                                 .map(AsRef::as_ref)
                                 .filter(|r| self.ctl.placeable(r.id()))
                                 .all(|r| r.overloaded());
+                        }
+                        if self.lifecycle.autoscaler.grow_on_headroom {
+                            // headroom mode replaces the shed/overload
+                            // deficit with the aggregate Eq. 7 signal:
+                            // mean cycle headroom across the placeable
+                            // fleet for this arrival's quota, measured
+                            // after the assignment (the slack the next
+                            // arrival will face). A shed still
+                            // registers — it means zero placeable
+                            // headroom, so the mean is zero too.
+                            let mut sum: Micros = 0;
+                            let mut n: Micros = 0;
+                            for r in self.nodes.iter().map(AsRef::as_ref) {
+                                if self.ctl.placeable(r.id()) {
+                                    sum = sum.saturating_add(r.headroom(quota));
+                                    n += 1;
+                                }
+                            }
+                            // mean <= floor, compared multiplied out so
+                            // integer division cannot round the signal
+                            let floor = self.lifecycle.autoscaler.headroom_min;
+                            deficit = n == 0 || sum <= floor.saturating_mul(n);
                         }
                         // shrink victim: an alive replica with no work
                         // at all — prefer degraded, then highest index
@@ -871,8 +1131,9 @@ impl Orchestrator {
 
         let counts: Vec<u64> = self.nodes.iter().map(Node::advancements).collect();
         self.ctl.autoscale_pending_boots = pending_boots.len() as u64;
+        let epochs = self.epoch_log.take().unwrap_or_default();
         let replicas: Vec<Replica> =
             self.nodes.into_iter().map(Node::into_replica).collect();
-        Ok((self.ctl.into_report(replicas), counts))
+        Ok((self.ctl.into_report(replicas), counts, epochs))
     }
 }

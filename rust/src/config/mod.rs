@@ -153,6 +153,13 @@ pub struct ServeConfig {
     /// reference by default; the event engine is bit-exact and faster
     /// at scale).
     pub cluster_engine: ClusterEngine,
+    /// Cluster mode: worker threads for the event engine's
+    /// epoch-batched wake advancement (`[cluster] threads` /
+    /// `--threads`; DESIGN.md "Parallel event engine"). Any value
+    /// produces bit-identical reports; 1 (the default) is the exact
+    /// sequential path, larger values cut wall time on wide fleets.
+    /// Ignored by the lockstep reference engine.
+    pub cluster_threads: usize,
     /// Cluster mode: elastic-fleet knobs — lifecycle events (explicit
     /// schedule + seeded churn), fleet-size bounds, autoscaler and
     /// health scoring (`[cluster.lifecycle]` / `[cluster.autoscaler]` /
@@ -187,6 +194,7 @@ impl Default for ServeConfig {
             cluster_migration: false,
             cluster_migrate_running: false,
             cluster_engine: ClusterEngine::Lockstep,
+            cluster_threads: 1,
             lifecycle: LifecycleConfig::default(),
             memory: MemoryConfig::default(),
         }
@@ -325,6 +333,24 @@ impl ServeConfig {
         if let Some(v) = &engine_key {
             cfg.cluster_engine = ClusterEngine::parse(v)?;
         }
+        if let Some(v) = doc.get_i64("cluster", "threads")? {
+            if v < 1 {
+                bail!("[cluster] threads must be >= 1, got {v}");
+            }
+            cfg.cluster_threads = v as usize;
+            if cfg.cluster_threads > 1 {
+                // only the event engine has epochs to parallelize — the
+                // knob implies it (never a silent no-op), and conflicts
+                // with an explicitly lockstep engine
+                if engine_key.is_some() && cfg.cluster_engine == ClusterEngine::Lockstep {
+                    bail!(
+                        "[cluster] threads > 1 applies to the event engine; \
+                         use engine = \"event\" or threads = 1"
+                    );
+                }
+                cfg.cluster_engine = ClusterEngine::Event;
+            }
+        }
         if let Some(v) = doc.get_bool("cluster", "migration")? {
             cfg.cluster_migration = v;
         }
@@ -415,6 +441,31 @@ impl ServeConfig {
                 bail!("[cluster.autoscaler] boot_delay_s must be >= 0, got {v}");
             }
             cfg.lifecycle.autoscaler.boot_delay = secs(v);
+            autoscaler_knob = true;
+        }
+        let headroom_mode_key = doc.get_bool("cluster.autoscaler", "grow_on_headroom")?;
+        if let Some(v) = headroom_mode_key {
+            cfg.lifecycle.autoscaler.grow_on_headroom = v;
+            if v {
+                autoscaler_knob = true;
+            }
+        }
+        if let Some(v) = doc.get_f64("cluster.autoscaler", "headroom_min_ms")? {
+            if v < 0.0 {
+                bail!("[cluster.autoscaler] headroom_min_ms must be >= 0, got {v}");
+            }
+            if headroom_mode_key == Some(false) {
+                // the floor only feeds the headroom-mode trigger — a
+                // configured knob must never be a silent no-op
+                bail!(
+                    "[cluster.autoscaler] headroom_min_ms requires \
+                     grow_on_headroom = true"
+                );
+            }
+            cfg.lifecycle.autoscaler.headroom_min = (v * 1000.0) as Micros;
+            // naming the floor opts the headroom mode (and the
+            // autoscaler) in, like every other named knob
+            cfg.lifecycle.autoscaler.grow_on_headroom = true;
             autoscaler_knob = true;
         }
         cfg.lifecycle.autoscaler.enabled = autoscaler_key.unwrap_or(autoscaler_knob);
@@ -787,6 +838,32 @@ scale = 1.2
     }
 
     #[test]
+    fn parses_cluster_threads() {
+        let c = ServeConfig::default();
+        assert_eq!(c.cluster_threads, 1, "sequential engine by default");
+        let c = ServeConfig::from_toml("[cluster]\nengine = \"event\"\nthreads = 8\n")
+            .unwrap();
+        assert_eq!(c.cluster_threads, 8);
+        // naming the knob implies the engine that can honor it — a
+        // configured knob is never a silent no-op
+        let c = ServeConfig::from_toml("[cluster]\nthreads = 4\n").unwrap();
+        assert_eq!(c.cluster_threads, 4);
+        assert_eq!(c.cluster_engine, ClusterEngine::Event);
+        assert!(ServeConfig::from_toml(
+            "[cluster]\nengine = \"lockstep\"\nthreads = 4\n",
+        )
+        .is_err());
+        // threads = 1 is the sequential default and honors any engine
+        let c = ServeConfig::from_toml(
+            "[cluster]\nengine = \"lockstep\"\nthreads = 1\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster_engine, ClusterEngine::Lockstep);
+        assert!(ServeConfig::from_toml("[cluster]\nthreads = 0\n").is_err());
+        assert!(ServeConfig::from_toml("[cluster]\nthreads = -2\n").is_err());
+    }
+
+    #[test]
     fn memory_defaults_are_unconstrained() {
         let c = ServeConfig::default();
         assert!(c.memory.kv_capacity.is_none());
@@ -913,6 +990,44 @@ max_replicas = 16
         assert!(
             ServeConfig::from_toml("[cluster.autoscaler]\nidle_streak = 0\n").is_err()
         );
+    }
+
+    #[test]
+    fn parses_autoscaler_headroom_mode() {
+        let c = ServeConfig::default();
+        assert!(!c.lifecycle.autoscaler.grow_on_headroom, "deficit mode by default");
+        assert_eq!(c.lifecycle.autoscaler.headroom_min, 0);
+        let c = ServeConfig::from_toml(
+            "[cluster.autoscaler]\ngrow_on_headroom = true\nheadroom_min_ms = 50.0\n",
+        )
+        .unwrap();
+        assert!(c.lifecycle.autoscaler.enabled, "a knob is never a silent no-op");
+        assert!(c.lifecycle.autoscaler.grow_on_headroom);
+        assert_eq!(c.lifecycle.autoscaler.headroom_min, 50_000);
+        assert_eq!(c.cluster_engine, ClusterEngine::Event);
+        // naming the floor alone opts the mode (and the autoscaler) in
+        let c = ServeConfig::from_toml(
+            "[cluster.autoscaler]\nheadroom_min_ms = 25.0\n",
+        )
+        .unwrap();
+        assert!(c.lifecycle.autoscaler.enabled && c.lifecycle.autoscaler.grow_on_headroom);
+        assert_eq!(c.lifecycle.autoscaler.headroom_min, 25_000);
+        // a floor under an explicit grow_on_headroom = false would be a
+        // silent no-op: reject the contradiction
+        assert!(ServeConfig::from_toml(
+            "[cluster.autoscaler]\ngrow_on_headroom = false\nheadroom_min_ms = 50.0\n",
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.autoscaler]\nheadroom_min_ms = -1.0\n",
+        )
+        .is_err());
+        // explicit off still wins over the mode knob
+        let c = ServeConfig::from_toml(
+            "[cluster.autoscaler]\nenabled = false\ngrow_on_headroom = true\n",
+        )
+        .unwrap();
+        assert!(!c.lifecycle.autoscaler.enabled && c.lifecycle.autoscaler.grow_on_headroom);
     }
 
     #[test]

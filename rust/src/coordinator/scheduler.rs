@@ -35,7 +35,12 @@ impl Step {
 }
 
 /// A scheduling policy: SLICE or one of the baselines.
-pub trait Policy {
+///
+/// `Send` is part of the contract: the cluster layer's parallel event
+/// engine advances whole replicas — server, policy, engine — on worker
+/// threads inside an epoch (DESIGN.md "Parallel event engine"), so a
+/// policy may not hold thread-pinned state (`Rc`, raw pointers).
+pub trait Policy: Send {
     /// Display name used in reports ("SLICE", "Orca", "FastServe").
     fn name(&self) -> &'static str;
 

@@ -50,7 +50,11 @@ pub struct StepOutcome {
 }
 
 /// An execution backend for prompt prefill and batched decode.
-pub trait DecodeEngine {
+///
+/// `Send` is part of the contract: the cluster layer's parallel event
+/// engine advances whole replicas — and therefore their engines — on
+/// worker threads inside an epoch (DESIGN.md "Parallel event engine").
+pub trait DecodeEngine: Send {
     /// Process one task's prompt; produces its first output token.
     fn prefill(&mut self, pool: &TaskPool, task: TaskId) -> Result<StepOutcome>;
 

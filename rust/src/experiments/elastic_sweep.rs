@@ -16,6 +16,11 @@
 //!   * `autoscale`   — the autoscaler grows the fleet (up to
 //!                     [`AUTOSCALE_MAX`]) on sustained admission
 //!                     deficit and shrinks it on sustained idleness.
+//!   * `autoscale-headroom` — same bounds, but the grow signal is the
+//!                     aggregate Eq. 7 headroom floor
+//!                     (`grow_on_headroom`, [`HEADROOM_MIN_US`]): the
+//!                     fleet grows as slack drains, *before* arrivals
+//!                     shed — the proactive-vs-reactive comparison cell.
 //!   * `autoscale+crash` — both: recovery under failures.
 //!
 //! The acceptance gate for the elastic work is the 10k cell:
@@ -42,7 +47,14 @@ use super::run_fleet;
 pub const DEFAULT_SIZES: [usize; 2] = [1_000, 10_000];
 
 /// Variants every size runs, in report order.
-pub const VARIANTS: [&str; 4] = ["static", "crash", "autoscale", "autoscale+crash"];
+pub const VARIANTS: [&str; 5] =
+    ["static", "crash", "autoscale", "autoscale-headroom", "autoscale+crash"];
+
+/// Mean-headroom floor (µs of Eq. 7 cycle slack) the
+/// `autoscale-headroom` variant grows at: 50 ms of mean slack across
+/// the placeable fleet — comfortably above zero, so the grow fires
+/// while the fleet still admits, not after it starts shedding.
+pub const HEADROOM_MIN_US: Micros = 50_000;
 
 /// Virtual seconds the whole burst arrives within (same window as the
 /// scale sweep, so the 10k cell is the same overload).
@@ -101,7 +113,7 @@ pub fn lifecycle_for(variant: &str) -> Result<LifecycleConfig> {
     let (crash, autoscale) = match variant {
         "static" => (false, false),
         "crash" => (true, false),
-        "autoscale" => (false, true),
+        "autoscale" | "autoscale-headroom" => (false, true),
         "autoscale+crash" => (true, true),
         other => anyhow::bail!("unknown elastic-sweep variant '{other}'"),
     };
@@ -123,6 +135,10 @@ pub fn lifecycle_for(variant: &str) -> Result<LifecycleConfig> {
         lc.autoscaler.enabled = true;
         lc.min_replicas = 4;
         lc.max_replicas = AUTOSCALE_MAX;
+    }
+    if variant == "autoscale-headroom" {
+        lc.autoscaler.grow_on_headroom = true;
+        lc.autoscaler.headroom_min = HEADROOM_MIN_US;
     }
     Ok(lc)
 }
@@ -269,6 +285,13 @@ pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
                 }
             );
         }
+        if let (Some(de), Some(hr)) = (find("autoscale"), find("autoscale-headroom")) {
+            println!(
+                "grow signal at {n} tasks: deficit shed {} ({} grows) vs \
+                 headroom shed {} ({} grows)",
+                de.shed, de.grows, hr.shed, hr.grows
+            );
+        }
     }
     Ok(rows_to_json(&rows))
 }
@@ -298,6 +321,27 @@ mod tests {
         let cfg = ServeConfig::default();
         let a = run_cell("autoscale", 120, &cfg).unwrap();
         let b = run_cell("autoscale", 120, &cfg).unwrap();
+        assert!(a.replicas_final >= 4 && a.replicas_final <= AUTOSCALE_MAX);
+        assert_eq!(a.finished, b.finished, "same seed, same run");
+        assert_eq!(a.shed, b.shed);
+        assert_eq!((a.grows, a.shrinks), (b.grows, b.shrinks));
+    }
+
+    #[test]
+    fn headroom_variant_sets_grow_signal() {
+        let lc = lifecycle_for("autoscale-headroom").unwrap();
+        assert!(lc.autoscaler.enabled);
+        assert!(lc.autoscaler.grow_on_headroom);
+        assert_eq!(lc.autoscaler.headroom_min, HEADROOM_MIN_US);
+        // the deficit variant keeps the PR 7 signal
+        assert!(!lifecycle_for("autoscale").unwrap().autoscaler.grow_on_headroom);
+    }
+
+    #[test]
+    fn headroom_cell_is_deterministic() {
+        let cfg = ServeConfig::default();
+        let a = run_cell("autoscale-headroom", 120, &cfg).unwrap();
+        let b = run_cell("autoscale-headroom", 120, &cfg).unwrap();
         assert!(a.replicas_final >= 4 && a.replicas_final <= AUTOSCALE_MAX);
         assert_eq!(a.finished, b.finished, "same seed, same run");
         assert_eq!(a.shed, b.shed);

@@ -194,7 +194,8 @@ pub fn run_fleet(
             let mut orch = Orchestrator::new(strategy, fleet)
                 .with_admission(cfg.cluster_admission)
                 .with_migration(cfg.cluster_migration)
-                .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone());
+                .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+                .with_threads(cfg.cluster_threads);
             if cfg.lifecycle.any_enabled() {
                 // joins clone the fleet's first profile — the spec's
                 // standard tier — calibrated exactly like the initial
@@ -275,6 +276,7 @@ where
         .with_admission(cfg.cluster_admission)
         .with_migration(cfg.cluster_migration)
         .with_running_migration(cfg.cluster_migrate_running, cfg.memory.clone())
+        .with_threads(cfg.cluster_threads)
         .with_fold_rejects(true)
         .run_stream(arrivals, drain)
         .map(|(report, _)| report)

@@ -28,6 +28,12 @@
 //! advances replicas with work, so its wall time is sublinear in
 //! width. Lockstep reference cells run at the smallest task count only
 //! — the reference engine exists for equivalence, not scale.
+//!
+//! `--threads <n[,n,...]>` (BENCH_9.json) adds the epoch-parallel
+//! worker axis on top of the replica sweep: every event-engine width
+//! runs at every thread count. The engine is bit-exact across counts
+//! (rust/tests/equivalence.rs), so only `wall_s` and the derived
+//! throughput columns move between rows of one (width, size) pair.
 
 use std::time::Instant;
 
@@ -78,6 +84,10 @@ pub struct ScaleCell {
     pub engine: ClusterEngine,
     /// Fleet width (1 for "single", 4 for "edge-mixed").
     pub replicas: usize,
+    /// Epoch-parallel worker threads the event engine advanced replicas
+    /// with (1 = the sequential reference path; lockstep cells are
+    /// always 1).
+    pub threads: usize,
     /// Workload size.
     pub n_tasks: usize,
     /// Offered arrival rate (tasks/s).
@@ -179,6 +189,7 @@ pub fn run_cell(fleet: &'static str, n_tasks: usize, cfg: &ServeConfig) -> Resul
         fleet,
         engine: cfg.cluster_engine,
         replicas: if fleet == "single" { 1 } else { 4 },
+        threads: cfg.cluster_threads,
         n_tasks,
         rate: cfg.arrival_rate,
         wall_s,
@@ -239,6 +250,7 @@ pub fn run_stream_cell(n_tasks: usize, cfg: &ServeConfig) -> Result<ScaleCell> {
         fleet: "edge-stream",
         engine: ClusterEngine::Event,
         replicas: 4,
+        threads: cfg.cluster_threads,
         n_tasks,
         rate: cfg.arrival_rate,
         wall_s,
@@ -266,13 +278,19 @@ pub fn run_replica_cell(
     engine: ClusterEngine,
     replicas: usize,
     n_tasks: usize,
+    threads: usize,
     cfg: &ServeConfig,
 ) -> Result<ScaleCell> {
+    assert!(
+        threads == 1 || engine == ClusterEngine::Event,
+        "epoch workers only exist in the event engine"
+    );
     let mut cfg = cfg.clone();
     cfg.n_tasks = n_tasks;
     cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
     cfg.policy = PolicyKind::Slice;
     cfg.cluster_engine = engine;
+    cfg.cluster_threads = threads;
     cfg.cluster_admission.enabled = false;
     cfg.cluster_migration = false;
     cfg.cluster_migrate_running = false;
@@ -295,6 +313,7 @@ pub fn run_replica_cell(
         fleet: "replicas",
         engine,
         replicas,
+        threads,
         n_tasks,
         rate: cfg.arrival_rate,
         wall_s,
@@ -315,15 +334,16 @@ pub fn run_replica_cell(
 fn render_rows(rows: &[ScaleCell]) {
     use crate::metrics::report::{pct, Table};
     let mut t = Table::new(&[
-        "fleet", "engine", "repl", "tasks", "rate/s", "wall s", "decisions",
-        "skipped", "mig pass", "decisions/s", "steps", "steps/s", "finished",
-        "shed", "SLO",
+        "fleet", "engine", "repl", "thr", "tasks", "rate/s", "wall s",
+        "decisions", "skipped", "mig pass", "decisions/s", "steps", "steps/s",
+        "finished", "shed", "SLO",
     ]);
     for c in rows {
         t.row(vec![
             c.fleet.to_string(),
             c.engine.label().to_string(),
             c.replicas.to_string(),
+            c.threads.to_string(),
             c.n_tasks.to_string(),
             format!("{:.1}", c.rate),
             format!("{:.3}", c.wall_s),
@@ -350,6 +370,7 @@ fn rows_to_json(rows: &[ScaleCell]) -> Json {
                     .set("fleet", c.fleet)
                     .set("engine", c.engine.label())
                     .set("replicas", c.replicas)
+                    .set("threads", c.threads)
                     .set("n_tasks", c.n_tasks)
                     .set("rate", c.rate)
                     .set("wall_s", c.wall_s)
@@ -410,22 +431,27 @@ pub fn run_streaming(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
     Ok(rows_to_json(&rows))
 }
 
-/// Replica-axis sweep (BENCH_6.json): event-engine cells at every
-/// (width, size) pair, lockstep reference cells at the smallest size
-/// only — wide lockstep cells cost O(arrivals × replicas) wall time by
-/// construction, and the reference engine exists for equivalence, not
-/// scale. Prints the table and returns the JSON series.
+/// Replica-axis sweep (BENCH_6.json; BENCH_9.json with a thread axis):
+/// event-engine cells at every (width, size, thread-count) triple,
+/// lockstep reference cells at the smallest size only — wide lockstep
+/// cells cost O(arrivals × replicas) wall time by construction, and the
+/// reference engine exists for equivalence, not scale. The lockstep
+/// reference always runs single-threaded (it has no epoch workers).
+/// Prints the table and returns the JSON series.
 pub fn run_replicas(
     cfg: &ServeConfig,
     replica_counts: &[usize],
     sizes: &[usize],
+    threads: &[usize],
 ) -> Result<Json> {
     let mut rows: Vec<ScaleCell> = Vec::new();
     for &width in replica_counts {
         for (i, &n) in sizes.iter().enumerate() {
-            rows.push(run_replica_cell(ClusterEngine::Event, width, n, cfg)?);
+            for &t in threads {
+                rows.push(run_replica_cell(ClusterEngine::Event, width, n, t, cfg)?);
+            }
             if i == 0 {
-                rows.push(run_replica_cell(ClusterEngine::Lockstep, width, n, cfg)?);
+                rows.push(run_replica_cell(ClusterEngine::Lockstep, width, n, 1, cfg)?);
             }
         }
     }
@@ -433,7 +459,7 @@ pub fn run_replicas(
     println!(
         "Replica-scale sweep — SLICE, round-robin homogeneous fleets, \
          {ARRIVAL_WINDOW_S:.0}s arrival window, {DRAIN_S:.0}s drain, seed {} \
-         (lockstep reference at the smallest size)\n",
+         (lockstep reference at the smallest size, single-threaded)\n",
         cfg.seed
     );
     render_rows(&rows);
@@ -492,8 +518,8 @@ mod tests {
     #[test]
     fn replica_cells_agree_across_engines() {
         let cfg = ServeConfig::default();
-        let ev = run_replica_cell(ClusterEngine::Event, 4, 60, &cfg).unwrap();
-        let ls = run_replica_cell(ClusterEngine::Lockstep, 4, 60, &cfg).unwrap();
+        let ev = run_replica_cell(ClusterEngine::Event, 4, 60, 1, &cfg).unwrap();
+        let ls = run_replica_cell(ClusterEngine::Lockstep, 4, 60, 1, &cfg).unwrap();
         // wall time differs; every simulation observable must not
         assert_eq!(ev.decisions, ls.decisions);
         assert_eq!(ev.steps, ls.steps);
@@ -501,5 +527,23 @@ mod tests {
         assert_eq!(ev.virtual_s, ls.virtual_s);
         assert_eq!(ev.replicas, 4);
         assert_eq!(ev.engine.label(), "event");
+    }
+
+    #[test]
+    fn replica_cells_agree_across_thread_counts() {
+        // the epoch-parallel engine is bit-exact: only wall time (and
+        // the throughput columns derived from it) may differ between
+        // thread counts of one (width, size) cell
+        let cfg = ServeConfig::default();
+        let seq = run_replica_cell(ClusterEngine::Event, 8, 120, 1, &cfg).unwrap();
+        let par = run_replica_cell(ClusterEngine::Event, 8, 120, 4, &cfg).unwrap();
+        assert_eq!(par.threads, 4);
+        assert_eq!(par.decisions, seq.decisions);
+        assert_eq!(par.decisions_skipped, seq.decisions_skipped);
+        assert_eq!(par.steps, seq.steps);
+        assert_eq!(par.finished, seq.finished);
+        assert_eq!(par.rejected, seq.rejected);
+        assert_eq!(par.virtual_s, seq.virtual_s);
+        assert_eq!(par.migration_passes, seq.migration_passes);
     }
 }

@@ -58,6 +58,7 @@ USAGE:
                     [--trace <file>] [--save-trace <file>]
   slice-serve cluster [--config <file>] [--replicas <n>]
                     [--engine lockstep|event]  (cluster engine; lockstep = reference)
+                    [--threads <n>]  (event-engine epoch workers; >1 implies --engine event)
                     [--fleet edge-mixed|<tier,tier,...>]  (tiers: standard|lite|nano)
                     [--strategy round-robin|least-loaded|slo-aware]
                     [--admission on|off|depth|headroom]
@@ -78,7 +79,10 @@ USAGE:
                     (scale: [--tasks <n>] runs one custom size instead of
                      the 1k/4k/10k default; [--replicas <n[,n,...]>] runs the
                      replica-width axis — event + lockstep engines over
-                     homogeneous fleets, BENCH_6.json; [--stream] runs the
+                     homogeneous fleets, BENCH_6.json;
+                     [--threads <n[,n,...]>] adds an event-engine worker
+                     axis to the replica sweep — reports are bit-exact
+                     across thread counts, BENCH_9.json; [--stream] runs the
                      constant-memory streaming axis — pull-based arrivals +
                      folded rejects up to 1M tasks, BENCH_8.json; excluded
                      from 'all')
@@ -448,6 +452,24 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
         cfg.cluster_engine = ClusterEngine::Event;
     }
+    if let Some(v) = args.flag_u64("threads")? {
+        if v < 1 {
+            bail!("--threads must be >= 1");
+        }
+        cfg.cluster_threads = v as usize;
+        if cfg.cluster_threads > 1 {
+            // same rule as the [cluster] threads config key: epoch
+            // workers only exist in the event engine, so naming
+            // lockstep alongside them is a contradiction
+            if matches!(args.flag("engine"), Some("lockstep") | Some("router")) {
+                bail!(
+                    "--threads > 1 applies to the event engine; \
+                     use --engine event or --threads 1"
+                );
+            }
+            cfg.cluster_engine = ClusterEngine::Event;
+        }
+    }
 
     let workload =
         WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
@@ -625,6 +647,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 if args.flag("replicas").is_some() {
                     bail!("--stream and --replicas are different scale axes; pick one");
                 }
+                if args.flag("threads").is_some() {
+                    bail!("--threads rides the replica-width axis; pair it with --replicas");
+                }
                 let sizes = match tasks {
                     Some(n) => vec![n],
                     None => experiments::scale_sweep::DEFAULT_STREAM_SIZES.to_vec(),
@@ -647,15 +672,38 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         Ok(n)
                     })
                     .collect::<Result<Vec<_>>>()?;
+                // --threads <n[,n,...]> adds the event-engine worker
+                // axis: every replica width runs at every thread count
+                // (reports are bit-exact across counts; only wall time
+                // moves). Default is the single-threaded engine.
+                let threads = match args.flag("threads") {
+                    Some(spec) => spec
+                        .split(',')
+                        .map(|s| {
+                            let n: usize = s
+                                .trim()
+                                .parse()
+                                .with_context(|| format!("--threads: bad count '{s}'"))?;
+                            if n < 1 {
+                                bail!("--threads counts must be >= 1");
+                            }
+                            Ok(n)
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    None => vec![1],
+                };
                 let sizes = match tasks {
                     Some(n) => vec![n],
                     None => experiments::scale_sweep::DEFAULT_REPLICA_SIZES.to_vec(),
                 };
                 out = out.set(
                     "replica_sweep",
-                    experiments::scale_sweep::run_replicas(&cfg, &counts, &sizes)?,
+                    experiments::scale_sweep::run_replicas(&cfg, &counts, &sizes, &threads)?,
                 )
             } else {
+                if args.flag("threads").is_some() {
+                    bail!("--threads rides the replica-width axis; pair it with --replicas");
+                }
                 let sizes = match tasks {
                     Some(n) => vec![n],
                     None => experiments::scale_sweep::DEFAULT_SIZES.to_vec(),

@@ -66,7 +66,7 @@ pub struct RunReport {
 /// Streaming token callback: (task, token byte, timestamp). This is the
 /// paper's `tokenBuf` (Alg. 1): tokens are delivered to the client as
 /// they are generated, not at completion.
-pub type TokenSink = Box<dyn FnMut(TaskId, u8, Micros)>;
+pub type TokenSink = Box<dyn FnMut(TaskId, u8, Micros) + Send>;
 
 /// The serving loop.
 pub struct Server<C: Clock> {

@@ -19,6 +19,13 @@
 //! counters — across strategies, fleet shapes, admission modes,
 //! migration and KV-handoff configurations.
 //!
+//! PR 9 (DESIGN.md "Parallel event engine") adds the thread-count
+//! half: the epoch-batched multi-threaded advancement path must
+//! reproduce the sequential event engine's `ClusterReport` exactly —
+//! including the migration pass/check counters, which are deterministic
+//! within one engine — at every worker count, across the same nine
+//! shapes (`parallel_event_engine_is_bit_exact_across_thread_counts`).
+//!
 //! PR 8 (DESIGN.md "Control-plane incrementality") refines both
 //! halves. Reschedule skipping makes `decisions` an implementation
 //! detail: the pinned quantity is `decisions + decisions_skipped`,
@@ -808,6 +815,51 @@ fn all_disabled_elastic_is_bit_exact_with_static_fleets() {
         assert_eq!(e.evac_requeued + e.evac_restarted, 0, "{label}: evacuations");
         assert!(noop.replicas.iter().all(|r| r.alive), "{label}: every replica alive");
         assert_eq!(noop.alive_replicas(), spec.len(), "{label}: fleet width");
+    }
+}
+
+// ---- Epoch-parallel advancement vs the sequential engine (PR 9) --------
+
+/// The epoch-batched parallel advancement path must reproduce the
+/// sequential event engine bit for bit at every thread count, across
+/// all nine canonical shapes: identical `ClusterReport`s down to
+/// per-task timings, shed lists, migration sets, memory counters — and,
+/// unlike the cross-engine comparison, identical
+/// `migration_passes`/`migration_checks` too, since both runs are the
+/// same engine and the pass cadence is deterministic.
+#[test]
+fn parallel_event_engine_is_bit_exact_across_thread_counts() {
+    for (label, cfg, strategy, spec, rate, n_tasks) in nine_shapes() {
+        let workload = WorkloadSpec::paper_mix(rate, 0.7, n_tasks, 7).generate();
+        let mut seq = cfg.clone();
+        seq.cluster_engine = ClusterEngine::Event;
+        seq.cluster_threads = 1;
+        let baseline =
+            experiments::run_fleet(strategy, &spec, workload.clone(), &seq, secs(120.0))
+                .unwrap();
+        for threads in [2usize, 4, 8] {
+            let mut par = cfg.clone();
+            par.cluster_engine = ClusterEngine::Event;
+            par.cluster_threads = threads;
+            let report = experiments::run_fleet(
+                strategy,
+                &spec,
+                workload.clone(),
+                &par,
+                secs(120.0),
+            )
+            .unwrap();
+            let ctx = format!("parallel/{label}/t{threads}");
+            assert_cluster_reports_eq(&report, &baseline, &ctx);
+            assert_eq!(
+                report.migration_passes, baseline.migration_passes,
+                "{ctx}: migration_passes"
+            );
+            assert_eq!(
+                report.migration_checks, baseline.migration_checks,
+                "{ctx}: migration_checks"
+            );
+        }
     }
 }
 

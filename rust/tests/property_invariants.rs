@@ -527,6 +527,64 @@ fn prop_idle_replicas_receive_zero_advancements() {
     }
 }
 
+/// Epoch batches are disjoint by replica (DESIGN.md "Parallel event
+/// engine"): after the stale-wake filter, no epoch may hold two wakes
+/// for the same replica — that disjointness is what lets the engine
+/// hand workers non-overlapping `&mut Node` sets without locks. The
+/// test also requires at least one multi-replica batch per run, so it
+/// has teeth: a logging bug that produced only singleton batches (i.e.
+/// a dead parallel path) would fail, not trivially pass.
+#[test]
+fn prop_epoch_batches_have_unique_replicas() {
+    use slice_serve::cluster::{DeviceProfile, Replica};
+    use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+    use slice_serve::engine::sim::SimEngine;
+
+    for seed in [7u64, 42, 1234] {
+        let width = 8usize;
+        // a rate that keeps several replicas decoding at once, so
+        // epochs genuinely batch
+        let workload =
+            slice_serve::workload::WorkloadSpec::paper_mix(6.0, 0.7, 60, seed).generate();
+        let replicas: Vec<Replica> = (0..width)
+            .map(|i| {
+                Replica::new(
+                    i,
+                    Box::new(SlicePolicy::new(
+                        LatencyModel::paper_calibrated(),
+                        SliceConfig::default(),
+                    )),
+                    Box::new(SimEngine::paper_calibrated()),
+                    DeviceProfile::standard(),
+                )
+            })
+            .collect();
+        let (report, _, epochs) = Orchestrator::new(RoutingStrategy::RoundRobin, replicas)
+            .with_threads(4)
+            .run_counted_logged(workload, secs(60.0))
+            .unwrap();
+        assert_eq!(report.replicas.len(), width, "seed {seed}");
+        assert!(!epochs.is_empty(), "seed {seed}: parallel path logged no epochs");
+        let mut widest = 0usize;
+        for (i, batch) in epochs.iter().enumerate() {
+            let mut seen = [false; 8];
+            for &r in batch {
+                assert!(r < width, "seed {seed}: epoch {i} wakes unknown replica {r}");
+                assert!(
+                    !seen[r],
+                    "seed {seed}: epoch {i} advances replica {r} twice"
+                );
+                seen[r] = true;
+            }
+            widest = widest.max(batch.len());
+        }
+        assert!(
+            widest >= 2,
+            "seed {seed}: no epoch ever batched two replicas — parallelism is dead"
+        );
+    }
+}
+
 /// The documented same-time ordering contract (DESIGN.md "Elastic
 /// fleets"): `Wake < Lifecycle < RescheduleBoundary < Arrival`. Nodes
 /// reach a boundary before anything decides there; a fleet change at

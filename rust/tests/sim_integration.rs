@@ -277,12 +277,14 @@ fn engine_failure_propagates() {
 /// monotone timestamps, matching the final task records.
 #[test]
 fn token_sink_streams_all_tokens_in_order() {
-    use std::cell::RefCell;
     use std::collections::HashMap;
-    use std::rc::Rc;
+    use std::sync::{Arc, Mutex};
 
-    let streamed: Rc<RefCell<HashMap<u64, Vec<(u8, u64)>>>> =
-        Rc::new(RefCell::new(HashMap::new()));
+    // Arc<Mutex<..>> rather than Rc<RefCell<..>>: `TokenSink` is `Send`
+    // (replicas — sinks included — cross threads in the parallel event
+    // engine's epochs), so the capture must be too.
+    let streamed: Arc<Mutex<HashMap<u64, Vec<(u8, u64)>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
     let sink_ref = streamed.clone();
 
     let cfg = ServeConfig::default();
@@ -294,12 +296,12 @@ fn token_sink_streams_all_tokens_in_order() {
         VirtualClock::new(),
     )
     .with_token_sink(Box::new(move |task, token, now| {
-        sink_ref.borrow_mut().entry(task).or_default().push((token, now));
+        sink_ref.lock().unwrap().entry(task).or_default().push((token, now));
     }))
     .run(secs(600.0))
     .unwrap();
 
-    let streamed = streamed.borrow();
+    let streamed = streamed.lock().unwrap();
     for t in &report.tasks {
         let stream = streamed.get(&t.id).map(|v| v.as_slice()).unwrap_or(&[]);
         assert_eq!(

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import heapq
 import math
+import time as _time
 from bisect import bisect_left, insort
 from collections import deque
 from dataclasses import dataclass, field
@@ -1228,11 +1229,17 @@ class AutoscalerConfig:
     idle_streak: int = 64
     cooldown: int = 500_000  # 0.5 s
     boot_delay: int = 0  # µs between a grow decision and the joiner booting
+    # PR 9: replace the shed-deficit grow signal with the aggregate
+    # Eq. 7 one — "deficit" becomes "mean cycle headroom across the
+    # placeable fleet <= headroom_min (µs)"
+    grow_on_headroom: bool = False
+    headroom_min: int = 0
 
     def copy(self) -> "AutoscalerConfig":
         return AutoscalerConfig(self.enabled, self.deficit_streak,
                                 self.idle_streak, self.cooldown,
-                                self.boot_delay)
+                                self.boot_delay, self.grow_on_headroom,
+                                self.headroom_min)
 
 
 @dataclass
@@ -1849,9 +1856,21 @@ class Orchestrator:
 
     def __init__(self, ctl: Router,
                  lifecycle: Optional[LifecycleConfig] = None,
-                 factory: Optional[Callable] = None) -> None:
+                 factory: Optional[Callable] = None,
+                 threads: int = 1) -> None:
         self.ctl = ctl
         self.replicas = ctl.replicas
+        # PR 9 epoch workers (Orchestrator::with_threads). threads <= 1
+        # keeps the literal sequential WAKE arm; > 1 routes wakes
+        # through _run_epoch. Python advancement stays single-threaded
+        # either way (the GIL) — the mirror's job is the bit-exactness
+        # contract plus the epoch structure the cost model reads.
+        self.threads = max(1, int(threads))
+        # set to [] to record each epoch's batch (run_counted_logged)
+        self.epoch_log: Optional[List[List[int]]] = None
+        # set to [] to record per-epoch (replica, seconds) advance
+        # costs — the BENCH_9 thread-speedup cost-model input
+        self.epoch_costs: Optional[List[List[Tuple[int, float]]]] = None
         n = len(self.replicas)
         self.wake: List[Optional[int]] = [None] * n
         self.advanced_to: List[Optional[int]] = [None] * n
@@ -1971,6 +1990,54 @@ class Orchestrator:
         if nxt is not None:
             heapq.heappush(heap, (nxt, self.WAKE, i, 0))
 
+    def _run_epoch(self, first: Tuple, heap: List, parked: List[int],
+                   next_boundary: int) -> None:
+        """Mirrors Orchestrator::run_epoch: pop the maximal run of WAKE
+        events leading the heap (the *epoch* — everything scheduled
+        before the next control-plane event), stale-filtering and
+        parking exactly like the sequential arm, advance the batch, and
+        apply every merge effect (wake re-arming, parking) in
+        replica-index order. The stale filter guarantees each replica
+        appears at most once per epoch; a node busy exactly at the
+        boundary after advancing parks directly (the sequential loop
+        re-pushes a same-time wake and immediately pops + parks it —
+        same end state)."""
+        batch: List[int] = []
+        ev: Optional[Tuple] = first
+        while ev is not None:
+            t, _, ridx, _ = ev
+            if self.wake[ridx] == t:
+                self.wake[ridx] = None
+                if self.advanced_to[ridx] == next_boundary:
+                    parked.append(ridx)
+                else:
+                    batch.append(ridx)
+            ev = (heapq.heappop(heap)
+                  if heap and heap[0][1] == self.WAKE else None)
+        if self.epoch_log is not None:
+            self.epoch_log.append(list(batch))
+        costs: Optional[List[Tuple[int, float]]] = None
+        if self.epoch_costs is not None:
+            costs = []
+            self.epoch_costs.append(costs)
+        for i in batch:
+            if costs is None:
+                self._advance(i, next_boundary)
+            else:
+                t0 = _time.perf_counter()
+                self._advance(i, next_boundary)
+                costs.append((i, _time.perf_counter() - t0))
+        batch.sort()
+        for i in batch:
+            nxt = self.replicas[i].next_event_time()
+            if nxt is None:
+                continue
+            if nxt > next_boundary:
+                self.wake[i] = nxt
+                heapq.heappush(heap, (nxt, self.WAKE, i, 0))
+            else:
+                parked.append(i)
+
     def run(self, workload: List[Task], drain: int):
         assert all(a.arrival <= b.arrival for a, b in zip(workload, workload[1:]))
         last = workload[-1].arrival if workload else 0
@@ -2031,6 +2098,10 @@ class Orchestrator:
         while True:
             time, kind, ridx, tid = heapq.heappop(heap)
             if kind == self.WAKE:
+                if self.threads > 1:
+                    self._run_epoch((time, kind, ridx, tid), heap, parked,
+                                    next_boundary)
+                    continue
                 if self.wake[ridx] != time:
                     continue  # stale: the replica's horizon moved
                 self.wake[ridx] = None
@@ -2067,6 +2138,13 @@ class Orchestrator:
                 # replica is overloaded) already popped and ran them —
                 # at every boundary where the lockstep pass would have
                 # acted, and only those
+                #
+                # the arriving task's per-cycle quota, read before the
+                # decision (the headroom-mode autoscaler aggregates the
+                # fleet's Eq. 7 headroom for exactly this quota)
+                quota = (task.slo.tokens_per_cycle()
+                         if self.lifecycle.autoscaler.grow_on_headroom
+                         else 0)
                 pick = ctl.decide(task)
                 if pick is None:
                     ctl.reject(task)
@@ -2084,6 +2162,22 @@ class Orchestrator:
                         # is overrunning"
                         deficit = all(r.overloaded() for r in self.replicas
                                       if ctl.placeable(r.id))
+                    if self.lifecycle.autoscaler.grow_on_headroom:
+                        # headroom mode replaces the shed/overload
+                        # deficit with the aggregate Eq. 7 signal: mean
+                        # cycle headroom across the placeable fleet for
+                        # this arrival's quota, measured after the
+                        # assignment. A shed still registers — it means
+                        # zero placeable headroom, so the mean is zero
+                        # too. Compared multiplied out so integer
+                        # division cannot round the signal.
+                        sum_h, n_h = 0, 0
+                        for r in self.replicas:
+                            if ctl.placeable(r.id):
+                                sum_h += r.headroom(quota)
+                                n_h += 1
+                        floor = self.lifecycle.autoscaler.headroom_min
+                        deficit = n_h == 0 or sum_h <= floor * n_h
                     # shrink victim: an alive replica with no work at
                     # all — prefer degraded, then highest index
                     idle = None
@@ -2257,7 +2351,8 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
               migrate_running: bool = False,
               memory: Optional[MemoryConfig] = None,
               engine: str = "lockstep",
-              lifecycle: Optional[LifecycleConfig] = None):
+              lifecycle: Optional[LifecycleConfig] = None,
+              threads: int = 1):
     """Mirrors experiments::run_fleet. Returns (tasks, per_replica) plus
     shed/migration/elastic counters via the returned router's
     attributes. engine="event" drives the same Router decisions through
@@ -2297,11 +2392,13 @@ def run_fleet(strategy: str, profiles: List[DeviceProfile], workload: List[Task]
 
             orch_lc = lifecycle
         tasks, per = Orchestrator(router, lifecycle=orch_lc,
-                                  factory=factory).run(workload, drain)
+                                  factory=factory,
+                                  threads=threads).run(workload, drain)
     else:
         assert engine == "lockstep", f"unknown cluster engine {engine!r}"
         assert lifecycle is None or not lifecycle.any_enabled(), \
             "elastic fleets need the event engine"
+        assert threads <= 1, "epoch workers only exist in the event engine"
         tasks, per = router.run(workload, drain)
     return tasks, per, router
 

@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build for slice-serve (see perf.md).
+#
+# Three phases:
+#   1. build an instrumented binary (-Cprofile-generate),
+#   2. train it on the streaming scale sweep — the control-plane hot
+#      path the bench-regression gate measures (10k tasks through the
+#      event engine with folded rejects),
+#   3. merge the raw profiles and rebuild with -Cprofile-use.
+#
+# Requirements: a stable Rust toolchain with the llvm-tools component
+# (for llvm-profdata). No external dependencies; everything runs
+# offline. The optimized binary lands in the default release path
+# (target/release/slice-serve) so `cargo run --release` and the bench
+# harness pick it up unchanged.
+#
+# Usage:
+#   tools/run_pgo.sh            # train on the default 10k streaming cell
+#   TRAIN_TASKS=100000 tools/run_pgo.sh
+#
+# Combine with the parallel event engine at run time:
+#   target/release/slice-serve experiment scale --tasks 100000 \
+#     --replicas 256 --threads 4
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TRAIN_TASKS="${TRAIN_TASKS:-10000}"
+PGO_DIR="${PGO_DIR:-target/pgo-profiles}"
+
+# llvm-profdata ships with the llvm-tools rustup component; fall back
+# to a system binary if the component is not installed.
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+if [ -z "$PROFDATA" ]; then
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        PROFDATA="llvm-profdata"
+    else
+        echo "error: llvm-profdata not found." >&2
+        echo "  rustup component add llvm-tools   # or install LLVM" >&2
+        exit 1
+    fi
+fi
+
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+ABS_PGO_DIR="$(cd "$PGO_DIR" && pwd)"
+
+echo "== phase 1: instrumented build =="
+RUSTFLAGS="-Cprofile-generate=$ABS_PGO_DIR" \
+    cargo build --release
+
+echo "== phase 2: training run (streaming scale, $TRAIN_TASKS tasks) =="
+# The training workload is the streaming control-plane cell: pull-based
+# arrivals, headroom admission, migration, folded rejects — the same
+# shape BENCH_8.json and the CI regression gate measure.
+target/release/slice-serve experiment scale \
+    --tasks "$TRAIN_TASKS" --stream --out /dev/null
+
+echo "== phase 3: merge profiles + optimized rebuild =="
+"$PROFDATA" merge -o "$ABS_PGO_DIR/merged.profdata" "$ABS_PGO_DIR"
+RUSTFLAGS="-Cprofile-use=$ABS_PGO_DIR/merged.profdata" \
+    cargo build --release
+
+echo "== done: PGO-optimized binary at target/release/slice-serve =="
+echo "verify with e.g.:"
+echo "  target/release/slice-serve experiment scale --tasks 10000 --stream"
