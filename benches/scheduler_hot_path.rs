@@ -17,8 +17,7 @@ use slice_serve::coordinator::mask::{period_eq7, DecodeMask};
 use slice_serve::coordinator::pool::TaskPool;
 use slice_serve::coordinator::scheduler::{Policy, Step};
 use slice_serve::coordinator::selection::{
-    select_tasks_reference, select_tasks_with, Candidate, Selection, SelectionScratch,
-    CYCLE_CAP,
+    select_tasks_with, Candidate, Selection, SelectionScratch, CYCLE_CAP,
 };
 use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
 use slice_serve::coordinator::task::{Task, TaskClass};
@@ -61,11 +60,6 @@ fn pool_with_running(n: usize) -> TaskPool {
 fn main() {
     let budget = Duration::from_millis(400);
     let lat = LatencyModel::paper_calibrated();
-    // The kept pre-PR 5 reference cells only matter when re-measuring
-    // the speedup against the historical implementation; they roughly
-    // double the selection section's wall clock, so they are opt-in
-    // (CI's bench smoke skips them).
-    let bench_ref = std::env::var("SLICE_BENCH_REF").is_ok_and(|v| v == "1");
     println!("{}", report_header());
 
     // the PR 5 hot path: reusable scratch + incremental Eq. 7 — this is
@@ -94,15 +88,6 @@ fn main() {
             sel_out.selected.len()
         });
         println!("{}", r.report_line());
-
-        // the pre-PR 5 implementation, kept as the speedup reference
-        // (comparator-recomputed sort + O(n) closed form per admission)
-        if bench_ref {
-            let r = bench(&format!("selection/select_tasks_ref/{n}"), budget, || {
-                select_tasks_reference(&cands, &lat, CYCLE_CAP, None)
-            });
-            println!("{}", r.report_line());
-        }
     }
 
     for n in [8usize, 64, 256] {
@@ -166,10 +151,9 @@ fn main() {
     }
 
     // The PR 5 acceptance cells: one Alg. 4 reschedule over a deep
-    // queue (scratch-owned, allocation-free) vs the kept reference
-    // pipeline (candidate Vec + comparator-recomputed sort + O(n)
-    // closed form per admission + fresh mask build — what the pre-PR
-    // reschedule allocated and computed).
+    // queue (scratch-owned, allocation-free — the historical reference
+    // pipeline these replaced was deleted once its semantics moved into
+    // the property suite; BENCH_5.json preserves the measured speedup).
     for n in [256usize, 1024] {
         let mut pool = pool_with_running(n);
         let mut policy = SlicePolicy::new(lat.clone(), full_cfg.clone());
@@ -179,25 +163,6 @@ fn main() {
             step_and_recycle(&mut policy, &mut pool)
         });
         println!("{}", r.report_line());
-
-        if bench_ref {
-            let pool = pool_with_running(n);
-            let r = bench(&format!("slice/reschedule_ref/{n}"), budget, || {
-                let candidates: Vec<Candidate> = pool
-                    .iter()
-                    .filter(|t| !t.is_finished())
-                    .map(|t| Candidate {
-                        id: t.id,
-                        utility: t.utility,
-                        tpot: t.slo.tpot,
-                        kv_bytes: 0,
-                    })
-                    .collect();
-                let sel = select_tasks_reference(&candidates, &lat, CYCLE_CAP, None);
-                DecodeMask::build(sel.selected).n_tasks()
-            });
-            println!("{}", r.report_line());
-        }
     }
 
     // The PR 8 incremental control plane at the same depths: one

@@ -82,6 +82,22 @@ pub(crate) struct Controller {
     /// *every* alive replica is degraded, placement relaxes to
     /// alive-only — total shed would be worse than slow service.
     pub(crate) degraded: Vec<bool>,
+    /// Per-replica failure-detector suspicion (same empty-for-static
+    /// contract). Suspected replicas are excluded from new placement
+    /// and migration destinations — gently drained — and un-suspected
+    /// on a fresh heartbeat. Unlike `alive`, this is *believed* state:
+    /// a suspected replica may be dead (not yet confirmed) or merely
+    /// lagging.
+    pub(crate) suspected: Vec<bool>,
+    /// Per-replica physical reachability (same empty-for-static
+    /// contract). Set by the orchestrator the instant a replica dies
+    /// under delayed detection: the *controller* still believes it
+    /// alive (dispatches go there and sit in limbo — sends are
+    /// fire-and-forget), but operations that need a *response* from
+    /// the replica — migration withdrawals, shrink-victim shutdowns —
+    /// silently fail, so those paths check this mask. Not a detection
+    /// signal: placement must never read it.
+    pub(crate) unresponsive: Vec<bool>,
     /// Eligibility-mask buffer (alive ∧ ¬degraded per decision),
     /// reused like the admission scratch.
     eligible_scratch: Vec<bool>,
@@ -95,6 +111,13 @@ pub(crate) struct Controller {
     pub(crate) autoscale_shrinks: u64,
     /// Grow decisions still booting at run end (boot-delayed joins).
     pub(crate) autoscale_pending_boots: u64,
+    pub(crate) suspicions: u64,
+    pub(crate) false_suspicions: u64,
+    pub(crate) detections: u64,
+    pub(crate) limbo_recovered: u64,
+    pub(crate) retries: u64,
+    pub(crate) retry_exhausted: u64,
+    pub(crate) limbo_lost: u64,
 }
 
 impl Controller {
@@ -120,6 +143,8 @@ impl Controller {
             rejected_folded: 0,
             alive: Vec::new(),
             degraded: Vec::new(),
+            suspected: Vec::new(),
+            unresponsive: Vec::new(),
             eligible_scratch: Vec::new(),
             crashes: 0,
             joins: 0,
@@ -130,6 +155,13 @@ impl Controller {
             autoscale_grows: 0,
             autoscale_shrinks: 0,
             autoscale_pending_boots: 0,
+            suspicions: 0,
+            false_suspicions: 0,
+            detections: 0,
+            limbo_recovered: 0,
+            retries: 0,
+            retry_exhausted: 0,
+            limbo_lost: 0,
         }
     }
 
@@ -155,9 +187,22 @@ impl Controller {
         self.degraded.get(i).copied().unwrap_or(false)
     }
 
-    /// Replicas placement may target: alive and not degraded.
+    /// Failure-detector suspicion; a missing entry (static fleet, or
+    /// detector off) is not suspected.
+    pub(crate) fn is_suspected(&self, i: usize) -> bool {
+        self.suspected.get(i).copied().unwrap_or(false)
+    }
+
+    /// Physical reachability under delayed detection; a missing entry
+    /// is responsive. See the field doc: response-requiring paths only.
+    pub(crate) fn is_unresponsive(&self, i: usize) -> bool {
+        self.unresponsive.get(i).copied().unwrap_or(false)
+    }
+
+    /// Replicas placement may target: alive, not degraded, and not
+    /// suspected by the failure detector.
     pub(crate) fn placeable(&self, i: usize) -> bool {
-        self.is_alive(i) && !self.is_degraded(i)
+        self.is_alive(i) && !self.is_degraded(i) && !self.is_suspected(i)
     }
 
     /// Alive replicas right now (fleet-bound checks).
@@ -307,7 +352,14 @@ impl Controller {
         }
         self.migration_passes += 1;
         for src in 0..replicas.len() {
-            if !self.is_alive(src) || !replicas[src].as_ref().overloaded() {
+            // an unresponsive source cannot answer the withdraw request
+            // (it is dead but not yet detected) — skipping it is what
+            // keeps a not-yet-confirmed corpse from magically handing
+            // its queue back before the detector fires
+            if !self.is_alive(src)
+                || self.is_unresponsive(src)
+                || !replicas[src].as_ref().overloaded()
+            {
                 continue;
             }
             // the eligible-peer check runs *before* withdrawing: with a
@@ -358,7 +410,11 @@ impl Controller {
             return;
         }
         for src in 0..replicas.len() {
-            if !self.is_alive(src) || !replicas[src].as_ref().overloaded() {
+            // same unresponsive-source gate as the queued pass above
+            if !self.is_alive(src)
+                || self.is_unresponsive(src)
+                || !replicas[src].as_ref().overloaded()
+            {
                 continue;
             }
             let candidates = replicas[src].as_ref().running_candidates(&self.migrated);
@@ -415,6 +471,22 @@ impl Controller {
     ) {
         // queued tasks first: free re-placement, arrival order
         let queued = replicas[src].as_mut().withdraw_all();
+        self.requeue_evacuated(replicas, src, queued);
+        self.evacuate_in_service(replicas, src, crash);
+    }
+
+    /// Free re-placement of queued-but-unstarted tasks withdrawn from
+    /// `src` (their state never left that replica). Split out of
+    /// [`Controller::evacuate`] so detector confirmation can requeue
+    /// the *pre-crash* partition of a dead replica's queue through the
+    /// byte-identical oracle path while routing the post-crash limbo
+    /// partition into retry instead.
+    pub(crate) fn requeue_evacuated<R: AsRef<Replica> + AsMut<Replica>>(
+        &mut self,
+        replicas: &mut [R],
+        src: usize,
+        queued: Vec<Task>,
+    ) {
         for task in queued {
             let quota = task.slo.tokens_per_cycle();
             let dst = best_by_headroom(replicas, quota, |r| {
@@ -435,7 +507,18 @@ impl Controller {
                 None => self.reject(task),
             }
         }
-        // then everything in service, delivery order
+    }
+
+    /// The in-service half of [`Controller::evacuate`]: extract and
+    /// re-admit everything `src` was actively serving, with the
+    /// crash/leave restore fee priced on each destination.
+    pub(crate) fn evacuate_in_service<R: AsRef<Replica> + AsMut<Replica>>(
+        &mut self,
+        replicas: &mut [R],
+        src: usize,
+        crash: bool,
+    ) {
+        // everything in service, delivery order
         let manifest = replicas[src].as_ref().evacuees();
         for (gid, quota, tokens, prefilled) in manifest {
             let dst = best_by_headroom(replicas, quota, |r| {
@@ -488,6 +571,13 @@ impl Controller {
             autoscale_grows: self.autoscale_grows,
             autoscale_shrinks: self.autoscale_shrinks,
             autoscale_pending_boots: self.autoscale_pending_boots,
+            suspicions: self.suspicions,
+            false_suspicions: self.false_suspicions,
+            detections: self.detections,
+            limbo_recovered: self.limbo_recovered,
+            retries: self.retries,
+            retry_exhausted: self.retry_exhausted,
+            limbo_lost: self.limbo_lost,
         };
         let mut reports: Vec<_> = replicas.into_iter().map(Replica::finish).collect();
         if !self.alive.is_empty() {

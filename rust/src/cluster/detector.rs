@@ -1,0 +1,225 @@
+//! Heartbeat-driven failure detection: suspicion, confirmation, and
+//! the false-positive path back (DESIGN.md "Failure detection &
+//! recovery").
+//!
+//! PR 7's elastic fleets had oracle failure visibility: the instant a
+//! replica crashed, the controller knew and evacuated. The
+//! [`FailureDetector`] replaces the oracle with the signal real edge
+//! fleets actually have — heartbeats. Every
+//! [`heartbeat_interval`](super::DetectorConfig::heartbeat_interval)
+//! the orchestrator ticks the detector; each *functioning* replica
+//! emits a heartbeat that arrives after its current Eq. 7 cycle lag
+//! ([`Replica::cycle_lag`](super::Replica::cycle_lag)), so an
+//! overloaded replica heartbeats late for organic reasons. A crashed
+//! replica is silenced (it emits nothing), and until its heartbeat age
+//! crosses [`suspicion_timeout`](super::DetectorConfig::suspicion_timeout)
+//! the router keeps dispatching into it — those tasks sit in limbo and
+//! are recovered with bounded retry/backoff at confirmation (the
+//! orchestrator's job; see `cluster/orchestrator.rs`).
+//!
+//! The per-replica suspicion state machine, evaluated at each tick
+//! against heartbeat age `now - last_heartbeat_arrival`:
+//!
+//!   * **healthy → suspected** when age exceeds `heartbeat_interval`
+//!     (one full tick missed). Suspected replicas are excluded from new
+//!     placement and migration destinations, which gently drains them.
+//!   * **suspected → healthy** when a fresh heartbeat lands (age back
+//!     within `heartbeat_interval`) — a *false suspicion*, counted but
+//!     harmless. Only overloaded-but-alive replicas take this edge;
+//!     the dead never heartbeat again.
+//!   * **suspected → confirmed dead** when age reaches
+//!     `suspicion_timeout` *and* the replica is actually silenced.
+//!     Confirmation is gated on the simulation's ground truth so a
+//!     false suspicion can never escalate to a false kill — a live
+//!     replica lagging past the timeout stays suspected (drained, not
+//!     evacuated) until its heartbeats catch up. Real detectors pay
+//!     false kills instead; the simulation charges the milder price so
+//!     task conservation stays provable.
+//!
+//! The detector holds no routing state of its own — the orchestrator
+//! applies each [`Verdict`] to the controller's `suspected` mask and
+//! counters, keeping this type a pure clock-in/verdict-out machine
+//! that the Python mirror reproduces line for line.
+
+use super::lifecycle::DetectorConfig;
+use crate::util::Micros;
+
+/// Transition produced by one suspicion-machine tick for one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// No transition this tick.
+    None,
+    /// Freshly suspected: heartbeat age crossed `heartbeat_interval`.
+    Suspect,
+    /// Suspicion cleared by a fresh heartbeat — a false suspicion.
+    Unsuspect,
+    /// Confirmed dead: silenced and age reached `suspicion_timeout`.
+    Confirm,
+}
+
+/// The heartbeat bookkeeping behind the suspicion state machine: per
+/// replica, the arrival time of the freshest heartbeat folded in, the
+/// in-flight heartbeats still travelling, and the current suspicion
+/// flag (mirrored into the controller's placement mask by the
+/// orchestrator).
+#[derive(Debug, Clone)]
+pub struct FailureDetector {
+    cfg: DetectorConfig,
+    /// Arrival time of the freshest heartbeat seen, per replica. A
+    /// replica admitted at time `t` starts with `last_hb = t` so it is
+    /// not born pre-suspected.
+    last_hb: Vec<Micros>,
+    /// Emitted-but-not-yet-arrived heartbeat arrival times, per
+    /// replica. Arrivals are folded into `last_hb` lazily at each tick.
+    pending: Vec<Vec<Micros>>,
+    /// Detector-local suspicion flags (drive the verdict edges).
+    suspected: Vec<bool>,
+}
+
+impl FailureDetector {
+    /// Detector for an initial fleet of `n` replicas at virtual time 0.
+    pub fn new(cfg: DetectorConfig, n: usize) -> Self {
+        FailureDetector {
+            cfg,
+            last_hb: vec![0; n],
+            pending: vec![Vec::new(); n],
+            suspected: vec![false; n],
+        }
+    }
+
+    /// The config the detector was built with.
+    pub fn cfg(&self) -> &DetectorConfig {
+        &self.cfg
+    }
+
+    /// Grow the tracked set to `n` replicas (joiners). New entries
+    /// start with a synthetic heartbeat at `now` — a replica that
+    /// joins mid-run is healthy until it actually misses a tick.
+    pub fn ensure(&mut self, n: usize, now: Micros) {
+        while self.last_hb.len() < n {
+            self.last_hb.push(now);
+            self.pending.push(Vec::new());
+            self.suspected.push(false);
+        }
+    }
+
+    /// Record a heartbeat emitted by replica `i` at `tick`, arriving
+    /// `lag` later (the replica's current Eq. 7 cycle overrun — an
+    /// overloaded replica's heartbeat travels late).
+    pub fn emit(&mut self, i: usize, tick: Micros, lag: Micros) {
+        self.pending[i].push(tick.saturating_add(lag));
+    }
+
+    /// Fold arrived heartbeats for replica `i` and run one suspicion
+    /// step at `now`. `dead` is the simulation's ground truth (the
+    /// orchestrator's silenced flag): only dead replicas can be
+    /// confirmed; live laggards cap at suspected.
+    pub fn tick(&mut self, i: usize, now: Micros, dead: bool) -> Verdict {
+        let pend = &mut self.pending[i];
+        let mut k = 0;
+        while k < pend.len() {
+            if pend[k] <= now {
+                let arrived = pend.swap_remove(k);
+                if arrived > self.last_hb[i] {
+                    self.last_hb[i] = arrived;
+                }
+            } else {
+                k += 1;
+            }
+        }
+        let age = now.saturating_sub(self.last_hb[i]);
+        if dead && age >= self.cfg.suspicion_timeout {
+            self.suspected[i] = true;
+            return Verdict::Confirm;
+        }
+        if age > self.cfg.heartbeat_interval {
+            if !self.suspected[i] {
+                self.suspected[i] = true;
+                return Verdict::Suspect;
+            }
+        } else if self.suspected[i] {
+            self.suspected[i] = false;
+            return Verdict::Unsuspect;
+        }
+        Verdict::None
+    }
+
+    /// Current suspicion flag for replica `i`.
+    pub fn is_suspected(&self, i: usize) -> bool {
+        self.suspected.get(i).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det() -> FailureDetector {
+        let cfg = DetectorConfig {
+            enabled: true,
+            heartbeat_interval: 100,
+            suspicion_timeout: 300,
+            ..DetectorConfig::default()
+        };
+        FailureDetector::new(cfg, 2)
+    }
+
+    #[test]
+    fn on_time_heartbeats_never_suspect() {
+        let mut d = det();
+        for tick in 1..=10u64 {
+            let t = tick * 100;
+            d.emit(0, t, 0);
+            assert_eq!(d.tick(0, t, false), Verdict::None);
+            assert!(!d.is_suspected(0));
+        }
+    }
+
+    #[test]
+    fn silence_suspects_then_confirms_when_dead() {
+        let mut d = det();
+        // replica 1 heartbeats; replica 0 went silent after t=0
+        assert_eq!(d.tick(0, 100, true), Verdict::None, "age == interval");
+        assert_eq!(d.tick(0, 200, true), Verdict::Suspect);
+        assert_eq!(d.tick(0, 200, true), Verdict::None, "edge, not level");
+        assert_eq!(d.tick(0, 300, true), Verdict::Confirm, "age == timeout");
+    }
+
+    #[test]
+    fn late_heartbeat_is_a_false_suspicion() {
+        let mut d = det();
+        d.emit(0, 100, 150); // overloaded: arrives at 250
+        assert_eq!(d.tick(0, 200, false), Verdict::Suspect);
+        assert!(d.is_suspected(0));
+        assert_eq!(d.tick(0, 300, false), Verdict::Unsuspect, "hb landed at 250");
+        assert!(!d.is_suspected(0));
+    }
+
+    #[test]
+    fn live_replica_past_timeout_stays_suspected_not_confirmed() {
+        let mut d = det();
+        assert_eq!(d.tick(0, 200, false), Verdict::Suspect);
+        assert_eq!(d.tick(0, 500, false), Verdict::None, "no false kill");
+        assert!(d.is_suspected(0));
+        // a catch-up heartbeat heals it even from deep lag
+        d.emit(0, 500, 0);
+        assert_eq!(d.tick(0, 550, false), Verdict::Unsuspect);
+    }
+
+    #[test]
+    fn joiners_start_with_a_fresh_synthetic_heartbeat() {
+        let mut d = det();
+        d.ensure(3, 1_000);
+        assert_eq!(d.tick(2, 1_050, false), Verdict::None);
+        assert_eq!(d.tick(2, 1_200, false), Verdict::Suspect, "then ages");
+    }
+
+    #[test]
+    fn fold_takes_the_freshest_arrival() {
+        let mut d = det();
+        d.emit(0, 100, 300); // arrives 400
+        d.emit(0, 200, 10); // arrives 210
+        assert_eq!(d.tick(0, 450, true), Verdict::None, "last_hb = 400");
+        assert_eq!(d.tick(0, 750, true), Verdict::Confirm, "age 350 >= 300");
+    }
+}

@@ -114,6 +114,57 @@ impl Default for AutoscalerConfig {
     }
 }
 
+/// Failure-detection shape (`[cluster.detector]`): heartbeat-driven
+/// suspicion and confirmation, replacing PR 7's oracle crash
+/// visibility with a detection *delay* during which the router keeps
+/// dispatching into the dead replica (DESIGN.md "Failure detection &
+/// recovery"). With `suspicion_timeout = 0` the subsystem is fully
+/// inert and crashes stay oracle-visible — bit-exact with PR 7.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectorConfig {
+    /// Master switch (off by default: crashes stay oracle-visible).
+    pub enabled: bool,
+    /// Heartbeat tick period. Each tick, every functioning replica
+    /// emits a heartbeat that arrives after its current Eq. 7 cycle
+    /// lag, so overloaded replicas heartbeat late — the organic
+    /// false-suspicion source.
+    pub heartbeat_interval: Micros,
+    /// Heartbeat age at which a silent replica is *confirmed* dead and
+    /// recovered (evacuation + limbo re-dispatch). Ages past
+    /// `heartbeat_interval` only *suspect* (placement exclusion,
+    /// reversible). 0 disables detection entirely (the oracle path).
+    pub suspicion_timeout: Micros,
+    /// Retry budget per in-limbo task recovered at confirmation. 0
+    /// sheds limbo tasks immediately at confirmation (the no-retry
+    /// baseline the chaos sweep compares against).
+    pub max_retries: u32,
+    /// Base backoff before retry attempt `k` fires:
+    /// `retry_backoff << (k - 1)` after the immediate first attempt.
+    pub retry_backoff: Micros,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            enabled: false,
+            heartbeat_interval: 500_000,  // 0.5 s
+            suspicion_timeout: 2_000_000, // 2 s
+            max_retries: 3,
+            retry_backoff: 500_000, // 0.5 s
+        }
+    }
+}
+
+impl DetectorConfig {
+    /// True when detection actually runs: enabled with a nonzero
+    /// timeout. `suspicion_timeout = 0` keeps the whole subsystem inert
+    /// (no heartbeat events, oracle crash visibility) — the
+    /// bit-exactness gate `rust/tests/equivalence.rs` pins.
+    pub fn active(&self) -> bool {
+        self.enabled && self.suspicion_timeout > 0
+    }
+}
+
 /// Router health-scoring shape: an EWMA of per-replica boundary lag
 /// (Eq. 7 cycle overrun at each routing boundary) plus a
 /// recent-failure penalty while the replica is overrunning. See
@@ -143,9 +194,9 @@ impl Default for HealthConfig {
 }
 
 /// The elastic-fleet knob surface (`[cluster.lifecycle]` /
-/// `[cluster.autoscaler]` / `[cluster.health]`): an explicit event
-/// schedule, a seeded churn stream, fleet-size bounds, and the
-/// autoscaler/health sub-configs.
+/// `[cluster.autoscaler]` / `[cluster.health]` / `[cluster.detector]`):
+/// an explicit event schedule, a seeded churn stream, fleet-size
+/// bounds, and the autoscaler/health/detector sub-configs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LifecycleConfig {
     /// Explicit events (configured times; merged with churn).
@@ -162,6 +213,8 @@ pub struct LifecycleConfig {
     pub autoscaler: AutoscalerConfig,
     /// Health scoring shape.
     pub health: HealthConfig,
+    /// Failure-detection shape (heartbeats, suspicion, retry).
+    pub detector: DetectorConfig,
 }
 
 impl Default for LifecycleConfig {
@@ -174,6 +227,7 @@ impl Default for LifecycleConfig {
             max_replicas: 64,
             autoscaler: AutoscalerConfig::default(),
             health: HealthConfig::default(),
+            detector: DetectorConfig::default(),
         }
     }
 }
@@ -189,7 +243,10 @@ impl LifecycleConfig {
     /// the elastic machinery to a run (and for refusing the lockstep
     /// engine, which cannot inject lifecycle events).
     pub fn any_enabled(&self) -> bool {
-        self.has_events() || self.autoscaler.enabled || self.health.enabled
+        self.has_events()
+            || self.autoscaler.enabled
+            || self.health.enabled
+            || self.detector.enabled
     }
 
     /// Materialize the full schedule up to `horizon`: explicit events
@@ -287,7 +344,20 @@ mod tests {
         cfg.autoscaler.enabled = true;
         assert!(!cfg.has_events() && cfg.any_enabled());
         cfg.autoscaler.enabled = false;
+        cfg.detector.enabled = true;
+        assert!(!cfg.has_events() && cfg.any_enabled());
+        cfg.detector.enabled = false;
         cfg.churn_rate = 1.0;
         assert!(cfg.has_events() && cfg.any_enabled());
+    }
+
+    #[test]
+    fn detector_active_requires_enabled_and_nonzero_timeout() {
+        let mut det = DetectorConfig::default();
+        assert!(!det.active(), "defaults stay inert");
+        det.enabled = true;
+        assert!(det.active());
+        det.suspicion_timeout = 0;
+        assert!(!det.active(), "timeout 0 is the oracle path");
     }
 }

@@ -49,14 +49,20 @@
 //! placement off degraded replicas. A crash loses resident KV — its
 //! queue is re-placed free and its running tasks re-admitted at the
 //! PR 4 recompute price; a graceful leave hands KV off at the modelled
-//! link cost. With everything disabled the masks stay empty and both
-//! engines reproduce the static-fleet reports bit-for-bit.
+//! link cost. With the [`FailureDetector`] enabled crashes stop being
+//! oracle-visible: the fleet learns about them from missed heartbeats
+//! (DESIGN.md "Failure detection & recovery"), dispatches into the
+//! not-yet-detected corpse sit in limbo until confirmation, and are
+//! then re-dispatched with bounded retry/backoff. With everything
+//! disabled the masks stay empty and both engines reproduce the
+//! static-fleet reports bit-for-bit.
 //!
 //! Multi-replica serving is an **extension**, not part of the paper —
 //! see DESIGN.md "Deviations from the paper".
 
 pub(crate) mod controller;
 pub mod autoscaler;
+pub mod detector;
 pub mod fleet;
 pub mod health;
 pub mod lifecycle;
@@ -66,10 +72,12 @@ pub mod replica;
 pub mod router;
 
 pub use autoscaler::{Autoscaler, ScaleDecision};
+pub use detector::{FailureDetector, Verdict};
 pub use fleet::{AdmissionConfig, AdmissionMode, DeviceProfile, FleetSpec};
 pub use health::HealthTracker;
 pub use lifecycle::{
-    AutoscalerConfig, HealthConfig, LifecycleAction, LifecycleConfig, LifecycleEvent,
+    AutoscalerConfig, DetectorConfig, HealthConfig, LifecycleAction, LifecycleConfig,
+    LifecycleEvent,
 };
 pub use node::Node;
 pub use orchestrator::{Event, EventHeap, EventKind, Orchestrator};

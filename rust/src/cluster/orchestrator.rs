@@ -17,6 +17,11 @@
 //!   * [`EventKind::Boot`] — a boot-delayed autoscaler grow completes
 //!     and the replica joins the fleet
 //!     (`[cluster.autoscaler] boot_delay_s`);
+//!   * [`EventKind::Heartbeat`] — a failure-detector tick
+//!     (`[cluster.detector]`, DESIGN.md "Failure detection &
+//!     recovery"): functioning replicas emit lag-delayed heartbeats,
+//!     the suspicion machine runs, and timed-out corpses are confirmed
+//!     dead and recovered;
 //!   * [`EventKind::RescheduleBoundary`] — the final drain boundary at
 //!     the common horizon;
 //!   * [`EventKind::MigrationCheck`] — overload-triggered migration
@@ -24,6 +29,8 @@
 //!     replica's Eq. 7 headroom crosses the overload threshold, it runs
 //!     the shared [`Controller`] migration passes just before the
 //!     same-time arrival routes;
+//!   * [`EventKind::Retry`] — re-dispatch one in-limbo task recovered
+//!     at a confirmation (bounded attempts, exponential backoff);
 //!   * [`EventKind::Arrival`] — route one task: decide, assign (plus
 //!     health scoring and the autoscaler's observation when elastic).
 //!
@@ -85,12 +92,36 @@
 //! boundary staler than the old inline order did — no pinned
 //! experiment enables both.
 //!
+//! ## Delayed failure detection
+//!
+//! With `[cluster.detector]` active, a crash stops being
+//! oracle-visible. The Lifecycle crash handler *silences* the victim
+//! instead of retiring it: the node freezes (wake cleared and never
+//! re-armed — [`Orchestrator::refresh_wake`] early-returns for
+//! silenced nodes, and stale heap wakes die on the mismatch filter),
+//! the controller marks it `unresponsive` (migration withdrawals and
+//! shrink picks need a *response*; sends do not), and the set of
+//! global ids still queued there is snapshotted. The controller still
+//! believes the replica alive, so dispatches keep landing in its
+//! staged queue — *in limbo*. Heartbeat ticks then drive the
+//! [`FailureDetector`]: suspected replicas leave the placement pool
+//! (`Controller::placeable`), and when a silenced replica's heartbeat
+//! age reaches the suspicion timeout it is confirmed: its pre-crash
+//! queue re-places free (the byte-identical oracle requeue path), its
+//! in-service tasks re-admit at the crash recompute price, and every
+//! limbo task re-dispatches under bounded retry with exponential
+//! backoff — exhausted tasks shed as `retry_exhausted`, and anything
+//! still limboed when the horizon lands drains as `limbo_lost`. With
+//! the detector inert (`suspicion_timeout = 0`) none of this machinery
+//! exists at runtime and crashes take the PR 7 oracle path bit-for-bit
+//! (pinned by `rust/tests/equivalence.rs`).
+//!
 //! The equivalence suite (`rust/tests/equivalence.rs`) pins all of
 //! this: every cluster / hetero-fleet / memory cell must produce an
 //! identical [`ClusterReport`] under both engines.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use anyhow::Result;
 
@@ -101,6 +132,7 @@ use crate::util::Micros;
 
 use super::autoscaler::{Autoscaler, ScaleDecision};
 use super::controller::Controller;
+use super::detector::{FailureDetector, Verdict};
 use super::fleet::AdmissionConfig;
 use super::health::HealthTracker;
 use super::lifecycle::{LifecycleAction, LifecycleConfig, LifecycleEvent};
@@ -113,10 +145,15 @@ use super::router::{ClusterReport, RoutingStrategy};
 /// lifecycle ordering contract (DESIGN.md "Elastic fleets"): wakes
 /// first (nodes reach the boundary before anything decides there),
 /// then fleet changes (a crash at `t` is visible to every same-time
-/// decision, and a boot joins before anything routes at `t`), then the
-/// drain boundary, then migration checks (the passes run against the
-/// settled fleet, just ahead of the same-time arrival), then arrivals
-/// (routed against the already-changed, already-rebalanced fleet).
+/// decision, and a boot joins before anything routes at `t`), then
+/// heartbeat ticks (detection judges the settled fleet — a boot at `t`
+/// is not a missed heartbeat), then the drain boundary (at the exact
+/// horizon the drain wins, so a same-time confirmation's retries flush
+/// as `limbo_lost` instead of racing it), then migration checks (the
+/// passes run against the settled fleet, just ahead of the same-time
+/// arrival), then retries (recovered tasks — always older than the
+/// same-time arrival — re-dispatch first), then arrivals (routed
+/// against the already-changed, already-rebalanced fleet).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
     /// A node's next-interesting-event time arrived: advance it.
@@ -125,11 +162,16 @@ pub enum EventKind {
     Lifecycle,
     /// A boot-delayed autoscaler grow completes: admit the replica.
     Boot,
+    /// A failure-detector tick: emit heartbeats, run the suspicion
+    /// machine, confirm and recover timed-out corpses.
+    Heartbeat,
     /// The common drain horizon: advance everything with work, finish.
     RescheduleBoundary,
     /// Some replica crossed the overload threshold: run the migration
     /// passes before the same-time arrival routes (edge-triggered).
     MigrationCheck,
+    /// Re-dispatch one recovered in-limbo task (bounded retry).
+    Retry,
     /// Route the next workload task.
     Arrival,
 }
@@ -201,6 +243,26 @@ pub struct Orchestrator {
     factory: Option<Box<dyn FnMut(usize) -> Replica>>,
     autoscaler: Option<Autoscaler>,
     health: Option<HealthTracker>,
+    /// Heartbeat-driven failure detection (`[cluster.detector]`);
+    /// `None` keeps crashes oracle-visible (the PR 7 path).
+    detector: Option<FailureDetector>,
+    /// Ground truth the controller must not read: replicas that are
+    /// physically dead but not yet confirmed by the detector. A
+    /// silenced node is frozen (never advanced, never re-armed) and
+    /// emits no heartbeats; the controller still believes it alive.
+    silenced: Vec<bool>,
+    /// Per-replica snapshot, taken at silence time, of the global ids
+    /// then queued on the corpse — at confirmation this partitions its
+    /// queue into pre-crash work (oracle-style free requeue) and tasks
+    /// dispatched into the corpse afterwards (limbo, recovered via
+    /// retry).
+    limbo_base: Vec<HashSet<TaskId>>,
+    /// Limbo tasks awaiting their scheduled retry (keyed by global id;
+    /// each has exactly one `Retry` event in flight).
+    limbo: HashMap<TaskId, Task>,
+    /// Retry attempts consumed per recovered task — survives a task
+    /// re-entering limbo on another corpse, so the budget is global.
+    attempts: HashMap<TaskId, u32>,
     /// Per-node overload shadow (`alive ∧ overloaded`), maintained only
     /// while migration is enabled and refreshed only where load can
     /// grow — the edge-trigger that arms [`EventKind::MigrationCheck`]
@@ -249,6 +311,11 @@ impl Orchestrator {
             factory: None,
             autoscaler: None,
             health: None,
+            detector: None,
+            silenced: vec![false; n],
+            limbo_base: vec![HashSet::new(); n],
+            limbo: HashMap::new(),
+            attempts: HashMap::new(),
             overload: vec![false; n],
             overload_count: 0,
             threads: 1,
@@ -313,6 +380,11 @@ impl Orchestrator {
         let n = self.nodes.len();
         self.ctl.alive = vec![true; n];
         self.ctl.degraded = vec![false; n];
+        self.ctl.suspected = vec![false; n];
+        self.ctl.unresponsive = vec![false; n];
+        if cfg.detector.active() {
+            self.detector = Some(FailureDetector::new(cfg.detector.clone(), n));
+        }
         if cfg.autoscaler.enabled {
             self.autoscaler = Some(Autoscaler::new(
                 cfg.autoscaler.clone(),
@@ -348,9 +420,16 @@ impl Orchestrator {
         self.nodes.push(node);
         self.ctl.alive.push(true);
         self.ctl.degraded.push(false);
+        self.ctl.suspected.push(false);
+        self.ctl.unresponsive.push(false);
+        self.silenced.push(false);
+        self.limbo_base.push(HashSet::new());
         self.overload.push(false); // a joiner is idle
         if let Some(h) = &mut self.health {
             h.ensure(id + 1);
+        }
+        if let Some(d) = &mut self.detector {
+            d.ensure(id + 1, now);
         }
         id
     }
@@ -368,10 +447,71 @@ impl Orchestrator {
         }
     }
 
+    /// A crash under delayed detection: the replica dies *without the
+    /// controller noticing*. Freeze the node (its wake dies on the
+    /// mismatch filter and [`Orchestrator::refresh_wake`] never
+    /// re-arms it), mark it unresponsive (withdrawals and shrink picks
+    /// fail physically), and snapshot its queued global ids so
+    /// confirmation can tell pre-crash work from limbo. The controller
+    /// keeps believing it alive — that belief is the detection gap.
+    fn silence_replica(&mut self, target: usize) {
+        self.silenced[target] = true;
+        self.ctl.unresponsive[target] = true;
+        self.limbo_base[target] = self.nodes[target].as_ref().pending_gids();
+        self.nodes[target].clear_wake();
+        if self.overload[target] {
+            // a corpse raises no overload signal
+            self.overload[target] = false;
+            self.overload_count -= 1;
+        }
+    }
+
+    /// The detector confirmed `target` dead at `now`: run the delayed
+    /// half of the crash. Pre-crash queued work re-places free through
+    /// the oracle requeue path; in-service work re-admits at the crash
+    /// recompute price; tasks dispatched into the corpse during the
+    /// detection gap (not in the silence-time snapshot) are *limbo* —
+    /// recovered via bounded retry (first attempt immediately, then
+    /// exponential backoff), or shed outright at `max_retries = 0`.
+    fn confirm_dead(&mut self, target: usize, now: Micros, heap: &mut EventHeap) {
+        self.ctl.detections += 1;
+        self.ctl.alive[target] = false;
+        self.ctl.suspected[target] = false; // dead outranks suspected
+        let base = std::mem::take(&mut self.limbo_base[target]);
+        let withdrawn = self.nodes[target].as_mut().withdraw_all();
+        let (pre_crash, limbo): (Vec<Task>, Vec<Task>) =
+            withdrawn.into_iter().partition(|t| base.contains(&t.id));
+        self.ctl.requeue_evacuated(&mut self.nodes, target, pre_crash);
+        self.ctl.evacuate_in_service(&mut self.nodes, target, true);
+        let max_retries = self
+            .detector
+            .as_ref()
+            .expect("confirmations only happen with a detector")
+            .cfg()
+            .max_retries;
+        for task in limbo {
+            self.ctl.limbo_recovered += 1;
+            if max_retries == 0 {
+                self.ctl.retry_exhausted += 1;
+                self.ctl.reject(task);
+                continue;
+            }
+            // the budget is global: a task re-limboed from an earlier
+            // corpse keeps the attempts it already burned
+            self.attempts.entry(task.id).or_insert(0);
+            heap.push(Event { time: now, kind: EventKind::Retry, replica: 0, task: task.id });
+            self.limbo.insert(task.id, task);
+        }
+    }
+
     /// Re-evaluate one node's overload-shadow entry. Only called while
-    /// migration is enabled (the shadow is inert otherwise).
+    /// migration is enabled (the shadow is inert otherwise). A
+    /// silenced node never reads overloaded — a corpse sends no
+    /// signals, so its frozen pre-crash load must not arm checks.
     fn refresh_overload(&mut self, idx: usize) {
-        let over = self.ctl.is_alive(idx) && self.nodes[idx].as_ref().overloaded();
+        let over = self.ctl.is_alive(idx)
+            && !self.silenced[idx]
+            && self.nodes[idx].as_ref().overloaded();
         if self.overload[idx] != over {
             self.overload[idx] = over;
             if over {
@@ -433,19 +573,31 @@ impl Orchestrator {
                 self.ctl.joins += 1;
             }
             LifecycleAction::Leave | LifecycleAction::Crash => {
-                if alive <= self.lifecycle.min_replicas {
+                // exits are bounded (and victims picked) on the
+                // *functioning* fleet — alive and not silenced. With
+                // the detector off nothing is ever silenced, so this
+                // is exactly the old alive-count bound; with it on,
+                // an undetected corpse can neither die twice nor keep
+                // the bound from protecting the last live replica.
+                let functioning = (0..self.nodes.len())
+                    .filter(|&i| self.ctl.is_alive(i) && !self.silenced[i])
+                    .count();
+                if functioning <= self.lifecycle.min_replicas {
                     return;
                 }
                 let target = match e.target {
                     Some(t) => {
-                        if t >= self.nodes.len() || !self.ctl.is_alive(t) {
+                        if t >= self.nodes.len()
+                            || !self.ctl.is_alive(t)
+                            || self.silenced[t]
+                        {
                             return;
                         }
                         t
                     }
                     None => {
                         let alive_ids: Vec<usize> = (0..self.nodes.len())
-                            .filter(|&i| self.ctl.is_alive(i))
+                            .filter(|&i| self.ctl.is_alive(i) && !self.silenced[i])
                             .collect();
                         alive_ids[target_rng.range_usize(0, alive_ids.len() - 1)]
                     }
@@ -456,7 +608,12 @@ impl Orchestrator {
                 } else {
                     self.ctl.leaves += 1;
                 }
-                self.retire_replica(target, crash);
+                if crash && self.detector.is_some() {
+                    // delayed detection: the fleet does not know yet
+                    self.silence_replica(target);
+                } else {
+                    self.retire_replica(target, crash);
+                }
             }
         }
     }
@@ -464,7 +621,12 @@ impl Orchestrator {
     /// Recompute a node's wake time after its workload changed
     /// (assignment or migration) and reschedule it in the heap. Stale
     /// heap entries are invalidated by the wake-time mismatch on pop.
+    /// Silenced nodes are frozen: dispatches may still stage work on
+    /// them (that is the limbo), but nothing must ever advance them.
     fn refresh_wake(&mut self, idx: usize, heap: &mut EventHeap) {
+        if self.silenced[idx] {
+            return;
+        }
         let node = &mut self.nodes[idx];
         let next = node.next_event_time();
         if node.wake() == next {
@@ -549,6 +711,10 @@ impl Orchestrator {
         debug_assert!(
             scratch.batch.iter().all(|&i| masks.is_alive(i)),
             "dead replicas must not wake inside an epoch"
+        );
+        debug_assert!(
+            scratch.batch.iter().all(|&i| !self.silenced[i]),
+            "silenced replicas are frozen and must not wake inside an epoch"
         );
         // advance: disjoint `&mut Node`s, chunked across the workers
         let workers = self.threads.min(scratch.batch.len());
@@ -737,6 +903,18 @@ impl Orchestrator {
         if let Some(e) = next_lifecycle {
             heap.push(Event { time: e.time, kind: EventKind::Lifecycle, replica: 0, task: 0 });
         }
+        // the heartbeat stream mirrors the lifecycle stream: one tick
+        // in the heap at a time, the next pushed when it pops, ticks
+        // strictly before the horizon (only with an active detector —
+        // an inert one schedules nothing, the bit-exactness gate)
+        let hb_interval = self.detector.as_ref().map(|d| d.cfg().heartbeat_interval);
+        let mut next_heartbeat: Option<Micros> = None;
+        if let (Some(iv), Some(h)) = (hb_interval, lifecycle_horizon) {
+            if iv < h {
+                next_heartbeat = Some(iv);
+                heap.push(Event { time: iv, kind: EventKind::Heartbeat, replica: 0, task: 0 });
+            }
+        }
         // time of the next Arrival event, or the horizon once the
         // workload is exhausted
         let mut arrival_boundary = match arrivals.next() {
@@ -759,12 +937,17 @@ impl Orchestrator {
             }
         };
         // the effective boundary every wake advances its node to: the
-        // next arrival *or* the next fleet change, whichever is first —
-        // a node must never run past a crash instant
-        let eff = |arrival: Micros, lc: &Option<LifecycleEvent>| {
-            lc.map_or(arrival, |e| arrival.min(e.time))
+        // next arrival, the next fleet change, or the next heartbeat
+        // tick, whichever is first — a node must never run past a crash
+        // instant, and a confirmation's evacuation must not land on
+        // nodes already advanced past the tick (with the detector off
+        // the heartbeat term is always `None`: the boundary is
+        // byte-identical to the pre-detector engine)
+        let eff = |arrival: Micros, lc: &Option<LifecycleEvent>, hb: &Option<Micros>| {
+            let b = lc.map_or(arrival, |e| arrival.min(e.time));
+            hb.map_or(b, |t| b.min(t))
         };
-        let mut next_boundary = eff(arrival_boundary, &next_lifecycle);
+        let mut next_boundary = eff(arrival_boundary, &next_lifecycle, &next_heartbeat);
 
         loop {
             let ev = heap
@@ -896,10 +1079,15 @@ impl Orchestrator {
                             deficit = n == 0 || sum <= floor.saturating_mul(n);
                         }
                         // shrink victim: an alive replica with no work
-                        // at all — prefer degraded, then highest index
+                        // at all — prefer degraded, then highest index.
+                        // An unresponsive (silenced, undetected) corpse
+                        // cannot acknowledge a shrink: skipped
                         let mut idle: Option<(bool, usize)> = None;
                         for (i, node) in self.nodes.iter().enumerate() {
-                            if self.ctl.is_alive(i) && node.next_event_time().is_none() {
+                            if self.ctl.is_alive(i)
+                                && !self.ctl.is_unresponsive(i)
+                                && node.next_event_time().is_none()
+                            {
                                 let key = (self.ctl.is_degraded(i), i);
                                 if idle.map_or(true, |b| key > b) {
                                     idle = Some(key);
@@ -972,7 +1160,7 @@ impl Orchestrator {
                             horizon
                         }
                     };
-                    next_boundary = eff(arrival_boundary, &next_lifecycle);
+                    next_boundary = eff(arrival_boundary, &next_lifecycle, &next_heartbeat);
                     if scaled {
                         // a scale action's evacuation may have moved
                         // work between any pair of nodes: re-arm the
@@ -1031,7 +1219,7 @@ impl Orchestrator {
                             task: 0,
                         });
                     }
-                    next_boundary = eff(arrival_boundary, &next_lifecycle);
+                    next_boundary = eff(arrival_boundary, &next_lifecycle, &next_heartbeat);
                     // the fleet changed shape: re-arm everything (this
                     // also clears a dead node's stale wake and arms a
                     // joiner / every evacuation destination)
@@ -1062,6 +1250,94 @@ impl Orchestrator {
                         self.admit_replica(ev.time);
                     }
                     // the joiner is idle: no wake to arm, no load moved
+                }
+                EventKind::Heartbeat => {
+                    debug_assert_eq!(Some(ev.time), next_heartbeat);
+                    let mut det = self
+                        .detector
+                        .take()
+                        .expect("heartbeat events only fire with a detector");
+                    // functioning replicas emit this tick's heartbeats,
+                    // delayed by their current Eq. 7 cycle lag — an
+                    // overloaded replica heartbeats late (the organic
+                    // false-suspicion source), a corpse not at all
+                    for (i, node) in self.nodes.iter().enumerate() {
+                        if self.ctl.is_alive(i) && !self.silenced[i] {
+                            det.emit(i, ev.time, node.as_ref().cycle_lag());
+                        }
+                    }
+                    // one suspicion step per believed-alive replica;
+                    // confirmation (ground-truth gated) is deferred so
+                    // every verdict this tick judges the same fleet
+                    let mut confirmed: Vec<usize> = Vec::new();
+                    for i in 0..self.nodes.len() {
+                        if !self.ctl.is_alive(i) {
+                            continue;
+                        }
+                        match det.tick(i, ev.time, self.silenced[i]) {
+                            Verdict::None => {}
+                            Verdict::Suspect => {
+                                self.ctl.suspicions += 1;
+                                self.ctl.suspected[i] = true;
+                            }
+                            Verdict::Unsuspect => {
+                                self.ctl.false_suspicions += 1;
+                                self.ctl.suspected[i] = false;
+                            }
+                            Verdict::Confirm => confirmed.push(i),
+                        }
+                    }
+                    self.detector = Some(det);
+                    if !confirmed.is_empty() {
+                        // same contract as the lifecycle boundary:
+                        // recovered tasks may land on idle peers, whose
+                        // clocks must be at the tick first
+                        for node in &mut self.nodes {
+                            if node.advanced_to() != Some(ev.time)
+                                && node.next_event_time().is_none()
+                            {
+                                node.sync_clock(ev.time);
+                            }
+                        }
+                        for i in confirmed {
+                            if self.ctl.alive_count(self.nodes.len()) <= 1 {
+                                // never confirm the last believed-alive
+                                // replica (unreachable while
+                                // min_replicas >= 1; defer to next tick)
+                                continue;
+                            }
+                            self.confirm_dead(i, ev.time, &mut heap);
+                        }
+                        // confirmation moved work (requeue, evacuation,
+                        // retries): re-arm the fleet, like a lifecycle
+                        for i in 0..self.nodes.len() {
+                            self.refresh_wake(i, &mut heap);
+                        }
+                        parked.clear();
+                        if self.ctl.migration {
+                            self.refresh_overload_all();
+                            self.arm_migration_check(
+                                &mut heap,
+                                &mut migration_check_at,
+                                arrival_boundary,
+                                next_arrival.is_some(),
+                            );
+                        }
+                    }
+                    next_heartbeat = None;
+                    if let (Some(iv), Some(h)) = (hb_interval, lifecycle_horizon) {
+                        let nt = ev.time + iv;
+                        if nt < h {
+                            next_heartbeat = Some(nt);
+                            heap.push(Event {
+                                time: nt,
+                                kind: EventKind::Heartbeat,
+                                replica: 0,
+                                task: 0,
+                            });
+                        }
+                    }
+                    next_boundary = eff(arrival_boundary, &next_lifecycle, &next_heartbeat);
                 }
                 EventKind::MigrationCheck => {
                     migration_check_at = None;
@@ -1099,8 +1375,88 @@ impl Orchestrator {
                     // boundary — the lockstep one-pass-per-boundary
                     // cadence, and no same-time check storm
                 }
+                EventKind::Retry => {
+                    let task = self
+                        .limbo
+                        .remove(&ev.task)
+                        .expect("retry event without its limbo task");
+                    // idle-clock sync first — the retried task carries
+                    // its original arrival time (same contract as the
+                    // migration check)
+                    for node in &mut self.nodes {
+                        if node.advanced_to() != Some(ev.time)
+                            && node.next_event_time().is_none()
+                        {
+                            node.sync_clock(ev.time);
+                        }
+                    }
+                    let attempt = self.attempts.get(&ev.task).copied().unwrap_or(0) + 1;
+                    self.attempts.insert(ev.task, attempt);
+                    self.ctl.retries += 1;
+                    // full admission: a retry competes like any fresh
+                    // arrival — and may land on another not-yet-detected
+                    // corpse, re-entering limbo there with its attempt
+                    // count intact (the budget is global, not per-host)
+                    match self.ctl.decide(&self.nodes, &task) {
+                        Some(p) => {
+                            self.nodes[p].as_mut().receive_migrated(task);
+                            self.refresh_wake(p, &mut heap);
+                            if self.ctl.migration {
+                                self.refresh_overload(p);
+                                self.arm_migration_check(
+                                    &mut heap,
+                                    &mut migration_check_at,
+                                    arrival_boundary,
+                                    next_arrival.is_some(),
+                                );
+                            }
+                        }
+                        None => {
+                            let cfg = self
+                                .detector
+                                .as_ref()
+                                .expect("retry events only fire with a detector")
+                                .cfg();
+                            // exponential backoff: attempt k + 1 fires
+                            // retry_backoff << (k - 1) after attempt k
+                            // fails (saturating — never wraps)
+                            let factor = 1u64
+                                .checked_shl(attempt.saturating_sub(1).min(63))
+                                .unwrap_or(u64::MAX);
+                            let next =
+                                ev.time.saturating_add(cfg.retry_backoff.saturating_mul(factor));
+                            let runway = lifecycle_horizon.map_or(false, |h| next < h);
+                            if attempt < cfg.max_retries && runway {
+                                heap.push(Event {
+                                    time: next,
+                                    kind: EventKind::Retry,
+                                    replica: 0,
+                                    task: ev.task,
+                                });
+                                self.limbo.insert(ev.task, task);
+                            } else {
+                                // budget or runway exhausted: shed,
+                                // reported as a retry_exhausted loss
+                                self.ctl.retry_exhausted += 1;
+                                self.ctl.reject(task);
+                            }
+                        }
+                    }
+                }
                 EventKind::RescheduleBoundary => {
                     debug_assert_eq!(ev.time, horizon);
+                    // limbo tasks whose next retry fell past the horizon
+                    // drain as shed losses (sorted by id: HashMap order
+                    // is nondeterministic, reports must not be)
+                    if !self.limbo.is_empty() {
+                        let mut flushed: Vec<Task> =
+                            self.limbo.drain().map(|(_, t)| t).collect();
+                        flushed.sort_by_key(|t| t.id);
+                        for task in flushed {
+                            self.ctl.limbo_lost += 1;
+                            self.ctl.reject(task);
+                        }
+                    }
                     // the drain boundary: same-time wakes already
                     // popped (kind rank), so every node with live work
                     // has been advanced to the horizon. Nodes that had
@@ -1108,7 +1464,22 @@ impl Orchestrator {
                     // advancement, exactly like lockstep; nodes that
                     // never had work only sync their clock so reports
                     // end at the common horizon with zero advancements.
-                    for node in &mut self.nodes {
+                    for i in 0..self.nodes.len() {
+                        if self.silenced[i] {
+                            // an unconfirmed corpse: frozen at its crash
+                            // clock, its queue (pre-crash work and limbo
+                            // dispatches alike) dies with it, and its
+                            // in-service tasks stay in its report as
+                            // unfinished — the drained assert below does
+                            // not apply
+                            let lost = self.nodes[i].as_mut().withdraw_all();
+                            for task in lost {
+                                self.ctl.limbo_lost += 1;
+                                self.ctl.reject(task);
+                            }
+                            continue;
+                        }
+                        let node = &mut self.nodes[i];
                         if node.advanced_to() == Some(horizon) {
                             // drained by its own wake
                         } else if node.advancements() > 0 || node.wake().is_some() {

@@ -109,6 +109,24 @@ impl Replica {
         self.staged.len() + self.server.pending_arrivals().count()
     }
 
+    /// Global ids of every queued-but-unstarted task — exactly the set
+    /// a [`Replica::withdraw_all`] at this instant would return. The
+    /// failure detector snapshots this at crash time so that, at
+    /// confirmation, the pre-crash queue (re-placed free, like oracle
+    /// evacuation) can be told apart from tasks dispatched into the
+    /// not-yet-detected corpse (in limbo, recovered via retry).
+    pub fn pending_gids(&self) -> HashSet<TaskId> {
+        self.staged
+            .iter()
+            .map(|t| t.id)
+            .chain(
+                self.server
+                    .pending_arrivals()
+                    .map(|t| self.global_ids[t.id as usize]),
+            )
+            .collect()
+    }
+
     /// Tasks this replica's server has delivered and not yet finished
     /// (ascending id). Every load signal below walks this live set
     /// instead of the full historic pool, so a routing decision stays

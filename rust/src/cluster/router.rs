@@ -243,6 +243,28 @@ pub struct ElasticStats {
     /// ended (only with `[cluster.autoscaler] boot_delay_s` > 0; the
     /// default instant-warm joins keep this 0).
     pub autoscale_pending_boots: u64,
+    /// Suspicion edges the failure detector raised (heartbeat age past
+    /// the interval). Only with `[cluster.detector]` active; the
+    /// remaining counters below share that gate.
+    pub suspicions: u64,
+    /// Suspicions cleared by a fresh heartbeat — overloaded-but-alive
+    /// replicas that were never actually dead.
+    pub false_suspicions: u64,
+    /// Crashes confirmed dead by heartbeat timeout (each follows a
+    /// detection *delay* during which dispatches went into limbo).
+    pub detections: u64,
+    /// Tasks found in limbo at confirmation (dispatched to the dead
+    /// replica after its crash) and handed to the retry machinery.
+    pub limbo_recovered: u64,
+    /// Re-dispatch attempts made for recovered limbo tasks (every
+    /// attempt counts, successful or not).
+    pub retries: u64,
+    /// Limbo tasks shed after exhausting their retry budget (or at
+    /// `max_retries = 0`, immediately at confirmation).
+    pub retry_exhausted: u64,
+    /// Limbo tasks lost at the horizon: their replica's death was never
+    /// confirmed (or a retry had no time left), so they drain as shed.
+    pub limbo_lost: u64,
 }
 
 /// Outcome of a full cluster run.

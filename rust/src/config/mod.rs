@@ -161,9 +161,10 @@ pub struct ServeConfig {
     /// Ignored by the lockstep reference engine.
     pub cluster_threads: usize,
     /// Cluster mode: elastic-fleet knobs — lifecycle events (explicit
-    /// schedule + seeded churn), fleet-size bounds, autoscaler and
-    /// health scoring (`[cluster.lifecycle]` / `[cluster.autoscaler]` /
-    /// `[cluster.health]`; all off by default). Any enabled elastic
+    /// schedule + seeded churn), fleet-size bounds, autoscaler, health
+    /// scoring and heartbeat failure detection (`[cluster.lifecycle]` /
+    /// `[cluster.autoscaler]` / `[cluster.health]` /
+    /// `[cluster.detector]`; all off by default). Any enabled elastic
     /// feature requires the event engine.
     pub lifecycle: LifecycleConfig,
     /// KV-cache memory model (`[memory]`; unconstrained by default, so
@@ -493,13 +494,47 @@ impl ServeConfig {
             health_knob = true;
         }
         cfg.lifecycle.health.enabled = health_key.unwrap_or(health_knob);
+        let detector_key = doc.get_bool("cluster.detector", "enabled")?;
+        let mut detector_knob = false;
+        if let Some(v) = doc.get_f64("cluster.detector", "heartbeat_interval_s")? {
+            if v <= 0.0 {
+                bail!("[cluster.detector] heartbeat_interval_s must be positive, got {v}");
+            }
+            cfg.lifecycle.detector.heartbeat_interval = secs(v);
+            detector_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.detector", "suspicion_timeout_s")? {
+            if v < 0.0 {
+                bail!("[cluster.detector] suspicion_timeout_s must be >= 0, got {v}");
+            }
+            // 0 is legal and means "oracle detection": the detector
+            // stays inert and crashes are visible instantly (the PR 7
+            // path, pinned bit-exact by the equivalence suite)
+            cfg.lifecycle.detector.suspicion_timeout = secs(v);
+            detector_knob = true;
+        }
+        if let Some(v) = doc.get_i64("cluster.detector", "max_retries")? {
+            if v < 0 || v > u32::MAX as i64 {
+                bail!("[cluster.detector] max_retries must fit in [0, 2^32), got {v}");
+            }
+            cfg.lifecycle.detector.max_retries = v as u32;
+            detector_knob = true;
+        }
+        if let Some(v) = doc.get_f64("cluster.detector", "retry_backoff_s")? {
+            if v < 0.0 {
+                bail!("[cluster.detector] retry_backoff_s must be >= 0, got {v}");
+            }
+            cfg.lifecycle.detector.retry_backoff = secs(v);
+            detector_knob = true;
+        }
+        cfg.lifecycle.detector.enabled = detector_key.unwrap_or(detector_knob);
         if cfg.lifecycle.any_enabled() {
             // lifecycle events ride the event heap, which the lockstep
             // reference engine does not have
             if engine_key.is_some() && cfg.cluster_engine == ClusterEngine::Lockstep {
                 bail!(
                     "[cluster] engine = \"lockstep\" cannot run elastic fleets \
-                     (lifecycle/autoscaler/health); use engine = \"event\""
+                     (lifecycle/autoscaler/health/detector); use engine = \"event\""
                 );
             }
             cfg.cluster_engine = ClusterEngine::Event;
@@ -1037,6 +1072,143 @@ max_replicas = 16
         assert!(c.lifecycle.events.is_empty());
         assert_eq!(c.lifecycle.churn_rate, 0.0);
         assert!(!c.lifecycle.autoscaler.enabled && !c.lifecycle.health.enabled);
+        assert!(!c.lifecycle.detector.enabled);
+    }
+
+    #[test]
+    fn detector_knobs_imply_enabled() {
+        let text = "[cluster.detector]\nheartbeat_interval_s = 0.25\n\
+                    suspicion_timeout_s = 1.5\nmax_retries = 5\n\
+                    retry_backoff_s = 0.5\n";
+        let c = ServeConfig::from_toml(text).unwrap();
+        assert!(c.lifecycle.detector.enabled, "a knob is never a silent no-op");
+        assert_eq!(c.lifecycle.detector.heartbeat_interval, secs(0.25));
+        assert_eq!(c.lifecycle.detector.suspicion_timeout, secs(1.5));
+        assert_eq!(c.lifecycle.detector.max_retries, 5);
+        assert_eq!(c.lifecycle.detector.retry_backoff, secs(0.5));
+        assert!(c.lifecycle.detector.active());
+        assert_eq!(c.cluster_engine, ClusterEngine::Event);
+        // explicit off wins over named knobs
+        let c = ServeConfig::from_toml(
+            "[cluster.detector]\nenabled = false\nmax_retries = 7\n",
+        )
+        .unwrap();
+        assert!(!c.lifecycle.detector.enabled, "explicit off wins");
+        assert_eq!(c.lifecycle.detector.max_retries, 7);
+        assert_eq!(c.cluster_engine, ClusterEngine::Lockstep);
+        // timeout 0 is legal — enabled-but-inert oracle detection
+        let c = ServeConfig::from_toml(
+            "[cluster.detector]\nsuspicion_timeout_s = 0.0\n",
+        )
+        .unwrap();
+        assert!(c.lifecycle.detector.enabled && !c.lifecycle.detector.active());
+        assert_eq!(
+            c.cluster_engine,
+            ClusterEngine::Event,
+            "enabled (even inert) still rides the event heap config path"
+        );
+    }
+
+    #[test]
+    fn fuzzed_configs_never_panic() {
+        use crate::util::rng::Rng;
+        // seeded fuzz-lite over the TOML surface: random structural
+        // mutations of a valid document — truncations, byte splices,
+        // fragment shuffles, value swaps — must parse or error
+        // gracefully, never panic. 500 mutants per seed keeps the test
+        // under a second while covering every section the parser owns.
+        let base = "[cluster]\nreplicas = 4\nengine = \"event\"\nthreads = 2\n\
+                    [cluster.lifecycle]\nchurn_rate = 0.5\nseed = 7\n\
+                    min_replicas = 1\nmax_replicas = 8\n\
+                    [cluster.autoscaler]\ndeficit_streak = 3\ncooldown_s = 1.0\n\
+                    [cluster.health]\nalpha = 0.4\nlag_threshold_ms = 250.0\n\
+                    [cluster.detector]\nheartbeat_interval_s = 0.25\n\
+                    suspicion_timeout_s = 1.0\nmax_retries = 3\nretry_backoff_s = 0.5\n\
+                    [memory]\nkv_capacity_mb = 512.0\nblock_tokens = 16\n\
+                    preemption = \"swap\"\n";
+        let splices = [
+            "= -1", "= 0", "= 1e309", "= \"\"", "= true", "= [1, 2",
+            "[[cluster.replica]]", "enabled", "= nan", "\"unterminated",
+            "suspicion_timeout_s = -3.0", "max_retries = 9999999999999",
+            "[cluster.detector]", "#", "=", "\n\n[", "]\n",
+        ];
+        let mut rng = Rng::new(0x51CE_FA11);
+        for _ in 0..500 {
+            let mut doc = String::from(base);
+            match rng.range_usize(0, 3) {
+                0 => {
+                    // truncate at a random byte (char-boundary safe:
+                    // the base document is pure ASCII)
+                    doc.truncate(rng.range_usize(0, doc.len()));
+                }
+                1 => {
+                    // splice a hostile fragment at a random line break
+                    let lines: Vec<&str> = base.lines().collect();
+                    let at = rng.range_usize(0, lines.len() - 1);
+                    let frag = splices[rng.range_usize(0, splices.len() - 1)];
+                    let mut out = String::new();
+                    for (i, line) in lines.iter().enumerate() {
+                        out.push_str(line);
+                        out.push('\n');
+                        if i == at {
+                            out.push_str(frag);
+                            out.push('\n');
+                        }
+                    }
+                    doc = out;
+                }
+                2 => {
+                    // delete a random line (orphans section headers and
+                    // breaks key/value pairing)
+                    let lines: Vec<&str> = base.lines().collect();
+                    let drop = rng.range_usize(0, lines.len() - 1);
+                    doc = lines
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != drop)
+                        .map(|(_, l)| format!("{l}\n"))
+                        .collect();
+                }
+                _ => {
+                    // swap two random lines (values land under the
+                    // wrong section headers)
+                    let mut lines: Vec<&str> = base.lines().collect();
+                    let a = rng.range_usize(0, lines.len() - 1);
+                    let b = rng.range_usize(0, lines.len() - 1);
+                    lines.swap(a, b);
+                    doc = lines.iter().map(|l| format!("{l}\n")).collect();
+                }
+            }
+            // parse-or-error is the whole assertion: a panic here (or
+            // an abort on overflow) fails the test
+            let _ = ServeConfig::from_toml(&doc);
+        }
+    }
+
+    #[test]
+    fn detector_validation_bails() {
+        assert!(ServeConfig::from_toml(
+            "[cluster.detector]\nheartbeat_interval_s = 0.0\n"
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.detector]\nheartbeat_interval_s = -1.0\n"
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.detector]\nsuspicion_timeout_s = -0.5\n"
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml("[cluster.detector]\nmax_retries = -1\n").is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster.detector]\nretry_backoff_s = -2.0\n"
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            "[cluster]\nengine = \"lockstep\"\n\n\
+             [cluster.detector]\nsuspicion_timeout_s = 2.0\n"
+        )
+        .is_err(), "an active detector cannot run on the lockstep engine");
     }
 
     #[test]

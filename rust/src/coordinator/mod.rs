@@ -31,8 +31,7 @@ pub use pool::TaskPool;
 pub use preemption::UtilityAdaptor;
 pub use scheduler::{Policy, Step};
 pub use selection::{
-    select_tasks, select_tasks_reference, select_tasks_with, Candidate, Selection,
-    SelectionScratch, CYCLE_CAP,
+    select_tasks, select_tasks_with, Candidate, Selection, SelectionScratch, CYCLE_CAP,
 };
 pub use slice::{SliceConfig, SlicePolicy};
 pub use task::{SloSpec, Task, TaskClass, TaskId, TaskState};

@@ -22,9 +22,11 @@
 //! every arrival/departure, so [`select_tasks_with`] evaluates each
 //! admission with the incremental Σ Δl·v structure
 //! ([`super::mask::IncrementalPeriod`]) and reusable scratch buffers —
-//! O(n log n) per reschedule, zero steady-state allocation — while
-//! [`select_tasks_reference`] preserves the pre-optimization O(n²)
-//! path for equivalence tests and the bench trajectory.
+//! O(n log n) per reschedule, zero steady-state allocation. (The
+//! pre-optimization O(n²) reference implementation was kept in-tree
+//! through PR 9 to pin equivalence and the bench trajectory; with the
+//! speedups confirmed by BENCH_ci.json history it is gone — the
+//! property suite now pins the semantics directly.)
 //!
 //! Cached-candidate path (DESIGN.md "Control-plane incrementality"):
 //! when candidate keys are immutable between reschedules (no utility
@@ -39,7 +41,7 @@
 use crate::engine::latency::LatencyModel;
 use crate::util::Micros;
 
-use super::mask::{period_eq7, IncrementalPeriod};
+use super::mask::IncrementalPeriod;
 use super::task::TaskId;
 
 /// A candidate for selection.
@@ -175,11 +177,11 @@ pub fn admission_entry(utility: f64, tpot: Micros, id: TaskId) -> (u64, TaskId, 
 ///
 /// This is the allocation-free hot path: results land in `out`
 /// (cleared first) and all working memory lives in `scratch`. One
-/// admission probes and commits O(v_max) column counters instead of
-/// the reference path's O(n) sorted insert + O(n) closed form, so the
+/// admission probes and commits O(v_max) column counters instead of a
+/// naive O(n) sorted insert + O(n) closed form per admission, so the
 /// greedy loop is O(n log n) overall — the candidate sort — rather
-/// than O(n²) (bit-exact equivalence with [`select_tasks_reference`]
-/// is asserted in `rust/tests/equivalence.rs`).
+/// than O(n²) (the admission semantics are pinned against the Eq. 7
+/// closed form by the property suite and the tests below).
 ///
 /// Returns `true` iff selection terminated on a resource stop (cycle
 /// cap or KV overflow) rather than admitting everything / filling
@@ -306,73 +308,10 @@ pub fn select_tasks(
     out
 }
 
-/// The pre-PR 5 implementation of Algorithm 2, kept temporarily as the
-/// equivalence/bench reference: re-sorts with rates recomputed inside
-/// the comparator and re-runs the O(n) Eq. 7 closed form after an O(n)
-/// sorted insert per admission. `rust/tests/equivalence.rs` asserts
-/// [`select_tasks`] reproduces it bit-for-bit; the
-/// `selection/select_tasks_ref/*` bench cells track the speedup. Remove
-/// once the perf trajectory is established.
-pub fn select_tasks_reference(
-    candidates: &[Candidate],
-    latency: &LatencyModel,
-    cycle_cap: Micros,
-    kv_capacity: Option<u64>,
-) -> Selection {
-    let mut order: Vec<&Candidate> = candidates.iter().collect();
-    // descending utility rate; deterministic tie-break by id
-    order.sort_by(|a, b| {
-        b.utility_rate()
-            .partial_cmp(&a.utility_rate())
-            .unwrap()
-            .then(a.id.cmp(&b.id))
-    });
-
-    let mut selected: Vec<(TaskId, u32)> = Vec::new();
-    let mut quotas_desc: Vec<u32> = Vec::new(); // maintained sorted desc
-    let mut period: Micros = 0;
-    let mut kv_used: u64 = 0;
-    let mut rejected: Vec<TaskId> = Vec::new();
-    let mut stopped = false;
-
-    for cand in order {
-        if stopped || selected.len() as u32 >= latency.max_batch {
-            rejected.push(cand.id);
-            continue;
-        }
-        if let Some(cap) = kv_capacity {
-            if kv_used + cand.kv_bytes > cap {
-                // memory overflow: roll back and terminate, exactly the
-                // non-replacement semantics of the cycle cap below
-                rejected.push(cand.id);
-                stopped = true;
-                continue;
-            }
-        }
-        let q = cand.quota();
-        // insert into the descending quota list
-        let pos = quotas_desc.partition_point(|&v| v >= q);
-        quotas_desc.insert(pos, q);
-        let p = period_eq7(&quotas_desc, latency);
-        if p >= cycle_cap {
-            // roll back and terminate (non-replacement iteration, Alg. 2
-            // line 13-17)
-            quotas_desc.remove(pos);
-            rejected.push(cand.id);
-            stopped = true;
-            continue;
-        }
-        period = p;
-        kv_used += cand.kv_bytes;
-        selected.push((cand.id, q));
-    }
-
-    Selection { selected, period, rejected }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::mask::period_eq7;
     use crate::util::ms;
 
     fn model() -> LatencyModel {
@@ -547,19 +486,20 @@ mod tests {
     }
 
     #[test]
-    fn pathological_quota_rejected_like_reference() {
+    fn pathological_quota_rejected_without_column_state() {
         // a hand-written trace can carry a near-zero TPOT whose quota
-        // (ceil(1e6/tpot)) is enormous; both paths must reject it (and
-        // everything after it, non-replacement) without the fast path
-        // materializing quota-sized column state
+        // (ceil(1e6/tpot)) is enormous; it must be rejected (and, by
+        // non-replacement, everything sorted after it) without
+        // materializing quota-sized column state. The monster sorts
+        // first (utility rate 1e9 * 1e-6 dwarfs the others), so the
+        // whole set drains to rejected in sorted order.
         let mut cands = vec![cand(0, 1.0, 100.0), cand(1, 1.0, 250.0)];
         cands.insert(1, Candidate { id: 9, utility: 1e9, tpot: 1, kv_bytes: 0 });
-        let fast = select_tasks(&cands, &model(), CYCLE_CAP, None);
-        let reference = select_tasks_reference(&cands, &model(), CYCLE_CAP, None);
-        assert_eq!(fast.selected, reference.selected);
-        assert_eq!(fast.rejected, reference.rejected);
-        assert_eq!(fast.period, reference.period);
-        assert!(fast.rejected.contains(&9));
+        let sel = select_tasks(&cands, &model(), CYCLE_CAP, None);
+        assert!(sel.selected.is_empty(), "non-replacement stop before any admission");
+        // sorted order: rate 1000 (id 9), 0.25 (id 1), 0.1 (id 0)
+        assert_eq!(sel.rejected, vec![9, 1, 0], "sorted order, monster first");
+        assert_eq!(sel.period, 0);
     }
 
     #[test]
@@ -574,13 +514,13 @@ mod tests {
                 w[1]
             );
         }
-        // the reference comparator treats -0.0 == +0.0 and tie-breaks
-        // by id; the packed key must collide the same way
+        // `partial_cmp` on rates treats -0.0 == +0.0 and tie-breaks by
+        // id; the packed key must collide the same way
         assert_eq!(rate_key_desc(-0.0), rate_key_desc(0.0));
     }
 
     #[test]
-    fn scratch_reuse_matches_fresh_and_reference() {
+    fn scratch_reuse_matches_fresh() {
         // exercise one scratch across shapes that grow and shrink, with
         // and without the KV dimension — stale state would corrupt
         // later rounds
@@ -612,13 +552,9 @@ mod tests {
         for (cands, cap) in rounds {
             select_tasks_with(&mut scratch, &mut out, &cands, CYCLE_CAP, cap);
             let fresh = select_tasks(&cands, &model(), CYCLE_CAP, cap);
-            let reference = select_tasks_reference(&cands, &model(), CYCLE_CAP, cap);
             assert_eq!(out.selected, fresh.selected);
             assert_eq!(out.rejected, fresh.rejected);
             assert_eq!(out.period, fresh.period);
-            assert_eq!(out.selected, reference.selected);
-            assert_eq!(out.rejected, reference.rejected);
-            assert_eq!(out.period, reference.period);
         }
     }
 

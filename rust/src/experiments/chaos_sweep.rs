@@ -1,0 +1,407 @@
+//! Chaos sweep — detection delay × churn × retry policy over the
+//! crash-at-overload cell (extension beyond the paper; DESIGN.md
+//! "Failure detection & recovery").
+//!
+//! The elastic sweep measures crashes the fleet learns about
+//! *instantly* (oracle detection). This sweep measures the cost of
+//! realism: with `[cluster.detector]` active, a crash is invisible
+//! until `suspicion_timeout` of missed heartbeats accumulate, and
+//! every task dispatched into the corpse during that gap lands in
+//! limbo — recovered at confirmation via bounded retry with
+//! exponential backoff, or shed. Three axes:
+//!
+//!   * **detection delay** — `suspicion_timeout` of 0 (the oracle
+//!     baseline, detector inert, bit-exact with the elastic sweep's
+//!     crash path), 2 s, and 8 s;
+//!   * **churn** — the elastic sweep's deterministic crash schedule
+//!     (replicas 0 and 1 at 40 s / 80 s) vs seeded random churn
+//!     ([`CHURN_RATE`] events/s: joins, leaves *and* crashes);
+//!   * **retry policy** — the patient default ([`MAX_RETRIES`]
+//!     attempts, [`RETRY_BACKOFF_S`] base backoff, doubling — the last
+//!     attempts land in the post-burst drain where placement succeeds)
+//!     vs `max_retries = 0` (every limbo task shed at confirmation:
+//!     the no-retry floor).
+//!
+//! Cells run the scale sweep's edge-mixed overload shape (SLO-aware
+//! routing, migration on) with admission **off**: under Eq. 7 headroom
+//! admission the overload window sheds arrivals wholesale, which would
+//! drown the chaos losses this sweep isolates. With admission off the
+//! only shed paths are the recovery paths themselves
+//! (`retry_exhausted`, `limbo_lost`), so the retry-vs-no-retry gap in
+//! the shed column *is* the recovery win.
+//!
+//! The acceptance gate for the detector work is the largest crash
+//! cell: the retry variant must show nonzero retries and shed
+//! strictly below its no-retry twin at the same delay.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::{
+    FleetSpec, LifecycleAction, LifecycleConfig, LifecycleEvent, RoutingStrategy,
+};
+use crate::config::{ClusterEngine, PolicyKind, ServeConfig};
+use crate::metrics::Attainment;
+use crate::util::json::Json;
+use crate::util::secs;
+use crate::workload::WorkloadSpec;
+
+use super::run_fleet;
+
+/// Default task counts the sweep runs (override with `--tasks`). The
+/// larger size is the scale sweep's overload cell.
+pub const DEFAULT_SIZES: [usize; 2] = [1_000, 10_000];
+
+/// Variants every size runs, in report order: schedule × delay × retry
+/// policy, with one oracle baseline per schedule (retry policy is
+/// irrelevant at delay 0 — the detector is inert and nothing limboes).
+pub const VARIANTS: [&str; 10] = [
+    "crash-oracle",
+    "crash-d2",
+    "crash-d2-noretry",
+    "crash-d8",
+    "crash-d8-noretry",
+    "churn-oracle",
+    "churn-d2",
+    "churn-d2-noretry",
+    "churn-d8",
+    "churn-d8-noretry",
+];
+
+/// Heartbeat period every detecting variant uses.
+pub const HEARTBEAT_S: f64 = 0.5;
+
+/// Retry budget of the retrying variants. Patient on purpose: with
+/// [`RETRY_BACKOFF_S`] doubling, the budget spans past the 120 s
+/// arrival window into the drain, where the fleet has capacity again.
+pub const MAX_RETRIES: u32 = 8;
+
+/// Base backoff (seconds) before the second attempt; doubles per
+/// attempt after that. The first attempt fires at confirmation.
+pub const RETRY_BACKOFF_S: f64 = 2.0;
+
+/// Seeded-churn event rate (events/s) of the `churn-*` variants.
+pub const CHURN_RATE: f64 = 0.05;
+
+/// Fleet bounds of the `churn-*` variants (the deterministic crash
+/// variants keep the config defaults, like the elastic sweep).
+pub const CHURN_MIN_REPLICAS: usize = 2;
+pub const CHURN_MAX_REPLICAS: usize = 8;
+
+/// Virtual seconds the whole burst arrives within (same window as the
+/// scale and elastic sweeps, so the 10k cell is the same overload).
+pub const ARRIVAL_WINDOW_S: f64 = 120.0;
+
+/// Virtual drain past the last arrival.
+pub const DRAIN_S: f64 = 60.0;
+
+/// One (variant, task count) cell.
+#[derive(Debug)]
+pub struct ChaosCell {
+    /// Variant label (see [`VARIANTS`]).
+    pub variant: &'static str,
+    /// Workload size.
+    pub n_tasks: usize,
+    /// Offered arrival rate (tasks/s).
+    pub rate: f64,
+    /// Detection delay (`suspicion_timeout`) in seconds; 0 = oracle.
+    pub detect_delay_s: f64,
+    /// Retry budget (0 = shed every limbo task at confirmation).
+    pub max_retries: u32,
+    /// Alive replicas at the horizon.
+    pub replicas_final: usize,
+    /// Tasks finished by the horizon.
+    pub finished: usize,
+    /// Tasks shed fleet-wide.
+    pub shed: u64,
+    /// `shed / n_tasks`.
+    pub shed_rate: f64,
+    /// SLO attainment over every routed *and* shed task.
+    pub slo: f64,
+    /// Physical crashes injected.
+    pub crashes: u64,
+    /// Suspicion edges raised / of those, cleared by a fresh heartbeat.
+    pub suspicions: u64,
+    pub false_suspicions: u64,
+    /// Crashes confirmed by the detector (0 in oracle variants).
+    pub detections: u64,
+    /// Limbo tasks found on confirmed corpses / retry dispatches run /
+    /// tasks shed with the budget spent / tasks still limboed at the
+    /// horizon.
+    pub limbo_recovered: u64,
+    pub retries: u64,
+    pub retry_exhausted: u64,
+    pub limbo_lost: u64,
+    /// Oracle-path evacuation counters (pre-crash queue + in-service).
+    pub evac_requeued: u64,
+    pub evac_restarted: u64,
+    /// Host wall-clock seconds for the cell.
+    pub wall_s: f64,
+}
+
+/// Decode a variant name into (churn?, detection delay s, max retries).
+pub fn decode(variant: &str) -> Result<(bool, f64, u32)> {
+    let (schedule, rest) = variant
+        .split_once('-')
+        .ok_or_else(|| anyhow::anyhow!("unknown chaos-sweep variant '{variant}'"))?;
+    let churn = match schedule {
+        "crash" => false,
+        "churn" => true,
+        _ => anyhow::bail!("unknown chaos-sweep variant '{variant}'"),
+    };
+    let (delay, retries) = match rest {
+        "oracle" => (0.0, MAX_RETRIES),
+        "d2" => (2.0, MAX_RETRIES),
+        "d2-noretry" => (2.0, 0),
+        "d8" => (8.0, MAX_RETRIES),
+        "d8-noretry" => (8.0, 0),
+        _ => anyhow::bail!("unknown chaos-sweep variant '{variant}'"),
+    };
+    Ok((churn, delay, retries))
+}
+
+/// The lifecycle config a variant name implies.
+pub fn lifecycle_for(variant: &str) -> Result<LifecycleConfig> {
+    let (churn, delay, retries) = decode(variant)?;
+    let mut lc = LifecycleConfig::default();
+    if churn {
+        lc.churn_rate = CHURN_RATE;
+        lc.min_replicas = CHURN_MIN_REPLICAS;
+        lc.max_replicas = CHURN_MAX_REPLICAS;
+    } else {
+        // the elastic sweep's crash schedule: explicit targets, no RNG
+        lc.events = vec![
+            LifecycleEvent {
+                time: secs(40.0),
+                action: LifecycleAction::Crash,
+                target: Some(0),
+            },
+            LifecycleEvent {
+                time: secs(80.0),
+                action: LifecycleAction::Crash,
+                target: Some(1),
+            },
+        ];
+    }
+    lc.detector.enabled = true;
+    lc.detector.heartbeat_interval = secs(HEARTBEAT_S);
+    lc.detector.suspicion_timeout = secs(delay);
+    lc.detector.max_retries = retries;
+    lc.detector.retry_backoff = secs(RETRY_BACKOFF_S);
+    Ok(lc)
+}
+
+/// Run one cell: the scale sweep's edge-mixed overload shape with the
+/// variant's lifecycle + detector config attached (admission off — see
+/// the module doc).
+pub fn run_cell(
+    variant: &'static str,
+    n_tasks: usize,
+    cfg: &ServeConfig,
+) -> Result<ChaosCell> {
+    let (_, delay, retries) = decode(variant)?;
+    let mut cfg = cfg.clone();
+    cfg.n_tasks = n_tasks;
+    cfg.arrival_rate = n_tasks as f64 / ARRIVAL_WINDOW_S;
+    cfg.policy = PolicyKind::Slice;
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = false;
+    cfg.cluster_migration = true;
+    cfg.lifecycle = lifecycle_for(variant)?;
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let spec = FleetSpec::preset("edge-mixed")?.with_cycle_cap(cfg.cycle_cap);
+
+    let start = Instant::now();
+    let report = run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, secs(DRAIN_S))?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let a = Attainment::compute(&report.tasks());
+    let shed = report.shed_total();
+    let e = &report.elastic;
+    Ok(ChaosCell {
+        variant,
+        n_tasks,
+        rate: cfg.arrival_rate,
+        detect_delay_s: delay,
+        max_retries: retries,
+        replicas_final: report.alive_replicas(),
+        finished: a.n_finished,
+        shed,
+        shed_rate: shed as f64 / n_tasks as f64,
+        slo: a.slo,
+        crashes: e.crashes,
+        suspicions: e.suspicions,
+        false_suspicions: e.false_suspicions,
+        detections: e.detections,
+        limbo_recovered: e.limbo_recovered,
+        retries: e.retries,
+        retry_exhausted: e.retry_exhausted,
+        limbo_lost: e.limbo_lost,
+        evac_requeued: e.evac_requeued,
+        evac_restarted: e.evac_restarted,
+        wall_s,
+    })
+}
+
+fn render_rows(rows: &[ChaosCell]) {
+    use crate::metrics::report::{pct, Table};
+    let mut t = Table::new(&[
+        "variant", "tasks", "delay s", "budget", "alive", "finished", "shed",
+        "shed%", "SLO", "crash", "susp(false)", "detect", "limbo", "retry",
+        "exhaust", "lost",
+    ]);
+    for c in rows {
+        t.row(vec![
+            c.variant.to_string(),
+            c.n_tasks.to_string(),
+            format!("{:.0}", c.detect_delay_s),
+            c.max_retries.to_string(),
+            c.replicas_final.to_string(),
+            c.finished.to_string(),
+            c.shed.to_string(),
+            pct(c.shed_rate),
+            pct(c.slo),
+            c.crashes.to_string(),
+            format!("{}({})", c.suspicions, c.false_suspicions),
+            c.detections.to_string(),
+            c.limbo_recovered.to_string(),
+            c.retries.to_string(),
+            c.retry_exhausted.to_string(),
+            c.limbo_lost.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn rows_to_json(rows: &[ChaosCell]) -> Json {
+    use crate::metrics::report::nan_null;
+    Json::from(
+        rows.iter()
+            .map(|c| {
+                Json::obj()
+                    .set("variant", c.variant)
+                    .set("n_tasks", c.n_tasks)
+                    .set("rate", c.rate)
+                    .set("detect_delay_s", c.detect_delay_s)
+                    .set("max_retries", c.max_retries as u64)
+                    .set("replicas_final", c.replicas_final)
+                    .set("finished", c.finished)
+                    .set("shed", c.shed)
+                    .set("shed_rate", c.shed_rate)
+                    .set("slo", nan_null(c.slo))
+                    .set("crashes", c.crashes)
+                    .set("suspicions", c.suspicions)
+                    .set("false_suspicions", c.false_suspicions)
+                    .set("detections", c.detections)
+                    .set("limbo_recovered", c.limbo_recovered)
+                    .set("retries", c.retries)
+                    .set("retry_exhausted", c.retry_exhausted)
+                    .set("limbo_lost", c.limbo_lost)
+                    .set("evac_requeued", c.evac_requeued)
+                    .set("evac_restarted", c.evac_restarted)
+                    .set("wall_s", c.wall_s)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Full sweep over `sizes`; prints the table (plus the
+/// retry-vs-no-retry shed verdict at the largest size) and returns the
+/// JSON series (BENCH_10.json shape).
+pub fn run(cfg: &ServeConfig, sizes: &[usize]) -> Result<Json> {
+    let mut rows: Vec<ChaosCell> = Vec::new();
+    for &n in sizes {
+        for variant in VARIANTS {
+            rows.push(run_cell(variant, n, cfg)?);
+        }
+    }
+
+    println!(
+        "Chaos sweep — SLICE, edge-mixed fleet, slo-aware + migration, \
+         admission off, heartbeat {HEARTBEAT_S}s, \
+         {ARRIVAL_WINDOW_S:.0}s arrival window, {DRAIN_S:.0}s drain, seed {}\n",
+        cfg.seed
+    );
+    render_rows(&rows);
+    if let Some(&n) = sizes.last() {
+        let find = |v: &str| rows.iter().find(|c| c.n_tasks == n && c.variant == v);
+        for delay in ["d2", "d8"] {
+            let (retry, bare) = (
+                find(&format!("crash-{delay}")),
+                find(&format!("crash-{delay}-noretry")),
+            );
+            if let (Some(r), Some(b)) = (retry, bare) {
+                println!(
+                    "\ncrash {delay} at {n} tasks: retry shed {} ({} retries, {} \
+                     recovered) vs no-retry shed {} — {}",
+                    r.shed,
+                    r.retries,
+                    r.limbo_recovered,
+                    b.shed,
+                    if r.retries > 0 && r.shed < b.shed {
+                        "retry recovers limbo tasks"
+                    } else {
+                        "RETRY DID NOT BEAT THE NO-RETRY FLOOR"
+                    }
+                );
+            }
+        }
+    }
+    Ok(rows_to_json(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_cell_keeps_the_detector_counters_at_zero() {
+        let c = run_cell("crash-oracle", 60, &ServeConfig::default()).unwrap();
+        assert_eq!(c.crashes, 2, "both explicit crashes fire");
+        assert_eq!(c.replicas_final, 2);
+        assert_eq!(
+            c.suspicions + c.false_suspicions + c.detections, 0,
+            "delay 0 keeps the detector inert"
+        );
+        assert_eq!(c.limbo_recovered + c.retries + c.retry_exhausted + c.limbo_lost, 0);
+    }
+
+    #[test]
+    fn delayed_cell_detects_both_crashes() {
+        let c = run_cell("crash-d2", 60, &ServeConfig::default()).unwrap();
+        assert_eq!(c.crashes, 2);
+        assert_eq!(c.detections, 2, "both corpses confirmed by heartbeat age");
+        assert!(c.suspicions >= 2, "confirmation passes through suspicion");
+        assert_eq!(c.replicas_final, 2);
+    }
+
+    #[test]
+    fn noretry_sheds_everything_recovered() {
+        let c = run_cell("crash-d8-noretry", 60, &ServeConfig::default()).unwrap();
+        assert_eq!(c.max_retries, 0);
+        assert_eq!(c.retries, 0, "no retry dispatches at a zero budget");
+        assert_eq!(
+            c.retry_exhausted, c.limbo_recovered,
+            "every limbo task sheds at confirmation"
+        );
+    }
+
+    #[test]
+    fn cells_are_deterministic() {
+        let cfg = ServeConfig::default();
+        let a = run_cell("churn-d2", 120, &cfg).unwrap();
+        let b = run_cell("churn-d2", 120, &cfg).unwrap();
+        assert_eq!(a.finished, b.finished, "same seed, same run");
+        assert_eq!(a.shed, b.shed);
+        assert_eq!((a.detections, a.retries, a.limbo_lost), (b.detections, b.retries, b.limbo_lost));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(lifecycle_for("crash-d4").is_err());
+        assert!(lifecycle_for("mesh-oracle").is_err());
+    }
+}

@@ -21,8 +21,10 @@
 //! | `hetero_sweep`  | fleet mix × strategy × admission (ext.)   |
 //! | `scale_sweep`   | scheduler throughput at 1k-10k tasks (ext.)|
 //! | `elastic_sweep` | shed/SLO under crashes + autoscaling (ext.) |
+//! | `chaos_sweep`   | detection delay × churn × retry policy (ext.)|
 
 pub mod ablation;
+pub mod chaos_sweep;
 pub mod cluster_sweep;
 pub mod dynamic;
 pub mod elastic_sweep;
@@ -180,8 +182,8 @@ pub fn run_fleet(
         ClusterEngine::Lockstep => {
             if cfg.lifecycle.any_enabled() {
                 bail!(
-                    "elastic fleets (lifecycle/autoscaler/health) need the event \
-                     engine; the lockstep reference cannot inject lifecycle events"
+                    "elastic fleets (lifecycle/autoscaler/health/detector) need the \
+                     event engine; the lockstep reference cannot inject lifecycle events"
                 );
             }
             Router::new(strategy, fleet)

@@ -71,10 +71,13 @@ USAGE:
                     [--autoscale on|off] [--boot-delay <s>]
                     [--fleet-min <n>] [--fleet-max <n>]
                     [--health on|off]  (elastic flags imply --engine event)
+                    [--detect-delay <s>] [--heartbeat <s>] [--max-retries <n>]
+                    (failure detection: crashes confirmed after
+                     --detect-delay of missed heartbeats; 0 = oracle)
                     [--policy slice|orca|fastserve]
                     [--rate <f>] [--rt-ratio <f>] [--n-tasks <n>] [--seed <n>]
   slice-serve experiment <fig1|table2|fig7|fig8|fig9|fig10|fig11|ablation|
-                    cluster|hetero|memory|scale|elastic|all> [--n-tasks <n>]
+                    cluster|hetero|memory|scale|elastic|chaos|all> [--n-tasks <n>]
                     [--seed <n>] [--out <json>]
                     (scale: [--tasks <n>] runs one custom size instead of
                      the 1k/4k/10k default; [--replicas <n[,n,...]>] runs the
@@ -89,6 +92,10 @@ USAGE:
                     (elastic: static/crash/autoscale variants of the
                      edge-mixed overload cell, BENCH_7.json; [--tasks <n>]
                      runs one custom size; excluded from 'all')
+                    (chaos: detection delay x churn x retry policy over
+                     the crash-at-overload cell, BENCH_10.json;
+                     [--tasks <n>] runs one custom size; excluded from
+                     'all')
   slice-serve calibrate --artifacts <dir> [--reps <n>]
   slice-serve info --artifacts <dir>
 ";
@@ -441,13 +448,38 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(s) = args.flag("health") {
         cfg.lifecycle.health.enabled = flag_switch("health", s)?;
     }
+    // failure-detector flags (mirror the [cluster.detector] section);
+    // naming any knob opts the detector in — a configured knob is
+    // never a silent no-op. --detect-delay 0 is the enabled-but-inert
+    // oracle mode (crashes visible instantly, the pre-detector path).
+    if let Some(v) = args.flag_f64("detect-delay")? {
+        if v < 0.0 {
+            bail!("--detect-delay must be non-negative seconds");
+        }
+        cfg.lifecycle.detector.suspicion_timeout = secs(v);
+        cfg.lifecycle.detector.enabled = true;
+    }
+    if let Some(v) = args.flag_f64("heartbeat")? {
+        if v <= 0.0 {
+            bail!("--heartbeat must be positive seconds");
+        }
+        cfg.lifecycle.detector.heartbeat_interval = secs(v);
+        cfg.lifecycle.detector.enabled = true;
+    }
+    if let Some(v) = args.flag_u64("max-retries")? {
+        if v > u64::from(u32::MAX) {
+            bail!("--max-retries must fit in [0, 2^32)");
+        }
+        cfg.lifecycle.detector.max_retries = v as u32;
+        cfg.lifecycle.detector.enabled = true;
+    }
     if cfg.lifecycle.any_enabled() && cfg.cluster_engine == ClusterEngine::Lockstep {
         // same rule as the config parser: elastic implies the event
         // engine; naming lockstep alongside it is a contradiction
         if matches!(args.flag("engine"), Some("lockstep") | Some("router")) {
             bail!(
                 "--engine lockstep cannot run elastic fleets \
-                 (lifecycle/autoscale/health need the event engine)"
+                 (lifecycle/autoscale/health/detector need the event engine)"
             );
         }
         cfg.cluster_engine = ClusterEngine::Event;
@@ -561,6 +593,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 secs2(e.evac_recompute_us as f64 / 1e6)
             ),
         ]);
+        if cfg.lifecycle.detector.enabled {
+            t.row(vec![
+                "suspicions (false) / detections".into(),
+                format!("{} ({}) / {}", e.suspicions, e.false_suspicions, e.detections),
+            ]);
+            t.row(vec![
+                "limbo recovered / retries / exhausted / lost".into(),
+                format!(
+                    "{} / {} / {} / {}",
+                    e.limbo_recovered, e.retries, e.retry_exhausted, e.limbo_lost
+                ),
+            ]);
+        }
         t.row(vec![
             "alive replicas at horizon".into(),
             format!("{}/{}", report.alive_replicas(), report.replicas.len()),
@@ -720,6 +765,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 None => experiments::elastic_sweep::DEFAULT_SIZES.to_vec(),
             };
             out = out.set("elastic_sweep", experiments::elastic_sweep::run(&cfg, &sizes)?)
+        }
+        "chaos" | "chaos_sweep" => {
+            // --tasks <n> runs a single custom size (CI smoke);
+            // default: the 1k/10k sweep (BENCH_10.json shape).
+            let sizes = match args.flag_u64("tasks")? {
+                Some(n) if n >= 1 => vec![n as usize],
+                Some(_) => bail!("--tasks must be >= 1"),
+                None => experiments::chaos_sweep::DEFAULT_SIZES.to_vec(),
+            };
+            out = out.set("chaos_sweep", experiments::chaos_sweep::run(&cfg, &sizes)?)
         }
         "all" => {
             out = out

@@ -1,0 +1,218 @@
+//! Chaos-recovery invariants (DESIGN.md "Failure detection &
+//! recovery"): with crashes hidden behind the heartbeat detector, every
+//! workload task is still accounted for exactly once — finished on some
+//! replica, stranded unfinished on an unconfirmed corpse, or shed
+//! through one of the recovery paths (`retry_exhausted`, `limbo_lost`,
+//! admission) — across hundreds of seeded fault schedules; retry
+//! re-dispatch strictly beats the no-retry floor at the
+//! crash-at-overload acceptance cell; and detector lag alone (an
+//! overloaded but live fleet) never escalates past suspicion.
+
+use slice_serve::cluster::{
+    ClusterReport, DeviceProfile, LifecycleConfig, Orchestrator, Replica,
+    RoutingStrategy,
+};
+use slice_serve::config::ServeConfig;
+use slice_serve::coordinator::slice::{SliceConfig, SlicePolicy};
+use slice_serve::engine::latency::LatencyModel;
+use slice_serve::engine::sim::SimEngine;
+use slice_serve::experiments::chaos_sweep;
+use slice_serve::util::secs;
+use slice_serve::workload::WorkloadSpec;
+
+fn std_replica(i: usize) -> Replica {
+    Replica::new(
+        i,
+        Box::new(SlicePolicy::new(
+            LatencyModel::paper_calibrated(),
+            SliceConfig::default(),
+        )),
+        Box::new(SimEngine::paper_calibrated()),
+        DeviceProfile::standard(),
+    )
+}
+
+/// Every workload task lands in the report exactly once — on one
+/// replica (finished or stranded on a corpse) or the shed list —
+/// whatever the detector and the fault schedule did meanwhile.
+fn assert_conserved(report: &ClusterReport, n_tasks: usize, ctx: &str) {
+    let mut seen = vec![0u32; n_tasks];
+    for r in &report.replicas {
+        for t in &r.report.tasks {
+            seen[t.id as usize] += 1;
+        }
+    }
+    for t in &report.rejected {
+        seen[t.id as usize] += 1;
+    }
+    for (id, &c) in seen.iter().enumerate() {
+        assert_eq!(c, 1, "{ctx}: task {id} appears {c} times");
+    }
+}
+
+/// Counter coherence that must hold on any detector-active run: a
+/// confirmation needs a physical crash behind it, a cleared suspicion
+/// needs a raised one, every recovered limbo task fires at least one
+/// retry dispatch when the budget is nonzero, and the budget bounds
+/// how often one dispatch can end in exhaustion.
+fn assert_detector_coherent(report: &ClusterReport, max_retries: u32, ctx: &str) {
+    let e = &report.elastic;
+    assert!(
+        e.detections <= e.crashes,
+        "{ctx}: {} detections but only {} crashes — a live replica was confirmed dead",
+        e.detections,
+        e.crashes
+    );
+    assert!(
+        e.false_suspicions <= e.suspicions,
+        "{ctx}: cleared {} suspicions but only {} were raised",
+        e.false_suspicions,
+        e.suspicions
+    );
+    if max_retries > 0 {
+        assert!(
+            e.retries >= e.limbo_recovered,
+            "{ctx}: {} limbo tasks recovered but only {} retry dispatches",
+            e.limbo_recovered,
+            e.retries
+        );
+        assert!(
+            e.retry_exhausted <= e.retries,
+            "{ctx}: {} exhaustions out of {} dispatches",
+            e.retry_exhausted,
+            e.retries
+        );
+    } else {
+        assert_eq!(e.retries, 0, "{ctx}: retry dispatches at a zero budget");
+        assert_eq!(
+            e.retry_exhausted, e.limbo_recovered,
+            "{ctx}: zero budget sheds exactly what it recovers"
+        );
+    }
+    if e.detections == e.crashes {
+        // with every corpse confirmed, nothing strands on an
+        // unconfirmed node at the horizon: the only limbo losses are
+        // flushed retry-pending tasks, each recovered earlier
+        assert!(
+            e.limbo_lost <= e.limbo_recovered,
+            "{ctx}: more limbo lost ({}) than ever recovered ({})",
+            e.limbo_lost,
+            e.limbo_recovered
+        );
+    }
+}
+
+/// 500 seeded fault schedules with a nonzero detection delay: random
+/// churn (crashes, joins, graceful leaves) against a live workload,
+/// with heartbeats, suspicion, confirmation, retry and horizon
+/// flushing all in play — and every task still accounted for exactly
+/// once, every counter coherent.
+#[test]
+fn every_task_is_accounted_exactly_once_across_500_fault_schedules() {
+    for seed in 0..500u64 {
+        let n_tasks = 8;
+        let width = 3usize;
+        let mut lc = LifecycleConfig {
+            churn_rate: 1.0,
+            seed,
+            min_replicas: 1,
+            max_replicas: 5,
+            ..LifecycleConfig::default()
+        };
+        lc.detector.enabled = true;
+        lc.detector.heartbeat_interval = secs(0.5);
+        lc.detector.suspicion_timeout = secs(1.5);
+        lc.detector.max_retries = 2;
+        lc.detector.retry_backoff = secs(0.5);
+        let workload = WorkloadSpec::paper_mix(2.0, 0.7, n_tasks, seed).generate();
+        let report = Orchestrator::new(
+            RoutingStrategy::SloAware,
+            (0..width).map(std_replica).collect(),
+        )
+        .with_lifecycle(lc.clone(), Box::new(std_replica))
+        .run(workload, secs(15.0))
+        .unwrap();
+
+        let ctx = format!("chaos seed {seed}");
+        assert_conserved(&report, n_tasks, &ctx);
+        assert_detector_coherent(&report, lc.detector.max_retries, &ctx);
+    }
+}
+
+/// The acceptance cell: a crash-at-overload run with detection enabled
+/// recovers in-limbo tasks via retry — nonzero retry dispatches, and a
+/// shed count strictly below the no-retry twin at the same detection
+/// delay (whose shed *is* the limbo floor, since admission is off and
+/// the recovery paths are the only shed source).
+#[test]
+fn retry_redispatch_beats_the_no_retry_floor_at_the_crash_cell() {
+    let cfg = ServeConfig::default();
+    let n = 1_000;
+    let retry = chaos_sweep::run_cell("crash-d8", n, &cfg).unwrap();
+    let bare = chaos_sweep::run_cell("crash-d8-noretry", n, &cfg).unwrap();
+
+    assert_eq!(retry.crashes, 2, "both scheduled crashes fire");
+    assert_eq!(retry.detections, 2, "both corpses confirmed");
+    assert!(
+        bare.limbo_recovered > 0,
+        "the 8 s detection gap must land dispatches in limbo"
+    );
+    assert_eq!(
+        bare.retry_exhausted, bare.limbo_recovered,
+        "the no-retry twin sheds its whole limbo at confirmation"
+    );
+    assert!(retry.retries > 0, "recovery must run retry dispatches");
+    assert!(retry.limbo_recovered > 0);
+    assert!(
+        retry.shed < bare.shed,
+        "retry shed {} must be strictly below the no-retry floor {}",
+        retry.shed,
+        bare.shed
+    );
+}
+
+/// Detector lag on a *live* fleet: a heavy burst with no fault schedule
+/// at all. Overloaded replicas heartbeat late (cycle-lag delivery), so
+/// suspicion edges may rise and clear — but nothing may ever be
+/// confirmed dead, nothing limboes, nothing sheds, and the fleet ends
+/// fully alive.
+#[test]
+fn overload_lag_never_confirms_a_live_replica() {
+    use slice_serve::cluster::FleetSpec;
+    use slice_serve::config::{ClusterEngine, PolicyKind};
+    use slice_serve::experiments::run_fleet;
+
+    let mut cfg = ServeConfig::default();
+    cfg.n_tasks = 800;
+    cfg.arrival_rate = cfg.n_tasks as f64 / 120.0;
+    cfg.policy = PolicyKind::Slice;
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = false;
+    cfg.cluster_migration = true;
+    cfg.lifecycle.detector.enabled = true;
+    cfg.lifecycle.detector.heartbeat_interval = secs(0.5);
+    cfg.lifecycle.detector.suspicion_timeout = secs(2.0);
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(cfg.cycle_cap);
+    let workload =
+        WorkloadSpec::paper_mix(cfg.arrival_rate, cfg.rt_ratio, cfg.n_tasks, cfg.seed)
+            .generate();
+    let report =
+        run_fleet(RoutingStrategy::SloAware, &spec, workload, &cfg, secs(60.0)).unwrap();
+
+    let e = &report.elastic;
+    assert_eq!(e.crashes, 0, "no faults were scheduled");
+    assert_eq!(e.detections, 0, "a live replica was confirmed dead");
+    assert_eq!(
+        e.limbo_recovered + e.retries + e.retry_exhausted + e.limbo_lost,
+        0,
+        "nothing limboes without a confirmed corpse"
+    );
+    assert!(
+        e.false_suspicions <= e.suspicions,
+        "cleared {} suspicions but only {} were raised",
+        e.false_suspicions,
+        e.suspicions
+    );
+    assert!(report.replicas.iter().all(|r| r.alive), "the fleet ends fully alive");
+    assert_conserved(&report, cfg.n_tasks, "live-lag");
+}

@@ -1,16 +1,14 @@
-//! PR 5 bit-exactness guarantees (DESIGN.md "Scheduler hot path"):
-//! the optimized scheduler core — incremental Eq. 7 admission,
-//! scratch-owned selection, in-place mask rebuild, serving-loop
-//! indexes — must reproduce the pre-optimization implementation
-//! *exactly*: identical `Selection`s, identical `DecodeMask` rows, and
-//! identical `RunReport` timings over full serving runs, across seeds
-//! and configurations (including memory-constrained and cluster runs).
+//! Bit-exactness guarantees across the engine stack.
 //!
-//! The reference half is `selection::select_tasks_reference` (the old
-//! Alg. 2 loop, kept in-tree) plus `RefSlicePolicy` below — a verbatim
-//! copy of the pre-PR 5 `SlicePolicy` control flow building fresh
-//! vectors everywhere. Delete both together once the perf trajectory
-//! has a few PRs of CI history.
+//! PR 5's optimized scheduler core (incremental Eq. 7 admission,
+//! scratch-owned selection, in-place mask rebuild, serving-loop
+//! indexes) was originally pinned against a verbatim pre-optimization
+//! reference implementation kept in-tree. PR 10 deleted that reference
+//! path — the property suite now pins the selection semantics directly
+//! (`rust/tests/property_invariants.rs`) — leaving the in-place mask
+//! rebuild check here and the engine-level halves below, which compare
+//! production configurations against each other rather than against
+//! historical code.
 //!
 //! PR 6 adds the cluster-engine half (DESIGN.md "Event-driven cluster
 //! engine"): the event-driven `Orchestrator` must reproduce the
@@ -37,91 +35,27 @@
 //! those two counters are *excluded* from the engine-pair comparison
 //! and asserted `event <= lockstep` instead. Everything else,
 //! including the migrated-task set, stays bit-exact.
-
-use std::collections::VecDeque;
+//!
+//! PR 10 (DESIGN.md "Failure detection & recovery") adds the
+//! inert-detector half: a fleet with the failure detector *configured*
+//! but inert (`suspicion_timeout = 0`, the oracle setting) must
+//! reproduce the PR 7 reports bit for bit — no heartbeat events on the
+//! heap, no detector counters, identical per-task timings — across the
+//! nine shapes, both engines, and thread counts, with and without a
+//! crash schedule underneath.
 
 use slice_serve::coordinator::mask::DecodeMask;
-use slice_serve::coordinator::pool::TaskPool;
-use slice_serve::coordinator::preemption::UtilityAdaptor;
-use slice_serve::coordinator::scheduler::{Policy, Step};
-use slice_serve::coordinator::selection::{
-    select_tasks, select_tasks_reference, select_tasks_with, Candidate, Selection,
-    SelectionScratch, CYCLE_CAP,
-};
-use slice_serve::coordinator::slice::{MemoryBudget, SliceConfig, SlicePolicy};
-use slice_serve::coordinator::task::{TaskId, TaskState};
-use slice_serve::engine::clock::VirtualClock;
+use slice_serve::coordinator::task::TaskId;
 use slice_serve::engine::latency::LatencyModel;
-use slice_serve::engine::memory::{KvCacheModel, MemoryConfig};
-use slice_serve::engine::sim::SimEngine;
-use slice_serve::server::{RunReport, Server};
+use slice_serve::server::RunReport;
 use slice_serve::util::rng::Rng;
-use slice_serve::util::{secs, Micros};
+use slice_serve::util::secs;
 use slice_serve::workload::WorkloadSpec;
 
 const SEEDS: [u64; 4] = [7, 42, 1234, 777];
 
 fn lat() -> LatencyModel {
     LatencyModel::paper_calibrated()
-}
-
-fn random_candidates(rng: &mut Rng, n: usize) -> Vec<Candidate> {
-    (0..n)
-        .map(|i| Candidate {
-            id: i as u64,
-            utility: rng.range_u64(1, 1000) as f64 / 10.0,
-            tpot: rng.range_u64(40, 400) * 1_000,
-            kv_bytes: rng.range_u64(1, 32) * 512 * 1024,
-        })
-        .collect()
-}
-
-fn assert_selection_eq(a: &Selection, b: &Selection, ctx: &str) {
-    assert_eq!(a.selected, b.selected, "{ctx}: selected diverged");
-    assert_eq!(a.rejected, b.rejected, "{ctx}: rejected diverged");
-    assert_eq!(a.period, b.period, "{ctx}: period diverged");
-}
-
-/// Optimized selection == reference selection, over random candidate
-/// sets with and without the KV knapsack dimension, through both the
-/// allocating wrapper and one scratch reused across every case.
-#[test]
-fn selection_matches_reference_across_random_cases() {
-    let lat = lat();
-    let mut scratch = SelectionScratch::new(lat.clone());
-    let mut out = Selection::default();
-    for seed in 0..300u64 {
-        let mut rng = Rng::new(9_000_000 + seed);
-        let n = rng.range_usize(0, 60);
-        let cands = random_candidates(&mut rng, n);
-        let kv_cap = if rng.chance(0.5) {
-            Some(rng.range_u64(4, 64) * 1024 * 1024)
-        } else {
-            None
-        };
-        let reference = select_tasks_reference(&cands, &lat, CYCLE_CAP, kv_cap);
-        let fresh = select_tasks(&cands, &lat, CYCLE_CAP, kv_cap);
-        assert_selection_eq(&fresh, &reference, &format!("seed {seed} (fresh)"));
-        select_tasks_with(&mut scratch, &mut out, &cands, CYCLE_CAP, kv_cap);
-        assert_selection_eq(&out, &reference, &format!("seed {seed} (scratch)"));
-    }
-}
-
-/// Equal utility rates must fall back to the id tie-break identically
-/// (the packed sort key's collision path).
-#[test]
-fn selection_tie_breaks_match_reference() {
-    let lat = lat();
-    // many identical rates, shuffled ids, plus a rate-0 pair
-    let mut cands: Vec<Candidate> = [9u64, 3, 7, 1, 5, 0, 8, 2, 6, 4]
-        .iter()
-        .map(|&id| Candidate { id, utility: 2.5, tpot: 200_000, kv_bytes: 0 })
-        .collect();
-    cands.push(Candidate { id: 11, utility: 0.0, tpot: 100_000, kv_bytes: 0 });
-    cands.push(Candidate { id: 10, utility: 0.0, tpot: 100_000, kv_bytes: 0 });
-    let reference = select_tasks_reference(&cands, &lat, CYCLE_CAP, None);
-    let fresh = select_tasks(&cands, &lat, CYCLE_CAP, None);
-    assert_selection_eq(&fresh, &reference, "tie-break");
 }
 
 /// In-place mask rebuild == fresh build over random admitted sets,
@@ -144,148 +78,6 @@ fn mask_rebuild_matches_build_across_random_cases() {
             assert_eq!(reused.batch_len(j), fresh.batch_len(j), "seed {seed} col {j}");
         }
         assert_eq!(reused.period_exact(&l), fresh.period_exact(&l), "seed {seed}");
-    }
-}
-
-/// A verbatim copy of the pre-PR 5 `SlicePolicy`: fresh vectors on
-/// every reschedule, `Option<DecodeMask>` rebuilt from scratch, a
-/// collected `Vec<TaskId>` per decode column. Only the selection entry
-/// point differs from the historical text (it calls the kept
-/// `select_tasks_reference`).
-struct RefSlicePolicy {
-    latency: LatencyModel,
-    cfg: SliceConfig,
-    mask: Option<DecodeMask>,
-    col: u32,
-    to_prefill: VecDeque<TaskId>,
-    needs_reschedule: bool,
-    reschedules: u64,
-}
-
-impl RefSlicePolicy {
-    fn new(latency: LatencyModel, cfg: SliceConfig) -> Self {
-        RefSlicePolicy {
-            latency,
-            cfg,
-            mask: None,
-            col: 0,
-            to_prefill: VecDeque::new(),
-            needs_reschedule: false,
-            reschedules: 0,
-        }
-    }
-
-    fn reschedule(&mut self, pool: &mut TaskPool) {
-        self.reschedules += 1;
-        let candidates: Vec<Candidate> = pool
-            .iter()
-            .filter(|t| !t.is_finished())
-            .map(|t| Candidate {
-                id: t.id,
-                utility: self.cfg.adaptor.effective(t),
-                tpot: t.slo.tpot,
-                kv_bytes: self
-                    .cfg
-                    .memory
-                    .as_ref()
-                    .map_or(0, |m| m.footprint_bytes(t.seq_len())),
-            })
-            .collect();
-        let cycle_cap = if self.cfg.prefill_aware {
-            let prefill_debt: Micros = pool
-                .iter()
-                .filter(|t| !t.is_finished() && t.prefill_end.is_none())
-                .map(|t| self.latency.prefill(t.prompt_len))
-                .sum();
-            self.cfg
-                .cycle_cap
-                .saturating_sub(prefill_debt.min(self.cfg.cycle_cap / 2))
-        } else {
-            self.cfg.cycle_cap
-        };
-        let kv_capacity = self.cfg.memory.as_ref().map(|m| m.capacity);
-        let Selection { selected, rejected, .. } =
-            select_tasks_reference(&candidates, &self.latency, cycle_cap, kv_capacity);
-
-        self.to_prefill.retain(|_| false);
-        for &(id, _) in &selected {
-            let t = pool.get_mut(id);
-            match t.state {
-                TaskState::Waiting | TaskState::Admitted => {
-                    t.state = TaskState::Admitted;
-                    self.to_prefill.push_back(id);
-                }
-                TaskState::Paused => t.state = TaskState::Running,
-                TaskState::Running => {}
-                TaskState::Finished => unreachable!("finished task selected"),
-            }
-        }
-        for &id in &rejected {
-            let t = pool.get_mut(id);
-            if matches!(t.state, TaskState::Running | TaskState::Admitted) {
-                t.state = if t.prefill_end.is_some() {
-                    TaskState::Paused
-                } else {
-                    TaskState::Waiting
-                };
-            }
-        }
-
-        self.mask = if selected.is_empty() {
-            None
-        } else {
-            Some(DecodeMask::build(selected))
-        };
-        self.col = 0;
-        self.needs_reschedule = false;
-    }
-}
-
-impl Policy for RefSlicePolicy {
-    fn name(&self) -> &'static str {
-        "SLICE"
-    }
-
-    fn on_arrival(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
-        self.needs_reschedule = true;
-    }
-
-    fn on_completion(&mut self, _pool: &mut TaskPool, _ids: &[TaskId], _now: Micros) {
-        self.needs_reschedule = true;
-    }
-
-    fn next_step(&mut self, pool: &mut TaskPool, _now: Micros) -> Step {
-        if self.needs_reschedule {
-            self.reschedule(pool);
-        }
-        while let Some(id) = self.to_prefill.pop_front() {
-            if !pool.get(id).is_finished() {
-                return Step::Prefill { task: id };
-            }
-        }
-        let Some(mask) = &self.mask else { return Step::Idle };
-        if mask.is_empty() {
-            return Step::Idle;
-        }
-        let columns = mask.columns();
-        for _ in 0..columns {
-            let j = self.col;
-            self.col = (self.col + 1) % columns;
-            let batch: Vec<TaskId> = mask
-                .column_batch(j)
-                .iter()
-                .map(|&(id, _)| id)
-                .filter(|&id| pool.get(id).state == TaskState::Running)
-                .collect();
-            if !batch.is_empty() {
-                return Step::Decode { tasks: batch };
-            }
-        }
-        Step::Idle
-    }
-
-    fn decisions(&self) -> u64 {
-        self.reschedules
     }
 }
 
@@ -318,133 +110,6 @@ fn assert_reports_eq(a: &RunReport, b: &RunReport, ctx: &str) {
         assert_eq!(x.prefill_end, y.prefill_end, "{ctx}: task {} prefill_end", x.id);
         assert_eq!(x.swap_outs, y.swap_outs, "{ctx}: task {} swap_outs", x.id);
         assert_eq!(x.swap_ins, y.swap_ins, "{ctx}: task {} swap_ins", x.id);
-    }
-}
-
-fn run_pair(cfg: SliceConfig, engine: impl Fn() -> SimEngine, seed: u64, ctx: &str) {
-    let workload = WorkloadSpec::paper_mix(1.0, 0.7, 120, seed).generate();
-    let horizon = workload.last().map(|t| t.arrival).unwrap_or(0) + secs(120.0);
-    let optimized = Server::new(
-        workload.clone(),
-        Box::new(SlicePolicy::new(lat(), cfg.clone())),
-        Box::new(engine()),
-        VirtualClock::new(),
-    )
-    .run(horizon)
-    .unwrap();
-    let reference = Server::new(
-        workload,
-        Box::new(RefSlicePolicy::new(lat(), cfg)),
-        Box::new(engine()),
-        VirtualClock::new(),
-    )
-    .run(horizon)
-    .unwrap();
-    assert_reports_eq(&optimized, &reference, ctx);
-}
-
-/// Full serving runs under the optimized policy reproduce the pre-PR 5
-/// policy step for step: default config, prefill-aware, SJF adaptor —
-/// across seeds.
-#[test]
-fn full_runs_match_reference_across_seeds_and_configs() {
-    for seed in SEEDS {
-        run_pair(
-            SliceConfig::default(),
-            SimEngine::paper_calibrated,
-            seed,
-            &format!("default/seed{seed}"),
-        );
-        run_pair(
-            SliceConfig { prefill_aware: true, ..SliceConfig::default() },
-            SimEngine::paper_calibrated,
-            seed,
-            &format!("prefill-aware/seed{seed}"),
-        );
-        run_pair(
-            SliceConfig {
-                adaptor: UtilityAdaptor::SjfDecay { factor: 0.5, tau: 16 },
-                ..SliceConfig::default()
-            },
-            SimEngine::paper_calibrated,
-            seed,
-            &format!("sjf/seed{seed}"),
-        );
-    }
-}
-
-/// Memory-constrained runs (finite KV capacity, memory-aware
-/// selection, serving-loop eviction/restore on the clock) are also
-/// bit-identical — the resident-index victim search must pick the
-/// exact victims the full-pool scan picked.
-#[test]
-fn constrained_runs_match_reference_across_seeds() {
-    let capacity = 32u64 * 1024 * 1024;
-    let mem_cfg = MemoryConfig {
-        kv_capacity: Some(capacity),
-        aware: true,
-        ..MemoryConfig::default()
-    };
-    let budget = MemoryBudget::from_config(&mem_cfg, Some(capacity)).unwrap();
-    let engine = move || {
-        let kv = KvCacheModel::new(mem_cfg.clone(), Some(capacity), lat());
-        SimEngine::new(lat(), 8192).with_memory(kv)
-    };
-    for seed in SEEDS {
-        run_pair(
-            SliceConfig { memory: Some(budget.clone()), ..SliceConfig::default() },
-            engine.clone(),
-            seed,
-            &format!("memory/seed{seed}"),
-        );
-    }
-}
-
-/// Cluster runs: a 4-replica SLO-aware fleet (whose routing reads the
-/// replicas' headroom/load through the new live-set scans) built over
-/// the optimized policy reproduces the same fleet built over the
-/// reference policy, task for task.
-#[test]
-fn cluster_runs_match_reference() {
-    use slice_serve::cluster::{DeviceProfile, Replica, Router, RoutingStrategy};
-
-    let build = |reference: bool| {
-        let replicas: Vec<Replica> = (0..4)
-            .map(|i| {
-                let profile = DeviceProfile::standard();
-                let policy: Box<dyn Policy> = if reference {
-                    Box::new(RefSlicePolicy::new(lat(), SliceConfig::default()))
-                } else {
-                    Box::new(SlicePolicy::new(lat(), SliceConfig::default()))
-                };
-                Replica::new(i, policy, Box::new(SimEngine::paper_calibrated()), profile)
-            })
-            .collect();
-        Router::new(RoutingStrategy::SloAware, replicas)
-    };
-    for seed in [7u64, 42, 1234] {
-        let workload = WorkloadSpec::paper_mix(4.0, 0.7, 160, seed).generate();
-        let a = build(false).run(workload.clone(), secs(120.0)).unwrap();
-        let b = build(true).run(workload, secs(120.0)).unwrap();
-        assert_eq!(a.migrations, b.migrations, "seed {seed}");
-        assert_eq!(a.rejected_count(), b.rejected_count(), "seed {seed}");
-        let ta = a.tasks();
-        let tb = b.tasks();
-        assert_eq!(ta.len(), tb.len(), "seed {seed}");
-        for (x, y) in ta.iter().zip(&tb) {
-            assert_eq!(x.id, y.id, "seed {seed}");
-            assert_eq!(x.first_token, y.first_token, "seed {seed} task {}", x.id);
-            assert_eq!(x.completion, y.completion, "seed {seed} task {}", x.id);
-            assert_eq!(
-                x.tokens_generated, y.tokens_generated,
-                "seed {seed} task {}",
-                x.id
-            );
-        }
-        for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
-            assert_eq!(ra.routed, rb.routed, "seed {seed}: routing diverged");
-            assert_eq!(ra.report.steps, rb.report.steps, "seed {seed}");
-        }
     }
 }
 
@@ -935,5 +600,104 @@ fn assert_cluster_counters_eq(a: &ClusterReport, b: &ClusterReport, ctx: &str) {
         assert_eq!(ra.migrated_in, rb.migrated_in, "{c}: migrated_in");
         assert_eq!(ra.migrated_out, rb.migrated_out, "{c}: migrated_out");
         assert_reports_eq(&ra.report, &rb.report, &c);
+    }
+}
+
+// ---- Inert detector vs the PR 7 oracle (PR 10) -------------------------
+
+use slice_serve::cluster::{LifecycleAction, LifecycleEvent};
+
+/// The failure detector *configured* but inert (`suspicion_timeout =
+/// 0`, the oracle setting) must change nothing: no heartbeat events
+/// reach the heap, the boundary math never sees a heartbeat term, and
+/// the reports stay bit-exact with the detector-free engines — across
+/// all nine shapes, against both the lockstep and event baselines, at
+/// 1 and 4 worker threads. This is the gate that keeps
+/// `--detect-delay 0` an honest oracle spelling rather than a subtly
+/// different engine.
+#[test]
+fn inert_detector_is_bit_exact_across_shapes_and_threads() {
+    for (label, cfg, strategy, spec, rate, n_tasks) in nine_shapes() {
+        let workload = WorkloadSpec::paper_mix(rate, 0.7, n_tasks, 7).generate();
+        let mut lockstep = cfg.clone();
+        lockstep.cluster_engine = ClusterEngine::Lockstep;
+        let ls = experiments::run_fleet(strategy, &spec, workload.clone(), &lockstep, secs(120.0))
+            .unwrap();
+        let mut event = cfg.clone();
+        event.cluster_engine = ClusterEngine::Event;
+        let ev = experiments::run_fleet(strategy, &spec, workload.clone(), &event, secs(120.0))
+            .unwrap();
+        for threads in [1usize, 4] {
+            let mut det = cfg.clone();
+            det.cluster_engine = ClusterEngine::Event;
+            det.cluster_threads = threads;
+            det.lifecycle.detector.enabled = true;
+            det.lifecycle.detector.suspicion_timeout = 0;
+            let report =
+                experiments::run_fleet(strategy, &spec, workload.clone(), &det, secs(120.0))
+                    .unwrap();
+            let ctx = format!("inert-detector/{label}/t{threads}");
+            assert_cluster_reports_eq(&report, &ls, &format!("{ctx} vs lockstep"));
+            assert_cluster_reports_eq(&report, &ev, &format!("{ctx} vs event"));
+            let e = &report.elastic;
+            assert_eq!(
+                (e.suspicions, e.false_suspicions, e.detections),
+                (0, 0, 0),
+                "{ctx}: detector counters on an inert run"
+            );
+            assert_eq!(
+                (e.limbo_recovered, e.retries, e.retry_exhausted, e.limbo_lost),
+                (0, 0, 0, 0),
+                "{ctx}: recovery counters on an inert run"
+            );
+        }
+    }
+}
+
+/// The oracle spelling under real crashes: a two-crash schedule run
+/// with the detector configured at `suspicion_timeout = 0` must
+/// reproduce the detector-free PR 7 crash handling bit for bit —
+/// instant oracle visibility, free re-queues, recompute-priced
+/// evacuation — at both thread counts, with every detector counter
+/// still zero.
+#[test]
+fn inert_detector_reproduces_oracle_crash_handling() {
+    let mut cfg = ServeConfig::default();
+    cfg.cluster_engine = ClusterEngine::Event;
+    cfg.cluster_admission.enabled = true;
+    cfg.cluster_admission.mode = AdmissionMode::Headroom;
+    cfg.cluster_migration = true;
+    cfg.lifecycle.events = vec![
+        LifecycleEvent { time: secs(40.0), action: LifecycleAction::Crash, target: Some(0) },
+        LifecycleEvent { time: secs(80.0), action: LifecycleAction::Crash, target: Some(1) },
+    ];
+    let spec = FleetSpec::preset("edge-mixed").unwrap().with_cycle_cap(cfg.cycle_cap);
+    let workload = WorkloadSpec::paper_mix(6.0, 0.7, 200, 7).generate();
+    let oracle = experiments::run_fleet(
+        RoutingStrategy::SloAware,
+        &spec,
+        workload.clone(),
+        &cfg,
+        secs(120.0),
+    )
+    .unwrap();
+    assert_eq!(oracle.elastic.crashes, 2, "both scheduled crashes fire");
+    for threads in [1usize, 4] {
+        let mut det = cfg.clone();
+        det.cluster_threads = threads;
+        det.lifecycle.detector.enabled = true;
+        det.lifecycle.detector.suspicion_timeout = 0;
+        let report = experiments::run_fleet(
+            RoutingStrategy::SloAware,
+            &spec,
+            workload.clone(),
+            &det,
+            secs(120.0),
+        )
+        .unwrap();
+        let ctx = format!("oracle-crash/t{threads}");
+        assert_cluster_reports_eq(&report, &oracle, &ctx);
+        assert_eq!(report.elastic, oracle.elastic, "{ctx}: elastic counters");
+        assert_eq!(report.elastic.detections, 0, "{ctx}: oracle path never detects");
     }
 }

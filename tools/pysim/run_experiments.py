@@ -70,6 +70,18 @@ Stages:
      at threads > 1 from the max-over-worker-chunks epoch cost model —
      the BENCH_9.json input, with the acceptance gate: >= 1.8x modeled
      speedup at 4 threads on the widest cell.
+ 14. failure detection & recovery (PR 10) — (a) unit mirrors of the
+     Rust detector.rs suspicion state machine; (b) the inert detector
+     (`enabled` with `suspicion_timeout = 0`, the oracle spelling) is
+     bit-exact with the detector-free engines across the stage-10
+     shapes at threads 1/4, and reproduces oracle crash handling under
+     a real crash schedule; (c) task conservation + counter coherence
+     across 500 seeded fault schedules with a nonzero detection delay;
+     (d) detector lag on a live overloaded fleet never confirms a
+     corpse; (e) the chaos sweep (crash/churn x detection delay x
+     retry budget) with the acceptance gate: retry re-dispatch sheds
+     strictly less than the no-retry floor at the crash-d8 cell — the
+     BENCH_10.json input.
 
 Usage: python3 tools/pysim/run_experiments.py [--out results.json]
        [--scale-sizes 1000,4000,10000]
@@ -79,6 +91,7 @@ Usage: python3 tools/pysim/run_experiments.py [--out results.json]
        [--stream-sizes 10000,1000000] [--bench8-out BENCH_8.json] [--stage12]
        [--parallel-widths 64,256] [--parallel-threads 1,2,4,8]
        [--bench9-out BENCH_9.json] [--stage13]
+       [--chaos-sizes 1000,10000] [--bench10-out BENCH_10.json] [--stage14]
 """
 
 import json
@@ -90,8 +103,9 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent))
 
 from slice_sim import (  # noqa: E402
-    CRASH, CYCLE_CAP, AdmissionConfig, Autoscaler, AutoscalerConfig,
-    DecodeMask, DeviceProfile, HealthConfig, HealthTracker, IncrementalPeriod,
+    CONFIRM, CRASH, CYCLE_CAP, SUSPECT, UNSUSPECT, AdmissionConfig,
+    Autoscaler, AutoscalerConfig, DecodeMask, DetectorConfig, DeviceProfile,
+    FailureDetector, HealthConfig, HealthTracker, IncrementalPeriod,
     LatencyModel, LifecycleConfig, LifecycleEvent, MemoryConfig, OrcaPolicy,
     Orchestrator, Replica, Rng, Router, Server, SlicePolicy, _default_policy,
     attainment, edge_mixed, latency_summary, paper_mix, paper_mix_stream,
@@ -1354,6 +1368,375 @@ def parallel_engine_stage(parallel_widths, replica_sizes, parallel_threads):
     return rows
 
 
+# --------------------- stage 14: failure detection & recovery --
+
+
+CHAOS_VARIANTS = ("crash-oracle", "crash-d2", "crash-d2-noretry",
+                  "crash-d8", "crash-d8-noretry",
+                  "churn-oracle", "churn-d2", "churn-d2-noretry",
+                  "churn-d8", "churn-d8-noretry")
+CHAOS_HEARTBEAT_S = 0.5
+CHAOS_MAX_RETRIES = 8
+CHAOS_RETRY_BACKOFF_S = 2.0
+CHAOS_CHURN_RATE = 0.05
+CHAOS_CHURN_MIN = 2
+CHAOS_CHURN_MAX = 8
+CHAOS_WINDOW_S = 120.0
+CHAOS_DRAIN_S = 60.0
+
+
+def _chaos_decode(variant):
+    """Mirrors experiments::chaos_sweep::decode."""
+    schedule, rest = variant.split("-", 1)
+    delay, retries = {
+        "oracle": (0.0, CHAOS_MAX_RETRIES), "d2": (2.0, CHAOS_MAX_RETRIES),
+        "d2-noretry": (2.0, 0), "d8": (8.0, CHAOS_MAX_RETRIES),
+        "d8-noretry": (8.0, 0)}[rest]
+    return schedule == "churn", delay, retries
+
+
+def _chaos_lifecycle(variant):
+    """Mirrors experiments::chaos_sweep::lifecycle_for."""
+    churn, delay, retries = _chaos_decode(variant)
+    lc = LifecycleConfig()
+    if churn:
+        lc.churn_rate = CHAOS_CHURN_RATE
+        lc.min_replicas = CHAOS_CHURN_MIN
+        lc.max_replicas = CHAOS_CHURN_MAX
+    else:
+        lc.events = [LifecycleEvent(secs(40.0), CRASH, 0),
+                     LifecycleEvent(secs(80.0), CRASH, 1)]
+    lc.detector.enabled = True
+    lc.detector.heartbeat_interval = secs(CHAOS_HEARTBEAT_S)
+    lc.detector.suspicion_timeout = secs(delay)
+    lc.detector.max_retries = retries
+    lc.detector.retry_backoff = secs(CHAOS_RETRY_BACKOFF_S)
+    return lc
+
+
+def chaos_cell(variant, n, seed=42):
+    """Mirrors experiments::chaos_sweep::run_cell: the scale sweep's
+    edge-mixed overload shape (slo-aware routing, admission OFF,
+    overload migration, event engine) with the variant's lifecycle +
+    detector config attached."""
+    _churn, delay, retries = _chaos_decode(variant)
+    rate = n / CHAOS_WINDOW_S
+    wl = paper_mix(rate, 0.7, n, seed)
+    t0 = time.perf_counter()
+    tasks, _per, router = run_fleet(
+        "slo-aware", edge_mixed(), wl, secs(CHAOS_DRAIN_S),
+        migration=True, engine="event", lifecycle=_chaos_lifecycle(variant))
+    wall = max(time.perf_counter() - t0, 1e-9)
+    a = attainment(tasks)
+    shed = (len(router.rejected) + router.rejected_folded
+            + sum(r.server.shed for r in router.replicas))
+    cell = {
+        "variant": variant, "n_tasks": n, "rate": round(rate, 4),
+        "detect_delay_s": delay, "max_retries": retries,
+        "replicas_final": router.alive_count(),
+        "finished": a["n_finished"], "shed": shed,
+        "shed_rate": round(shed / n, 4),
+        "slo": None if math.isnan(a["slo"]) else a["slo"],
+        "crashes": router.crashes, "suspicions": router.suspicions,
+        "false_suspicions": router.false_suspicions,
+        "detections": router.detections,
+        "limbo_recovered": router.limbo_recovered,
+        "retries": router.retries,
+        "retry_exhausted": router.retry_exhausted,
+        "limbo_lost": router.limbo_lost,
+        "evac_requeued": router.evac_requeued,
+        "evac_restarted": router.evac_restarted,
+        "wall_s": round(wall, 2),
+    }
+    return cell, tasks
+
+
+def _detector_unit_mirrors():
+    mk = lambda: FailureDetector(DetectorConfig(  # noqa: E731
+        enabled=True, heartbeat_interval=100, suspicion_timeout=300), 2)
+
+    d = mk()
+    ok = True
+    for tick in range(1, 11):
+        t = tick * 100
+        d.emit(0, t, 0)
+        ok = ok and d.tick(0, t, False) is None and not d.is_suspected(0)
+    check(ok, "on-time heartbeats never suspect")
+
+    d = mk()
+    check(d.tick(0, 100, True) is None
+          and d.tick(0, 200, True) == SUSPECT
+          and d.tick(0, 200, True) is None
+          and d.tick(0, 300, True) == CONFIRM,
+          "silence suspects (edge, not level), then confirms when dead")
+
+    d = mk()
+    d.emit(0, 100, 150)  # overloaded: arrives at 250
+    check(d.tick(0, 200, False) == SUSPECT and d.is_suspected(0)
+          and d.tick(0, 300, False) == UNSUSPECT and not d.is_suspected(0),
+          "late heartbeat is a false suspicion")
+
+    d = mk()
+    first = d.tick(0, 200, False) == SUSPECT
+    held = d.tick(0, 500, False) is None and d.is_suspected(0)
+    d.emit(0, 500, 0)
+    check(first and held and d.tick(0, 550, False) == UNSUSPECT,
+          "live replica past timeout stays suspected, never confirmed")
+
+    d = mk()
+    d.ensure(3, 1_000)
+    check(d.tick(2, 1_050, False) is None
+          and d.tick(2, 1_200, False) == SUSPECT,
+          "joiners start with a fresh synthetic heartbeat")
+
+    d = mk()
+    d.emit(0, 100, 300)  # arrives 400
+    d.emit(0, 200, 10)  # arrives 210
+    check(d.tick(0, 450, True) is None and d.tick(0, 750, True) == CONFIRM,
+          "pending fold takes the freshest arrival")
+
+
+def _detector_counters_zero(router):
+    return (router.suspicions + router.false_suspicions + router.detections
+            + router.limbo_recovered + router.retries + router.retry_exhausted
+            + router.limbo_lost) == 0
+
+
+def _inert_detector_pairs():
+    """The oracle spelling (`enabled`, `suspicion_timeout = 0`) must be
+    bit-exact with the detector-free engines across the stage-10 shapes
+    at threads 1 and 4 (the Rust equivalence.rs inert-detector gate)."""
+    for label, mk, strat, rate, n, seed, kw in _engine_shapes():
+        base = {}
+        for engine in ("lockstep", "event"):
+            wl = paper_mix(rate, 0.7, n, seed)
+            base[engine] = run_fleet(strat, mk(), wl, secs(120.0),
+                                     engine=engine, **kw)
+        for threads in (1, 4):
+            lc = LifecycleConfig()
+            lc.detector.enabled = True
+            lc.detector.suspicion_timeout = 0
+            wl = paper_mix(rate, 0.7, n, seed)
+            td, pd, rd = run_fleet(strat, mk(), wl, secs(120.0),
+                                   engine="event", threads=threads,
+                                   lifecycle=lc, **kw)
+            ok = _detector_counters_zero(rd)
+            for engine in ("lockstep", "event"):
+                ta, pa, ra = base[engine]
+                ok = (ok and pa == pd and len(ta) == len(td)
+                      and all(x.id == y.id and x.first_token == y.first_token
+                              and x.completion == y.completion
+                              and x.tokens_generated == y.tokens_generated
+                              for x, y in zip(ta, td))
+                      and ra.migrations == rd.migrations
+                      and ra.migrated_running == rd.migrated_running
+                      and ra.handoff_bytes == rd.handoff_bytes
+                      and ra.handoff_us == rd.handoff_us
+                      and [t.id for t in ra.rejected]
+                      == [t.id for t in rd.rejected])
+            check(ok, f"inert detector == both engines: {label} "
+                      f"t{threads} (seed {seed})")
+
+
+def _inert_oracle_crash_pair():
+    """Under a real crash schedule the inert detector must reproduce
+    the PR 7 oracle crash handling bit for bit, at threads 1 and 4."""
+    def crash_lc(detector):
+        lc = LifecycleConfig()
+        lc.events = [LifecycleEvent(secs(40.0), CRASH, 0),
+                     LifecycleEvent(secs(80.0), CRASH, 1)]
+        if detector:
+            lc.detector.enabled = True
+            lc.detector.suspicion_timeout = 0
+        return lc
+
+    adm = AdmissionConfig(enabled=True, mode="headroom")
+    wl = paper_mix(6.0, 0.7, 200, 7)
+    to, po, ro = run_fleet("slo-aware", edge_mixed(), wl, secs(120.0),
+                           admission=adm, migration=True, engine="event",
+                           lifecycle=crash_lc(False))
+    check(ro.crashes == 2, "oracle crash cell: both scheduled crashes fire")
+    for threads in (1, 4):
+        wl = paper_mix(6.0, 0.7, 200, 7)
+        td, pd, rd = run_fleet("slo-aware", edge_mixed(), wl, secs(120.0),
+                               admission=adm, migration=True, engine="event",
+                               threads=threads, lifecycle=crash_lc(True))
+        ok = (po == pd and len(to) == len(td)
+              and all(x.id == y.id and x.first_token == y.first_token
+                      and x.completion == y.completion
+                      and x.tokens_generated == y.tokens_generated
+                      for x, y in zip(to, td))
+              and ro.crashes == rd.crashes
+              and ro.evac_requeued == rd.evac_requeued
+              and ro.evac_restarted == rd.evac_restarted
+              and ro.migrations == rd.migrations
+              and [t.id for t in ro.rejected] == [t.id for t in rd.rejected]
+              and _detector_counters_zero(rd))
+        check(ok, f"inert detector reproduces oracle crash handling "
+                  f"(t{threads})")
+
+
+def _coherence_violation(router, max_retries):
+    """Mirrors chaos_recovery.rs assert_detector_coherent."""
+    r = router
+    if r.detections > r.crashes:
+        return f"{r.detections} detections but {r.crashes} crashes"
+    if r.false_suspicions > r.suspicions:
+        return (f"cleared {r.false_suspicions} suspicions, raised "
+                f"{r.suspicions}")
+    if max_retries > 0:
+        if r.retries < r.limbo_recovered:
+            return (f"{r.limbo_recovered} recovered but only "
+                    f"{r.retries} retry dispatches")
+        if r.retry_exhausted > r.retries:
+            return (f"{r.retry_exhausted} exhaustions out of "
+                    f"{r.retries} dispatches")
+    else:
+        if r.retries != 0:
+            return "retry dispatches at a zero budget"
+        if r.retry_exhausted != r.limbo_recovered:
+            return "zero budget must shed exactly what it recovers"
+    if r.detections == r.crashes and r.limbo_lost > r.limbo_recovered:
+        return (f"limbo lost {r.limbo_lost} > recovered "
+                f"{r.limbo_recovered} with every corpse confirmed")
+    return None
+
+
+def _chaos_fault_schedules():
+    """500 seeded fault schedules with a nonzero detection delay
+    (chaos_recovery.rs): churn + heartbeats + suspicion + confirmation
+    + retry + horizon flushing, every task accounted exactly once."""
+    bad = None
+    for seed in range(500):
+        lc = LifecycleConfig(churn_rate=1.0, seed=seed, min_replicas=1,
+                             max_replicas=5)
+        lc.detector.enabled = True
+        lc.detector.heartbeat_interval = secs(0.5)
+        lc.detector.suspicion_timeout = secs(1.5)
+        lc.detector.max_retries = 2
+        lc.detector.retry_backoff = secs(0.5)
+        wl = paper_mix(2.0, 0.7, 8, seed)
+        tasks, _per, router = run_fleet(
+            "slo-aware", [DeviceProfile.standard() for _ in range(3)],
+            wl, secs(15.0), engine="event", lifecycle=lc)
+        if sorted(t.id for t in tasks) != list(range(8)):
+            bad = f"seed {seed}: task conservation broken"
+            break
+        v = _coherence_violation(router, 2)
+        if v is not None:
+            bad = f"seed {seed}: {v}"
+            break
+    check(bad is None,
+          bad or "500 fault schedules: conserved, counters coherent")
+
+
+def _live_lag_cell():
+    """Detector lag on a live overloaded fleet: suspicion edges may
+    flap, but nothing is ever confirmed, limboed or shed."""
+    lc = LifecycleConfig()
+    lc.detector.enabled = True
+    lc.detector.heartbeat_interval = secs(0.5)
+    lc.detector.suspicion_timeout = secs(2.0)
+    wl = paper_mix(800 / 120.0, 0.7, 800, 42)
+    tasks, _per, router = run_fleet(
+        "slo-aware", edge_mixed(), wl, secs(60.0), migration=True,
+        engine="event", lifecycle=lc)
+    _elastic_conservation(tasks, 800, "live-lag cell")
+    print(f"  live-lag 800 tasks: susp={router.suspicions}"
+          f"({router.false_suspicions} cleared) det={router.detections}")
+    check(router.crashes == 0 and router.detections == 0
+          and router.limbo_recovered + router.retries
+          + router.retry_exhausted + router.limbo_lost == 0
+          and router.false_suspicions <= router.suspicions
+          and router.alive_count() == len(router.replicas),
+          "overload lag alone never confirms a live replica")
+
+
+def chaos_stage(chaos_sizes):
+    print("stage 14: failure detection & recovery (PR 10) — detector "
+          "mirrors, inert-detector equivalence, chaos recovery, chaos sweep")
+
+    _detector_unit_mirrors()
+    _inert_detector_pairs()
+    _inert_oracle_crash_pair()
+    _chaos_fault_schedules()
+    _live_lag_cell()
+
+    # crash-oracle is the detector-free crash run in disguise: same
+    # cell with the detector block absent must match task for task
+    cell0, t0_ = chaos_cell("crash-oracle", 1000)
+    lc = LifecycleConfig()
+    lc.events = [LifecycleEvent(secs(40.0), CRASH, 0),
+                 LifecycleEvent(secs(80.0), CRASH, 1)]
+    wl = paper_mix(1000 / CHAOS_WINDOW_S, 0.7, 1000, 42)
+    tf, _pf, rf = run_fleet(
+        "slo-aware", edge_mixed(), wl, secs(CHAOS_DRAIN_S),
+        migration=True, engine="event", lifecycle=lc)
+    same = ([(t.id, t.first_token, t.completion, t.tokens_generated)
+             for t in t0_]
+            == [(t.id, t.first_token, t.completion, t.tokens_generated)
+                for t in tf]
+            and cell0["crashes"] == rf.crashes == 2
+            and cell0["evac_requeued"] == rf.evac_requeued
+            and cell0["evac_restarted"] == rf.evac_restarted)
+    check(same, "crash-oracle cell == detector-free crash run")
+
+    # -- the chaos sweep (BENCH_10 rows) -------------------------------
+    rows = []
+    for n in chaos_sizes:
+        for variant in CHAOS_VARIANTS:
+            cell, tasks = chaos_cell(variant, n)
+            ids = sorted(t.id for t in tasks)
+            if ids != list(range(n)):
+                raise SystemExit(
+                    f"stage 14: conservation broken at {variant} n={n}")
+            v = _coherence_violation_cell(cell)
+            if v is not None:
+                raise SystemExit(f"stage 14: {variant} n={n}: {v}")
+            rows.append(cell)
+            print(f"  {variant:<17} n={n:>6}: wall={cell['wall_s']:7.2f}s "
+                  f"alive={cell['replicas_final']:>2} "
+                  f"finished={cell['finished']:>6} shed={cell['shed']:>5} "
+                  f"susp={cell['suspicions']}({cell['false_suspicions']}) "
+                  f"det={cell['detections']} limbo={cell['limbo_recovered']} "
+                  f"retry={cell['retries']} exh={cell['retry_exhausted']} "
+                  f"lost={cell['limbo_lost']}")
+
+    by = {(c["variant"], c["n_tasks"]): c for c in rows}
+    for n in chaos_sizes:
+        retry, bare = by[("crash-d8", n)], by[("crash-d8-noretry", n)]
+        check(retry["crashes"] == 2 and retry["detections"] == 2,
+              f"crash-d8 n={n}: both crashes confirmed through the detector")
+        check(bare["limbo_recovered"] > 0
+              and bare["retry_exhausted"] == bare["limbo_recovered"],
+              f"crash-d8-noretry n={n}: detection gap lands dispatches in "
+              f"limbo; zero budget sheds them all")
+        check(retry["retries"] > 0 and retry["limbo_recovered"] > 0,
+              f"crash-d8 n={n}: recovery runs retry dispatches")
+        print(f"  retry vs no-retry shed at n={n}: {retry['shed']} vs "
+              f"{bare['shed']}")
+        check(retry["shed"] < bare["shed"],
+              f"crash-d8 n={n}: retry shed {retry['shed']} strictly below "
+              f"the no-retry floor {bare['shed']}")
+        oracle = by[("crash-oracle", n)]
+        check(oracle["suspicions"] == 0 and oracle["detections"] == 0,
+              f"crash-oracle n={n}: detector stays inert")
+    print()
+    return rows
+
+
+def _coherence_violation_cell(cell):
+    """The coherence predicate over a sweep row (dict) instead of a
+    live Router."""
+    class _R:  # noqa: N801 — ad-hoc attribute bag
+        pass
+    r = _R()
+    for k in ("crashes", "suspicions", "false_suspicions", "detections",
+              "limbo_recovered", "retries", "retry_exhausted", "limbo_lost"):
+        setattr(r, k, cell[k])
+    return _coherence_violation(r, cell["max_retries"])
+
+
 def main():
     out_path = None
     if "--out" in sys.argv:
@@ -1398,7 +1781,20 @@ def main():
     bench9_out = None
     if "--bench9-out" in sys.argv:
         bench9_out = sys.argv[sys.argv.index("--bench9-out") + 1]
+    chaos_sizes = [1000, 10_000]
+    if "--chaos-sizes" in sys.argv:
+        raw = sys.argv[sys.argv.index("--chaos-sizes") + 1]
+        chaos_sizes = [int(v) for v in raw.split(",") if v]
+    bench10_out = None
+    if "--bench10-out" in sys.argv:
+        bench10_out = sys.argv[sys.argv.index("--bench10-out") + 1]
 
+    if "--stage14" in sys.argv:
+        # iterate on the failure detector without stages 1-13
+        rows = chaos_stage(chaos_sizes)
+        if bench10_out:
+            _write_bench10(bench10_out, rows)
+        return
     if "--stage13" in sys.argv:
         # iterate on the parallel event engine without stages 1-12
         rows = parallel_engine_stage(parallel_widths, replica_sizes,
@@ -1481,12 +1877,14 @@ def main():
     stream_rows = o_changes_stage(stream_sizes)
     parallel_rows = parallel_engine_stage(parallel_widths, replica_sizes,
                                           parallel_threads)
+    chaos_rows = chaos_stage(chaos_sizes)
 
     doc = {"fig1": fig1, "cluster_sweep": sweep, "validation_cells": cells,
            "hetero_sweep": hetero, "hetero_validation_cells": hetero_cells,
            "memory_sweep": memory, "scheduler_hot_path": hot_path,
            "replica_sweep": replica_sweep, "elastic_sweep": elastic_rows,
-           "stream_sweep": stream_rows, "parallel_sweep": parallel_rows}
+           "stream_sweep": stream_rows, "parallel_sweep": parallel_rows,
+           "chaos_sweep": chaos_rows}
     if out_path:
         Path(out_path).write_text(json.dumps(doc, indent=2))
         print(f"wrote {out_path}")
@@ -1498,6 +1896,8 @@ def main():
         _write_bench8(bench8_out, stream_rows)
     if bench9_out:
         _write_bench9(bench9_out, parallel_rows)
+    if bench10_out:
+        _write_bench10(bench10_out, chaos_rows)
 
 
 def _write_bench6(path, sweep):
@@ -1603,6 +2003,37 @@ def _write_bench7(path, rows):
         "gate": ("at the largest size the autoscale variant must shed "
                  "strictly fewer tasks than static (asserted by stage 11)"),
         "elastic_sweep": rows,
+    }
+    Path(path).write_text(json.dumps(doc, indent=2))
+    print(f"wrote {path}")
+
+
+def _write_bench10(path, rows):
+    doc = {
+        "schema": "slice-serve-bench/v10",
+        "source": ("tools/pysim/run_experiments.py stage 14 — the bit-exact "
+                   "Python mirror (no Rust toolchain in the build env); "
+                   "reproduce natively with `slice-serve experiment chaos`"),
+        "workload": ("paper_mix, rate = n_tasks/120 s, RT:NRT 7:3, seed 42; "
+                     "edge-mixed fleet, SLICE policy, slo-aware routing, "
+                     "admission OFF (so the recovery paths are the only "
+                     "shed source), overload migration, event engine, 60 s "
+                     "drain; heartbeat 0.5 s, retry backoff 2 s doubling "
+                     "per attempt, retry budget 8 (0 on -noretry variants)"),
+        "variants": ("crash-* = the elastic sweep's deterministic schedule "
+                     "(replicas 0/1 die at 40 s/80 s); churn-* = seeded "
+                     "random churn at 0.05 events/s, fleet bounded 2..8; "
+                     "-oracle = suspicion_timeout 0 (detector inert, "
+                     "crashes oracle-visible, the PR 7 baseline); -d2/-d8 "
+                     "= 2 s / 8 s detection delay — dispatches into the "
+                     "gap land in limbo and come back through retry"),
+        "gate": ("stage 14 asserts: both crashes confirmed on crash-d* "
+                 "cells, limbo recovery fires at 8 s delay, and the "
+                 "retrying variant sheds strictly less than its no-retry "
+                 "twin at every size; CI replays the crash-d8 1000-task "
+                 "cell natively and requires exact counter equality with "
+                 "the committed row"),
+        "chaos_sweep": rows,
     }
     Path(path).write_text(json.dumps(doc, indent=2))
     print(f"wrote {path}")

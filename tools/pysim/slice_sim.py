@@ -1253,10 +1253,27 @@ class HealthConfig:
 
 
 @dataclass
+class DetectorConfig:
+    """Mirrors cluster/lifecycle.rs DetectorConfig (defaults included).
+    active() is the runtime gate: enabled *and* a nonzero suspicion
+    timeout — `suspicion_timeout = 0` keeps crashes oracle-visible
+    (the PR 7 path, pinned bit-exact by stage 14)."""
+
+    enabled: bool = False
+    heartbeat_interval: int = 500_000  # 0.5 s between detector ticks
+    suspicion_timeout: int = 2_000_000  # 2 s of silence confirms a corpse
+    max_retries: int = 3
+    retry_backoff: int = 500_000  # 0.5 s base, doubling per attempt
+
+    def active(self) -> bool:
+        return self.enabled and self.suspicion_timeout > 0
+
+
+@dataclass
 class LifecycleConfig:
     """Mirrors cluster/lifecycle.rs LifecycleConfig: explicit events
     merged with a seeded Poisson churn stream, fleet-size bounds, and
-    the autoscaler/health sub-configs."""
+    the autoscaler/health/detector sub-configs."""
 
     events: List[LifecycleEvent] = field(default_factory=list)
     churn_rate: float = 0.0  # events/s (0 = off)
@@ -1265,13 +1282,14 @@ class LifecycleConfig:
     max_replicas: int = 64
     autoscaler: AutoscalerConfig = field(default_factory=AutoscalerConfig)
     health: HealthConfig = field(default_factory=HealthConfig)
+    detector: DetectorConfig = field(default_factory=DetectorConfig)
 
     def has_events(self) -> bool:
         return bool(self.events) or self.churn_rate > 0.0
 
     def any_enabled(self) -> bool:
         return (self.has_events() or self.autoscaler.enabled
-                or self.health.enabled)
+                or self.health.enabled or self.detector.enabled)
 
     def schedule(self, horizon: int) -> List[LifecycleEvent]:
         """Explicit events merged with the churn stream, sorted by time
@@ -1386,6 +1404,71 @@ class HealthTracker:
             mask[i] = self.degraded(i)
 
 
+SUSPECT, UNSUSPECT, CONFIRM = "suspect", "unsuspect", "confirm"
+
+
+class FailureDetector:
+    """Mirrors cluster/detector.rs: the heartbeat bookkeeping behind the
+    per-replica suspicion state machine. Pure clock-in/verdict-out —
+    the Orchestrator applies each verdict to the Router's suspected
+    mask and counters.
+
+    tick(i, now, dead) folds arrived heartbeats and runs one suspicion
+    step: healthy -> suspected when heartbeat age crosses
+    heartbeat_interval, suspected -> healthy on a fresh heartbeat (a
+    counted false suspicion), suspected -> confirmed when age reaches
+    suspicion_timeout *and* the replica is actually silenced (ground
+    truth — a live laggard caps at suspected, never a false kill)."""
+
+    def __init__(self, cfg: DetectorConfig, n: int) -> None:
+        self.cfg = cfg
+        self.last_hb = [0] * n
+        self.pending: List[List[int]] = [[] for _ in range(n)]
+        self.suspected = [False] * n
+
+    def ensure(self, n: int, now: int) -> None:
+        """Joiners start with a synthetic heartbeat at `now` — a replica
+        admitted mid-run is healthy until it actually misses a tick."""
+        while len(self.last_hb) < n:
+            self.last_hb.append(now)
+            self.pending.append([])
+            self.suspected.append(False)
+
+    def emit(self, i: int, tick: int, lag: int) -> None:
+        """A heartbeat emitted at `tick` arrives `lag` later (the
+        replica's current Eq. 7 cycle overrun)."""
+        self.pending[i].append(min(tick + lag, MASK64))
+
+    def tick(self, i: int, now: int, dead: bool):
+        pend = self.pending[i]
+        k = 0
+        while k < len(pend):
+            if pend[k] <= now:
+                # Rust swap_remove: overwrite with the tail, pop it
+                arrived = pend[k]
+                pend[k] = pend[-1]
+                pend.pop()
+                if arrived > self.last_hb[i]:
+                    self.last_hb[i] = arrived
+            else:
+                k += 1
+        age = max(0, now - self.last_hb[i])
+        if dead and age >= self.cfg.suspicion_timeout:
+            self.suspected[i] = True
+            return CONFIRM
+        if age > self.cfg.heartbeat_interval:
+            if not self.suspected[i]:
+                self.suspected[i] = True
+                return SUSPECT
+        elif self.suspected[i]:
+            self.suspected[i] = False
+            return UNSUSPECT
+        return None
+
+    def is_suspected(self, i: int) -> bool:
+        return self.suspected[i] if i < len(self.suspected) else False
+
+
 class Replica:
     """Mirrors cluster/replica.rs: staged tasks keep global ids; local
     ids are assigned at push time (delivery order), so migration keeps
@@ -1407,6 +1490,16 @@ class Replica:
 
     def pending(self) -> int:
         return len(self.staged) + len(self.server.arrivals)
+
+    def pending_gids(self) -> set:
+        """Mirrors Replica::pending_gids: global ids of every
+        queued-but-unstarted task — exactly what withdraw_all at this
+        instant would return. Snapshotted at crash time so confirmation
+        can tell pre-crash work (free requeue) from tasks dispatched
+        into the not-yet-detected corpse (limbo, recovered via retry)."""
+        gids = {t.id for t in self.staged}
+        gids.update(self.global_ids[t.id] for t in self.server.arrivals)
+        return gids
 
     def queued_in_class(self, cls: str) -> int:
         waiting = sum(
@@ -1626,6 +1719,13 @@ class Router:
         # path. The event engine fills it when any elastic feature is on.
         self.alive: List[bool] = []
         self.degraded: List[bool] = []
+        # PR 10 failure-detector masks (same empty-for-static contract).
+        # suspected is *believed* state — excluded from placement, un-
+        # suspected on a fresh heartbeat; unresponsive is ground truth
+        # the placement paths must never read: a silenced corpse cannot
+        # answer migration withdrawals or shrink shutdowns.
+        self.suspected: List[bool] = []
+        self.unresponsive: List[bool] = []
         self.crashes = 0
         self.joins = 0
         self.leaves = 0
@@ -1635,6 +1735,13 @@ class Router:
         self.autoscale_grows = 0
         self.autoscale_shrinks = 0
         self.autoscale_pending_boots = 0
+        self.suspicions = 0
+        self.false_suspicions = 0
+        self.detections = 0
+        self.limbo_recovered = 0
+        self.retries = 0
+        self.retry_exhausted = 0
+        self.limbo_lost = 0
 
     def reject(self, task: Task) -> None:
         """Shed an arrival. Streaming runs fold the task into a counter
@@ -1650,8 +1757,15 @@ class Router:
     def is_degraded(self, i: int) -> bool:
         return self.degraded[i] if i < len(self.degraded) else False
 
+    def is_suspected(self, i: int) -> bool:
+        return self.suspected[i] if i < len(self.suspected) else False
+
+    def is_unresponsive(self, i: int) -> bool:
+        return self.unresponsive[i] if i < len(self.unresponsive) else False
+
     def placeable(self, i: int) -> bool:
-        return self.is_alive(i) and not self.is_degraded(i)
+        return (self.is_alive(i) and not self.is_degraded(i)
+                and not self.is_suspected(i))
 
     def alive_count(self) -> int:
         return sum(self.alive) if self.alive else len(self.replicas)
@@ -1712,7 +1826,12 @@ class Router:
             return
         self.migration_passes += 1
         for src in range(len(self.replicas)):
-            if not self.is_alive(src) or not self.replicas[src].overloaded():
+            # an unresponsive source cannot answer the withdraw request
+            # (dead but not yet detected) — skipping it keeps a
+            # not-yet-confirmed corpse from handing its queue back
+            # before the detector fires
+            if (not self.is_alive(src) or self.is_unresponsive(src)
+                    or not self.replicas[src].overloaded()):
                 continue
             # eligible-peer check *before* withdrawing: with a churning
             # fleet the only peers may be dead or degraded, and an offer
@@ -1736,7 +1855,9 @@ class Router:
         if not self.migration or not self.migrate_running or len(self.replicas) < 2:
             return
         for src in range(len(self.replicas)):
-            if not self.is_alive(src) or not self.replicas[src].overloaded():
+            # same unresponsive-source gate as the queued pass above
+            if (not self.is_alive(src) or self.is_unresponsive(src)
+                    or not self.replicas[src].overloaded()):
                 continue
             for _u, gid, quota, tokens in \
                     self.replicas[src].running_candidates(self.migrated):
@@ -1765,7 +1886,16 @@ class Router:
         restore fee (full prefill *recompute* on the destination's own
         latency curve after a crash, PR 4 KV handoff after a leave).
         Bypasses the exactly-once overload-migration set."""
-        for task in self.replicas[src].withdraw_all():
+        self.requeue_evacuated(src, self.replicas[src].withdraw_all())
+        self.evacuate_in_service(src, crash)
+
+    def requeue_evacuated(self, src: int, queued: List[Task]) -> None:
+        """Mirrors Controller::requeue_evacuated: free re-placement of
+        queued-but-unstarted tasks withdrawn from `src`. Split out so
+        detector confirmation can requeue the *pre-crash* partition of
+        a corpse's queue through the byte-identical oracle path while
+        routing the post-crash limbo partition into retry instead."""
+        for task in queued:
             quota = task.slo.tokens_per_cycle()
             dst = self.best_by_headroom(
                 quota, lambda r: (r.id != src and self.placeable(r.id)
@@ -1780,6 +1910,10 @@ class Router:
                 continue
             self.evac_requeued += 1
             self.replicas[dst].receive_migrated(task)
+
+    def evacuate_in_service(self, src: int, crash: bool) -> None:
+        """The in-service half of evacuate (mirrors
+        Controller::evacuate_in_service)."""
         for gid, quota, tokens, prefilled in self.replicas[src].evacuees():
             dst = self.best_by_headroom(
                 quota, lambda r: (r.id != src and self.placeable(r.id)
@@ -1835,15 +1969,20 @@ class Orchestrator:
     embedded Router over the same replicas — only the advancement
     machinery differs. Events are heapq tuples ordered exactly like the
     Rust Event struct: (time, kind, replica, task) with kind ranks
-    WAKE < LIFECYCLE < BOOT < BOUNDARY < MIGRATION_CHECK < ARRIVAL —
-    nodes reach a boundary before anything decides there, a crash at t
-    is visible to every same-time decision, an overload check runs its
-    migration pass before the same-instant arrival routes, and arrivals
-    route against the already-changed fleet. Bit-exact with Router.run
-    by construction for everything except migration-pass *timing*
-    (edge-triggered MigrationCheck events vs one pass per boundary —
-    same migrated tasks, fewer passes); stage 10 asserts it (and stage
-    11 asserts the all-disabled elastic run changes nothing).
+    WAKE < LIFECYCLE < BOOT < HEARTBEAT < BOUNDARY < MIGRATION_CHECK <
+    RETRY < ARRIVAL — nodes reach a boundary before anything decides
+    there, a crash at t is visible to every same-time decision, a
+    heartbeat tick judges the settled fleet, at the exact horizon the
+    drain outranks a same-time confirmation's retries (they flush as
+    limbo_lost), an overload check runs its migration pass before the
+    same-instant arrival routes, recovered tasks re-dispatch just ahead
+    of the same-time arrival, and arrivals route against the
+    already-changed fleet. Bit-exact with Router.run by construction
+    for everything except migration-pass *timing* (edge-triggered
+    MigrationCheck events vs one pass per boundary — same migrated
+    tasks, fewer passes); stage 10 asserts it (and stage 11 asserts the
+    all-disabled elastic run changes nothing; stage 14 the inert
+    detector).
 
     Passing a LifecycleConfig (with a factory building the replica for
     each joining fleet index) attaches the elastic machinery, mirroring
@@ -1851,8 +1990,8 @@ class Orchestrator:
     initialized even when every sub-feature is disabled.
     """
 
-    WAKE, LIFECYCLE, BOOT, BOUNDARY, MIGRATION_CHECK, ARRIVAL = \
-        0, 1, 2, 3, 4, 5
+    (WAKE, LIFECYCLE, BOOT, HEARTBEAT, BOUNDARY, MIGRATION_CHECK, RETRY,
+     ARRIVAL) = 0, 1, 2, 3, 4, 5, 6, 7
 
     def __init__(self, ctl: Router,
                  lifecycle: Optional[LifecycleConfig] = None,
@@ -1886,10 +2025,22 @@ class Orchestrator:
         self.factory = factory
         self.autoscaler: Optional[Autoscaler] = None
         self.health: Optional[HealthTracker] = None
+        # delayed failure detection (mirrors orchestrator.rs): ground
+        # truth the controller must not read — silenced replicas are
+        # physically dead but not yet confirmed by the detector
+        self.detector: Optional[FailureDetector] = None
+        self.silenced: List[bool] = [False] * n
+        self.limbo_base: List[set] = [set() for _ in range(n)]
+        self.limbo: dict = {}  # gid -> Task awaiting its Retry event
+        self.attempts: dict = {}  # gid -> retry attempts burned (global)
         if lifecycle is not None:
             assert factory is not None, "elastic runs carry a replica factory"
             ctl.alive = [True] * n
             ctl.degraded = [False] * n
+            ctl.suspected = [False] * n
+            ctl.unresponsive = [False] * n
+            if lifecycle.detector.active():
+                self.detector = FailureDetector(lifecycle.detector, n)
             if lifecycle.autoscaler.enabled:
                 self.autoscaler = Autoscaler(
                     lifecycle.autoscaler, lifecycle.min_replicas,
@@ -1907,12 +2058,18 @@ class Orchestrator:
         self.replicas.append(replica)
         self.ctl.alive.append(True)
         self.ctl.degraded.append(False)
+        self.ctl.suspected.append(False)
+        self.ctl.unresponsive.append(False)
+        self.silenced.append(False)
+        self.limbo_base.append(set())
         self.wake.append(None)
         self.advanced_to.append(None)
         self.advancements.append(0)
         self.overload.append(False)
         if self.health is not None:
             self.health.ensure(rid + 1)
+        if self.detector is not None:
+            self.detector.ensure(rid + 1, now)
         return rid
 
     def _retire_replica(self, target: int, crash: bool) -> None:
@@ -1924,8 +2081,57 @@ class Orchestrator:
             self.overload[target] = False
             self.overload_count -= 1
 
+    def _silence_replica(self, target: int) -> None:
+        """Mirrors Orchestrator::silence_replica — a crash under
+        delayed detection: freeze the node (its wake dies on the
+        mismatch filter and _refresh_wake never re-arms it), mark it
+        unresponsive, and snapshot its queued global ids so
+        confirmation can tell pre-crash work from limbo. The controller
+        keeps believing it alive — that belief is the detection gap."""
+        self.silenced[target] = True
+        self.ctl.unresponsive[target] = True
+        self.limbo_base[target] = self.replicas[target].pending_gids()
+        self.wake[target] = None
+        if self.overload[target]:
+            # a corpse raises no overload signal
+            self.overload[target] = False
+            self.overload_count -= 1
+
+    def _confirm_dead(self, target: int, now: int, heap: List) -> None:
+        """Mirrors Orchestrator::confirm_dead: the delayed half of the
+        crash. Pre-crash queued work re-places free (the oracle requeue
+        path), in-service work re-admits at the crash recompute price,
+        and limbo tasks re-dispatch under bounded retry (or shed
+        outright at max_retries = 0)."""
+        ctl = self.ctl
+        ctl.detections += 1
+        ctl.alive[target] = False
+        ctl.suspected[target] = False  # dead outranks suspected
+        base = self.limbo_base[target]
+        self.limbo_base[target] = set()
+        withdrawn = self.replicas[target].withdraw_all()
+        pre_crash = [t for t in withdrawn if t.id in base]
+        limbo = [t for t in withdrawn if t.id not in base]
+        ctl.requeue_evacuated(target, pre_crash)
+        ctl.evacuate_in_service(target, True)
+        max_retries = self.lifecycle.detector.max_retries
+        for task in limbo:
+            ctl.limbo_recovered += 1
+            if max_retries == 0:
+                ctl.retry_exhausted += 1
+                ctl.reject(task)
+                continue
+            # the budget is global: a task re-limboed from an earlier
+            # corpse keeps the attempts it already burned
+            self.attempts.setdefault(task.id, 0)
+            heapq.heappush(heap, (now, self.RETRY, 0, task.id))
+            self.limbo[task.id] = task
+
     def _refresh_overload(self, i: int) -> None:
-        over = self.ctl.is_alive(i) and self.replicas[i].overloaded()
+        # a silenced node never reads overloaded — a corpse sends no
+        # signals, so its frozen pre-crash load must not arm checks
+        over = (self.ctl.is_alive(i) and not self.silenced[i]
+                and self.replicas[i].overloaded())
         if self.overload[i] != over:
             self.overload[i] = over
             self.overload_count += 1 if over else -1
@@ -1960,22 +2166,34 @@ class Orchestrator:
             self._admit_replica(now)
             ctl.joins += 1
             return
-        if alive <= self.lifecycle.min_replicas:
+        # exits are bounded (and victims picked) on the *functioning*
+        # fleet — alive and not silenced. With the detector off nothing
+        # is ever silenced, so this is exactly the old alive-count
+        # bound; with it on, an undetected corpse can neither die twice
+        # nor keep the bound from protecting the last live replica.
+        functioning = [i for i in range(len(self.replicas))
+                       if ctl.is_alive(i) and not self.silenced[i]]
+        if len(functioning) <= self.lifecycle.min_replicas:
             return
         if e.target is not None:
-            if e.target >= len(self.replicas) or not ctl.is_alive(e.target):
+            if (e.target >= len(self.replicas)
+                    or not ctl.is_alive(e.target)
+                    or self.silenced[e.target]):
                 return
             target = e.target
         else:
-            alive_ids = [i for i in range(len(self.replicas))
-                         if ctl.is_alive(i)]
-            target = alive_ids[target_rng.range_u64(0, len(alive_ids) - 1)]
+            target = functioning[
+                target_rng.range_u64(0, len(functioning) - 1)]
         crash = e.action == CRASH
         if crash:
             ctl.crashes += 1
         else:
             ctl.leaves += 1
-        self._retire_replica(target, crash)
+        if crash and self.detector is not None:
+            # delayed detection: the fleet does not know yet
+            self._silence_replica(target)
+        else:
+            self._retire_replica(target, crash)
 
     def _advance(self, i: int, t: int) -> None:
         self.advancements[i] += 1
@@ -1983,6 +2201,10 @@ class Orchestrator:
         self.replicas[i].run_until(t)
 
     def _refresh_wake(self, i: int, heap: List) -> None:
+        # silenced nodes are frozen: dispatches may still stage work on
+        # them (that is the limbo), but nothing must ever advance them
+        if self.silenced[i]:
+            return
         nxt = self.replicas[i].next_event_time()
         if self.wake[i] == nxt:
             return
@@ -2016,6 +2238,8 @@ class Orchestrator:
                   if heap and heap[0][1] == self.WAKE else None)
         if self.epoch_log is not None:
             self.epoch_log.append(list(batch))
+        assert all(not self.silenced[i] for i in batch), \
+            "silenced replicas are frozen and must not wake inside an epoch"
         costs: Optional[List[Tuple[int, float]]] = None
         if self.epoch_costs is not None:
             costs = []
@@ -2075,6 +2299,17 @@ class Orchestrator:
         next_lifecycle = next(lifecycle_events, None)
         if next_lifecycle is not None:
             heapq.heappush(heap, (next_lifecycle.time, self.LIFECYCLE, 0, 0))
+        # the heartbeat stream mirrors the lifecycle stream: one tick in
+        # the heap at a time, the next pushed when it pops, ticks
+        # strictly before the horizon (only with an active detector — an
+        # inert one schedules nothing, the bit-exactness gate)
+        hb_interval = (self.lifecycle.detector.heartbeat_interval
+                       if self.detector is not None else None)
+        next_heartbeat: Optional[int] = None
+        if (hb_interval is not None and lifecycle_horizon is not None
+                and hb_interval < lifecycle_horizon):
+            next_heartbeat = hb_interval
+            heapq.heappush(heap, (hb_interval, self.HEARTBEAT, 0, 0))
         nxt = next(arrivals, None)
         next_arrival = nxt
         if nxt is not None:
@@ -2088,11 +2323,18 @@ class Orchestrator:
 
         def eff(arrival: int) -> int:
             # the effective boundary every wake advances its node to:
-            # the next arrival *or* the next fleet change, whichever is
-            # first — a node must never run past a crash instant
-            if next_lifecycle is None:
-                return arrival
-            return min(arrival, next_lifecycle.time)
+            # the next arrival, the next fleet change, or the next
+            # heartbeat tick, whichever is first — a node must never
+            # run past a crash instant, and a confirmation's evacuation
+            # must not land on nodes already advanced past the tick
+            # (with the detector off the heartbeat term is always None:
+            # the boundary is byte-identical to the pre-detector engine)
+            b = arrival
+            if next_lifecycle is not None:
+                b = min(b, next_lifecycle.time)
+            if next_heartbeat is not None:
+                b = min(b, next_heartbeat)
+            return b
 
         next_boundary = eff(arrival_boundary)
         while True:
@@ -2179,10 +2421,13 @@ class Orchestrator:
                         floor = self.lifecycle.autoscaler.headroom_min
                         deficit = n_h == 0 or sum_h <= floor * n_h
                     # shrink victim: an alive replica with no work at
-                    # all — prefer degraded, then highest index
+                    # all — prefer degraded, then highest index. An
+                    # unresponsive (silenced, undetected) corpse cannot
+                    # acknowledge a shrink: skipped
                     idle = None
                     for i, r in enumerate(self.replicas):
-                        if ctl.is_alive(i) and r.next_event_time() is None:
+                        if (ctl.is_alive(i) and not ctl.is_unresponsive(i)
+                                and r.next_event_time() is None):
                             key = (ctl.is_degraded(i), i)
                             if idle is None or key > idle:
                                 idle = key
@@ -2309,9 +2554,129 @@ class Orchestrator:
                 # same-time arrival's handler arms the *next* boundary —
                 # the lockstep one-pass-per-boundary cadence, and no
                 # same-time check storm
+            elif kind == self.HEARTBEAT:
+                assert next_heartbeat == time
+                det = self.detector
+                assert det is not None, \
+                    "heartbeat events only fire with a detector"
+                # functioning replicas emit this tick's heartbeats,
+                # delayed by their current Eq. 7 cycle lag — an
+                # overloaded replica heartbeats late (the organic
+                # false-suspicion source), a corpse not at all
+                for i, r in enumerate(self.replicas):
+                    if ctl.is_alive(i) and not self.silenced[i]:
+                        det.emit(i, time, r.cycle_lag())
+                # one suspicion step per believed-alive replica;
+                # confirmation (ground-truth gated) is deferred so every
+                # verdict this tick judges the same fleet
+                confirmed: List[int] = []
+                for i in range(len(self.replicas)):
+                    if not ctl.is_alive(i):
+                        continue
+                    verdict = det.tick(i, time, self.silenced[i])
+                    if verdict == SUSPECT:
+                        ctl.suspicions += 1
+                        ctl.suspected[i] = True
+                    elif verdict == UNSUSPECT:
+                        ctl.false_suspicions += 1
+                        ctl.suspected[i] = False
+                    elif verdict == CONFIRM:
+                        confirmed.append(i)
+                if confirmed:
+                    # same contract as the lifecycle boundary: recovered
+                    # tasks may land on idle peers, whose clocks must be
+                    # at the tick first
+                    for i, r in enumerate(self.replicas):
+                        if (self.advanced_to[i] != time
+                                and r.next_event_time() is None):
+                            r.sync_clock(time)
+                    for i in confirmed:
+                        if ctl.alive_count() <= 1:
+                            # never confirm the last believed-alive
+                            # replica (unreachable while min_replicas
+                            # >= 1; defer to next tick)
+                            continue
+                        self._confirm_dead(i, time, heap)
+                    # confirmation moved work (requeue, evacuation,
+                    # retries): re-arm the fleet, like a lifecycle
+                    for i in range(len(self.replicas)):
+                        self._refresh_wake(i, heap)
+                    parked.clear()
+                    if ctl.migration:
+                        self._refresh_overload_all()
+                        self._arm_migration_check(heap, arrival_boundary,
+                                                  next_arrival is not None)
+                next_heartbeat = None
+                if hb_interval is not None and lifecycle_horizon is not None:
+                    nt = time + hb_interval
+                    if nt < lifecycle_horizon:
+                        next_heartbeat = nt
+                        heapq.heappush(heap, (nt, self.HEARTBEAT, 0, 0))
+                next_boundary = eff(arrival_boundary)
+            elif kind == self.RETRY:
+                task = self.limbo.pop(tid)
+                # idle-clock sync first — the retried task carries its
+                # original arrival time (same contract as the migration
+                # check)
+                for i, r in enumerate(self.replicas):
+                    if (self.advanced_to[i] != time
+                            and r.next_event_time() is None):
+                        r.sync_clock(time)
+                attempt = self.attempts.get(tid, 0) + 1
+                self.attempts[tid] = attempt
+                ctl.retries += 1
+                # full admission: a retry competes like any fresh
+                # arrival — and may land on another not-yet-detected
+                # corpse, re-entering limbo there with its attempt count
+                # intact (the budget is global, not per-host)
+                pick = ctl.decide(task)
+                if pick is not None:
+                    self.replicas[pick].receive_migrated(task)
+                    self._refresh_wake(pick, heap)
+                    if ctl.migration:
+                        self._refresh_overload(pick)
+                        self._arm_migration_check(heap, arrival_boundary,
+                                                  next_arrival is not None)
+                else:
+                    dcfg = self.lifecycle.detector
+                    # exponential backoff: attempt k + 1 fires
+                    # retry_backoff << (k - 1) after attempt k fails
+                    # (saturating — never wraps)
+                    factor = 1 << min(attempt - 1, 63)
+                    nxt_t = min(time + min(dcfg.retry_backoff * factor,
+                                           MASK64), MASK64)
+                    runway = (lifecycle_horizon is not None
+                              and nxt_t < lifecycle_horizon)
+                    if attempt < dcfg.max_retries and runway:
+                        heapq.heappush(heap, (nxt_t, self.RETRY, 0, tid))
+                        self.limbo[tid] = task
+                    else:
+                        # budget or runway exhausted: shed, reported as
+                        # a retry_exhausted loss
+                        ctl.retry_exhausted += 1
+                        ctl.reject(task)
             else:  # BOUNDARY — the final drain at the horizon
                 assert time == horizon
+                # limbo tasks whose next retry fell past the horizon
+                # drain as shed losses (sorted by id: dict order must
+                # not leak into reports)
+                if self.limbo:
+                    for gid in sorted(self.limbo):
+                        ctl.limbo_lost += 1
+                        ctl.reject(self.limbo[gid])
+                    self.limbo.clear()
                 for i, r in enumerate(self.replicas):
+                    if self.silenced[i]:
+                        # an unconfirmed corpse: frozen at its crash
+                        # clock, its queue (pre-crash work and limbo
+                        # dispatches alike) dies with it, and its
+                        # in-service tasks stay in its report as
+                        # unfinished — the drained assert below does not
+                        # apply
+                        for task in r.withdraw_all():
+                            ctl.limbo_lost += 1
+                            ctl.reject(task)
+                        continue
                     if self.advanced_to[i] == horizon:
                         pass
                     elif self.advancements[i] > 0 or self.wake[i] is not None:
